@@ -1,0 +1,56 @@
+//! Multi-layer TNN digit recognition: trains 2/3/4-layer TNNs with online
+//! STDP on the procedural digit corpus and reports the error-rate ordering
+//! the paper's Table III cites, plus the scaled hardware PPA of the real
+//! Table III designs.
+//!
+//! Run: `cargo run --release --example mnist_tnn`
+
+use tnn7::harness;
+use tnn7::mnist::{trainable_network, DigitCorpus};
+use tnn7::tnn::encode::encode_image_onoff;
+use tnn7::tnn::params::TnnParams;
+use tnn7::tnn::VoteClassifier;
+use tnn7::util::Rng64;
+
+fn main() -> tnn7::Result<()> {
+    let train = DigitCorpus::generate(60, 1);
+    let test = DigitCorpus::generate(25, 2);
+    println!("corpus: {} train / {} test synthetic digits (16x16)", train.len(), test.len());
+
+    let mut errors = Vec::new();
+    for layers in [2usize, 3, 4] {
+        let mut rng = Rng64::seed_from_u64(layers as u64 * 101);
+        let mut net = trainable_network(layers, TnnParams::default());
+        net.randomize(&mut rng);
+        for _epoch in 0..2 {
+            for img in &train.images {
+                net.step(&encode_image_onoff(img, 8), &mut rng);
+            }
+        }
+        let mut vote = VoteClassifier::new(net.output_len(), 10);
+        for (img, &l) in train.images.iter().zip(&train.labels) {
+            vote.observe(&net.infer(&encode_image_onoff(img, 8)), l);
+        }
+        let mut correct = 0;
+        for (img, &l) in test.images.iter().zip(&test.labels) {
+            if vote.classify(&net.infer(&encode_image_onoff(img, 8))) == Some(l) {
+                correct += 1;
+            }
+        }
+        let err = 100.0 * (1.0 - correct as f64 / test.len() as f64);
+        println!(
+            "{layers}-layer TNN ({} synapses): error {err:.1}% ({correct}/{})",
+            net.synapse_count(),
+            test.len()
+        );
+        errors.push(err);
+    }
+    println!(
+        "error ordering deeper-is-better: {}",
+        if errors[0] >= errors[1] && errors[1] >= errors[2] { "holds" } else { "violated on this corpus" }
+    );
+
+    println!("\nTable III hardware PPA (paper designs, synapse-count scaled):");
+    harness::print_table3(&harness::table3());
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! Quickstart: load the AOT-compiled XLA column, run a few gamma cycles of
+//! online STDP learning, and cross-check against the Rust golden model.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use tnn7::runtime::XlaRuntime;
+use tnn7::tnn::column::Column;
+use tnn7::tnn::params::TnnParams;
+use tnn7::tnn::spike::SpikeTime;
+use tnn7::util::Rng64;
+
+fn main() -> tnn7::Result<()> {
+    let rt = XlaRuntime::load("artifacts")?;
+    println!("PJRT platform: {}", rt.platform());
+    let exe = rt.column(16, 4, "step")?;
+    let meta = &exe.meta;
+    println!("loaded {} (p={}, q={}, θ={})", meta.name, meta.p, meta.q, meta.theta);
+
+    let params = TnnParams::default();
+    let mut rng = Rng64::seed_from_u64(1);
+    let mut golden = Column::with_random_weights(meta.p, meta.q, meta.theta, params, &mut rng);
+    let mut w: Vec<f32> = golden.weights().iter().map(|&x| x as f32).collect();
+
+    for gamma in 0..5 {
+        let xs: Vec<SpikeTime> = (0..meta.p)
+            .map(|i| SpikeTime::at(((i + gamma) % 8) as u32))
+            .collect();
+        let n = meta.p * meta.q;
+        let u_case: Vec<f32> = (0..n).map(|_| rng.gen_f32()).collect();
+        let u_stab: Vec<f32> = (0..n).map(|_| rng.gen_f32()).collect();
+        let (y, w_new) = exe.step(&xs, &w, &u_case, &u_stab)?;
+        let uc: Vec<f64> = u_case.iter().map(|&v| v as f64).collect();
+        let us: Vec<f64> = u_stab.iter().map(|&v| v as f64).collect();
+        let gold = golden.step_with_uniforms(&xs, &uc, &us);
+        assert_eq!(y, gold.output, "XLA and golden model agree");
+        w = w_new;
+        println!("gamma {gamma}: winner {:?}, output volley {:?}", gold.winner, y);
+    }
+    println!("quickstart OK — XLA kernel bit-exact with the golden model");
+    Ok(())
+}

@@ -1,0 +1,26 @@
+//! Serving demo: the coordinator streaming gamma instances through the XLA
+//! column with backpressure, reporting throughput and step latency — the
+//! "edge-native sensory processing unit" in software.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_stream`
+
+use tnn7::coordinator::{encode_ucr, run_stream, Engine};
+use tnn7::runtime::XlaRuntime;
+use tnn7::ucr;
+use tnn7::util::Rng64;
+
+fn main() -> tnn7::Result<()> {
+    let rt = XlaRuntime::load("artifacts")?;
+    println!("platform {} | artifacts: {:?}", rt.platform(), rt.artifact_names());
+    let dataset = ucr::ucr_suite().into_iter().find(|c| c.name == "TwoLeadECG").unwrap();
+    let data = ucr::generate(dataset, 150, 9);
+    let items = encode_ucr(&data, 8);
+    let mut rng = Rng64::seed_from_u64(4);
+    let exe = rt.column(dataset.p, dataset.q, "step")?;
+    let mut engine = Engine::xla(exe, &mut rng);
+    for depth in [1usize, 8, 64] {
+        let out = run_stream(&mut engine, items.clone(), depth, 7)?;
+        println!("channel depth {depth:>3}: {}", out.metrics.summary(out.wall));
+    }
+    Ok(())
+}

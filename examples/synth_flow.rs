@@ -1,0 +1,44 @@
+//! Synthesis-flow walkthrough: build the 82×2 TwoLeadECG column, run both
+//! flows, and print the netlist statistics, PPA and layout congestion —
+//! Figs. 12/13 for a single design point.
+//!
+//! Run: `cargo run --release --example synth_flow`
+
+use tnn7::cells;
+use tnn7::gates::column_design::{build_column, BrvSource};
+use tnn7::harness;
+use tnn7::layout::place_and_estimate;
+use tnn7::ppa::report::analyze;
+use tnn7::synth::flow::{synthesize, Flow};
+
+fn main() {
+    let (p, q) = (82, 2);
+    let theta = (p as u32 * 7) / 4;
+    let d = build_column(p, q, theta, BrvSource::Lfsr);
+    println!(
+        "built column_{p}x{q}: {} generic gates, {} macro instances",
+        d.netlist.len(),
+        d.netlist.macros.len()
+    );
+    for flow in [Flow::Baseline, Flow::Tnn7] {
+        let out = synthesize(&d.netlist, flow);
+        let lib = flow.library();
+        let rep = analyze(&out.mapped, &lib, harness::GAMMA_CYCLES);
+        let lay = place_and_estimate(&out.mapped, &lib);
+        println!("\n=== {} flow ===", flow.name());
+        println!(
+            "  synthesis: {:?} total (expand {:?}, optimize {:?} in {} iters, map {:?})",
+            out.stats.wall, out.stats.expand_wall, out.stats.opt_wall,
+            out.stats.opt.iterations, out.stats.map_wall
+        );
+        println!(
+            "  gates in {} → cells out {} + {} hard macros",
+            out.stats.gates_in, out.stats.cells_out, out.stats.macros_out
+        );
+        println!("  {}", rep.row());
+        println!(
+            "  layout: die {:.1}x{:.1} µm, WL {:.0} µm, congestion avg {:.2} peak {:.2}",
+            lay.die_w_um, lay.die_h_um, lay.total_wl_um, lay.avg_congestion, lay.peak_congestion
+        );
+    }
+}

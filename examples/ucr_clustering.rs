@@ -1,0 +1,87 @@
+//! End-to-end driver (DESIGN.md §6 E2E): unsupervised time-series
+//! clustering through the full stack — synthetic UCR workload → streaming
+//! coordinator → XLA column executable (PJRT) with online STDP → clustering
+//! metrics — followed by the hardware story for the same column: synthesis
+//! under both flows + PPA.
+//!
+//! Run: `make artifacts && cargo run --release --example ucr_clustering`
+
+use tnn7::cells;
+use tnn7::coordinator::{encode_ucr, run_stream, ucr_engine, volley_density, Engine};
+use tnn7::gates::column_design::{build_column, BrvSource};
+use tnn7::ppa::report::analyze;
+use tnn7::runtime::XlaRuntime;
+use tnn7::synth::flow::{synthesize, Flow};
+use tnn7::tnn::params::TnnParams;
+use tnn7::ucr;
+use tnn7::util::Rng64;
+
+fn main() -> tnn7::Result<()> {
+    let dataset = ucr::ucr_suite()
+        .into_iter()
+        .find(|c| c.name == "TwoLeadECG")
+        .unwrap();
+    let data = ucr::generate(dataset, 100, 5);
+    let items = encode_ucr(&data, 8);
+    println!(
+        "TwoLeadECG: {} instances, spike density {:.2}",
+        items.len(),
+        volley_density(&items)
+    );
+
+    // --- functional pipeline: golden engine (always available) -------------
+    let mut rng = Rng64::seed_from_u64(2);
+    let mut engine = ucr_engine(dataset.p, dataset.q, &items, TnnParams::default(), &mut rng);
+    let mut last = None;
+    for epoch in 0..5 {
+        let out = run_stream(&mut engine, items.clone(), 32, 5 + epoch)?;
+        if epoch == 0 || epoch == 4 {
+            println!("epoch {epoch}: {}", out.metrics.summary(out.wall));
+        }
+        last = Some(out);
+    }
+    let _ = last;
+    let mut pred = Vec::new();
+    let mut truth = Vec::new();
+    for item in &items {
+        if let (Some(w), Some(l)) = (engine.infer_winner(&item.volley)?, item.label) {
+            pred.push(w);
+            truth.push(l);
+        }
+    }
+    println!(
+        "golden engine: rand index {:.3}, purity {:.3}",
+        ucr::rand_index(&pred, &truth),
+        ucr::purity(&pred, &truth, dataset.q, dataset.q)
+    );
+
+    // --- production path: XLA executable through PJRT ----------------------
+    match XlaRuntime::load("artifacts") {
+        Ok(rt) => {
+            let exe = rt.column(dataset.p, dataset.q, "step")?;
+            let mut rng = Rng64::seed_from_u64(3);
+            let mut xla_engine = Engine::xla(exe, &mut rng);
+            let out = run_stream(&mut xla_engine, items.clone(), 32, 11)?;
+            println!(
+                "xla engine ({}): {}",
+                rt.platform(),
+                out.metrics.summary(out.wall)
+            );
+        }
+        Err(e) => println!("(XLA path skipped: {e})"),
+    }
+
+    // --- hardware story: synthesize the same column both ways --------------
+    let theta = (dataset.p as u32 * 7) / 4;
+    let d = build_column(dataset.p, dataset.q, theta, BrvSource::Lfsr);
+    let base = synthesize(&d.netlist, Flow::Baseline);
+    let t7 = synthesize(&d.netlist, Flow::Tnn7);
+    let rb = analyze(&base.mapped, &cells::asap7(), 16);
+    let r7 = analyze(&t7.mapped, &cells::tnn7(), 16);
+    println!("hardware (82x2 column):");
+    println!("  {}", rb.row());
+    println!("  {}", r7.row());
+    let (p, dl, a, e) = r7.improvement_vs(&rb);
+    println!("  TNN7 improvements: power {p:.0}%, delay {dl:.0}%, area {a:.0}%, EDP {e:.0}%");
+    Ok(())
+}

@@ -1,0 +1,66 @@
+"""Shared configuration for the TNN column kernels.
+
+These constants mirror rust/src/tnn/params.rs (the golden model) — the two
+sides are kept bit-compatible so the Rust coordinator can cross-check XLA
+results against its own cycle-level reference.
+"""
+
+from dataclasses import dataclass, field
+
+
+# f32 sentinel for "no spike" (temporal infinity). Matches
+# rust/src/tnn/spike.rs::SpikeTime::INF_F32.
+INF = 1.0e9
+
+
+@dataclass(frozen=True)
+class ColumnConfig:
+    """Static configuration of one p×q TNN column kernel.
+
+    Every field is baked into the lowered HLO (one artifact per
+    configuration); only the spike volley, weights and uniform draws are
+    runtime inputs.
+    """
+
+    p: int                      # synapses per neuron
+    q: int                      # neurons per column
+    theta: int                  # firing threshold
+    weight_bits: int = 3        # 3-bit weights => w_max = 7
+    gamma_cycles: int = 16      # unit cycles per gamma cycle
+    mu_capture: float = 1.0
+    mu_minus: float = 0.5
+    mu_search: float = 1.0 / 16.0
+    mu_backoff: float = 0.5
+    stabilize: bool = True
+    batch: int = 1              # gamma instances processed per call
+
+    @property
+    def w_max(self) -> int:
+        return (1 << self.weight_bits) - 1
+
+    @property
+    def t_max(self) -> int:
+        return 1 << self.weight_bits
+
+    @property
+    def name(self) -> str:
+        base = f"column_p{self.p}_q{self.q}_th{self.theta}"
+        if self.batch > 1:
+            base += f"_b{self.batch}"
+        return base
+
+    def validate(self) -> None:
+        assert self.p >= 1 and self.q >= 1, "p,q must be >= 1"
+        assert 1 <= self.weight_bits <= 6
+        assert self.gamma_cycles >= 2 * self.t_max, (
+            "gamma_cycles must cover the latest ramp"
+        )
+        assert self.theta >= 1
+        for mu in (self.mu_capture, self.mu_minus, self.mu_search, self.mu_backoff):
+            assert 0.0 <= mu <= 1.0
+
+
+def default_theta(p: int, weight_bits: int = 3) -> int:
+    """θ ∝ p·w_max sizing rule (mirrors TnnParams::default_theta)."""
+    w_max = (1 << weight_bits) - 1
+    return max(1, (p * w_max) // 4)

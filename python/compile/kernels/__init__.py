@@ -1,0 +1,4 @@
+"""Layer-1 kernels: Pallas implementations (`column`) and the pure-jnp
+oracle (`ref`) they are verified against."""
+
+from . import column, ref  # noqa: F401

@@ -1,0 +1,188 @@
+"""Pallas kernels for the TNN column gamma-cycle step (Layer 1).
+
+Hardware adaptation (see DESIGN.md §3): the ASIC's temporally-unrolled
+datapath — p×q RNL synapse ramps feeding per-neuron adder trees over
+`gamma_cycles` unit clocks — is folded into dense relational arithmetic on
+spike-time integers. The (G, p) ramp relation is materialised in VMEM and
+reduced over the synapse axis per neuron tile, which is the TPU-native
+expression of the adder tree (VPU masked reductions; MXU-eligible when the
+clamp is rewritten as masked matmul for large p).
+
+Two kernels are exposed:
+
+  * `body_kernel`  — grid over neuron tiles; computes pre-inhibition fire
+    times. BlockSpec keeps the full input volley (p ≤ ~1.6k ⇒ ≤ 6.4 KB)
+    resident while streaming weight tiles HBM→VMEM.
+  * `stdp_kernel`  — grid over neuron tiles; elementwise (p, TQ) weight
+    update gated by broadcast STDP case masks.
+
+WTA is a q-length min/argmin — far too small to benefit from a kernel, so it
+stays in the surrounding jnp (fused by XLA into the same HLO module).
+
+All kernels run with interpret=True: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and correctness is the target here (real-TPU efficiency
+is estimated analytically in EXPERIMENTS.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..config import INF, ColumnConfig
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _neuron_tile(q: int) -> int:
+    """Neuron-axis tile: multiples of 8 up to 128 (VPU lane friendly)."""
+    if q >= 128:
+        return 128
+    for t in (64, 32, 16, 8):
+        if q % t == 0 and q >= t:
+            return t
+    return q
+
+
+# --------------------------------------------------------------------------
+# body: pre-inhibition fire times
+# --------------------------------------------------------------------------
+
+def _body_kernel(x_ref, w_ref, y_ref, *, cfg: ColumnConfig):
+    """One neuron tile: fire time of each neuron in the tile.
+
+    x_ref: (p,)    w_ref: (p, TQ)    y_ref: (TQ,)
+    """
+    x = x_ref[...]                      # (p,)
+    w = w_ref[...]                      # (p, TQ)
+    g = cfg.gamma_cycles
+    ts = jnp.arange(g, dtype=jnp.float32)                   # (G,)
+    ramp = jnp.maximum(ts[:, None] + 1.0 - x[None, :], 0.0)  # (G, p)
+    # Potential of each neuron at each cycle: clamp at per-synapse weight and
+    # reduce over the synapse axis. (G, p, TQ) intermediate lives in VMEM.
+    pot = jnp.minimum(ramp[:, :, None], w[None, :, :]).sum(axis=1)  # (G, TQ)
+    fired = pot >= float(cfg.theta)
+    any_fired = fired.any(axis=0)
+    first_t = jnp.argmax(fired, axis=0).astype(jnp.float32)
+    y_ref[...] = jnp.where(any_fired, first_t, INF)
+
+
+def body_fire_times(x, w, cfg: ColumnConfig):
+    """Pallas-tiled pre-inhibition fire times: (q,)."""
+    q = cfg.q
+    tq = _neuron_tile(q)
+    grid = (_ceil_div(q, tq),)
+    return pl.pallas_call(
+        functools.partial(_body_kernel, cfg=cfg),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((cfg.p,), lambda j: (0,)),        # x: whole volley
+            pl.BlockSpec((cfg.p, tq), lambda j: (0, j)),   # w: neuron tile
+        ],
+        out_specs=pl.BlockSpec((tq,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((q,), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+# --------------------------------------------------------------------------
+# STDP: weight update
+# --------------------------------------------------------------------------
+
+def _stdp_kernel(x_ref, yout_ref, w_ref, ucase_ref, ustab_ref, wnew_ref,
+                 *, cfg: ColumnConfig):
+    """One neuron tile of the STDP update.
+
+    x_ref: (p,)  yout_ref: (TQ,)  w/u/wnew: (p, TQ)
+    """
+    x = x_ref[...]
+    y_out = yout_ref[...]
+    w = w_ref[...]
+    u_case = ucase_ref[...]
+    u_stab = ustab_ref[...]
+
+    ein = (x < INF * 0.5)[:, None]
+    eout = (y_out < INF * 0.5)[None, :]
+    xb = x[:, None]
+    yb = y_out[None, :]
+
+    capture = ein & eout & (xb <= yb)
+    minus = ein & eout & (xb > yb)
+    search = ein & ~eout
+    backoff = ~ein & eout
+
+    mu = (
+        capture * cfg.mu_capture
+        + minus * cfg.mu_minus
+        + search * cfg.mu_search
+        + backoff * cfg.mu_backoff
+    ).astype(jnp.float32)
+
+    inc = capture | search
+    dec = minus | backoff
+
+    w_max = float(cfg.w_max)
+    if cfg.stabilize:
+        stab_gate = jnp.where(
+            inc,
+            (w + 1.0) / (w_max + 1.0),
+            (w_max - w + 1.0) / (w_max + 1.0),
+        )
+    else:
+        stab_gate = jnp.ones_like(w)
+
+    fire = (u_case < mu) & (u_stab < stab_gate) & (inc | dec)
+    delta = jnp.where(inc, 1.0, -1.0)
+    wnew_ref[...] = jnp.clip(w + jnp.where(fire, delta, 0.0), 0.0, w_max)
+
+
+def stdp_update(x, y_out, w, u_case, u_stab, cfg: ColumnConfig):
+    """Pallas-tiled STDP weight update: (p, q)."""
+    p, q = cfg.p, cfg.q
+    tq = _neuron_tile(q)
+    grid = (_ceil_div(q, tq),)
+    pq_spec = pl.BlockSpec((p, tq), lambda j: (0, j))
+    return pl.pallas_call(
+        functools.partial(_stdp_kernel, cfg=cfg),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((p,), lambda j: (0,)),
+            pl.BlockSpec((tq,), lambda j: (j,)),
+            pq_spec,
+            pq_spec,
+            pq_spec,
+        ],
+        out_specs=pq_spec,
+        out_shape=jax.ShapeDtypeStruct((p, q), jnp.float32),
+        interpret=True,
+    )(x, y_out, w, u_case, u_stab)
+
+
+# --------------------------------------------------------------------------
+# composition
+# --------------------------------------------------------------------------
+
+def wta(y_body):
+    """1-WTA (earliest wins, lowest index breaks ties) — q-length, stays jnp."""
+    q = y_body.shape[0]
+    winner = jnp.argmin(y_body)
+    has_spike = y_body[winner] < INF * 0.5
+    mask = (jnp.arange(q) == winner) & has_spike
+    return jnp.where(mask, y_body, INF)
+
+
+def column_step(x, w, u_case, u_stab, cfg: ColumnConfig):
+    """One gamma cycle (inference + WTA + STDP) built from the Pallas
+    kernels. Returns (y_out, w_new)."""
+    y_body = body_fire_times(x, w, cfg)
+    y_out = wta(y_body)
+    w_new = stdp_update(x, y_out, w, u_case, u_stab, cfg)
+    return y_out, w_new
+
+
+def column_infer(x, w, cfg: ColumnConfig):
+    """Inference only."""
+    return wta(body_fire_times(x, w, cfg))

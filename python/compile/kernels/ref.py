@@ -1,0 +1,104 @@
+"""Pure-jnp oracle for the TNN column gamma-cycle step.
+
+This is the executable specification the Pallas kernels are tested against
+(pytest + hypothesis sweep shapes and inputs). It mirrors, operation for
+operation, the Rust golden model in rust/src/tnn/ — same RNL response, same
+WTA tie-break, same STDP case table and bimodal stabilization.
+
+Wire format (all f32):
+  x        (p,)   input spike times; INF = no spike
+  w        (p,q)  integer-valued weights in [0, w_max]
+  u_case   (p,q)  uniforms in [0,1) gating the per-case Bernoulli draw
+  u_stab   (p,q)  uniforms in [0,1) gating the stabilization draw
+returns
+  y_out    (q,)   post-WTA output spike times (at most one finite entry)
+  w_new    (p,q)  updated weights
+"""
+
+import jax.numpy as jnp
+
+from ..config import INF, ColumnConfig
+
+
+def body_potentials(x, w, cfg: ColumnConfig):
+    """Integrated body potential per (unit cycle, neuron): (G, q).
+
+    RNL semantics: synapse i contributes clamp(t+1-x_i, 0, w_ij) at the end
+    of unit cycle t (the integral of a width-w pulse starting at x_i).
+    """
+    ts = jnp.arange(cfg.gamma_cycles, dtype=jnp.float32)  # (G,)
+    # (G, p): per-cycle elapsed ramp of each input line, before clamping.
+    ramp = ts[:, None] + 1.0 - x[None, :]
+    ramp = jnp.maximum(ramp, 0.0)
+    # (G, p, q): clamp each line's ramp at its per-neuron weight, then sum i.
+    contrib = jnp.minimum(ramp[:, :, None], w[None, :, :])
+    return contrib.sum(axis=1)  # (G, q)
+
+
+def body_fire_times(x, w, cfg: ColumnConfig):
+    """Pre-inhibition fire time per neuron: first t with potential ≥ θ."""
+    pot = body_potentials(x, w, cfg)  # (G, q)
+    fired = pot >= float(cfg.theta)
+    any_fired = fired.any(axis=0)
+    first_t = jnp.argmax(fired, axis=0).astype(jnp.float32)
+    return jnp.where(any_fired, first_t, INF)
+
+
+def wta(y_body):
+    """1-WTA lateral inhibition: earliest spike wins, ties to lowest index."""
+    q = y_body.shape[0]
+    winner = jnp.argmin(y_body)  # argmin returns the first minimal index
+    has_spike = y_body[winner] < INF * 0.5
+    mask = (jnp.arange(q) == winner) & has_spike
+    return jnp.where(mask, y_body, INF)
+
+
+def stdp(x, y_out, w, u_case, u_stab, cfg: ColumnConfig):
+    """Four-case probabilistic STDP with bimodal stabilization."""
+    ein = (x < INF * 0.5)[:, None]        # (p,1)
+    eout = (y_out < INF * 0.5)[None, :]   # (1,q)
+    xb = x[:, None]
+    yb = y_out[None, :]
+
+    capture = ein & eout & (xb <= yb)
+    minus = ein & eout & (xb > yb)
+    search = ein & ~eout
+    backoff = ~ein & eout
+
+    mu = (
+        capture * cfg.mu_capture
+        + minus * cfg.mu_minus
+        + search * cfg.mu_search
+        + backoff * cfg.mu_backoff
+    ).astype(jnp.float32)
+
+    inc = capture | search
+    dec = minus | backoff
+
+    w_max = float(cfg.w_max)
+    if cfg.stabilize:
+        stab_gate = jnp.where(
+            inc,
+            (w + 1.0) / (w_max + 1.0),
+            (w_max - w + 1.0) / (w_max + 1.0),
+        )
+    else:
+        stab_gate = jnp.ones_like(w)
+
+    fire = (u_case < mu) & (u_stab < stab_gate) & (inc | dec)
+    delta = jnp.where(inc, 1.0, -1.0)
+    w_new = jnp.clip(w + jnp.where(fire, delta, 0.0), 0.0, w_max)
+    return w_new
+
+
+def column_step(x, w, u_case, u_stab, cfg: ColumnConfig):
+    """One full gamma cycle: inference + WTA + STDP. Returns (y_out, w_new)."""
+    y_body = body_fire_times(x, w, cfg)
+    y_out = wta(y_body)
+    w_new = stdp(x, y_out, w, u_case, u_stab, cfg)
+    return y_out, w_new
+
+
+def column_infer(x, w, cfg: ColumnConfig):
+    """Inference only (no learning). Returns y_out."""
+    return wta(body_fire_times(x, w, cfg))

@@ -1,0 +1,114 @@
+"""Layer-2 JAX model: gamma-cycle column step functions built on the Pallas
+kernels, plus batched variants, ready for AOT lowering.
+
+The Rust coordinator (Layer 3) drives these as compiled XLA executables; the
+functions here define the exact HLO modules that end up in artifacts/.
+
+Exported entry points (all shapes static per ColumnConfig):
+
+  column_step   (x, w, u_case, u_stab) -> (y_out, w_new)     learning step
+  column_infer  (x, w)                 -> (y_out,)           inference only
+  column_step_batched / column_infer_batched: scan over a batch of gamma
+      instances, threading the weights through (online learning across the
+      batch, exactly like B sequential gamma cycles — the coordinator's
+      batching optimisation).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .config import ColumnConfig
+from .kernels import column as K
+
+
+def column_step(cfg: ColumnConfig):
+    """Returns the single-instance learning-step function."""
+
+    def step(x, w, u_case, u_stab):
+        y_out, w_new = K.column_step(x, w, u_case, u_stab, cfg)
+        return (y_out, w_new)
+
+    return step
+
+
+def column_infer(cfg: ColumnConfig):
+    """Returns the single-instance inference function."""
+
+    def infer(x, w):
+        return (K.column_infer(x, w, cfg),)
+
+    return infer
+
+
+def column_step_batched(cfg: ColumnConfig):
+    """Returns a function processing `cfg.batch` gamma instances serially
+    (scan), threading weight updates through — bit-identical to calling the
+    single-instance step B times, but one host↔device round-trip.
+
+    x: (B, p), u_case/u_stab: (B, p, q), w: (p, q)
+    returns y_out: (B, q), w_new: (p, q)
+    """
+
+    def step(xs, w, u_cases, u_stabs):
+        def body(w, inputs):
+            x, u_case, u_stab = inputs
+            y_out, w_new = K.column_step(x, w, u_case, u_stab, cfg)
+            return w_new, y_out
+
+        w_new, ys = jax.lax.scan(body, w, (xs, u_cases, u_stabs))
+        return (ys, w_new)
+
+    return step
+
+
+def column_infer_batched(cfg: ColumnConfig):
+    """Batched inference (vmap — instances are independent).
+
+    x: (B, p), w: (p, q) -> y_out: (B, q)
+    """
+
+    def infer(xs, w):
+        return (jax.vmap(lambda x: K.column_infer(x, w, cfg))(xs),)
+
+    return infer
+
+
+def example_args(cfg: ColumnConfig, kind: str):
+    """ShapeDtypeStructs for lowering each entry-point kind."""
+    f32 = jnp.float32
+    p, q, b = cfg.p, cfg.q, cfg.batch
+    if kind == "step":
+        return (
+            jax.ShapeDtypeStruct((p,), f32),
+            jax.ShapeDtypeStruct((p, q), f32),
+            jax.ShapeDtypeStruct((p, q), f32),
+            jax.ShapeDtypeStruct((p, q), f32),
+        )
+    if kind == "infer":
+        return (
+            jax.ShapeDtypeStruct((p,), f32),
+            jax.ShapeDtypeStruct((p, q), f32),
+        )
+    if kind == "step_batched":
+        return (
+            jax.ShapeDtypeStruct((b, p), f32),
+            jax.ShapeDtypeStruct((p, q), f32),
+            jax.ShapeDtypeStruct((b, p, q), f32),
+            jax.ShapeDtypeStruct((b, p, q), f32),
+        )
+    if kind == "infer_batched":
+        return (
+            jax.ShapeDtypeStruct((b, p), f32),
+            jax.ShapeDtypeStruct((p, q), f32),
+        )
+    raise ValueError(f"unknown kind {kind!r}")
+
+
+def entry_point(cfg: ColumnConfig, kind: str):
+    """The function object for a given entry-point kind."""
+    return {
+        "step": column_step,
+        "infer": column_infer,
+        "step_batched": column_step_batched,
+        "infer_batched": column_infer_batched,
+    }[kind](cfg)

@@ -1,0 +1,156 @@
+"""Pallas kernel vs pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps column geometries and input distributions; every case
+asserts exact equality (the computation is integer-valued in f32, so
+allclose with zero tolerance is the right bar).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.config import INF, ColumnConfig, default_theta
+from compile.kernels import column as K
+from compile.kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def make_inputs(rng: np.random.Generator, cfg: ColumnConfig,
+                spike_prob: float = 0.8):
+    x = np.where(
+        rng.random(cfg.p) < spike_prob,
+        rng.integers(0, cfg.t_max, cfg.p).astype(np.float32),
+        np.float32(INF),
+    ).astype(np.float32)
+    w = rng.integers(0, cfg.w_max + 1, (cfg.p, cfg.q)).astype(np.float32)
+    u_case = rng.random((cfg.p, cfg.q)).astype(np.float32)
+    u_stab = rng.random((cfg.p, cfg.q)).astype(np.float32)
+    return x, w, u_case, u_stab
+
+
+def assert_step_matches(cfg: ColumnConfig, x, w, u_case, u_stab):
+    y_k, w_k = K.column_step(jnp.asarray(x), jnp.asarray(w),
+                             jnp.asarray(u_case), jnp.asarray(u_stab), cfg)
+    y_r, w_r = ref.column_step(jnp.asarray(x), jnp.asarray(w),
+                               jnp.asarray(u_case), jnp.asarray(u_stab), cfg)
+    np.testing.assert_array_equal(np.asarray(y_k), np.asarray(y_r))
+    np.testing.assert_array_equal(np.asarray(w_k), np.asarray(w_r))
+    return np.asarray(y_k), np.asarray(w_k)
+
+
+# ---------------------------------------------------------------------------
+# directed cases
+# ---------------------------------------------------------------------------
+
+def test_single_synapse_fire_time_matches_hand_computation():
+    # w=3, spike at x=2, theta=3: potential 1,2,3 at t=2,3,4 -> fires t=4.
+    cfg = ColumnConfig(p=1, q=1, theta=3)
+    y = np.asarray(K.column_infer(jnp.asarray([2.0]), jnp.asarray([[3.0]]), cfg))
+    assert y[0] == 4.0
+
+
+def test_unreachable_theta_never_fires():
+    cfg = ColumnConfig(p=2, q=1, theta=100)
+    y = np.asarray(K.column_infer(
+        jnp.asarray([0.0, 0.0]), jnp.asarray([[7.0], [7.0]]), cfg))
+    assert y[0] >= INF * 0.5
+
+
+def test_wta_tie_breaks_to_lowest_index():
+    # Two identical neurons -> both fire at the same t; index 0 must win.
+    cfg = ColumnConfig(p=2, q=2, theta=2)
+    w = jnp.asarray([[7.0, 7.0], [7.0, 7.0]])
+    y = np.asarray(K.column_infer(jnp.asarray([0.0, 0.0]), w, cfg))
+    assert y[0] < INF * 0.5
+    assert y[1] >= INF * 0.5
+
+
+def test_capture_and_backoff_update_weights():
+    # p=2: line 0 spikes at 0, line 1 silent. q=1 neuron fires.
+    cfg = ColumnConfig(p=2, q=1, theta=1)
+    x = jnp.asarray([0.0, INF])
+    w = jnp.asarray([[3.0], [3.0]])
+    zeros = jnp.zeros((2, 1))
+    y, w_new = K.column_step(x, w, zeros, zeros, cfg)
+    assert np.asarray(y)[0] < INF * 0.5
+    # line 0: capture (u=0 passes) -> 4; line 1: backoff -> 2.
+    np.testing.assert_array_equal(np.asarray(w_new), [[4.0], [2.0]])
+
+
+def test_no_input_no_update():
+    cfg = ColumnConfig(p=3, q=2, theta=1)
+    x = jnp.full((3,), INF)
+    w = jnp.full((3, 2), 4.0)
+    zeros = jnp.zeros((3, 2))
+    y, w_new = K.column_step(x, w, zeros, zeros, cfg)
+    assert (np.asarray(y) >= INF * 0.5).all()
+    np.testing.assert_array_equal(np.asarray(w_new), np.asarray(w))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweeps
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    p=st.integers(min_value=1, max_value=40),
+    q=st.integers(min_value=1, max_value=12),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    spike_prob=st.floats(min_value=0.0, max_value=1.0),
+)
+def test_kernel_matches_ref_on_random_columns(p, q, seed, spike_prob):
+    rng = np.random.default_rng(seed)
+    cfg = ColumnConfig(p=p, q=q, theta=default_theta(p))
+    x, w, u_case, u_stab = make_inputs(rng, cfg, spike_prob)
+    y, w_new = assert_step_matches(cfg, x, w, u_case, u_stab)
+    # Invariants: at most one output spike; weights stay in range.
+    assert (y < INF * 0.5).sum() <= 1
+    assert w_new.min() >= 0 and w_new.max() <= cfg.w_max
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    theta=st.integers(min_value=1, max_value=60),
+)
+def test_kernel_matches_ref_across_thetas(seed, theta):
+    rng = np.random.default_rng(seed)
+    cfg = ColumnConfig(p=12, q=5, theta=theta)
+    x, w, u_case, u_stab = make_inputs(rng, cfg)
+    assert_step_matches(cfg, x, w, u_case, u_stab)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_kernel_matches_ref_without_stabilization(seed):
+    rng = np.random.default_rng(seed)
+    cfg = ColumnConfig(p=10, q=3, theta=8, stabilize=False)
+    x, w, u_case, u_stab = make_inputs(rng, cfg)
+    assert_step_matches(cfg, x, w, u_case, u_stab)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    weight_bits=st.integers(min_value=2, max_value=4),
+)
+def test_kernel_matches_ref_across_weight_precisions(seed, weight_bits):
+    rng = np.random.default_rng(seed)
+    cfg = ColumnConfig(p=9, q=4, theta=6, weight_bits=weight_bits,
+                       gamma_cycles=2 ** (weight_bits + 1))
+    x, w, u_case, u_stab = make_inputs(rng, cfg)
+    assert_step_matches(cfg, x, w, u_case, u_stab)
+
+
+@pytest.mark.parametrize("q", [1, 2, 3, 8, 16, 17])
+def test_neuron_tiling_boundaries(q):
+    """Tile-boundary geometries (q not a multiple of the tile)."""
+    rng = np.random.default_rng(q)
+    cfg = ColumnConfig(p=20, q=q, theta=default_theta(20))
+    x, w, u_case, u_stab = make_inputs(rng, cfg)
+    assert_step_matches(cfg, x, w, u_case, u_stab)

@@ -1,0 +1,87 @@
+"""Layer-2 model tests: batched semantics, entry-point shapes, AOT lowering."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+from compile.config import INF, ColumnConfig, default_theta
+from compile.kernels import column as K
+
+
+def rng_inputs(cfg, seed=0, batch=None):
+    rng = np.random.default_rng(seed)
+    shape = (cfg.p,) if batch is None else (batch, cfg.p)
+    x = np.where(
+        rng.random(shape) < 0.8,
+        rng.integers(0, cfg.t_max, shape).astype(np.float32),
+        np.float32(INF),
+    ).astype(np.float32)
+    w = rng.integers(0, cfg.w_max + 1, (cfg.p, cfg.q)).astype(np.float32)
+    ushape = (cfg.p, cfg.q) if batch is None else (batch, cfg.p, cfg.q)
+    u1 = rng.random(ushape).astype(np.float32)
+    u2 = rng.random(ushape).astype(np.float32)
+    return x, w, u1, u2
+
+
+def test_batched_step_equals_sequential_steps():
+    cfg = ColumnConfig(p=10, q=3, theta=default_theta(10), batch=5)
+    xs, w, u1s, u2s = rng_inputs(cfg, seed=1, batch=5)
+    ys_b, w_b = model.column_step_batched(cfg)(
+        jnp.asarray(xs), jnp.asarray(w), jnp.asarray(u1s), jnp.asarray(u2s))
+    # sequential reference
+    w_seq = jnp.asarray(w)
+    ys_seq = []
+    for i in range(5):
+        y, w_seq = K.column_step(jnp.asarray(xs[i]), w_seq,
+                                 jnp.asarray(u1s[i]), jnp.asarray(u2s[i]), cfg)
+        ys_seq.append(np.asarray(y))
+    np.testing.assert_array_equal(np.asarray(ys_b), np.stack(ys_seq))
+    np.testing.assert_array_equal(np.asarray(w_b), np.asarray(w_seq))
+
+
+def test_batched_infer_is_independent_per_instance():
+    cfg = ColumnConfig(p=8, q=2, theta=4, batch=3)
+    xs, w, _, _ = rng_inputs(cfg, seed=2, batch=3)
+    (ys,) = model.column_infer_batched(cfg)(jnp.asarray(xs), jnp.asarray(w))
+    for i in range(3):
+        (y_single,) = model.column_infer(cfg)(jnp.asarray(xs[i]), jnp.asarray(w))
+        np.testing.assert_array_equal(np.asarray(ys)[i], np.asarray(y_single))
+
+
+@pytest.mark.parametrize("kind", ["step", "infer", "step_batched", "infer_batched"])
+def test_entry_points_trace_with_example_args(kind):
+    cfg = ColumnConfig(p=6, q=2, theta=3, batch=4)
+    fn = model.entry_point(cfg, kind)
+    args = model.example_args(cfg, kind)
+    lowered = jax.jit(fn).lower(*args)
+    assert lowered is not None
+
+
+def test_aot_lowering_emits_parseable_hlo_text():
+    cfg = ColumnConfig(p=4, q=2, theta=2)
+    text = aot.lower_entry(cfg, "step")
+    assert text.startswith("HloModule")
+    assert "f32[4,2]" in text  # weight parameter shape present
+    # return_tuple=True => tuple-shaped ROOT
+    assert "(f32[2]" in text
+
+
+def test_registry_configs_are_valid():
+    for cfg, kinds in aot.registry():
+        cfg.validate()
+        for kind in kinds:
+            assert kind in ("step", "infer", "step_batched", "infer_batched")
+            # batched kinds require batch > 1 configs
+            if "batched" in kind:
+                assert cfg.batch > 1
+
+
+def test_artifact_names_are_unique():
+    names = [
+        aot.artifact_name(cfg, kind)
+        for cfg, kinds in aot.registry()
+        for kind in kinds
+    ]
+    assert len(names) == len(set(names))

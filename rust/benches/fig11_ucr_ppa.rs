@@ -1,0 +1,22 @@
+//! Bench for paper Fig. 11: PPA scaling across the 36 UCR single-column
+//! designs, ASAP7 vs TNN7. Full sweep once (prints the figure's series),
+//! then times the quick subsample as the benchmark body.
+use tnn7::harness;
+use tnn7::util::bench::Bencher;
+
+fn main() {
+    let full = std::env::var("TNN7_BENCH_FAST").is_err();
+    let rows = harness::fig11(!full);
+    harness::print_fig11(&rows);
+    std::fs::create_dir_all("target/reports").ok();
+    std::fs::write(
+        "target/reports/fig11.json",
+        harness::fig11_json(&rows).to_pretty(),
+    )
+    .ok();
+    let b = Bencher { samples: 3, ..Bencher::from_env() };
+    let stats = b.bench("fig11: smallest column, both flows", || {
+        harness::fig11(true).into_iter().next()
+    });
+    println!("{}", stats.report());
+}

@@ -1,0 +1,16 @@
+//! Bench for paper Fig. 12: synthesis (netlist generation) runtime across
+//! the UCR suite, ASAP7 baseline vs TNN7 hard-macro flow. The wall-clock
+//! ratio is the paper's headline 3.17x.
+use tnn7::harness;
+
+fn main() {
+    let full = std::env::var("TNN7_BENCH_FAST").is_err();
+    let rows = harness::fig12(!full);
+    harness::print_fig12(&rows);
+    std::fs::create_dir_all("target/reports").ok();
+    std::fs::write(
+        "target/reports/fig12.json",
+        harness::fig12_json(&rows).to_pretty(),
+    )
+    .ok();
+}

@@ -1,0 +1,12 @@
+//! Bench for paper Fig. 13: placement + routing-congestion comparison for
+//! the 82×2 TwoLeadECG column (ASAP7 vs TNN7 layouts).
+use tnn7::harness;
+use tnn7::util::bench::Bencher;
+
+fn main() {
+    let (base, t7) = harness::fig13();
+    harness::print_fig13(&base, &t7);
+    let b = Bencher { samples: 3, ..Bencher::from_env() };
+    let stats = b.bench("fig13: place+estimate 82x2 (both flows)", harness::fig13);
+    println!("{}", stats.report());
+}

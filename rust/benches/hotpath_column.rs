@@ -1,0 +1,62 @@
+//! L3 hot-path benchmark: gamma-cycle throughput of each engine — golden
+//! model, XLA single-step, and the batched XLA pipeline — on the 82×2
+//! column. Feeds the §Perf section of EXPERIMENTS.md.
+use tnn7::coordinator::{encode_ucr, Engine};
+use tnn7::runtime::XlaRuntime;
+use tnn7::tnn::params::TnnParams;
+use tnn7::ucr;
+use tnn7::util::bench::{black_box, Bencher};
+use tnn7::util::Rng64;
+
+fn main() {
+    let dataset = ucr::ucr_suite().into_iter().find(|c| c.name == "TwoLeadECG").unwrap();
+    let data = ucr::generate(dataset, 40, 3);
+    let items = encode_ucr(&data, 8);
+    let b = Bencher::from_env();
+    let mut rng = Rng64::seed_from_u64(5);
+
+    // golden engine
+    let mut engine = tnn7::coordinator::ucr_engine(dataset.p, dataset.q, &items, TnnParams::default(), &mut rng);
+    let mut k = 0usize;
+    let s = b.bench("golden column step (82x2)", || {
+        k = (k + 1) % items.len();
+        engine.step(&items[k].volley, &mut rng).unwrap()
+    });
+    println!("{}", s.report());
+    println!("  => {:.0} gamma cycles/s", 1e9 / s.median_ns());
+
+    // XLA engines
+    let Ok(rt) = XlaRuntime::load("artifacts") else {
+        println!("(artifacts missing; XLA benches skipped)");
+        return;
+    };
+    let exe = rt.column(dataset.p, dataset.q, "step").unwrap();
+    let mut xla = Engine::xla(exe, &mut rng);
+    let s = b.bench("xla column step (82x2)", || {
+        k = (k + 1) % items.len();
+        xla.step(&items[k].volley, &mut rng).unwrap()
+    });
+    println!("{}", s.report());
+    println!("  => {:.0} gamma cycles/s", 1e9 / s.median_ns());
+
+    // batched path: 16 gamma instances per PJRT call
+    if let Ok(bexe) = rt.by_name("column_p82_q2_th143_b16_step_batched") {
+        let (p, q, bsz) = (bexe.meta.p, bexe.meta.q, bexe.meta.batch);
+        let mut w: Vec<f32> = (0..p * q).map(|_| rng.gen_range(0, 8) as f32).collect();
+        let xs: Vec<tnn7::tnn::spike::SpikeTime> = (0..bsz)
+            .flat_map(|i| items[i % items.len()].volley.clone())
+            .collect();
+        let s = b.bench("xla batched step (82x2, B=16)", || {
+            let u1: Vec<f32> = (0..bsz * p * q).map(|_| rng.gen_f32()).collect();
+            let u2: Vec<f32> = (0..bsz * p * q).map(|_| rng.gen_f32()).collect();
+            let (y, w_new) = bexe.step_batched(&xs, &w, &u1, &u2).unwrap();
+            w = w_new;
+            black_box(y)
+        });
+        println!("{}", s.report());
+        println!(
+            "  => {:.0} gamma cycles/s (amortized over B=16)",
+            16.0 * 1e9 / s.median_ns()
+        );
+    }
+}

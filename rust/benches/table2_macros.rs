@@ -1,0 +1,12 @@
+//! Bench for paper Table II: per-macro PPA (TNN7 hard cell vs synthesized
+//! ASAP7 baseline), plus the per-macro synthesis+analysis cost.
+use tnn7::harness;
+use tnn7::util::bench::Bencher;
+
+fn main() {
+    let rows = harness::table2();
+    harness::print_table2(&rows);
+    let b = Bencher::from_env();
+    let stats = b.bench("table2: synthesize+analyze all 9 macros", || harness::table2());
+    println!("{}", stats.report());
+}

@@ -1,0 +1,28 @@
+//! Bench for paper Table III: the three MNIST multi-layer prototypes under
+//! both flows (synapse-count scaling, as the paper does).
+use tnn7::harness;
+use tnn7::util::bench::Bencher;
+
+fn main() {
+    let rows = harness::table3();
+    harness::print_table3(&rows);
+    for r in &rows {
+        let pct = |n: f64, b: f64| (1.0 - n / b) * 100.0;
+        println!(
+            "{:<16} TNN7 improvements: power {:.0}%, comp-time {:.0}%, area {:.0}%  (paper: 14%/16%/28%)",
+            r.name,
+            pct(r.tnn7.power_mw, r.base.power_mw),
+            pct(r.tnn7.comp_time_ns, r.base.comp_time_ns),
+            pct(r.tnn7.area_mm2, r.base.area_mm2),
+        );
+    }
+    let b = Bencher { samples: 3, ..Bencher::from_env() };
+    let stats = b.bench("table3: scale 2-layer design (both flows)", || {
+        let d = &tnn7::mnist::mnist_layer_geometries()[0];
+        (
+            tnn7::ppa::scale::scale_network(&d.layers, tnn7::synth::flow::Flow::Baseline, 16),
+            tnn7::ppa::scale::scale_network(&d.layers, tnn7::synth::flow::Flow::Tnn7, 16),
+        )
+    });
+    println!("{}", stats.report());
+}

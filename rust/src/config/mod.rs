@@ -1,0 +1,152 @@
+//! Experiment configuration: a small typed layer over the kv format
+//! (`configs/*.kv`), with CLI-style overrides — the launcher's config
+//! system.
+
+use crate::util::kv::KvDoc;
+use std::path::PathBuf;
+
+/// Which engine executes column steps on the request path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// AOT-compiled XLA executable via PJRT (the production path).
+    Xla,
+    /// Rust golden model (always available; used for fallback and checking).
+    Golden,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s {
+            "xla" => Ok(EngineKind::Xla),
+            "golden" => Ok(EngineKind::Golden),
+            other => anyhow::bail!("unknown engine {other:?} (xla|golden)"),
+        }
+    }
+}
+
+/// Top-level run configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Directory with AOT artifacts (manifest.kv + *.hlo.txt).
+    pub artifacts_dir: PathBuf,
+    /// Engine selection.
+    pub engine: EngineKind,
+    /// PRNG seed for workloads and STDP draws.
+    pub seed: u64,
+    /// Gamma instances (samples) to stream in online-learning runs.
+    pub gamma_instances: usize,
+    /// Bounded-channel depth between source and engine (backpressure).
+    pub channel_depth: usize,
+    /// Batch size for the batched XLA path (1 = unbatched).
+    pub batch: usize,
+    /// Output directory for reports.
+    pub out_dir: PathBuf,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            artifacts_dir: "artifacts".into(),
+            engine: EngineKind::Golden,
+            seed: 7,
+            gamma_instances: 400,
+            channel_depth: 64,
+            batch: 1,
+            out_dir: "target/reports".into(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load from a kv file; missing keys keep defaults.
+    pub fn from_kv(doc: &KvDoc) -> crate::Result<Self> {
+        let mut c = RunConfig::default();
+        if let Some(v) = doc.get("artifacts_dir") {
+            c.artifacts_dir = v.into();
+        }
+        if let Some(v) = doc.get("engine") {
+            c.engine = EngineKind::parse(v)?;
+        }
+        if let Some(v) = doc.get_u64("seed")? {
+            c.seed = v;
+        }
+        if let Some(v) = doc.get_usize("gamma_instances")? {
+            c.gamma_instances = v;
+        }
+        if let Some(v) = doc.get_usize("channel_depth")? {
+            c.channel_depth = v;
+        }
+        if let Some(v) = doc.get_usize("batch")? {
+            c.batch = v;
+        }
+        if let Some(v) = doc.get("out_dir") {
+            c.out_dir = v.into();
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// Apply `key=value` CLI overrides.
+    pub fn apply_overrides(&mut self, overrides: &[String]) -> crate::Result<()> {
+        let mut doc = KvDoc::default();
+        for o in overrides {
+            let (k, v) = o
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("override must be key=value: {o}"))?;
+            doc.set(k.trim(), v.trim());
+        }
+        let merged = Self::from_kv(&doc)?;
+        // from_kv starts from defaults; re-apply only the overridden keys.
+        for key in doc.keys() {
+            match key {
+                "artifacts_dir" => self.artifacts_dir = merged.artifacts_dir.clone(),
+                "engine" => self.engine = merged.engine,
+                "seed" => self.seed = merged.seed,
+                "gamma_instances" => self.gamma_instances = merged.gamma_instances,
+                "channel_depth" => self.channel_depth = merged.channel_depth,
+                "batch" => self.batch = merged.batch,
+                "out_dir" => self.out_dir = merged.out_dir.clone(),
+                other => anyhow::bail!("unknown config key {other:?}"),
+            }
+        }
+        self.validate()
+    }
+
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(self.channel_depth >= 1, "channel_depth must be >= 1");
+        anyhow::ensure!(self.batch >= 1, "batch must be >= 1");
+        anyhow::ensure!(self.gamma_instances >= 1, "gamma_instances must be >= 1");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn kv_roundtrip() {
+        let doc = KvDoc::parse("engine = xla\nseed = 42\nbatch = 16\n").unwrap();
+        let c = RunConfig::from_kv(&doc).unwrap();
+        assert_eq!(c.engine, EngineKind::Xla);
+        assert_eq!(c.seed, 42);
+        assert_eq!(c.batch, 16);
+        assert_eq!(c.channel_depth, 64, "default preserved");
+    }
+
+    #[test]
+    fn overrides_apply_and_reject_unknown() {
+        let mut c = RunConfig::default();
+        c.apply_overrides(&["seed=9".into(), "engine=xla".into()])
+            .unwrap();
+        assert_eq!(c.seed, 9);
+        assert_eq!(c.engine, EngineKind::Xla);
+        assert!(c.apply_overrides(&["bogus=1".into()]).is_err());
+        assert!(c.apply_overrides(&["batch=0".into()]).is_err());
+    }
+}

@@ -1,0 +1,489 @@
+//! Structural generator for complete p×q TNN column designs.
+//!
+//! Assembles the microarchitecture of Fig. 1 of the paper out of the nine
+//! macros plus standard arithmetic (adder trees, accumulators, comparators):
+//!
+//! ```text
+//!  IN[i] ─ pulse2edge → EIN_i ─ edge2pulse → SPIKE_i        (encode, ×p;
+//!          spike_gen window monitored)                       Fig. 8–10)
+//!  synapse (i,j), ×p×q:
+//!     syn_weight_update(SPIKE_i, WT_INC, WT_DEC) → W, C, RD  (Fig. 3)
+//!     syn_readout(C, RD) → RESP_ij                           (Fig. 2)
+//!     less_equal(EIN_i, EOUT_j) → GREATER                    (Fig. 4)
+//!     stdp_case_gen(GREATER, EIN_i, EOUT_j) → cases          (Fig. 5)
+//!     stabilize_func(sel = W / ~W by direction, B0..7)       (Fig. 7)
+//!     incdec(cases, BRVs, BSTAB) → INC, DEC                  (Fig. 6)
+//!     WT_INC/WT_DEC = INC/DEC strobed at gamma end
+//!  neuron j, ×q:
+//!     popcount(RESP_*j) → accumulator ─ ≥ θ → FIRE_j
+//!  WTA:
+//!     less_equal(FIRE_j, OR_{k≠j} FIRE_k) + priority chain → EOUT_j
+//! ```
+//!
+//! The generator serves three purposes: functional cross-check against the
+//! golden model (BRV streams as primary inputs), synthesis workload for the
+//! Fig. 11/12 experiments (BRVs from an on-column LFSR, self-contained),
+//! and PPA analysis target.
+
+use super::macros9::MacroKind;
+use super::netlist::{NetBuilder, NetId, Netlist};
+use super::sim::Simulator;
+use crate::tnn::params::TnnParams;
+use crate::tnn::spike::SpikeTime;
+
+/// Where the Bernoulli random variables come from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BrvSource {
+    /// Primary inputs — controllable, used for golden-model cross-checks.
+    Inputs,
+    /// On-column LFSR bank — self-contained, used for synthesis/PPA (the
+    /// real column of [6] carries its pseudo-random source on silicon).
+    Lfsr,
+}
+
+/// Handles into the generated netlist for stimulus and observation.
+#[derive(Clone, Debug)]
+pub struct ColumnDesign {
+    pub netlist: Netlist,
+    pub p: usize,
+    pub q: usize,
+    pub theta: u32,
+    /// Per input line: the IN pulse net.
+    pub in_pulse: Vec<NetId>,
+    /// Gamma reset / gamma-end strobe (single net, doubles as both).
+    pub grst: NetId,
+    /// Post-WTA output edges, one per neuron.
+    pub out_spike: Vec<NetId>,
+    /// Pre-WTA fire edges, one per neuron (monitor).
+    pub fire: Vec<NetId>,
+    /// Per synapse (row-major i*q+j): index of its SynWeightUpdate macro
+    /// instance (for weight preload/observation in behavioral simulation).
+    pub syn_inst: Vec<u32>,
+    /// Per synapse: BRV input nets `[BCAP, BMIN, BSRCH, BBKF]`
+    /// (empty when `BrvSource::Lfsr`).
+    pub brv_case: Vec<[NetId; 4]>,
+    /// Per synapse: the 8 stabilization stream nets `B0..B7`
+    /// (empty when `BrvSource::Lfsr`).
+    pub brv_stab: Vec<[NetId; 8]>,
+}
+
+/// Build a p×q column netlist.
+pub fn build_column(p: usize, q: usize, theta: u32, brv: BrvSource) -> ColumnDesign {
+    assert!(p >= 1 && q >= 1);
+    let mut b = NetBuilder::new(&format!("column_{p}x{q}"));
+
+    // --- global controls ---------------------------------------------------
+    let grst = b.input("GRST");
+
+    // --- input encode block (×p) --------------------------------------------
+    let mut in_pulse = Vec::with_capacity(p);
+    let mut ein = Vec::with_capacity(p);
+    let mut spike = Vec::with_capacity(p);
+    for i in 0..p {
+        let x = b.input(&format!("IN[{i}]"));
+        in_pulse.push(x);
+        let e = b.macro_inst(MacroKind::Pulse2Edge, vec![x, grst])[0];
+        ein.push(e);
+        let sp = b.macro_inst(MacroKind::Edge2Pulse, vec![e, grst])[0];
+        spike.push(sp);
+        // Spike-encoding window (Fig. 8) — part of the real column's encode
+        // block; monitored so optimization cannot delete it.
+        let win = b.macro_inst(MacroKind::SpikeGen, vec![x, grst])[0];
+        b.output(&format!("win[{i}]"), win);
+    }
+
+    // --- LFSR BRV bank (synthesis configuration) ----------------------------
+    // 16-bit Fibonacci LFSR (x^16 + x^15 + x^13 + x^4 + 1), shared by the
+    // column; stream probabilities are built from tap combinations.
+    let lfsr_bits: Vec<NetId> = if brv == BrvSource::Lfsr {
+        let cells = b.dff_cell_vec(16);
+        let t0 = b.xor(cells[15], cells[14]);
+        let t1 = b.xor(t0, cells[12]);
+        let fb = b.xor(t1, cells[3]);
+        let mut next = vec![fb];
+        next.extend_from_slice(&cells[..15]);
+        b.patch_dff_vec(&cells, &next, None, 0xACE1); // nonzero seed
+        cells
+    } else {
+        Vec::new()
+    };
+    let mut lfsr_rot = 0usize;
+
+    // --- synapse datapath (×p×q) ---------------------------------------------
+    // STDP control (WT_INC/WT_DEC) is produced by logic built after the WTA;
+    // forward wires bridge the passes.
+    let mut resp = vec![Vec::with_capacity(p); q]; // resp[j][i]
+    let mut syn_inst = Vec::with_capacity(p * q);
+    let mut wt_inc_wires = Vec::with_capacity(p * q);
+    let mut wt_dec_wires = Vec::with_capacity(p * q);
+    let mut w_bits: Vec<[NetId; 3]> = Vec::with_capacity(p * q);
+    for i in 0..p {
+        for _j in 0..q {
+            let wi = b.wire();
+            let wd = b.wire();
+            wt_inc_wires.push(wi);
+            wt_dec_wires.push(wd);
+            let outs = b.macro_inst(MacroKind::SynWeightUpdate, vec![spike[i], wi, wd, grst]);
+            syn_inst.push((b.netlist().macros.len() - 1) as u32);
+            w_bits.push([outs[0], outs[1], outs[2]]);
+            let r = b.macro_inst(
+                MacroKind::SynReadout,
+                vec![outs[3], outs[4], outs[5], outs[6]],
+            )[0];
+            resp[_j].push(r);
+        }
+    }
+
+    // --- neuron bodies (×q) ---------------------------------------------------
+    let mut fire = Vec::with_capacity(q);
+    for j in 0..q {
+        let cnt = b.popcount(&resp[j]);
+        let max_pot = (p as u64) * 7;
+        let wa = (64 - max_pot.leading_zeros()) as usize;
+        let zero = b.constant(false);
+        let mut cnt_w = cnt.clone();
+        cnt_w.resize(wa, zero);
+        let acc = b.dff_cell_vec(wa);
+        let sum = b.add_vec(&acc, &cnt_w); // wa+1 bits; carry unreachable
+        b.patch_dff_vec(&acc, &sum[..wa], Some(grst), 0);
+        let f = b.ge_const(&sum[..wa], theta as u64);
+        fire.push(f);
+        b.output(&format!("fire[{j}]"), f);
+    }
+
+    // --- 1-WTA lateral inhibition ----------------------------------------------
+    let fal = b.constant(false);
+    let mut prefix = vec![fal; q]; // OR of fire[0..j)
+    for j in 1..q {
+        prefix[j] = b.or(prefix[j - 1], fire[j - 1]);
+    }
+    let mut suffix = vec![fal; q]; // OR of fire(j..q)
+    for j in (0..q.saturating_sub(1)).rev() {
+        suffix[j] = b.or(suffix[j + 1], fire[j + 1]);
+    }
+    let mut le_out = Vec::with_capacity(q);
+    for j in 0..q {
+        let inh = b.or(prefix[j], suffix[j]);
+        let le = b.macro_inst(MacroKind::LessEqual, vec![fire[j], inh, grst])[0];
+        le_out.push(le);
+    }
+    // Priority chain: all surviving less_equal edges rise on the same (min)
+    // cycle, so a static lowest-index-wins chain implements the tie-break.
+    let mut eout = Vec::with_capacity(q);
+    let mut le_pre = fal;
+    for j in 0..q {
+        let nle = b.not(le_pre);
+        let e = b.and(le_out[j], nle);
+        eout.push(e);
+        b.output(&format!("out[{j}]"), e);
+        le_pre = b.or(le_pre, le_out[j]);
+    }
+
+    // --- STDP control (×p×q, pass 2) ---------------------------------------------
+    let mut brv_case_nets = Vec::new();
+    let mut brv_stab_nets = Vec::new();
+    for i in 0..p {
+        for j in 0..q {
+            let k = i * q + j;
+            // GREATER_ij = !(x_i ≤ y_j) via a less_equal on the edges.
+            let le = b.macro_inst(MacroKind::LessEqual, vec![ein[i], eout[j], grst])[0];
+            let greater = b.not(le);
+            let cases = b.macro_inst(MacroKind::StdpCaseGen, vec![greater, ein[i], eout[j]]);
+            let (c0, c1, c2, c3) = (cases[0], cases[1], cases[2], cases[3]);
+            // Direction-dependent stabilize select: INC uses W, DEC uses ~W
+            // (prob (w+1)/8 up, (w_max−w+1)/8 down — DESIGN.md §2).
+            let inc_case = b.or(c0, c2);
+            let [w0, w1, w2] = w_bits[k];
+            let nw0 = b.not(w0);
+            let nw1 = b.not(w1);
+            let nw2 = b.not(w2);
+            let s0 = b.mux(inc_case, nw0, w0);
+            let s1 = b.mux(inc_case, nw1, w1);
+            let s2 = b.mux(inc_case, nw2, w2);
+            let (case_nets, stab_nets): ([NetId; 4], [NetId; 8]) = match brv {
+                BrvSource::Inputs => {
+                    let c = [
+                        b.input(&format!("BCAP[{k}]")),
+                        b.input(&format!("BMIN[{k}]")),
+                        b.input(&format!("BSRCH[{k}]")),
+                        b.input(&format!("BBKF[{k}]")),
+                    ];
+                    let mut s = [0 as NetId; 8];
+                    for (m, slot) in s.iter_mut().enumerate() {
+                        *slot = b.input(&format!("BST{m}[{k}]"));
+                    }
+                    (c, s)
+                }
+                BrvSource::Lfsr => {
+                    // µ_capture≈1 (const1), µ_minus≈1/2 (tap),
+                    // µ_search≈1/16 (AND of 4 taps), µ_backoff≈1/2 (tap).
+                    let one = b.constant(true);
+                    let t: Vec<NetId> = (0..6)
+                        .map(|m| lfsr_bits[(lfsr_rot + m * 5) % 16])
+                        .collect();
+                    lfsr_rot = (lfsr_rot + 7) % 16;
+                    let srch1 = b.and(t[0], t[1]);
+                    let srch2 = b.and(t[2], t[3]);
+                    let srch = b.and(srch1, srch2);
+                    let c = [one, t[4], srch, t[5]];
+                    // B_m with prob (m+1)/8 from 3 fresh taps.
+                    let u: Vec<NetId> = (0..3)
+                        .map(|m| lfsr_bits[(lfsr_rot + m * 5) % 16])
+                        .collect();
+                    lfsr_rot = (lfsr_rot + 7) % 16;
+                    let (ta, tb, tc) = (u[0], u[1], u[2]);
+                    let and_ab = b.and(ta, tb);
+                    let and_abc = b.and(and_ab, tc); // 1/8
+                    let or_bc = b.or(tb, tc);
+                    let a_and_orbc = b.and(ta, or_bc); // 3/8
+                    let and_bc = b.and(tb, tc);
+                    let a_or_andbc = b.or(ta, and_bc); // 5/8
+                    let ab_or = b.or(ta, tb); // 6/8
+                    let abc_or = b.or(ab_or, tc); // 7/8
+                    let s = [and_abc, and_ab, a_and_orbc, ta, a_or_andbc, ab_or, abc_or, one];
+                    (c, s)
+                }
+            };
+            if brv == BrvSource::Inputs {
+                brv_case_nets.push(case_nets);
+                brv_stab_nets.push(stab_nets);
+            }
+            let bstab = b.macro_inst(
+                MacroKind::StabilizeFunc,
+                vec![
+                    s0,
+                    s1,
+                    s2,
+                    stab_nets[0],
+                    stab_nets[1],
+                    stab_nets[2],
+                    stab_nets[3],
+                    stab_nets[4],
+                    stab_nets[5],
+                    stab_nets[6],
+                    stab_nets[7],
+                ],
+            )[0];
+            let id = b.macro_inst(
+                MacroKind::IncDec,
+                vec![
+                    c0,
+                    c1,
+                    c2,
+                    c3,
+                    case_nets[0],
+                    case_nets[1],
+                    case_nets[2],
+                    case_nets[3],
+                    bstab,
+                ],
+            );
+            // Weight updates strobed at gamma end (GRST doubles as GEND; a
+            // synchronous reset captures after the update is applied).
+            let wt_inc = b.and(id[0], grst);
+            let wt_dec = b.and(id[1], grst);
+            b.connect(wt_inc_wires[k], wt_inc);
+            b.connect(wt_dec_wires[k], wt_dec);
+        }
+    }
+
+    let netlist = b.finish();
+    ColumnDesign {
+        netlist,
+        p,
+        q,
+        theta,
+        in_pulse,
+        grst,
+        out_spike: eout,
+        fire,
+        syn_inst,
+        brv_case: brv_case_nets,
+        brv_stab: brv_stab_nets,
+    }
+}
+
+/// Gate-level column simulation harness (requires `BrvSource::Inputs`).
+pub struct ColumnSim<'a> {
+    design: &'a ColumnDesign,
+    pub sim: Simulator<'a>,
+    params: TnnParams,
+}
+
+impl<'a> ColumnSim<'a> {
+    pub fn new(design: &'a ColumnDesign, params: TnnParams) -> Result<Self, String> {
+        assert!(
+            !design.brv_case.is_empty(),
+            "ColumnSim requires BrvSource::Inputs"
+        );
+        let sim = Simulator::new(&design.netlist)?;
+        Ok(ColumnSim {
+            design,
+            sim,
+            params,
+        })
+    }
+
+    /// Preload synaptic weights (row-major p×q).
+    pub fn set_weights(&mut self, ws: &[u8]) {
+        assert_eq!(ws.len(), self.design.p * self.design.q);
+        for (k, &w) in ws.iter().enumerate() {
+            let inst = self.design.syn_inst[k] as usize;
+            let mut st = self.sim.macro_state(inst).clone();
+            st.set_weight(w);
+            self.sim.set_macro_state(inst, st);
+        }
+    }
+
+    /// Read back the stored weights.
+    pub fn weights(&self) -> Vec<u8> {
+        self.design
+            .syn_inst
+            .iter()
+            .map(|&inst| self.sim.macro_state(inst as usize).weight())
+            .collect()
+    }
+
+    /// Run one gamma cycle with the same uniform draws the golden model
+    /// consumes; returns the post-WTA spike times.
+    pub fn run_gamma(
+        &mut self,
+        xs: &[SpikeTime],
+        u_case: &[f64],
+        u_stab: &[f64],
+    ) -> Vec<SpikeTime> {
+        let d = self.design;
+        assert_eq!(xs.len(), d.p);
+        let n = d.p * d.q;
+        assert_eq!(u_case.len(), n);
+        assert_eq!(u_stab.len(), n);
+        let g = self.params.gamma_cycles;
+        let w_max = self.params.w_max() as f64;
+        let mut out = vec![SpikeTime::NONE; d.q];
+
+        // BRV inputs are constant across the gamma cycle (sampled by the
+        // gamma-end strobe). All four case streams derive from the one
+        // uniform draw — equivalent to the golden model's single
+        // `u_case < µ(active case)` test because the cases are one-hot.
+        for k in 0..n {
+            let c = d.brv_case[k];
+            self.sim.set_input_net(c[0], u_case[k] < self.params.mu_capture);
+            self.sim.set_input_net(c[1], u_case[k] < self.params.mu_minus);
+            self.sim.set_input_net(c[2], u_case[k] < self.params.mu_search);
+            self.sim.set_input_net(c[3], u_case[k] < self.params.mu_backoff);
+            for m in 0..8 {
+                let prob = if self.params.stabilize {
+                    (m as f64 + 1.0) / (w_max + 1.0)
+                } else {
+                    1.0
+                };
+                self.sim.set_input_net(d.brv_stab[k][m], u_stab[k] < prob);
+            }
+        }
+
+        for t in 0..g {
+            for (i, &x) in xs.iter().enumerate() {
+                self.sim
+                    .set_input_net(d.in_pulse[i], x.is_spike() && x.0 == t);
+            }
+            self.sim.set_input_net(d.grst, t == g - 1);
+            self.sim.settle();
+            for (j, &net) in d.out_spike.iter().enumerate() {
+                if self.sim.get(net) && !out[j].is_spike() {
+                    out[j] = SpikeTime::at(t);
+                }
+            }
+            self.sim.clock();
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tnn::column::Column;
+    use crate::util::Rng64;
+
+    #[test]
+    fn column_netlist_builds_and_levelizes() {
+        let d = build_column(4, 2, 4, BrvSource::Inputs);
+        assert_eq!(d.in_pulse.len(), 4);
+        assert_eq!(d.out_spike.len(), 2);
+        assert_eq!(d.syn_inst.len(), 8);
+        d.netlist.levelize().expect("acyclic");
+        // p*(p2e + e2p + spike_gen) + p*q*(swu + readout + le + casegen +
+        // stab + incdec) + q*le(wta)
+        assert_eq!(d.netlist.macros.len(), 3 * 4 + 6 * 8 + 2);
+    }
+
+    #[test]
+    fn lfsr_variant_is_self_contained() {
+        let d = build_column(3, 2, 3, BrvSource::Lfsr);
+        assert_eq!(d.netlist.inputs.len(), 1 + 3, "only GRST + IN[i]");
+        d.netlist.levelize().expect("acyclic");
+    }
+
+    #[test]
+    fn gate_column_matches_golden_inference() {
+        let mut rng = Rng64::seed_from_u64(77);
+        for trial in 0..10 {
+            let (p, q) = (rng.gen_range(2, 7), rng.gen_range(1, 4));
+            let theta = rng.gen_range(1, p * 3) as u32;
+            let params = TnnParams::default();
+            let design = build_column(p, q, theta, BrvSource::Inputs);
+            let mut gsim = ColumnSim::new(&design, params.clone()).unwrap();
+            let mut golden = Column::with_random_weights(p, q, theta, params, &mut rng);
+            gsim.set_weights(golden.weights());
+            let xs: Vec<SpikeTime> = (0..p)
+                .map(|_| {
+                    if rng.gen_bool(0.25) {
+                        SpikeTime::NONE
+                    } else {
+                        SpikeTime::at(rng.gen_range(0, 8) as u32)
+                    }
+                })
+                .collect();
+            // u = 1.0 blocks every update → pure inference.
+            let ones = vec![1.0; p * q];
+            let got = gsim.run_gamma(&xs, &ones, &ones);
+            let want = golden.step_with_uniforms(&xs, &ones, &ones);
+            assert_eq!(got, want.output, "trial {trial} p={p} q={q} theta={theta}");
+        }
+    }
+
+    #[test]
+    fn gate_column_matches_golden_learning_over_many_gammas() {
+        let mut rng = Rng64::seed_from_u64(123);
+        let (p, q, theta) = (5, 2, 6);
+        let params = TnnParams::default();
+        let design = build_column(p, q, theta, BrvSource::Inputs);
+        let mut gsim = ColumnSim::new(&design, params.clone()).unwrap();
+        let mut golden = Column::with_random_weights(p, q, theta, params, &mut rng);
+        gsim.set_weights(golden.weights());
+        let n = p * q;
+        for gamma in 0..40 {
+            let xs: Vec<SpikeTime> = (0..p)
+                .map(|_| {
+                    if rng.gen_bool(0.3) {
+                        SpikeTime::NONE
+                    } else {
+                        SpikeTime::at(rng.gen_range(0, 8) as u32)
+                    }
+                })
+                .collect();
+            let mut u_case = vec![0.0; n];
+            let mut u_stab = vec![0.0; n];
+            rng.fill_f64(&mut u_case);
+            rng.fill_f64(&mut u_stab);
+            let got = gsim.run_gamma(&xs, &u_case, &u_stab);
+            let want = golden.step_with_uniforms(&xs, &u_case, &u_stab);
+            assert_eq!(got, want.output, "gamma {gamma}: spike mismatch");
+            assert_eq!(
+                gsim.weights(),
+                golden.weights(),
+                "gamma {gamma}: weight mismatch"
+            );
+        }
+    }
+}

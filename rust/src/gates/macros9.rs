@@ -1,0 +1,713 @@
+//! The nine TNN7 custom macros (paper Table I / Figs. 2–10).
+//!
+//! Each macro exists in three coordinated forms:
+//!
+//! 1. a **pin interface** (`input_pins` / `output_pins`) shared by all forms;
+//! 2. a **cycle-accurate behavioral model** ([`MacroState`]) used when the
+//!    macro is instantiated as a hard cell in a netlist simulation — this is
+//!    the function Liberate/Spectre characterised in the paper, and it is
+//!    cross-checked against the golden TNN model in `rust/src/tnn/`;
+//! 3. a **generic-gate expansion** ([`expand`]) — the behavioral-RTL
+//!    equivalent that the ASAP7 *baseline* flow synthesizes from standard
+//!    cells (what Genus saw in [6] before TNN7 existed).
+//!
+//! The TNN7 synthesis flow preserves instances as hard cells (form 2 +
+//! Table II PPA data from [`crate::cells::tnn7lib`]); the baseline flow
+//! calls [`expand`] and hands the result to the optimizer/mapper. This is
+//! exactly the comparison the paper's Section IV makes.
+
+use super::netlist::{NetBuilder, NetId};
+
+/// Identity of one of the nine macros.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MacroKind {
+    /// Fig. 2 — RNL readout: asserts response while the live weight counter
+    /// is non-zero during a readout process.
+    SynReadout,
+    /// Fig. 3 — weight register + live down-counter + STDP inc/dec port.
+    SynWeightUpdate,
+    /// Fig. 4 — temporal `less_equal`: DATA propagates iff it arrives no
+    /// later than INHIBIT.
+    LessEqual,
+    /// Fig. 5 — one-hot STDP case generation from GREATER/EIN/EOUT.
+    StdpCaseGen,
+    /// Fig. 6 — INC/DEC control from cases × Bernoulli draws.
+    IncDec,
+    /// Fig. 7 — 8:1 BRV select by 3-bit weight (bimodal stabilization).
+    StabilizeFunc,
+    /// Fig. 8 — input pulse → t_max-cycle spike pulse.
+    SpikeGen,
+    /// Fig. 9 — pulse → edge (high until gamma end).
+    Pulse2Edge,
+    /// Fig. 10 — edge → single-aclk pulse.
+    Edge2Pulse,
+}
+
+pub const ALL_MACROS: [MacroKind; 9] = [
+    MacroKind::SynReadout,
+    MacroKind::SynWeightUpdate,
+    MacroKind::LessEqual,
+    MacroKind::StdpCaseGen,
+    MacroKind::IncDec,
+    MacroKind::StabilizeFunc,
+    MacroKind::SpikeGen,
+    MacroKind::Pulse2Edge,
+    MacroKind::Edge2Pulse,
+];
+
+impl MacroKind {
+    /// Library cell name (matches the paper's Table II rows).
+    pub fn cell_name(&self) -> &'static str {
+        match self {
+            MacroKind::SynReadout => "syn_readout",
+            MacroKind::SynWeightUpdate => "syn_weight_update",
+            MacroKind::LessEqual => "less_equal",
+            MacroKind::StdpCaseGen => "stdp_case_gen",
+            MacroKind::IncDec => "incdec",
+            MacroKind::StabilizeFunc => "stabilize_func",
+            MacroKind::SpikeGen => "spike_gen",
+            MacroKind::Pulse2Edge => "pulse2edge",
+            MacroKind::Edge2Pulse => "edge2pulse",
+        }
+    }
+
+    pub fn from_cell_name(name: &str) -> Option<MacroKind> {
+        ALL_MACROS.iter().copied().find(|m| m.cell_name() == name)
+    }
+
+    /// Input pin names (order = net order in `MacroInst::inputs`).
+    pub fn input_pins(&self) -> &'static [&'static str] {
+        match self {
+            // live counter value + reading flag
+            MacroKind::SynReadout => &["C0", "C1", "C2", "RD"],
+            // spike pulse, STDP inc/dec strobes, gamma reset
+            MacroKind::SynWeightUpdate => &["SPIKE", "WT_INC", "WT_DEC", "GRST"],
+            MacroKind::LessEqual => &["DATA", "INHIBIT", "GRST"],
+            MacroKind::StdpCaseGen => &["GREATER", "EIN", "EOUT"],
+            // one-hot cases + per-case BRVs + stabilization BRV
+            MacroKind::IncDec => &["C0", "C1", "C2", "C3", "BCAP", "BMIN", "BSRCH", "BBKF", "BSTAB"],
+            // 3-bit select + 8 BRV streams
+            MacroKind::StabilizeFunc => &["S0", "S1", "S2", "B0", "B1", "B2", "B3", "B4", "B5", "B6", "B7"],
+            MacroKind::SpikeGen => &["PULSE", "GRST"],
+            MacroKind::Pulse2Edge => &["PULSE", "GRST"],
+            // GRST clears the edge-tracking state at the gamma boundary
+            // (the gclk-synchronised reset implicit in the paper's Fig. 10).
+            MacroKind::Edge2Pulse => &["EDGE", "GRST"],
+        }
+    }
+
+    /// Output pin names.
+    pub fn output_pins(&self) -> &'static [&'static str] {
+        match self {
+            MacroKind::SynReadout => &["RESP"],
+            // stored weight, live counter, reading flag
+            MacroKind::SynWeightUpdate => &["W0", "W1", "W2", "C0", "C1", "C2", "RD"],
+            MacroKind::LessEqual => &["OUT"],
+            MacroKind::StdpCaseGen => &["CASE0", "CASE1", "CASE2", "CASE3"],
+            MacroKind::IncDec => &["INC", "DEC"],
+            MacroKind::StabilizeFunc => &["OUT"],
+            MacroKind::SpikeGen => &["SPIKE"],
+            MacroKind::Pulse2Edge => &["EDGE"],
+            MacroKind::Edge2Pulse => &["PULSE"],
+        }
+    }
+
+    /// Same-cycle (Mealy) input dependencies of output pin `pin`, as indices
+    /// into `input_pins()`. Moore pins — functions of internal state only —
+    /// return an empty slice; this is what makes the STDP feedback loop
+    /// (weight → stabilize_func → incdec → syn_weight_update → weight)
+    /// acyclic at the combinational level: `syn_weight_update`'s outputs are
+    /// registered.
+    pub fn pin_deps(&self, pin: u8) -> &'static [usize] {
+        match self {
+            MacroKind::SynReadout => &[0, 1, 2, 3],
+            // W pins (0–2) are registered; C/RD pins (3–6) are Mealy on
+            // SPIKE only — crucially NOT on WT_INC/WT_DEC, which is what
+            // keeps the STDP feedback loop combinationally acyclic.
+            MacroKind::SynWeightUpdate => {
+                if pin <= 2 {
+                    &[]
+                } else {
+                    &[0]
+                }
+            }
+            MacroKind::LessEqual => &[0],      // OUT gates DATA through state
+            MacroKind::StdpCaseGen => &[0, 1, 2],
+            MacroKind::IncDec => &[0, 1, 2, 3, 4, 5, 6, 7, 8],
+            MacroKind::StabilizeFunc => &[0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10],
+            MacroKind::SpikeGen => {
+                let _ = pin;
+                &[] // Moore: SPIKE is the registered `active` bit
+            }
+            MacroKind::Pulse2Edge => &[0],
+            MacroKind::Edge2Pulse => &[0],
+        }
+    }
+
+    /// Number of state bits in the behavioral model (0 = combinational).
+    pub fn state_bits(&self) -> usize {
+        match self {
+            MacroKind::SynReadout => 0,
+            MacroKind::SynWeightUpdate => 7, // weight[3] + counter[3] + reading
+            MacroKind::LessEqual => 2,       // inh_seen + passed
+            MacroKind::StdpCaseGen => 0,
+            MacroKind::IncDec => 0,
+            MacroKind::StabilizeFunc => 0,
+            MacroKind::SpikeGen => 5, // counter[3] + active + started
+            MacroKind::Pulse2Edge => 1,
+            MacroKind::Edge2Pulse => 1,
+        }
+    }
+
+    pub fn is_sequential(&self) -> bool {
+        self.state_bits() > 0
+    }
+}
+
+/// Behavioral state of one macro instance during simulation.
+#[derive(Clone, Debug, Default)]
+pub struct MacroState {
+    bits: u32,
+}
+
+impl MacroState {
+    /// Raw state bits (layout documented per macro in `state_bits`).
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// Construct from raw bits.
+    pub fn from_bits(bits: u32) -> Self {
+        MacroState { bits }
+    }
+
+    /// For `SynWeightUpdate`: the stored weight field.
+    pub fn weight(&self) -> u8 {
+        self.field(0, 3) as u8
+    }
+
+    /// For `SynWeightUpdate`: overwrite the stored weight field.
+    pub fn set_weight(&mut self, w: u8) {
+        assert!(w <= 7);
+        self.set_field(0, 3, w as u32);
+    }
+
+    fn get(&self, k: usize) -> bool {
+        (self.bits >> k) & 1 == 1
+    }
+    fn set(&mut self, k: usize, v: bool) {
+        if v {
+            self.bits |= 1 << k;
+        } else {
+            self.bits &= !(1 << k);
+        }
+    }
+    fn field(&self, lo: usize, width: usize) -> u32 {
+        (self.bits >> lo) & ((1 << width) - 1)
+    }
+    fn set_field(&mut self, lo: usize, width: usize, v: u32) {
+        let mask = ((1u32 << width) - 1) << lo;
+        self.bits = (self.bits & !mask) | ((v << lo) & mask);
+    }
+}
+
+/// Combinational evaluation of a macro's outputs from its current inputs
+/// and state. (Mealy: outputs may depend on same-cycle inputs, exactly like
+/// the transistor-level cells.)
+pub fn eval(kind: MacroKind, inputs: &[bool], st: &MacroState, out: &mut Vec<bool>) {
+    out.clear();
+    match kind {
+        MacroKind::SynReadout => {
+            let (c0, c1, c2, rd) = (inputs[0], inputs[1], inputs[2], inputs[3]);
+            out.push(rd && (c0 || c1 || c2));
+        }
+        MacroKind::SynWeightUpdate => {
+            // W pins are Moore (registered weight); C/RD pins are Mealy on
+            // SPIKE so the readout starts the same cycle the spike arrives
+            // (matching the golden RnlSynapse and the paper's datapath,
+            // where the spike gates the counter load combinationally).
+            let spike = inputs[0];
+            let w = st.field(0, 3);
+            let c = st.field(3, 3);
+            let rd = st.get(6);
+            let start = spike && !rd;
+            let eff_c = if start { w } else { c };
+            let eff_rd = rd || start;
+            out.push(w & 1 == 1);
+            out.push(w >> 1 & 1 == 1);
+            out.push(w >> 2 & 1 == 1);
+            out.push(eff_c & 1 == 1);
+            out.push(eff_c >> 1 & 1 == 1);
+            out.push(eff_c >> 2 & 1 == 1);
+            out.push(eff_rd);
+        }
+        MacroKind::LessEqual => {
+            let data = inputs[0];
+            let inh_seen = st.get(0);
+            let passed = st.get(1);
+            out.push(data && (!inh_seen || passed));
+        }
+        MacroKind::StdpCaseGen => {
+            let (greater, ein, eout) = (inputs[0], inputs[1], inputs[2]);
+            out.push(ein && eout && !greater);
+            out.push(ein && eout && greater);
+            out.push(ein && !eout);
+            out.push(!ein && eout);
+        }
+        MacroKind::IncDec => {
+            let (c0, c1, c2, c3) = (inputs[0], inputs[1], inputs[2], inputs[3]);
+            let (bcap, bmin, bsrch, bbkf, bstab) =
+                (inputs[4], inputs[5], inputs[6], inputs[7], inputs[8]);
+            out.push(((c0 && bcap) || (c2 && bsrch)) && bstab);
+            out.push(((c1 && bmin) || (c3 && bbkf)) && bstab);
+        }
+        MacroKind::StabilizeFunc => {
+            let sel = inputs[0] as usize | (inputs[1] as usize) << 1 | (inputs[2] as usize) << 2;
+            out.push(inputs[3 + sel]);
+        }
+        MacroKind::SpikeGen => {
+            out.push(st.get(3)); // active
+        }
+        MacroKind::Pulse2Edge => {
+            out.push(inputs[0] || st.get(0));
+        }
+        MacroKind::Edge2Pulse => {
+            out.push(inputs[0] && !st.get(0));
+        }
+    }
+}
+
+/// Clock-edge state update (no-op for combinational macros).
+pub fn step(kind: MacroKind, inputs: &[bool], st: &mut MacroState) {
+    match kind {
+        MacroKind::SynWeightUpdate => {
+            let (spike, inc, dec, grst) = (inputs[0], inputs[1], inputs[2], inputs[3]);
+            let w_old = st.field(0, 3);
+            let mut w = w_old;
+            let mut c = st.field(3, 3);
+            let mut rd = st.get(6);
+            // STDP port: saturating unit inc/dec (INC has priority).
+            if inc && w < 7 {
+                w += 1;
+            } else if dec && w > 0 {
+                w -= 1;
+            }
+            if grst {
+                rd = false;
+                c = 0;
+            } else if spike && !rd {
+                // Readout starts: the Mealy eval already emitted the count
+                // `w_old` this cycle, so the register captures w_old − 1.
+                rd = true;
+                c = w_old.saturating_sub(1);
+            } else if rd && c > 0 {
+                c -= 1;
+            }
+            st.set_field(0, 3, w);
+            st.set_field(3, 3, c);
+            st.set(6, rd);
+        }
+        MacroKind::LessEqual => {
+            let (data, inhibit, grst) = (inputs[0], inputs[1], inputs[2]);
+            if grst {
+                st.set(0, false);
+                st.set(1, false);
+            } else {
+                let inh_seen = st.get(0);
+                let passed = st.get(1);
+                // Pass latches while DATA is high and no strictly-earlier
+                // INHIBIT was seen.
+                st.set(1, passed || (data && !inh_seen));
+                st.set(0, inh_seen || inhibit);
+            }
+        }
+        MacroKind::SpikeGen => {
+            let (pulse, grst) = (inputs[0], inputs[1]);
+            let mut cnt = st.field(0, 3);
+            let mut active = st.get(3);
+            let mut started = st.get(4);
+            if grst {
+                cnt = 0;
+                active = false;
+                started = false;
+            } else if !active && pulse && !started {
+                active = true;
+                started = true;
+                cnt = 7;
+            } else if active {
+                if cnt == 0 {
+                    active = false;
+                } else {
+                    cnt -= 1;
+                }
+            }
+            st.set_field(0, 3, cnt);
+            st.set(3, active);
+            st.set(4, started);
+        }
+        MacroKind::Pulse2Edge => {
+            let (pulse, grst) = (inputs[0], inputs[1]);
+            st.set(0, if grst { false } else { st.get(0) || pulse });
+        }
+        MacroKind::Edge2Pulse => {
+            st.set(0, inputs[0] && !inputs[1]);
+        }
+        _ => {} // combinational macros hold no state
+    }
+}
+
+// ---------------------------------------------------------------------
+// Generic-gate expansions (the ASAP7 baseline RTL)
+//
+// Note on SpikeGen timing: SPIKE is a Moore output that rises one cycle
+// after PULSE arrives. The column generator applies this one-cycle encode
+// latency uniformly to every input line, so relative spike times (the only
+// thing TNN semantics depend on) are unaffected.
+// ---------------------------------------------------------------------
+
+/// Expand a macro into generic gates on `b`, returning its output nets.
+/// Functionally identical to the behavioral model (verified by tests).
+pub fn expand(kind: MacroKind, b: &mut NetBuilder, inputs: &[NetId]) -> Vec<NetId> {
+    match kind {
+        MacroKind::SynReadout => {
+            let nz1 = b.or(inputs[0], inputs[1]);
+            let nz = b.or(nz1, inputs[2]);
+            vec![b.and(nz, inputs[3])]
+        }
+        MacroKind::SynWeightUpdate => expand_syn_weight_update(b, inputs),
+        MacroKind::LessEqual => {
+            // passed'   = !grst & (passed | data & !inh_seen)
+            // inh_seen' = !grst & (inh_seen | inhibit)
+            // OUT       = data & (!inh_seen | passed)
+            expand_less_equal(b, inputs[0], inputs[1], inputs[2])
+        }
+        MacroKind::StdpCaseGen => {
+            let (greater, ein, eout) = (inputs[0], inputs[1], inputs[2]);
+            let both = b.and(ein, eout);
+            let ngreater = b.not(greater);
+            let c0 = b.and(both, ngreater);
+            let c1 = b.and(both, greater);
+            let neout = b.not(eout);
+            let c2 = b.and(ein, neout);
+            let nein = b.not(ein);
+            let c3 = b.and(nein, eout);
+            vec![c0, c1, c2, c3]
+        }
+        MacroKind::IncDec => {
+            let (c0, c1, c2, c3) = (inputs[0], inputs[1], inputs[2], inputs[3]);
+            let (bcap, bmin, bsrch, bbkf, bstab) =
+                (inputs[4], inputs[5], inputs[6], inputs[7], inputs[8]);
+            let i0 = b.and(c0, bcap);
+            let i2 = b.and(c2, bsrch);
+            let ior = b.or(i0, i2);
+            let inc = b.and(ior, bstab);
+            let d1 = b.and(c1, bmin);
+            let d3 = b.and(c3, bbkf);
+            let dor = b.or(d1, d3);
+            let dec = b.and(dor, bstab);
+            vec![inc, dec]
+        }
+        MacroKind::StabilizeFunc => {
+            let (s0, s1, s2) = (inputs[0], inputs[1], inputs[2]);
+            let bs = &inputs[3..11];
+            // 8:1 mux as a tree of 2:1 muxes (the GDI structure of Fig. 7).
+            let m0 = b.mux(s0, bs[0], bs[1]);
+            let m1 = b.mux(s0, bs[2], bs[3]);
+            let m2 = b.mux(s0, bs[4], bs[5]);
+            let m3 = b.mux(s0, bs[6], bs[7]);
+            let n0 = b.mux(s1, m0, m1);
+            let n1 = b.mux(s1, m2, m3);
+            vec![b.mux(s2, n0, n1)]
+        }
+        MacroKind::SpikeGen => expand_spike_gen(b, inputs),
+        MacroKind::Pulse2Edge => {
+            let (pulse, grst) = (inputs[0], inputs[1]);
+            // seen' = !grst & (seen | pulse); EDGE = pulse | seen
+            let seen = build_sticky(b, pulse, grst);
+            vec![b.or(pulse, seen)]
+        }
+        MacroKind::Edge2Pulse => {
+            let (edge, grst) = (inputs[0], inputs[1]);
+            let prev = b.dff(edge, Some(grst), false);
+            let nprev = b.not(prev);
+            vec![b.and(edge, nprev)]
+        }
+    }
+}
+
+/// Registered sticky bit `q' = !rst & (q | set)` (see
+/// [`NetBuilder::sticky_dff`]).
+fn build_sticky(b: &mut NetBuilder, set: NetId, rst: NetId) -> NetId {
+    b.sticky_dff(set, rst)
+}
+
+fn expand_less_equal(b: &mut NetBuilder, data: NetId, inhibit: NetId, grst: NetId) -> Vec<NetId> {
+    let inh_seen = b.sticky_dff(inhibit, grst);
+    let ninh = b.not(inh_seen);
+    let pass_now = b.and(data, ninh);
+    let passed = b.sticky_dff(pass_now, grst);
+    let gate = b.or(ninh, passed);
+    vec![b.and(data, gate)]
+}
+
+fn expand_syn_weight_update(b: &mut NetBuilder, inputs: &[NetId]) -> Vec<NetId> {
+    let (spike, winc, wdec, grst) = (inputs[0], inputs[1], inputs[2], inputs[3]);
+    // Weight register with saturating inc/dec; INC has priority over DEC.
+    let w = b.dff_cell_vec(3); // forward-declared state (patched below)
+    let w_nets: Vec<NetId> = w.clone();
+    let at_max = b.and_tree(&w_nets);
+    let nz = b.or_tree(&w_nets);
+    let can_inc = b.not(at_max);
+    let do_inc = b.and(winc, can_inc);
+    let ndo_inc = b.not(do_inc);
+    let dec_en = b.and(wdec, nz);
+    let do_dec = b.and(dec_en, ndo_inc);
+    let w_inc = b.inc_vec(&w_nets);
+    let w_dec = b.dec_vec(&w_nets);
+    let w_after_inc = b.mux_vec(do_inc, &w_nets, &w_inc);
+    let w_next = b.mux_vec(do_dec, &w_after_inc, &w_dec);
+    b.patch_dff_vec(&w, &w_next, None, 0);
+
+    // Reading flag + live counter. The readout is Mealy on SPIKE: on the
+    // start cycle the effective count is the stored weight, and the
+    // register captures w−1 (floored at 0) for the following cycles.
+    let rd = b.dff_cell_vec(1);
+    let c = b.dff_cell_vec(3);
+    let c_nets = c.clone();
+    let c_nz = b.or_tree(&c_nets);
+    let nrd = b.not(rd[0]);
+    let start = b.and(spike, nrd);
+    let rd_next = b.or(rd[0], start); // cleared by grst via reset pin
+    b.patch_dff_vec(&rd, &[rd_next], Some(grst), 0);
+    // load value: (w == 0) ? 0 : w - 1  — gate the wrapped decrement by nz.
+    let w_dec_load = b.dec_vec(&w_nets);
+    let c_load: Vec<NetId> = w_dec_load.iter().map(|&bit| b.and(bit, nz)).collect();
+    let c_dec = b.dec_vec(&c_nets);
+    let keep_dec = b.and(rd[0], c_nz);
+    let c_after = b.mux_vec(keep_dec, &c_nets, &c_dec);
+    let c_next = b.mux_vec(start, &c_after, &c_load);
+    b.patch_dff_vec(&c, &c_next, Some(grst), 0);
+
+    // Mealy outputs: eff_c = start ? w : c ; eff_rd = rd | start.
+    let eff_c = b.mux_vec(start, &c_nets, &w_nets);
+    let eff_rd = b.or(rd[0], start);
+    vec![w[0], w[1], w[2], eff_c[0], eff_c[1], eff_c[2], eff_rd]
+}
+
+fn expand_spike_gen(b: &mut NetBuilder, inputs: &[NetId]) -> Vec<NetId> {
+    let (pulse, grst) = (inputs[0], inputs[1]);
+    let cnt = b.dff_cell_vec(3);
+    let active = b.dff_cell_vec(1);
+    let started = b.dff_cell_vec(1);
+    let nactive = b.not(active[0]);
+    let nstarted = b.not(started[0]);
+    let fire = {
+        let t = b.and(pulse, nactive);
+        b.and(t, nstarted)
+    };
+    let started_next = b.or(started[0], fire);
+    b.patch_dff_vec(&started, &[started_next], Some(grst), 0);
+    let cnt_nets = cnt.clone();
+    let cnt_nz = b.or_tree(&cnt_nets);
+    let cnt_dec = b.dec_vec(&cnt_nets);
+    let seven: Vec<NetId> = (0..3).map(|_| b.constant(true)).collect();
+    let keep_dec = b.and(active[0], cnt_nz);
+    let cnt_after = b.mux_vec(keep_dec, &cnt_nets, &cnt_dec);
+    let cnt_next = b.mux_vec(fire, &cnt_after, &seven);
+    b.patch_dff_vec(&cnt, &cnt_next, Some(grst), 0);
+    let ncnt_nz = b.not(cnt_nz);
+    let stop = b.and(active[0], ncnt_nz);
+    let nstop = b.not(stop);
+    let act_hold = b.and(active[0], nstop);
+    let active_next = b.or(act_hold, fire);
+    b.patch_dff_vec(&active, &[active_next], Some(grst), 0);
+    vec![active[0]]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pin_tables_are_consistent() {
+        for m in ALL_MACROS {
+            assert!(!m.input_pins().is_empty());
+            assert!(!m.output_pins().is_empty());
+            assert_eq!(MacroKind::from_cell_name(m.cell_name()), Some(m));
+        }
+    }
+
+    #[test]
+    fn stdp_case_gen_truth_table() {
+        let st = MacroState::default();
+        let mut out = Vec::new();
+        // (greater, ein, eout) -> expected one-hot
+        let cases = [
+            ((false, true, true), [true, false, false, false]),
+            ((true, true, true), [false, true, false, false]),
+            ((false, true, false), [false, false, true, false]),
+            ((true, true, false), [false, false, true, false]),
+            ((false, false, true), [false, false, false, true]),
+            ((false, false, false), [false, false, false, false]),
+        ];
+        for ((g, ein, eout), want) in cases {
+            eval(MacroKind::StdpCaseGen, &[g, ein, eout], &st, &mut out);
+            assert_eq!(out.as_slice(), &want, "g={g} ein={ein} eout={eout}");
+        }
+    }
+
+    #[test]
+    fn incdec_gating() {
+        let st = MacroState::default();
+        let mut out = Vec::new();
+        // capture case with BCAP=1, BSTAB=1 -> INC
+        eval(
+            MacroKind::IncDec,
+            &[true, false, false, false, true, true, true, true, true],
+            &st,
+            &mut out,
+        );
+        assert_eq!(out, vec![true, false]);
+        // BSTAB=0 blocks everything
+        eval(
+            MacroKind::IncDec,
+            &[true, false, false, false, true, true, true, true, false],
+            &st,
+            &mut out,
+        );
+        assert_eq!(out, vec![false, false]);
+        // backoff case -> DEC
+        eval(
+            MacroKind::IncDec,
+            &[false, false, false, true, true, true, true, true, true],
+            &st,
+            &mut out,
+        );
+        assert_eq!(out, vec![false, true]);
+    }
+
+    #[test]
+    fn stabilize_func_selects() {
+        let st = MacroState::default();
+        let mut out = Vec::new();
+        for sel in 0..8usize {
+            let mut inputs = vec![sel & 1 == 1, sel >> 1 & 1 == 1, sel >> 2 & 1 == 1];
+            let mut bs = vec![false; 8];
+            bs[sel] = true;
+            inputs.extend(bs);
+            eval(MacroKind::StabilizeFunc, &inputs, &st, &mut out);
+            assert_eq!(out, vec![true], "sel={sel}");
+        }
+    }
+
+    #[test]
+    fn syn_weight_update_behavioral_matches_rnl_synapse() {
+        use crate::tnn::synapse::RnlSynapse;
+        // Drive both with the same spike schedule; compare readout.
+        for w0 in 0..=7u8 {
+            for x in 0..8u32 {
+                let mut st = MacroState::default();
+                st.set_field(0, 3, w0 as u32);
+                let mut golden = RnlSynapse::new(w0, 7);
+                let mut out = Vec::new();
+                for t in 0..20u32 {
+                    let spike = t == x;
+                    // macro eval: readout = RD && counter != 0 (SynReadout
+                    // consumes C/RD outputs). Counter visible via eval.
+                    eval(MacroKind::SynWeightUpdate, &[spike, false, false, false], &st, &mut out);
+                    let c = out[3] as u32 | (out[4] as u32) << 1 | (out[5] as u32) << 2;
+                    let rd = out[6];
+                    let resp_macro = rd && c != 0;
+                    let resp_golden = golden.tick(spike);
+                    step(MacroKind::SynWeightUpdate, &[spike, false, false, false], &mut st);
+                    assert_eq!(
+                        resp_macro, resp_golden,
+                        "w={w0} x={x} t={t}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn syn_weight_update_stdp_port_saturates() {
+        let mut st = MacroState::default();
+        st.set_field(0, 3, 7);
+        step(MacroKind::SynWeightUpdate, &[false, true, false, false], &mut st);
+        assert_eq!(st.field(0, 3), 7, "inc saturates at 7");
+        st.set_field(0, 3, 0);
+        step(MacroKind::SynWeightUpdate, &[false, false, true, false], &mut st);
+        assert_eq!(st.field(0, 3), 0, "dec saturates at 0");
+        step(MacroKind::SynWeightUpdate, &[false, true, false, false], &mut st);
+        assert_eq!(st.field(0, 3), 1);
+    }
+
+    #[test]
+    fn less_equal_behavioral_temporal_semantics() {
+        // data at t=2, inhibit at t=4 -> passes.
+        assert!(le_passes(2, Some(4)));
+        // data at t=4, inhibit at t=2 -> blocked.
+        assert!(!le_passes(4, Some(2)));
+        // tie passes.
+        assert!(le_passes(3, Some(3)));
+        // no inhibit -> passes.
+        assert!(le_passes(5, None));
+    }
+
+    fn le_passes(data_t: u32, inh_t: Option<u32>) -> bool {
+        let mut st = MacroState::default();
+        let mut out = Vec::new();
+        let mut passed = false;
+        for t in 0..10u32 {
+            let data = t >= data_t; // edge signal
+            let inh = inh_t.map_or(false, |it| t >= it);
+            eval(MacroKind::LessEqual, &[data, inh, false], &st, &mut out);
+            passed |= out[0];
+            step(MacroKind::LessEqual, &[data, inh, false], &mut st);
+        }
+        passed
+    }
+
+    #[test]
+    fn pulse2edge_and_edge2pulse_roundtrip() {
+        let mut p2e = MacroState::default();
+        let mut e2p = MacroState::default();
+        let mut out = Vec::new();
+        let mut edge_hist = Vec::new();
+        let mut pulse_hist = Vec::new();
+        for t in 0..8u32 {
+            let pulse = t == 3; // 1-cycle pulse at t=3
+            eval(MacroKind::Pulse2Edge, &[pulse, false], &p2e, &mut out);
+            let edge = out[0];
+            edge_hist.push(edge);
+            eval(MacroKind::Edge2Pulse, &[edge, false], &e2p, &mut out);
+            pulse_hist.push(out[0]);
+            step(MacroKind::Pulse2Edge, &[pulse, false], &mut p2e);
+            step(MacroKind::Edge2Pulse, &[edge, false], &mut e2p);
+        }
+        // edge rises at t=3 and stays; regenerated pulse is exactly t=3.
+        assert_eq!(edge_hist, vec![false, false, false, true, true, true, true, true]);
+        assert_eq!(pulse_hist, vec![false, false, false, true, false, false, false, false]);
+    }
+
+    #[test]
+    fn spike_gen_emits_8_cycle_pulse_once() {
+        let mut st = MacroState::default();
+        let mut out = Vec::new();
+        let mut hist = Vec::new();
+        for t in 0..16u32 {
+            let pulse = (3..=5).contains(&t); // wide input pulse
+            eval(MacroKind::SpikeGen, &[pulse, false], &st, &mut out);
+            hist.push(out[0]);
+            step(MacroKind::SpikeGen, &[pulse, false], &mut st);
+        }
+        let high: Vec<usize> = hist
+            .iter()
+            .enumerate()
+            .filter(|(_, &h)| h)
+            .map(|(i, _)| i)
+            .collect();
+        // Moore output: rises the cycle after the pulse arrives, 8 wide.
+        assert_eq!(high, (4..12).collect::<Vec<_>>());
+    }
+}

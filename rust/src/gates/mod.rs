@@ -1,0 +1,19 @@
+//! Gate-level hardware substrate.
+//!
+//! This module replaces the schematic/netlist layer of the paper's
+//! Cadence-based flow (see DESIGN.md §5): a generic gate-level netlist IR
+//! with a structural builder ([`netlist`]), a levelized synchronous
+//! simulator used for functional verification and switching-activity
+//! extraction ([`sim`]), the nine TNN7 macros — each with a cycle-accurate
+//! behavioral model *and* a generic-gate expansion ([`macros9`]) — and the
+//! structural generator that assembles full p×q TNN columns out of them
+//! ([`column_design`]).
+
+pub mod column_design;
+pub mod macros9;
+pub mod netlist;
+pub mod sim;
+
+pub use macros9::MacroKind;
+pub use netlist::{Gate, NetBuilder, NetId, Netlist};
+pub use sim::Simulator;

@@ -1,0 +1,720 @@
+//! Generic gate-level netlist IR and structural builder.
+//!
+//! A netlist is a DAG of single-output gates (the output net of gate `i` is
+//! `NetId(i)`), plus a side table of multi-output **macro instances** whose
+//! output pins appear as [`Gate::MacroOut`] nodes. Sequential elements
+//! ([`Gate::Dff`]) and macro instances form the state boundary; everything
+//! else is combinational.
+//!
+//! The builder doubles as the "RTL elaboration" front-end of the synthesis
+//! flow (DESIGN.md §4): designs — including the full TNN column — are
+//! described structurally through it (vectors, adders, comparators, trees),
+//! producing the generic netlist that [`crate::synth`] optimizes and maps
+//! onto a cell library.
+
+use super::macros9::MacroKind;
+use std::collections::HashMap;
+
+/// Index of a gate == id of its output net.
+pub type NetId = u32;
+
+/// Sentinel for a forward-declared (not yet patched) DFF data input.
+pub const PENDING_D: NetId = u32::MAX;
+
+/// A single-output generic gate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Gate {
+    /// Primary input (name registered in `Netlist::inputs`).
+    Input,
+    /// Constant 0/1.
+    Const(bool),
+    /// Identity buffer — also the forward-wire placeholder (`wire()` /
+    /// `connect()`): created with `PENDING_D` and patched later.
+    Buf(NetId),
+    Not(NetId),
+    And(NetId, NetId),
+    Or(NetId, NetId),
+    Xor(NetId, NetId),
+    /// `sel ? b : a`.
+    Mux(NetId, NetId, NetId),
+    /// D flip-flop with synchronous reset-to-`init` when `rst` is high.
+    /// `rst == None` means never reset. Clock is implicit (single domain).
+    Dff {
+        d: NetId,
+        rst: Option<NetId>,
+        init: bool,
+    },
+    /// Output pin `pin` of macro instance `inst`.
+    MacroOut { inst: u32, pin: u8 },
+}
+
+impl Gate {
+    /// Is this a state element (value produced at clock edges)?
+    pub fn is_state(&self) -> bool {
+        matches!(self, Gate::Dff { .. } | Gate::MacroOut { .. })
+    }
+
+    /// Combinational fan-in nets (empty for inputs/consts/state outputs).
+    pub fn comb_fanin(&self, out: &mut Vec<NetId>) {
+        out.clear();
+        match *self {
+            Gate::Buf(a) | Gate::Not(a) => out.push(a),
+            Gate::And(a, b) | Gate::Or(a, b) | Gate::Xor(a, b) => {
+                out.push(a);
+                out.push(b);
+            }
+            Gate::Mux(s, a, b) => {
+                out.push(s);
+                out.push(a);
+                out.push(b);
+            }
+            _ => {}
+        }
+    }
+}
+
+/// A hard-macro instance (one of the nine TNN7 macros).
+#[derive(Clone, Debug)]
+pub struct MacroInst {
+    pub kind: MacroKind,
+    /// Input nets, in the pin order defined by `kind.input_pins()`.
+    pub inputs: Vec<NetId>,
+    /// Output pin net ids (`Gate::MacroOut` nodes), in `kind.output_pins()`
+    /// order.
+    pub outputs: Vec<NetId>,
+}
+
+/// A gate-level netlist.
+#[derive(Clone, Debug, Default)]
+pub struct Netlist {
+    pub name: String,
+    pub gates: Vec<Gate>,
+    pub macros: Vec<MacroInst>,
+    /// Primary inputs: (name, net).
+    pub inputs: Vec<(String, NetId)>,
+    /// Primary outputs: (name, net).
+    pub outputs: Vec<(String, NetId)>,
+}
+
+impl Netlist {
+    pub fn gate(&self, id: NetId) -> &Gate {
+        &self.gates[id as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.gates.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.gates.is_empty()
+    }
+
+    /// Count of gates by coarse class: (comb, dff, macro_pins, inputs+consts).
+    pub fn census(&self) -> Census {
+        let mut c = Census::default();
+        for g in &self.gates {
+            match g {
+                Gate::Input | Gate::Const(_) => c.sources += 1,
+                Gate::Dff { .. } => c.dffs += 1,
+                Gate::MacroOut { .. } => c.macro_pins += 1,
+                _ => c.comb += 1,
+            }
+        }
+        c.macros = self.macros.len();
+        c
+    }
+
+    /// Combinational fan-in of net `id`, including **Mealy** macro-output
+    /// dependencies: a `MacroOut` pin depends (same-cycle) on the subset of
+    /// the macro's input nets declared by `MacroKind::pin_deps` — Moore pins
+    /// (pure state) declare none, which is what breaks the apparent cycles
+    /// in the STDP feedback path (weight → stabilize → incdec → weight).
+    pub fn comb_fanin_full(&self, id: NetId, out: &mut Vec<NetId>) {
+        let g = &self.gates[id as usize];
+        if let Gate::MacroOut { inst, pin } = *g {
+            out.clear();
+            let m = &self.macros[inst as usize];
+            for &dep in m.kind.pin_deps(pin) {
+                out.push(m.inputs[dep]);
+            }
+        } else {
+            g.comb_fanin(out);
+        }
+    }
+
+    /// Topological order of combinational evaluation: source and
+    /// state-element nets are level 0; each comb gate (including Mealy macro
+    /// pins) comes after its fan-ins. Errors on a combinational cycle.
+    pub fn levelize(&self) -> Result<Vec<NetId>, String> {
+        let n = self.gates.len();
+        // A node participates in comb evaluation iff it has comb fan-ins.
+        let mut is_comb = vec![false; n];
+        let mut fin = Vec::new();
+        for i in 0..n {
+            self.comb_fanin_full(i as NetId, &mut fin);
+            is_comb[i] = !fin.is_empty();
+        }
+        let mut indegree = vec![0u32; n];
+        let mut fanout: Vec<Vec<NetId>> = vec![Vec::new(); n];
+        let mut comb_count = 0usize;
+        for i in 0..n {
+            if !is_comb[i] {
+                continue;
+            }
+            comb_count += 1;
+            self.comb_fanin_full(i as NetId, &mut fin);
+            for &src in &fin {
+                if is_comb[src as usize] {
+                    indegree[i] += 1;
+                    fanout[src as usize].push(i as NetId);
+                }
+            }
+        }
+        let mut order = Vec::with_capacity(comb_count);
+        let mut ready: Vec<NetId> = (0..n as NetId)
+            .filter(|&i| is_comb[i as usize] && indegree[i as usize] == 0)
+            .collect();
+        while let Some(id) = ready.pop() {
+            order.push(id);
+            for &succ in &fanout[id as usize] {
+                indegree[succ as usize] -= 1;
+                if indegree[succ as usize] == 0 {
+                    ready.push(succ);
+                }
+            }
+        }
+        if order.len() != comb_count {
+            return Err(format!(
+                "combinational cycle: {} of {} comb gates unordered",
+                comb_count - order.len(),
+                comb_count
+            ));
+        }
+        Ok(order)
+    }
+
+    /// Fanout count per net (used by timing/power models).
+    pub fn fanout_counts(&self) -> Vec<u32> {
+        let mut counts = vec![0u32; self.gates.len()];
+        let mut fin = Vec::new();
+        for g in &self.gates {
+            g.comb_fanin(&mut fin);
+            for &src in &fin {
+                counts[src as usize] += 1;
+            }
+            if let Gate::Dff { d, rst, .. } = *g {
+                counts[d as usize] += 1;
+                if let Some(r) = rst {
+                    counts[r as usize] += 1;
+                }
+            }
+        }
+        for m in &self.macros {
+            for &src in &m.inputs {
+                counts[src as usize] += 1;
+            }
+        }
+        for (_, net) in &self.outputs {
+            counts[*net as usize] += 1;
+        }
+        counts
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Census {
+    pub comb: usize,
+    pub dffs: usize,
+    pub macros: usize,
+    pub macro_pins: usize,
+    pub sources: usize,
+}
+
+impl Census {
+    /// Total "design objects" the synthesis optimizer must visit.
+    pub fn work_items(&self) -> usize {
+        self.comb + self.dffs + self.macros
+    }
+}
+
+/// Structural netlist builder — the elaboration front-end.
+///
+/// Optional *structural hashing* (`share: true`) folds identical gates on
+/// construction; the synthesis flow builds with sharing OFF so the optimizer
+/// has realistic work to do (mirroring behavioral RTL fed to Genus).
+pub struct NetBuilder {
+    nl: Netlist,
+    share: bool,
+    cache: HashMap<Gate, NetId>,
+    zero: Option<NetId>,
+    one: Option<NetId>,
+}
+
+impl NetBuilder {
+    pub fn new(name: &str) -> Self {
+        NetBuilder {
+            nl: Netlist {
+                name: name.to_string(),
+                ..Netlist::default()
+            },
+            share: false,
+            cache: HashMap::new(),
+            zero: None,
+            one: None,
+        }
+    }
+
+    /// Enable structural hashing at build time.
+    pub fn with_sharing(mut self) -> Self {
+        self.share = true;
+        self
+    }
+
+    fn push(&mut self, g: Gate) -> NetId {
+        if self.share && !g.is_state() && !matches!(g, Gate::Input) {
+            if let Some(&id) = self.cache.get(&g) {
+                return id;
+            }
+        }
+        let id = self.nl.gates.len() as NetId;
+        self.nl.gates.push(g);
+        if self.share {
+            self.cache.insert(g, id);
+        }
+        id
+    }
+
+    // ---- primitives -----------------------------------------------------
+
+    pub fn input(&mut self, name: &str) -> NetId {
+        let id = self.push(Gate::Input);
+        self.nl.inputs.push((name.to_string(), id));
+        id
+    }
+
+    pub fn input_vec(&mut self, name: &str, width: usize) -> Vec<NetId> {
+        (0..width)
+            .map(|k| self.input(&format!("{name}[{k}]")))
+            .collect()
+    }
+
+    pub fn constant(&mut self, v: bool) -> NetId {
+        let slot = if v { &mut self.one } else { &mut self.zero };
+        if let Some(id) = *slot {
+            return id;
+        }
+        let id = self.nl.gates.len() as NetId;
+        self.nl.gates.push(Gate::Const(v));
+        *slot = Some(id);
+        id
+    }
+
+    pub fn not(&mut self, a: NetId) -> NetId {
+        self.push(Gate::Not(a))
+    }
+    pub fn and(&mut self, a: NetId, b: NetId) -> NetId {
+        self.push(Gate::And(a, b))
+    }
+    pub fn or(&mut self, a: NetId, b: NetId) -> NetId {
+        self.push(Gate::Or(a, b))
+    }
+    pub fn xor(&mut self, a: NetId, b: NetId) -> NetId {
+        self.push(Gate::Xor(a, b))
+    }
+    pub fn mux(&mut self, sel: NetId, a: NetId, b: NetId) -> NetId {
+        self.push(Gate::Mux(sel, a, b))
+    }
+    pub fn nand(&mut self, a: NetId, b: NetId) -> NetId {
+        let x = self.and(a, b);
+        self.not(x)
+    }
+    pub fn nor(&mut self, a: NetId, b: NetId) -> NetId {
+        let x = self.or(a, b);
+        self.not(x)
+    }
+
+    pub fn dff(&mut self, d: NetId, rst: Option<NetId>, init: bool) -> NetId {
+        self.push(Gate::Dff { d, rst, init })
+    }
+
+    /// Allocate `width` DFF state cells whose `d` inputs will be patched
+    /// later with [`Self::patch_dff_vec`] — the idiom for feedback
+    /// (registers whose next-state logic reads their own output).
+    pub fn dff_cell_vec(&mut self, width: usize) -> Vec<NetId> {
+        (0..width)
+            .map(|_| {
+                self.push(Gate::Dff {
+                    d: PENDING_D,
+                    rst: None,
+                    init: false,
+                })
+            })
+            .collect()
+    }
+
+    /// Patch forward-declared DFF cells with their next-state nets, reset
+    /// and init value (bit `k` of `init`).
+    pub fn patch_dff_vec(&mut self, cells: &[NetId], d: &[NetId], rst: Option<NetId>, init: u64) {
+        assert_eq!(cells.len(), d.len());
+        for (k, (&cell, &dn)) in cells.iter().zip(d).enumerate() {
+            match &mut self.nl.gates[cell as usize] {
+                Gate::Dff { d: slot, rst: r, init: iv } => {
+                    assert_eq!(*slot, PENDING_D, "DFF {cell} already patched");
+                    *slot = dn;
+                    *r = rst;
+                    *iv = (init >> k) & 1 == 1;
+                }
+                g => panic!("patch_dff_vec on non-DFF gate {g:?}"),
+            }
+        }
+    }
+
+    /// Registered sticky bit: `q' = !rst & (q | set)`; returns `q`.
+    pub fn sticky_dff(&mut self, set: NetId, rst: NetId) -> NetId {
+        let q = self.dff_cell_vec(1)[0];
+        let d = self.or(q, set);
+        self.patch_dff_vec(&[q], &[d], Some(rst), 0);
+        q
+    }
+
+    /// Forward-declared wire: usable as a fan-in immediately, driven later
+    /// with [`Self::connect`]. (The netlist idiom for feedback through
+    /// logic built in a later pass, e.g. STDP control → synapse datapath.)
+    pub fn wire(&mut self) -> NetId {
+        self.push(Gate::Buf(PENDING_D))
+    }
+
+    /// Drive a forward wire created by [`Self::wire`].
+    pub fn connect(&mut self, wire: NetId, src: NetId) {
+        match &mut self.nl.gates[wire as usize] {
+            Gate::Buf(slot) => {
+                assert_eq!(*slot, PENDING_D, "wire {wire} already connected");
+                *slot = src;
+            }
+            g => panic!("connect() on non-wire gate {g:?}"),
+        }
+    }
+
+    /// Instantiate a hard macro; returns its output nets.
+    pub fn macro_inst(&mut self, kind: MacroKind, inputs: Vec<NetId>) -> Vec<NetId> {
+        assert_eq!(
+            inputs.len(),
+            kind.input_pins().len(),
+            "{kind:?}: wrong input count"
+        );
+        let inst = self.nl.macros.len() as u32;
+        let outputs: Vec<NetId> = (0..kind.output_pins().len() as u8)
+            .map(|pin| self.push(Gate::MacroOut { inst, pin }))
+            .collect();
+        self.nl.macros.push(MacroInst {
+            kind,
+            inputs,
+            outputs: outputs.clone(),
+        });
+        outputs
+    }
+
+    // ---- word-level helpers (the "RTL" layer) ---------------------------
+
+    /// Reduction OR over a slice (balanced tree).
+    pub fn or_tree(&mut self, xs: &[NetId]) -> NetId {
+        self.reduce_tree(xs, |b, x, y| b.or(x, y))
+    }
+
+    /// Reduction AND over a slice (balanced tree).
+    pub fn and_tree(&mut self, xs: &[NetId]) -> NetId {
+        self.reduce_tree(xs, |b, x, y| b.and(x, y))
+    }
+
+    fn reduce_tree(
+        &mut self,
+        xs: &[NetId],
+        f: impl Fn(&mut Self, NetId, NetId) -> NetId + Copy,
+    ) -> NetId {
+        assert!(!xs.is_empty());
+        let mut layer = xs.to_vec();
+        while layer.len() > 1 {
+            let mut next = Vec::with_capacity(layer.len().div_ceil(2));
+            for pair in layer.chunks(2) {
+                next.push(if pair.len() == 2 {
+                    f(self, pair[0], pair[1])
+                } else {
+                    pair[0]
+                });
+            }
+            layer = next;
+        }
+        layer[0]
+    }
+
+    /// Full adder: returns (sum, carry).
+    pub fn full_adder(&mut self, a: NetId, b: NetId, c: NetId) -> (NetId, NetId) {
+        let ab = self.xor(a, b);
+        let sum = self.xor(ab, c);
+        let and1 = self.and(a, b);
+        let and2 = self.and(ab, c);
+        let carry = self.or(and1, and2);
+        (sum, carry)
+    }
+
+    /// Half adder: returns (sum, carry).
+    pub fn half_adder(&mut self, a: NetId, b: NetId) -> (NetId, NetId) {
+        (self.xor(a, b), self.and(a, b))
+    }
+
+    /// Ripple-carry add of two equal-width LSB-first vectors; output is one
+    /// bit wider.
+    pub fn add_vec(&mut self, a: &[NetId], b: &[NetId]) -> Vec<NetId> {
+        assert_eq!(a.len(), b.len());
+        let mut out = Vec::with_capacity(a.len() + 1);
+        let mut carry = self.constant(false);
+        for (&x, &y) in a.iter().zip(b) {
+            let (s, c) = self.full_adder(x, y, carry);
+            out.push(s);
+            carry = c;
+        }
+        out.push(carry);
+        out
+    }
+
+    /// Increment an LSB-first vector by 1 (wrapping); returns same width.
+    pub fn inc_vec(&mut self, a: &[NetId]) -> Vec<NetId> {
+        let mut out = Vec::with_capacity(a.len());
+        let mut carry = self.constant(true);
+        for &x in a {
+            let (s, c) = self.half_adder(x, carry);
+            out.push(s);
+            carry = c;
+        }
+        out
+    }
+
+    /// Decrement an LSB-first vector by 1 (wrapping); returns same width.
+    /// (a - 1 = a + 111…1 with no carry-in.)
+    pub fn dec_vec(&mut self, a: &[NetId]) -> Vec<NetId> {
+        let one = self.constant(true);
+        let mut out = Vec::with_capacity(a.len());
+        let mut carry = self.constant(false);
+        for &x in a {
+            let (s1, c1) = self.half_adder(x, one);
+            let (s, c2) = self.half_adder(s1, carry);
+            out.push(s);
+            let c = self.or(c1, c2);
+            carry = c;
+        }
+        out
+    }
+
+    /// `a != 0` (reduction OR).
+    pub fn nonzero(&mut self, a: &[NetId]) -> NetId {
+        self.or_tree(a)
+    }
+
+    /// `a == const k` over an LSB-first vector.
+    pub fn eq_const(&mut self, a: &[NetId], k: u64) -> NetId {
+        let lits: Vec<NetId> = a
+            .iter()
+            .enumerate()
+            .map(|(i, &bit)| {
+                if (k >> i) & 1 == 1 {
+                    bit
+                } else {
+                    self.not(bit)
+                }
+            })
+            .collect();
+        self.and_tree(&lits)
+    }
+
+    /// `a >= const k` over an LSB-first unsigned vector (magnitude compare
+    /// against a constant, MSB-first chain).
+    pub fn ge_const(&mut self, a: &[NetId], k: u64) -> NetId {
+        // ge = 1 initially (empty suffix comparison: a==k so far ⇒ ge).
+        // Scan MSB→LSB: at each bit, if k-bit is 1 and a-bit is 0 → lose
+        // unless already strictly greater; track (gt, eq) pair.
+        let mut gt = self.constant(false);
+        let mut eq = self.constant(true);
+        for (i, &bit) in a.iter().enumerate().rev() {
+            let kb = (k >> i) & 1 == 1;
+            if kb {
+                // a_i=1 keeps eq; a_i=0 with eq → lose (eq=0, gt unchanged)
+                let new_eq = self.and(eq, bit);
+                eq = new_eq;
+            } else {
+                // a_i=1 with eq → strictly greater
+                let win = self.and(eq, bit);
+                let new_gt = self.or(gt, win);
+                gt = new_gt;
+            }
+        }
+        self.or(gt, eq)
+    }
+
+    /// Population count of `xs`: LSB-first sum vector, built as a
+    /// carry-save (Wallace) compressor tree — 3:2 full-adder compression
+    /// per weight column until every column holds ≤ 2 bits, then one final
+    /// ripple add. Logic depth is O(log n), matching the adder trees the
+    /// paper's neuron bodies use.
+    pub fn popcount(&mut self, xs: &[NetId]) -> Vec<NetId> {
+        assert!(!xs.is_empty());
+        if xs.len() == 1 {
+            return vec![xs[0]];
+        }
+        let mut cols: Vec<Vec<NetId>> = vec![xs.to_vec()];
+        loop {
+            let max_h = cols.iter().map(|c| c.len()).max().unwrap();
+            if max_h <= 2 {
+                break;
+            }
+            let mut next: Vec<Vec<NetId>> = vec![Vec::new(); cols.len() + 1];
+            for w in 0..cols.len() {
+                let col = cols[w].clone();
+                let mut i = 0;
+                while col.len() - i >= 3 {
+                    let (s, c) = self.full_adder(col[i], col[i + 1], col[i + 2]);
+                    next[w].push(s);
+                    next[w + 1].push(c);
+                    i += 3;
+                }
+                if col.len() - i == 2 {
+                    let (s, c) = self.half_adder(col[i], col[i + 1]);
+                    next[w].push(s);
+                    next[w + 1].push(c);
+                } else if col.len() - i == 1 {
+                    next[w].push(col[i]);
+                }
+            }
+            while next.last().map_or(false, |c| c.is_empty()) {
+                next.pop();
+            }
+            cols = next;
+        }
+        // Each column now holds ≤ 2 bits: one ripple add of the two rows.
+        let zero = self.constant(false);
+        let a: Vec<NetId> = cols
+            .iter()
+            .map(|c| c.first().copied().unwrap_or(zero))
+            .collect();
+        let all_single = cols.iter().all(|c| c.len() <= 1);
+        if all_single {
+            return a;
+        }
+        let b: Vec<NetId> = cols
+            .iter()
+            .map(|c| c.get(1).copied().unwrap_or(zero))
+            .collect();
+        self.add_vec(&a, &b)
+    }
+
+    /// Vector 2:1 mux.
+    pub fn mux_vec(&mut self, sel: NetId, a: &[NetId], b: &[NetId]) -> Vec<NetId> {
+        assert_eq!(a.len(), b.len());
+        a.iter()
+            .zip(b)
+            .map(|(&x, &y)| self.mux(sel, x, y))
+            .collect()
+    }
+
+    /// Register a vector of DFFs.
+    pub fn dff_vec(&mut self, d: &[NetId], rst: Option<NetId>, init: u64) -> Vec<NetId> {
+        d.iter()
+            .enumerate()
+            .map(|(i, &bit)| self.dff(bit, rst, (init >> i) & 1 == 1))
+            .collect()
+    }
+
+    // ---- finalization ----------------------------------------------------
+
+    pub fn output(&mut self, name: &str, net: NetId) {
+        self.nl.outputs.push((name.to_string(), net));
+    }
+
+    pub fn output_vec(&mut self, name: &str, nets: &[NetId]) {
+        for (k, &n) in nets.iter().enumerate() {
+            self.output(&format!("{name}[{k}]"), n);
+        }
+    }
+
+    pub fn finish(self) -> Netlist {
+        for (i, g) in self.nl.gates.iter().enumerate() {
+            match g {
+                Gate::Dff { d, .. } => {
+                    assert_ne!(*d, PENDING_D, "DFF {i} was never patched")
+                }
+                Gate::Buf(src) => {
+                    assert_ne!(*src, PENDING_D, "wire {i} was never connected")
+                }
+                _ => {}
+            }
+        }
+        self.nl
+    }
+
+    /// Peek at the netlist under construction.
+    pub fn netlist(&self) -> &Netlist {
+        &self.nl
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_assembles_and_levelizes() {
+        let mut b = NetBuilder::new("t");
+        let a = b.input("a");
+        let c = b.input("b");
+        let x = b.and(a, c);
+        let y = b.not(x);
+        let q = b.dff(y, None, false);
+        b.output("q", q);
+        let nl = b.finish();
+        assert_eq!(nl.census().comb, 2);
+        assert_eq!(nl.census().dffs, 1);
+        let order = nl.levelize().unwrap();
+        assert_eq!(order.len(), 2);
+        // and must come before not
+        let pos_and = order.iter().position(|&i| i == x).unwrap();
+        let pos_not = order.iter().position(|&i| i == y).unwrap();
+        assert!(pos_and < pos_not);
+    }
+
+    #[test]
+    fn sharing_folds_duplicates() {
+        let mut b = NetBuilder::new("t").with_sharing();
+        let a = b.input("a");
+        let c = b.input("b");
+        let x1 = b.and(a, c);
+        let x2 = b.and(a, c);
+        assert_eq!(x1, x2);
+        let mut b2 = NetBuilder::new("t");
+        let a = b2.input("a");
+        let c = b2.input("b");
+        let x1 = b2.and(a, c);
+        let x2 = b2.and(a, c);
+        assert_ne!(x1, x2, "sharing off by default");
+    }
+
+    #[test]
+    fn constants_are_unique() {
+        let mut b = NetBuilder::new("t");
+        assert_eq!(b.constant(true), b.constant(true));
+        assert_ne!(b.constant(true), b.constant(false));
+    }
+
+    #[test]
+    fn fanout_counts_include_outputs_and_dffs() {
+        let mut b = NetBuilder::new("t");
+        let a = b.input("a");
+        let n = b.not(a);
+        let q = b.dff(n, Some(a), false);
+        b.output("q", q);
+        b.output("n", n);
+        let nl = b.finish();
+        let fo = nl.fanout_counts();
+        assert_eq!(fo[a as usize], 2); // not + rst
+        assert_eq!(fo[n as usize], 2); // dff.d + output
+        assert_eq!(fo[q as usize], 1); // output
+    }
+}

@@ -1,0 +1,402 @@
+//! Levelized synchronous netlist simulator.
+//!
+//! Replaces the Spectre/Liberate functional-verification step of the
+//! paper's flow: gate netlists (including hard-macro instances with
+//! behavioral models) are simulated cycle by cycle against the golden TNN
+//! model, and per-net toggle counts are accumulated for the
+//! activity-based dynamic-power model in [`crate::ppa::power`].
+//!
+//! Semantics: single implicit clock; per cycle
+//!   1. caller sets primary inputs,
+//!   2. combinational settle in topological order (Mealy macro pins are
+//!      re-evaluated from their behavioral models),
+//!   3. outputs observable,
+//!   4. `clock()` — DFFs capture, macro behavioral state advances.
+
+use super::macros9::{self, MacroState};
+use super::netlist::{Gate, NetId, Netlist};
+use std::collections::HashMap;
+
+/// Simulator instance bound to a netlist.
+pub struct Simulator<'a> {
+    nl: &'a Netlist,
+    order: Vec<NetId>,
+    values: Vec<bool>,
+    macro_states: Vec<MacroState>,
+    input_index: HashMap<&'a str, NetId>,
+    toggles: Vec<u64>,
+    cycles: u64,
+    // scratch buffers
+    dff_next: Vec<(usize, bool)>,
+    macro_in: Vec<bool>,
+    macro_out: Vec<bool>,
+}
+
+impl<'a> Simulator<'a> {
+    pub fn new(nl: &'a Netlist) -> Result<Self, String> {
+        let order = nl.levelize()?;
+        let mut values = vec![false; nl.gates.len()];
+        for (i, g) in nl.gates.iter().enumerate() {
+            match g {
+                Gate::Const(v) => values[i] = *v,
+                Gate::Dff { init, .. } => values[i] = *init,
+                _ => {}
+            }
+        }
+        let macro_states = nl.macros.iter().map(|_| MacroState::default()).collect();
+        let input_index = nl
+            .inputs
+            .iter()
+            .map(|(name, id)| (name.as_str(), *id))
+            .collect();
+        Ok(Simulator {
+            nl,
+            order,
+            toggles: vec![0; nl.gates.len()],
+            values,
+            macro_states,
+            input_index,
+            cycles: 0,
+            dff_next: Vec::new(),
+            macro_in: Vec::new(),
+            macro_out: Vec::new(),
+        })
+    }
+
+    /// Set a primary input by name. Panics on unknown names (tests want
+    /// loud failures).
+    pub fn set_input(&mut self, name: &str, v: bool) {
+        let id = *self
+            .input_index
+            .get(name)
+            .unwrap_or_else(|| panic!("unknown input {name}"));
+        self.values[id as usize] = v;
+    }
+
+    /// Set a primary input by net id (fast path for generated stimulus).
+    pub fn set_input_net(&mut self, id: NetId, v: bool) {
+        debug_assert!(matches!(self.nl.gates[id as usize], Gate::Input));
+        self.values[id as usize] = v;
+    }
+
+    /// Current value of any net.
+    pub fn get(&self, id: NetId) -> bool {
+        self.values[id as usize]
+    }
+
+    /// Value of a primary output by name.
+    pub fn get_output(&self, name: &str) -> bool {
+        let (_, id) = self
+            .nl
+            .outputs
+            .iter()
+            .find(|(n, _)| n == name)
+            .unwrap_or_else(|| panic!("unknown output {name}"));
+        self.values[*id as usize]
+    }
+
+    /// Combinational settle (phase 2). Counts toggles against the previous
+    /// settled values.
+    pub fn settle(&mut self) {
+        for k in 0..self.order.len() {
+            let id = self.order[k];
+            let new = self.eval_net(id);
+            let old = self.values[id as usize];
+            if new != old {
+                self.toggles[id as usize] += 1;
+                self.values[id as usize] = new;
+            }
+        }
+    }
+
+    fn eval_net(&mut self, id: NetId) -> bool {
+        match self.nl.gates[id as usize] {
+            Gate::Buf(a) => self.values[a as usize],
+            Gate::Not(a) => !self.values[a as usize],
+            Gate::And(a, b) => self.values[a as usize] && self.values[b as usize],
+            Gate::Or(a, b) => self.values[a as usize] || self.values[b as usize],
+            Gate::Xor(a, b) => self.values[a as usize] ^ self.values[b as usize],
+            Gate::Mux(s, a, b) => {
+                if self.values[s as usize] {
+                    self.values[b as usize]
+                } else {
+                    self.values[a as usize]
+                }
+            }
+            Gate::MacroOut { inst, pin } => {
+                let m = &self.nl.macros[inst as usize];
+                self.macro_in.clear();
+                for &src in &m.inputs {
+                    self.macro_in.push(self.values[src as usize]);
+                }
+                macros9::eval(
+                    m.kind,
+                    &self.macro_in,
+                    &self.macro_states[inst as usize],
+                    &mut self.macro_out,
+                );
+                self.macro_out[pin as usize]
+            }
+            Gate::Input | Gate::Const(_) | Gate::Dff { .. } => self.values[id as usize],
+        }
+    }
+
+    /// Clock edge (phase 4): capture DFFs, advance macro state, then
+    /// re-evaluate Moore macro outputs for the next cycle.
+    pub fn clock(&mut self) {
+        self.cycles += 1;
+        // Capture all DFF next-values first (no ordering hazards).
+        self.dff_next.clear();
+        for (i, g) in self.nl.gates.iter().enumerate() {
+            if let Gate::Dff { d, rst, init } = *g {
+                let v = if rst.map_or(false, |r| self.values[r as usize]) {
+                    init
+                } else {
+                    self.values[d as usize]
+                };
+                self.dff_next.push((i, v));
+            }
+        }
+        // Advance macro behavioral state.
+        for (inst, m) in self.nl.macros.iter().enumerate() {
+            self.macro_in.clear();
+            for &src in &m.inputs {
+                self.macro_in.push(self.values[src as usize]);
+            }
+            macros9::step(m.kind, &self.macro_in, &mut self.macro_states[inst]);
+        }
+        for &(i, v) in &self.dff_next {
+            if self.values[i] != v {
+                self.toggles[i] += 1;
+                self.values[i] = v;
+            }
+        }
+        // Refresh Moore macro pins (state-only outputs) so they reflect the
+        // new state before the next settle (Mealy pins are recomputed in
+        // settle anyway, but Moore pins have no comb fan-in and would
+        // otherwise go stale).
+        for (inst, m) in self.nl.macros.iter().enumerate() {
+            self.macro_in.clear();
+            for &src in &m.inputs {
+                self.macro_in.push(self.values[src as usize]);
+            }
+            macros9::eval(
+                m.kind,
+                &self.macro_in,
+                &self.macro_states[inst],
+                &mut self.macro_out,
+            );
+            for (pin, &net) in m.outputs.iter().enumerate() {
+                if m.kind.pin_deps(pin as u8).is_empty() {
+                    let v = self.macro_out[pin];
+                    if self.values[net as usize] != v {
+                        self.toggles[net as usize] += 1;
+                        self.values[net as usize] = v;
+                    }
+                }
+            }
+        }
+    }
+
+    /// One full cycle: settle, then clock. Inputs must be set beforehand.
+    pub fn cycle(&mut self) {
+        self.settle();
+        self.clock();
+    }
+
+    /// Simulated cycles so far.
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    /// Per-net toggle counts (for activity extraction).
+    pub fn toggles(&self) -> &[u64] {
+        &self.toggles
+    }
+
+    /// Average toggle rate (toggles per net per cycle) — the α activity
+    /// factor used by the dynamic power model.
+    pub fn activity(&self) -> f64 {
+        if self.cycles == 0 || self.nl.gates.is_empty() {
+            return 0.0;
+        }
+        let total: u64 = self.toggles.iter().sum();
+        total as f64 / (self.cycles as f64 * self.nl.gates.len() as f64)
+    }
+
+    /// Read a macro instance's behavioral state.
+    pub fn macro_state(&self, inst: usize) -> &MacroState {
+        &self.macro_states[inst]
+    }
+
+    /// Overwrite a macro instance's behavioral state (used e.g. to preload
+    /// synaptic weights before a gate-level cross-check run).
+    pub fn set_macro_state(&mut self, inst: usize, st: MacroState) {
+        self.macro_states[inst] = st;
+    }
+
+    /// Reset all state (DFFs to init, macro states cleared, toggles kept).
+    pub fn reset_state(&mut self) {
+        for (i, g) in self.nl.gates.iter().enumerate() {
+            if let Gate::Dff { init, .. } = g {
+                self.values[i] = *init;
+            }
+        }
+        for st in &mut self.macro_states {
+            *st = MacroState::default();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::macros9::MacroKind;
+    use super::super::netlist::NetBuilder;
+    use super::*;
+
+    #[test]
+    fn comb_logic_settles() {
+        let mut b = NetBuilder::new("t");
+        let a = b.input("a");
+        let c = b.input("b");
+        let x = b.xor(a, c);
+        b.output("x", x);
+        let nl = b.finish();
+        let mut sim = Simulator::new(&nl).unwrap();
+        for (va, vb, want) in [(false, false, false), (true, false, true), (true, true, false)] {
+            sim.set_input("a", va);
+            sim.set_input("b", vb);
+            sim.settle();
+            assert_eq!(sim.get_output("x"), want);
+        }
+    }
+
+    #[test]
+    fn dff_delays_one_cycle_and_resets() {
+        let mut b = NetBuilder::new("t");
+        let d = b.input("d");
+        let r = b.input("r");
+        let q = b.dff(d, Some(r), false);
+        b.output("q", q);
+        let nl = b.finish();
+        let mut sim = Simulator::new(&nl).unwrap();
+        sim.set_input("d", true);
+        sim.set_input("r", false);
+        sim.settle();
+        assert!(!sim.get_output("q"), "q lags d");
+        sim.clock();
+        sim.settle();
+        assert!(sim.get_output("q"));
+        sim.set_input("r", true);
+        sim.cycle();
+        sim.settle();
+        assert!(!sim.get_output("q"), "sync reset clears");
+    }
+
+    #[test]
+    fn sticky_dff_latches_until_reset() {
+        let mut b = NetBuilder::new("t");
+        let s = b.input("s");
+        let r = b.input("r");
+        let q = b.sticky_dff(s, r);
+        b.output("q", q);
+        let nl = b.finish();
+        let mut sim = Simulator::new(&nl).unwrap();
+        sim.set_input("s", false);
+        sim.set_input("r", false);
+        sim.cycle();
+        sim.settle();
+        assert!(!sim.get_output("q"), "starts clear");
+        sim.set_input("s", true);
+        sim.cycle();
+        sim.set_input("s", false);
+        sim.settle();
+        assert!(sim.get_output("q"), "stays set after set pulse");
+        sim.set_input("r", true);
+        sim.cycle();
+        sim.set_input("r", false);
+        sim.settle();
+        assert!(!sim.get_output("q"), "reset clears");
+    }
+
+    #[test]
+    fn macro_instance_evaluates_behaviorally() {
+        // pulse2edge as a hard macro inside a netlist.
+        let mut b = NetBuilder::new("t");
+        let p = b.input("p");
+        let g = b.input("g");
+        let outs = b.macro_inst(MacroKind::Pulse2Edge, vec![p, g]);
+        b.output("edge", outs[0]);
+        let nl = b.finish();
+        let mut sim = Simulator::new(&nl).unwrap();
+        sim.set_input("g", false);
+        let mut hist = Vec::new();
+        for t in 0..6 {
+            sim.set_input("p", t == 2);
+            sim.settle();
+            hist.push(sim.get_output("edge"));
+            sim.clock();
+        }
+        assert_eq!(hist, vec![false, false, true, true, true, true]);
+    }
+
+    #[test]
+    fn macro_expansion_matches_behavior_for_all_macros() {
+        // For every macro: drive identical random stimulus into (a) a
+        // netlist instantiating the hard macro and (b) its generic-gate
+        // expansion; outputs must agree cycle by cycle.
+        use crate::gates::macros9::{expand, ALL_MACROS};
+        use crate::util::Rng64;
+        for kind in ALL_MACROS {
+            let n_in = kind.input_pins().len();
+            // hard-macro netlist
+            let mut bm = NetBuilder::new("m");
+            let ins_m: Vec<_> = (0..n_in).map(|i| bm.input(&format!("i{i}"))).collect();
+            let outs_m = bm.macro_inst(kind, ins_m.clone());
+            for (k, &o) in outs_m.iter().enumerate() {
+                bm.output(&format!("o{k}"), o);
+            }
+            let nl_m = bm.finish();
+            // expansion netlist
+            let mut be = NetBuilder::new("e");
+            let ins_e: Vec<_> = (0..n_in).map(|i| be.input(&format!("i{i}"))).collect();
+            let outs_e = expand(kind, &mut be, &ins_e);
+            for (k, &o) in outs_e.iter().enumerate() {
+                be.output(&format!("o{k}"), o);
+            }
+            let nl_e = be.finish();
+
+            let mut sim_m = Simulator::new(&nl_m).unwrap();
+            let mut sim_e = Simulator::new(&nl_e).unwrap();
+            let mut rng = Rng64::seed_from_u64(0xC0FFEE ^ kind as u64);
+            let grst_pin = kind
+                .input_pins()
+                .iter()
+                .position(|&p| p == "GRST");
+            for cycle in 0..400u32 {
+                // Periodic gamma structure: reset every 16 cycles.
+                let gamma_end = cycle % 16 == 15;
+                for i in 0..n_in {
+                    let v = if Some(i) == grst_pin {
+                        gamma_end
+                    } else {
+                        rng.gen_bool(0.3)
+                    };
+                    sim_m.set_input(&format!("i{i}"), v);
+                    sim_e.set_input(&format!("i{i}"), v);
+                }
+                sim_m.settle();
+                sim_e.settle();
+                for k in 0..kind.output_pins().len() {
+                    assert_eq!(
+                        sim_m.get_output(&format!("o{k}")),
+                        sim_e.get_output(&format!("o{k}")),
+                        "{kind:?} pin {k} cycle {cycle}"
+                    );
+                }
+                sim_m.clock();
+                sim_e.clock();
+            }
+        }
+    }
+}

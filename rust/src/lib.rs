@@ -1,0 +1,57 @@
+//! # TNN7 — Temporal Neural Network macro suite & hardware co-design framework
+//!
+//! Reproduction of *"TNN7: A Custom Macro Suite for Implementing Highly Optimized
+//! Designs of Neuromorphic TNNs"* (Nair, Vellaisamy, Bhasuthkar, Shen — CMU, 2022).
+//!
+//! The crate is organised in two halves that mirror the paper:
+//!
+//! * **Functional half** — what TNN hardware *computes*:
+//!   - [`tnn`]: bit-accurate, cycle-level golden model of the column
+//!     microarchitecture of Nair et al. (ISVLSI'21): ramp-no-leak synapses,
+//!     adder-tree neuron bodies, 1-WTA lateral inhibition, and four-case
+//!     probabilistic STDP with bimodal weight stabilization.
+//!   - [`runtime`] + [`coordinator`]: the deployment shell. A tokio-based
+//!     streaming orchestrator feeds gamma-cycle input instances through
+//!     AOT-compiled XLA executables of the same column semantics (authored in
+//!     JAX/Pallas at build time, loaded via PJRT — Python is never on the
+//!     request path).
+//!   - [`ucr`] and [`mnist`]: the two application workloads the paper
+//!     evaluates (unsupervised time-series clustering; digit recognition).
+//!
+//! * **Hardware half** — what TNN hardware *costs* (the substitute for the
+//!   Cadence/ASAP7 stack, built from scratch per the reproduction rules):
+//!   - [`gates`]: gate-level netlist IR, the nine TNN7 macros as gate
+//!     netlists, and an event-driven simulator used to verify them against
+//!     the golden model and to extract switching activity.
+//!   - [`cells`]: a 7nm-class standard-cell library model (ASAP7-calibrated)
+//!     plus the TNN7 hard-macro library carrying the paper's Table II
+//!     characterization.
+//!   - [`synth`]: a behavioral → gate synthesis engine (elaborate, tech-map,
+//!     optimize) with hard-macro preservation and wall-clock metering — the
+//!     mechanism behind the paper's Fig. 12 runtime result.
+//!   - [`ppa`]: post-synthesis power/performance/area analysis (static
+//!     timing, leakage + activity-based dynamic power, area with net
+//!     estimates, EDP).
+//!   - [`layout`]: row placement and routing-congestion estimation (Fig. 13).
+//!
+//! [`harness`] regenerates every table and figure of the paper's evaluation;
+//! see `DESIGN.md` §6 for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod cells;
+pub mod config;
+pub mod coordinator;
+pub mod gates;
+pub mod harness;
+pub mod layout;
+pub mod metrics;
+pub mod mnist;
+pub mod ppa;
+pub mod runtime;
+pub mod synth;
+pub mod tnn;
+pub mod ucr;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,298 @@
+//! `tnn7` — leader binary / CLI.
+//!
+//! Subcommands:
+//!   report table2|fig11|table3|fig12|fig13|headline [--quick]
+//!   run ucr   [--dataset NAME] [--engine xla|golden] [key=value …]
+//!   run mnist [--layers N] [key=value …]
+//!   synth --p P --q Q [--flow asap7|tnn7]
+//!   serve [key=value …]         (streaming demo over the XLA runtime)
+//!   selftest                    (golden vs gate-level vs XLA cross-check)
+
+use tnn7::config::{EngineKind, RunConfig};
+use tnn7::coordinator::{encode_ucr, run_stream, Engine};
+use tnn7::gates::column_design::{build_column, BrvSource};
+use tnn7::harness;
+use tnn7::runtime::XlaRuntime;
+use tnn7::synth::flow::{synthesize, Flow};
+use tnn7::tnn::params::TnnParams;
+use tnn7::ucr;
+use tnn7::util::Rng64;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+fn opt<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .map(|s| s.as_str())
+}
+
+fn overrides(args: &[String]) -> Vec<String> {
+    args.iter()
+        .filter(|a| a.contains('=') && !a.starts_with("--"))
+        .cloned()
+        .collect()
+}
+
+fn dispatch(args: &[String]) -> tnn7::Result<()> {
+    match args.first().map(|s| s.as_str()) {
+        Some("report") => report(args),
+        Some("run") => run(args),
+        Some("synth") => synth_cmd(args),
+        Some("serve") => serve(args),
+        Some("selftest") => selftest(),
+        _ => {
+            eprintln!(
+                "usage: tnn7 <report|run|synth|serve|selftest> …\n\
+                 report table2|fig11|table3|fig12|fig13|headline [--quick]\n\
+                 run ucr [--dataset NAME] [--engine xla|golden] [k=v …]\n\
+                 run mnist [--layers N] [k=v …]\n\
+                 synth --p P --q Q [--flow asap7|tnn7]\n\
+                 serve [k=v …]\n\
+                 selftest"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn report(args: &[String]) -> tnn7::Result<()> {
+    let quick = flag(args, "--quick");
+    match args.get(1).map(|s| s.as_str()) {
+        Some("table2") => harness::print_table2(&harness::table2()),
+        Some("fig11") => harness::print_fig11(&harness::fig11(quick)),
+        Some("table3") => harness::print_table3(&harness::table3()),
+        Some("fig12") => harness::print_fig12(&harness::fig12(quick)),
+        Some("fig13") => {
+            let (b, t) = harness::fig13();
+            harness::print_fig13(&b, &t);
+        }
+        Some("headline") => {
+            let rows = harness::fig11(quick);
+            let (p, d, a, e) = harness::average_improvements(&rows);
+            println!(
+                "TNN7 vs ASAP7 average improvements (UCR suite{}):",
+                if quick { ", quick subsample" } else { "" }
+            );
+            println!("  power {p:.0}%  delay {d:.0}%  area {a:.0}%  EDP {e:.0}%");
+            println!("  paper: power 14%, delay 16%, area 28%, EDP 45%");
+            let largest = rows.last().unwrap();
+            println!(
+                "largest column ({} synapses): {:.3} mm², {:.1} µW with TNN7 (paper: 0.054 mm², 39 µW)",
+                largest.config.synapses(),
+                largest.tnn7.area_um2 * 1e-6,
+                largest.tnn7.power_nw / 1000.0
+            );
+        }
+        other => anyhow::bail!("unknown report {other:?}"),
+    }
+    Ok(())
+}
+
+fn run(args: &[String]) -> tnn7::Result<()> {
+    let mut cfg = RunConfig::default();
+    cfg.apply_overrides(&overrides(args))?;
+    if let Some(e) = opt(args, "--engine") {
+        cfg.engine = EngineKind::parse(e)?;
+    }
+    match args.get(1).map(|s| s.as_str()) {
+        Some("ucr") => {
+            let name = opt(args, "--dataset").unwrap_or("TwoLeadECG");
+            let dataset = ucr::ucr_suite()
+                .into_iter()
+                .find(|c| c.name == name)
+                .ok_or_else(|| anyhow::anyhow!("unknown dataset {name}"))?;
+            let per_cluster = (cfg.gamma_instances / dataset.q).max(5);
+            let data = ucr::generate(dataset, per_cluster, cfg.seed);
+            let items = encode_ucr(&data, 8);
+            let mut rng = Rng64::seed_from_u64(cfg.seed);
+            let rt;
+            let mut engine = match cfg.engine {
+                EngineKind::Golden => tnn7::coordinator::ucr_engine(
+                    dataset.p,
+                    dataset.q,
+                    &items,
+                    TnnParams::default(),
+                    &mut rng,
+                ),
+                EngineKind::Xla => {
+                    rt = XlaRuntime::load(&cfg.artifacts_dir)?;
+                    let exe = rt.column(dataset.p, dataset.q, "step")?;
+                    Engine::xla(exe, &mut rng)
+                }
+            };
+            let mut out = run_stream(&mut engine, items.clone(), cfg.channel_depth, cfg.seed)?;
+            for epoch in 1..5 {
+                out = run_stream(&mut engine, items.clone(), cfg.channel_depth, cfg.seed + epoch)?;
+            }
+            println!("{}", out.metrics.summary(out.wall));
+            // score clustering on a fresh inference pass
+            let mut pred = Vec::new();
+            let mut truth = Vec::new();
+            for item in &items {
+                if let (Some(w), Some(l)) =
+                    (engine.infer_winner(&item.volley)?, item.label)
+                {
+                    pred.push(w);
+                    truth.push(l);
+                }
+            }
+            println!(
+                "{name}: {} instances, rand index {:.3}, purity {:.3} (fired on {}/{})",
+                out.processed,
+                ucr::rand_index(&pred, &truth),
+                ucr::purity(&pred, &truth, dataset.q, dataset.q),
+                pred.len(),
+                items.len(),
+            );
+        }
+        Some("mnist") => {
+            let layers: usize = opt(args, "--layers").unwrap_or("3").parse()?;
+            run_mnist(layers, &cfg)?;
+        }
+        other => anyhow::bail!("unknown run target {other:?}"),
+    }
+    Ok(())
+}
+
+fn run_mnist(layers: usize, cfg: &RunConfig) -> tnn7::Result<()> {
+    use tnn7::mnist::{trainable_network, DigitCorpus};
+    use tnn7::tnn::encode::encode_image_onoff;
+    use tnn7::tnn::VoteClassifier;
+    let mut rng = Rng64::seed_from_u64(cfg.seed);
+    let mut net = trainable_network(layers, TnnParams::default());
+    net.randomize(&mut rng);
+    let train = DigitCorpus::generate(cfg.gamma_instances / 10, cfg.seed);
+    let test = DigitCorpus::generate(20, cfg.seed + 1);
+    println!(
+        "{layers}-layer TNN: {} synapses, training on {} digits…",
+        net.synapse_count(),
+        train.len()
+    );
+    for (img, _) in train.images.iter().zip(&train.labels) {
+        let volley = encode_image_onoff(img, 8);
+        net.step(&volley, &mut rng);
+    }
+    // calibrate the vote readout, then test
+    let mut vote = VoteClassifier::new(net.output_len(), 10);
+    for (img, &l) in train.images.iter().zip(&train.labels) {
+        let out = net.infer(&encode_image_onoff(img, 8));
+        vote.observe(&out, l);
+    }
+    let mut correct = 0;
+    for (img, &l) in test.images.iter().zip(&test.labels) {
+        let out = net.infer(&encode_image_onoff(img, 8));
+        if vote.classify(&out) == Some(l) {
+            correct += 1;
+        }
+    }
+    let err = 100.0 * (1.0 - correct as f64 / test.len() as f64);
+    println!(
+        "{layers}-layer error rate on synthetic digits: {err:.1}% ({correct}/{} correct)",
+        test.len()
+    );
+    Ok(())
+}
+
+fn synth_cmd(args: &[String]) -> tnn7::Result<()> {
+    let p: usize = opt(args, "--p").unwrap_or("82").parse()?;
+    let q: usize = opt(args, "--q").unwrap_or("2").parse()?;
+    let flow = match opt(args, "--flow").unwrap_or("tnn7") {
+        "asap7" => Flow::Baseline,
+        "tnn7" => Flow::Tnn7,
+        other => anyhow::bail!("unknown flow {other}"),
+    };
+    let theta = (p as u32 * 7) / 4;
+    let d = build_column(p, q, theta, BrvSource::Lfsr);
+    let out = synthesize(&d.netlist, flow);
+    let lib = flow.library();
+    let rep = tnn7::ppa::report::analyze(&out.mapped, &lib, harness::GAMMA_CYCLES);
+    println!(
+        "synthesized {}x{} column with {} in {:?} ({} gates in, {} cells + {} macros out, {} opt iterations)",
+        p, q, flow.name(), out.stats.wall, out.stats.gates_in,
+        out.stats.cells_out, out.stats.macros_out, out.stats.opt.iterations
+    );
+    println!("{}", rep.row());
+    Ok(())
+}
+
+fn serve(args: &[String]) -> tnn7::Result<()> {
+    let mut cfg = RunConfig::default();
+    cfg.apply_overrides(&overrides(args))?;
+    let rt = XlaRuntime::load(&cfg.artifacts_dir)?;
+    println!(
+        "PJRT platform: {}; artifacts: {:?}",
+        rt.platform(),
+        rt.artifact_names()
+    );
+    let dataset = ucr::ucr_suite()
+        .into_iter()
+        .find(|c| c.name == "TwoLeadECG")
+        .unwrap();
+    let data = ucr::generate(dataset, cfg.gamma_instances / 2, cfg.seed);
+    let items = encode_ucr(&data, 8);
+    let mut rng = Rng64::seed_from_u64(cfg.seed);
+    let exe = rt.column(dataset.p, dataset.q, "step")?;
+    let mut engine = Engine::xla(exe, &mut rng);
+    let out = run_stream(&mut engine, items, cfg.channel_depth, cfg.seed)?;
+    println!("serve (XLA column, online learning): {}", out.metrics.summary(out.wall));
+    Ok(())
+}
+
+fn selftest() -> tnn7::Result<()> {
+    use tnn7::gates::column_design::ColumnSim;
+    use tnn7::tnn::column::Column;
+    use tnn7::tnn::spike::SpikeTime;
+    let params = TnnParams::default();
+    let (p, q, theta) = (6, 2, 7);
+    let mut rng = Rng64::seed_from_u64(0xDEC0DE);
+    let design = build_column(p, q, theta, BrvSource::Inputs);
+    let mut gate = ColumnSim::new(&design, params.clone()).map_err(anyhow::Error::msg)?;
+    let mut golden = Column::with_random_weights(p, q, theta, params, &mut rng);
+    gate.set_weights(golden.weights());
+    let xla = XlaRuntime::load("artifacts").ok();
+    let mut mismatches = 0;
+    for gamma in 0..30 {
+        let xs: Vec<SpikeTime> = (0..p)
+            .map(|_| {
+                if rng.gen_bool(0.3) {
+                    SpikeTime::NONE
+                } else {
+                    SpikeTime::at(rng.gen_range(0, 8) as u32)
+                }
+            })
+            .collect();
+        let mut u1 = vec![0.0; p * q];
+        let mut u2 = vec![0.0; p * q];
+        rng.fill_f64(&mut u1);
+        rng.fill_f64(&mut u2);
+        let got = gate.run_gamma(&xs, &u1, &u2);
+        let want = golden.step_with_uniforms(&xs, &u1, &u2);
+        if got != want.output || gate.weights() != golden.weights() {
+            mismatches += 1;
+            eprintln!("gamma {gamma}: gate-level vs golden mismatch");
+        }
+    }
+    println!(
+        "selftest: golden vs gate-level over 30 gammas: {} mismatches",
+        mismatches
+    );
+    if let Some(rt) = xla {
+        println!("XLA runtime OK ({} artifacts)", rt.artifact_names().len());
+    } else {
+        println!("XLA artifacts not built (run `make artifacts`)");
+    }
+    anyhow::ensure!(mismatches == 0, "selftest failed");
+    println!("selftest OK");
+    Ok(())
+}

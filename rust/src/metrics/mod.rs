@@ -1,0 +1,147 @@
+//! Lightweight metrics: counters, gauges and latency histograms for the
+//! streaming coordinator (offline replacement for a metrics crate).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Monotonic counter (thread-safe).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed-bucket latency histogram (µs buckets, powers of two).
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: Vec<AtomicU64>, // bucket k: [2^k, 2^{k+1}) µs
+    count: AtomicU64,
+    total_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            buckets: (0..24).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            total_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn observe(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let k = (64 - us.max(1).leading_zeros() as u64 - 1).min(23) as usize;
+        self.buckets[k].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.total_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.total_us.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = (total as f64 * q).ceil() as u64;
+        let mut seen = 0;
+        for (k, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (k + 1);
+            }
+        }
+        self.max_us()
+    }
+}
+
+/// Coordinator metrics bundle.
+#[derive(Debug, Default)]
+pub struct StreamMetrics {
+    pub enqueued: Counter,
+    pub processed: Counter,
+    pub dropped: Counter,
+    pub backpressure_stalls: Counter,
+    pub step_latency: LatencyHistogram,
+}
+
+impl StreamMetrics {
+    pub fn summary(&self, wall: Duration) -> String {
+        let proc = self.processed.get();
+        let thr = proc as f64 / wall.as_secs_f64().max(1e-9);
+        format!(
+            "processed {} ({:.0}/s) | enqueued {} stalls {} | step mean {:.1} µs p99 ≤ {} µs max {} µs",
+            proc,
+            thr,
+            self.enqueued.get(),
+            self.backpressure_stalls.get(),
+            self.step_latency.mean_us(),
+            self.step_latency.quantile_us(0.99),
+            self.step_latency.max_us(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_counts() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn histogram_tracks_quantiles() {
+        let h = LatencyHistogram::default();
+        for us in [1u64, 2, 4, 8, 100, 1000] {
+            h.observe(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 6);
+        assert!(h.mean_us() > 100.0);
+        assert!(h.quantile_us(0.5) <= 16);
+        assert!(h.quantile_us(1.0) >= 1000);
+        assert_eq!(h.max_us(), 1000);
+    }
+
+    #[test]
+    fn summary_renders() {
+        let m = StreamMetrics::default();
+        m.processed.add(10);
+        let s = m.summary(Duration::from_secs(1));
+        assert!(s.contains("processed 10"));
+    }
+}

@@ -1,0 +1,228 @@
+//! Procedural 16×16 digit corpus (MNIST stand-in for the offline build).
+//!
+//! Each digit 0–9 is rendered from a stroke skeleton on a 16×16 grid, then
+//! perturbed per sample: sub-pixel translation, rotation, stroke-width
+//! jitter and pixel noise. The corpus is linearly separable enough to
+//! expose the paper's error-rate ordering (deeper TNNs → lower error) while
+//! remaining honest about what it is (documented in EXPERIMENTS.md).
+
+use crate::util::Rng64;
+
+/// Image side (16×16 pixels).
+pub const SIDE: usize = 16;
+
+/// Stroke skeletons per digit on a unit square: polylines of (x, y).
+fn skeleton(digit: usize) -> Vec<Vec<(f64, f64)>> {
+    let seg = |pts: &[(f64, f64)]| pts.to_vec();
+    match digit {
+        0 => vec![seg(&[
+            (0.5, 0.1),
+            (0.8, 0.3),
+            (0.8, 0.7),
+            (0.5, 0.9),
+            (0.2, 0.7),
+            (0.2, 0.3),
+            (0.5, 0.1),
+        ])],
+        1 => vec![seg(&[(0.35, 0.25), (0.55, 0.1), (0.55, 0.9)])],
+        2 => vec![seg(&[
+            (0.2, 0.25),
+            (0.5, 0.1),
+            (0.8, 0.3),
+            (0.3, 0.65),
+            (0.2, 0.9),
+            (0.8, 0.9),
+        ])],
+        3 => vec![seg(&[
+            (0.2, 0.15),
+            (0.7, 0.15),
+            (0.45, 0.45),
+            (0.75, 0.7),
+            (0.5, 0.9),
+            (0.2, 0.8),
+        ])],
+        4 => vec![
+            seg(&[(0.65, 0.9), (0.65, 0.1), (0.2, 0.6), (0.85, 0.6)]),
+        ],
+        5 => vec![seg(&[
+            (0.75, 0.1),
+            (0.25, 0.1),
+            (0.25, 0.45),
+            (0.65, 0.45),
+            (0.8, 0.7),
+            (0.55, 0.9),
+            (0.2, 0.85),
+        ])],
+        6 => vec![seg(&[
+            (0.7, 0.1),
+            (0.35, 0.4),
+            (0.25, 0.7),
+            (0.5, 0.9),
+            (0.75, 0.7),
+            (0.5, 0.55),
+            (0.3, 0.65),
+        ])],
+        7 => vec![seg(&[(0.2, 0.1), (0.8, 0.1), (0.45, 0.9)])],
+        8 => vec![
+            seg(&[
+                (0.5, 0.1),
+                (0.75, 0.28),
+                (0.5, 0.48),
+                (0.25, 0.28),
+                (0.5, 0.1),
+            ]),
+            seg(&[
+                (0.5, 0.48),
+                (0.8, 0.7),
+                (0.5, 0.9),
+                (0.2, 0.7),
+                (0.5, 0.48),
+            ]),
+        ],
+        9 => vec![seg(&[
+            (0.7, 0.35),
+            (0.45, 0.45),
+            (0.3, 0.25),
+            (0.55, 0.1),
+            (0.7, 0.35),
+            (0.65, 0.9),
+        ])],
+        _ => panic!("digit out of range"),
+    }
+}
+
+/// Render one digit sample with jitter. Returns SIDE×SIDE pixels in [0,1].
+pub fn render_digit(digit: usize, rng: &mut Rng64) -> Vec<f64> {
+    let strokes = skeleton(digit);
+    let mut img = vec![0.0f64; SIDE * SIDE];
+    let (dx, dy) = (rng.gen_f64() * 0.12 - 0.06, rng.gen_f64() * 0.12 - 0.06);
+    let rot = rng.gen_f64() * 0.24 - 0.12; // radians
+    let width = 0.05 + rng.gen_f64() * 0.03;
+    let (sinr, cosr) = rot.sin_cos();
+    let tf = |x: f64, y: f64| {
+        let (cx, cy) = (x - 0.5, y - 0.5);
+        (
+            cx * cosr - cy * sinr + 0.5 + dx,
+            cx * sinr + cy * cosr + 0.5 + dy,
+        )
+    };
+    for stroke in &strokes {
+        for w in stroke.windows(2) {
+            let (x0, y0) = tf(w[0].0, w[0].1);
+            let (x1, y1) = tf(w[1].0, w[1].1);
+            let steps = 40;
+            for s in 0..=steps {
+                let t = s as f64 / steps as f64;
+                let px = x0 + (x1 - x0) * t;
+                let py = y0 + (y1 - y0) * t;
+                splat(&mut img, px, py, width);
+            }
+        }
+    }
+    // pixel noise
+    for v in img.iter_mut() {
+        *v = (*v + 0.05 * rng.gen_f64()).min(1.0);
+    }
+    img
+}
+
+fn splat(img: &mut [f64], px: f64, py: f64, width: f64) {
+    let r = (width * SIDE as f64).ceil() as i64;
+    let cx = px * SIDE as f64;
+    let cy = py * SIDE as f64;
+    let ix = cx as i64;
+    let iy = cy as i64;
+    for gy in (iy - r)..=(iy + r) {
+        for gx in (ix - r)..=(ix + r) {
+            if gx < 0 || gy < 0 || gx >= SIDE as i64 || gy >= SIDE as i64 {
+                continue;
+            }
+            let d2 = ((gx as f64 + 0.5 - cx).powi(2) + (gy as f64 + 0.5 - cy).powi(2)).sqrt()
+                / (width * SIDE as f64);
+            if d2 < 1.5 {
+                let k = (gy as usize) * SIDE + gx as usize;
+                let val = (1.5 - d2) / 1.5;
+                if val > img[k] {
+                    img[k] = val;
+                }
+            }
+        }
+    }
+}
+
+/// A labelled corpus of rendered digits.
+#[derive(Clone, Debug)]
+pub struct DigitCorpus {
+    pub images: Vec<Vec<f64>>,
+    pub labels: Vec<usize>,
+}
+
+impl DigitCorpus {
+    /// `per_class` samples per digit, shuffled.
+    pub fn generate(per_class: usize, seed: u64) -> Self {
+        let mut rng = Rng64::seed_from_u64(seed ^ 0xD161_7000);
+        let mut images = Vec::with_capacity(per_class * 10);
+        let mut labels = Vec::with_capacity(per_class * 10);
+        for d in 0..10 {
+            for _ in 0..per_class {
+                images.push(render_digit(d, &mut rng));
+                labels.push(d);
+            }
+        }
+        let mut idx: Vec<usize> = (0..images.len()).collect();
+        rng.shuffle(&mut idx);
+        DigitCorpus {
+            images: idx.iter().map(|&i| images[i].clone()).collect(),
+            labels: idx.iter().map(|&i| labels[i]).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.images.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.images.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_all_digits_in_range() {
+        let mut rng = Rng64::seed_from_u64(1);
+        for d in 0..10 {
+            let img = render_digit(d, &mut rng);
+            assert_eq!(img.len(), 256);
+            assert!(img.iter().all(|&v| (0.0..=1.0).contains(&v)));
+            let ink: f64 = img.iter().sum();
+            assert!(ink > 5.0, "digit {d} has visible ink ({ink})");
+        }
+    }
+
+    #[test]
+    fn corpus_is_deterministic_and_balanced() {
+        let a = DigitCorpus::generate(4, 9);
+        let b = DigitCorpus::generate(4, 9);
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.len(), 40);
+        for d in 0..10 {
+            assert_eq!(a.labels.iter().filter(|&&l| l == d).count(), 4);
+        }
+    }
+
+    #[test]
+    fn same_digit_more_similar_than_different() {
+        // Average intra-class L2 distance must undercut inter-class.
+        let mut rng = Rng64::seed_from_u64(3);
+        let a1 = render_digit(1, &mut rng);
+        let a2 = render_digit(1, &mut rng);
+        let b = render_digit(8, &mut rng);
+        let d = |x: &[f64], y: &[f64]| -> f64 {
+            x.iter().zip(y).map(|(a, b)| (a - b) * (a - b)).sum()
+        };
+        assert!(d(&a1, &a2) < d(&a1, &b));
+    }
+}

@@ -1,0 +1,15 @@
+//! Digit-recognition workload (the paper's Section IV-B).
+//!
+//! MNIST itself is not bundled in this offline environment, so
+//! [`digits`] provides a procedural 16×16 digit corpus (stroke-rendered
+//! glyphs with elastic jitter, rotation and noise) that exercises the same
+//! pipeline: on/off-center encoding → multi-layer column TNN with STDP →
+//! vote-based readout. [`networks`] defines the 2/3/4-layer prototype
+//! geometries whose synapse counts match the paper's Table III scaling
+//! inputs (389K / 1,310K / 3,096K) plus downscaled trainable variants.
+
+pub mod digits;
+pub mod networks;
+
+pub use digits::{render_digit, DigitCorpus};
+pub use networks::{mnist_layer_geometries, trainable_network, MnistDesign};

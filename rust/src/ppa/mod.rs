@@ -1,0 +1,40 @@
+//! Post-synthesis Power / Performance / Area analysis (the substitute for
+//! Genus reports + Cadence Joules).
+//!
+//! * **Area** — Σ cell areas (standard cells + hard macros) plus a net-area
+//!   estimate proportional to total pin count (the paper's "total cell and
+//!   net area").
+//! * **Power** — leakage (Σ per-cell) + activity-based dynamic power:
+//!   signal/transition probabilities are propagated through the mapped
+//!   netlist ([`activity`]), per-toggle switching energies come from the
+//!   library, hard macros contribute characterized per-gamma-cycle internal
+//!   energy, and the clock tree adds per-sequential-cell energy. Evaluated
+//!   at the paper's 100 kHz `aclk`.
+//! * **Timing** — static timing analysis over the mapped netlist with the
+//!   linear delay model `d = intrinsic + k·C_load`; critical path =
+//!   worst register-to-register / input-to-register / register-to-output
+//!   path including setup. **Computation time** (the paper's performance
+//!   metric, "derived from the critical path delay and the gamma period as
+//!   in [6]") = critical path × unit cycles per gamma, summed over layers
+//!   for multi-layer networks.
+//! * **EDP** — energy × delay with energy = power × computation time.
+
+pub mod activity;
+pub mod report;
+pub mod scale;
+pub mod timing;
+
+pub use report::{analyze, PpaReport};
+pub use scale::{scale_network, NetworkPpa};
+
+/// Operating frequency of the unit clock (`aclk`) — the paper evaluates at
+/// 100 kHz for real-time sensory processing.
+pub const ACLK_HZ: f64 = 100_000.0;
+
+/// Net-area per pin (µm²) — routing overhead proxy calibrated so the
+/// largest UCR column lands in the paper's reported absolute-area regime
+/// (EXPERIMENTS.md §Calibration).
+pub const NET_AREA_PER_PIN_UM2: f64 = 0.045;
+
+/// Clock-tree energy per sequential element per aclk cycle (fJ).
+pub const CLK_ENERGY_PER_SEQ_FJ: f64 = 0.5;

@@ -1,0 +1,197 @@
+//! Top-level PPA report assembly.
+
+use super::activity::{propagate, ActivityPriors};
+use super::timing::sta;
+use super::{ACLK_HZ, CLK_ENERGY_PER_SEQ_FJ, NET_AREA_PER_PIN_UM2};
+use crate::cells::CellLibrary;
+use crate::synth::map::MappedNetlist;
+
+/// Post-synthesis PPA of one design (single column or flat module).
+#[derive(Clone, Debug)]
+pub struct PpaReport {
+    pub design: String,
+    pub library: &'static str,
+    // --- area ---
+    pub cell_area_um2: f64,
+    pub net_area_um2: f64,
+    pub area_um2: f64,
+    // --- power (at `aclk_hz`) ---
+    pub leakage_nw: f64,
+    pub dynamic_nw: f64,
+    pub power_nw: f64,
+    // --- timing ---
+    pub critical_path_ps: f64,
+    /// Computation time: critical path × unit cycles per gamma ([6]'s
+    /// performance metric; the paper's "Comp. Time").
+    pub comp_time_ns: f64,
+    // --- derived ---
+    /// Energy per processed input (power × comp-time), in fJ.
+    pub energy_fj: f64,
+    /// Energy-delay product, fJ·ns.
+    pub edp_fj_ns: f64,
+    // --- inventory ---
+    pub std_cells: usize,
+    pub macro_cells: usize,
+    pub seq_cells: usize,
+}
+
+/// Analyze a mapped netlist under a library at the standard operating point.
+pub fn analyze(mapped: &MappedNetlist, lib: &CellLibrary, gamma_cycles: u32) -> PpaReport {
+    analyze_at(mapped, lib, gamma_cycles, ACLK_HZ, ActivityPriors::default())
+}
+
+/// Full-control variant.
+pub fn analyze_at(
+    mapped: &MappedNetlist,
+    lib: &CellLibrary,
+    gamma_cycles: u32,
+    aclk_hz: f64,
+    priors: ActivityPriors,
+) -> PpaReport {
+    // ---- area ----
+    let mut cell_area = 0.0;
+    let mut leak = 0.0;
+    let mut seq_cells = 0usize;
+    for c in &mapped.cells {
+        let m = lib.get(c.cell);
+        cell_area += m.area_um2;
+        leak += m.leakage_nw;
+        if m.sequential {
+            seq_cells += 1;
+        }
+    }
+    for (kind, _, _) in &mapped.macros {
+        let m = lib
+            .macro_cell(*kind)
+            .unwrap_or_else(|| panic!("library {} lacks macro {:?}", lib.name, kind));
+        cell_area += m.area_um2;
+        leak += m.leakage_nw;
+        if m.sequential {
+            seq_cells += 1;
+        }
+    }
+    let net_area = NET_AREA_PER_PIN_UM2 * mapped.pin_count() as f64;
+    let area = cell_area + net_area;
+
+    // ---- dynamic power ----
+    let act = propagate(mapped, priors);
+    let mut sw_energy_fj_cycle = 0.0; // per aclk cycle
+    for c in &mapped.cells {
+        let m = lib.get(c.cell);
+        sw_energy_fj_cycle += m.energy_fj * act.alpha[c.out as usize];
+    }
+    for (kind, _, _) in &mapped.macros {
+        // Characterized per-cycle internal energy (library `energy_fj`
+        // stores fJ/cycle for macro cells).
+        let m = lib.macro_cell(*kind).unwrap();
+        sw_energy_fj_cycle += m.energy_fj;
+    }
+    sw_energy_fj_cycle += CLK_ENERGY_PER_SEQ_FJ * seq_cells as f64;
+    // fJ/cycle × cycles/s = fW → nW
+    let dynamic_nw = sw_energy_fj_cycle * aclk_hz * 1e-6;
+    let power_nw = leak + dynamic_nw;
+
+    // ---- timing ----
+    let t = sta(mapped, lib);
+    let comp_time_ns = t.critical_path_ps * gamma_cycles as f64 / 1000.0;
+
+    // ---- derived ----
+    let energy_fj = power_nw * comp_time_ns * 1e-3; // nW·ns = 1e-18 J = aJ; /1e3 → fJ
+    let edp = energy_fj * comp_time_ns;
+
+    PpaReport {
+        design: mapped.name.clone(),
+        library: lib.name,
+        cell_area_um2: cell_area,
+        net_area_um2: net_area,
+        area_um2: area,
+        leakage_nw: leak,
+        dynamic_nw,
+        power_nw,
+        critical_path_ps: t.critical_path_ps,
+        comp_time_ns,
+        energy_fj,
+        edp_fj_ns: edp,
+        std_cells: mapped.cell_count(),
+        macro_cells: mapped.macro_count(),
+        seq_cells,
+    }
+}
+
+impl PpaReport {
+    /// Improvement of `self` (TNN7) relative to `base` (ASAP7), as
+    /// percentages (positive = TNN7 better), in the paper's reporting
+    /// order: (power, delay, area, EDP).
+    pub fn improvement_vs(&self, base: &PpaReport) -> (f64, f64, f64, f64) {
+        let pct = |new: f64, old: f64| (1.0 - new / old) * 100.0;
+        (
+            pct(self.power_nw, base.power_nw),
+            pct(self.comp_time_ns, base.comp_time_ns),
+            pct(self.area_um2, base.area_um2),
+            pct(self.edp_fj_ns, base.edp_fj_ns),
+        )
+    }
+
+    pub fn row(&self) -> String {
+        format!(
+            "{:<18} {:>8} cells {:>6} macros | {:>9.2} µm² | {:>9.3} µW | {:>8.2} ns | EDP {:>10.1}",
+            self.library,
+            self.std_cells,
+            self.macro_cells,
+            self.area_um2,
+            self.power_nw / 1000.0,
+            self.comp_time_ns,
+            self.edp_fj_ns,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells;
+    use crate::gates::column_design::{build_column, BrvSource};
+    use crate::synth::flow::{synthesize, Flow};
+
+    fn column_reports(p: usize, q: usize) -> (PpaReport, PpaReport) {
+        let theta = (p as u32 * 7) / 4;
+        let d = build_column(p, q, theta, BrvSource::Lfsr);
+        let base = synthesize(&d.netlist, Flow::Baseline);
+        let t7 = synthesize(&d.netlist, Flow::Tnn7);
+        (
+            analyze(&base.mapped, &cells::asap7(), 16),
+            analyze(&t7.mapped, &cells::tnn7(), 16),
+        )
+    }
+
+    #[test]
+    fn tnn7_beats_baseline_on_all_axes_for_a_column() {
+        let (base, t7) = column_reports(16, 4);
+        let (dp, dd, da, dedp) = t7.improvement_vs(&base);
+        assert!(dp > 0.0, "power improvement {dp:.1}% (base {base:?} t7 {t7:?})");
+        assert!(dd > 0.0, "delay improvement {dd:.1}%");
+        assert!(da > 0.0, "area improvement {da:.1}%");
+        assert!(dedp > 0.0, "EDP improvement {dedp:.1}%");
+    }
+
+    #[test]
+    fn area_and_power_scale_with_synapses() {
+        let (b1, _) = column_reports(8, 2);
+        let (b2, _) = column_reports(24, 4);
+        assert!(b2.area_um2 > 3.0 * b1.area_um2);
+        assert!(b2.power_nw > 3.0 * b1.power_nw);
+    }
+
+    #[test]
+    fn comp_time_scales_sublinearly_with_p() {
+        // Computation time is dominated by the adder-tree depth: log(p).
+        let (b1, _) = column_reports(8, 2);
+        let (b2, _) = column_reports(64, 2);
+        let ratio = b2.comp_time_ns / b1.comp_time_ns;
+        assert!(
+            ratio < 3.0,
+            "8→64 synapses should grow comp time ≪ 8×, got {ratio:.2}×"
+        );
+        assert!(ratio > 1.0);
+    }
+}

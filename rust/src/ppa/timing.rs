@@ -1,0 +1,214 @@
+//! Static timing analysis over a mapped netlist (linear delay model).
+
+use crate::cells::{names, CellLibrary, CellModel};
+use crate::synth::map::MappedNetlist;
+
+/// Effective load-dependent delay of a driver into `load_ff`, with implicit
+/// buffer-tree insertion for high-fanout nets (what a real synthesis flow
+/// does during optimization): beyond ~4 equivalent pins the delay follows a
+/// branching-4 buffer tree, i.e. grows logarithmically in fanout instead of
+/// linearly. Buffer area/power are absorbed into the net-area model.
+fn load_delay_ps(load_ff: f64, drive: &CellModel, lib: &CellLibrary) -> f64 {
+    let direct = drive.load_ps_per_ff * load_ff;
+    let buf = lib.get(names::BUF);
+    let leaf_cap = 4.0 * buf.cap_ff;
+    if load_ff <= leaf_cap {
+        return direct;
+    }
+    let stages = (load_ff / leaf_cap).log(4.0).ceil().max(1.0);
+    let buffered = stages * (buf.delay_ps + buf.load_ps_per_ff * leaf_cap)
+        + drive.load_ps_per_ff * leaf_cap;
+    direct.min(buffered)
+}
+
+/// Timing results.
+#[derive(Clone, Debug)]
+pub struct TimingReport {
+    /// Worst path delay (ps), including launching clk→q and capturing setup.
+    pub critical_path_ps: f64,
+    /// Worst combinational depth in cells.
+    pub max_depth: usize,
+}
+
+/// Compute arrival times and the critical path.
+pub fn sta(mapped: &MappedNetlist, lib: &CellLibrary) -> TimingReport {
+    let n = mapped.net_space;
+    // Load per net: Σ input-pin caps of consumers.
+    let mut load_ff = vec![0.0f64; n];
+    for c in &mapped.cells {
+        let cap = lib.get(c.cell).cap_ff;
+        for &i in &c.ins {
+            load_ff[i as usize] += cap;
+        }
+    }
+    for (kind, ins, _) in &mapped.macros {
+        let cap = lib
+            .macro_cell(*kind)
+            .map(|m| m.cap_ff)
+            .unwrap_or(0.7);
+        for &i in ins {
+            load_ff[i as usize] += cap;
+        }
+    }
+
+    // Arrival times. Launch points: primary inputs at 0, sequential cell /
+    // sequential macro outputs at clk→q. Iterate cells in stored order
+    // (topologically consistent by construction) twice to settle
+    // forward-wire (Buf) orderings.
+    let mut arrival = vec![0.0f64; n];
+    let mut depth = vec![0usize; n];
+    for (kind, _, outs) in &mapped.macros {
+        if let Some(m) = lib.macro_cell(*kind) {
+            if m.sequential {
+                for &o in outs {
+                    arrival[o as usize] =
+                        m.delay_ps + load_delay_ps(load_ff[o as usize], m, lib);
+                }
+            }
+        }
+    }
+    for c in &mapped.cells {
+        if c.sequential {
+            let m = lib.get(c.cell);
+            arrival[c.out as usize] =
+                m.delay_ps + load_delay_ps(load_ff[c.out as usize], m, lib);
+        }
+    }
+    for _ in 0..2 {
+        for c in &mapped.cells {
+            if c.sequential {
+                continue;
+            }
+            let m = lib.get(c.cell);
+            let mut worst = 0.0f64;
+            let mut d = 0usize;
+            for &i in &c.ins {
+                if arrival[i as usize] > worst {
+                    worst = arrival[i as usize];
+                }
+                if depth[i as usize] > d {
+                    d = depth[i as usize];
+                }
+            }
+            arrival[c.out as usize] =
+                worst + m.delay_ps + load_delay_ps(load_ff[c.out as usize], m, lib);
+            depth[c.out as usize] = d + 1;
+        }
+        // Combinational macro cells (e.g. syn_readout) also propagate.
+        for (kind, ins, outs) in &mapped.macros {
+            if let Some(m) = lib.macro_cell(*kind) {
+                if !m.sequential {
+                    let mut worst = 0.0f64;
+                    let mut d = 0usize;
+                    for &i in ins {
+                        worst = worst.max(arrival[i as usize]);
+                        d = d.max(depth[i as usize]);
+                    }
+                    for &o in outs {
+                        arrival[o as usize] =
+                            worst + m.delay_ps + load_delay_ps(load_ff[o as usize], m, lib);
+                        depth[o as usize] = d + 1;
+                    }
+                }
+            }
+        }
+    }
+
+    // Capture points: sequential D inputs (+setup), macro inputs of
+    // sequential macros (+setup), and primary outputs.
+    let mut cp = 0.0f64;
+    let mut max_depth = 0usize;
+    for c in &mapped.cells {
+        if c.sequential {
+            let m = lib.get(c.cell);
+            for &i in &c.ins {
+                cp = cp.max(arrival[i as usize] + m.setup_ps);
+                max_depth = max_depth.max(depth[i as usize]);
+            }
+        }
+    }
+    for (kind, ins, _) in &mapped.macros {
+        if let Some(m) = lib.macro_cell(*kind) {
+            if m.sequential {
+                for &i in ins {
+                    cp = cp.max(arrival[i as usize] + m.setup_ps);
+                    max_depth = max_depth.max(depth[i as usize]);
+                }
+            }
+        }
+    }
+    for (_, net) in &mapped.outputs {
+        cp = cp.max(arrival[*net as usize]);
+        max_depth = max_depth.max(depth[*net as usize]);
+    }
+
+    TimingReport {
+        critical_path_ps: cp,
+        max_depth,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells;
+    use crate::gates::netlist::NetBuilder;
+    use crate::synth::map::tech_map;
+
+    #[test]
+    fn chain_depth_accumulates_delay() {
+        let lib = cells::asap7();
+        let make_chain = |len: usize| {
+            let mut b = NetBuilder::new("t");
+            let mut x = b.input("a");
+            let c = b.input("b");
+            for _ in 0..len {
+                x = b.xor(x, c);
+            }
+            let q = b.dff(x, None, false);
+            b.output("q", q);
+            tech_map(&b.finish(), &lib)
+        };
+        let short = sta(&make_chain(2), &lib);
+        let long = sta(&make_chain(10), &lib);
+        assert!(long.critical_path_ps > short.critical_path_ps * 3.0);
+        assert_eq!(long.max_depth, 10);
+    }
+
+    #[test]
+    fn fanout_load_increases_delay() {
+        let lib = cells::asap7();
+        let make = |fanout: usize| {
+            let mut b = NetBuilder::new("t");
+            let a = b.input("a");
+            let c = b.input("b");
+            let x = b.and(a, c);
+            for k in 0..fanout {
+                let y = b.xor(x, c);
+                let q = b.dff(y, None, false);
+                b.output(&format!("q{k}"), q);
+            }
+            tech_map(&b.finish(), &lib)
+        };
+        let lo = sta(&make(1), &lib);
+        let hi = sta(&make(12), &lib);
+        assert!(hi.critical_path_ps > lo.critical_path_ps);
+    }
+
+    #[test]
+    fn sequential_launch_and_capture_counted() {
+        let lib = cells::asap7();
+        let mut b = NetBuilder::new("t");
+        let d = b.input("d");
+        let q1 = b.dff(d, None, false);
+        let n1 = b.not(q1);
+        let q2 = b.dff(n1, None, false);
+        b.output("q", q2);
+        let mapped = tech_map(&b.finish(), &lib);
+        let t = sta(&mapped, &lib);
+        let dff = lib.get(crate::cells::names::DFF);
+        let inv = lib.get(crate::cells::names::INV);
+        // clk→q + inv + load + setup
+        assert!(t.critical_path_ps >= dff.delay_ps + inv.delay_ps + dff.setup_ps);
+    }
+}

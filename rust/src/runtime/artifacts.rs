@@ -1,0 +1,128 @@
+//! Artifact manifest parsing (`artifacts/manifest.kv`).
+
+use crate::util::kv::KvDoc;
+use std::path::{Path, PathBuf};
+
+/// Metadata of one compiled artifact (one section of the manifest).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub path: PathBuf,
+    /// Entry-point kind: "step" | "infer" | "step_batched" | "infer_batched".
+    pub kind: String,
+    pub p: usize,
+    pub q: usize,
+    pub theta: u32,
+    pub batch: usize,
+    pub gamma_cycles: u32,
+    pub weight_bits: u8,
+    pub mu_capture: f64,
+    pub mu_minus: f64,
+    pub mu_search: f64,
+    pub mu_backoff: f64,
+    pub stabilize: bool,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.kv`.
+    pub fn load(dir: impl AsRef<Path>) -> crate::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let doc = KvDoc::load(dir.join("manifest.kv"))?;
+        // Section names are the artifact names: collect unique prefixes.
+        let mut names: Vec<String> = doc
+            .keys()
+            .filter_map(|k| k.rsplit_once('.').map(|(s, _)| s.to_string()))
+            .collect();
+        names.sort();
+        names.dedup();
+        let mut artifacts = Vec::new();
+        for name in names {
+            let get = |field: &str| -> crate::Result<String> {
+                Ok(doc.require(&format!("{name}.{field}"))?.to_string())
+            };
+            let meta = ArtifactMeta {
+                path: dir.join(get("path")?),
+                kind: get("kind")?,
+                p: get("p")?.parse()?,
+                q: get("q")?.parse()?,
+                theta: get("theta")?.parse()?,
+                batch: get("batch")?.parse()?,
+                gamma_cycles: get("gamma_cycles")?.parse()?,
+                weight_bits: get("weight_bits")?.parse()?,
+                mu_capture: get("mu_capture")?.parse()?,
+                mu_minus: get("mu_minus")?.parse()?,
+                mu_search: get("mu_search")?.parse()?,
+                mu_backoff: get("mu_backoff")?.parse()?,
+                stabilize: get("stabilize")? == "true",
+                name,
+            };
+            artifacts.push(meta);
+        }
+        Ok(ArtifactManifest { dir, artifacts })
+    }
+
+    /// Find an artifact by exact name.
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Find the artifact for a (p, q, kind) triple.
+    pub fn find(&self, p: usize, q: usize, kind: &str) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.p == p && a.q == q && a.kind == kind)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path) {
+        std::fs::write(
+            dir.join("manifest.kv"),
+            "[column_p4_q2_th7_step]\n\
+             path = column_p4_q2_th7_step.hlo.txt\n\
+             kind = step\np = 4\nq = 2\ntheta = 7\nbatch = 1\n\
+             gamma_cycles = 16\nweight_bits = 3\n\
+             mu_capture = 1.0\nmu_minus = 0.5\nmu_search = 0.0625\n\
+             mu_backoff = 0.5\nstabilize = true\n",
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn parses_manifest_sections() {
+        let dir = std::env::temp_dir().join(format!("tnn7_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(&dir);
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = &m.artifacts[0];
+        assert_eq!(a.p, 4);
+        assert_eq!(a.q, 2);
+        assert_eq!(a.kind, "step");
+        assert!(a.stabilize);
+        assert_eq!(a.mu_search, 0.0625);
+        assert!(m.find(4, 2, "step").is_some());
+        assert!(m.find(4, 2, "infer").is_none());
+        assert!(m.by_name("column_p4_q2_th7_step").is_some());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // Integration sanity when `make artifacts` has run.
+        if let Ok(m) = ArtifactManifest::load("artifacts") {
+            assert!(!m.artifacts.is_empty());
+            assert!(m.find(82, 2, "step").is_some(), "TwoLeadECG column present");
+        }
+    }
+}

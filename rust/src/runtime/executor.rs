@@ -1,0 +1,279 @@
+//! PJRT execution of compiled column artifacts.
+
+use super::artifacts::{ArtifactManifest, ArtifactMeta};
+use crate::tnn::spike::SpikeTime;
+use anyhow::Context;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Shared PJRT CPU client + compiled executables, keyed by artifact name.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    pub manifest: ArtifactManifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl XlaRuntime {
+    /// Create the CPU client and compile every artifact in the manifest.
+    pub fn load(dir: impl AsRef<Path>) -> crate::Result<Self> {
+        let manifest = ArtifactManifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let mut executables = HashMap::new();
+        for meta in &manifest.artifacts {
+            let proto = xla::HloModuleProto::from_text_file(
+                meta.path.to_str().context("artifact path utf8")?,
+            )
+            .with_context(|| format!("parse HLO text {:?}", meta.path))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compile {}", meta.name))?;
+            executables.insert(meta.name.clone(), exe);
+        }
+        Ok(XlaRuntime {
+            client,
+            manifest,
+            executables,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact_names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.executables.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    /// Bind a column executable by (p, q, kind).
+    pub fn column(&self, p: usize, q: usize, kind: &str) -> crate::Result<ColumnExecutable<'_>> {
+        let meta = self
+            .manifest
+            .find(p, q, kind)
+            .with_context(|| format!("no artifact for p={p} q={q} kind={kind}"))?
+            .clone();
+        let exe = self
+            .executables
+            .get(&meta.name)
+            .context("executable missing")?;
+        Ok(ColumnExecutable { meta, exe })
+    }
+
+    /// Bind by exact artifact name.
+    pub fn by_name(&self, name: &str) -> crate::Result<ColumnExecutable<'_>> {
+        let meta = self
+            .manifest
+            .by_name(name)
+            .with_context(|| format!("no artifact named {name}"))?
+            .clone();
+        let exe = self.executables.get(name).context("executable missing")?;
+        Ok(ColumnExecutable { meta, exe })
+    }
+}
+
+/// One bound column entry point.
+pub struct ColumnExecutable<'a> {
+    pub meta: ArtifactMeta,
+    exe: &'a xla::PjRtLoadedExecutable,
+}
+
+fn lit_1d(v: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+fn lit_2d(v: &[f32], rows: usize, cols: usize) -> crate::Result<xla::Literal> {
+    Ok(xla::Literal::vec1(v).reshape(&[rows as i64, cols as i64])?)
+}
+
+fn lit_3d(v: &[f32], a: usize, b: usize, c: usize) -> crate::Result<xla::Literal> {
+    Ok(xla::Literal::vec1(v).reshape(&[a as i64, b as i64, c as i64])?)
+}
+
+impl ColumnExecutable<'_> {
+    fn run(&self, args: &[xla::Literal]) -> crate::Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(args)?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True.
+        Ok(result.to_tuple()?)
+    }
+
+    /// Learning step (`kind == "step"`): one gamma cycle.
+    /// `xs`: p spike times; `w`: p×q weights (f32 in 0..=w_max);
+    /// `u_case`/`u_stab`: p×q uniforms. Returns (post-WTA spikes, new w).
+    pub fn step(
+        &self,
+        xs: &[SpikeTime],
+        w: &[f32],
+        u_case: &[f32],
+        u_stab: &[f32],
+    ) -> crate::Result<(Vec<SpikeTime>, Vec<f32>)> {
+        let (p, q) = (self.meta.p, self.meta.q);
+        anyhow::ensure!(self.meta.kind == "step", "artifact kind {}", self.meta.kind);
+        anyhow::ensure!(xs.len() == p && w.len() == p * q);
+        let x: Vec<f32> = xs.iter().map(|s| s.to_f32()).collect();
+        let out = self.run(&[
+            lit_1d(&x),
+            lit_2d(w, p, q)?,
+            lit_2d(u_case, p, q)?,
+            lit_2d(u_stab, p, q)?,
+        ])?;
+        anyhow::ensure!(out.len() == 2, "expected 2 results, got {}", out.len());
+        let y: Vec<f32> = out[0].to_vec()?;
+        let w_new: Vec<f32> = out[1].to_vec()?;
+        Ok((y.iter().map(|&v| SpikeTime::from_f32(v)).collect(), w_new))
+    }
+
+    /// Inference (`kind == "infer"`).
+    pub fn infer(&self, xs: &[SpikeTime], w: &[f32]) -> crate::Result<Vec<SpikeTime>> {
+        let (p, q) = (self.meta.p, self.meta.q);
+        anyhow::ensure!(self.meta.kind == "infer", "artifact kind {}", self.meta.kind);
+        anyhow::ensure!(xs.len() == p && w.len() == p * q);
+        let x: Vec<f32> = xs.iter().map(|s| s.to_f32()).collect();
+        let out = self.run(&[lit_1d(&x), lit_2d(w, p, q)?])?;
+        let y: Vec<f32> = out[0].to_vec()?;
+        Ok(y.iter().map(|&v| SpikeTime::from_f32(v)).collect())
+    }
+
+    /// Batched learning step (`kind == "step_batched"`): B gamma instances
+    /// processed with the weights threaded through (identical to B
+    /// sequential steps). `xs`: B×p; uniforms: B×p×q.
+    pub fn step_batched(
+        &self,
+        xs: &[SpikeTime],
+        w: &[f32],
+        u_case: &[f32],
+        u_stab: &[f32],
+    ) -> crate::Result<(Vec<SpikeTime>, Vec<f32>)> {
+        let (p, q, b) = (self.meta.p, self.meta.q, self.meta.batch);
+        anyhow::ensure!(self.meta.kind == "step_batched");
+        anyhow::ensure!(xs.len() == b * p && w.len() == p * q);
+        anyhow::ensure!(u_case.len() == b * p * q && u_stab.len() == b * p * q);
+        let x: Vec<f32> = xs.iter().map(|s| s.to_f32()).collect();
+        let out = self.run(&[
+            lit_2d(&x, b, p)?,
+            lit_2d(w, p, q)?,
+            lit_3d(u_case, b, p, q)?,
+            lit_3d(u_stab, b, p, q)?,
+        ])?;
+        let y: Vec<f32> = out[0].to_vec()?;
+        let w_new: Vec<f32> = out[1].to_vec()?;
+        Ok((y.iter().map(|&v| SpikeTime::from_f32(v)).collect(), w_new))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tnn::column::Column;
+    use crate::tnn::params::TnnParams;
+    use crate::util::Rng64;
+
+    fn runtime() -> Option<XlaRuntime> {
+        // Requires `make artifacts`; tests are skipped (not failed) when the
+        // artifacts are absent so `cargo test` works pre-build.
+        if !std::path::Path::new("artifacts/manifest.kv").exists() {
+            eprintln!("artifacts/ missing; skipping XLA runtime test");
+            return None;
+        }
+        Some(XlaRuntime::load("artifacts").expect("runtime load"))
+    }
+
+    #[test]
+    fn xla_step_matches_golden_model() {
+        let Some(rt) = runtime() else { return };
+        let exe = rt.column(16, 4, "step").expect("p16 q4 artifact");
+        let meta = exe.meta.clone();
+        let params = TnnParams {
+            weight_bits: meta.weight_bits,
+            gamma_cycles: meta.gamma_cycles,
+            mu_capture: meta.mu_capture,
+            mu_minus: meta.mu_minus,
+            mu_search: meta.mu_search,
+            mu_backoff: meta.mu_backoff,
+            stabilize: meta.stabilize,
+        };
+        let mut rng = Rng64::seed_from_u64(99);
+        let mut golden = Column::with_random_weights(
+            meta.p,
+            meta.q,
+            meta.theta,
+            params,
+            &mut rng,
+        );
+        let mut w: Vec<f32> = golden.weights().iter().map(|&x| x as f32).collect();
+        for gamma in 0..20 {
+            let xs: Vec<SpikeTime> = (0..meta.p)
+                .map(|_| {
+                    if rng.gen_bool(0.25) {
+                        SpikeTime::NONE
+                    } else {
+                        SpikeTime::at(rng.gen_range(0, 8) as u32)
+                    }
+                })
+                .collect();
+            let n = meta.p * meta.q;
+            let u_case: Vec<f32> = (0..n).map(|_| rng.gen_f32()).collect();
+            let u_stab: Vec<f32> = (0..n).map(|_| rng.gen_f32()).collect();
+            let (y_xla, w_xla) = exe.step(&xs, &w, &u_case, &u_stab).unwrap();
+            let uc64: Vec<f64> = u_case.iter().map(|&v| v as f64).collect();
+            let us64: Vec<f64> = u_stab.iter().map(|&v| v as f64).collect();
+            let out = golden.step_with_uniforms(&xs, &uc64, &us64);
+            assert_eq!(y_xla, out.output, "gamma {gamma} spikes");
+            let w_golden: Vec<f32> =
+                golden.weights().iter().map(|&x| x as f32).collect();
+            assert_eq!(w_xla, w_golden, "gamma {gamma} weights");
+            w = w_xla;
+        }
+    }
+
+    #[test]
+    fn xla_infer_is_pure() {
+        let Some(rt) = runtime() else { return };
+        let exe = rt.column(16, 4, "infer").expect("infer artifact");
+        let p = exe.meta.p;
+        let xs: Vec<SpikeTime> = (0..p).map(|i| SpikeTime::at((i % 8) as u32)).collect();
+        let w = vec![4.0f32; p * exe.meta.q];
+        let y1 = exe.infer(&xs, &w).unwrap();
+        let y2 = exe.infer(&xs, &w).unwrap();
+        assert_eq!(y1, y2);
+        assert!(y1.iter().filter(|t| t.is_spike()).count() <= 1, "1-WTA");
+    }
+
+    #[test]
+    fn xla_batched_step_equals_sequential() {
+        let Some(rt) = runtime() else { return };
+        let batched = rt
+            .by_name("column_p82_q2_th143_b16_step_batched")
+            .expect("batched artifact");
+        let single = rt.column(82, 2, "step").expect("single artifact");
+        let (p, q, b) = (batched.meta.p, batched.meta.q, batched.meta.batch);
+        let mut rng = Rng64::seed_from_u64(7);
+        let mut w: Vec<f32> = (0..p * q).map(|_| rng.gen_range(0, 8) as f32).collect();
+        let xs: Vec<SpikeTime> = (0..b * p)
+            .map(|_| {
+                if rng.gen_bool(0.3) {
+                    SpikeTime::NONE
+                } else {
+                    SpikeTime::at(rng.gen_range(0, 8) as u32)
+                }
+            })
+            .collect();
+        let u_case: Vec<f32> = (0..b * p * q).map(|_| rng.gen_f32()).collect();
+        let u_stab: Vec<f32> = (0..b * p * q).map(|_| rng.gen_f32()).collect();
+        let (ys_b, w_b) = batched.step_batched(&xs, &w, &u_case, &u_stab).unwrap();
+        // sequential reference through the single-step artifact
+        let mut ys_seq = Vec::new();
+        for i in 0..b {
+            let xi = &xs[i * p..(i + 1) * p];
+            let ui = &u_case[i * p * q..(i + 1) * p * q];
+            let si = &u_stab[i * p * q..(i + 1) * p * q];
+            let (y, w_new) = single.step(xi, &w, ui, si).unwrap();
+            ys_seq.extend(y);
+            w = w_new;
+        }
+        assert_eq!(ys_b, ys_seq);
+        assert_eq!(w_b, w);
+    }
+}

@@ -1,0 +1,13 @@
+//! XLA/PJRT runtime: loads the AOT-compiled column executables produced by
+//! `python/compile/aot.py` and runs them from the Rust hot path.
+//!
+//! Python is **never** on the request path: `make artifacts` lowers the
+//! JAX/Pallas column functions to HLO *text* once; this module parses the
+//! manifest, compiles each module on the PJRT CPU client, and exposes typed
+//! entry points ([`ColumnExecutable`]) operating on spike-time vectors.
+
+pub mod artifacts;
+pub mod executor;
+
+pub use artifacts::{ArtifactManifest, ArtifactMeta};
+pub use executor::{ColumnExecutable, XlaRuntime};

@@ -1,0 +1,129 @@
+//! Synthesis flow orchestration with wall-clock metering (the Fig. 12
+//! measurement apparatus).
+
+use super::expand::expand_macros;
+use super::map::{tech_map, MappedNetlist};
+use super::opt::{optimize, OptStats};
+use crate::cells::{self, CellLibrary};
+use crate::gates::netlist::Netlist;
+use std::time::{Duration, Instant};
+
+/// Which cell library / macro policy to synthesize with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Flow {
+    /// ASAP7 baseline: expand macros into RTL, optimize everything, map to
+    /// standard cells (what Genus did with the modules of [6]).
+    Baseline,
+    /// TNN7: preserve macro instances as hard cells; optimize and map only
+    /// the glue logic.
+    Tnn7,
+}
+
+impl Flow {
+    pub fn library(&self) -> CellLibrary {
+        match self {
+            Flow::Baseline => cells::asap7(),
+            Flow::Tnn7 => cells::tnn7(),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Flow::Baseline => "ASAP7",
+            Flow::Tnn7 => "TNN7",
+        }
+    }
+}
+
+/// Statistics of one synthesis run.
+#[derive(Clone, Debug)]
+pub struct SynthStats {
+    pub flow: Flow,
+    /// End-to-end netlist-generation wall time (elaborate/expand + optimize
+    /// + map) — the quantity Fig. 12 compares.
+    pub wall: Duration,
+    pub expand_wall: Duration,
+    pub opt_wall: Duration,
+    pub map_wall: Duration,
+    /// Gate count entering the optimizer (the search-space size).
+    pub gates_in: usize,
+    pub opt: OptStats,
+    pub cells_out: usize,
+    pub macros_out: usize,
+}
+
+/// Result of a synthesis run.
+pub struct SynthOutcome {
+    pub mapped: MappedNetlist,
+    pub stats: SynthStats,
+}
+
+/// Synthesize a design netlist under the given flow.
+pub fn synthesize(design: &Netlist, flow: Flow) -> SynthOutcome {
+    let lib = flow.library();
+    let t0 = Instant::now();
+
+    let (working, expand_wall) = match flow {
+        Flow::Baseline => {
+            let te = Instant::now();
+            let flat = expand_macros(design);
+            (flat, te.elapsed())
+        }
+        Flow::Tnn7 => (design.clone(), Duration::ZERO),
+    };
+    let gates_in = working.gates.len();
+
+    let topt = Instant::now();
+    let (optimized, opt_stats) = optimize(working);
+    let opt_wall = topt.elapsed();
+
+    let tmap = Instant::now();
+    let mapped = tech_map(&optimized, &lib);
+    let map_wall = tmap.elapsed();
+
+    let stats = SynthStats {
+        flow,
+        wall: t0.elapsed(),
+        expand_wall,
+        opt_wall,
+        map_wall,
+        gates_in,
+        opt: opt_stats,
+        cells_out: mapped.cell_count(),
+        macros_out: mapped.macro_count(),
+    };
+    SynthOutcome { mapped, stats }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gates::column_design::{build_column, BrvSource};
+
+    #[test]
+    fn both_flows_synthesize_a_column() {
+        let d = build_column(8, 2, 8, BrvSource::Lfsr);
+        let base = synthesize(&d.netlist, Flow::Baseline);
+        let tnn7 = synthesize(&d.netlist, Flow::Tnn7);
+        assert!(base.mapped.macro_count() == 0);
+        assert!(tnn7.mapped.macro_count() > 0);
+        // The baseline flow must see (and therefore optimize) far more
+        // gates — the mechanism behind the Fig. 12 runtime gap.
+        assert!(
+            base.stats.gates_in > 3 * tnn7.stats.gates_in,
+            "baseline {} vs tnn7 {}",
+            base.stats.gates_in,
+            tnn7.stats.gates_in
+        );
+        assert!(base.stats.cells_out > tnn7.stats.cells_out);
+    }
+
+    #[test]
+    fn synthesis_work_scales_with_synapse_count() {
+        let small = build_column(4, 2, 4, BrvSource::Lfsr);
+        let large = build_column(16, 2, 16, BrvSource::Lfsr);
+        let s = synthesize(&small.netlist, Flow::Baseline);
+        let l = synthesize(&large.netlist, Flow::Baseline);
+        assert!(l.stats.opt.work > 2 * s.stats.opt.work);
+    }
+}

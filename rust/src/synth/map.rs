@@ -1,0 +1,320 @@
+//! Technology mapping: cover the optimized generic netlist with library
+//! cells (greedy pattern covering with inverter-fusion: NAND/NOR/XNOR/AOI21/
+//! OAI21), and bind macro instances to hard cells when the target library
+//! provides them.
+
+use crate::cells::{names, CellLibrary};
+use crate::gates::macros9::MacroKind;
+use crate::gates::netlist::{Gate, NetId, Netlist};
+
+/// One mapped standard-cell instance.
+#[derive(Clone, Debug)]
+pub struct MappedCell {
+    pub cell: &'static str,
+    /// Output net (generic NetId namespace of the source netlist).
+    pub out: NetId,
+    /// Input nets.
+    pub ins: Vec<NetId>,
+    /// Sequential cell?
+    pub sequential: bool,
+}
+
+/// A technology-mapped netlist: standard cells + hard-macro instances.
+#[derive(Clone, Debug)]
+pub struct MappedNetlist {
+    pub name: String,
+    pub cells: Vec<MappedCell>,
+    /// (kind, input nets, output nets) per preserved macro instance.
+    pub macros: Vec<(MacroKind, Vec<NetId>, Vec<NetId>)>,
+    pub inputs: Vec<(String, NetId)>,
+    pub outputs: Vec<(String, NetId)>,
+    /// Upper bound of the net id namespace.
+    pub net_space: usize,
+}
+
+impl MappedNetlist {
+    pub fn cell_count(&self) -> usize {
+        self.cells.len()
+    }
+    pub fn macro_count(&self) -> usize {
+        self.macros.len()
+    }
+    /// Total pin count (cell pins + macro pins) — the net-area proxy.
+    pub fn pin_count(&self) -> usize {
+        let cp: usize = self.cells.iter().map(|c| 1 + c.ins.len()).sum();
+        let mp: usize = self
+            .macros
+            .iter()
+            .map(|(_, i, o)| i.len() + o.len())
+            .sum();
+        cp + mp
+    }
+}
+
+/// Map a generic netlist onto `lib`. Macro instances become hard cells when
+/// the library has them; otherwise the caller must have expanded them first
+/// (the baseline flow).
+pub fn tech_map(nl: &Netlist, lib: &CellLibrary) -> MappedNetlist {
+    let n = nl.gates.len();
+    let fanout = nl.fanout_counts();
+    let mut covered = vec![false; n]; // absorbed into a fused parent cell
+    let mut cells: Vec<MappedCell> = Vec::with_capacity(n);
+
+    let single_use = |i: NetId| fanout[i as usize] == 1;
+
+    // Pass 1: inverter-rooted fusion patterns (NAND2/NOR2/XNOR2/AOI21/OAI21).
+    for i in 0..n {
+        let Gate::Not(a) = nl.gates[i] else { continue };
+        if covered[a as usize] || !single_use(a) {
+            continue;
+        }
+        let fused: Option<(&'static str, Vec<NetId>, Vec<NetId>)> = match nl.gates[a as usize]
+        {
+            Gate::And(x, y) => {
+                // AOI21 = !(x·y + z): Not(Or(And(x,y), z)) handled at the Or
+                // root below; plain Not(And) → NAND2.
+                Some((names::NAND2, vec![x, y], vec![a]))
+            }
+            Gate::Or(x, y) => {
+                // Try OAI/AOI first: Not(Or(And(p,q), z)) → AOI21.
+                let aoi = match (nl.gates[x as usize], single_use(x)) {
+                    (Gate::And(p, q), true) if !covered[x as usize] => {
+                        Some((names::AOI21, vec![p, q, y], vec![a, x]))
+                    }
+                    _ => match (nl.gates[y as usize], single_use(y)) {
+                        (Gate::And(p, q), true) if !covered[y as usize] => {
+                            Some((names::AOI21, vec![p, q, x], vec![a, y]))
+                        }
+                        _ => None,
+                    },
+                };
+                aoi.or(Some((names::NOR2, vec![x, y], vec![a])))
+            }
+            Gate::Xor(x, y) => Some((names::XNOR2, vec![x, y], vec![a])),
+            Gate::And(..) => unreachable!(),
+            _ => None,
+        };
+        // Also try OAI21: Not(And(Or(p,q), z)).
+        let fused = if fused.as_ref().map(|f| f.0) == Some(names::NAND2) {
+            if let Gate::And(x, y) = nl.gates[a as usize] {
+                match (nl.gates[x as usize], single_use(x), covered[x as usize]) {
+                    (Gate::Or(p, q), true, false) => {
+                        Some((names::OAI21, vec![p, q, y], vec![a, x]))
+                    }
+                    _ => match (nl.gates[y as usize], single_use(y), covered[y as usize]) {
+                        (Gate::Or(p, q), true, false) => {
+                            Some((names::OAI21, vec![p, q, x], vec![a, y]))
+                        }
+                        _ => fused,
+                    },
+                }
+            } else {
+                fused
+            }
+        } else {
+            fused
+        };
+        if let Some((cellname, ins, absorbed)) = fused {
+            for &x in &absorbed {
+                covered[x as usize] = true;
+            }
+            cells.push(MappedCell {
+                cell: cellname,
+                out: i as NetId,
+                ins,
+                sequential: false,
+            });
+            covered[i] = true; // the Not root is mapped
+        }
+    }
+
+    // Pass 2: everything not covered maps 1:1.
+    for i in 0..n {
+        if covered[i] {
+            continue;
+        }
+        let mc = match nl.gates[i] {
+            Gate::Input | Gate::MacroOut { .. } => continue,
+            Gate::Const(v) => MappedCell {
+                cell: if v { names::TIE1 } else { names::TIE0 },
+                out: i as NetId,
+                ins: vec![],
+                sequential: false,
+            },
+            Gate::Buf(a) => MappedCell {
+                cell: names::BUF,
+                out: i as NetId,
+                ins: vec![a],
+                sequential: false,
+            },
+            Gate::Not(a) => MappedCell {
+                cell: names::INV,
+                out: i as NetId,
+                ins: vec![a],
+                sequential: false,
+            },
+            Gate::And(a, b) => MappedCell {
+                cell: names::AND2,
+                out: i as NetId,
+                ins: vec![a, b],
+                sequential: false,
+            },
+            Gate::Or(a, b) => MappedCell {
+                cell: names::OR2,
+                out: i as NetId,
+                ins: vec![a, b],
+                sequential: false,
+            },
+            Gate::Xor(a, b) => MappedCell {
+                cell: names::XOR2,
+                out: i as NetId,
+                ins: vec![a, b],
+                sequential: false,
+            },
+            Gate::Mux(s, a, b) => MappedCell {
+                cell: names::MUX2,
+                out: i as NetId,
+                ins: vec![s, a, b],
+                sequential: false,
+            },
+            Gate::Dff { d, rst, .. } => MappedCell {
+                cell: if rst.is_some() { names::DFFR } else { names::DFF },
+                out: i as NetId,
+                ins: match rst {
+                    Some(r) => vec![d, r],
+                    None => vec![d],
+                },
+                sequential: true,
+            },
+        };
+        cells.push(mc);
+    }
+
+    // Macro instances → hard cells (must exist in the target library).
+    let macros: Vec<(MacroKind, Vec<NetId>, Vec<NetId>)> = nl
+        .macros
+        .iter()
+        .map(|m| {
+            assert!(
+                lib.macro_cell(m.kind).is_some(),
+                "library {} cannot map macro {:?}; expand first",
+                lib.name,
+                m.kind
+            );
+            (m.kind, m.inputs.clone(), m.outputs.clone())
+        })
+        .collect();
+
+    MappedNetlist {
+        name: nl.name.clone(),
+        cells,
+        macros,
+        inputs: nl.inputs.clone(),
+        outputs: nl.outputs.clone(),
+        net_space: n,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cells;
+    use crate::gates::netlist::NetBuilder;
+
+    #[test]
+    fn fuses_nand_nor_xnor() {
+        let mut b = NetBuilder::new("t");
+        let a = b.input("a");
+        let c = b.input("b");
+        let x = b.and(a, c);
+        let nx = b.not(x);
+        let y = b.or(a, c);
+        let ny = b.not(y);
+        let z = b.xor(a, c);
+        let nz = b.not(z);
+        b.output("nx", nx);
+        b.output("ny", ny);
+        b.output("nz", nz);
+        let mapped = tech_map(&b.finish(), &cells::asap7());
+        let names: Vec<&str> = mapped.cells.iter().map(|c| c.cell).collect();
+        assert!(names.contains(&names::NAND2), "{names:?}");
+        assert!(names.contains(&names::NOR2), "{names:?}");
+        assert!(names.contains(&names::XNOR2), "{names:?}");
+        assert_eq!(mapped.cell_count(), 3, "{names:?}");
+    }
+
+    #[test]
+    fn fuses_aoi21() {
+        let mut b = NetBuilder::new("t");
+        let a = b.input("a");
+        let c = b.input("b");
+        let d = b.input("c");
+        let x = b.and(a, c);
+        let y = b.or(x, d);
+        let ny = b.not(y);
+        b.output("o", ny);
+        let mapped = tech_map(&b.finish(), &cells::asap7());
+        assert_eq!(mapped.cell_count(), 1);
+        assert_eq!(mapped.cells[0].cell, names::AOI21);
+        assert_eq!(mapped.cells[0].ins.len(), 3);
+    }
+
+    #[test]
+    fn shared_inner_gates_are_not_fused() {
+        // The And output feeds both the Not and a primary output: the
+        // NAND fusion would duplicate logic, so it must not happen.
+        let mut b = NetBuilder::new("t");
+        let a = b.input("a");
+        let c = b.input("b");
+        let x = b.and(a, c);
+        let nx = b.not(x);
+        b.output("x", x);
+        b.output("nx", nx);
+        let mapped = tech_map(&b.finish(), &cells::asap7());
+        let names_v: Vec<&str> = mapped.cells.iter().map(|c| c.cell).collect();
+        assert_eq!(names_v.len(), 2);
+        assert!(names_v.contains(&names::AND2));
+        assert!(names_v.contains(&names::INV));
+    }
+
+    #[test]
+    fn dffs_map_by_reset_kind() {
+        let mut b = NetBuilder::new("t");
+        let d = b.input("d");
+        let r = b.input("r");
+        let q1 = b.dff(d, None, false);
+        let q2 = b.dff(d, Some(r), false);
+        b.output("q1", q1);
+        b.output("q2", q2);
+        let mapped = tech_map(&b.finish(), &cells::asap7());
+        let mut names_v: Vec<&str> = mapped.cells.iter().map(|c| c.cell).collect();
+        names_v.sort();
+        assert_eq!(names_v, vec![names::DFFR, names::DFF]); // sorted order
+    }
+
+    #[test]
+    fn tnn7_library_binds_macros() {
+        use crate::gates::macros9::MacroKind;
+        let mut b = NetBuilder::new("t");
+        let p = b.input("p");
+        let g = b.input("g");
+        let o = b.macro_inst(MacroKind::Pulse2Edge, vec![p, g]);
+        b.output("o", o[0]);
+        let nl = b.finish();
+        let mapped = tech_map(&nl, &cells::tnn7());
+        assert_eq!(mapped.macro_count(), 1);
+        assert_eq!(mapped.cell_count(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot map macro")]
+    fn baseline_library_rejects_macros() {
+        use crate::gates::macros9::MacroKind;
+        let mut b = NetBuilder::new("t");
+        let p = b.input("p");
+        let g = b.input("g");
+        let o = b.macro_inst(MacroKind::Pulse2Edge, vec![p, g]);
+        b.output("o", o[0]);
+        tech_map(&b.finish(), &cells::asap7());
+    }
+}

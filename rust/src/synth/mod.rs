@@ -1,0 +1,28 @@
+//! Behavioral → gate synthesis engine (the substitute for Cadence Genus).
+//!
+//! The flow mirrors the paper's Section II-B methodology:
+//!
+//! * **Baseline (ASAP7)**: macro instances are *expanded* into their
+//!   behavioral-RTL gate networks ([`expand`]), the whole design is run
+//!   through the logic optimizer ([`opt`]) and technology-mapped onto the
+//!   standard-cell library ([`map`]). This reproduces what Genus did with
+//!   the original modules of [6].
+//! * **TNN7**: macro instances are *preserved* as hard cells (their Table II
+//!   characterization comes from [`crate::cells::tnn7`]); only the glue
+//!   logic is optimized and mapped. Because the optimizer's and mapper's
+//!   work scales with visible gate count, this flow is mechanistically
+//!   faster — the source of the paper's Fig. 12 runtime result ("macro
+//!   design instances are preserved and not manipulated during synthesis").
+//!
+//! [`flow::synthesize`] runs either flow with wall-clock metering and
+//! returns the mapped netlist plus statistics.
+
+pub mod expand;
+pub mod flow;
+pub mod map;
+pub mod opt;
+
+pub use expand::expand_macros;
+pub use flow::{synthesize, Flow, SynthOutcome, SynthStats};
+pub use map::{MappedCell, MappedNetlist};
+pub use opt::{optimize, OptStats};

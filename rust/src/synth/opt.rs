@@ -1,0 +1,474 @@
+//! Logic optimization passes.
+//!
+//! Iterated to a fixpoint (bounded): constant folding, buffer collapsing,
+//! double-inverter elimination, idempotence/absorption rules, common
+//! sub-expression elimination (structural hashing), and dead-code
+//! elimination. The work performed scales with the visible gate count —
+//! which is exactly why hard-macro preservation speeds synthesis up
+//! (Fig. 12 of the paper).
+
+use crate::gates::netlist::{Gate, MacroInst, NetId, Netlist};
+use std::collections::HashMap;
+
+/// Optimization statistics (also the Fig. 12 "work" evidence).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OptStats {
+    pub gates_before: usize,
+    pub gates_after: usize,
+    pub iterations: usize,
+    /// Total gate visits across all passes (the optimizer's work measure).
+    pub work: u64,
+    pub rewrites: u64,
+}
+
+/// Run the optimization pipeline on a netlist.
+pub fn optimize(mut nl: Netlist) -> (Netlist, OptStats) {
+    let mut stats = OptStats {
+        gates_before: nl.gates.len(),
+        ..OptStats::default()
+    };
+    const MAX_ITERS: usize = 12;
+    loop {
+        stats.iterations += 1;
+        let rewrites = rewrite_pass(&mut nl, &mut stats.work);
+        stats.rewrites += rewrites;
+        let removed = dce(&mut nl, &mut stats.work);
+        if (rewrites == 0 && removed == 0) || stats.iterations >= MAX_ITERS {
+            break;
+        }
+    }
+    stats.gates_after = nl.gates.len();
+    (nl, stats)
+}
+
+/// One local-rewrite sweep: computes a replacement map (net → equivalent
+/// net) and applies it to all references. Returns the number of rewrites.
+fn rewrite_pass(nl: &mut Netlist, work: &mut u64) -> u64 {
+    let n = nl.gates.len();
+    let mut replace: Vec<NetId> = (0..n as NetId).collect();
+    let mut cse: HashMap<Gate, NetId> = HashMap::with_capacity(n);
+    let mut changes = 0u64;
+
+    // resolve with path compression
+    fn res(replace: &mut [NetId], mut x: NetId) -> NetId {
+        while replace[x as usize] != x {
+            let up = replace[replace[x as usize] as usize];
+            replace[x as usize] = up;
+            x = up;
+        }
+        x
+    }
+
+    let is_const = |gates: &[Gate], x: NetId| -> Option<bool> {
+        match gates[x as usize] {
+            Gate::Const(v) => Some(v),
+            _ => None,
+        }
+    };
+
+    for i in 0..n {
+        *work += 1;
+        let g = nl.gates[i];
+        let simplified: Option<NetId> = match g {
+            Gate::Buf(a) => Some(res(&mut replace, a)),
+            Gate::Not(a0) => {
+                let a = res(&mut replace, a0);
+                match nl.gates[a as usize] {
+                    Gate::Not(b) => Some(res(&mut replace, b)),
+                    Gate::Const(_) => None, // folded below via canonical form
+                    _ => None,
+                }
+            }
+            Gate::And(a0, b0) => {
+                let (a, b) = (res(&mut replace, a0), res(&mut replace, b0));
+                match (is_const(&nl.gates, a), is_const(&nl.gates, b)) {
+                    (Some(false), _) | (_, Some(false)) => None, // → const, handled below
+                    (Some(true), _) => Some(b),
+                    (_, Some(true)) => Some(a),
+                    _ if a == b => Some(a),
+                    _ => None,
+                }
+            }
+            Gate::Or(a0, b0) => {
+                let (a, b) = (res(&mut replace, a0), res(&mut replace, b0));
+                match (is_const(&nl.gates, a), is_const(&nl.gates, b)) {
+                    (Some(true), _) | (_, Some(true)) => None,
+                    (Some(false), _) => Some(b),
+                    (_, Some(false)) => Some(a),
+                    _ if a == b => Some(a),
+                    _ => None,
+                }
+            }
+            Gate::Xor(a0, b0) => {
+                let (a, b) = (res(&mut replace, a0), res(&mut replace, b0));
+                match (is_const(&nl.gates, a), is_const(&nl.gates, b)) {
+                    (Some(false), _) => Some(b),
+                    (_, Some(false)) => Some(a),
+                    _ => None,
+                }
+            }
+            Gate::Mux(s0, a0, b0) => {
+                let (s, a, b) = (
+                    res(&mut replace, s0),
+                    res(&mut replace, a0),
+                    res(&mut replace, b0),
+                );
+                match is_const(&nl.gates, s) {
+                    Some(false) => Some(a),
+                    Some(true) => Some(b),
+                    None if a == b => Some(a),
+                    None => None,
+                }
+            }
+            _ => None,
+        };
+        if let Some(tgt) = simplified {
+            if tgt != i as NetId {
+                replace[i] = tgt;
+                changes += 1;
+                continue;
+            }
+        }
+        // Rebuild the gate with resolved operands, canonicalize, fold
+        // const-producing forms, then CSE.
+        let rebuilt = match g {
+            Gate::Not(a) => {
+                let a = res(&mut replace, a);
+                match is_const(&nl.gates, a) {
+                    Some(v) => Gate::Const(!v),
+                    None => Gate::Not(a),
+                }
+            }
+            Gate::And(a, b) => {
+                let (mut a, mut b) = (res(&mut replace, a), res(&mut replace, b));
+                if a > b {
+                    std::mem::swap(&mut a, &mut b);
+                }
+                match (is_const(&nl.gates, a), is_const(&nl.gates, b)) {
+                    (Some(false), _) | (_, Some(false)) => Gate::Const(false),
+                    _ => Gate::And(a, b),
+                }
+            }
+            Gate::Or(a, b) => {
+                let (mut a, mut b) = (res(&mut replace, a), res(&mut replace, b));
+                if a > b {
+                    std::mem::swap(&mut a, &mut b);
+                }
+                match (is_const(&nl.gates, a), is_const(&nl.gates, b)) {
+                    (Some(true), _) | (_, Some(true)) => Gate::Const(true),
+                    _ => Gate::Or(a, b),
+                }
+            }
+            Gate::Xor(a, b) => {
+                let (mut a, mut b) = (res(&mut replace, a), res(&mut replace, b));
+                if a > b {
+                    std::mem::swap(&mut a, &mut b);
+                }
+                if a == b {
+                    Gate::Const(false)
+                } else {
+                    Gate::Xor(a, b)
+                }
+            }
+            Gate::Mux(s, a, b) => Gate::Mux(
+                res(&mut replace, s),
+                res(&mut replace, a),
+                res(&mut replace, b),
+            ),
+            Gate::Buf(a) => Gate::Buf(res(&mut replace, a)),
+            Gate::Dff { d, rst, init } => Gate::Dff {
+                d: res(&mut replace, d),
+                rst: rst.map(|r| res(&mut replace, r)),
+                init,
+            },
+            other => other,
+        };
+        if rebuilt != g {
+            changes += 1;
+        }
+        nl.gates[i] = rebuilt;
+        // CSE on pure-comb, non-state gates (Input/Const excluded: Const is
+        // canonical via builder, Input must stay).
+        let cse_eligible = matches!(
+            rebuilt,
+            Gate::Not(_) | Gate::And(..) | Gate::Or(..) | Gate::Xor(..) | Gate::Mux(..)
+        );
+        if cse_eligible {
+            match cse.entry(rebuilt) {
+                std::collections::hash_map::Entry::Occupied(e) => {
+                    replace[i] = *e.get();
+                    changes += 1;
+                }
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    e.insert(i as NetId);
+                }
+            }
+        }
+    }
+
+    // Apply the replacement map to every reference.
+    for i in 0..n {
+        let g = nl.gates[i];
+        nl.gates[i] = match g {
+            Gate::Buf(a) => Gate::Buf(res(&mut replace, a)),
+            Gate::Not(a) => Gate::Not(res(&mut replace, a)),
+            Gate::And(a, b) => Gate::And(res(&mut replace, a), res(&mut replace, b)),
+            Gate::Or(a, b) => Gate::Or(res(&mut replace, a), res(&mut replace, b)),
+            Gate::Xor(a, b) => Gate::Xor(res(&mut replace, a), res(&mut replace, b)),
+            Gate::Mux(s, a, b) => Gate::Mux(
+                res(&mut replace, s),
+                res(&mut replace, a),
+                res(&mut replace, b),
+            ),
+            Gate::Dff { d, rst, init } => Gate::Dff {
+                d: res(&mut replace, d),
+                rst: rst.map(|r| res(&mut replace, r)),
+                init,
+            },
+            other => other,
+        };
+    }
+    for m in &mut nl.macros {
+        for x in &mut m.inputs {
+            *x = res(&mut replace, *x);
+        }
+    }
+    for (_, net) in &mut nl.outputs {
+        *net = res(&mut replace, *net);
+    }
+    changes
+}
+
+/// Dead-code elimination with compaction: keeps everything reachable from
+/// primary outputs, macro instances (always live — they implement declared
+/// design function), live DFF fan-ins, and primary inputs (pin interface).
+/// Returns the number of removed gates.
+fn dce(nl: &mut Netlist, work: &mut u64) -> u64 {
+    let n = nl.gates.len();
+    let mut live = vec![false; n];
+    let mut stack: Vec<NetId> = Vec::new();
+    let mut mark = |x: NetId, live: &mut Vec<bool>, stack: &mut Vec<NetId>| {
+        if !live[x as usize] {
+            live[x as usize] = true;
+            stack.push(x);
+        }
+    };
+    for (_, net) in &nl.outputs {
+        mark(*net, &mut live, &mut stack);
+    }
+    for m in &nl.macros {
+        for &x in &m.inputs {
+            mark(x, &mut live, &mut stack);
+        }
+        for &x in &m.outputs {
+            mark(x, &mut live, &mut stack);
+        }
+    }
+    for (_, net) in &nl.inputs {
+        mark(*net, &mut live, &mut stack);
+    }
+    let mut fin = Vec::new();
+    while let Some(x) = stack.pop() {
+        *work += 1;
+        let g = nl.gates[x as usize];
+        g.comb_fanin(&mut fin);
+        for &src in &fin {
+            if !live[src as usize] {
+                live[src as usize] = true;
+                stack.push(src);
+            }
+        }
+        if let Gate::Dff { d, rst, .. } = g {
+            if !live[d as usize] {
+                live[d as usize] = true;
+                stack.push(d);
+            }
+            if let Some(r) = rst {
+                if !live[r as usize] {
+                    live[r as usize] = true;
+                    stack.push(r);
+                }
+            }
+        }
+    }
+    let removed = live.iter().filter(|&&l| !l).count() as u64;
+    if removed == 0 {
+        return 0;
+    }
+    // Compact.
+    let mut remap: Vec<NetId> = vec![u32::MAX; n];
+    let mut gates = Vec::with_capacity(n - removed as usize);
+    for i in 0..n {
+        if live[i] {
+            remap[i] = gates.len() as NetId;
+            gates.push(nl.gates[i]);
+        }
+    }
+    for g in &mut gates {
+        *g = match *g {
+            Gate::Buf(a) => Gate::Buf(remap[a as usize]),
+            Gate::Not(a) => Gate::Not(remap[a as usize]),
+            Gate::And(a, b) => Gate::And(remap[a as usize], remap[b as usize]),
+            Gate::Or(a, b) => Gate::Or(remap[a as usize], remap[b as usize]),
+            Gate::Xor(a, b) => Gate::Xor(remap[a as usize], remap[b as usize]),
+            Gate::Mux(s, a, b) => {
+                Gate::Mux(remap[s as usize], remap[a as usize], remap[b as usize])
+            }
+            Gate::Dff { d, rst, init } => Gate::Dff {
+                d: remap[d as usize],
+                rst: rst.map(|r| remap[r as usize]),
+                init,
+            },
+            other => other,
+        };
+    }
+    let macros: Vec<MacroInst> = nl
+        .macros
+        .iter()
+        .map(|m| MacroInst {
+            kind: m.kind,
+            inputs: m.inputs.iter().map(|&x| remap[x as usize]).collect(),
+            outputs: m.outputs.iter().map(|&x| remap[x as usize]).collect(),
+        })
+        .collect();
+    nl.gates = gates;
+    nl.macros = macros;
+    for (_, net) in &mut nl.inputs {
+        *net = remap[*net as usize];
+    }
+    for (_, net) in &mut nl.outputs {
+        *net = remap[*net as usize];
+    }
+    removed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gates::netlist::NetBuilder;
+    use crate::gates::sim::Simulator;
+    use crate::util::Rng64;
+
+    #[test]
+    fn folds_constants_and_dedupes() {
+        let mut b = NetBuilder::new("t");
+        let a = b.input("a");
+        let one = b.constant(true);
+        let x = b.and(a, one); // → a
+        let y = b.and(a, one); // duplicate → CSE
+        let z = b.or(x, y); // or(a,a) → a
+        let nz = b.not(z);
+        let nnz = b.not(nz); // double inverter → a
+        b.output("o", nnz);
+        let (nl, stats) = optimize(b.finish());
+        assert!(stats.rewrites > 0);
+        // Output should collapse to the input directly.
+        let (_, out) = nl.outputs[0];
+        assert_eq!(out, nl.inputs[0].1);
+        assert!(nl.gates.len() <= 3, "gates left: {}", nl.gates.len());
+    }
+
+    #[test]
+    fn dce_removes_unreachable_logic() {
+        let mut b = NetBuilder::new("t");
+        let a = b.input("a");
+        let c = b.input("b");
+        let _dead1 = b.xor(a, c);
+        let live = b.and(a, c);
+        b.output("o", live);
+        let (nl, _) = optimize(b.finish());
+        // dead xor gone; and + 2 inputs remain.
+        assert_eq!(nl.census().comb, 1);
+    }
+
+    #[test]
+    fn optimization_preserves_function_on_random_logic() {
+        let mut rng = Rng64::seed_from_u64(31);
+        for trial in 0..20 {
+            // random DAG with registers
+            let mut b = NetBuilder::new("t");
+            let inputs: Vec<_> = (0..6).map(|i| b.input(&format!("i{i}"))).collect();
+            let mut nets = inputs.clone();
+            for _ in 0..60 {
+                let pick = |rng: &mut Rng64, nets: &Vec<u32>| {
+                    nets[rng.gen_range(0, nets.len())]
+                };
+                let a = pick(&mut rng, &nets);
+                let c = pick(&mut rng, &nets);
+                let g = match rng.gen_range(0, 6) {
+                    0 => b.and(a, c),
+                    1 => b.or(a, c),
+                    2 => b.xor(a, c),
+                    3 => b.not(a),
+                    4 => {
+                        let s = pick(&mut rng, &nets);
+                        b.mux(s, a, c)
+                    }
+                    _ => b.dff(a, None, false),
+                };
+                nets.push(g);
+            }
+            for (k, &net) in nets.iter().rev().take(4).enumerate() {
+                b.output(&format!("o{k}"), net);
+            }
+            let original = b.finish();
+            let (opt, _) = optimize(original.clone());
+            let mut sim_a = Simulator::new(&original).unwrap();
+            let mut sim_b = Simulator::new(&opt).unwrap();
+            for cycle in 0..50 {
+                for i in 0..6 {
+                    let v = rng.gen_bool(0.5);
+                    sim_a.set_input(&format!("i{i}"), v);
+                    sim_b.set_input(&format!("i{i}"), v);
+                }
+                sim_a.settle();
+                sim_b.settle();
+                for k in 0..4 {
+                    assert_eq!(
+                        sim_a.get_output(&format!("o{k}")),
+                        sim_b.get_output(&format!("o{k}")),
+                        "trial {trial} cycle {cycle} output o{k}"
+                    );
+                }
+                sim_a.clock();
+                sim_b.clock();
+            }
+        }
+    }
+
+    #[test]
+    fn optimizing_expanded_column_preserves_gamma_behavior() {
+        use crate::gates::column_design::{build_column, BrvSource};
+        use crate::synth::expand::expand_macros;
+        let d = build_column(3, 2, 4, BrvSource::Lfsr);
+        let flat = expand_macros(&d.netlist);
+        let (opt, stats) = optimize(flat.clone());
+        assert!(stats.gates_after < stats.gates_before);
+        let mut sim_a = Simulator::new(&flat).unwrap();
+        let mut sim_b = Simulator::new(&opt).unwrap();
+        let mut rng = Rng64::seed_from_u64(5);
+        let names: Vec<String> = flat.inputs.iter().map(|(n, _)| n.clone()).collect();
+        for cycle in 0..160u32 {
+            for n in &names {
+                let v = if n == "GRST" {
+                    cycle % 16 == 15
+                } else {
+                    rng.gen_bool(0.2)
+                };
+                sim_a.set_input(n, v);
+                sim_b.set_input(n, v);
+            }
+            sim_a.settle();
+            sim_b.settle();
+            for (n, _) in &flat.outputs {
+                assert_eq!(
+                    sim_a.get_output(n),
+                    sim_b.get_output(n),
+                    "cycle {cycle} output {n}"
+                );
+            }
+            sim_a.clock();
+            sim_b.clock();
+        }
+    }
+}

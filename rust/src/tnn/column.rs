@@ -1,0 +1,296 @@
+//! The p×q TNN column — the paper's key building block (Fig. 1): a synaptic
+//! crossbar of RNL synapses, q neuron bodies with adder trees, 1-WTA lateral
+//! inhibition, and per-synapse STDP learning.
+
+use super::neuron::{fire_times_cycle_accurate, fire_times_folded};
+use super::params::TnnParams;
+use super::spike::SpikeTime;
+use super::stdp::stdp_update_column;
+use super::wta::wta_1;
+use crate::util::Rng64;
+
+/// A single TNN column with `p` synapses per neuron and `q` neurons.
+#[derive(Clone, Debug)]
+pub struct Column {
+    p: usize,
+    q: usize,
+    /// Row-major p×q weights: `weights[i*q + j]` connects input `i` to
+    /// neuron `j`. Each weight is in `0 ..= w_max`.
+    weights: Vec<u8>,
+    /// Firing threshold shared by the column's neurons.
+    theta: u32,
+    params: TnnParams,
+}
+
+/// Result of one gamma cycle through a column.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GammaOutput {
+    /// Pre-inhibition body fire times (q).
+    pub body: Vec<SpikeTime>,
+    /// Post-WTA output volley (q, at most one spike).
+    pub output: Vec<SpikeTime>,
+    /// Index of the winning neuron, if any.
+    pub winner: Option<usize>,
+}
+
+impl Column {
+    /// Create a column with all weights at `w_max/2` (the neutral starting
+    /// point used by [6] before STDP drives them bimodal).
+    pub fn new(p: usize, q: usize, theta: u32, params: TnnParams) -> Self {
+        assert!(p > 0 && q > 0, "column must have p,q >= 1");
+        let w0 = params.w_max() / 2;
+        Column {
+            p,
+            q,
+            weights: vec![w0; p * q],
+            theta,
+            params,
+        }
+    }
+
+    /// Create with θ from the default sizing rule.
+    pub fn with_default_theta(p: usize, q: usize, params: TnnParams) -> Self {
+        let theta = params.default_theta(p);
+        Self::new(p, q, theta, params)
+    }
+
+    /// Create with randomly initialised weights (uniform over `0..=w_max`).
+    pub fn with_random_weights(
+        p: usize,
+        q: usize,
+        theta: u32,
+        params: TnnParams,
+        rng: &mut Rng64,
+    ) -> Self {
+        let mut c = Self::new(p, q, theta, params);
+        let w_max = c.params.w_max();
+        for w in &mut c.weights {
+            *w = rng.gen_u8_inclusive(0, w_max);
+        }
+        c
+    }
+
+    pub fn p(&self) -> usize {
+        self.p
+    }
+    pub fn q(&self) -> usize {
+        self.q
+    }
+    pub fn theta(&self) -> u32 {
+        self.theta
+    }
+    pub fn params(&self) -> &TnnParams {
+        &self.params
+    }
+    pub fn weights(&self) -> &[u8] {
+        &self.weights
+    }
+    pub fn weights_mut(&mut self) -> &mut [u8] {
+        &mut self.weights
+    }
+    /// Total synapse count (p·q) — the x-axis of the paper's Fig. 11.
+    pub fn synapse_count(&self) -> usize {
+        self.p * self.q
+    }
+
+    /// Overwrite the weight matrix (row-major p×q).
+    pub fn set_weights(&mut self, ws: &[u8]) {
+        assert_eq!(ws.len(), self.p * self.q);
+        let w_max = self.params.w_max();
+        assert!(ws.iter().all(|&w| w <= w_max), "weight out of range");
+        self.weights.copy_from_slice(ws);
+    }
+
+    /// Inference only: one gamma cycle without learning.
+    pub fn infer(&self, xs: &[SpikeTime]) -> GammaOutput {
+        assert_eq!(xs.len(), self.p, "input volley length != p");
+        let body = fire_times_folded(
+            xs,
+            &self.weights,
+            self.q,
+            self.theta,
+            self.params.gamma_cycles,
+        );
+        let output = wta_1(&body);
+        let winner = output.iter().position(|t| t.is_spike());
+        GammaOutput {
+            body,
+            output,
+            winner,
+        }
+    }
+
+    /// Inference via the cycle-accurate datapath (slow; used for
+    /// cross-checking the folded model and the gate-level netlists).
+    pub fn infer_cycle_accurate(&self, xs: &[SpikeTime]) -> GammaOutput {
+        assert_eq!(xs.len(), self.p);
+        let body = fire_times_cycle_accurate(
+            xs,
+            &self.weights,
+            self.q,
+            self.theta,
+            self.params.gamma_cycles,
+        );
+        let output = wta_1(&body);
+        let winner = output.iter().position(|t| t.is_spike());
+        GammaOutput {
+            body,
+            output,
+            winner,
+        }
+    }
+
+    /// One full gamma cycle with STDP learning, using explicit uniform
+    /// draws (deterministic — this is the form mirrored by the XLA kernel).
+    /// `u_case`/`u_stab` are row-major p×q in `[0,1)`.
+    pub fn step_with_uniforms(
+        &mut self,
+        xs: &[SpikeTime],
+        u_case: &[f64],
+        u_stab: &[f64],
+    ) -> GammaOutput {
+        let out = self.infer(xs);
+        stdp_update_column(
+            xs,
+            &out.output,
+            &mut self.weights,
+            u_case,
+            u_stab,
+            &self.params,
+        );
+        out
+    }
+
+    /// One full gamma cycle with STDP learning, drawing the uniforms from
+    /// `rng` (convenience wrapper for the online-learning pipelines).
+    pub fn step(&mut self, xs: &[SpikeTime], rng: &mut Rng64) -> GammaOutput {
+        let n = self.p * self.q;
+        let mut u_case = vec![0.0f64; n];
+        let mut u_stab = vec![0.0f64; n];
+        rng.fill_f64(&mut u_case);
+        rng.fill_f64(&mut u_stab);
+        self.step_with_uniforms(xs, &u_case, &u_stab)
+    }
+
+    /// Fraction of weights at the rails {0, w_max} — a convergence measure
+    /// for bimodal stabilization.
+    pub fn bimodality(&self) -> f64 {
+        let w_max = self.params.w_max();
+        let railed = self
+            .weights
+            .iter()
+            .filter(|&&w| w == 0 || w == w_max)
+            .count();
+        railed as f64 / self.weights.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spikes(xs: &[i64]) -> Vec<SpikeTime> {
+        xs.iter()
+            .map(|&x| {
+                if x < 0 {
+                    SpikeTime::NONE
+                } else {
+                    SpikeTime::at(x as u32)
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn infer_folded_matches_cycle_accurate() {
+        let mut rng = Rng64::seed_from_u64(11);
+        for _ in 0..50 {
+            let p = rng.gen_range(2, 32);
+            let q = rng.gen_range(1, 8);
+            let theta = rng.gen_range(1, p * 4) as u32;
+            let col =
+                Column::with_random_weights(p, q, theta, TnnParams::default(), &mut rng);
+            let xs: Vec<SpikeTime> = (0..p)
+                .map(|_| {
+                    if rng.gen_bool(0.25) {
+                        SpikeTime::NONE
+                    } else {
+                        SpikeTime::at(rng.gen_range(0, 8) as u32)
+                    }
+                })
+                .collect();
+            assert_eq!(col.infer(&xs), col.infer_cycle_accurate(&xs));
+        }
+    }
+
+    #[test]
+    fn wta_output_has_at_most_one_spike() {
+        let mut rng = Rng64::seed_from_u64(5);
+        let col = Column::with_random_weights(16, 4, 10, TnnParams::default(), &mut rng);
+        let xs = spikes(&[0, 1, 2, 3, 4, 5, 6, 7, 0, 1, 2, 3, 4, 5, 6, 7]);
+        let out = col.infer(&xs);
+        assert!(out.output.iter().filter(|t| t.is_spike()).count() <= 1);
+    }
+
+    #[test]
+    fn learning_moves_weights_toward_input_pattern() {
+        // Feed one fixed pattern: synapses with input spikes should end up
+        // strong, silent synapses weak — the capture/backoff dynamic.
+        let mut rng = Rng64::seed_from_u64(42);
+        let p = 8;
+        let params = TnnParams::default();
+        let mut col = Column::new(p, 1, 6, params);
+        let xs = spikes(&[0, 0, 0, 0, -1, -1, -1, -1]);
+        for _ in 0..300 {
+            col.step(&xs, &mut rng);
+        }
+        let active_mean: f64 =
+            col.weights()[..4].iter().map(|&w| w as f64).sum::<f64>() / 4.0;
+        let silent_mean: f64 =
+            col.weights()[4..].iter().map(|&w| w as f64).sum::<f64>() / 4.0;
+        assert!(
+            active_mean > 5.0 && silent_mean < 2.0,
+            "capture/backoff should separate weights: active={active_mean} silent={silent_mean}"
+        );
+    }
+
+    #[test]
+    fn learning_converges_bimodal() {
+        let mut rng = Rng64::seed_from_u64(9);
+        let params = TnnParams::default();
+        let mut col = Column::with_default_theta(16, 2, params);
+        // Two alternating patterns → the two neurons should specialise and
+        // the weights should go bimodal.
+        let a = spikes(&[0, 0, 0, 0, 0, 0, 0, 0, -1, -1, -1, -1, -1, -1, -1, -1]);
+        let b = spikes(&[-1, -1, -1, -1, -1, -1, -1, -1, 0, 0, 0, 0, 0, 0, 0, 0]);
+        for i in 0..600 {
+            col.step(if i % 2 == 0 { &a } else { &b }, &mut rng);
+        }
+        assert!(
+            col.bimodality() > 0.7,
+            "stabilized STDP should drive most weights to the rails, got {}",
+            col.bimodality()
+        );
+    }
+
+    #[test]
+    fn deterministic_given_uniform_streams() {
+        let params = TnnParams::default();
+        let mut a = Column::new(6, 3, 4, params.clone());
+        let mut b = a.clone();
+        let xs = spikes(&[0, 2, -1, 4, 1, 3]);
+        let u1: Vec<f64> = (0..18).map(|k| (k as f64) / 18.0).collect();
+        let u2: Vec<f64> = (0..18).map(|k| (k as f64 * 7.0 % 18.0) / 18.0).collect();
+        let oa = a.step_with_uniforms(&xs, &u1, &u2);
+        let ob = b.step_with_uniforms(&xs, &u1, &u2);
+        assert_eq!(oa, ob);
+        assert_eq!(a.weights(), b.weights());
+    }
+
+    #[test]
+    #[should_panic(expected = "input volley length")]
+    fn infer_rejects_wrong_input_size() {
+        let col = Column::new(4, 2, 3, TnnParams::default());
+        col.infer(&[SpikeTime::at(0)]);
+    }
+}

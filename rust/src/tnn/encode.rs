@@ -1,0 +1,162 @@
+//! Spike encoding (the job of the `spike_gen` / `pulse2edge` utility macros).
+//!
+//! Analog inputs in `[0, 1]` are converted to spike times on the unit clock:
+//! stronger inputs spike *earlier* (onset / intensity-to-latency coding, as
+//! used by [1] for time-series samples and [9] for pixels).
+
+use super::spike::SpikeTime;
+
+/// Intensity-to-latency encoding: `v ∈ [0,1]` → spike time in
+/// `0 ..= t_max-1`, earlier for larger `v`. Values ≤ 0 produce no spike
+/// (a zero-intensity input never spikes, matching the RNL encoding of [6]).
+pub fn encode_intensity(v: f64, t_max: u32) -> SpikeTime {
+    if v <= 0.0 {
+        return SpikeTime::NONE;
+    }
+    let v = v.min(1.0);
+    let slots = (t_max - 1) as f64;
+    // v=1 → t=0 (earliest), v→0⁺ → t = t_max-1 (latest).
+    SpikeTime::at(((1.0 - v) * slots).round() as u32)
+}
+
+/// On/off-center pair encoding (used for image inputs in [9]): returns
+/// `(on, off)` spike times for complementary channels. An input near 1
+/// drives the ON channel early and silences OFF; near 0 the reverse.
+///
+/// The OFF channel uses a dead-zone: inputs ≥ 0.5 silence OFF entirely
+/// (and symmetrically for ON), which keeps the total spike count per pixel
+/// at one and preserves WTA discrimination.
+pub fn encode_onoff(v: f64, t_max: u32) -> (SpikeTime, SpikeTime) {
+    let v = v.clamp(0.0, 1.0);
+    let on = if v > 0.5 {
+        encode_intensity((v - 0.5) * 2.0, t_max)
+    } else {
+        SpikeTime::NONE
+    };
+    let off = if v < 0.5 {
+        encode_intensity((0.5 - v) * 2.0, t_max)
+    } else {
+        SpikeTime::NONE
+    };
+    (on, off)
+}
+
+/// Encode a whole time-series sample vector (values normalised to `[0,1]`)
+/// into a spike volley, one synaptic input line per sample point — the
+/// encoding used by the single-column UCR clustering designs of [1].
+pub fn encode_series(values: &[f64], t_max: u32) -> Vec<SpikeTime> {
+    values.iter().map(|&v| encode_intensity(v, t_max)).collect()
+}
+
+/// Default sparseness threshold for time-series volleys (see
+/// [`encode_series_sparse`]).
+pub const SERIES_SPARSE_THRESHOLD: f64 = 0.7;
+
+/// Sparse series encoding: only samples above `thresh` spike (remapped to
+/// the full latency range). TNN columns need *sparse* volleys to form
+/// selective receptive fields — with a dense volley every line is "early
+/// enough" to capture and the WTA degenerates to a monopoly (the
+/// onset-style coding of [1]).
+pub fn encode_series_sparse(values: &[f64], t_max: u32, thresh: f64) -> Vec<SpikeTime> {
+    values
+        .iter()
+        .map(|&v| {
+            if v <= thresh {
+                SpikeTime::NONE
+            } else {
+                encode_intensity((v - thresh) / (1.0 - thresh), t_max)
+            }
+        })
+        .collect()
+}
+
+/// Threshold sizing rule for sparse volleys: scales the dense-volley rule
+/// by the expected spike density.
+pub fn sparse_theta(p: usize, w_max: u8, density: f64) -> u32 {
+    (((p as f64) * (w_max as f64) / 6.0) * density).max(2.0) as u32
+}
+
+/// Encode an image (row-major, `[0,1]`) with on/off-center channels,
+/// producing `2 * pixels` input lines: `[on_0, off_0, on_1, off_1, ...]`.
+pub fn encode_image_onoff(pixels: &[f64], t_max: u32) -> Vec<SpikeTime> {
+    let mut out = Vec::with_capacity(pixels.len() * 2);
+    for &v in pixels {
+        let (on, off) = encode_onoff(v, t_max);
+        out.push(on);
+        out.push(off);
+    }
+    out
+}
+
+/// Min-max normalise a raw series to `[0,1]`. Constant series map to 0.5.
+pub fn normalize(values: &[f64]) -> Vec<f64> {
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &v in values {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    if !lo.is_finite() || !hi.is_finite() || (hi - lo) < 1e-12 {
+        return vec![0.5; values.len()];
+    }
+    values.iter().map(|&v| (v - lo) / (hi - lo)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strong_inputs_spike_early() {
+        assert_eq!(encode_intensity(1.0, 8), SpikeTime::at(0));
+        assert_eq!(encode_intensity(0.0, 8), SpikeTime::NONE);
+        let weak = encode_intensity(0.1, 8);
+        let strong = encode_intensity(0.9, 8);
+        assert!(strong.le(weak) && strong != weak);
+    }
+
+    #[test]
+    fn encode_is_monotone() {
+        let mut last = SpikeTime::at(u32::MAX - 1);
+        for i in 1..=10 {
+            let t = encode_intensity(i as f64 / 10.0, 8);
+            assert!(t.le(last), "encoding must be monotone in intensity");
+            last = t;
+        }
+    }
+
+    #[test]
+    fn onoff_channels_are_complementary() {
+        let (on, off) = encode_onoff(1.0, 8);
+        assert_eq!(on, SpikeTime::at(0));
+        assert_eq!(off, SpikeTime::NONE);
+        let (on, off) = encode_onoff(0.0, 8);
+        assert_eq!(on, SpikeTime::NONE);
+        assert_eq!(off, SpikeTime::at(0));
+        let (on, off) = encode_onoff(0.5, 8);
+        assert_eq!(on, SpikeTime::NONE);
+        assert_eq!(off, SpikeTime::NONE);
+    }
+
+    #[test]
+    fn normalize_handles_constant_series() {
+        assert_eq!(normalize(&[3.0, 3.0, 3.0]), vec![0.5, 0.5, 0.5]);
+        let n = normalize(&[0.0, 5.0, 10.0]);
+        assert_eq!(n, vec![0.0, 0.5, 1.0]);
+    }
+
+    #[test]
+    fn series_encoding_shape() {
+        let v = encode_series(&[1.0, 0.0, 0.5], 8);
+        assert_eq!(v.len(), 3);
+        assert_eq!(v[0], SpikeTime::at(0));
+        assert_eq!(v[1], SpikeTime::NONE);
+    }
+
+    #[test]
+    fn image_onoff_interleaves() {
+        let v = encode_image_onoff(&[1.0, 0.0], 8);
+        assert_eq!(v.len(), 4);
+        assert!(v[0].is_spike() && !v[1].is_spike()); // pixel 0: on
+        assert!(!v[2].is_spike() && v[3].is_spike()); // pixel 1: off
+    }
+}

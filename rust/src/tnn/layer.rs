@@ -1,0 +1,263 @@
+//! A layer of TNN columns with configurable receptive fields.
+//!
+//! Multi-layer TNNs ([9]) tile columns over the input: each column sees a
+//! patch (receptive field) of the previous layer's spike volley and emits a
+//! q-neuron post-WTA volley. The layer output is the concatenation of the
+//! column outputs.
+
+use super::column::Column;
+use super::params::TnnParams;
+use super::spike::SpikeTime;
+use crate::util::Rng64;
+
+/// How a layer's columns map onto its input volley.
+#[derive(Clone, Debug)]
+pub enum ReceptiveField {
+    /// One column sees the full input (the single-column UCR configuration).
+    Full,
+    /// 1-D sliding patches: `size` inputs per column, advancing by `stride`.
+    Patches1d { size: usize, stride: usize },
+    /// 2-D sliding patches over an image of `width × height` with `channels`
+    /// interleaved lines per pixel (e.g. 2 for on/off), patch `size×size`,
+    /// advancing by `stride` in both axes.
+    Patches2d {
+        width: usize,
+        height: usize,
+        channels: usize,
+        size: usize,
+        stride: usize,
+    },
+}
+
+impl ReceptiveField {
+    /// The index sets (into the input volley) seen by each column.
+    pub fn patches(&self, input_len: usize) -> Vec<Vec<usize>> {
+        match *self {
+            ReceptiveField::Full => vec![(0..input_len).collect()],
+            ReceptiveField::Patches1d { size, stride } => {
+                assert!(size > 0 && stride > 0 && size <= input_len);
+                let mut out = Vec::new();
+                let mut start = 0;
+                while start + size <= input_len {
+                    out.push((start..start + size).collect());
+                    start += stride;
+                }
+                out
+            }
+            ReceptiveField::Patches2d {
+                width,
+                height,
+                channels,
+                size,
+                stride,
+            } => {
+                assert_eq!(input_len, width * height * channels, "input/geometry mismatch");
+                assert!(size > 0 && stride > 0 && size <= width && size <= height);
+                let mut out = Vec::new();
+                let mut y = 0;
+                while y + size <= height {
+                    let mut x = 0;
+                    while x + size <= width {
+                        let mut idx =
+                            Vec::with_capacity(size * size * channels);
+                        for dy in 0..size {
+                            for dx in 0..size {
+                                let pix = (y + dy) * width + (x + dx);
+                                for c in 0..channels {
+                                    idx.push(pix * channels + c);
+                                }
+                            }
+                        }
+                        out.push(idx);
+                        x += stride;
+                    }
+                    y += stride;
+                }
+                out
+            }
+        }
+    }
+}
+
+/// A layer: a set of identical-geometry columns, one per receptive-field
+/// patch, with independent weights.
+#[derive(Clone, Debug)]
+pub struct ColumnLayer {
+    rf: ReceptiveField,
+    input_len: usize,
+    patches: Vec<Vec<usize>>,
+    columns: Vec<Column>,
+}
+
+impl ColumnLayer {
+    /// Build a layer for inputs of `input_len` lines; each column gets `q`
+    /// neurons and θ from the default sizing rule (unless `theta` given).
+    pub fn new(
+        input_len: usize,
+        rf: ReceptiveField,
+        q: usize,
+        theta: Option<u32>,
+        params: TnnParams,
+    ) -> Self {
+        let patches = rf.patches(input_len);
+        assert!(!patches.is_empty(), "receptive field produced no patches");
+        let columns = patches
+            .iter()
+            .map(|patch| {
+                let p = patch.len();
+                let th = theta.unwrap_or_else(|| params.default_theta(p));
+                Column::new(p, q, th, params.clone())
+            })
+            .collect();
+        ColumnLayer {
+            rf,
+            input_len,
+            patches,
+            columns,
+        }
+    }
+
+    /// Randomize all column weights.
+    pub fn randomize(&mut self, rng: &mut Rng64) {
+        for col in &mut self.columns {
+            let w_max = col.params().w_max();
+            for w in col.weights_mut() {
+                *w = rng.gen_u8_inclusive(0, w_max);
+            }
+        }
+    }
+
+    pub fn receptive_field(&self) -> &ReceptiveField {
+        &self.rf
+    }
+    pub fn columns(&self) -> &[Column] {
+        &self.columns
+    }
+    pub fn columns_mut(&mut self) -> &mut [Column] {
+        &mut self.columns
+    }
+    pub fn input_len(&self) -> usize {
+        self.input_len
+    }
+    /// Output volley length (`#columns × q`).
+    pub fn output_len(&self) -> usize {
+        self.columns.iter().map(|c| c.q()).sum()
+    }
+    /// Total synapses in the layer.
+    pub fn synapse_count(&self) -> usize {
+        self.columns.iter().map(|c| c.synapse_count()).sum()
+    }
+
+    fn gather(&self, xs: &[SpikeTime], patch: &[usize]) -> Vec<SpikeTime> {
+        patch.iter().map(|&i| xs[i]).collect()
+    }
+
+    /// Inference through the layer.
+    pub fn infer(&self, xs: &[SpikeTime]) -> Vec<SpikeTime> {
+        assert_eq!(xs.len(), self.input_len, "layer input length mismatch");
+        let mut out = Vec::with_capacity(self.output_len());
+        for (col, patch) in self.columns.iter().zip(&self.patches) {
+            let sub = self.gather(xs, patch);
+            out.extend(col.infer(&sub).output);
+        }
+        out
+    }
+
+    /// One gamma cycle with STDP learning in every column.
+    pub fn step(&mut self, xs: &[SpikeTime], rng: &mut Rng64) -> Vec<SpikeTime> {
+        assert_eq!(xs.len(), self.input_len, "layer input length mismatch");
+        let mut out = Vec::with_capacity(self.output_len());
+        let patches = self.patches.clone();
+        for (col, patch) in self.columns.iter_mut().zip(&patches) {
+            let sub: Vec<SpikeTime> = patch.iter().map(|&i| xs[i]).collect();
+            out.extend(col.step(&sub, rng).output);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_rf_is_one_column() {
+        let layer = ColumnLayer::new(10, ReceptiveField::Full, 3, None, TnnParams::default());
+        assert_eq!(layer.columns().len(), 1);
+        assert_eq!(layer.output_len(), 3);
+        assert_eq!(layer.synapse_count(), 30);
+    }
+
+    #[test]
+    fn patches1d_geometry() {
+        let rf = ReceptiveField::Patches1d { size: 4, stride: 2 };
+        let patches = rf.patches(10);
+        assert_eq!(patches.len(), 4); // starts at 0,2,4,6
+        assert_eq!(patches[0], vec![0, 1, 2, 3]);
+        assert_eq!(patches[3], vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn patches2d_geometry_with_channels() {
+        let rf = ReceptiveField::Patches2d {
+            width: 4,
+            height: 4,
+            channels: 2,
+            size: 2,
+            stride: 2,
+        };
+        let patches = rf.patches(32);
+        assert_eq!(patches.len(), 4);
+        // top-left patch covers pixels 0,1,4,5 → lines 0,1,2,3,8,9,10,11
+        assert_eq!(patches[0], vec![0, 1, 2, 3, 8, 9, 10, 11]);
+        assert!(patches.iter().all(|p| p.len() == 8));
+    }
+
+    #[test]
+    fn infer_output_is_concatenation() {
+        let rf = ReceptiveField::Patches1d { size: 2, stride: 2 };
+        let layer = ColumnLayer::new(4, rf, 2, Some(1), TnnParams::default());
+        let xs = vec![
+            SpikeTime::at(0),
+            SpikeTime::at(0),
+            SpikeTime::NONE,
+            SpikeTime::NONE,
+        ];
+        let out = layer.infer(&xs);
+        assert_eq!(out.len(), 4);
+        // First column saw spikes → someone wins; second column is silent.
+        assert!(out[..2].iter().any(|t| t.is_spike()));
+        assert!(out[2..].iter().all(|t| !t.is_spike()));
+    }
+
+    #[test]
+    fn step_learns_per_column() {
+        let mut rng = Rng64::seed_from_u64(1);
+        let rf = ReceptiveField::Patches1d { size: 4, stride: 4 };
+        let mut layer = ColumnLayer::new(8, rf, 1, Some(3), TnnParams::default());
+        let xs = vec![
+            SpikeTime::at(0),
+            SpikeTime::at(0),
+            SpikeTime::at(0),
+            SpikeTime::at(0),
+            SpikeTime::NONE,
+            SpikeTime::NONE,
+            SpikeTime::NONE,
+            SpikeTime::NONE,
+        ];
+        let w_before: Vec<u8> = layer.columns()[1].weights().to_vec();
+        for _ in 0..100 {
+            layer.step(&xs, &mut rng);
+        }
+        // Column 0 (active patch) strengthens; column 1 never saw input or
+        // output spikes → untouched.
+        let mean0: f64 = layer.columns()[0]
+            .weights()
+            .iter()
+            .map(|&w| w as f64)
+            .sum::<f64>()
+            / 4.0;
+        assert!(mean0 > 5.0, "active column should capture, mean={mean0}");
+        assert_eq!(layer.columns()[1].weights(), &w_before[..]);
+    }
+}

@@ -1,0 +1,48 @@
+//! Cycle-level golden model of the TNN column microarchitecture.
+//!
+//! This module is the bit-accurate functional reference for everything else
+//! in the crate: the Pallas/JAX kernels (python/compile) are tested against a
+//! pure-jnp oracle that mirrors these semantics, the gate-level macro
+//! netlists ([`crate::gates::macros9`]) are simulated and cross-checked
+//! against this model, and the coordinator falls back to it when XLA
+//! artifacts are unavailable.
+//!
+//! The microarchitecture follows Nair, Shen, Smith — *"A Microarchitecture
+//! Implementation Framework for Online Learning with Temporal Neural
+//! Networks"* (ISVLSI 2021), which is reference [6] of the TNN7 paper and the
+//! design whose modules the nine macros optimize:
+//!
+//! * time is discretized by a fine **unit clock** (`aclk`) and a coarse
+//!   **gamma clock** (`gclk`); one gamma cycle processes one input instance;
+//! * values are encoded as **spike times** on the unit clock (earlier spike =
+//!   stronger value);
+//! * synapses hold 3-bit weights and produce **ramp-no-leak (RNL)** responses:
+//!   a unary pulse of `w` consecutive unit cycles starting at the input spike
+//!   time (`syn_readout` + `syn_weight_update` macros);
+//! * neuron bodies sum synapse responses through an **adder tree** and fire
+//!   when the integrated potential crosses a threshold θ;
+//! * **1-WTA lateral inhibition** (`less_equal` macro) lets only the earliest
+//!   output spike through (ties broken by neuron index);
+//! * **STDP** (`stdp_case_gen`, `incdec`, `stabilize_func` macros) performs
+//!   local, probabilistic, bimodally-stabilized weight updates every gamma
+//!   cycle using the input spikes and the post-WTA output spikes.
+
+pub mod column;
+pub mod encode;
+pub mod layer;
+pub mod network;
+pub mod neuron;
+pub mod params;
+pub mod spike;
+pub mod stdp;
+pub mod synapse;
+pub mod wta;
+
+pub use column::Column;
+pub use encode::{encode_intensity, encode_onoff, encode_series};
+pub use layer::{ColumnLayer, ReceptiveField};
+pub use network::{TnnNetwork, VoteClassifier};
+pub use params::TnnParams;
+pub use spike::SpikeTime;
+pub use stdp::{stdp_case, stdp_update, StdpCase};
+pub use wta::{less_equal, wta_1};

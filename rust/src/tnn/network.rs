@@ -1,0 +1,264 @@
+//! Multi-layer TNN networks and the vote-based readout used to score
+//! unsupervised STDP features on labelled tasks (MNIST in the paper).
+
+use super::layer::ColumnLayer;
+use super::spike::SpikeTime;
+use crate::util::Rng64;
+
+/// A feed-forward stack of column layers.
+#[derive(Clone, Debug)]
+pub struct TnnNetwork {
+    layers: Vec<ColumnLayer>,
+}
+
+impl TnnNetwork {
+    pub fn new(layers: Vec<ColumnLayer>) -> Self {
+        assert!(!layers.is_empty());
+        for w in layers.windows(2) {
+            assert_eq!(
+                w[0].output_len(),
+                w[1].input_len(),
+                "layer output/input lengths must chain"
+            );
+        }
+        TnnNetwork { layers }
+    }
+
+    pub fn layers(&self) -> &[ColumnLayer] {
+        &self.layers
+    }
+    pub fn layers_mut(&mut self) -> &mut [ColumnLayer] {
+        &mut self.layers
+    }
+    pub fn input_len(&self) -> usize {
+        self.layers[0].input_len()
+    }
+    pub fn output_len(&self) -> usize {
+        self.layers.last().unwrap().output_len()
+    }
+    /// Total synapse count — the scaling variable of the paper's Table III.
+    pub fn synapse_count(&self) -> usize {
+        self.layers.iter().map(|l| l.synapse_count()).sum()
+    }
+
+    /// Randomize all weights.
+    pub fn randomize(&mut self, rng: &mut Rng64) {
+        for l in &mut self.layers {
+            l.randomize(rng);
+        }
+    }
+
+    /// Pure inference through all layers.
+    pub fn infer(&self, xs: &[SpikeTime]) -> Vec<SpikeTime> {
+        let mut v = xs.to_vec();
+        for l in &self.layers {
+            v = l.infer(&v);
+        }
+        v
+    }
+
+    /// One gamma cycle with STDP in every layer (all layers learn
+    /// simultaneously from their local pre/post spikes, as in the online
+    /// operation of [9]).
+    pub fn step(&mut self, xs: &[SpikeTime], rng: &mut Rng64) -> Vec<SpikeTime> {
+        let mut v = xs.to_vec();
+        for l in &mut self.layers {
+            v = l.step(&v, rng);
+        }
+        v
+    }
+
+    /// Train only layer `k` (layer-wise greedy training): layers below run
+    /// inference, layer `k` learns, layers above are skipped.
+    pub fn step_layerwise(
+        &mut self,
+        xs: &[SpikeTime],
+        k: usize,
+        rng: &mut Rng64,
+    ) -> Vec<SpikeTime> {
+        let mut v = xs.to_vec();
+        for (i, l) in self.layers.iter_mut().enumerate() {
+            if i < k {
+                v = l.infer(&v);
+            } else if i == k {
+                v = l.step(&v, rng);
+                break;
+            }
+        }
+        v
+    }
+}
+
+/// Vote-based readout: maps each output line (neuron) to the class it most
+/// often wins for during a labelled calibration pass, then classifies by the
+/// earliest-spiking line's class. This is the standard evaluation protocol
+/// for unsupervised-STDP feature stacks.
+#[derive(Clone, Debug)]
+pub struct VoteClassifier {
+    /// votes[line][class] — accumulated during calibration.
+    votes: Vec<Vec<u64>>,
+    num_classes: usize,
+}
+
+impl VoteClassifier {
+    pub fn new(output_len: usize, num_classes: usize) -> Self {
+        VoteClassifier {
+            votes: vec![vec![0; num_classes]; output_len],
+            num_classes,
+        }
+    }
+
+    /// Record one calibration observation: the network output volley for a
+    /// sample of class `label`. Every spiking line votes (weighted by
+    /// earliness rank: the earliest line gets the largest weight).
+    pub fn observe(&mut self, output: &[SpikeTime], label: usize) {
+        assert!(label < self.num_classes);
+        assert_eq!(output.len(), self.votes.len());
+        for (line, &t) in output.iter().enumerate() {
+            if t.is_spike() {
+                self.votes[line][label] += 1;
+            }
+        }
+    }
+
+    /// Class assignment of each output line (argmax of votes; None if a line
+    /// never spiked during calibration).
+    pub fn line_classes(&self) -> Vec<Option<usize>> {
+        self.votes
+            .iter()
+            .map(|v| {
+                let (best, &n) = v
+                    .iter()
+                    .enumerate()
+                    .max_by_key(|(_, &n)| n)
+                    .unwrap();
+                (n > 0).then_some(best)
+            })
+            .collect()
+    }
+
+    /// Classify a volley: earliest spiking line with a class assignment
+    /// wins; ties resolved by accumulated vote count, then index.
+    pub fn classify(&self, output: &[SpikeTime]) -> Option<usize> {
+        assert_eq!(output.len(), self.votes.len());
+        let classes = self.line_classes();
+        let mut best: Option<(u32, std::cmp::Reverse<u64>, usize, usize)> = None;
+        for (line, &t) in output.iter().enumerate() {
+            if let (true, Some(c)) = (t.is_spike(), classes[line]) {
+                let strength = self.votes[line][c];
+                let key = (t.0, std::cmp::Reverse(strength), line, c);
+                if best.map_or(true, |b| (key.0, key.1, key.2) < (b.0, b.1, b.2)) {
+                    best = Some(key);
+                }
+            }
+        }
+        best.map(|(_, _, _, c)| c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::layer::ReceptiveField;
+    use super::super::params::TnnParams;
+    use super::*;
+    use crate::util::Rng64;
+
+    fn spikes(xs: &[i64]) -> Vec<SpikeTime> {
+        xs.iter()
+            .map(|&x| {
+                if x < 0 {
+                    SpikeTime::NONE
+                } else {
+                    SpikeTime::at(x as u32)
+                }
+            })
+            .collect()
+    }
+
+    fn two_layer() -> TnnNetwork {
+        let p = TnnParams::default();
+        let l1 = ColumnLayer::new(
+            8,
+            ReceptiveField::Patches1d { size: 4, stride: 4 },
+            2,
+            Some(3),
+            p.clone(),
+        );
+        let l2 = ColumnLayer::new(l1.output_len(), ReceptiveField::Full, 2, Some(1), p);
+        TnnNetwork::new(vec![l1, l2])
+    }
+
+    #[test]
+    fn network_chains_shapes() {
+        let net = two_layer();
+        assert_eq!(net.input_len(), 8);
+        assert_eq!(net.output_len(), 2);
+        assert_eq!(net.synapse_count(), 2 * 4 * 2 + 4 * 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "chain")]
+    fn mismatched_layers_rejected() {
+        let p = TnnParams::default();
+        let l1 = ColumnLayer::new(8, ReceptiveField::Full, 2, None, p.clone());
+        let l2 = ColumnLayer::new(5, ReceptiveField::Full, 2, None, p);
+        TnnNetwork::new(vec![l1, l2]);
+    }
+
+    #[test]
+    fn infer_propagates() {
+        let net = two_layer();
+        let out = net.infer(&spikes(&[0, 0, 0, 0, 0, 0, 0, 0]));
+        assert_eq!(out.len(), 2);
+    }
+
+    #[test]
+    fn step_learns_and_infer_is_pure() {
+        let mut rng = Rng64::seed_from_u64(2);
+        let mut net = two_layer();
+        let before: usize = net
+            .layers()
+            .iter()
+            .flat_map(|l| l.columns())
+            .flat_map(|c| c.weights())
+            .map(|&w| w as usize)
+            .sum();
+        let xs = spikes(&[0, 0, 0, 0, -1, -1, -1, -1]);
+        let _ = net.infer(&xs);
+        let after_infer: usize = net
+            .layers()
+            .iter()
+            .flat_map(|l| l.columns())
+            .flat_map(|c| c.weights())
+            .map(|&w| w as usize)
+            .sum();
+        assert_eq!(before, after_infer, "infer must not change weights");
+        for _ in 0..50 {
+            net.step(&xs, &mut rng);
+        }
+        let after_step: usize = net
+            .layers()
+            .iter()
+            .flat_map(|l| l.columns())
+            .flat_map(|c| c.weights())
+            .map(|&w| w as usize)
+            .sum();
+        assert_ne!(before, after_step, "step must learn");
+    }
+
+    #[test]
+    fn vote_classifier_learns_line_classes() {
+        let mut vc = VoteClassifier::new(2, 2);
+        // line 0 spikes for class 0, line 1 for class 1.
+        for _ in 0..10 {
+            vc.observe(&spikes(&[1, -1]), 0);
+            vc.observe(&spikes(&[-1, 1]), 1);
+        }
+        assert_eq!(vc.line_classes(), vec![Some(0), Some(1)]);
+        assert_eq!(vc.classify(&spikes(&[2, -1])), Some(0));
+        assert_eq!(vc.classify(&spikes(&[-1, 2])), Some(1));
+        assert_eq!(vc.classify(&spikes(&[-1, -1])), None);
+        // earliest line wins when both spike
+        assert_eq!(vc.classify(&spikes(&[3, 1])), Some(1));
+    }
+}

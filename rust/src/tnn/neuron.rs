@@ -1,0 +1,243 @@
+//! Neuron body: adder-tree summation of synaptic responses and threshold
+//! fire-time detection.
+//!
+//! The hardware sums the `p` instantaneous synapse readouts through an adder
+//! tree every unit cycle and integrates the sum into a body potential; the
+//! neuron emits its output spike (edge) on the first cycle the potential
+//! reaches θ. The folded form computes the same fire time directly from the
+//! spike times and weights.
+
+use super::spike::SpikeTime;
+use super::synapse::{rnl_active, rnl_cumulative};
+
+/// Folded fire-time computation for one neuron.
+///
+/// `xs` are the input spike times, `ws` the corresponding weights (same
+/// length), `theta` the threshold, `gamma_cycles` the number of unit cycles
+/// scanned. Returns the first cycle `t` at which
+/// `Σ_i rnl_cumulative(x_i, w_i, t) ≥ θ`, or `NONE`.
+pub fn fire_time(xs: &[SpikeTime], ws: &[u8], theta: u32, gamma_cycles: u32) -> SpikeTime {
+    debug_assert_eq!(xs.len(), ws.len());
+    // The potential is monotone non-decreasing in t, so binary search would
+    // work; the linear scan is kept for clarity (the hot path lives in the
+    // XLA kernel / `fire_times_folded` batched form, not here).
+    for t in 0..gamma_cycles {
+        let mut pot: u64 = 0;
+        for (&x, &w) in xs.iter().zip(ws) {
+            pot += rnl_cumulative(x, w, t) as u64;
+        }
+        if pot >= theta as u64 {
+            return SpikeTime::at(t);
+        }
+    }
+    SpikeTime::NONE
+}
+
+/// Batched folded fire-times for a full column: `ws` is row-major `p × q`
+/// (synapse-major: `ws[i*q + j]` is the weight from input `i` to neuron `j`).
+///
+/// This is the golden reference the XLA column kernel is compared against.
+/// It evaluates the per-cycle instantaneous sums incrementally (O(p·q +
+/// gamma·q) instead of O(gamma·p·q)) by bucketing ramp start/stop events.
+pub fn fire_times_folded(
+    xs: &[SpikeTime],
+    ws: &[u8],
+    q: usize,
+    theta: u32,
+    gamma_cycles: u32,
+) -> Vec<SpikeTime> {
+    let p = xs.len();
+    debug_assert_eq!(ws.len(), p * q);
+    // delta[t][j] = change in instantaneous response sum of neuron j at cycle
+    // t: +1 when a ramp starts (t = x_i, w > 0), −1 when it ends (t = x_i+w).
+    let g = gamma_cycles as usize;
+    let mut delta = vec![0i32; (g + 1) * q];
+    for (i, &x) in xs.iter().enumerate() {
+        if !x.is_spike() {
+            continue;
+        }
+        let start = x.0 as usize;
+        if start >= g {
+            continue;
+        }
+        let row = &ws[i * q..(i + 1) * q];
+        for (j, &w) in row.iter().enumerate() {
+            if w == 0 {
+                continue;
+            }
+            delta[start * q + j] += 1;
+            let stop = (start + w as usize).min(g);
+            delta[stop * q + j] -= 1;
+        }
+    }
+    let mut out = vec![SpikeTime::NONE; q];
+    let mut rate = vec![0i64; q]; // instantaneous response sum
+    let mut pot = vec![0i64; q]; // integrated body potential
+    let mut remaining = q;
+    for t in 0..g {
+        for j in 0..q {
+            rate[j] += delta[t * q + j] as i64;
+            pot[j] += rate[j];
+            if pot[j] >= theta as i64 && !out[j].is_spike() {
+                out[j] = SpikeTime::at(t as u32);
+                remaining -= 1;
+            }
+        }
+        if remaining == 0 {
+            break;
+        }
+    }
+    out
+}
+
+/// Cycle-accurate neuron body state (integrator + threshold comparator),
+/// used by the cycle-level column simulation and gate-level cross-checks.
+#[derive(Clone, Debug)]
+pub struct NeuronBody {
+    potential: u64,
+    theta: u32,
+    fired_at: SpikeTime,
+}
+
+impl NeuronBody {
+    pub fn new(theta: u32) -> Self {
+        NeuronBody {
+            potential: 0,
+            theta,
+            fired_at: SpikeTime::NONE,
+        }
+    }
+
+    /// Gamma-boundary reset.
+    pub fn gamma_reset(&mut self) {
+        self.potential = 0;
+        self.fired_at = SpikeTime::NONE;
+    }
+
+    /// Integrate this cycle's adder-tree output; returns true on the cycle
+    /// the neuron fires (edge semantics — true exactly once per gamma).
+    pub fn tick(&mut self, response_sum: u32, t: u32) -> bool {
+        self.potential += response_sum as u64;
+        if !self.fired_at.is_spike() && self.potential >= self.theta as u64 {
+            self.fired_at = SpikeTime::at(t);
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn fired_at(&self) -> SpikeTime {
+        self.fired_at
+    }
+}
+
+/// Cycle-accurate column-body simulation (all q neurons over one gamma
+/// cycle), built from [`rnl_active`] and [`NeuronBody`]. Used in tests to
+/// validate the folded form.
+pub fn fire_times_cycle_accurate(
+    xs: &[SpikeTime],
+    ws: &[u8],
+    q: usize,
+    theta: u32,
+    gamma_cycles: u32,
+) -> Vec<SpikeTime> {
+    let p = xs.len();
+    let mut bodies: Vec<NeuronBody> = (0..q).map(|_| NeuronBody::new(theta)).collect();
+    for t in 0..gamma_cycles {
+        for (j, body) in bodies.iter_mut().enumerate() {
+            let mut sum = 0u32;
+            for i in 0..p {
+                sum += rnl_active(xs[i], ws[i * q + j], t) as u32;
+            }
+            body.tick(sum, t);
+        }
+    }
+    bodies.iter().map(|b| b.fired_at()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn st(xs: &[i64]) -> Vec<SpikeTime> {
+        xs.iter()
+            .map(|&x| {
+                if x < 0 {
+                    SpikeTime::NONE
+                } else {
+                    SpikeTime::at(x as u32)
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn single_synapse_fire_time() {
+        // One synapse, weight 3, spike at x=2. The readout pulse is high at
+        // cycles 2,3,4; the body potential (integrated pulse count) is
+        // 1,2,3 at t=2,3,4 and saturates at w=3. θ=3 → fires at t=4.
+        let xs = st(&[2]);
+        assert_eq!(fire_time(&xs, &[3], 3, 16), SpikeTime::at(4));
+        // θ=4 exceeds the total response Σw = 3 → never fires.
+        assert_eq!(fire_time(&xs, &[3], 4, 16), SpikeTime::NONE);
+    }
+
+    #[test]
+    fn folded_equals_cycle_accurate_randomized() {
+        use crate::util::Rng64;
+        let mut rng = Rng64::seed_from_u64(7);
+        for trial in 0..200 {
+            let p = rng.gen_range(1, 24);
+            let q = rng.gen_range(1, 6);
+            let xs: Vec<SpikeTime> = (0..p)
+                .map(|_| {
+                    if rng.gen_bool(0.2) {
+                        SpikeTime::NONE
+                    } else {
+                        SpikeTime::at(rng.gen_range(0, 8) as u32)
+                    }
+                })
+                .collect();
+            let ws: Vec<u8> = (0..p * q).map(|_| rng.gen_u8_inclusive(0, 7)).collect();
+            let theta = rng.gen_range(1, p * 2 + 1) as u32;
+            let folded = fire_times_folded(&xs, &ws, q, theta, 16);
+            let cycle = fire_times_cycle_accurate(&xs, &ws, q, theta, 16);
+            assert_eq!(folded, cycle, "trial {trial} p={p} q={q} theta={theta}");
+        }
+    }
+
+    #[test]
+    fn earlier_spikes_and_bigger_weights_fire_earlier() {
+        let ws = [7u8, 7, 7, 7];
+        let early = fire_time(&st(&[0, 0, 0, 0]), &ws, 8, 16);
+        let late = fire_time(&st(&[4, 4, 4, 4]), &ws, 8, 16);
+        assert!(early.le(late) && early != late);
+
+        // θ=12 is reachable only after ramps saturate: with w=7 the potential
+        // is 4·min(t, 7) → crosses at t=3; with w=2 it caps at 8 → never.
+        let strong = fire_time(&st(&[1, 1, 1, 1]), &[7, 7, 7, 7], 12, 16);
+        let weak = fire_time(&st(&[1, 1, 1, 1]), &[2, 2, 2, 2], 12, 16);
+        assert_eq!(strong, SpikeTime::at(3));
+        assert_eq!(weak, SpikeTime::NONE);
+        assert!(strong.le(weak) && strong != weak);
+    }
+
+    #[test]
+    fn unreachable_theta_never_fires() {
+        let xs = st(&[0, 1, 2]);
+        let ws = [1u8, 1, 1];
+        // Potential saturates at Σw = 3 < θ = 4.
+        assert_eq!(fire_time(&xs, &ws, 4, 64), SpikeTime::NONE);
+    }
+
+    #[test]
+    fn neuron_body_fires_once() {
+        let mut b = NeuronBody::new(3);
+        assert!(!b.tick(2, 0));
+        assert!(b.tick(2, 1)); // 4 ≥ 3 → fires at t=1
+        assert!(!b.tick(5, 2)); // already fired: edge only once
+        assert_eq!(b.fired_at(), SpikeTime::at(1));
+        b.gamma_reset();
+        assert_eq!(b.fired_at(), SpikeTime::NONE);
+    }
+}

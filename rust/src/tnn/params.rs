@@ -1,0 +1,128 @@
+//! TNN hyper-parameters shared across the golden model, the XLA kernels and
+//! the hardware models.
+
+/// Parameters of a TNN column/network, mirroring the microarchitecture
+/// parameters of [6] (ISVLSI'21) that the TNN7 macros implement in silicon.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TnnParams {
+    /// Synaptic weight precision in bits (the paper uses 3-bit weights; the
+    /// `spike_gen` macro's 8-cycle pulse and the `stabilize_func` 8:1 mux are
+    /// both direct consequences of this choice).
+    pub weight_bits: u8,
+    /// Unit (`aclk`) cycles per gamma (`gclk`) cycle. Must be at least
+    /// `2 * t_max()` so a latest-possible spike's full RNL ramp fits.
+    pub gamma_cycles: u32,
+    /// STDP case probabilities (Bernoulli parameters of the BRV streams fed
+    /// to the `incdec` macro). Names follow [6]: capture / minus / search /
+    /// backoff.
+    pub mu_capture: f64,
+    pub mu_minus: f64,
+    pub mu_search: f64,
+    pub mu_backoff: f64,
+    /// Whether the bimodal stabilization function (`stabilize_func` macro) is
+    /// applied on top of the case probabilities.
+    pub stabilize: bool,
+}
+
+impl Default for TnnParams {
+    fn default() -> Self {
+        // Defaults follow the operating point of [6]/[1]: 3-bit weights,
+        // capture is near-certain, search slowly recruits silent synapses,
+        // backoff decays synapses that fire without input support.
+        TnnParams {
+            weight_bits: 3,
+            gamma_cycles: 16,
+            mu_capture: 1.0,
+            mu_minus: 0.5,
+            mu_search: 1.0 / 16.0,
+            mu_backoff: 0.5,
+            stabilize: true,
+        }
+    }
+}
+
+impl TnnParams {
+    /// Maximum weight value (`2^bits − 1`; 7 for 3-bit weights).
+    #[inline]
+    pub fn w_max(&self) -> u8 {
+        (1u16 << self.weight_bits).saturating_sub(1) as u8
+    }
+
+    /// Number of valid input spike time slots (`2^bits`; spikes arrive at
+    /// unit cycles `0 .. t_max-1`).
+    #[inline]
+    pub fn t_max(&self) -> u32 {
+        1u32 << self.weight_bits
+    }
+
+    /// Default neuron firing threshold for a column with `p` synapses per
+    /// neuron, following the θ ∝ p·w_max sizing rule of [1]. Clamped ≥ 1.
+    pub fn default_theta(&self, p: usize) -> u32 {
+        ((p as u32 * self.w_max() as u32) / 4).max(1)
+    }
+
+    /// Validate internal consistency.
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(
+            (1..=6).contains(&self.weight_bits),
+            "weight_bits must be in 1..=6, got {}",
+            self.weight_bits
+        );
+        anyhow::ensure!(
+            self.gamma_cycles >= 2 * self.t_max(),
+            "gamma_cycles ({}) must be >= 2*t_max ({}) so the latest ramp completes",
+            self.gamma_cycles,
+            2 * self.t_max()
+        );
+        for (name, mu) in [
+            ("mu_capture", self.mu_capture),
+            ("mu_minus", self.mu_minus),
+            ("mu_search", self.mu_search),
+            ("mu_backoff", self.mu_backoff),
+        ] {
+            anyhow::ensure!((0.0..=1.0).contains(&mu), "{name} out of [0,1]: {mu}");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_paper_operating_point() {
+        let p = TnnParams::default();
+        assert_eq!(p.weight_bits, 3);
+        assert_eq!(p.w_max(), 7);
+        assert_eq!(p.t_max(), 8);
+        assert_eq!(p.gamma_cycles, 16);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn theta_scales_with_p() {
+        let p = TnnParams::default();
+        assert_eq!(p.default_theta(4), 7);
+        assert_eq!(p.default_theta(100), 175);
+        assert_eq!(p.default_theta(0), 1); // clamped
+    }
+
+    #[test]
+    fn validate_rejects_short_gamma() {
+        let p = TnnParams {
+            gamma_cycles: 8,
+            ..TnnParams::default()
+        };
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_mu() {
+        let p = TnnParams {
+            mu_capture: 1.5,
+            ..TnnParams::default()
+        };
+        assert!(p.validate().is_err());
+    }
+}

@@ -1,0 +1,174 @@
+//! Spike-time representation.
+//!
+//! A spike is an edge transition 0→1 on the unit clock; its *time* (unit
+//! cycle index within the current gamma cycle) encodes the value — earlier is
+//! stronger. Absence of a spike is represented by the `NONE` sentinel, which
+//! compares later than every real spike time (temporal ∞).
+
+/// A spike time on the unit clock, or `NONE` for "no spike this gamma cycle".
+///
+/// Internally `u32::MAX` is the no-spike sentinel so that `min`/ordering have
+/// the natural temporal meaning (`NONE` loses every race).
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SpikeTime(pub u32);
+
+impl SpikeTime {
+    /// No spike this gamma cycle (temporal infinity).
+    pub const NONE: SpikeTime = SpikeTime(u32::MAX);
+
+    /// A spike at unit cycle `t`.
+    #[inline]
+    pub fn at(t: u32) -> Self {
+        debug_assert!(t != u32::MAX, "u32::MAX is reserved for NONE");
+        SpikeTime(t)
+    }
+
+    /// True if a spike is present.
+    #[inline]
+    pub fn is_spike(self) -> bool {
+        self.0 != u32::MAX
+    }
+
+    /// The `less_equal` temporal predicate from space-time algebra: true iff
+    /// `self` arrives no later than `other`. `NONE ≤ NONE` is true (both
+    /// absent), a real spike is always ≤ `NONE`.
+    #[inline]
+    pub fn le(self, other: SpikeTime) -> bool {
+        self.0 <= other.0
+    }
+
+    /// Earliest of two spike times (`min` in space-time algebra).
+    #[inline]
+    pub fn earliest(self, other: SpikeTime) -> SpikeTime {
+        if self.0 <= other.0 {
+            self
+        } else {
+            other
+        }
+    }
+
+    /// Map to the f32 wire format used by the XLA kernels: spike time as a
+    /// float, `NONE` as `INF_F32`.
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        if self.is_spike() {
+            self.0 as f32
+        } else {
+            Self::INF_F32
+        }
+    }
+
+    /// Sentinel used on the f32 wire format (large, exactly representable,
+    /// and far beyond any real unit-cycle count).
+    pub const INF_F32: f32 = 1.0e9;
+
+    /// Parse from the f32 wire format (anything ≥ half the sentinel is NONE).
+    #[inline]
+    pub fn from_f32(v: f32) -> Self {
+        if v >= Self::INF_F32 * 0.5 {
+            SpikeTime::NONE
+        } else {
+            SpikeTime(v.round() as u32)
+        }
+    }
+}
+
+impl std::fmt::Debug for SpikeTime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.is_spike() {
+            write!(f, "t{}", self.0)
+        } else {
+            write!(f, "t∞")
+        }
+    }
+}
+
+impl std::fmt::Display for SpikeTime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:?}", self)
+    }
+}
+
+impl From<Option<u32>> for SpikeTime {
+    fn from(o: Option<u32>) -> Self {
+        match o {
+            Some(t) => SpikeTime::at(t),
+            None => SpikeTime::NONE,
+        }
+    }
+}
+
+impl From<SpikeTime> for Option<u32> {
+    fn from(s: SpikeTime) -> Self {
+        if s.is_spike() {
+            Some(s.0)
+        } else {
+            None
+        }
+    }
+}
+
+/// Earliest spike in a slice together with its index (first-index tie-break).
+/// Returns `(usize::MAX, NONE)` for an empty slice or all-absent input.
+pub fn earliest_spike(times: &[SpikeTime]) -> (usize, SpikeTime) {
+    let mut best = SpikeTime::NONE;
+    let mut idx = usize::MAX;
+    for (i, &t) in times.iter().enumerate() {
+        if t.is_spike() && t.0 < best.0 {
+            best = t;
+            idx = i;
+        }
+    }
+    (idx, best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_loses_every_race() {
+        assert!(SpikeTime::at(1000).le(SpikeTime::NONE));
+        assert!(!SpikeTime::NONE.le(SpikeTime::at(0)));
+        assert!(SpikeTime::NONE.le(SpikeTime::NONE));
+        assert_eq!(
+            SpikeTime::at(3).earliest(SpikeTime::NONE),
+            SpikeTime::at(3)
+        );
+    }
+
+    #[test]
+    fn le_is_temporal_order() {
+        assert!(SpikeTime::at(2).le(SpikeTime::at(2)));
+        assert!(SpikeTime::at(1).le(SpikeTime::at(2)));
+        assert!(!SpikeTime::at(3).le(SpikeTime::at(2)));
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        for t in [0u32, 1, 7, 15, 1023] {
+            assert_eq!(SpikeTime::from_f32(SpikeTime::at(t).to_f32()), SpikeTime::at(t));
+        }
+        assert_eq!(SpikeTime::from_f32(SpikeTime::NONE.to_f32()), SpikeTime::NONE);
+    }
+
+    #[test]
+    fn earliest_spike_tie_break_is_first_index() {
+        let v = [
+            SpikeTime::NONE,
+            SpikeTime::at(4),
+            SpikeTime::at(2),
+            SpikeTime::at(2),
+        ];
+        let (i, t) = earliest_spike(&v);
+        assert_eq!((i, t), (2, SpikeTime::at(2)));
+    }
+
+    #[test]
+    fn earliest_spike_all_absent() {
+        let v = [SpikeTime::NONE; 3];
+        let (i, t) = earliest_spike(&v);
+        assert_eq!(i, usize::MAX);
+        assert_eq!(t, SpikeTime::NONE);
+    }
+}

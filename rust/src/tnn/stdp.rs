@@ -1,0 +1,263 @@
+//! Four-case probabilistic STDP with bimodal stabilization — the function of
+//! the `stdp_case_gen`, `incdec` and `stabilize_func` macros.
+//!
+//! Per synapse and per gamma cycle, with input spike `x` and (post-WTA)
+//! output spike `y`:
+//!
+//! | case | condition        | name    | action                |
+//! |------|------------------|---------|-----------------------|
+//! | 0    | x ∧ y ∧ (x ≤ y)  | capture | INC w.p. µ_capture    |
+//! | 1    | x ∧ y ∧ (x > y)  | minus   | DEC w.p. µ_minus      |
+//! | 2    | x ∧ ¬y           | search  | INC w.p. µ_search     |
+//! | 3    | ¬x ∧ y           | backoff | DEC w.p. µ_backoff    |
+//! | —    | ¬x ∧ ¬y          | none    | no update             |
+//!
+//! `stdp_case_gen` produces the one-hot case from `GREATER` (the negated
+//! `less_equal` output) and the edge-encoded spikes `EIN`/`EOUT`; `incdec`
+//! AND-ORs the cases with Bernoulli random variables (BRVs) into `WT_INC` /
+//! `WT_DEC`; `stabilize_func` selects which BRV stream is used as a function
+//! of the current 3-bit weight (an 8:1 GDI mux in silicon), implementing the
+//! **bimodal stabilization** of [6]: increments become more likely as `w`
+//! grows and decrements more likely as `w` shrinks, driving converged weights
+//! to the rails {0, w_max}.
+//!
+//! All randomness enters as explicit uniform draws (`u_case`, `u_stab`), so
+//! the golden model, the gate-level netlists and the XLA kernels can be
+//! compared bit-exactly on identical streams.
+
+use super::params::TnnParams;
+use super::spike::SpikeTime;
+
+/// The one-hot STDP case produced by `stdp_case_gen`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StdpCase {
+    /// Case 0 — input at or before output: strengthen (capture).
+    Capture,
+    /// Case 1 — input after output: weaken (minus).
+    Minus,
+    /// Case 2 — input but no output: strengthen slowly (search).
+    Search,
+    /// Case 3 — output but no input: weaken (backoff).
+    Backoff,
+    /// Neither spike present: no update.
+    None,
+}
+
+/// Classify one synapse's gamma cycle into an STDP case.
+#[inline]
+pub fn stdp_case(x: SpikeTime, y: SpikeTime) -> StdpCase {
+    match (x.is_spike(), y.is_spike()) {
+        (true, true) => {
+            if x.le(y) {
+                StdpCase::Capture
+            } else {
+                StdpCase::Minus
+            }
+        }
+        (true, false) => StdpCase::Search,
+        (false, true) => StdpCase::Backoff,
+        (false, false) => StdpCase::None,
+    }
+}
+
+/// Case probability µ from the parameter set (`incdec` BRV parameter).
+#[inline]
+pub fn case_mu(case: StdpCase, p: &TnnParams) -> f64 {
+    match case {
+        StdpCase::Capture => p.mu_capture,
+        StdpCase::Minus => p.mu_minus,
+        StdpCase::Search => p.mu_search,
+        StdpCase::Backoff => p.mu_backoff,
+        StdpCase::None => 0.0,
+    }
+}
+
+/// Is this case an increment (vs decrement) case? (`incdec` AOI logic:
+/// INC ← cases 0,2; DEC ← cases 1,3.)
+#[inline]
+pub fn case_is_inc(case: StdpCase) -> Option<bool> {
+    match case {
+        StdpCase::Capture | StdpCase::Search => Some(true),
+        StdpCase::Minus | StdpCase::Backoff => Some(false),
+        StdpCase::None => None,
+    }
+}
+
+/// Bimodal stabilization probability for an *increment* at weight `w`
+/// (`stabilize_func` 8:1 mux): ramps from 1/(w_max+1) at w=0 to 1 at w=w_max.
+#[inline]
+pub fn stab_up(w: u8, w_max: u8) -> f64 {
+    (w as f64 + 1.0) / (w_max as f64 + 1.0)
+}
+
+/// Bimodal stabilization probability for a *decrement* at weight `w`:
+/// ramps from 1 at w=0 down to 1/(w_max+1) at w=w_max.
+#[inline]
+pub fn stab_down(w: u8, w_max: u8) -> f64 {
+    (w_max as f64 - w as f64 + 1.0) / (w_max as f64 + 1.0)
+}
+
+/// Apply one STDP update to a weight.
+///
+/// `u_case` and `u_stab` are uniform draws in `[0,1)`: the update fires iff
+/// `u_case < µ_case` **and** (when stabilization is enabled)
+/// `u_stab < stab_up/down(w)`. Returns the new (saturated) weight.
+pub fn stdp_update(w: u8, case: StdpCase, u_case: f64, u_stab: f64, p: &TnnParams) -> u8 {
+    let Some(inc) = case_is_inc(case) else {
+        return w;
+    };
+    if u_case >= case_mu(case, p) {
+        return w;
+    }
+    let w_max = p.w_max();
+    if p.stabilize {
+        let gate = if inc {
+            stab_up(w, w_max)
+        } else {
+            stab_down(w, w_max)
+        };
+        if u_stab >= gate {
+            return w;
+        }
+    }
+    if inc {
+        (w + 1).min(w_max)
+    } else {
+        w.saturating_sub(1)
+    }
+}
+
+/// Vectorized STDP over a full column's synapse array.
+///
+/// `xs`: p input spike times; `ys`: q post-WTA output spike times;
+/// `ws`: row-major p×q weights; `u_case`/`u_stab`: p×q uniforms.
+/// Updates `ws` in place.
+pub fn stdp_update_column(
+    xs: &[SpikeTime],
+    ys: &[SpikeTime],
+    ws: &mut [u8],
+    u_case: &[f64],
+    u_stab: &[f64],
+    p: &TnnParams,
+) {
+    let q = ys.len();
+    debug_assert_eq!(ws.len(), xs.len() * q);
+    debug_assert_eq!(u_case.len(), ws.len());
+    debug_assert_eq!(u_stab.len(), ws.len());
+    for (i, &x) in xs.iter().enumerate() {
+        for (j, &y) in ys.iter().enumerate() {
+            let k = i * q + j;
+            let case = stdp_case(x, y);
+            ws[k] = stdp_update(ws[k], case, u_case[k], u_stab[k], p);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> TnnParams {
+        TnnParams::default()
+    }
+
+    #[test]
+    fn case_table_matches_paper() {
+        let t = SpikeTime::at;
+        assert_eq!(stdp_case(t(2), t(5)), StdpCase::Capture);
+        assert_eq!(stdp_case(t(5), t(5)), StdpCase::Capture, "x ≤ y includes equality");
+        assert_eq!(stdp_case(t(6), t(5)), StdpCase::Minus);
+        assert_eq!(stdp_case(t(2), SpikeTime::NONE), StdpCase::Search);
+        assert_eq!(stdp_case(SpikeTime::NONE, t(5)), StdpCase::Backoff);
+        assert_eq!(stdp_case(SpikeTime::NONE, SpikeTime::NONE), StdpCase::None);
+    }
+
+    #[test]
+    fn no_spikes_no_update() {
+        let p = params();
+        for w in 0..=7u8 {
+            assert_eq!(stdp_update(w, StdpCase::None, 0.0, 0.0, &p), w);
+        }
+    }
+
+    #[test]
+    fn capture_increments_when_draws_pass() {
+        let p = params();
+        // u_case=0 < µ_capture=1, u_stab=0 < stab_up always.
+        assert_eq!(stdp_update(3, StdpCase::Capture, 0.0, 0.0, &p), 4);
+        // saturation at w_max
+        assert_eq!(stdp_update(7, StdpCase::Capture, 0.0, 0.0, &p), 7);
+    }
+
+    #[test]
+    fn minus_decrements_and_saturates_at_zero() {
+        let p = params();
+        assert_eq!(stdp_update(3, StdpCase::Minus, 0.0, 0.0, &p), 2);
+        assert_eq!(stdp_update(0, StdpCase::Minus, 0.0, 0.0, &p), 0);
+    }
+
+    #[test]
+    fn case_draw_gates_update() {
+        let p = params();
+        // µ_search = 1/16: a u_case of 0.5 must block the search increment.
+        assert_eq!(stdp_update(3, StdpCase::Search, 0.5, 0.0, &p), 3);
+        assert_eq!(stdp_update(3, StdpCase::Search, 0.01, 0.0, &p), 4);
+    }
+
+    #[test]
+    fn stabilization_is_bimodal() {
+        let w_max = 7;
+        // up-probability increases with w; down-probability decreases.
+        for w in 0..w_max {
+            assert!(stab_up(w + 1, w_max) > stab_up(w, w_max));
+            assert!(stab_down(w + 1, w_max) < stab_down(w, w_max));
+        }
+        assert!((stab_up(w_max, w_max) - 1.0).abs() < 1e-12);
+        assert!((stab_down(0, w_max) - 1.0).abs() < 1e-12);
+
+        // A draw of 0.9 blocks an increment at low weight but not at w_max-1…
+        let p = params();
+        assert_eq!(stdp_update(0, StdpCase::Capture, 0.0, 0.9, &p), 0);
+        assert_eq!(stdp_update(7 - 1, StdpCase::Capture, 0.0, 0.86, &p), 7);
+    }
+
+    #[test]
+    fn stabilization_disabled_ignores_u_stab() {
+        let p = TnnParams {
+            stabilize: false,
+            ..params()
+        };
+        assert_eq!(stdp_update(0, StdpCase::Capture, 0.0, 0.999, &p), 1);
+    }
+
+    #[test]
+    fn column_update_addresses_row_major() {
+        let p = params();
+        let xs = vec![SpikeTime::at(0), SpikeTime::NONE];
+        let ys = vec![SpikeTime::at(3)];
+        let mut ws = vec![3u8, 3]; // (2 inputs) x (1 neuron)
+        let u0 = vec![0.0; 2];
+        stdp_update_column(&xs, &ys, &mut ws, &u0, &u0, &p);
+        // synapse 0: capture (x=0 ≤ y=3) → 4; synapse 1: backoff → 2.
+        assert_eq!(ws, vec![4, 2]);
+    }
+
+    #[test]
+    fn weights_always_stay_in_range() {
+        use crate::util::Rng64;
+        let p = params();
+        let mut rng = Rng64::seed_from_u64(3);
+        let mut w = 4u8;
+        for _ in 0..10_000 {
+            let case = match rng.gen_range(0, 5) {
+                0 => StdpCase::Capture,
+                1 => StdpCase::Minus,
+                2 => StdpCase::Search,
+                3 => StdpCase::Backoff,
+                _ => StdpCase::None,
+            };
+            w = stdp_update(w, case, rng.gen_f64(), rng.gen_f64(), &p);
+            assert!(w <= p.w_max());
+        }
+    }
+}

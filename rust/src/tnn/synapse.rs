@@ -1,0 +1,173 @@
+//! Ramp-no-leak (RNL) synapse — the function of the `syn_readout` and
+//! `syn_weight_update` macros.
+//!
+//! Two equivalent views are provided and cross-checked by tests:
+//!
+//! * the **folded** (closed-form) view used by the golden column model and
+//!   the XLA kernels: the cumulative response of a synapse with weight `w`
+//!   and input spike at `x`, evaluated at the end of unit cycle `t`, is
+//!   `clamp(t + 1 − x, 0, w)`;
+//! * the **cycle-accurate** view mirroring the hardware datapath: on input
+//!   spike the weight register decrements once per `aclk` until it wraps
+//!   around to its original value, and `syn_readout` asserts the response
+//!   output while the decremented value is non-zero.
+
+use super::spike::SpikeTime;
+
+/// Closed-form cumulative RNL response of one synapse at end of unit cycle
+/// `t`: the number of cycles in `[0, t]` during which the readout was
+/// asserted. `x = NONE` contributes 0 forever.
+#[inline]
+pub fn rnl_cumulative(x: SpikeTime, w: u8, t: u32) -> u32 {
+    if !x.is_spike() || t < x.0 {
+        return 0;
+    }
+    (t + 1 - x.0).min(w as u32)
+}
+
+/// Instantaneous readout (is the response pulse high during cycle `t`?).
+#[inline]
+pub fn rnl_active(x: SpikeTime, w: u8, t: u32) -> bool {
+    x.is_spike() && t >= x.0 && t < x.0 + w as u32
+}
+
+/// Cycle-accurate hardware model of one synapse datapath:
+/// `syn_weight_update` (weight register + decrement/increment control) wired
+/// to `syn_readout` (zero-detect on the decrementing value).
+///
+/// This is the model the gate-level netlists in [`crate::gates::macros9`]
+/// are verified against.
+#[derive(Clone, Debug)]
+pub struct RnlSynapse {
+    /// Stored synaptic weight (the value STDP updates), `0 ..= w_max`.
+    weight: u8,
+    /// Live decrementing copy during readout (`CNT` in Fig. 3 of the paper).
+    counter: u8,
+    /// High while a readout (decrement) process is in flight.
+    reading: bool,
+    w_max: u8,
+}
+
+impl RnlSynapse {
+    pub fn new(weight: u8, w_max: u8) -> Self {
+        assert!(weight <= w_max, "weight {weight} exceeds w_max {w_max}");
+        RnlSynapse {
+            weight,
+            counter: 0,
+            reading: false,
+            w_max,
+        }
+    }
+
+    /// Stored weight.
+    pub fn weight(&self) -> u8 {
+        self.weight
+    }
+
+    /// Reset transient state at a gamma-cycle boundary (the job of the
+    /// `edge2pulse`-generated internal reset in the real datapath).
+    pub fn gamma_reset(&mut self) {
+        self.counter = 0;
+        self.reading = false;
+    }
+
+    /// Advance one `aclk` cycle. `spike_edge` is true on the cycle the input
+    /// spike (edge) arrives. Returns the `syn_readout` output for this cycle.
+    pub fn tick(&mut self, spike_edge: bool) -> bool {
+        if spike_edge && !self.reading {
+            self.reading = true;
+            self.counter = self.weight;
+        }
+        if self.reading && self.counter > 0 {
+            // Readout asserted while the decrementing value is non-zero.
+            self.counter -= 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// STDP weight update via external control (the `WT_INC` / `WT_DEC`
+    /// inputs of `syn_weight_update`). At most one may be asserted.
+    pub fn update(&mut self, inc: bool, dec: bool) {
+        debug_assert!(!(inc && dec), "WT_INC and WT_DEC are mutually exclusive");
+        if inc && self.weight < self.w_max {
+            self.weight += 1;
+        } else if dec && self.weight > 0 {
+            self.weight -= 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn folded_matches_cycle_accurate_for_all_weights_and_times() {
+        let w_max = 7u8;
+        for w in 0..=w_max {
+            for x in 0..8u32 {
+                let spike = SpikeTime::at(x);
+                let mut syn = RnlSynapse::new(w, w_max);
+                let mut cum = 0u32;
+                for t in 0..16u32 {
+                    let out = syn.tick(t == x);
+                    assert_eq!(
+                        out,
+                        rnl_active(spike, w, t),
+                        "readout mismatch at w={w} x={x} t={t}"
+                    );
+                    cum += out as u32;
+                    assert_eq!(
+                        cum,
+                        rnl_cumulative(spike, w, t),
+                        "cumulative mismatch at w={w} x={x} t={t}"
+                    );
+                }
+                // Total response equals the weight (the RNL defining property).
+                assert_eq!(cum, w as u32);
+            }
+        }
+    }
+
+    #[test]
+    fn no_spike_no_response() {
+        let mut syn = RnlSynapse::new(5, 7);
+        for t in 0..16u32 {
+            assert!(!syn.tick(false));
+            assert_eq!(rnl_cumulative(SpikeTime::NONE, 5, t), 0);
+        }
+    }
+
+    #[test]
+    fn zero_weight_never_asserts() {
+        let mut syn = RnlSynapse::new(0, 7);
+        for t in 0..8u32 {
+            assert!(!syn.tick(t == 2));
+        }
+    }
+
+    #[test]
+    fn update_saturates() {
+        let mut syn = RnlSynapse::new(7, 7);
+        syn.update(true, false);
+        assert_eq!(syn.weight(), 7);
+        let mut syn = RnlSynapse::new(0, 7);
+        syn.update(false, true);
+        assert_eq!(syn.weight(), 0);
+        syn.update(true, false);
+        assert_eq!(syn.weight(), 1);
+    }
+
+    #[test]
+    fn gamma_reset_clears_readout() {
+        let mut syn = RnlSynapse::new(7, 7);
+        syn.tick(true);
+        syn.gamma_reset();
+        assert!(!syn.tick(false), "no residual readout after gamma reset");
+        // A fresh spike restarts the full ramp.
+        let total: u32 = (0..10).map(|t| syn.tick(t == 0) as u32).sum();
+        assert_eq!(total, 7);
+    }
+}

@@ -1,0 +1,99 @@
+//! 1-WTA lateral inhibition, built from the temporal `less_equal` primitive
+//! (the `less_equal` macro — a space-time algebra operator [8]).
+
+use super::spike::{earliest_spike, SpikeTime};
+
+/// The `less_equal` temporal operator: `data` propagates iff it arrives no
+/// later than `inhibit`; otherwise it is suppressed (NONE).
+///
+/// This is exactly the macro's transistor-level function: the DATA_IN edge
+/// passes through while INHIBIT has not yet risen.
+#[inline]
+pub fn less_equal(data: SpikeTime, inhibit: SpikeTime) -> SpikeTime {
+    if data.le(inhibit) {
+        data
+    } else {
+        SpikeTime::NONE
+    }
+}
+
+/// 1-winner-take-all over a volley of body fire times.
+///
+/// The hardware forms the inhibit signal as the earliest output spike and
+/// gates every line through [`less_equal`]; a priority chain breaks ties so
+/// at most one line survives (lowest index wins). Returns the post-WTA
+/// volley (winner keeps its spike time, everyone else NONE).
+pub fn wta_1(fire_times: &[SpikeTime]) -> Vec<SpikeTime> {
+    let (winner, _) = earliest_spike(fire_times);
+    fire_times
+        .iter()
+        .enumerate()
+        .map(|(j, &t)| {
+            if j == winner {
+                t
+            } else {
+                SpikeTime::NONE
+            }
+        })
+        .collect()
+}
+
+/// Index of the WTA winner, if any neuron fired.
+pub fn wta_winner(fire_times: &[SpikeTime]) -> Option<usize> {
+    let (idx, t) = earliest_spike(fire_times);
+    t.is_spike().then_some(idx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn less_equal_gates_late_arrivals() {
+        assert_eq!(
+            less_equal(SpikeTime::at(2), SpikeTime::at(5)),
+            SpikeTime::at(2)
+        );
+        assert_eq!(less_equal(SpikeTime::at(5), SpikeTime::at(2)), SpikeTime::NONE);
+        assert_eq!(
+            less_equal(SpikeTime::at(3), SpikeTime::at(3)),
+            SpikeTime::at(3),
+            "simultaneous arrival passes (less-or-EQUAL)"
+        );
+        assert_eq!(less_equal(SpikeTime::at(9), SpikeTime::NONE), SpikeTime::at(9));
+        assert_eq!(less_equal(SpikeTime::NONE, SpikeTime::at(0)), SpikeTime::NONE);
+    }
+
+    #[test]
+    fn wta_at_most_one_winner() {
+        let v = vec![
+            SpikeTime::at(5),
+            SpikeTime::at(2),
+            SpikeTime::at(2),
+            SpikeTime::NONE,
+        ];
+        let out = wta_1(&v);
+        let winners: Vec<usize> = out
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.is_spike())
+            .map(|(j, _)| j)
+            .collect();
+        assert_eq!(winners, vec![1], "earliest wins, ties to lowest index");
+        assert_eq!(out[1], SpikeTime::at(2));
+        assert_eq!(wta_winner(&v), Some(1));
+    }
+
+    #[test]
+    fn wta_all_silent() {
+        let v = vec![SpikeTime::NONE; 4];
+        assert!(wta_1(&v).iter().all(|t| !t.is_spike()));
+        assert_eq!(wta_winner(&v), None);
+    }
+
+    #[test]
+    fn wta_preserves_winner_time() {
+        let v = vec![SpikeTime::at(7)];
+        assert_eq!(wta_1(&v), vec![SpikeTime::at(7)]);
+    }
+}

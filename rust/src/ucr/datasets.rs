@@ -1,0 +1,222 @@
+//! The 36 UCR-like dataset configurations and synthetic series generator.
+//!
+//! Column geometry per dataset: `p` = series length (one synapse line per
+//! sample point), `q` = number of clusters — exactly the configuration rule
+//! of [1]. Synapse counts (p·q) span 130 … 6,750, matching the range the
+//! paper's Fig. 11/12 sweep; `TwoLeadECG` is the 82×2 column of Fig. 13.
+//!
+//! Series are generated as per-cluster prototypes (sums of random
+//! sinusoids) with random phase shift, amplitude jitter and additive noise —
+//! structured enough that a TNN column can cluster them, and normalized to
+//! [0,1] for intensity-to-latency encoding.
+
+use crate::util::Rng64;
+
+/// One dataset configuration (name, series length p, clusters q).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct UcrConfig {
+    pub name: &'static str,
+    pub p: usize,
+    pub q: usize,
+}
+
+impl UcrConfig {
+    pub fn synapses(&self) -> usize {
+        self.p * self.q
+    }
+}
+
+/// The 36 configurations used for Fig. 11 / Fig. 12. Names follow UCR
+/// datasets evaluated by [1]; (p, q) are the column geometries (synapse
+/// counts span 130–6,750, sorted roughly by synapse count).
+pub const UCR_SUITE: [UcrConfig; 36] = [
+    UcrConfig { name: "SonyAIBORobotSurface1", p: 65, q: 2 },
+    UcrConfig { name: "ItalyPowerDemand", p: 67, q: 2 },
+    UcrConfig { name: "MoteStrain", p: 84, q: 2 },
+    UcrConfig { name: "TwoLeadECG", p: 82, q: 2 },
+    UcrConfig { name: "ECGFiveDays", p: 136, q: 2 },
+    UcrConfig { name: "SonyAIBORobotSurface2", p: 65, q: 5 },
+    UcrConfig { name: "Coffee", p: 286, q: 2 },
+    UcrConfig { name: "ECG200", p: 96, q: 2 },
+    UcrConfig { name: "BeetleFly", p: 256, q: 2 },
+    UcrConfig { name: "BirdChicken", p: 256, q: 2 },
+    UcrConfig { name: "GunPoint", p: 150, q: 2 },
+    UcrConfig { name: "ToeSegmentation1", p: 277, q: 2 },
+    UcrConfig { name: "ToeSegmentation2", p: 343, q: 2 },
+    UcrConfig { name: "Wine", p: 234, q: 2 },
+    UcrConfig { name: "Herring", p: 512, q: 2 },
+    UcrConfig { name: "SyntheticControl", p: 60, q: 6 },
+    UcrConfig { name: "Lightning2", p: 637, q: 2 },
+    UcrConfig { name: "CBF", p: 128, q: 3 },
+    UcrConfig { name: "BME", p: 128, q: 3 },
+    UcrConfig { name: "UMD", p: 150, q: 3 },
+    UcrConfig { name: "FaceFour", p: 350, q: 4 },
+    UcrConfig { name: "Trace", p: 275, q: 4 },
+    UcrConfig { name: "ArrowHead", p: 251, q: 3 },
+    UcrConfig { name: "Meat", p: 448, q: 3 },
+    UcrConfig { name: "DiatomSizeReduction", p: 345, q: 4 },
+    UcrConfig { name: "OliveOil", p: 570, q: 4 },
+    UcrConfig { name: "Beef", p: 470, q: 5 },
+    UcrConfig { name: "Car", p: 577, q: 4 },
+    UcrConfig { name: "Lightning7", p: 319, q: 7 },
+    UcrConfig { name: "Plane", p: 144, q: 7 },
+    UcrConfig { name: "Symbols", p: 398, q: 6 },
+    UcrConfig { name: "Fish", p: 463, q: 7 },
+    UcrConfig { name: "OSULeaf", p: 427, q: 6 },
+    UcrConfig { name: "SwedishLeaf", p: 128, q: 15 },
+    UcrConfig { name: "MedicalImages", p: 99, q: 10 },
+    UcrConfig { name: "FiftyWords", p: 135, q: 50 },
+];
+
+/// The full suite, sorted by synapse count ascending (Fig. 11's x-axis).
+pub fn ucr_suite() -> Vec<UcrConfig> {
+    let mut v = UCR_SUITE.to_vec();
+    v.sort_by_key(|c| c.synapses());
+    v
+}
+
+/// A generated dataset: `series[s]` is a length-p vector in [0,1];
+/// `labels[s]` the ground-truth cluster.
+#[derive(Clone, Debug)]
+pub struct UcrData {
+    pub config: UcrConfig,
+    pub series: Vec<Vec<f64>>,
+    pub labels: Vec<usize>,
+}
+
+/// Generate `per_cluster` samples per cluster for a configuration.
+pub fn generate(config: UcrConfig, per_cluster: usize, seed: u64) -> UcrData {
+    let mut rng = Rng64::seed_from_u64(seed ^ 0x5EED_0C12);
+    // Per-cluster prototypes: 3 random sinusoids.
+    let protos: Vec<Vec<(f64, f64, f64)>> = (0..config.q)
+        .map(|_| {
+            (0..3)
+                .map(|h| {
+                    let freq = (h + 1) as f64 * (1.0 + rng.gen_f64() * 2.0);
+                    let phase = rng.gen_f64() * std::f64::consts::TAU;
+                    let amp = 0.4 + rng.gen_f64();
+                    (freq, phase, amp)
+                })
+                .collect()
+        })
+        .collect();
+    let mut series = Vec::with_capacity(config.q * per_cluster);
+    let mut labels = Vec::with_capacity(config.q * per_cluster);
+    for (c, proto) in protos.iter().enumerate() {
+        for _ in 0..per_cluster {
+            let shift = rng.gen_f64() * 0.1; // small phase jitter
+            let gain = 0.9 + 0.2 * rng.gen_f64();
+            let mut s: Vec<f64> = (0..config.p)
+                .map(|t| {
+                    let x = t as f64 / config.p as f64;
+                    let v: f64 = proto
+                        .iter()
+                        .map(|&(f, ph, a)| {
+                            a * (std::f64::consts::TAU * f * (x + shift) + ph).sin()
+                        })
+                        .sum();
+                    gain * v + 0.15 * rng.gen_normal()
+                })
+                .collect();
+            // min-max normalise to [0,1]
+            s = crate::tnn::encode::normalize(&s);
+            series.push(s);
+            labels.push(c);
+        }
+    }
+    // Shuffle presentation order (online learning sees interleaved classes).
+    let mut idx: Vec<usize> = (0..series.len()).collect();
+    rng.shuffle(&mut idx);
+    let series = idx.iter().map(|&i| series[i].clone()).collect();
+    let labels = idx.iter().map(|&i| labels[i]).collect();
+    UcrData {
+        config,
+        series,
+        labels,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_matches_paper_envelope() {
+        let suite = ucr_suite();
+        assert_eq!(suite.len(), 36);
+        let min = suite.first().unwrap().synapses();
+        let max = suite.last().unwrap().synapses();
+        assert_eq!(min, 130, "smallest column is 130 synapses");
+        assert_eq!(max, 6750, "largest column is 6,750 synapses");
+        // Fig. 13's TwoLeadECG column is 82×2.
+        let tle = suite.iter().find(|c| c.name == "TwoLeadECG").unwrap();
+        assert_eq!((tle.p, tle.q), (82, 2));
+    }
+
+    #[test]
+    fn names_are_unique() {
+        let mut names: Vec<_> = UCR_SUITE.iter().map(|c| c.name).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), 36);
+    }
+
+    #[test]
+    fn generation_is_deterministic_and_normalised() {
+        let cfg = UcrConfig {
+            name: "TwoLeadECG",
+            p: 82,
+            q: 2,
+        };
+        let a = generate(cfg, 5, 1);
+        let b = generate(cfg, 5, 1);
+        assert_eq!(a.series, b.series);
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.series.len(), 10);
+        for s in &a.series {
+            assert_eq!(s.len(), 82);
+            assert!(s.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        }
+        let c = generate(cfg, 5, 2);
+        assert_ne!(a.series, c.series, "different seeds differ");
+    }
+
+    #[test]
+    fn clusters_are_separable_by_distance() {
+        // Nearest-prototype in L2 should beat chance comfortably — i.e. the
+        // synthetic families carry real cluster structure.
+        let cfg = UcrConfig {
+            name: "CBF",
+            p: 128,
+            q: 3,
+        };
+        let data = generate(cfg, 12, 7);
+        // centroid per true cluster
+        let mut centroids = vec![vec![0.0; cfg.p]; cfg.q];
+        let mut counts = vec![0usize; cfg.q];
+        for (s, &l) in data.series.iter().zip(&data.labels) {
+            for (k, &v) in s.iter().enumerate() {
+                centroids[l][k] += v;
+            }
+            counts[l] += 1;
+        }
+        for (c, &n) in centroids.iter_mut().zip(&counts) {
+            for v in c.iter_mut() {
+                *v /= n as f64;
+            }
+        }
+        let mut correct = 0;
+        for (s, &l) in data.series.iter().zip(&data.labels) {
+            let best = (0..cfg.q)
+                .min_by(|&a, &b| {
+                    let da: f64 = s.iter().zip(&centroids[a]).map(|(x, c)| (x - c) * (x - c)).sum();
+                    let db: f64 = s.iter().zip(&centroids[b]).map(|(x, c)| (x - c) * (x - c)).sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            correct += (best == l) as usize;
+        }
+        let acc = correct as f64 / data.series.len() as f64;
+        assert!(acc > 0.8, "separability {acc}");
+    }
+}

@@ -1,0 +1,77 @@
+//! Clustering-quality metrics for the unsupervised time-series pipeline.
+
+/// Rand index between a predicted assignment and ground-truth labels:
+/// fraction of pairs on which the two clusterings agree (same/different).
+pub fn rand_index(pred: &[usize], truth: &[usize]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    let n = pred.len();
+    if n < 2 {
+        return 1.0;
+    }
+    let mut agree = 0u64;
+    let mut total = 0u64;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let same_p = pred[i] == pred[j];
+            let same_t = truth[i] == truth[j];
+            agree += (same_p == same_t) as u64;
+            total += 1;
+        }
+    }
+    agree as f64 / total as f64
+}
+
+/// Cluster purity: each predicted cluster votes its majority true label.
+pub fn purity(pred: &[usize], truth: &[usize], k_pred: usize, k_true: usize) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    if pred.is_empty() {
+        return 1.0;
+    }
+    let mut counts = vec![vec![0u64; k_true]; k_pred];
+    for (&p, &t) in pred.iter().zip(truth) {
+        counts[p][t] += 1;
+    }
+    let correct: u64 = counts
+        .iter()
+        .map(|row| row.iter().copied().max().unwrap_or(0))
+        .sum();
+    correct as f64 / pred.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_clustering_scores_one() {
+        let t = vec![0, 0, 1, 1, 2, 2];
+        assert_eq!(rand_index(&t, &t), 1.0);
+        assert_eq!(purity(&t, &t, 3, 3), 1.0);
+    }
+
+    #[test]
+    fn permuted_labels_still_perfect() {
+        let truth = vec![0, 0, 1, 1];
+        let pred = vec![1, 1, 0, 0];
+        assert_eq!(rand_index(&pred, &truth), 1.0);
+        assert_eq!(purity(&pred, &truth, 2, 2), 1.0);
+    }
+
+    #[test]
+    fn degenerate_single_cluster_has_low_purity() {
+        let truth = vec![0, 1, 2, 0, 1, 2];
+        let pred = vec![0; 6];
+        let p = purity(&pred, &truth, 1, 3);
+        assert!((p - 2.0 / 6.0).abs() < 1e-12);
+        assert!(rand_index(&pred, &truth) < 0.5);
+    }
+
+    #[test]
+    fn random_vs_structured() {
+        // agreeing on half the pairs ≈ 0.5-ish for anti-correlated preds
+        let truth = vec![0, 0, 0, 1, 1, 1];
+        let pred = vec![0, 1, 0, 1, 0, 1];
+        let ri = rand_index(&pred, &truth);
+        assert!(ri < 0.7);
+    }
+}

@@ -1,0 +1,16 @@
+//! UCR-style time-series clustering workload (the paper's Section IV-A).
+//!
+//! The paper evaluates 36 single-column TNN designs, one per UCR dataset
+//! from Chaudhari et al. [1], with synapse counts from 130 to 6,750. The
+//! UCR archive itself is not redistributable here, so [`datasets`] provides
+//! 36 synthetic time-series families with the **same column geometries**
+//! (series length p, cluster count q — these are all that Fig. 11/12 depend
+//! on) and structured waveforms (shifted/warped prototypes + noise) for the
+//! clustering-quality pipeline. [`metrics`] implements Rand index /
+//! purity used to score unsupervised clusterings.
+
+pub mod datasets;
+pub mod metrics;
+
+pub use datasets::{generate, ucr_suite, UcrConfig, UcrData};
+pub use metrics::{purity, rand_index};

@@ -1,0 +1,170 @@
+//! Micro-benchmark harness (offline replacement for criterion).
+//!
+//! Provides warm-up, adaptive iteration-count selection targeting a wall
+//! time per measurement, multiple samples, and median/mean/p95 reporting.
+//! All `rust/benches/*.rs` targets are built on this.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement summary (times are per-iteration).
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub samples: usize,
+    pub iters_per_sample: u64,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+    pub p95: Duration,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<48} median {:>12} mean {:>12} min {:>12} p95 {:>12} ({} samples x {} iters)",
+            self.name,
+            fmt_dur(self.median),
+            fmt_dur(self.mean),
+            fmt_dur(self.min),
+            fmt_dur(self.p95),
+            self.samples,
+            self.iters_per_sample,
+        )
+    }
+
+    /// Median time in nanoseconds (convenience for throughput math).
+    pub fn median_ns(&self) -> f64 {
+        self.median.as_secs_f64() * 1e9
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_secs_f64() * 1e9;
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner with a per-measurement time budget.
+pub struct Bencher {
+    /// Target wall time for one sample.
+    pub sample_target: Duration,
+    /// Number of samples collected.
+    pub samples: usize,
+    /// Warm-up time before measuring.
+    pub warmup: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            sample_target: Duration::from_millis(100),
+            samples: 10,
+            warmup: Duration::from_millis(50),
+        }
+    }
+}
+
+impl Bencher {
+    /// A faster configuration for CI-style runs (set `TNN7_BENCH_FAST=1`).
+    pub fn from_env() -> Self {
+        if std::env::var("TNN7_BENCH_FAST").is_ok() {
+            Bencher {
+                sample_target: Duration::from_millis(20),
+                samples: 3,
+                warmup: Duration::from_millis(5),
+            }
+        } else {
+            Bencher::default()
+        }
+    }
+
+    /// Measure `f`, which performs ONE logical iteration per call, returning
+    /// any value (black-boxed to stop the optimizer deleting the work).
+    pub fn bench<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchStats {
+        // Warm-up and initial rate estimate.
+        let warm_start = Instant::now();
+        let mut warm_iters: u64 = 0;
+        while warm_start.elapsed() < self.warmup || warm_iters == 0 {
+            black_box(f());
+            warm_iters += 1;
+            if warm_iters > 1_000_000 {
+                break;
+            }
+        }
+        let per_iter = warm_start.elapsed().as_secs_f64() / warm_iters as f64;
+        let iters = ((self.sample_target.as_secs_f64() / per_iter.max(1e-9)) as u64).max(1);
+
+        let mut times: Vec<Duration> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                black_box(f());
+            }
+            times.push(t0.elapsed() / iters as u32);
+        }
+        times.sort();
+        let mean = times.iter().sum::<Duration>() / times.len() as u32;
+        let median = times[times.len() / 2];
+        let p95_idx = (((times.len() as f64) * 0.95).ceil() as usize)
+            .saturating_sub(1)
+            .min(times.len() - 1);
+        let p95 = times[p95_idx];
+        BenchStats {
+            name: name.to_string(),
+            samples: self.samples,
+            iters_per_sample: iters,
+            mean,
+            median,
+            min: times[0],
+            p95,
+        }
+    }
+}
+
+/// Prevent the optimizer from eliding benchmarked work (std::hint::black_box
+/// is stable since 1.66; re-exported here for a single import site).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let b = Bencher {
+            sample_target: Duration::from_millis(2),
+            samples: 4,
+            warmup: Duration::from_millis(1),
+        };
+        let stats = b.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(stats.median > Duration::ZERO);
+        assert!(stats.min <= stats.median);
+        assert!(stats.median <= stats.p95 || stats.p95 >= stats.min);
+        assert_eq!(stats.samples, 4);
+        assert!(stats.report().contains("spin"));
+    }
+
+    #[test]
+    fn fmt_dur_scales() {
+        assert!(fmt_dur(Duration::from_nanos(500)).contains("ns"));
+        assert!(fmt_dur(Duration::from_micros(50)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(50)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(5)).contains(" s"));
+    }
+}

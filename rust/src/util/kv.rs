@@ -1,0 +1,198 @@
+//! Tiny line-oriented key-value format used for artifact manifests and
+//! experiment configs (replacement for TOML in this offline build).
+//!
+//! Format: `key = value` lines; `#` comments; `[section]` headers create
+//! `section.key` keys; blank lines ignored. Values are kept as strings with
+//! typed accessors.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Parsed key-value document.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct KvDoc {
+    map: BTreeMap<String, String>,
+}
+
+/// Parse error with line information.
+#[derive(Debug, thiserror::Error)]
+pub enum KvError {
+    #[error("line {0}: expected `key = value`, got: {1}")]
+    BadLine(usize, String),
+    #[error("missing key: {0}")]
+    Missing(String),
+    #[error("key {0}: cannot parse {1:?} as {2}")]
+    BadValue(String, String, &'static str),
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+impl KvDoc {
+    pub fn parse(text: &str) -> Result<KvDoc, KvError> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some(sec) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = sec.trim().to_string();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                return Err(KvError::BadLine(lineno + 1, raw.to_string()));
+            };
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            map.insert(key, v.trim().to_string());
+        }
+        Ok(KvDoc { map })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<KvDoc, KvError> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn set(&mut self, key: &str, value: impl ToString) {
+        self.map.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(|s| s.as_str())
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str, KvError> {
+        self.get(key).ok_or_else(|| KvError::Missing(key.into()))
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>, KvError> {
+        self.typed(key, "usize", |s| s.parse().ok())
+    }
+
+    pub fn get_u64(&self, key: &str) -> Result<Option<u64>, KvError> {
+        self.typed(key, "u64", |s| s.parse().ok())
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>, KvError> {
+        self.typed(key, "f64", |s| s.parse().ok())
+    }
+
+    pub fn get_bool(&self, key: &str) -> Result<Option<bool>, KvError> {
+        self.typed(key, "bool", |s| match s {
+            "true" | "1" | "yes" => Some(true),
+            "false" | "0" | "no" => Some(false),
+            _ => None,
+        })
+    }
+
+    fn typed<T>(
+        &self,
+        key: &str,
+        ty: &'static str,
+        f: impl Fn(&str) -> Option<T>,
+    ) -> Result<Option<T>, KvError> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(s) => f(s)
+                .map(Some)
+                .ok_or_else(|| KvError::BadValue(key.into(), s.into(), ty)),
+        }
+    }
+
+    /// Keys under a section prefix (`section.`), with the prefix stripped.
+    pub fn section(&self, prefix: &str) -> Vec<(String, String)> {
+        let pfx = format!("{prefix}.");
+        self.map
+            .iter()
+            .filter_map(|(k, v)| {
+                k.strip_prefix(&pfx)
+                    .map(|rest| (rest.to_string(), v.clone()))
+            })
+            .collect()
+    }
+
+    /// Serialize back to text (flat keys, sorted).
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.map {
+            out.push_str(k);
+            out.push_str(" = ");
+            out.push_str(v);
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_comments() {
+        let doc = KvDoc::parse(
+            "# comment\n\
+             top = 1\n\
+             [column]\n\
+             p = 82\n\
+             q = 2\n\
+             name = TwoLeadECG\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("top"), Some("1"));
+        assert_eq!(doc.get_usize("column.p").unwrap(), Some(82));
+        assert_eq!(doc.get("column.name"), Some("TwoLeadECG"));
+        assert_eq!(doc.get("missing"), None);
+    }
+
+    #[test]
+    fn typed_errors() {
+        let doc = KvDoc::parse("x = abc\n").unwrap();
+        assert!(doc.get_usize("x").is_err());
+        assert!(matches!(doc.require("y"), Err(KvError::Missing(_))));
+    }
+
+    #[test]
+    fn bad_line_reports_position() {
+        let err = KvDoc::parse("good = 1\nnot a kv line\n").unwrap_err();
+        assert!(matches!(err, KvError::BadLine(2, _)));
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut doc = KvDoc::default();
+        doc.set("a.b", 7);
+        doc.set("c", "hello");
+        let text = doc.to_text();
+        assert_eq!(KvDoc::parse(&text).unwrap(), doc);
+    }
+
+    #[test]
+    fn section_listing() {
+        let doc = KvDoc::parse("[m]\na = 1\nb = 2\n[n]\nc = 3\n").unwrap();
+        let s = doc.section("m");
+        assert_eq!(
+            s,
+            vec![("a".into(), "1".into()), ("b".into(), "2".into())]
+        );
+    }
+
+    #[test]
+    fn bools() {
+        let doc = KvDoc::parse("a = true\nb = 0\n").unwrap();
+        assert_eq!(doc.get_bool("a").unwrap(), Some(true));
+        assert_eq!(doc.get_bool("b").unwrap(), Some(false));
+    }
+}

@@ -1,0 +1,12 @@
+//! Self-contained utilities replacing external crates that are unavailable
+//! in this offline build: a deterministic PRNG ([`rng`]), a minimal JSON
+//! writer ([`json`]), a micro-benchmark harness ([`bench`]), and a tiny
+//! key-value config format ([`kv`] — used for artifact manifests and
+//! experiment configs).
+
+pub mod bench;
+pub mod json;
+pub mod kv;
+pub mod rng;
+
+pub use rng::Rng64;

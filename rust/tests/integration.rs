@@ -1,0 +1,140 @@
+//! Cross-module integration tests: the full pipeline (workload → encode →
+//! column engines → metrics) and the full hardware flow (design → synthesis
+//! → PPA → layout), plus randomized property tests on system invariants.
+
+use tnn7::cells;
+use tnn7::coordinator::{encode_ucr, run_stream, ucr_engine};
+use tnn7::gates::column_design::{build_column, BrvSource, ColumnSim};
+use tnn7::ppa::report::analyze;
+use tnn7::synth::flow::{synthesize, Flow};
+use tnn7::tnn::column::Column;
+use tnn7::tnn::params::TnnParams;
+use tnn7::tnn::spike::SpikeTime;
+use tnn7::ucr;
+use tnn7::util::Rng64;
+
+#[test]
+fn clustering_pipeline_end_to_end_small() {
+    let cfg = ucr::ucr_suite()
+        .into_iter()
+        .find(|c| c.name == "TwoLeadECG")
+        .unwrap();
+    let data = ucr::generate(cfg, 40, 11);
+    let items = encode_ucr(&data, 8);
+    let mut rng = Rng64::seed_from_u64(6);
+    let mut engine = ucr_engine(cfg.p, cfg.q, &items, TnnParams::default(), &mut rng);
+    for e in 0..4 {
+        let out = run_stream(&mut engine, items.clone(), 16, 20 + e).unwrap();
+        assert_eq!(out.processed as usize, items.len());
+    }
+    let mut pred = Vec::new();
+    let mut truth = Vec::new();
+    for item in &items {
+        if let Some(w) = engine.infer_winner(&item.volley).unwrap() {
+            pred.push(w);
+            truth.push(item.label.unwrap());
+        }
+    }
+    assert!(pred.len() * 2 > items.len());
+    let ri = ucr::rand_index(&pred, &truth);
+    assert!(ri > 0.55, "rand index {ri}");
+}
+
+#[test]
+fn hardware_flow_end_to_end_for_one_column() {
+    let d = build_column(12, 3, 12, BrvSource::Lfsr);
+    let base = synthesize(&d.netlist, Flow::Baseline);
+    let t7 = synthesize(&d.netlist, Flow::Tnn7);
+    let rb = analyze(&base.mapped, &cells::asap7(), 16);
+    let r7 = analyze(&t7.mapped, &cells::tnn7(), 16);
+    let (p, dl, a, e) = r7.improvement_vs(&rb);
+    assert!(p > 0.0 && dl > 0.0 && a > 0.0 && e > 0.0, "{p} {dl} {a} {e}");
+    // Fig. 12 mechanism at integration level.
+    assert!(base.stats.wall >= t7.stats.wall);
+    // layout
+    let lb = tnn7::layout::place_and_estimate(&base.mapped, &cells::asap7());
+    let l7 = tnn7::layout::place_and_estimate(&t7.mapped, &cells::tnn7());
+    assert!(l7.wl_density < lb.wl_density);
+}
+
+/// Property: for random columns and volleys, the three implementations
+/// (golden folded, golden cycle-accurate, gate-level with hard macros)
+/// produce identical spikes, and WTA/weight invariants hold.
+#[test]
+fn property_three_implementations_agree() {
+    let mut rng = Rng64::seed_from_u64(31337);
+    for trial in 0..12 {
+        let p = rng.gen_range(2, 8);
+        let q = rng.gen_range(1, 4);
+        let theta = rng.gen_range(1, p * 4) as u32;
+        let params = TnnParams::default();
+        let design = build_column(p, q, theta, BrvSource::Inputs);
+        let mut gate = ColumnSim::new(&design, params.clone()).unwrap();
+        let mut golden = Column::with_random_weights(p, q, theta, params, &mut rng);
+        gate.set_weights(golden.weights());
+        for gamma in 0..10 {
+            let xs: Vec<SpikeTime> = (0..p)
+                .map(|_| {
+                    if rng.gen_bool(0.3) {
+                        SpikeTime::NONE
+                    } else {
+                        SpikeTime::at(rng.gen_range(0, 8) as u32)
+                    }
+                })
+                .collect();
+            let mut u1 = vec![0.0; p * q];
+            let mut u2 = vec![0.0; p * q];
+            rng.fill_f64(&mut u1);
+            rng.fill_f64(&mut u2);
+            let cyc = golden.infer_cycle_accurate(&xs);
+            let fold = golden.infer(&xs);
+            assert_eq!(cyc, fold, "trial {trial} gamma {gamma}: folded vs cycle");
+            let gate_out = gate.run_gamma(&xs, &u1, &u2);
+            let gold_out = golden.step_with_uniforms(&xs, &u1, &u2);
+            assert_eq!(gate_out, gold_out.output, "trial {trial} gamma {gamma}: gate vs golden");
+            assert_eq!(gate.weights(), golden.weights());
+            // invariants
+            assert!(gold_out.output.iter().filter(|t| t.is_spike()).count() <= 1);
+            assert!(golden.weights().iter().all(|&w| w <= 7));
+        }
+    }
+}
+
+/// Property: synthesis never changes the number of primary IO, and the
+/// TNN7 flow never produces more cells than the baseline.
+#[test]
+fn property_synthesis_io_and_monotonicity() {
+    let mut rng = Rng64::seed_from_u64(99);
+    for _ in 0..5 {
+        let p = rng.gen_range(3, 10);
+        let q = rng.gen_range(1, 4);
+        let d = build_column(p, q, (p as u32 * 7) / 4, BrvSource::Lfsr);
+        let base = synthesize(&d.netlist, Flow::Baseline);
+        let t7 = synthesize(&d.netlist, Flow::Tnn7);
+        assert_eq!(base.mapped.inputs.len(), d.netlist.inputs.len());
+        assert_eq!(base.mapped.outputs.len(), d.netlist.outputs.len());
+        assert_eq!(t7.mapped.inputs.len(), d.netlist.inputs.len());
+        assert!(t7.stats.cells_out < base.stats.cells_out);
+        assert!(t7.mapped.macro_count() == d.netlist.macros.len());
+    }
+}
+
+#[test]
+fn xla_runtime_full_pipeline_if_artifacts_present() {
+    if !std::path::Path::new("artifacts/manifest.kv").exists() {
+        return;
+    }
+    let rt = tnn7::runtime::XlaRuntime::load("artifacts").unwrap();
+    let dataset = ucr::ucr_suite()
+        .into_iter()
+        .find(|c| c.name == "TwoLeadECG")
+        .unwrap();
+    let data = ucr::generate(dataset, 10, 3);
+    let items = encode_ucr(&data, 8);
+    let mut rng = Rng64::seed_from_u64(8);
+    let exe = rt.column(dataset.p, dataset.q, "step").unwrap();
+    let mut engine = tnn7::coordinator::Engine::xla(exe, &mut rng);
+    let out = run_stream(&mut engine, items, 8, 21).unwrap();
+    assert_eq!(out.processed, 20);
+    assert!(out.throughput_hz > 10.0);
+}
