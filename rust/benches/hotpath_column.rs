@@ -1,7 +1,11 @@
 //! L3 hot-path benchmark: gamma-cycle throughput of each engine — golden
-//! model, XLA single-step, and the batched XLA pipeline — on the 82×2
-//! column. Feeds the §Perf section of EXPERIMENTS.md.
+//! model, gate-level toggle collection (scalar vs 64-lane bit-parallel,
+//! selected via `SimBackend`), XLA single-step, and the batched XLA
+//! pipeline — on the 82×2 column. Feeds the §Perf section of
+//! EXPERIMENTS.md.
 use tnn7::coordinator::{encode_ucr, Engine};
+use tnn7::gates::column_design::{build_column, BrvSource};
+use tnn7::gates::{collect_toggles, SimBackend};
 use tnn7::runtime::XlaRuntime;
 use tnn7::tnn::params::TnnParams;
 use tnn7::ucr;
@@ -24,6 +28,27 @@ fn main() {
     });
     println!("{}", s.report());
     println!("  => {:.0} gamma cycles/s", 1e9 / s.median_ns());
+
+    // gate-level toggle collection (feeds the activity-based power model):
+    // the same netlist under both simulation backends, 128 cycles per
+    // iteration (two 64-lane passes for the bit-parallel engine).
+    let theta = (dataset.p as u32 * 7) / 4;
+    let design = build_column(dataset.p, dataset.q, theta, BrvSource::Lfsr);
+    let nl = &design.netlist;
+    let mut per_cycle = [0.0f64; 2];
+    for (i, backend) in [SimBackend::Scalar, SimBackend::BitParallel64].iter().enumerate() {
+        let s = b.bench(
+            &format!("gate sim toggle collect (82x2, 128 cyc, {})", backend.name()),
+            || black_box(collect_toggles(nl, 128, 7, *backend).unwrap().toggles.len()),
+        );
+        println!("{}", s.report());
+        per_cycle[i] = s.median_ns() / 128.0;
+        println!("  => {:.0} gate-sim cycles/s", 1e9 / per_cycle[i]);
+    }
+    println!(
+        "  => bit-parallel toggle-collection speedup: {:.1}x",
+        per_cycle[0] / per_cycle[1]
+    );
 
     // XLA engines
     let Ok(rt) = XlaRuntime::load("artifacts") else {

@@ -1,0 +1,92 @@
+//! Gate-sim toggle-collection throughput: scalar vs 64-lane bit-parallel
+//! engine on the 82×2 TwoLeadECG column (the acceptance benchmark for the
+//! bit-parallel simulator). Prints per-cycle costs and the speedup, verifies
+//! that both backends measure the same switching activity, and records the
+//! baseline/after pair in `BENCH_sim.json`.
+//!
+//! Run with `cargo bench --bench sim_throughput` (set `TNN7_BENCH_FAST=1`
+//! for a CI-speed configuration).
+
+use tnn7::gates::column_design::{build_column, BrvSource};
+use tnn7::gates::{collect_toggles, SimBackend};
+use tnn7::ucr;
+use tnn7::util::bench::{black_box, Bencher};
+use tnn7::util::json::Json;
+
+/// One logical benchmark iteration simulates this many cycles (a multiple
+/// of 64 so both backends do identical work).
+const CYCLES_PER_ITER: u64 = 512;
+
+fn main() {
+    let cfg = ucr::ucr_suite()
+        .into_iter()
+        .find(|c| c.name == "TwoLeadECG")
+        .unwrap();
+    let theta = (cfg.p as u32 * 7) / 4;
+    let d = build_column(cfg.p, cfg.q, theta, BrvSource::Lfsr);
+    let nl = &d.netlist;
+    println!(
+        "82x2 TwoLeadECG column: {} nets, {} macro instances",
+        nl.len(),
+        nl.macros.len()
+    );
+
+    let b = Bencher::from_env();
+    let s_scalar = b.bench("scalar toggle collection (512 cycles, 82x2)", || {
+        let r = collect_toggles(nl, CYCLES_PER_ITER, 7, SimBackend::Scalar).unwrap();
+        black_box(r.toggles.len())
+    });
+    println!("{}", s_scalar.report());
+    let s_word = b.bench("bit-parallel-64 toggle collection (512 cycles, 82x2)", || {
+        let r = collect_toggles(nl, CYCLES_PER_ITER, 7, SimBackend::BitParallel64).unwrap();
+        black_box(r.toggles.len())
+    });
+    println!("{}", s_word.report());
+
+    let scalar_ns_cycle = s_scalar.median_ns() / CYCLES_PER_ITER as f64;
+    let word_ns_cycle = s_word.median_ns() / CYCLES_PER_ITER as f64;
+    let speedup = s_scalar.median_ns() / s_word.median_ns();
+    println!(
+        "  => scalar {scalar_ns_cycle:.1} ns/cycle | bit-parallel {word_ns_cycle:.2} ns/cycle | \
+         speedup {speedup:.1}x (acceptance target >= 10x)"
+    );
+
+    // Cross-check: both backends must measure the same switching activity.
+    let a_s = collect_toggles(nl, 8192, 11, SimBackend::Scalar)
+        .unwrap()
+        .activity();
+    let a_w = collect_toggles(nl, 8192, 11, SimBackend::BitParallel64)
+        .unwrap()
+        .activity();
+    println!(
+        "  activity cross-check: scalar α {a_s:.4} vs bit-parallel α {a_w:.4} (Δ {:.4})",
+        (a_s - a_w).abs()
+    );
+    assert!(
+        (a_s - a_w).abs() < 0.05,
+        "backends disagree on measured activity"
+    );
+
+    let json = Json::obj()
+        .set("design", nl.name.as_str())
+        .set("nets", nl.len())
+        .set("macros", nl.macros.len())
+        .set("cycles_per_iter", CYCLES_PER_ITER as f64)
+        .set(
+            "baseline_scalar",
+            Json::obj()
+                .set("median_ns_per_iter", s_scalar.median_ns())
+                .set("ns_per_cycle", scalar_ns_cycle)
+                .set("activity", a_s),
+        )
+        .set(
+            "after_bit_parallel_64",
+            Json::obj()
+                .set("median_ns_per_iter", s_word.median_ns())
+                .set("ns_per_cycle", word_ns_cycle)
+                .set("activity", a_w),
+        )
+        .set("speedup", speedup);
+    std::fs::write("BENCH_sim.json", json.to_pretty()).expect("write BENCH_sim.json");
+    println!("  wrote BENCH_sim.json");
+}

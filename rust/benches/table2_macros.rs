@@ -1,7 +1,13 @@
 //! Bench for paper Table II: per-macro PPA (TNN7 hard cell vs synthesized
-//! ASAP7 baseline), plus the per-macro synthesis+analysis cost.
+//! ASAP7 baseline), plus the per-macro synthesis+analysis cost and the
+//! scalar vs word-level behavioral-model evaluation cost (the inner loop of
+//! the two simulation backends), with a lane-for-lane cross-check.
+use tnn7::gates::macros9::{
+    self, MacroState, WordMacroState, ALL_MACROS, WORD_LANES,
+};
 use tnn7::harness;
-use tnn7::util::bench::Bencher;
+use tnn7::util::bench::{black_box, Bencher};
+use tnn7::util::Rng64;
 
 fn main() {
     let rows = harness::table2();
@@ -9,4 +15,80 @@ fn main() {
     let b = Bencher::from_env();
     let stats = b.bench("table2: synthesize+analyze all 9 macros", || harness::table2());
     println!("{}", stats.report());
+
+    // Behavioral-model cost: evaluate+step all nine macros once per lane.
+    // The scalar engine pays this per cycle; the word engine amortizes it
+    // over 64 lanes.
+    let mut rng = Rng64::seed_from_u64(42);
+    let max_pins = ALL_MACROS.iter().map(|k| k.input_pins().len()).max().unwrap();
+    let words: Vec<u64> = (0..max_pins).map(|_| rng.next_u64()).collect();
+    let bools: Vec<bool> = words.iter().map(|w| w & 1 == 1).collect();
+
+    let mut sstates: Vec<MacroState> = ALL_MACROS.iter().map(|_| MacroState::default()).collect();
+    let mut sout = Vec::new();
+    let s_scalar = b.bench("scalar eval+step, 9 macros x 64 lanes", || {
+        for _lane in 0..WORD_LANES {
+            for (k, &kind) in ALL_MACROS.iter().enumerate() {
+                let n = kind.input_pins().len();
+                macros9::eval(kind, &bools[..n], &sstates[k], &mut sout);
+                macros9::step(kind, &bools[..n], &mut sstates[k]);
+            }
+        }
+        black_box(sstates[1].bits())
+    });
+    println!("{}", s_scalar.report());
+
+    let mut wstates: Vec<WordMacroState> =
+        ALL_MACROS.iter().map(|_| WordMacroState::default()).collect();
+    let mut wout = Vec::new();
+    let s_word = b.bench("word eval_word+step_word, 9 macros (64 lanes/call)", || {
+        for (k, &kind) in ALL_MACROS.iter().enumerate() {
+            let n = kind.input_pins().len();
+            macros9::eval_word(kind, &words[..n], &wstates[k], &mut wout);
+            macros9::step_word(kind, &words[..n], &mut wstates[k]);
+        }
+        black_box(wstates[1].plane(0))
+    });
+    println!("{}", s_word.report());
+    println!(
+        "  => word-level macro-model speedup: {:.1}x over 64 scalar lanes",
+        s_scalar.median_ns() / s_word.median_ns()
+    );
+
+    // Cross-check: lane-for-lane equivalence of the word models against the
+    // scalar models over a fresh randomized run (the longer exhaustive
+    // version lives in the macros9 unit tests).
+    for &kind in &ALL_MACROS {
+        let n = kind.input_pins().len();
+        let mut wst = WordMacroState::default();
+        let mut lanes: Vec<MacroState> =
+            (0..WORD_LANES).map(|_| MacroState::default()).collect();
+        let mut wo = Vec::new();
+        let mut so = Vec::new();
+        for cycle in 0..64u32 {
+            let ins: Vec<u64> = (0..n).map(|_| rng.next_u64() & rng.next_u64()).collect();
+            macros9::eval_word(kind, &ins, &wst, &mut wo);
+            for lane in 0..WORD_LANES {
+                let lin: Vec<bool> = ins.iter().map(|w| w >> lane & 1 == 1).collect();
+                macros9::eval(kind, &lin, &lanes[lane], &mut so);
+                for (pin, &w) in wo.iter().enumerate() {
+                    assert_eq!(
+                        w >> lane & 1 == 1,
+                        so[pin],
+                        "{kind:?} pin {pin} lane {lane} cycle {cycle}"
+                    );
+                }
+                macros9::step(kind, &lin, &mut lanes[lane]);
+            }
+            macros9::step_word(kind, &ins, &mut wst);
+        }
+        for lane in 0..WORD_LANES {
+            assert_eq!(
+                wst.extract_lane(lane).bits(),
+                lanes[lane].bits(),
+                "{kind:?} final state, lane {lane}"
+            );
+        }
+    }
+    println!("  macro word/scalar lane-for-lane cross-check OK (9 macros x 64 cycles x 64 lanes)");
 }

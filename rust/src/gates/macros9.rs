@@ -357,6 +357,234 @@ pub fn step(kind: MacroKind, inputs: &[bool], st: &mut MacroState) {
 }
 
 // ---------------------------------------------------------------------
+// 64-lane word-level behavioral models (bit-parallel simulation)
+//
+// Every quantity is bit-sliced across 64 independent simulation lanes: bit
+// `l` of a `u64` word is the boolean value in lane `l`. Multi-bit state
+// fields (the 3-bit weight / counter of `syn_weight_update`, the spike_gen
+// counter) are stored as bit-planes, and arithmetic on them is done with
+// ripple carry/borrow logic over the planes — one `u64` op per plane
+// instead of one bool op per lane. `eval_word`/`step_word` are exact
+// word-wide transcriptions of `eval`/`step` above (proved lane-by-lane by
+// the equivalence tests below).
+// ---------------------------------------------------------------------
+
+/// Number of independent stimulus lanes in a machine word.
+pub const WORD_LANES: usize = 64;
+
+/// Maximum `state_bits()` across the nine macros (`SynWeightUpdate`'s 7).
+pub const MAX_STATE_BITS: usize = 7;
+
+/// Behavioral state of one macro instance across [`WORD_LANES`] lanes:
+/// plane `k` holds state bit `k` of every lane (bit `l` of `planes[k]` is
+/// state bit `k` of lane `l`, matching the [`MacroState`] bit layout).
+#[derive(Clone, Debug, Default)]
+pub struct WordMacroState {
+    planes: [u64; MAX_STATE_BITS],
+}
+
+impl WordMacroState {
+    /// State-bit plane `k` across all lanes.
+    pub fn plane(&self, k: usize) -> u64 {
+        self.planes[k]
+    }
+
+    pub fn set_plane(&mut self, k: usize, v: u64) {
+        self.planes[k] = v;
+    }
+
+    /// Replicate a scalar state into every lane.
+    pub fn broadcast(st: &MacroState) -> WordMacroState {
+        let mut w = WordMacroState::default();
+        for k in 0..MAX_STATE_BITS {
+            if st.bits() >> k & 1 == 1 {
+                w.planes[k] = !0;
+            }
+        }
+        w
+    }
+
+    /// Extract one lane as a scalar state.
+    pub fn extract_lane(&self, lane: usize) -> MacroState {
+        debug_assert!(lane < WORD_LANES);
+        let mut bits = 0u32;
+        for k in 0..MAX_STATE_BITS {
+            bits |= ((self.planes[k] >> lane & 1) as u32) << k;
+        }
+        MacroState::from_bits(bits)
+    }
+
+    fn field3(&self, lo: usize) -> [u64; 3] {
+        [self.planes[lo], self.planes[lo + 1], self.planes[lo + 2]]
+    }
+
+    fn set_field3(&mut self, lo: usize, v: [u64; 3]) {
+        self.planes[lo] = v[0];
+        self.planes[lo + 1] = v[1];
+        self.planes[lo + 2] = v[2];
+    }
+}
+
+/// Bit-sliced wrapping increment of a 3-bit field (per lane).
+#[inline]
+fn inc3(b: [u64; 3]) -> [u64; 3] {
+    let carry0 = b[0];
+    let carry1 = b[1] & carry0;
+    [!b[0], b[1] ^ carry0, b[2] ^ carry1]
+}
+
+/// Bit-sliced wrapping decrement of a 3-bit field (per lane).
+#[inline]
+fn dec3(b: [u64; 3]) -> [u64; 3] {
+    let borrow0 = !b[0];
+    let borrow1 = !b[1] & borrow0;
+    [!b[0], b[1] ^ borrow0, b[2] ^ borrow1]
+}
+
+/// Per-lane 3-way select: lane takes `b` where `m` is set, else `a`.
+#[inline]
+fn sel3(m: u64, a: [u64; 3], b: [u64; 3]) -> [u64; 3] {
+    [
+        (a[0] & !m) | (b[0] & m),
+        (a[1] & !m) | (b[1] & m),
+        (a[2] & !m) | (b[2] & m),
+    ]
+}
+
+/// Word-wide combinational evaluation: 64 lanes of [`eval`] in one call.
+/// `inputs[k]` carries input pin `k` for all lanes; `out[k]` returns output
+/// pin `k` for all lanes.
+pub fn eval_word(kind: MacroKind, inputs: &[u64], st: &WordMacroState, out: &mut Vec<u64>) {
+    out.clear();
+    match kind {
+        MacroKind::SynReadout => {
+            let (c0, c1, c2, rd) = (inputs[0], inputs[1], inputs[2], inputs[3]);
+            out.push(rd & (c0 | c1 | c2));
+        }
+        MacroKind::SynWeightUpdate => {
+            let spike = inputs[0];
+            let w = st.field3(0);
+            let c = st.field3(3);
+            let rd = st.plane(6);
+            let start = spike & !rd;
+            let eff_c = sel3(start, c, w);
+            out.push(w[0]);
+            out.push(w[1]);
+            out.push(w[2]);
+            out.push(eff_c[0]);
+            out.push(eff_c[1]);
+            out.push(eff_c[2]);
+            out.push(rd | start);
+        }
+        MacroKind::LessEqual => {
+            let data = inputs[0];
+            let inh_seen = st.plane(0);
+            let passed = st.plane(1);
+            out.push(data & (!inh_seen | passed));
+        }
+        MacroKind::StdpCaseGen => {
+            let (greater, ein, eout) = (inputs[0], inputs[1], inputs[2]);
+            out.push(ein & eout & !greater);
+            out.push(ein & eout & greater);
+            out.push(ein & !eout);
+            out.push(!ein & eout);
+        }
+        MacroKind::IncDec => {
+            let (c0, c1, c2, c3) = (inputs[0], inputs[1], inputs[2], inputs[3]);
+            let (bcap, bmin, bsrch, bbkf, bstab) =
+                (inputs[4], inputs[5], inputs[6], inputs[7], inputs[8]);
+            out.push(((c0 & bcap) | (c2 & bsrch)) & bstab);
+            out.push(((c1 & bmin) | (c3 & bbkf)) & bstab);
+        }
+        MacroKind::StabilizeFunc => {
+            // 8:1 mux per lane as a tree of word-wide 2:1 selects.
+            let sel = |s: u64, a: u64, b: u64| (a & !s) | (b & s);
+            let (s0, s1, s2) = (inputs[0], inputs[1], inputs[2]);
+            let m0 = sel(s0, inputs[3], inputs[4]);
+            let m1 = sel(s0, inputs[5], inputs[6]);
+            let m2 = sel(s0, inputs[7], inputs[8]);
+            let m3 = sel(s0, inputs[9], inputs[10]);
+            let n0 = sel(s1, m0, m1);
+            let n1 = sel(s1, m2, m3);
+            out.push(sel(s2, n0, n1));
+        }
+        MacroKind::SpikeGen => {
+            out.push(st.plane(3)); // active
+        }
+        MacroKind::Pulse2Edge => {
+            out.push(inputs[0] | st.plane(0));
+        }
+        MacroKind::Edge2Pulse => {
+            out.push(inputs[0] & !st.plane(0));
+        }
+    }
+}
+
+/// Word-wide clock-edge state update: 64 lanes of [`step`] in one call.
+pub fn step_word(kind: MacroKind, inputs: &[u64], st: &mut WordMacroState) {
+    match kind {
+        MacroKind::SynWeightUpdate => {
+            let (spike, inc, dec, grst) = (inputs[0], inputs[1], inputs[2], inputs[3]);
+            let w_old = st.field3(0);
+            let c_old = st.field3(3);
+            let rd_old = st.plane(6);
+            // STDP port: saturating unit inc/dec, INC-branch priority (a
+            // lane decrements when the inc branch was not taken, i.e. also
+            // when INC was asserted at saturation — matching `step`).
+            let at_max = w_old[0] & w_old[1] & w_old[2];
+            let w_nz = w_old[0] | w_old[1] | w_old[2];
+            let m_inc = inc & !at_max;
+            let m_dec = dec & !m_inc & w_nz;
+            let w_new = sel3(m_dec, sel3(m_inc, w_old, inc3(w_old)), dec3(w_old));
+            // Readout counter / reading flag. Load value is the *pre-update*
+            // weight minus one, floored at zero.
+            let start = spike & !rd_old & !grst;
+            let c_nz = c_old[0] | c_old[1] | c_old[2];
+            let m_cdec = !grst & !start & rd_old & c_nz;
+            let load = dec3(w_old).map(|plane| plane & w_nz);
+            let c_stepped = sel3(m_cdec, c_old, dec3(c_old));
+            let c_next = sel3(start, c_stepped, load).map(|plane| plane & !grst);
+            let rd_new = (rd_old | start) & !grst;
+            st.set_field3(0, w_new);
+            st.set_field3(3, c_next);
+            st.set_plane(6, rd_new);
+        }
+        MacroKind::LessEqual => {
+            let (data, inhibit, grst) = (inputs[0], inputs[1], inputs[2]);
+            let inh_seen = st.plane(0);
+            let passed = st.plane(1);
+            st.set_plane(1, !grst & (passed | (data & !inh_seen)));
+            st.set_plane(0, !grst & (inh_seen | inhibit));
+        }
+        MacroKind::SpikeGen => {
+            let (pulse, grst) = (inputs[0], inputs[1]);
+            let cnt = st.field3(0);
+            let active = st.plane(3);
+            let started = st.plane(4);
+            let fire = !grst & !active & pulse & !started;
+            let cnt_nz = cnt[0] | cnt[1] | cnt[2];
+            let in_active = !grst & !fire & active;
+            let stop = in_active & !cnt_nz;
+            let m_cdec = in_active & cnt_nz;
+            // fire loads 7 (all planes set); otherwise decrement-or-hold.
+            let held = sel3(m_cdec, cnt, dec3(cnt));
+            let cnt_next = sel3(fire, held, [!0, !0, !0]).map(|plane| plane & !grst);
+            st.set_field3(0, cnt_next);
+            st.set_plane(3, !grst & (fire | (active & !stop)));
+            st.set_plane(4, !grst & (started | fire));
+        }
+        MacroKind::Pulse2Edge => {
+            let (pulse, grst) = (inputs[0], inputs[1]);
+            st.set_plane(0, !grst & (st.plane(0) | pulse));
+        }
+        MacroKind::Edge2Pulse => {
+            st.set_plane(0, inputs[0] & !inputs[1]);
+        }
+        _ => {} // combinational macros hold no state
+    }
+}
+
+// ---------------------------------------------------------------------
 // Generic-gate expansions (the ASAP7 baseline RTL)
 //
 // Note on SpikeGen timing: SPIKE is a Moore output that rises one cycle
@@ -688,6 +916,75 @@ mod tests {
         // edge rises at t=3 and stays; regenerated pulse is exactly t=3.
         assert_eq!(edge_hist, vec![false, false, false, true, true, true, true, true]);
         assert_eq!(pulse_hist, vec![false, false, false, true, false, false, false, false]);
+    }
+
+    #[test]
+    fn word_models_match_scalar_models_lane_for_lane() {
+        // For every macro: drive 64 independent random stimulus streams
+        // through the word-level model and, lane by lane, through the scalar
+        // model; outputs and post-step states must agree exactly, including
+        // across periodic gamma resets.
+        use crate::util::Rng64;
+        for kind in ALL_MACROS {
+            let n_in = kind.input_pins().len();
+            let mut rng = Rng64::seed_from_u64(0xA11CE ^ kind as u64);
+            let mut wst = WordMacroState::default();
+            let mut sst: Vec<MacroState> = (0..WORD_LANES).map(|_| MacroState::default()).collect();
+            let mut wout = Vec::new();
+            let mut sout = Vec::new();
+            let grst_pin = kind.input_pins().iter().position(|&p| p == "GRST");
+            for cycle in 0..400u32 {
+                let inputs: Vec<u64> = (0..n_in)
+                    .map(|i| {
+                        if Some(i) == grst_pin && cycle % 16 == 15 {
+                            // gamma boundary: reset half the lanes, leave
+                            // the rest running (exercises both phases).
+                            rng.next_u64() | 0xFFFF_FFFF
+                        } else {
+                            rng.next_u64() & rng.next_u64() // p = 1/4
+                        }
+                    })
+                    .collect();
+                eval_word(kind, &inputs, &wst, &mut wout);
+                for lane in 0..WORD_LANES {
+                    let lane_in: Vec<bool> =
+                        inputs.iter().map(|w| w >> lane & 1 == 1).collect();
+                    eval(kind, &lane_in, &sst[lane], &mut sout);
+                    for (pin, &w) in wout.iter().enumerate() {
+                        assert_eq!(
+                            w >> lane & 1 == 1,
+                            sout[pin],
+                            "{kind:?} pin {pin} lane {lane} cycle {cycle}"
+                        );
+                    }
+                    step(kind, &lane_in, &mut sst[lane]);
+                }
+                step_word(kind, &inputs, &mut wst);
+                for lane in 0..WORD_LANES {
+                    assert_eq!(
+                        wst.extract_lane(lane).bits(),
+                        sst[lane].bits(),
+                        "{kind:?} state lane {lane} cycle {cycle}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn word_state_broadcast_and_extract_roundtrip() {
+        let mut st = MacroState::default();
+        st.set_weight(5);
+        let w = WordMacroState::broadcast(&st);
+        for lane in [0, 1, 31, 63] {
+            assert_eq!(w.extract_lane(lane).bits(), st.bits());
+            assert_eq!(w.extract_lane(lane).weight(), 5);
+        }
+        let mut w2 = WordMacroState::default();
+        w2.set_plane(0, 1 << 7); // weight bit 0 set only in lane 7
+        assert_eq!(w2.extract_lane(7).weight(), 1);
+        assert_eq!(w2.extract_lane(6).weight(), 0);
+        assert_eq!(w2.plane(0), 1 << 7);
     }
 
     #[test]

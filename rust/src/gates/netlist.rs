@@ -142,10 +142,16 @@ impl Netlist {
         }
     }
 
-    /// Topological order of combinational evaluation: source and
-    /// state-element nets are level 0; each comb gate (including Mealy macro
-    /// pins) comes after its fan-ins. Errors on a combinational cycle.
-    pub fn levelize(&self) -> Result<Vec<NetId>, String> {
+    /// Level-packed topological schedule of combinational evaluation:
+    /// `levels[k]` holds every comb net (including Mealy macro pins) whose
+    /// longest chain of comb fan-ins has length `k`. Source and
+    /// state-element nets are not scheduled (they change only at inputs /
+    /// clock edges). Nets within a level are sorted by id, which both makes
+    /// the schedule deterministic and keeps the simulators' inner loops
+    /// walking memory mostly forward; levels are also the natural split
+    /// points for a future thread-per-level evaluation. Errors on a
+    /// combinational cycle.
+    pub fn levelize_buckets(&self) -> Result<Vec<Vec<NetId>>, String> {
         let n = self.gates.len();
         // A node participates in comb evaluation iff it has comb fan-ins.
         let mut is_comb = vec![false; n];
@@ -170,27 +176,39 @@ impl Netlist {
                 }
             }
         }
-        let mut order = Vec::with_capacity(comb_count);
-        let mut ready: Vec<NetId> = (0..n as NetId)
+        let mut frontier: Vec<NetId> = (0..n as NetId)
             .filter(|&i| is_comb[i as usize] && indegree[i as usize] == 0)
             .collect();
-        while let Some(id) = ready.pop() {
-            order.push(id);
-            for &succ in &fanout[id as usize] {
-                indegree[succ as usize] -= 1;
-                if indegree[succ as usize] == 0 {
-                    ready.push(succ);
+        let mut levels: Vec<Vec<NetId>> = Vec::new();
+        let mut scheduled = 0usize;
+        while !frontier.is_empty() {
+            scheduled += frontier.len();
+            let mut next = Vec::new();
+            for &id in &frontier {
+                for &succ in &fanout[id as usize] {
+                    indegree[succ as usize] -= 1;
+                    if indegree[succ as usize] == 0 {
+                        next.push(succ);
+                    }
                 }
             }
+            next.sort_unstable();
+            levels.push(std::mem::replace(&mut frontier, next));
         }
-        if order.len() != comb_count {
+        if scheduled != comb_count {
             return Err(format!(
                 "combinational cycle: {} of {} comb gates unordered",
-                comb_count - order.len(),
+                comb_count - scheduled,
                 comb_count
             ));
         }
-        Ok(order)
+        Ok(levels)
+    }
+
+    /// Flat topological order of combinational evaluation (the level-packed
+    /// schedule of [`Self::levelize_buckets`] flattened level by level).
+    pub fn levelize(&self) -> Result<Vec<NetId>, String> {
+        Ok(self.levelize_buckets()?.into_iter().flatten().collect())
     }
 
     /// Fanout count per net (used by timing/power models).
@@ -678,6 +696,25 @@ mod tests {
         let pos_and = order.iter().position(|&i| i == x).unwrap();
         let pos_not = order.iter().position(|&i| i == y).unwrap();
         assert!(pos_and < pos_not);
+    }
+
+    #[test]
+    fn levelize_buckets_pack_by_depth() {
+        let mut b = NetBuilder::new("t");
+        let a = b.input("a");
+        let c = b.input("b");
+        let x = b.and(a, c); // depth 0
+        let w = b.or(a, c); // depth 0
+        let y = b.not(x); // depth 1
+        let z = b.xor(y, a); // depth 2
+        let q = b.dff(z, None, false);
+        b.output("q", q);
+        b.output("w", w);
+        let nl = b.finish();
+        let levels = nl.levelize_buckets().unwrap();
+        assert_eq!(levels, vec![vec![x, w], vec![y], vec![z]]);
+        let flat = nl.levelize().unwrap();
+        assert_eq!(flat, vec![x, w, y, z]);
     }
 
     #[test]

@@ -24,6 +24,7 @@ pub struct Simulator<'a> {
     values: Vec<bool>,
     macro_states: Vec<MacroState>,
     input_index: HashMap<&'a str, NetId>,
+    output_index: HashMap<&'a str, NetId>,
     toggles: Vec<u64>,
     cycles: u64,
     // scratch buffers
@@ -49,6 +50,11 @@ impl<'a> Simulator<'a> {
             .iter()
             .map(|(name, id)| (name.as_str(), *id))
             .collect();
+        let output_index = nl
+            .outputs
+            .iter()
+            .map(|(name, id)| (name.as_str(), *id))
+            .collect();
         Ok(Simulator {
             nl,
             order,
@@ -56,6 +62,7 @@ impl<'a> Simulator<'a> {
             values,
             macro_states,
             input_index,
+            output_index,
             cycles: 0,
             dff_next: Vec::new(),
             macro_in: Vec::new(),
@@ -84,19 +91,25 @@ impl<'a> Simulator<'a> {
         self.values[id as usize]
     }
 
+    /// Net id of a primary output by name (indexed — O(1)). Panics on
+    /// unknown names (tests want loud failures).
+    pub fn get_output_net(&self, name: &str) -> NetId {
+        *self
+            .output_index
+            .get(name)
+            .unwrap_or_else(|| panic!("unknown output {name}"))
+    }
+
     /// Value of a primary output by name.
     pub fn get_output(&self, name: &str) -> bool {
-        let (_, id) = self
-            .nl
-            .outputs
-            .iter()
-            .find(|(n, _)| n == name)
-            .unwrap_or_else(|| panic!("unknown output {name}"));
-        self.values[*id as usize]
+        self.values[self.get_output_net(name) as usize]
     }
 
     /// Combinational settle (phase 2). Counts toggles against the previous
     /// settled values.
+    // Index loop: the body calls `eval_net(&mut self)`, so an iterator
+    // borrow of `order` cannot be held across it.
+    #[allow(clippy::needless_range_loop)]
     pub fn settle(&mut self) {
         for k in 0..self.order.len() {
             let id = self.order[k];
@@ -217,11 +230,7 @@ impl<'a> Simulator<'a> {
     /// Average toggle rate (toggles per net per cycle) — the α activity
     /// factor used by the dynamic power model.
     pub fn activity(&self) -> f64 {
-        if self.cycles == 0 || self.nl.gates.is_empty() {
-            return 0.0;
-        }
-        let total: u64 = self.toggles.iter().sum();
-        total as f64 / (self.cycles as f64 * self.nl.gates.len() as f64)
+        super::mean_activity(&self.toggles, self.cycles)
     }
 
     /// Read a macro instance's behavioral state.
@@ -269,6 +278,23 @@ mod tests {
             sim.settle();
             assert_eq!(sim.get_output("x"), want);
         }
+    }
+
+    #[test]
+    fn output_index_resolves_names_to_nets() {
+        let mut b = NetBuilder::new("t");
+        let a = b.input("a");
+        let n = b.not(a);
+        b.output("n", n);
+        b.output("a_thru", a);
+        let nl = b.finish();
+        let mut sim = Simulator::new(&nl).unwrap();
+        assert_eq!(sim.get_output_net("n"), n);
+        assert_eq!(sim.get_output_net("a_thru"), a);
+        sim.set_input("a", true);
+        sim.settle();
+        assert!(!sim.get_output("n"));
+        assert!(sim.get_output("a_thru"));
     }
 
     #[test]

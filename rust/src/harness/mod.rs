@@ -7,6 +7,7 @@ use crate::cells;
 use crate::gates::column_design::{build_column, BrvSource};
 use crate::gates::macros9::{expand, MacroKind, ALL_MACROS};
 use crate::gates::netlist::NetBuilder;
+use crate::gates::{collect_toggles, SimBackend};
 use crate::layout::{place_and_estimate, LayoutReport};
 use crate::mnist::mnist_layer_geometries;
 use crate::ppa::report::{analyze, PpaReport};
@@ -14,7 +15,7 @@ use crate::ppa::scale::{scale_network, NetworkPpa};
 use crate::synth::flow::{synthesize, Flow};
 use crate::ucr::{ucr_suite, UcrConfig};
 use crate::util::json::Json;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Default gamma period (unit cycles) used by the PPA computation-time
 /// metric, matching the golden model's `TnnParams::default`.
@@ -305,6 +306,103 @@ pub fn print_fig13(base: &LayoutReport, t7: &LayoutReport) {
 }
 
 // ---------------------------------------------------------------------
+// Simulation engines — scalar vs 64-lane bit-parallel toggle collection
+// on the flagship 82×2 TwoLeadECG column (the functional-verification
+// hot path feeding the activity-based power model)
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct SimEnginesRow {
+    pub design: String,
+    pub nets: usize,
+    /// Simulated cycles per backend (the bit-parallel engine rounds up to a
+    /// whole number of 64-lane passes).
+    pub scalar_cycles: u64,
+    pub word_cycles: u64,
+    pub scalar_wall: Duration,
+    pub word_wall: Duration,
+    pub scalar_activity: f64,
+    pub word_activity: f64,
+}
+
+impl SimEnginesRow {
+    /// Wall-clock speedup of the bit-parallel engine, normalized per
+    /// simulated cycle.
+    pub fn speedup(&self) -> f64 {
+        let s = self.scalar_wall.as_secs_f64() / self.scalar_cycles.max(1) as f64;
+        let w = self.word_wall.as_secs_f64() / self.word_cycles.max(1) as f64;
+        s / w.max(1e-12)
+    }
+}
+
+/// Collect `cycles` cycles of toggle statistics on the 82×2 TwoLeadECG
+/// column with both simulation backends, timing each.
+pub fn sim_engines(cycles: u64) -> SimEnginesRow {
+    let cfg = ucr_suite()
+        .into_iter()
+        .find(|c| c.name == "TwoLeadECG")
+        .unwrap();
+    let theta = (cfg.p as u32 * 7) / 4;
+    let d = build_column(cfg.p, cfg.q, theta, BrvSource::Lfsr);
+    let t0 = Instant::now();
+    let s = collect_toggles(&d.netlist, cycles, 7, SimBackend::Scalar).unwrap();
+    let scalar_wall = t0.elapsed();
+    let t1 = Instant::now();
+    let w = collect_toggles(&d.netlist, cycles, 7, SimBackend::BitParallel64).unwrap();
+    let word_wall = t1.elapsed();
+    SimEnginesRow {
+        design: d.netlist.name.clone(),
+        nets: d.netlist.len(),
+        scalar_cycles: s.cycles,
+        word_cycles: w.cycles,
+        scalar_wall,
+        word_wall,
+        scalar_activity: s.activity(),
+        word_activity: w.activity(),
+    }
+}
+
+pub fn print_sim_engines(r: &SimEnginesRow) {
+    println!(
+        "Simulation engines: gate-sim toggle collection, {} ({} nets)",
+        r.design, r.nets
+    );
+    for (name, cycles, wall, act) in [
+        ("scalar", r.scalar_cycles, r.scalar_wall, r.scalar_activity),
+        (
+            "bit-parallel-64",
+            r.word_cycles,
+            r.word_wall,
+            r.word_activity,
+        ),
+    ] {
+        let per_cycle = wall.as_secs_f64() * 1e9 / cycles.max(1) as f64;
+        println!(
+            "{name:<16}: {cycles:>7} cycles in {:>10} ({per_cycle:>8.1} ns/cycle) | α = {act:.4}",
+            crate::util::bench::fmt_dur(wall),
+        );
+    }
+    println!(
+        "bit-parallel speedup: {:.1}x (α agreement: Δ = {:.4})",
+        r.speedup(),
+        (r.scalar_activity - r.word_activity).abs()
+    );
+}
+
+pub fn sim_engines_json(r: &SimEnginesRow) -> Json {
+    Json::obj()
+        .set("design", r.design.as_str())
+        .set("nets", r.nets)
+        .set("scalar_cycles", r.scalar_cycles as f64)
+        .set("word_cycles", r.word_cycles as f64)
+        .set("scalar_ms", r.scalar_wall.as_secs_f64() * 1e3)
+        .set("word_ms", r.word_wall.as_secs_f64() * 1e3)
+        .set("scalar_activity", r.scalar_activity)
+        .set("word_activity", r.word_activity)
+        .set("speedup", r.speedup())
+}
+
+// ---------------------------------------------------------------------
 // JSON dump for all experiments
 // ---------------------------------------------------------------------
 
@@ -376,6 +474,25 @@ mod tests {
         assert!(d > 0.0, "delay improvement {d:.1}%");
         assert!(a > 0.0, "area improvement {a:.1}%");
         assert!(e > 0.0, "EDP improvement {e:.1}%");
+    }
+
+    #[test]
+    fn sim_engines_backends_agree_and_word_is_faster() {
+        let r = sim_engines(4096);
+        assert_eq!(r.scalar_cycles, 4096);
+        assert_eq!(r.word_cycles, 4096, "4096 cycles = exactly 64 word passes");
+        assert!(
+            (r.scalar_activity - r.word_activity).abs() < 0.05,
+            "α mismatch: scalar {} word {}",
+            r.scalar_activity,
+            r.word_activity
+        );
+        let j = sim_engines_json(&r).to_string();
+        assert!(j.contains("speedup"));
+        // No wall-clock assertion here: timing under `cargo test` on a
+        // loaded CI machine is nondeterministic. The ≥10× speedup claim is
+        // measured (median-of-N) by benches/sim_throughput.rs.
+        assert!(r.speedup() > 0.0);
     }
 
     #[test]

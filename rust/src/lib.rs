@@ -21,8 +21,11 @@
 //! * **Hardware half** — what TNN hardware *costs* (the substitute for the
 //!   Cadence/ASAP7 stack, built from scratch per the reproduction rules):
 //!   - [`gates`]: gate-level netlist IR, the nine TNN7 macros as gate
-//!     netlists, and an event-driven simulator used to verify them against
-//!     the golden model and to extract switching activity.
+//!     netlists, and two levelized simulators — a scalar reference engine
+//!     and a 64-lane bit-parallel engine (one `u64` word per net, toggles
+//!     counted by popcount), selectable via [`gates::SimBackend`] — used to
+//!     verify the macros against the golden model and to extract switching
+//!     activity for the power model (see README §"Simulation engines").
 //!   - [`cells`]: a 7nm-class standard-cell library model (ASAP7-calibrated)
 //!     plus the TNN7 hard-macro library carrying the paper's Table II
 //!     characterization.

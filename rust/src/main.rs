@@ -1,7 +1,7 @@
 //! `tnn7` — leader binary / CLI.
 //!
 //! Subcommands:
-//!   report table2|fig11|table3|fig12|fig13|headline [--quick]
+//!   report table2|fig11|table3|fig12|fig13|sim|headline [--quick]
 //!   run ucr   [--dataset NAME] [--engine xla|golden] [key=value …]
 //!   run mnist [--layers N] [key=value …]
 //!   synth --p P --q Q [--flow asap7|tnn7]
@@ -54,7 +54,7 @@ fn dispatch(args: &[String]) -> tnn7::Result<()> {
         _ => {
             eprintln!(
                 "usage: tnn7 <report|run|synth|serve|selftest> …\n\
-                 report table2|fig11|table3|fig12|fig13|headline [--quick]\n\
+                 report table2|fig11|table3|fig12|fig13|sim|headline [--quick]\n\
                  run ucr [--dataset NAME] [--engine xla|golden] [k=v …]\n\
                  run mnist [--layers N] [k=v …]\n\
                  synth --p P --q Q [--flow asap7|tnn7]\n\
@@ -76,6 +76,10 @@ fn report(args: &[String]) -> tnn7::Result<()> {
         Some("fig13") => {
             let (b, t) = harness::fig13();
             harness::print_fig13(&b, &t);
+        }
+        Some("sim") => {
+            let row = harness::sim_engines(if quick { 4096 } else { 65536 });
+            harness::print_sim_engines(&row);
         }
         Some("headline") => {
             let rows = harness::fig11(quick);

@@ -8,6 +8,8 @@
 //! toggle counts in the tests).
 
 use crate::cells::names;
+use crate::gates::netlist::Netlist;
+use crate::gates::{collect_toggles, SimBackend};
 use crate::synth::map::MappedNetlist;
 
 /// Per-net (P, α).
@@ -91,6 +93,41 @@ pub fn propagate(mapped: &MappedNetlist, priors: ActivityPriors) -> Activity {
         }
     }
     Activity { prob, alpha }
+}
+
+/// Switching activity *measured* by gate-level simulation, as an
+/// alternative to the probabilistic propagation above: per-net toggle
+/// counts from [`collect_toggles`] divided by simulated cycles. Because
+/// technology mapping preserves the generic `NetId` namespace, the α
+/// vector indexes directly into a `MappedNetlist` produced by
+/// `tech_map` on the **same** netlist (toggle collection must run on the
+/// pre-optimization netlist for the ids to line up).
+#[derive(Clone, Debug)]
+pub struct MeasuredActivity {
+    /// Per-net toggles per cycle.
+    pub alpha: Vec<f64>,
+    /// Simulated cycles behind the estimate (lane-cycles for the
+    /// bit-parallel backend).
+    pub cycles: u64,
+    pub backend: SimBackend,
+}
+
+/// Measure per-net transition density by simulating `cycles` cycles of the
+/// standard randomized TNN workload on the selected backend. The
+/// bit-parallel backend produces the same statistics ~64× faster (see
+/// `benches/sim_throughput.rs`).
+pub fn measure(
+    nl: &Netlist,
+    cycles: u64,
+    seed: u64,
+    backend: SimBackend,
+) -> Result<MeasuredActivity, String> {
+    let report = collect_toggles(nl, cycles, seed, backend)?;
+    Ok(MeasuredActivity {
+        alpha: report.alpha(),
+        cycles: report.cycles,
+        backend: report.backend,
+    })
 }
 
 fn eval_cell(cell: &str, ins: &[u32], prob: &[f64], alpha: &[f64]) -> (f64, f64) {
@@ -195,6 +232,40 @@ mod tests {
         let xa = act.alpha[mapped.outputs[0].1 as usize];
         let ya = act.alpha[mapped.outputs[1].1 as usize];
         assert!(ya > xa, "xor α={ya} vs and α={xa}");
+    }
+
+    #[test]
+    fn measured_activity_tracks_propagated_ordering() {
+        // Under sparse random stimulus the measured α must reproduce the
+        // structural ordering the probabilistic model predicts: XOR
+        // propagates strictly more toggles than AND of the same inputs.
+        let mut b = NetBuilder::new("t");
+        let a = b.input("a");
+        let c = b.input("b");
+        let x = b.and(a, c);
+        let y = b.xor(a, c);
+        b.output("x", x);
+        b.output("y", y);
+        let nl = b.finish();
+        let meas = measure(&nl, 8192, 5, SimBackend::BitParallel64).unwrap();
+        assert_eq!(meas.backend, SimBackend::BitParallel64);
+        assert_eq!(meas.cycles, 8192);
+        assert!(
+            meas.alpha[y as usize] > meas.alpha[x as usize],
+            "xor α {} vs and α {}",
+            meas.alpha[y as usize],
+            meas.alpha[x as usize]
+        );
+        // Both backends measure the same process.
+        let meas_s = measure(&nl, 8192, 5, SimBackend::Scalar).unwrap();
+        for id in [a, c, x, y] {
+            assert!(
+                (meas.alpha[id as usize] - meas_s.alpha[id as usize]).abs() < 0.05,
+                "net {id}: word {} vs scalar {}",
+                meas.alpha[id as usize],
+                meas_s.alpha[id as usize]
+            );
+        }
     }
 
     #[test]

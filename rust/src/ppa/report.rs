@@ -40,6 +40,26 @@ pub fn analyze(mapped: &MappedNetlist, lib: &CellLibrary, gamma_cycles: u32) -> 
     analyze_at(mapped, lib, gamma_cycles, ACLK_HZ, ActivityPriors::default())
 }
 
+/// Analyze with a per-net transition-density vector measured by gate-level
+/// simulation (see [`crate::ppa::activity::measure`] and
+/// [`crate::gates::SimBackend`]) instead of the probabilistic propagation.
+/// `alpha` must cover the mapped netlist's net namespace — i.e. toggle
+/// collection ran on the same (pre-optimization) netlist that was mapped.
+pub fn analyze_with_alpha(
+    mapped: &MappedNetlist,
+    lib: &CellLibrary,
+    gamma_cycles: u32,
+    alpha: &[f64],
+) -> PpaReport {
+    assert!(
+        alpha.len() >= mapped.net_space,
+        "alpha vector covers {} nets, mapped netlist has {}",
+        alpha.len(),
+        mapped.net_space
+    );
+    analyze_core(mapped, lib, gamma_cycles, ACLK_HZ, alpha)
+}
+
 /// Full-control variant.
 pub fn analyze_at(
     mapped: &MappedNetlist,
@@ -47,6 +67,17 @@ pub fn analyze_at(
     gamma_cycles: u32,
     aclk_hz: f64,
     priors: ActivityPriors,
+) -> PpaReport {
+    let act = propagate(mapped, priors);
+    analyze_core(mapped, lib, gamma_cycles, aclk_hz, &act.alpha)
+}
+
+fn analyze_core(
+    mapped: &MappedNetlist,
+    lib: &CellLibrary,
+    gamma_cycles: u32,
+    aclk_hz: f64,
+    alpha: &[f64],
 ) -> PpaReport {
     // ---- area ----
     let mut cell_area = 0.0;
@@ -74,11 +105,10 @@ pub fn analyze_at(
     let area = cell_area + net_area;
 
     // ---- dynamic power ----
-    let act = propagate(mapped, priors);
     let mut sw_energy_fj_cycle = 0.0; // per aclk cycle
     for c in &mapped.cells {
         let m = lib.get(c.cell);
-        sw_energy_fj_cycle += m.energy_fj * act.alpha[c.out as usize];
+        sw_energy_fj_cycle += m.energy_fj * alpha[c.out as usize];
     }
     for (kind, _, _) in &mapped.macros {
         // Characterized per-cycle internal energy (library `energy_fj`
@@ -172,6 +202,31 @@ mod tests {
         assert!(dd > 0.0, "delay improvement {dd:.1}%");
         assert!(da > 0.0, "area improvement {da:.1}%");
         assert!(dedp > 0.0, "EDP improvement {dedp:.1}%");
+    }
+
+    #[test]
+    fn measured_alpha_analysis_agrees_with_probabilistic() {
+        use crate::gates::SimBackend;
+        use crate::ppa::activity::measure;
+        use crate::synth::map::tech_map;
+        // Map the raw (un-optimized) netlist so NetIds line up with the
+        // toggle-collection run.
+        let d = build_column(6, 2, 6, BrvSource::Lfsr);
+        let lib = cells::tnn7();
+        let mapped = tech_map(&d.netlist, &lib);
+        let meas = measure(&d.netlist, 4096, 9, SimBackend::BitParallel64).unwrap();
+        let r_meas = analyze_with_alpha(&mapped, &lib, 16, &meas.alpha);
+        let r_prob = analyze(&mapped, &lib, 16);
+        assert!(r_meas.dynamic_nw > 0.0);
+        let ratio = r_meas.dynamic_nw / r_prob.dynamic_nw;
+        assert!(
+            ratio > 0.1 && ratio < 10.0,
+            "measured/probabilistic dynamic power ratio {ratio:.3}"
+        );
+        // Only dynamic power depends on the activity source.
+        assert_eq!(r_meas.area_um2, r_prob.area_um2);
+        assert_eq!(r_meas.leakage_nw, r_prob.leakage_nw);
+        assert_eq!(r_meas.critical_path_ps, r_prob.critical_path_ps);
     }
 
     #[test]

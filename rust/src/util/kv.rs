@@ -15,16 +15,42 @@ pub struct KvDoc {
 }
 
 /// Parse error with line information.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum KvError {
-    #[error("line {0}: expected `key = value`, got: {1}")]
     BadLine(usize, String),
-    #[error("missing key: {0}")]
     Missing(String),
-    #[error("key {0}: cannot parse {1:?} as {2}")]
     BadValue(String, String, &'static str),
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for KvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KvError::BadLine(line, raw) => {
+                write!(f, "line {line}: expected `key = value`, got: {raw}")
+            }
+            KvError::Missing(key) => write!(f, "missing key: {key}"),
+            KvError::BadValue(key, value, ty) => {
+                write!(f, "key {key}: cannot parse {value:?} as {ty}")
+            }
+            KvError::Io(e) => e.fmt(f),
+        }
+    }
+}
+
+impl std::error::Error for KvError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            KvError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for KvError {
+    fn from(e: std::io::Error) -> KvError {
+        KvError::Io(e)
+    }
 }
 
 impl KvDoc {

@@ -119,6 +119,36 @@ fn property_synthesis_io_and_monotonicity() {
     }
 }
 
+/// The two gate-simulation backends agree on toggle statistics for a full
+/// column, and the measured activity drives the PPA dynamic-power model end
+/// to end (design → toggle collection → measured α → power report).
+#[test]
+fn simulation_backends_cross_check_and_feed_ppa() {
+    use tnn7::gates::{collect_toggles, SimBackend};
+    use tnn7::ppa::activity::measure;
+    use tnn7::ppa::report::analyze_with_alpha;
+    use tnn7::synth::map::tech_map;
+    let d = build_column(10, 2, 17, BrvSource::Lfsr);
+    let s = collect_toggles(&d.netlist, 8192, 5, SimBackend::Scalar).unwrap();
+    let w = collect_toggles(&d.netlist, 8192, 5, SimBackend::BitParallel64).unwrap();
+    assert_eq!(s.cycles, 8192);
+    assert_eq!(w.cycles, 8192);
+    assert!(
+        (s.activity() - w.activity()).abs() < 0.05,
+        "scalar α {} vs bit-parallel α {}",
+        s.activity(),
+        w.activity()
+    );
+    // Measured activity → dynamic power (map the raw netlist so NetIds
+    // align with the toggle run).
+    let lib = cells::tnn7();
+    let mapped = tech_map(&d.netlist, &lib);
+    let meas = measure(&d.netlist, 8192, 5, SimBackend::BitParallel64).unwrap();
+    let rep = analyze_with_alpha(&mapped, &lib, 16, &meas.alpha);
+    assert!(rep.dynamic_nw > 0.0);
+    assert!(rep.power_nw > rep.leakage_nw);
+}
+
 #[test]
 fn xla_runtime_full_pipeline_if_artifacts_present() {
     if !std::path::Path::new("artifacts/manifest.kv").exists() {

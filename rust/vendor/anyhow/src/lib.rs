@@ -1,0 +1,198 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! Implements the API subset this workspace uses — `Error`, `Result`,
+//! `Context` (on both `Result` and `Option`), and the `anyhow!` / `bail!` /
+//! `ensure!` macros — with no dependencies, so the crate builds without
+//! network access. The error value is a rendered message chain (outermost
+//! context first); `{:#}` formatting joins the chain with `": "` like the
+//! real crate.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A message-chain error value. Like `anyhow::Error`, it deliberately does
+/// **not** implement `std::error::Error`, which is what makes the blanket
+/// `From<E: Error>` conversion coherent.
+pub struct Error {
+    /// Outermost-first messages: contexts, then the original error, then its
+    /// `source()` chain.
+    chain: Vec<String>,
+}
+
+/// `anyhow::Result` — defaults the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error {
+            chain: vec![msg.to_string()],
+        }
+    }
+
+    /// Prepend a context message (outermost position).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// Capture an error and its `source()` chain as rendered messages.
+    pub fn from_std<E: StdError + ?Sized>(e: &E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+
+    /// The error chain, outermost message first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root) message of the chain.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(self.chain.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.chain.first().map(|s| s.as_str()).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::from_std(&e)
+    }
+}
+
+/// Context-attachment extension trait for `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from_std(&e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from_std(&e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)+) => {
+        $crate::Error::msg(format!($($arg)+))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Return early with an [`Error`] when a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn context_chains_and_formats() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("loading manifest").unwrap_err();
+        assert_eq!(format!("{e}"), "loading manifest");
+        assert_eq!(format!("{e:#}"), "loading manifest: file missing");
+        assert_eq!(e.root_cause(), "file missing");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(format!("{e}"), "missing 7");
+    }
+
+    #[test]
+    fn macros_work() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            ensure!(x != 5);
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert!(format!("{:#}", f(12).unwrap_err()).contains("x too big: 12"));
+        assert!(format!("{:#}", f(5).unwrap_err()).contains("condition failed"));
+        assert!(format!("{:#}", f(3).unwrap_err()).contains("three"));
+        let e = anyhow!("ad hoc {}", 1);
+        assert_eq!(format!("{e}"), "ad hoc 1");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<u32> {
+            let n: u32 = "abc".parse()?;
+            Ok(n)
+        }
+        let e = f().unwrap_err();
+        assert!(format!("{e:#}").contains("invalid digit"));
+    }
+}

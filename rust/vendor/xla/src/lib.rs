@@ -1,0 +1,141 @@
+//! API stub for the `xla`/PJRT crate used by [`tnn7::runtime`].
+//!
+//! The real crate links libxla and a PJRT CPU plugin, neither of which is
+//! available in this offline environment. This stub reproduces the exact
+//! API surface `runtime::executor` compiles against; [`PjRtClient::cpu`]
+//! returns an error, so `XlaRuntime::load` fails cleanly and every caller
+//! takes its documented fallback path (tests skip, the coordinator uses the
+//! golden model, benches print "artifacts missing").
+
+use std::fmt;
+
+/// Stub error type (always "backend unavailable" or a parse failure).
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable() -> Error {
+    Error("XLA/PJRT backend not available in this offline build".to_string())
+}
+
+/// PJRT client handle. [`PjRtClient::cpu`] always fails in the stub.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable())
+    }
+}
+
+/// Parsed HLO module (stub: parsing always fails — nothing downstream can
+/// execute it anyway).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(Error(format!(
+            "cannot parse HLO text {path:?}: XLA backend not available in this offline build"
+        )))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A compiled executable (unreachable in the stub: compilation always fails).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable())
+    }
+}
+
+/// A device buffer handle.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+}
+
+/// Host-side literal (the stub stores f32 data so the construction helpers
+/// used on the argument path still work).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    data: Vec<f32>,
+}
+
+impl Literal {
+    /// Rank-1 f32 literal.
+    pub fn vec1(v: &[f32]) -> Literal {
+        Literal { data: v.to_vec() }
+    }
+
+    /// Reshape (the stub keeps the flat data; shapes only matter on a real
+    /// backend).
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(self.clone())
+    }
+
+    pub fn to_vec<T: From<f32>>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&x| T::from(x)).collect())
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_creation_fails_gracefully() {
+        let e = PjRtClient::cpu().err().expect("stub must fail");
+        assert!(e.to_string().contains("not available"));
+    }
+
+    #[test]
+    fn literal_argument_path_works() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        let back: Vec<f32> = r.to_vec().unwrap();
+        assert_eq!(back, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+}
