@@ -1,0 +1,180 @@
+//! Behavioral-engine training throughput: scalar per-sample golden model
+//! vs the batched SoA kernel with deterministic multi-threaded column
+//! sharding (`tnn::batch`), on the two workloads that dominate experiment
+//! wall-clock — a full training epoch of the 4-layer MNIST network and UCR
+//! TwoLeadECG online training. Verifies the cross-engine equivalence
+//! guarantees (inference bit-exact, training thread-count invariant) and
+//! records the baseline/after medians in `BENCH_tnn.json`.
+//!
+//! Run with `cargo bench --bench tnn_throughput` (set `TNN7_BENCH_FAST=1`
+//! for a CI-speed configuration). Acceptance target: batched
+//! multi-threaded >= 3x scalar on both workloads.
+
+use tnn7::harness::{mnist_train_workload, ucr_train_workload};
+use tnn7::tnn::batch::{default_threads, BatchedColumn};
+use tnn7::util::bench::{black_box, Bencher};
+use tnn7::util::json::Json;
+use tnn7::util::Rng64;
+
+fn main() {
+    let fast = std::env::var("TNN7_BENCH_FAST").is_ok();
+    let threads = default_threads();
+    let b = Bencher::from_env();
+    let json = Json::obj()
+        .set("threads", threads)
+        .set("mnist_4layer_epoch", bench_mnist(&b, fast, threads))
+        .set("ucr_twoleadecg_epoch", bench_ucr(&b, fast));
+    std::fs::write("BENCH_tnn.json", json.to_pretty()).expect("write BENCH_tnn.json");
+    println!("  wrote BENCH_tnn.json");
+}
+
+// ---------------------------------------------------------------------
+// 4-layer MNIST network epoch
+// ---------------------------------------------------------------------
+
+fn bench_mnist(b: &Bencher, fast: bool, threads: usize) -> Json {
+    let samples = if fast { 30 } else { 120 };
+    // Same workload construction as `harness::train_engines` / `report train`.
+    let (base, batch) = mnist_train_workload(samples, 40);
+    println!(
+        "4-layer MNIST network: {} synapses, epoch of {} samples, {} worker threads",
+        base.synapse_count(),
+        batch.len(),
+        threads
+    );
+
+    // Equivalence guard (cheap, every bench run): batched inference is
+    // bit-exact with per-sample inference, and a training epoch is
+    // bit-exact across 1/2/4-thread shardings.
+    {
+        let got = base.infer_batch(&batch, threads);
+        for (s, v) in batch.iter().enumerate().take(8) {
+            assert_eq!(got.volley(s), &base.infer(v)[..], "infer mismatch at {s}");
+        }
+        let stream = Rng64::seed_from_u64(77);
+        let mut reference: Option<Vec<Vec<u8>>> = None;
+        for t in [1usize, 2, 4] {
+            let mut net = base.clone();
+            net.step_epoch(&batch, &stream, t);
+            let ws: Vec<Vec<u8>> = net
+                .layers()
+                .iter()
+                .flat_map(|l| l.columns())
+                .map(|c| c.weights().to_vec())
+                .collect();
+            match &reference {
+                None => reference = Some(ws),
+                Some(r) => assert_eq!(&ws, r, "{t}-thread epoch diverged"),
+            }
+        }
+        println!("  equivalence: infer bit-exact; epoch invariant across 1/2/4 threads");
+    }
+
+    let mut scalar_net = base.clone();
+    let mut rng = Rng64::seed_from_u64(42);
+    let s_scalar = b.bench("scalar 4-layer mnist epoch", || {
+        for v in batch.iter() {
+            black_box(scalar_net.step(v, &mut rng));
+        }
+    });
+    println!("{}", s_scalar.report());
+
+    let epoch_stream = Rng64::seed_from_u64(43);
+    let mut epoch = 0u64;
+    let mut b1_net = base.clone();
+    let s_b1 = b.bench("batched 4-layer mnist epoch (1 thread)", || {
+        epoch += 1;
+        black_box(b1_net.step_epoch(&batch, &epoch_stream.split_stream(epoch), 1))
+    });
+    println!("{}", s_b1.report());
+
+    let mut bm_net = base.clone();
+    let s_bm = b.bench(
+        &format!("batched 4-layer mnist epoch ({threads} threads)"),
+        || {
+            epoch += 1;
+            black_box(bm_net.step_epoch(&batch, &epoch_stream.split_stream(epoch), threads))
+        },
+    );
+    println!("{}", s_bm.report());
+
+    report_speedups(&s_scalar, &s_b1, &s_bm, batch.len())
+}
+
+// ---------------------------------------------------------------------
+// UCR TwoLeadECG online-training epoch (single 82×2 column)
+// ---------------------------------------------------------------------
+
+fn bench_ucr(b: &Bencher, fast: bool) -> Json {
+    let per_cluster = if fast { 40 } else { 120 };
+    // Same workload construction as `harness::train_engines` / `report train`.
+    let (base, items) = ucr_train_workload(per_cluster, 7);
+    println!(
+        "UCR TwoLeadECG column: {}x{} (θ={}), epoch of {} samples",
+        base.p(),
+        base.q(),
+        base.theta(),
+        items.len()
+    );
+
+    let mut scalar = base.clone();
+    let mut rng_s = Rng64::seed_from_u64(44);
+    let s_scalar = b.bench("scalar TwoLeadECG training epoch", || {
+        for item in &items {
+            black_box(scalar.step(&item.volley, &mut rng_s).winner);
+        }
+    });
+    println!("{}", s_scalar.report());
+
+    let mut batched = BatchedColumn::new(base.clone());
+    let mut rng_b = Rng64::seed_from_u64(44);
+    let s_batched = b.bench("batched TwoLeadECG training epoch", || {
+        for item in &items {
+            black_box(batched.step(&item.volley, &mut rng_b));
+        }
+    });
+    println!("{}", s_batched.report());
+
+    // Single column: the multi-thread figure equals the single-thread one.
+    report_speedups(&s_scalar, &s_batched, &s_batched, items.len())
+}
+
+fn report_speedups(
+    scalar: &tnn7::util::bench::BenchStats,
+    b1: &tnn7::util::bench::BenchStats,
+    bm: &tnn7::util::bench::BenchStats,
+    samples: usize,
+) -> Json {
+    let speedup_1t = scalar.median_ns() / b1.median_ns();
+    let speedup_mt = scalar.median_ns() / bm.median_ns();
+    let per_sample_us = |s: &tnn7::util::bench::BenchStats| s.median_ns() / 1e3 / samples as f64;
+    println!(
+        "  => scalar {:.1} µs/sample | batched 1t {:.1} µs/sample ({speedup_1t:.1}x) | \
+         batched mt {:.1} µs/sample ({speedup_mt:.1}x; acceptance target >= 3x)",
+        per_sample_us(scalar),
+        per_sample_us(b1),
+        per_sample_us(bm),
+    );
+    Json::obj()
+        .set("samples_per_epoch", samples)
+        .set(
+            "baseline_scalar",
+            Json::obj()
+                .set("median_ns_per_epoch", scalar.median_ns())
+                .set("us_per_sample", per_sample_us(scalar)),
+        )
+        .set(
+            "after_batched_1t",
+            Json::obj()
+                .set("median_ns_per_epoch", b1.median_ns())
+                .set("us_per_sample", per_sample_us(b1)),
+        )
+        .set(
+            "after_batched_mt",
+            Json::obj()
+                .set("median_ns_per_epoch", bm.median_ns())
+                .set("us_per_sample", per_sample_us(bm)),
+        )
+        .set("speedup_1t", speedup_1t)
+        .set("speedup_mt", speedup_mt)
+}

@@ -5,13 +5,18 @@
 use crate::util::kv::KvDoc;
 use std::path::PathBuf;
 
-/// Which engine executes column steps on the request path.
+/// Which engine executes column steps on the request path (the behavioral
+/// analogue of `gates::SimBackend`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EngineKind {
     /// AOT-compiled XLA executable via PJRT (the production path).
     Xla,
     /// Rust golden model (always available; used for fallback and checking).
     Golden,
+    /// Batched structure-of-arrays engine (`tnn::batch`): reusable kernel
+    /// scratch, precomputed STDP thresholds, deterministic parallel
+    /// training.
+    Batched,
 }
 
 impl EngineKind {
@@ -19,7 +24,16 @@ impl EngineKind {
         match s {
             "xla" => Ok(EngineKind::Xla),
             "golden" => Ok(EngineKind::Golden),
-            other => anyhow::bail!("unknown engine {other:?} (xla|golden)"),
+            "batched" => Ok(EngineKind::Batched),
+            other => anyhow::bail!("unknown engine {other:?} (xla|golden|batched)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            EngineKind::Xla => "xla",
+            EngineKind::Golden => "golden",
+            EngineKind::Batched => "batched",
         }
     }
 }
@@ -39,6 +53,9 @@ pub struct RunConfig {
     pub channel_depth: usize,
     /// Batch size for the batched XLA path (1 = unbatched).
     pub batch: usize,
+    /// Worker threads for the batched behavioral engine's column sharding
+    /// (0 = machine parallelism).
+    pub threads: usize,
     /// Output directory for reports.
     pub out_dir: PathBuf,
 }
@@ -52,6 +69,7 @@ impl Default for RunConfig {
             gamma_instances: 400,
             channel_depth: 64,
             batch: 1,
+            threads: 0,
             out_dir: "target/reports".into(),
         }
     }
@@ -79,6 +97,9 @@ impl RunConfig {
         if let Some(v) = doc.get_usize("batch")? {
             c.batch = v;
         }
+        if let Some(v) = doc.get_usize("threads")? {
+            c.threads = v;
+        }
         if let Some(v) = doc.get("out_dir") {
             c.out_dir = v.into();
         }
@@ -105,6 +126,7 @@ impl RunConfig {
                 "gamma_instances" => self.gamma_instances = merged.gamma_instances,
                 "channel_depth" => self.channel_depth = merged.channel_depth,
                 "batch" => self.batch = merged.batch,
+                "threads" => self.threads = merged.threads,
                 "out_dir" => self.out_dir = merged.out_dir.clone(),
                 other => anyhow::bail!("unknown config key {other:?}"),
             }
@@ -137,6 +159,20 @@ mod tests {
         assert_eq!(c.seed, 42);
         assert_eq!(c.batch, 16);
         assert_eq!(c.channel_depth, 64, "default preserved");
+    }
+
+    #[test]
+    fn batched_engine_and_threads_parse() {
+        assert_eq!(EngineKind::parse("batched").unwrap(), EngineKind::Batched);
+        assert_eq!(EngineKind::Batched.name(), "batched");
+        let doc = KvDoc::parse("engine = batched\nthreads = 4\n").unwrap();
+        let c = RunConfig::from_kv(&doc).unwrap();
+        assert_eq!(c.engine, EngineKind::Batched);
+        assert_eq!(c.threads, 4);
+        let mut c = RunConfig::default();
+        assert_eq!(c.threads, 0, "default: machine parallelism");
+        c.apply_overrides(&["threads=2".into()]).unwrap();
+        assert_eq!(c.threads, 2);
     }
 
     #[test]

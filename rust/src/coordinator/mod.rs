@@ -12,6 +12,7 @@
 use crate::config::EngineKind;
 use crate::metrics::StreamMetrics;
 use crate::runtime::ColumnExecutable;
+use crate::tnn::batch::BatchedColumn;
 use crate::tnn::column::Column;
 use crate::tnn::params::TnnParams;
 use crate::tnn::spike::SpikeTime;
@@ -27,9 +28,12 @@ pub struct GammaItem {
     pub label: Option<usize>,
 }
 
-/// The column engine the coordinator drives.
+/// The column engine the coordinator drives (selection mirrors
+/// `gates::SimBackend` on the hardware half: a reference engine and a
+/// throughput engine with identical semantics, plus the XLA path).
 pub enum Engine<'a> {
     Golden(Column),
+    Batched(BatchedColumn),
     Xla {
         exe: ColumnExecutable<'a>,
         weights: Vec<f32>,
@@ -40,6 +44,7 @@ impl Engine<'_> {
     pub fn kind(&self) -> EngineKind {
         match self {
             Engine::Golden(_) => EngineKind::Golden,
+            Engine::Batched(_) => EngineKind::Batched,
             Engine::Xla { .. } => EngineKind::Xla,
         }
     }
@@ -47,6 +52,7 @@ impl Engine<'_> {
     pub fn geometry(&self) -> (usize, usize) {
         match self {
             Engine::Golden(c) => (c.p(), c.q()),
+            Engine::Batched(b) => (b.column().p(), b.column().q()),
             Engine::Xla { exe, .. } => (exe.meta.p, exe.meta.q),
         }
     }
@@ -55,6 +61,7 @@ impl Engine<'_> {
     pub fn step(&mut self, xs: &[SpikeTime], rng: &mut Rng64) -> crate::Result<Option<usize>> {
         match self {
             Engine::Golden(col) => Ok(col.step(xs, rng).winner),
+            Engine::Batched(b) => Ok(b.step(xs, rng)),
             Engine::Xla { exe, weights } => {
                 let n = exe.meta.p * exe.meta.q;
                 let u_case: Vec<f32> = (0..n).map(|_| rng.gen_f32()).collect();
@@ -66,10 +73,12 @@ impl Engine<'_> {
         }
     }
 
-    /// Inference-only winner (no weight change).
-    pub fn infer_winner(&self, xs: &[SpikeTime]) -> crate::Result<Option<usize>> {
+    /// Inference-only winner (no weight change; `&mut` only for the batched
+    /// engine's reusable kernel scratch).
+    pub fn infer_winner(&mut self, xs: &[SpikeTime]) -> crate::Result<Option<usize>> {
         match self {
             Engine::Golden(col) => Ok(col.infer(xs).winner),
+            Engine::Batched(b) => Ok(b.infer_winner(xs)),
             Engine::Xla { exe, weights } => {
                 // The step artifact doubles for inference by discarding the
                 // weight update (u >= 1 blocks every STDP case).
@@ -200,8 +209,27 @@ pub fn ucr_engine(
     params: TnnParams,
     rng: &mut Rng64,
 ) -> Engine<'static> {
+    ucr_engine_with(EngineKind::Golden, p, q, items, params, rng).expect("golden is infallible")
+}
+
+/// Build a UCR engine of the requested kind with density-scaled θ (the XLA
+/// engine carries AOT artifacts and must be constructed via
+/// [`Engine::xla`] instead).
+pub fn ucr_engine_with(
+    kind: EngineKind,
+    p: usize,
+    q: usize,
+    items: &[GammaItem],
+    params: TnnParams,
+    rng: &mut Rng64,
+) -> crate::Result<Engine<'static>> {
     let theta = crate::tnn::encode::sparse_theta(p, params.w_max(), volley_density(items));
-    Engine::Golden(Column::with_random_weights(p, q, theta, params, rng))
+    let col = Column::with_random_weights(p, q, theta, params, rng);
+    match kind {
+        EngineKind::Golden => Ok(Engine::Golden(col)),
+        EngineKind::Batched => Ok(Engine::Batched(col.batched())),
+        EngineKind::Xla => anyhow::bail!("XLA engines require a runtime; use Engine::xla"),
+    }
 }
 
 #[cfg(test)]
@@ -259,6 +287,80 @@ mod tests {
         );
         let ri = ucr::rand_index(&pred, &truth);
         assert!(ri > 0.6, "rand index after learning: {ri}");
+    }
+
+    #[test]
+    fn batched_engine_streams_and_learns() {
+        // The batched SoA engine drives the same streaming pipeline as the
+        // golden model and reaches the same clustering quality.
+        let cfg = UcrConfig {
+            name: "TwoLeadECG",
+            p: 82,
+            q: 2,
+        };
+        let data = ucr::generate(cfg, 60, 5);
+        let items = encode_ucr(&data, 8);
+        let mut rng = Rng64::seed_from_u64(2);
+        let mut engine = ucr_engine_with(
+            crate::config::EngineKind::Batched,
+            82,
+            2,
+            &items,
+            TnnParams::default(),
+            &mut rng,
+        )
+        .unwrap();
+        assert_eq!(engine.kind(), crate::config::EngineKind::Batched);
+        assert_eq!(engine.geometry(), (82, 2));
+        for epoch in 0..5 {
+            let out = run_stream(&mut engine, items.clone(), 16, 5 + epoch).unwrap();
+            assert_eq!(out.processed as usize, items.len());
+        }
+        let mut pred = Vec::new();
+        let mut truth = Vec::new();
+        for item in &items {
+            if let Some(w) = engine.infer_winner(&item.volley).unwrap() {
+                pred.push(w);
+                truth.push(item.label.unwrap());
+            }
+        }
+        assert!(
+            pred.len() > items.len() / 2,
+            "batched column should fire on most instances ({}/{})",
+            pred.len(),
+            items.len()
+        );
+        let ri = ucr::rand_index(&pred, &truth);
+        assert!(ri > 0.6, "rand index after batched learning: {ri}");
+    }
+
+    #[test]
+    fn batched_and_golden_inference_agree() {
+        // Inference is draw-free: on identical weights the two engines must
+        // produce identical winners on every volley.
+        let cfg = UcrConfig {
+            name: "ECG200",
+            p: 96,
+            q: 2,
+        };
+        let data = ucr::generate(cfg, 20, 4);
+        let items = encode_ucr(&data, 8);
+        let mut rng = Rng64::seed_from_u64(9);
+        let col = crate::tnn::Column::with_random_weights(
+            96,
+            2,
+            40,
+            TnnParams::default(),
+            &mut rng,
+        );
+        let mut golden = Engine::Golden(col.clone());
+        let mut batched = Engine::Batched(col.batched());
+        for item in &items {
+            assert_eq!(
+                golden.infer_winner(&item.volley).unwrap(),
+                batched.infer_winner(&item.volley).unwrap()
+            );
+        }
     }
 
     #[test]

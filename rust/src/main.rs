@@ -1,9 +1,9 @@
 //! `tnn7` — leader binary / CLI.
 //!
 //! Subcommands:
-//!   report table2|fig11|table3|fig12|fig13|sim|headline [--quick]
-//!   run ucr   [--dataset NAME] [--engine xla|golden] [key=value …]
-//!   run mnist [--layers N] [key=value …]
+//!   report table2|fig11|table3|fig12|fig13|sim|train|headline [--quick]
+//!   run ucr   [--dataset NAME] [--engine xla|golden|batched] [key=value …]
+//!   run mnist [--layers N] [--engine golden|batched] [key=value …]
 //!   synth --p P --q Q [--flow asap7|tnn7]
 //!   serve [key=value …]         (streaming demo over the XLA runtime)
 //!   selftest                    (golden vs gate-level vs XLA cross-check)
@@ -54,9 +54,9 @@ fn dispatch(args: &[String]) -> tnn7::Result<()> {
         _ => {
             eprintln!(
                 "usage: tnn7 <report|run|synth|serve|selftest> …\n\
-                 report table2|fig11|table3|fig12|fig13|sim|headline [--quick]\n\
-                 run ucr [--dataset NAME] [--engine xla|golden] [k=v …]\n\
-                 run mnist [--layers N] [k=v …]\n\
+                 report table2|fig11|table3|fig12|fig13|sim|train|headline [--quick]\n\
+                 run ucr [--dataset NAME] [--engine xla|golden|batched] [k=v …]\n\
+                 run mnist [--layers N] [--engine golden|batched] [k=v …]\n\
                  synth --p P --q Q [--flow asap7|tnn7]\n\
                  serve [k=v …]\n\
                  selftest"
@@ -81,6 +81,7 @@ fn report(args: &[String]) -> tnn7::Result<()> {
             let row = harness::sim_engines(if quick { 4096 } else { 65536 });
             harness::print_sim_engines(&row);
         }
+        Some("train") => harness::print_train_engines(&harness::train_engines(quick)),
         Some("headline") => {
             let rows = harness::fig11(quick);
             let (p, d, a, e) = harness::average_improvements(&rows);
@@ -122,13 +123,14 @@ fn run(args: &[String]) -> tnn7::Result<()> {
             let mut rng = Rng64::seed_from_u64(cfg.seed);
             let rt;
             let mut engine = match cfg.engine {
-                EngineKind::Golden => tnn7::coordinator::ucr_engine(
+                EngineKind::Golden | EngineKind::Batched => tnn7::coordinator::ucr_engine_with(
+                    cfg.engine,
                     dataset.p,
                     dataset.q,
                     &items,
                     TnnParams::default(),
                     &mut rng,
-                ),
+                )?,
                 EngineKind::Xla => {
                     rt = XlaRuntime::load(&cfg.artifacts_dir)?;
                     let exe = rt.column(dataset.p, dataset.q, "step")?;
@@ -171,7 +173,6 @@ fn run(args: &[String]) -> tnn7::Result<()> {
 
 fn run_mnist(layers: usize, cfg: &RunConfig) -> tnn7::Result<()> {
     use tnn7::mnist::{trainable_network, DigitCorpus};
-    use tnn7::tnn::encode::encode_image_onoff;
     use tnn7::tnn::VoteClassifier;
     let mut rng = Rng64::seed_from_u64(cfg.seed);
     let mut net = trainable_network(layers, TnnParams::default());
@@ -179,24 +180,41 @@ fn run_mnist(layers: usize, cfg: &RunConfig) -> tnn7::Result<()> {
     let train = DigitCorpus::generate(cfg.gamma_instances / 10, cfg.seed);
     let test = DigitCorpus::generate(20, cfg.seed + 1);
     println!(
-        "{layers}-layer TNN: {} synapses, training on {} digits…",
+        "{layers}-layer TNN: {} synapses, training on {} digits ({} engine)…",
         net.synapse_count(),
-        train.len()
+        train.len(),
+        cfg.engine.name(),
     );
-    for (img, _) in train.images.iter().zip(&train.labels) {
-        let volley = encode_image_onoff(img, 8);
-        net.step(&volley, &mut rng);
+    // Encode once; training, calibration and scoring all read this batch.
+    let train_batch = train.encode_batch(8);
+    match cfg.engine {
+        EngineKind::Golden => {
+            for volley in train_batch.iter() {
+                net.step(volley, &mut rng);
+            }
+        }
+        EngineKind::Batched => {
+            // One deterministic parallel epoch: columns sharded across
+            // workers, results bit-exact at any thread count.
+            net.step_epoch(
+                &train_batch,
+                &Rng64::seed_from_u64(cfg.seed ^ 0xE90C),
+                cfg.threads,
+            );
+        }
+        EngineKind::Xla => anyhow::bail!("run mnist supports --engine golden|batched"),
     }
-    // calibrate the vote readout, then test
+    // calibrate the vote readout, then test (batched inference is bit-exact
+    // with the per-sample path, so use it for both engines)
     let mut vote = VoteClassifier::new(net.output_len(), 10);
-    for (img, &l) in train.images.iter().zip(&train.labels) {
-        let out = net.infer(&encode_image_onoff(img, 8));
-        vote.observe(&out, l);
+    let train_out = net.infer_batch(&train_batch, cfg.threads);
+    for (s, &l) in train.labels.iter().enumerate() {
+        vote.observe(train_out.volley(s), l);
     }
+    let test_out = net.infer_batch(&test.encode_batch(8), cfg.threads);
     let mut correct = 0;
-    for (img, &l) in test.images.iter().zip(&test.labels) {
-        let out = net.infer(&encode_image_onoff(img, 8));
-        if vote.classify(&out) == Some(l) {
+    for (s, &l) in test.labels.iter().enumerate() {
+        if vote.classify(test_out.volley(s)) == Some(l) {
             correct += 1;
         }
     }

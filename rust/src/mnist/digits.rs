@@ -184,6 +184,18 @@ impl DigitCorpus {
     pub fn is_empty(&self) -> bool {
         self.images.is_empty()
     }
+
+    /// Encode every image into a sample-major volley batch (on/off-center
+    /// channels, `2·SIDE²` lines per volley) — the input form of the
+    /// batched training pipeline (`TnnNetwork::step_epoch` /
+    /// `infer_batch`). Sample order matches `images`/`labels`.
+    pub fn encode_batch(&self, t_max: u32) -> crate::tnn::batch::VolleyBatch {
+        let mut batch = crate::tnn::batch::VolleyBatch::new(SIDE * SIDE * 2);
+        for img in &self.images {
+            batch.push(&crate::tnn::encode::encode_image_onoff(img, t_max));
+        }
+        batch
+    }
 }
 
 #[cfg(test)]
@@ -199,6 +211,18 @@ mod tests {
             assert!(img.iter().all(|&v| (0.0..=1.0).contains(&v)));
             let ink: f64 = img.iter().sum();
             assert!(ink > 5.0, "digit {d} has visible ink ({ink})");
+        }
+    }
+
+    #[test]
+    fn encode_batch_matches_per_image_encoding() {
+        use crate::tnn::encode::encode_image_onoff;
+        let corpus = DigitCorpus::generate(2, 5);
+        let batch = corpus.encode_batch(8);
+        assert_eq!(batch.len(), corpus.len());
+        assert_eq!(batch.lines(), SIDE * SIDE * 2);
+        for (s, img) in corpus.images.iter().enumerate() {
+            assert_eq!(batch.volley(s), &encode_image_onoff(img, 8)[..]);
         }
     }
 

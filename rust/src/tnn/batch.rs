@@ -1,0 +1,965 @@
+//! `tnn::batch` — the batched structure-of-arrays column engine and the
+//! deterministic multi-threaded training pipeline.
+//!
+//! The scalar golden model (`Column::infer` / `Column::step`) evaluates one
+//! sample through one column at a time, allocating its event buckets,
+//! potential arrays, uniform buffers and output volleys per call. This
+//! module is the behavioral analogue of `gates::SimBackend::BitParallel64`:
+//! the same semantics on a throughput-shaped substrate —
+//!
+//! * **[`ColumnKernel`]** — reusable structure-of-arrays scratch for the
+//!   event-bucketed column evaluation: ramp start/stop deltas shared across
+//!   the `q` neurons, flat `u32` potential accumulators, and the body
+//!   fire-time scan, all O(p·q + γ·q) per gamma cycle with zero heap
+//!   allocation after warm-up. Bit-exact with
+//!   [`fire_times_folded`](super::neuron::fire_times_folded) (they share
+//!   the same core in [`super::neuron`]).
+//! * **[`StdpTables`]** — the four-case STDP update with every Bernoulli
+//!   gate precomputed into 53-bit *integer* thresholds
+//!   ([`mu_threshold_u53`]): per-case µ thresholds plus per-weight bimodal
+//!   stabilization gates, so classifying and updating all p×q synapses is
+//!   one pass of shifts and integer compares — no float math, no divides.
+//!   The integer comparisons are bit-exact with the scalar float path
+//!   (proven in tests against [`stdp_update`](super::stdp::stdp_update)).
+//! * **[`VolleyBatch`]** — flat sample-major spike-volley storage, with
+//!   bit-packed presence summaries ([`VolleyBatch::packed_presence`],
+//!   built on [`pack_presence`](super::spike::pack_presence)) for cheap
+//!   equivalence checks.
+//! * **Batched entry points** — `ColumnLayer::infer_batch` /
+//!   `ColumnLayer::step_epoch` and the corresponding `TnnNetwork` methods
+//!   shard a layer's *columns* (which are fully independent: disjoint
+//!   weights, disjoint patches) across `std::thread` workers.
+//!
+//! # Determinism contract
+//!
+//! Training randomness comes from per-column streams derived with
+//! [`Rng64::split_stream`]: column `k` of a layer draws from
+//! `stream.split_stream(k)`, and each column consumes its stream in strict
+//! sample order. Results therefore depend only on `(seed, data)` — **never
+//! on the worker-thread count or how columns are sharded** — and every run
+//! is replayable. Inference is draw-free and bit-exact with the scalar
+//! engine; training follows the same four-case update math but a leaner
+//! draw discipline than the scalar engine (a `None`-case synapse consumes
+//! no draw, and the stabilization draw is taken only when the case
+//! Bernoulli passes), so its weight *trajectories* are a different — but
+//! equally valid and statistically identical — sample of the same process.
+
+use super::column::Column;
+use super::layer::ColumnLayer;
+use super::network::TnnNetwork;
+use super::neuron::{bucket_ramp_deltas, scan_ramp_deltas};
+use super::params::TnnParams;
+use super::spike::{any_spike, earliest_spike, pack_presence, SpikeTime};
+use super::stdp::{case_is_inc, mu_threshold_u53, stab_down, stab_up, StdpCase};
+use crate::util::Rng64;
+
+/// Default worker count for the batched entry points (`threads = 0`):
+/// the machine's available parallelism, or 1 if it cannot be queried.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+fn effective_threads(requested: usize, columns: usize) -> usize {
+    let t = if requested == 0 {
+        default_threads()
+    } else {
+        requested
+    };
+    t.clamp(1, columns.max(1))
+}
+
+// ---------------------------------------------------------------------
+// VolleyBatch — flat sample-major spike-volley storage
+// ---------------------------------------------------------------------
+
+/// A batch of spike volleys in flat sample-major storage: volley `s`
+/// occupies `data[s*lines .. (s+1)*lines]`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct VolleyBatch {
+    lines: usize,
+    data: Vec<SpikeTime>,
+}
+
+impl VolleyBatch {
+    /// An empty batch of `lines`-line volleys.
+    pub fn new(lines: usize) -> Self {
+        assert!(lines > 0, "volleys must have at least one line");
+        VolleyBatch {
+            lines,
+            data: Vec::new(),
+        }
+    }
+
+    /// A batch of `samples` all-silent volleys.
+    pub fn filled(lines: usize, samples: usize) -> Self {
+        assert!(lines > 0, "volleys must have at least one line");
+        VolleyBatch {
+            lines,
+            data: vec![SpikeTime::NONE; lines * samples],
+        }
+    }
+
+    /// Build from per-sample volley vectors (all must share one length).
+    pub fn from_volleys(volleys: &[Vec<SpikeTime>]) -> Self {
+        assert!(!volleys.is_empty(), "empty volley batch");
+        let mut b = VolleyBatch::new(volleys[0].len());
+        for v in volleys {
+            b.push(v);
+        }
+        b
+    }
+
+    /// Append one volley.
+    pub fn push(&mut self, volley: &[SpikeTime]) {
+        assert_eq!(volley.len(), self.lines, "volley length mismatch");
+        self.data.extend_from_slice(volley);
+    }
+
+    /// Lines per volley.
+    pub fn lines(&self) -> usize {
+        self.lines
+    }
+
+    /// Number of volleys (samples).
+    pub fn len(&self) -> usize {
+        self.data.len() / self.lines
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Volley `s`.
+    pub fn volley(&self, s: usize) -> &[SpikeTime] {
+        &self.data[s * self.lines..(s + 1) * self.lines]
+    }
+
+    fn volley_mut(&mut self, s: usize) -> &mut [SpikeTime] {
+        &mut self.data[s * self.lines..(s + 1) * self.lines]
+    }
+
+    /// Iterate over the volleys in sample order.
+    pub fn iter(&self) -> impl Iterator<Item = &[SpikeTime]> {
+        self.data.chunks_exact(self.lines)
+    }
+
+    /// Spikes per line per volley (the batch-level analogue of
+    /// `coordinator::volley_density`).
+    pub fn spike_density(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        let spikes = self.data.iter().filter(|t| t.is_spike()).count();
+        spikes as f64 / self.data.len() as f64
+    }
+
+    /// Bit-packed presence summary of volley `s`
+    /// ([`pack_presence`](super::spike::pack_presence)): one bit per line,
+    /// 64 lines per word — the cheap-to-compare form the equivalence tests
+    /// diff volleys with.
+    pub fn packed_presence(&self, s: usize) -> Vec<u64> {
+        pack_presence(self.volley(s))
+    }
+}
+
+// ---------------------------------------------------------------------
+// ColumnKernel — reusable SoA scratch for column evaluation
+// ---------------------------------------------------------------------
+
+/// Reusable structure-of-arrays scratch for event-bucketed column
+/// evaluation: after warm-up, [`ColumnKernel::fire_times`] performs no heap
+/// allocation. One kernel per worker thread (it is cheap: four flat
+/// arrays sized to the largest geometry seen).
+#[derive(Clone, Debug, Default)]
+pub struct ColumnKernel {
+    /// Ramp start/stop event buckets, row-major `(γ+1) × q`.
+    delta: Vec<i32>,
+    /// Per-neuron instantaneous response sums.
+    rate: Vec<i32>,
+    /// Per-neuron integrated body potentials (flat `u32` — bounded by
+    /// `p · w_max`).
+    pot: Vec<u32>,
+    /// Per-neuron body fire times.
+    body: Vec<SpikeTime>,
+}
+
+impl ColumnKernel {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Body (pre-WTA) fire times for one gamma cycle of a `p × q` crossbar:
+    /// `ws` row-major `p × q`, result slice of length `q`. Bit-exact with
+    /// [`fire_times_folded`](super::neuron::fire_times_folded) — both call
+    /// the shared bucket/scan core — but over reusable scratch.
+    pub fn fire_times(
+        &mut self,
+        xs: &[SpikeTime],
+        ws: &[u8],
+        q: usize,
+        theta: u32,
+        gamma_cycles: u32,
+    ) -> &[SpikeTime] {
+        let g = gamma_cycles as usize;
+        let nd = (g + 1) * q;
+        if self.delta.len() < nd {
+            self.delta.resize(nd, 0);
+        }
+        if self.body.len() < q {
+            self.rate.resize(q, 0);
+            self.pot.resize(q, 0);
+            self.body.resize(q, SpikeTime::NONE);
+        }
+        let delta = &mut self.delta[..nd];
+        delta.fill(0);
+        bucket_ramp_deltas(xs, ws, q, g, delta);
+        scan_ramp_deltas(
+            delta,
+            q,
+            theta,
+            g,
+            &mut self.rate[..q],
+            &mut self.pot[..q],
+            &mut self.body[..q],
+        );
+        &self.body[..q]
+    }
+}
+
+/// One inference gamma cycle through `col`: post-WTA output volley into
+/// `out` (length `q`). Bit-exact with `Column::infer(..).output`.
+pub fn infer_column(col: &Column, kernel: &mut ColumnKernel, xs: &[SpikeTime], out: &mut [SpikeTime]) {
+    // Hard assert, matching `Column::infer`: a short volley must panic in
+    // release builds too, not silently read missing lines as silent.
+    assert_eq!(xs.len(), col.p(), "input volley length != p");
+    debug_assert_eq!(out.len(), col.q());
+    out.fill(SpikeTime::NONE);
+    if col.theta() > 0 && !any_spike(xs) {
+        return; // silent volley: no ramp ever starts, nothing can fire
+    }
+    let body = kernel.fire_times(
+        xs,
+        col.weights(),
+        col.q(),
+        col.theta(),
+        col.params().gamma_cycles,
+    );
+    let (idx, t) = earliest_spike(body);
+    if t.is_spike() {
+        out[idx] = t; // 1-WTA: earliest wins, ties to lowest index
+    }
+}
+
+/// One learning gamma cycle through `col`: inference into `out`, then the
+/// vectorized four-case STDP update drawing from `rng` (see
+/// [`StdpTables::update_column`] for the draw discipline).
+pub fn step_column(
+    col: &mut Column,
+    kernel: &mut ColumnKernel,
+    tables: &StdpTables,
+    xs: &[SpikeTime],
+    rng: &mut Rng64,
+    out: &mut [SpikeTime],
+) {
+    infer_column(col, kernel, xs, out);
+    // With neither pre nor post spikes every synapse is in the `None` case:
+    // no draws, no updates — skip the pass entirely.
+    if any_spike(xs) || any_spike(out) {
+        tables.update_column(col.weights_mut(), xs, out, rng);
+    }
+}
+
+// ---------------------------------------------------------------------
+// StdpTables — precomputed integer-space Bernoulli thresholds
+// ---------------------------------------------------------------------
+
+/// Precomputed integer-space Bernoulli thresholds for the four STDP cases
+/// plus the per-weight bimodal stabilization gates: the whole probabilistic
+/// update becomes shifts and `u64` compares, bit-exact with the scalar
+/// float path (see [`mu_threshold_u53`]).
+#[derive(Clone, Debug)]
+pub struct StdpTables {
+    /// Case thresholds, indexed capture / minus / search / backoff.
+    t_case: [u64; 4],
+    /// Stabilization gate for increments, indexed by current weight.
+    t_up: Vec<u64>,
+    /// Stabilization gate for decrements, indexed by current weight.
+    t_down: Vec<u64>,
+    stabilize: bool,
+    w_max: u8,
+}
+
+impl StdpTables {
+    pub fn new(p: &TnnParams) -> Self {
+        let w_max = p.w_max();
+        StdpTables {
+            t_case: [
+                mu_threshold_u53(p.mu_capture),
+                mu_threshold_u53(p.mu_minus),
+                mu_threshold_u53(p.mu_search),
+                mu_threshold_u53(p.mu_backoff),
+            ],
+            t_up: (0..=w_max)
+                .map(|w| mu_threshold_u53(stab_up(w, w_max)))
+                .collect(),
+            t_down: (0..=w_max)
+                .map(|w| mu_threshold_u53(stab_down(w, w_max)))
+                .collect(),
+            stabilize: p.stabilize,
+            w_max,
+        }
+    }
+
+    /// One gated update: case Bernoulli first, then (only if it passed and
+    /// stabilization is enabled) the per-weight stabilization gate.
+    #[inline]
+    fn gate(&self, w: &mut u8, case: usize, inc: bool, rng: &mut Rng64) {
+        if (rng.next_u64() >> 11) >= self.t_case[case] {
+            return;
+        }
+        if self.stabilize {
+            let gate = if inc {
+                self.t_up[*w as usize]
+            } else {
+                self.t_down[*w as usize]
+            };
+            if (rng.next_u64() >> 11) >= gate {
+                return;
+            }
+        }
+        *w = if inc {
+            (*w + 1).min(self.w_max)
+        } else {
+            w.saturating_sub(1)
+        };
+    }
+
+    /// Apply one classified update to a weight, drawing lazily from `rng`.
+    /// `None` consumes no draws; a failed case Bernoulli consumes one; a
+    /// full update consumes two (when stabilization is enabled). The gating
+    /// math is bit-exact with [`stdp_update`](super::stdp::stdp_update) on
+    /// the uniforms the same raw words would have produced.
+    pub fn apply_case(&self, mut w: u8, case: StdpCase, rng: &mut Rng64) -> u8 {
+        if let Some(inc) = case_is_inc(case) {
+            let idx = match case {
+                StdpCase::Capture => 0,
+                StdpCase::Minus => 1,
+                StdpCase::Search => 2,
+                StdpCase::Backoff => 3,
+                StdpCase::None => unreachable!(),
+            };
+            self.gate(&mut w, idx, inc, rng);
+        }
+        w
+    }
+
+    /// Vectorized four-case STDP over a column's synapse array: classifies
+    /// all p×q synapses in one row-major pass (the per-input spike test is
+    /// hoisted out of the inner loop) and applies the gated updates.
+    ///
+    /// Draw discipline (frozen — part of the determinism contract):
+    /// synapses are visited row-major (`k = i·q + j`); a `None`-case synapse
+    /// consumes no draws; otherwise one `next_u64` for the case Bernoulli
+    /// and, only if it passes with stabilization enabled, one more for the
+    /// stabilization gate. The draw count therefore depends only on the
+    /// data, never on sharding.
+    pub fn update_column(
+        &self,
+        ws: &mut [u8],
+        xs: &[SpikeTime],
+        ys: &[SpikeTime],
+        rng: &mut Rng64,
+    ) {
+        let q = ys.len();
+        debug_assert_eq!(ws.len(), xs.len() * q);
+        for (i, &x) in xs.iter().enumerate() {
+            let row = &mut ws[i * q..(i + 1) * q];
+            if x.is_spike() {
+                for (w, &y) in row.iter_mut().zip(ys) {
+                    let (case, inc) = if y.is_spike() {
+                        if x.0 <= y.0 {
+                            (0, true) // capture
+                        } else {
+                            (1, false) // minus
+                        }
+                    } else {
+                        (2, true) // search
+                    };
+                    self.gate(w, case, inc, rng);
+                }
+            } else {
+                for (w, &y) in row.iter_mut().zip(ys) {
+                    if y.is_spike() {
+                        self.gate(w, 3, false, rng); // backoff
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// BatchedColumn — a single column on the SoA kernel (coordinator engine)
+// ---------------------------------------------------------------------
+
+/// A single column driven by the batched SoA kernel: reusable scratch,
+/// precomputed STDP tables, zero allocation per gamma cycle. This is the
+/// behavioral-engine analogue of `gates::SimBackend::BitParallel64`, and
+/// the engine behind `config::EngineKind::Batched`.
+#[derive(Clone, Debug)]
+pub struct BatchedColumn {
+    col: Column,
+    kernel: ColumnKernel,
+    tables: StdpTables,
+    out: Vec<SpikeTime>,
+}
+
+impl BatchedColumn {
+    pub fn new(col: Column) -> Self {
+        let tables = StdpTables::new(col.params());
+        let out = vec![SpikeTime::NONE; col.q()];
+        BatchedColumn {
+            col,
+            kernel: ColumnKernel::new(),
+            tables,
+            out,
+        }
+    }
+
+    pub fn column(&self) -> &Column {
+        &self.col
+    }
+
+    /// Inference only: the post-WTA output volley (bit-exact with
+    /// `Column::infer(..).output`).
+    pub fn infer(&mut self, xs: &[SpikeTime]) -> &[SpikeTime] {
+        infer_column(&self.col, &mut self.kernel, xs, &mut self.out);
+        &self.out
+    }
+
+    /// Inference-only WTA winner.
+    pub fn infer_winner(&mut self, xs: &[SpikeTime]) -> Option<usize> {
+        self.infer(xs);
+        self.out.iter().position(|t| t.is_spike())
+    }
+
+    /// One learning gamma cycle; returns the post-WTA winner.
+    pub fn step(&mut self, xs: &[SpikeTime], rng: &mut Rng64) -> Option<usize> {
+        step_column(
+            &mut self.col,
+            &mut self.kernel,
+            &self.tables,
+            xs,
+            rng,
+            &mut self.out,
+        );
+        self.out.iter().position(|t| t.is_spike())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Batched layer / network entry points
+// ---------------------------------------------------------------------
+
+fn gather(sub: &mut Vec<SpikeTime>, volley: &[SpikeTime], patch: &[usize]) {
+    sub.clear();
+    sub.extend(patch.iter().map(|&i| volley[i]));
+}
+
+/// Run inference for a chunk of columns over the whole batch, producing a
+/// column-block-major output block: column `k`'s `n × q_k` sample-major
+/// sub-block follows column `k-1`'s.
+fn infer_chunk(cols: &[Column], patches: &[Vec<usize>], batch: &VolleyBatch) -> Vec<SpikeTime> {
+    let n = batch.len();
+    let mut kernel = ColumnKernel::new();
+    let mut sub: Vec<SpikeTime> = Vec::new();
+    let mut block = vec![SpikeTime::NONE; cols.iter().map(|c| c.q() * n).sum()];
+    let mut base = 0;
+    for (col, patch) in cols.iter().zip(patches) {
+        let q = col.q();
+        for s in 0..n {
+            gather(&mut sub, batch.volley(s), patch);
+            infer_column(col, &mut kernel, &sub, &mut block[base + s * q..base + (s + 1) * q]);
+        }
+        base += q * n;
+    }
+    block
+}
+
+/// Run one training epoch for a chunk of columns (samples in order, one
+/// derived RNG stream per column — `stream.split_stream(global column
+/// index)`), producing the same column-block-major output block as
+/// [`infer_chunk`].
+fn step_chunk(
+    cols: &mut [Column],
+    patches: &[Vec<usize>],
+    batch: &VolleyBatch,
+    stream: &Rng64,
+    start_col: usize,
+) -> Vec<SpikeTime> {
+    let n = batch.len();
+    let mut kernel = ColumnKernel::new();
+    let mut sub: Vec<SpikeTime> = Vec::new();
+    let mut block = vec![SpikeTime::NONE; cols.iter().map(|c| c.q() * n).sum()];
+    let mut base = 0;
+    for (k, (col, patch)) in cols.iter_mut().zip(patches).enumerate() {
+        let q = col.q();
+        let tables = StdpTables::new(col.params());
+        let mut rng = stream.split_stream((start_col + k) as u64);
+        for s in 0..n {
+            gather(&mut sub, batch.volley(s), patch);
+            step_column(
+                col,
+                &mut kernel,
+                &tables,
+                &sub,
+                &mut rng,
+                &mut block[base + s * q..base + (s + 1) * q],
+            );
+        }
+        base += q * n;
+    }
+    block
+}
+
+/// Scatter worker-tagged blocks (each covering `chunk` consecutive columns
+/// starting at its tag) into a sample-major output batch — the join half
+/// shared by `infer_batch` and `step_epoch`.
+fn scatter_chunks(
+    out: &mut VolleyBatch,
+    offsets: &[usize],
+    qs: &[usize],
+    chunk: usize,
+    blocks: &[(usize, Vec<SpikeTime>)],
+) {
+    for (start, block) in blocks {
+        let end = (start + chunk).min(qs.len());
+        scatter_block(out, &offsets[*start..end], &qs[*start..end], block);
+    }
+}
+
+/// Scatter a column-block-major block (columns `offsets`/`qs`, all `n`
+/// samples) into a sample-major output batch.
+fn scatter_block(out: &mut VolleyBatch, offsets: &[usize], qs: &[usize], block: &[SpikeTime]) {
+    let n = out.len();
+    let mut base = 0;
+    for (&off, &q) in offsets.iter().zip(qs) {
+        for s in 0..n {
+            out.volley_mut(s)[off..off + q]
+                .copy_from_slice(&block[base + s * q..base + (s + 1) * q]);
+        }
+        base += q * n;
+    }
+    debug_assert_eq!(base, block.len());
+}
+
+impl ColumnLayer {
+    /// Batched inference: every sample through every column, columns
+    /// sharded across `threads` workers (`0` = machine parallelism).
+    /// Bit-exact with per-sample [`ColumnLayer::infer`] at any thread
+    /// count.
+    pub fn infer_batch(&self, batch: &VolleyBatch, threads: usize) -> VolleyBatch {
+        assert_eq!(batch.lines(), self.input_len(), "layer input length mismatch");
+        let cols = self.columns();
+        let patches = self.patches();
+        let offsets = self.column_offsets();
+        let qs: Vec<usize> = cols.iter().map(|c| c.q()).collect();
+        let mut out = VolleyBatch::filled(self.output_len(), batch.len());
+        let threads = effective_threads(threads, cols.len());
+        if threads <= 1 {
+            let block = infer_chunk(cols, patches, batch);
+            scatter_block(&mut out, &offsets, &qs, &block);
+            return out;
+        }
+        let chunk = cols.len().div_ceil(threads);
+        let blocks: Vec<(usize, Vec<SpikeTime>)> = std::thread::scope(|scope| {
+            let handles: Vec<_> = cols
+                .chunks(chunk)
+                .zip(patches.chunks(chunk))
+                .enumerate()
+                .map(|(ci, (cc, pc))| {
+                    scope.spawn(move || (ci * chunk, infer_chunk(cc, pc, batch)))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("tnn batch worker panicked"))
+                .collect()
+        });
+        scatter_chunks(&mut out, &offsets, &qs, chunk, &blocks);
+        out
+    }
+
+    /// One full training epoch: every sample (in order) through every
+    /// column with STDP learning, columns sharded across `threads` workers
+    /// (`0` = machine parallelism). Column `k` draws from
+    /// `stream.split_stream(k)` in strict sample order, so weights and
+    /// outputs are **bit-exact regardless of thread count**. Returns the
+    /// batch of post-WTA layer outputs (the next layer's inputs).
+    pub fn step_epoch(&mut self, batch: &VolleyBatch, stream: &Rng64, threads: usize) -> VolleyBatch {
+        assert_eq!(batch.lines(), self.input_len(), "layer input length mismatch");
+        let out_len = self.output_len();
+        let offsets = self.column_offsets();
+        let (cols, patches) = self.parts_mut();
+        let qs: Vec<usize> = cols.iter().map(|c| c.q()).collect();
+        let mut out = VolleyBatch::filled(out_len, batch.len());
+        let threads = effective_threads(threads, cols.len());
+        if threads <= 1 {
+            let block = step_chunk(cols, patches, batch, stream, 0);
+            scatter_block(&mut out, &offsets, &qs, &block);
+            return out;
+        }
+        let n_cols = cols.len();
+        let chunk = n_cols.div_ceil(threads);
+        let blocks: Vec<(usize, Vec<SpikeTime>)> = std::thread::scope(|scope| {
+            let handles: Vec<_> = cols
+                .chunks_mut(chunk)
+                .zip(patches.chunks(chunk))
+                .enumerate()
+                .map(|(ci, (cc, pc))| {
+                    scope.spawn(move || (ci * chunk, step_chunk(cc, pc, batch, stream, ci * chunk)))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("tnn batch worker panicked"))
+                .collect()
+        });
+        scatter_chunks(&mut out, &offsets, &qs, chunk, &blocks);
+        out
+    }
+}
+
+impl TnnNetwork {
+    /// Batched inference through all layers. Bit-exact with per-sample
+    /// [`TnnNetwork::infer`] at any thread count.
+    pub fn infer_batch(&self, batch: &VolleyBatch, threads: usize) -> VolleyBatch {
+        let (first, rest) = self.layers().split_first().expect("network has layers");
+        let mut v = first.infer_batch(batch, threads);
+        for l in rest {
+            v = l.infer_batch(&v, threads);
+        }
+        v
+    }
+
+    /// One full online-learning epoch through all layers (every layer
+    /// learns from its local pre/post spikes, samples in order — the
+    /// batched form of `for s in samples { net.step(s) }`): layer `l`
+    /// processes the whole batch with per-column streams derived from
+    /// `rng.split_stream(l)`, then hands its output batch to layer `l+1`.
+    /// Since each column sees the samples in order against its own evolving
+    /// weights, the dataflow is identical to the per-sample loop; results
+    /// are bit-exact regardless of thread count. Returns the output-layer
+    /// volley batch.
+    pub fn step_epoch(&mut self, batch: &VolleyBatch, rng: &Rng64, threads: usize) -> VolleyBatch {
+        let (first, rest) = self
+            .layers_mut()
+            .split_first_mut()
+            .expect("network has layers");
+        let mut v = first.step_epoch(batch, &rng.split_stream(0), threads);
+        for (li, l) in rest.iter_mut().enumerate() {
+            let stream = rng.split_stream(li as u64 + 1);
+            v = l.step_epoch(&v, &stream, threads);
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::layer::ReceptiveField;
+    use super::super::neuron::fire_times_folded;
+    use super::super::stdp::{stdp_case, stdp_update};
+    use super::*;
+
+    fn random_volley(p: usize, rng: &mut Rng64, silent_prob: f64) -> Vec<SpikeTime> {
+        (0..p)
+            .map(|_| {
+                if rng.gen_bool(silent_prob) {
+                    SpikeTime::NONE
+                } else {
+                    SpikeTime::at(rng.gen_range(0, 8) as u32)
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn volley_batch_round_trips() {
+        let mut b = VolleyBatch::new(3);
+        assert!(b.is_empty());
+        b.push(&[SpikeTime::at(0), SpikeTime::NONE, SpikeTime::at(2)]);
+        b.push(&[SpikeTime::NONE; 3]);
+        assert_eq!((b.len(), b.lines()), (2, 3));
+        assert_eq!(b.volley(0)[2], SpikeTime::at(2));
+        assert_eq!(b.iter().count(), 2);
+        assert!((b.spike_density() - 2.0 / 6.0).abs() < 1e-12);
+        let b2 = VolleyBatch::from_volleys(&[b.volley(0).to_vec(), b.volley(1).to_vec()]);
+        assert_eq!(b, b2);
+    }
+
+    #[test]
+    fn kernel_fire_times_match_folded() {
+        let mut rng = Rng64::seed_from_u64(3);
+        let mut kernel = ColumnKernel::new();
+        for _ in 0..100 {
+            let p = rng.gen_range(1, 40);
+            let q = rng.gen_range(1, 9);
+            let theta = rng.gen_range(1, p * 3) as u32;
+            let ws: Vec<u8> = (0..p * q).map(|_| rng.gen_u8_inclusive(0, 7)).collect();
+            let xs = random_volley(p, &mut rng, 0.3);
+            let want = fire_times_folded(&xs, &ws, q, theta, 16);
+            // Kernel scratch is reused across trials of varying geometry.
+            assert_eq!(kernel.fire_times(&xs, &ws, q, theta, 16), &want[..]);
+        }
+    }
+
+    #[test]
+    fn infer_column_matches_scalar_infer() {
+        let mut rng = Rng64::seed_from_u64(4);
+        let mut kernel = ColumnKernel::new();
+        for _ in 0..60 {
+            let p = rng.gen_range(2, 32);
+            let q = rng.gen_range(1, 7);
+            let theta = rng.gen_range(1, p * 4) as u32;
+            let col = Column::with_random_weights(p, q, theta, TnnParams::default(), &mut rng);
+            let xs = random_volley(p, &mut rng, 0.4);
+            let mut out = vec![SpikeTime::NONE; q];
+            infer_column(&col, &mut kernel, &xs, &mut out);
+            assert_eq!(out, col.infer(&xs).output);
+        }
+    }
+
+    #[test]
+    fn stdp_tables_gate_bit_exact_with_scalar_update() {
+        // Replay the lazy draw discipline against the scalar float path:
+        // clone the stream, reconstruct the uniforms the same raw words
+        // produce, and compare updates for every case and weight.
+        let params = TnnParams::default();
+        let tables = StdpTables::new(&params);
+        let mut rng = Rng64::seed_from_u64(21);
+        let cases = [
+            StdpCase::Capture,
+            StdpCase::Minus,
+            StdpCase::Search,
+            StdpCase::Backoff,
+            StdpCase::None,
+        ];
+        for trial in 0..4000 {
+            let case = cases[rng.gen_range(0, cases.len())];
+            let w = rng.gen_u8_inclusive(0, 7);
+            let mut replay = rng.clone();
+            let got = tables.apply_case(w, case, &mut rng);
+            let want = match super::super::stdp::case_is_inc(case) {
+                None => w,
+                Some(_) => {
+                    let u_case = replay.gen_f64();
+                    if u_case >= super::super::stdp::case_mu(case, &params) {
+                        stdp_update(w, case, u_case, 1.0, &params)
+                    } else {
+                        let u_stab = replay.gen_f64();
+                        stdp_update(w, case, u_case, u_stab, &params)
+                    }
+                }
+            };
+            assert_eq!(got, want, "trial {trial} case {case:?} w {w}");
+            // Both consumed the same number of draws.
+            assert_eq!(rng.next_u64(), replay.next_u64(), "draw count diverged");
+        }
+    }
+
+    #[test]
+    fn update_column_classifies_like_stdp_case() {
+        // The hoisted row-major classification must agree with the
+        // canonical per-synapse `stdp_case` table.
+        let params = TnnParams {
+            stabilize: false,
+            mu_capture: 1.0,
+            mu_minus: 1.0,
+            mu_search: 1.0,
+            mu_backoff: 1.0,
+            ..TnnParams::default()
+        };
+        let tables = StdpTables::new(&params);
+        let mut rng = Rng64::seed_from_u64(8);
+        for _ in 0..50 {
+            let p = rng.gen_range(1, 12);
+            let q = rng.gen_range(1, 5);
+            let xs = random_volley(p, &mut rng, 0.4);
+            let ys = random_volley(q, &mut rng, 0.4);
+            let mut ws: Vec<u8> = (0..p * q).map(|_| rng.gen_u8_inclusive(0, 7)).collect();
+            let before = ws.clone();
+            tables.update_column(&mut ws, &xs, &ys, &mut rng.clone());
+            // With all µ = 1 and no stabilization every non-None case
+            // applies unconditionally: reconstruct from the case table.
+            for i in 0..p {
+                for j in 0..q {
+                    let k = i * q + j;
+                    let want = match stdp_case(xs[i], ys[j]) {
+                        StdpCase::Capture | StdpCase::Search => (before[k] + 1).min(7),
+                        StdpCase::Minus | StdpCase::Backoff => before[k].saturating_sub(1),
+                        StdpCase::None => before[k],
+                    };
+                    assert_eq!(ws[k], want, "synapse ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_column_capture_backoff_dynamics() {
+        // Mirror of the scalar `learning_moves_weights_toward_input_pattern`
+        // test — the lazy draw discipline must produce the same dynamics.
+        let mut rng = Rng64::seed_from_u64(42);
+        let p = 8;
+        let mut bc = BatchedColumn::new(Column::new(p, 1, 6, TnnParams::default()));
+        let xs: Vec<SpikeTime> = (0..p)
+            .map(|i| if i < 4 { SpikeTime::at(0) } else { SpikeTime::NONE })
+            .collect();
+        for _ in 0..300 {
+            bc.step(&xs, &mut rng);
+        }
+        let ws = bc.column().weights();
+        let active: f64 = ws[..4].iter().map(|&w| w as f64).sum::<f64>() / 4.0;
+        let silent: f64 = ws[4..].iter().map(|&w| w as f64).sum::<f64>() / 4.0;
+        assert!(
+            active > 5.0 && silent < 2.0,
+            "capture/backoff should separate weights: active={active} silent={silent}"
+        );
+    }
+
+    fn test_layer(seed: u64) -> (ColumnLayer, VolleyBatch) {
+        let mut rng = Rng64::seed_from_u64(seed);
+        let rf = ReceptiveField::Patches1d { size: 6, stride: 3 };
+        let mut layer = ColumnLayer::new(24, rf, 3, None, TnnParams::default());
+        layer.randomize(&mut rng);
+        let volleys: Vec<Vec<SpikeTime>> = (0..20)
+            .map(|_| random_volley(24, &mut rng, 0.5))
+            .collect();
+        (layer, VolleyBatch::from_volleys(&volleys))
+    }
+
+    #[test]
+    fn layer_infer_batch_matches_per_sample_at_any_thread_count() {
+        let (layer, batch) = test_layer(5);
+        let want: Vec<Vec<SpikeTime>> = batch.iter().map(|v| layer.infer(v)).collect();
+        for threads in [1, 2, 3, 7] {
+            let got = layer.infer_batch(&batch, threads);
+            assert_eq!(got.len(), batch.len());
+            for (s, w) in want.iter().enumerate() {
+                assert_eq!(got.volley(s), &w[..], "sample {s}, {threads} threads");
+                assert_eq!(
+                    got.packed_presence(s),
+                    pack_presence(w),
+                    "packed summary disagrees at sample {s}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn layer_step_epoch_is_thread_count_invariant() {
+        let (base, batch) = test_layer(6);
+        let stream = Rng64::seed_from_u64(77);
+        let mut reference: Option<(Vec<Vec<u8>>, VolleyBatch)> = None;
+        for threads in [1, 2, 4] {
+            let mut layer = base.clone();
+            let out = layer.step_epoch(&batch, &stream, threads);
+            let weights: Vec<Vec<u8>> = layer
+                .columns()
+                .iter()
+                .map(|c| c.weights().to_vec())
+                .collect();
+            match &reference {
+                None => reference = Some((weights, out)),
+                Some((w0, o0)) => {
+                    assert_eq!(&weights, w0, "{threads}-thread weights diverge");
+                    assert_eq!(&out, o0, "{threads}-thread outputs diverge");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_column_layer_epoch_matches_batched_column_steps() {
+        // Bridge the layer pipeline to the single-column engine: a Full-RF
+        // layer's epoch must equal stepping its one column sample-by-sample
+        // on the column stream `split_stream(0)`.
+        let mut rng = Rng64::seed_from_u64(12);
+        let mut layer = ColumnLayer::new(10, ReceptiveField::Full, 2, Some(5), TnnParams::default());
+        layer.randomize(&mut rng);
+        let volleys: Vec<Vec<SpikeTime>> = (0..30)
+            .map(|_| random_volley(10, &mut rng, 0.5))
+            .collect();
+        let batch = VolleyBatch::from_volleys(&volleys);
+
+        let mut bc = BatchedColumn::new(layer.columns()[0].clone());
+        let stream = Rng64::seed_from_u64(33);
+        let mut col_rng = stream.split_stream(0);
+        let mut step_outs = VolleyBatch::new(2);
+        for v in &volleys {
+            bc.step(v, &mut col_rng);
+            step_outs.push(&bc.out); // the post-WTA volley of this step
+        }
+
+        let got = layer.step_epoch(&batch, &stream, 1);
+        assert_eq!(got, step_outs);
+        assert_eq!(layer.columns()[0].weights(), bc.column().weights());
+    }
+
+    #[test]
+    fn network_epoch_and_infer_batch_smoke() {
+        let p = TnnParams::default();
+        let l1 = ColumnLayer::new(
+            16,
+            ReceptiveField::Patches1d { size: 4, stride: 4 },
+            2,
+            Some(3),
+            p.clone(),
+        );
+        let l2 = ColumnLayer::new(l1.output_len(), ReceptiveField::Full, 3, Some(1), p);
+        let mut net = TnnNetwork::new(vec![l1, l2]);
+        let mut rng = Rng64::seed_from_u64(19);
+        net.randomize(&mut rng);
+        let volleys: Vec<Vec<SpikeTime>> = (0..16)
+            .map(|_| random_volley(16, &mut rng, 0.5))
+            .collect();
+        let batch = VolleyBatch::from_volleys(&volleys);
+
+        // infer_batch == per-sample infer at several thread counts
+        let want: Vec<Vec<SpikeTime>> = batch.iter().map(|v| net.infer(v)).collect();
+        for threads in [1, 3] {
+            let got = net.infer_batch(&batch, threads);
+            for (s, w) in want.iter().enumerate() {
+                assert_eq!(got.volley(s), &w[..], "sample {s}");
+            }
+        }
+
+        // step_epoch thread-count invariance end to end
+        let stream = Rng64::seed_from_u64(55);
+        let mut n1 = net.clone();
+        let o1 = n1.step_epoch(&batch, &stream, 1);
+        let mut n4 = net.clone();
+        let o4 = n4.step_epoch(&batch, &stream, 4);
+        assert_eq!(o1, o4);
+        for (a, b) in n1.layers().iter().zip(n4.layers()) {
+            for (ca, cb) in a.columns().iter().zip(b.columns()) {
+                assert_eq!(ca.weights(), cb.weights());
+            }
+        }
+        // ...and learning actually happened.
+        let changed = net
+            .layers()
+            .iter()
+            .zip(n1.layers())
+            .any(|(a, b)| {
+                a.columns()
+                    .iter()
+                    .zip(b.columns())
+                    .any(|(ca, cb)| ca.weights() != cb.weights())
+            });
+        assert!(changed, "epoch must learn");
+    }
+}

@@ -140,6 +140,27 @@ impl Column {
         }
     }
 
+    /// Apply one gamma cycle's STDP update from explicit pre/post spike
+    /// volleys and uniform draws — the learning half of
+    /// [`Column::step_with_uniforms`], exposed so callers that compute the
+    /// post-WTA volley themselves (the allocation-free layer path, the
+    /// batched engine's tests) can learn without re-running inference.
+    pub fn apply_stdp(
+        &mut self,
+        xs: &[SpikeTime],
+        ys: &[SpikeTime],
+        u_case: &[f64],
+        u_stab: &[f64],
+    ) {
+        stdp_update_column(xs, ys, &mut self.weights, u_case, u_stab, &self.params);
+    }
+
+    /// Move this column into the batched SoA engine (reusable kernel
+    /// scratch + precomputed STDP threshold tables).
+    pub fn batched(self) -> super::batch::BatchedColumn {
+        super::batch::BatchedColumn::new(self)
+    }
+
     /// One full gamma cycle with STDP learning, using explicit uniform
     /// draws (deterministic — this is the form mirrored by the XLA kernel).
     /// `u_case`/`u_stab` are row-major p×q in `[0,1)`.
@@ -150,14 +171,7 @@ impl Column {
         u_stab: &[f64],
     ) -> GammaOutput {
         let out = self.infer(xs);
-        stdp_update_column(
-            xs,
-            &out.output,
-            &mut self.weights,
-            u_case,
-            u_stab,
-            &self.params,
-        );
+        self.apply_stdp(xs, &out.output, u_case, u_stab);
         out
     }
 

@@ -5,6 +5,7 @@
 //! q-neuron post-WTA volley. The layer output is the concatenation of the
 //! column outputs.
 
+use super::batch::{infer_column, ColumnKernel};
 use super::column::Column;
 use super::params::TnnParams;
 use super::spike::SpikeTime;
@@ -87,6 +88,17 @@ pub struct ColumnLayer {
     input_len: usize,
     patches: Vec<Vec<usize>>,
     columns: Vec<Column>,
+    scratch: StepScratch,
+}
+
+/// Reusable buffers for the scalar learning path: with warm buffers,
+/// [`ColumnLayer::step_into`] performs no heap allocation per gamma cycle.
+#[derive(Clone, Debug, Default)]
+struct StepScratch {
+    kernel: ColumnKernel,
+    sub: Vec<SpikeTime>,
+    u_case: Vec<f64>,
+    u_stab: Vec<f64>,
 }
 
 impl ColumnLayer {
@@ -114,6 +126,7 @@ impl ColumnLayer {
             input_len,
             patches,
             columns,
+            scratch: StepScratch::default(),
         }
     }
 
@@ -135,6 +148,27 @@ impl ColumnLayer {
     }
     pub fn columns_mut(&mut self) -> &mut [Column] {
         &mut self.columns
+    }
+    /// The per-column input index sets (into the layer's input volley).
+    pub fn patches(&self) -> &[Vec<usize>] {
+        &self.patches
+    }
+    /// Columns (mutable) and patches (shared) split field-wise — the borrow
+    /// shape the learning paths need (weights change, geometry doesn't).
+    pub(crate) fn parts_mut(&mut self) -> (&mut [Column], &[Vec<usize>]) {
+        (&mut self.columns, &self.patches)
+    }
+    /// Offset of each column's neurons within the layer output volley.
+    pub fn column_offsets(&self) -> Vec<usize> {
+        let mut off = 0;
+        self.columns
+            .iter()
+            .map(|c| {
+                let o = off;
+                off += c.q();
+                o
+            })
+            .collect()
     }
     pub fn input_len(&self) -> usize {
         self.input_len
@@ -165,14 +199,47 @@ impl ColumnLayer {
 
     /// One gamma cycle with STDP learning in every column.
     pub fn step(&mut self, xs: &[SpikeTime], rng: &mut Rng64) -> Vec<SpikeTime> {
-        assert_eq!(xs.len(), self.input_len, "layer input length mismatch");
         let mut out = Vec::with_capacity(self.output_len());
-        let patches = self.patches.clone();
-        for (col, patch) in self.columns.iter_mut().zip(&patches) {
-            let sub: Vec<SpikeTime> = patch.iter().map(|&i| xs[i]).collect();
-            out.extend(col.step(&sub, rng).output);
-        }
+        self.step_into(xs, rng, &mut out);
         out
+    }
+
+    /// One gamma cycle with STDP learning in every column, writing the layer
+    /// output volley into `out` (cleared first).
+    ///
+    /// Bit-identical to the historical per-column `Column::step` loop — the
+    /// uniform draw order (all `u_case`, then all `u_stab`, per column in
+    /// order) and the update math are unchanged — but the borrow is split
+    /// field-wise instead of cloning the patch index sets every cycle, and
+    /// the gather / uniform / fire-time buffers are reused, so stepping a
+    /// layer with warm scratch allocates nothing per gamma cycle.
+    pub fn step_into(&mut self, xs: &[SpikeTime], rng: &mut Rng64, out: &mut Vec<SpikeTime>) {
+        assert_eq!(xs.len(), self.input_len, "layer input length mismatch");
+        out.clear();
+        let ColumnLayer {
+            columns,
+            patches,
+            scratch,
+            ..
+        } = self;
+        for (col, patch) in columns.iter_mut().zip(patches.iter()) {
+            let n = col.p() * col.q();
+            scratch.sub.clear();
+            scratch.sub.extend(patch.iter().map(|&i| xs[i]));
+            scratch.u_case.resize(n, 0.0);
+            scratch.u_stab.resize(n, 0.0);
+            rng.fill_f64(&mut scratch.u_case);
+            rng.fill_f64(&mut scratch.u_stab);
+            let start = out.len();
+            out.resize(start + col.q(), SpikeTime::NONE);
+            infer_column(col, &mut scratch.kernel, &scratch.sub, &mut out[start..]);
+            col.apply_stdp(
+                &scratch.sub,
+                &out[start..],
+                &scratch.u_case,
+                &scratch.u_stab,
+            );
+        }
     }
 }
 

@@ -26,7 +26,14 @@
 //! * **STDP** (`stdp_case_gen`, `incdec`, `stabilize_func` macros) performs
 //!   local, probabilistic, bimodally-stabilized weight updates every gamma
 //!   cycle using the input spikes and the post-WTA output spikes.
+//!
+//! Two behavioral engines implement these semantics: the scalar per-sample
+//! golden model (`Column::infer` / `Column::step`, the reference everything
+//! else is checked against) and the batched structure-of-arrays engine with
+//! a deterministic multi-threaded training pipeline ([`batch`]) — see
+//! README §"Behavioral engines".
 
+pub mod batch;
 pub mod column;
 pub mod encode;
 pub mod layer;
@@ -38,6 +45,7 @@ pub mod stdp;
 pub mod synapse;
 pub mod wta;
 
+pub use batch::{BatchedColumn, ColumnKernel, StdpTables, VolleyBatch};
 pub use column::Column;
 pub use encode::{encode_intensity, encode_onoff, encode_series};
 pub use layer::{ColumnLayer, ReceptiveField};

@@ -8,50 +8,23 @@
 //! spike times and weights.
 
 use super::spike::SpikeTime;
-use super::synapse::{rnl_active, rnl_cumulative};
+use super::synapse::rnl_active;
 
-/// Folded fire-time computation for one neuron.
+/// Accumulate ramp start/stop events into per-cycle delta buckets.
 ///
-/// `xs` are the input spike times, `ws` the corresponding weights (same
-/// length), `theta` the threshold, `gamma_cycles` the number of unit cycles
-/// scanned. Returns the first cycle `t` at which
-/// `Σ_i rnl_cumulative(x_i, w_i, t) ≥ θ`, or `NONE`.
-pub fn fire_time(xs: &[SpikeTime], ws: &[u8], theta: u32, gamma_cycles: u32) -> SpikeTime {
-    debug_assert_eq!(xs.len(), ws.len());
-    // The potential is monotone non-decreasing in t, so binary search would
-    // work; the linear scan is kept for clarity (the hot path lives in the
-    // XLA kernel / `fire_times_folded` batched form, not here).
-    for t in 0..gamma_cycles {
-        let mut pot: u64 = 0;
-        for (&x, &w) in xs.iter().zip(ws) {
-            pot += rnl_cumulative(x, w, t) as u64;
-        }
-        if pot >= theta as u64 {
-            return SpikeTime::at(t);
-        }
-    }
-    SpikeTime::NONE
-}
-
-/// Batched folded fire-times for a full column: `ws` is row-major `p × q`
-/// (synapse-major: `ws[i*q + j]` is the weight from input `i` to neuron `j`).
+/// `delta` is row-major `(g+1) × q` and must arrive zeroed (the `+1` row
+/// absorbs stop events of ramps that outlive the gamma cycle);
+/// `delta[t*q + j]` receives `+1` when a ramp of neuron `j` starts at cycle
+/// `t` (`t = x_i`, `w > 0`) and `−1` when it ends (`t = x_i + w`). `ws` is
+/// row-major `p × q` (synapse-major: `ws[i*q + j]` is the weight from input
+/// `i` to neuron `j`).
 ///
-/// This is the golden reference the XLA column kernel is compared against.
-/// It evaluates the per-cycle instantaneous sums incrementally (O(p·q +
-/// gamma·q) instead of O(gamma·p·q)) by bucketing ramp start/stop events.
-pub fn fire_times_folded(
-    xs: &[SpikeTime],
-    ws: &[u8],
-    q: usize,
-    theta: u32,
-    gamma_cycles: u32,
-) -> Vec<SpikeTime> {
-    let p = xs.len();
-    debug_assert_eq!(ws.len(), p * q);
-    // delta[t][j] = change in instantaneous response sum of neuron j at cycle
-    // t: +1 when a ramp starts (t = x_i, w > 0), −1 when it ends (t = x_i+w).
-    let g = gamma_cycles as usize;
-    let mut delta = vec![0i32; (g + 1) * q];
+/// This is the shared event-bucketing core of [`fire_time`],
+/// [`fire_times_folded`] and the batched SoA kernel
+/// ([`crate::tnn::batch::ColumnKernel`]).
+pub fn bucket_ramp_deltas(xs: &[SpikeTime], ws: &[u8], q: usize, g: usize, delta: &mut [i32]) {
+    debug_assert_eq!(ws.len(), xs.len() * q);
+    debug_assert_eq!(delta.len(), (g + 1) * q);
     for (i, &x) in xs.iter().enumerate() {
         if !x.is_spike() {
             continue;
@@ -70,15 +43,37 @@ pub fn fire_times_folded(
             delta[stop * q + j] -= 1;
         }
     }
-    let mut out = vec![SpikeTime::NONE; q];
-    let mut rate = vec![0i64; q]; // instantaneous response sum
-    let mut pot = vec![0i64; q]; // integrated body potential
+}
+
+/// Scan accumulated delta buckets into threshold-crossing fire times.
+///
+/// Integrates the per-cycle instantaneous response sums (`rate`) into flat
+/// body-potential accumulators (`pot`, one `u32` per neuron — the response
+/// sum is non-negative, bounded by `p`, and the integral by `p·w_max`) and
+/// records the first cycle each neuron's potential reaches `theta`. The
+/// three scratch slices are (re)initialized here, so callers can reuse
+/// buffers across invocations without clearing them. Scanning stops early
+/// once every neuron has fired.
+pub fn scan_ramp_deltas(
+    delta: &[i32],
+    q: usize,
+    theta: u32,
+    g: usize,
+    rate: &mut [i32],
+    pot: &mut [u32],
+    out: &mut [SpikeTime],
+) {
+    debug_assert_eq!(delta.len(), (g + 1) * q);
+    debug_assert!(rate.len() == q && pot.len() == q && out.len() == q);
+    rate.fill(0);
+    pot.fill(0);
+    out.fill(SpikeTime::NONE);
     let mut remaining = q;
     for t in 0..g {
         for j in 0..q {
-            rate[j] += delta[t * q + j] as i64;
-            pot[j] += rate[j];
-            if pot[j] >= theta as i64 && !out[j].is_spike() {
+            rate[j] += delta[t * q + j];
+            pot[j] += rate[j] as u32;
+            if pot[j] >= theta && !out[j].is_spike() {
                 out[j] = SpikeTime::at(t as u32);
                 remaining -= 1;
             }
@@ -87,6 +82,58 @@ pub fn fire_times_folded(
             break;
         }
     }
+}
+
+/// Folded fire-time computation for one neuron.
+///
+/// `xs` are the input spike times, `ws` the corresponding weights (same
+/// length), `theta` the threshold, `gamma_cycles` the number of unit cycles
+/// scanned. Returns the first cycle `t` at which
+/// `Σ_i rnl_cumulative(x_i, w_i, t) ≥ θ`, or `NONE`.
+pub fn fire_time(xs: &[SpikeTime], ws: &[u8], theta: u32, gamma_cycles: u32) -> SpikeTime {
+    debug_assert_eq!(xs.len(), ws.len());
+    // Shares the event-bucketed incremental evaluation with
+    // `fire_times_folded` (q = 1): O(p + γ) instead of rescanning all p
+    // synapses every cycle. The integrated potential Σ_t rate(t) equals
+    // Σ_i rnl_cumulative(x_i, w_i, t) cycle for cycle.
+    let g = gamma_cycles as usize;
+    let mut delta = vec![0i32; g + 1];
+    bucket_ramp_deltas(xs, ws, 1, g, &mut delta);
+    let (mut rate, mut pot) = (0i32, 0u32);
+    for (t, &d) in delta[..g].iter().enumerate() {
+        rate += d;
+        pot += rate as u32;
+        if pot >= theta {
+            return SpikeTime::at(t as u32);
+        }
+    }
+    SpikeTime::NONE
+}
+
+/// Batched folded fire-times for a full column: `ws` is row-major `p × q`
+/// (synapse-major: `ws[i*q + j]` is the weight from input `i` to neuron `j`).
+///
+/// This is the golden reference the XLA column kernel is compared against.
+/// It evaluates the per-cycle instantaneous sums incrementally (O(p·q +
+/// gamma·q) instead of O(gamma·p·q)) by bucketing ramp start/stop events
+/// ([`bucket_ramp_deltas`] + [`scan_ramp_deltas`]). The allocation-free
+/// variant over reusable scratch lives in [`crate::tnn::batch::ColumnKernel`].
+pub fn fire_times_folded(
+    xs: &[SpikeTime],
+    ws: &[u8],
+    q: usize,
+    theta: u32,
+    gamma_cycles: u32,
+) -> Vec<SpikeTime> {
+    let p = xs.len();
+    debug_assert_eq!(ws.len(), p * q);
+    let g = gamma_cycles as usize;
+    let mut delta = vec![0i32; (g + 1) * q];
+    bucket_ramp_deltas(xs, ws, q, g, &mut delta);
+    let mut rate = vec![0i32; q];
+    let mut pot = vec![0u32; q];
+    let mut out = vec![SpikeTime::NONE; q];
+    scan_ramp_deltas(&delta, q, theta, g, &mut rate, &mut pot, &mut out);
     out
 }
 
@@ -203,6 +250,39 @@ mod tests {
             let folded = fire_times_folded(&xs, &ws, q, theta, 16);
             let cycle = fire_times_cycle_accurate(&xs, &ws, q, theta, 16);
             assert_eq!(folded, cycle, "trial {trial} p={p} q={q} theta={theta}");
+        }
+    }
+
+    #[test]
+    fn fire_time_matches_folded_and_cycle_accurate() {
+        // `fire_time` shares the event-bucketed core with the batched forms;
+        // this pins the single-neuron path to both references.
+        use crate::util::Rng64;
+        let mut rng = Rng64::seed_from_u64(13);
+        for trial in 0..200 {
+            let p = rng.gen_range(1, 24);
+            let xs: Vec<SpikeTime> = (0..p)
+                .map(|_| {
+                    if rng.gen_bool(0.25) {
+                        SpikeTime::NONE
+                    } else {
+                        SpikeTime::at(rng.gen_range(0, 10) as u32)
+                    }
+                })
+                .collect();
+            let ws: Vec<u8> = (0..p).map(|_| rng.gen_u8_inclusive(0, 7)).collect();
+            let theta = rng.gen_range(1, p * 3 + 1) as u32;
+            let single = fire_time(&xs, &ws, theta, 16);
+            assert_eq!(
+                vec![single],
+                fire_times_folded(&xs, &ws, 1, theta, 16),
+                "trial {trial} vs folded"
+            );
+            assert_eq!(
+                vec![single],
+                fire_times_cycle_accurate(&xs, &ws, 1, theta, 16),
+                "trial {trial} vs cycle-accurate"
+            );
         }
     }
 

@@ -122,9 +122,51 @@ pub fn earliest_spike(times: &[SpikeTime]) -> (usize, SpikeTime) {
     (idx, best)
 }
 
+/// True if any line of the volley carries a spike (an all-silent volley is
+/// a no-op for the whole column pipeline: nothing fires, STDP sees only
+/// `None` cases — the batched engine's skip fast path).
+#[inline]
+pub fn any_spike(times: &[SpikeTime]) -> bool {
+    times.iter().any(|t| t.is_spike())
+}
+
+/// Pack spike *presence* into a bit-vector: bit `i % 64` of word `i / 64`
+/// is set iff `times[i]` carries a spike. The spike times themselves stay
+/// in the flat `SpikeTime` array; the packed form is the cheap-to-compare,
+/// cheap-to-scan summary used by the batched engine and its equivalence
+/// tests (64 lines per word, `count_ones` for densities).
+pub fn pack_presence(times: &[SpikeTime]) -> Vec<u64> {
+    let mut words = vec![0u64; times.len().div_ceil(64)];
+    for (i, &t) in times.iter().enumerate() {
+        if t.is_spike() {
+            words[i / 64] |= 1u64 << (i % 64);
+        }
+    }
+    words
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn pack_presence_round_trips() {
+        let mut v = vec![SpikeTime::NONE; 130];
+        for i in [0usize, 1, 63, 64, 65, 127, 128, 129] {
+            v[i] = SpikeTime::at((i % 7) as u32);
+        }
+        let packed = pack_presence(&v);
+        assert_eq!(packed.len(), 3);
+        for (i, &t) in v.iter().enumerate() {
+            let bit = (packed[i / 64] >> (i % 64)) & 1 == 1;
+            assert_eq!(bit, t.is_spike(), "line {i}");
+        }
+        let total: u32 = packed.iter().map(|w| w.count_ones()).sum();
+        assert_eq!(total, 8);
+        assert!(any_spike(&v));
+        assert!(!any_spike(&[SpikeTime::NONE; 4]));
+        assert!(pack_presence(&[]).is_empty());
+    }
 
     #[test]
     fn none_loses_every_race() {

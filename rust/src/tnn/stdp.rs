@@ -97,6 +97,29 @@ pub fn stab_down(w: u8, w_max: u8) -> f64 {
     (w_max as f64 - w as f64 + 1.0) / (w_max as f64 + 1.0)
 }
 
+/// Integer-space Bernoulli threshold: the unique `T` such that
+/// `Rng64::gen_f64() < mu` ⟺ `(word >> 11) < T`, where `word` is the raw
+/// `next_u64` draw the f64 was made from.
+///
+/// `gen_f64` yields `k · 2⁻⁵³` with `k = word >> 11 ∈ [0, 2⁵³)`, and
+/// `k · 2⁻⁵³ < µ ⟺ k < µ·2⁵³`. Both `µ·2⁵³` (a power-of-two scaling of an
+/// f64) and its ceiling are computed exactly, so the integer comparison is
+/// *bit-exact* with the floating-point one — this is what lets the batched
+/// engine ([`crate::tnn::batch`]) precompute per-case and per-weight
+/// thresholds once and classify every synapse with a shift and an integer
+/// compare, no float math on the hot path.
+pub fn mu_threshold_u53(mu: f64) -> u64 {
+    const ONE: u64 = 1 << 53;
+    let scaled = mu * ONE as f64;
+    if scaled >= ONE as f64 {
+        ONE
+    } else if scaled > 0.0 {
+        scaled.ceil() as u64
+    } else {
+        0 // mu ≤ 0 (or NaN): the Bernoulli never fires
+    }
+}
+
 /// Apply one STDP update to a weight.
 ///
 /// `u_case` and `u_stab` are uniform draws in `[0,1)`: the update fires iff
@@ -240,6 +263,47 @@ mod tests {
         stdp_update_column(&xs, &ys, &mut ws, &u0, &u0, &p);
         // synapse 0: capture (x=0 ≤ y=3) → 4; synapse 1: backoff → 2.
         assert_eq!(ws, vec![4, 2]);
+    }
+
+    #[test]
+    fn mu_threshold_is_bit_exact_with_gen_f64() {
+        use crate::util::Rng64;
+        let mut rng = Rng64::seed_from_u64(99);
+        let scale = 1.0 / (1u64 << 53) as f64;
+        let mut mus: Vec<f64> = vec![0.0, 1.0, 0.5, 1.0 / 16.0, 1e-17, 1.0 - 1e-16];
+        for w in 0..=7u8 {
+            mus.push(stab_up(w, 7));
+            mus.push(stab_down(w, 7));
+        }
+        for _ in 0..64 {
+            mus.push(rng.gen_f64());
+        }
+        for mu in mus {
+            let t = mu_threshold_u53(mu);
+            for _ in 0..512 {
+                let word = rng.next_u64();
+                let k = word >> 11;
+                // (word >> 11) * 2⁻⁵³ is exactly what gen_f64 computes from
+                // this raw word.
+                assert_eq!(
+                    (k as f64 * scale) < mu,
+                    k < t,
+                    "mu={mu} word={word:#x}"
+                );
+            }
+            // Boundary draws, exercised directly.
+            if t > 0 {
+                assert!(((t - 1) as f64 * scale) < mu);
+            }
+            if t < 1 << 53 {
+                assert!((t as f64 * scale) >= mu);
+            }
+        }
+        assert_eq!(mu_threshold_u53(0.0), 0);
+        assert_eq!(mu_threshold_u53(-1.0), 0);
+        assert_eq!(mu_threshold_u53(1.0), 1 << 53);
+        assert_eq!(mu_threshold_u53(2.0), 1 << 53);
+        assert_eq!(mu_threshold_u53(f64::NAN), 0);
     }
 
     #[test]

@@ -168,3 +168,91 @@ fn xla_runtime_full_pipeline_if_artifacts_present() {
     assert_eq!(out.processed, 20);
     assert!(out.throughput_hz > 10.0);
 }
+
+/// Batched-engine equivalence on the paper's deepest shape: `infer_batch`
+/// through the 4-layer MNIST network is bit-exact with the per-sample
+/// scalar `infer`, at several worker-thread counts.
+#[test]
+fn mnist_4layer_infer_batch_matches_per_sample_infer() {
+    use tnn7::mnist::{trainable_network, DigitCorpus};
+    let mut net = trainable_network(4, TnnParams::default());
+    net.randomize(&mut Rng64::seed_from_u64(31));
+    let corpus = DigitCorpus::generate(1, 32); // one digit per class
+    let batch = corpus.encode_batch(8);
+    let want: Vec<Vec<SpikeTime>> = batch.iter().map(|v| net.infer(v)).collect();
+    for threads in [1, 2, 4] {
+        let got = net.infer_batch(&batch, threads);
+        assert_eq!(got.len(), want.len());
+        for (s, w) in want.iter().enumerate() {
+            assert_eq!(got.volley(s), &w[..], "sample {s}, {threads} threads");
+        }
+    }
+}
+
+/// A full UCR training epoch on the batched pipeline is bit-exact — weights
+/// and output volleys — at 1, 2 and 4 worker threads on a fixed seed; the
+/// same holds through the multi-column 4-layer MNIST network.
+#[test]
+fn batched_training_epoch_is_thread_count_invariant() {
+    use tnn7::mnist::{trainable_network, DigitCorpus};
+    use tnn7::tnn::batch::VolleyBatch;
+    use tnn7::tnn::{ColumnLayer, ReceptiveField};
+
+    // UCR TwoLeadECG: a Full-receptive-field layer holding the 82×2 column.
+    let cfg = ucr::ucr_suite()
+        .into_iter()
+        .find(|c| c.name == "TwoLeadECG")
+        .unwrap();
+    let data = ucr::generate(cfg, 25, 11);
+    let items = encode_ucr(&data, 8);
+    let batch = VolleyBatch::from_volleys(
+        &items.iter().map(|i| i.volley.clone()).collect::<Vec<_>>(),
+    );
+    let mut base = ColumnLayer::new(
+        cfg.p,
+        ReceptiveField::Full,
+        cfg.q,
+        Some(24),
+        TnnParams::default(),
+    );
+    base.randomize(&mut Rng64::seed_from_u64(3));
+    let stream = Rng64::seed_from_u64(19);
+    let mut reference = None;
+    for threads in [1usize, 2, 4] {
+        let mut layer = base.clone();
+        let out = layer.step_epoch(&batch, &stream, threads);
+        let ws: Vec<Vec<u8>> = layer.columns().iter().map(|c| c.weights().to_vec()).collect();
+        match &reference {
+            None => reference = Some((ws, out)),
+            Some((w0, o0)) => {
+                assert_eq!(&ws, w0, "UCR weights diverge at {threads} threads");
+                assert_eq!(&out, o0, "UCR outputs diverge at {threads} threads");
+            }
+        }
+    }
+
+    // 4-layer MNIST network: 16/4/2/1 columns per layer, real sharding.
+    let mut net_base = trainable_network(4, TnnParams::default());
+    net_base.randomize(&mut Rng64::seed_from_u64(5));
+    let corpus = DigitCorpus::generate(2, 23);
+    let mbatch = corpus.encode_batch(8);
+    let mstream = Rng64::seed_from_u64(29);
+    let mut mref = None;
+    for threads in [1usize, 2, 4] {
+        let mut net = net_base.clone();
+        let out = net.step_epoch(&mbatch, &mstream, threads);
+        let ws: Vec<Vec<u8>> = net
+            .layers()
+            .iter()
+            .flat_map(|l| l.columns())
+            .map(|c| c.weights().to_vec())
+            .collect();
+        match &mref {
+            None => mref = Some((ws, out)),
+            Some((w0, o0)) => {
+                assert_eq!(&ws, w0, "MNIST weights diverge at {threads} threads");
+                assert_eq!(&out, o0, "MNIST outputs diverge at {threads} threads");
+            }
+        }
+    }
+}
