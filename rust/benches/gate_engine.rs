@@ -1,0 +1,120 @@
+//! Gate-engine inference throughput: the scalar `ColumnSim` path vs the
+//! 64-lane word-parallel netlist sweep (`GateColumn::infer_batch`) on a UCR
+//! column. The word path packs one gamma item per simulator lane, so a
+//! full-dataset gate-level inference sweep costs roughly one scalar pass —
+//! this is what makes `report conformance` and `run ucr --engine gate`
+//! scoring practical. Winner equivalence between the two paths is asserted
+//! before timing. Records the baseline/after pair in `BENCH_gate.json`.
+//!
+//! Run with `cargo bench --bench gate_engine` (set `TNN7_BENCH_FAST=1` for
+//! a CI-speed configuration on a smaller geometry).
+
+use tnn7::coordinator::encode_ucr;
+use tnn7::gates::gate_engine::GateColumn;
+use tnn7::tnn::column::Column;
+use tnn7::tnn::params::TnnParams;
+use tnn7::tnn::spike::SpikeTime;
+use tnn7::ucr::{self, UcrConfig};
+use tnn7::util::bench::{black_box, Bencher};
+use tnn7::util::json::Json;
+use tnn7::util::Rng64;
+
+fn main() {
+    let fast = std::env::var("TNN7_BENCH_FAST").is_ok();
+    let (cfg, n_volleys) = if fast {
+        (
+            UcrConfig {
+                name: "conformance-16x3",
+                p: 16,
+                q: 3,
+            },
+            32usize,
+        )
+    } else {
+        (
+            ucr::ucr_suite()
+                .into_iter()
+                .find(|c| c.name == "TwoLeadECG")
+                .unwrap(),
+            64usize,
+        )
+    };
+    let data = ucr::generate(cfg, n_volleys.div_ceil(cfg.q).max(1), 7);
+    let items = encode_ucr(&data, 8);
+    let volleys: Vec<&[SpikeTime]> = items
+        .iter()
+        .take(n_volleys)
+        .map(|i| i.volley.as_slice())
+        .collect();
+
+    let theta = (cfg.p as u32 * 7) / 4;
+    let col = Column::with_random_weights(
+        cfg.p,
+        cfg.q,
+        theta,
+        TnnParams::default(),
+        &mut Rng64::seed_from_u64(9),
+    );
+    let mut gate = GateColumn::from_column(&col).expect("column design levelizes");
+    println!(
+        "{} {}x{} gate column, {} volleys per sweep",
+        cfg.name,
+        cfg.p,
+        cfg.q,
+        volleys.len()
+    );
+
+    // Equivalence guard before timing: the word sweep must reproduce the
+    // scalar path winner for winner.
+    let word_winners = gate.infer_batch(&volleys);
+    let scalar_winners: Vec<Option<usize>> =
+        volleys.iter().map(|v| gate.infer_winner(v)).collect();
+    assert_eq!(
+        word_winners, scalar_winners,
+        "word-parallel sweep disagrees with scalar gate path"
+    );
+
+    let b = Bencher::from_env();
+    let s_scalar = b.bench("scalar gate inference (per-volley ColumnSim)", || {
+        let mut fired = 0usize;
+        for v in &volleys {
+            fired += usize::from(black_box(gate.infer_winner(v)).is_some());
+        }
+        fired
+    });
+    println!("{}", s_scalar.report());
+    let s_word = b.bench("word-parallel gate inference (64-lane sweep)", || {
+        black_box(gate.infer_batch(&volleys)).len()
+    });
+    println!("{}", s_word.report());
+
+    let per_volley_scalar = s_scalar.median_ns() / volleys.len() as f64;
+    let per_volley_word = s_word.median_ns() / volleys.len() as f64;
+    let speedup = s_scalar.median_ns() / s_word.median_ns();
+    println!(
+        "  => scalar {per_volley_scalar:.0} ns/volley | word-parallel {per_volley_word:.0} \
+         ns/volley | speedup {speedup:.1}x"
+    );
+    assert!(speedup > 0.0);
+
+    let json = Json::obj()
+        .set("design", cfg.name)
+        .set("p", cfg.p)
+        .set("q", cfg.q)
+        .set("volleys", volleys.len())
+        .set(
+            "baseline_scalar",
+            Json::obj()
+                .set("median_ns_per_sweep", s_scalar.median_ns())
+                .set("ns_per_volley", per_volley_scalar),
+        )
+        .set(
+            "after_word_parallel",
+            Json::obj()
+                .set("median_ns_per_sweep", s_word.median_ns())
+                .set("ns_per_volley", per_volley_word),
+        )
+        .set("speedup", speedup);
+    std::fs::write("BENCH_gate.json", json.to_pretty()).expect("write BENCH_gate.json");
+    println!("wrote BENCH_gate.json");
+}

@@ -17,6 +17,12 @@ pub enum EngineKind {
     /// scratch, precomputed STDP thresholds, deterministic parallel
     /// training.
     Batched,
+    /// Gate-level macro netlist engine (`gates::gate_engine`): the nine
+    /// TNN7 macros assembled into the full column netlist, stepped cycle by
+    /// cycle — every workload run doubles as an RTL-vs-behavioral
+    /// conformance check (winners and weights bit-exact with the golden
+    /// model on a shared seed).
+    Gate,
 }
 
 impl EngineKind {
@@ -25,7 +31,8 @@ impl EngineKind {
             "xla" => Ok(EngineKind::Xla),
             "golden" => Ok(EngineKind::Golden),
             "batched" => Ok(EngineKind::Batched),
-            other => anyhow::bail!("unknown engine {other:?} (xla|golden|batched)"),
+            "gate" => Ok(EngineKind::Gate),
+            other => anyhow::bail!("unknown engine {other:?} (xla|golden|batched|gate)"),
         }
     }
 
@@ -34,6 +41,7 @@ impl EngineKind {
             EngineKind::Xla => "xla",
             EngineKind::Golden => "golden",
             EngineKind::Batched => "batched",
+            EngineKind::Gate => "gate",
         }
     }
 }
@@ -159,6 +167,17 @@ mod tests {
         assert_eq!(c.seed, 42);
         assert_eq!(c.batch, 16);
         assert_eq!(c.channel_depth, 64, "default preserved");
+    }
+
+    #[test]
+    fn gate_engine_parses() {
+        assert_eq!(EngineKind::parse("gate").unwrap(), EngineKind::Gate);
+        assert_eq!(EngineKind::Gate.name(), "gate");
+        let doc = KvDoc::parse("engine = gate\n").unwrap();
+        assert_eq!(RunConfig::from_kv(&doc).unwrap().engine, EngineKind::Gate);
+        let mut c = RunConfig::default();
+        c.apply_overrides(&["engine=gate".into()]).unwrap();
+        assert_eq!(c.engine, EngineKind::Gate);
     }
 
     #[test]

@@ -10,6 +10,7 @@
 //! latency metrics.
 
 use crate::config::EngineKind;
+use crate::gates::gate_engine::GateColumn;
 use crate::metrics::StreamMetrics;
 use crate::runtime::ColumnExecutable;
 use crate::tnn::batch::BatchedColumn;
@@ -34,6 +35,7 @@ pub struct GammaItem {
 pub enum Engine<'a> {
     Golden(Column),
     Batched(BatchedColumn),
+    Gate(GateColumn),
     Xla {
         exe: ColumnExecutable<'a>,
         weights: Vec<f32>,
@@ -45,6 +47,7 @@ impl Engine<'_> {
         match self {
             Engine::Golden(_) => EngineKind::Golden,
             Engine::Batched(_) => EngineKind::Batched,
+            Engine::Gate(_) => EngineKind::Gate,
             Engine::Xla { .. } => EngineKind::Xla,
         }
     }
@@ -53,7 +56,20 @@ impl Engine<'_> {
         match self {
             Engine::Golden(c) => (c.p(), c.q()),
             Engine::Batched(b) => (b.column().p(), b.column().q()),
+            Engine::Gate(g) => (g.p(), g.q()),
             Engine::Xla { exe, .. } => (exe.meta.p, exe.meta.q),
+        }
+    }
+
+    /// Snapshot of the engine's synaptic weights (row-major p×q), for
+    /// cross-engine conformance diffing. `None` for the XLA engine, whose
+    /// f32 weights live on the device side of the PJRT boundary.
+    pub fn weights(&self) -> Option<Vec<u8>> {
+        match self {
+            Engine::Golden(c) => Some(c.weights().to_vec()),
+            Engine::Batched(b) => Some(b.column().weights().to_vec()),
+            Engine::Gate(g) => Some(g.weights()),
+            Engine::Xla { .. } => None,
         }
     }
 
@@ -62,6 +78,7 @@ impl Engine<'_> {
         match self {
             Engine::Golden(col) => Ok(col.step(xs, rng).winner),
             Engine::Batched(b) => Ok(b.step(xs, rng)),
+            Engine::Gate(g) => Ok(g.step(xs, rng)),
             Engine::Xla { exe, weights } => {
                 let n = exe.meta.p * exe.meta.q;
                 let u_case: Vec<f32> = (0..n).map(|_| rng.gen_f32()).collect();
@@ -79,6 +96,7 @@ impl Engine<'_> {
         match self {
             Engine::Golden(col) => Ok(col.infer(xs).winner),
             Engine::Batched(b) => Ok(b.infer_winner(xs)),
+            Engine::Gate(g) => Ok(g.infer_winner(xs)),
             Engine::Xla { exe, weights } => {
                 // The step artifact doubles for inference by discarding the
                 // weight update (u >= 1 blocks every STDP case).
@@ -88,6 +106,18 @@ impl Engine<'_> {
                 Ok(y.iter().position(|t| t.is_spike()))
             }
         }
+    }
+
+    /// Inference-only winners over a whole item set. The gate engine routes
+    /// through its 64-lane word-parallel netlist sweep
+    /// ([`GateColumn::infer_batch`] — bit-exact with the per-item path);
+    /// every other engine loops [`Engine::infer_winner`].
+    pub fn infer_winners(&mut self, items: &[GammaItem]) -> crate::Result<Vec<Option<usize>>> {
+        if let Engine::Gate(g) = self {
+            let volleys: Vec<&[SpikeTime]> = items.iter().map(|i| i.volley.as_slice()).collect();
+            return Ok(g.infer_batch(&volleys));
+        }
+        items.iter().map(|i| self.infer_winner(&i.volley)).collect()
     }
 
     /// Build a Golden engine for a geometry.
@@ -190,15 +220,43 @@ pub fn encode_ucr(data: &crate::ucr::UcrData, t_max: u32) -> Vec<GammaItem> {
 }
 
 /// Spike density of a set of gamma items (spikes per line per instance).
+/// Sums per-item volley lengths, so mixed-length item sets (multi-geometry
+/// streams) get the true density — not one extrapolated from `items[0]`.
 pub fn volley_density(items: &[GammaItem]) -> f64 {
-    if items.is_empty() {
+    let mut spikes = 0usize;
+    let mut lines = 0usize;
+    for i in items {
+        spikes += i.volley.iter().filter(|t| t.is_spike()).count();
+        lines += i.volley.len();
+    }
+    if lines == 0 {
         return 0.0;
     }
-    let spikes: usize = items
-        .iter()
-        .map(|i| i.volley.iter().filter(|t| t.is_spike()).count())
-        .sum();
-    spikes as f64 / (items.len() * items[0].volley.len()) as f64
+    spikes as f64 / lines as f64
+}
+
+/// Score inference winners against the items' ground-truth labels:
+/// `(fired, rand_index, purity)` over the items that fired and carry a
+/// label (`q` clusters on both sides). One scoring convention shared by
+/// the CLI (`run ucr`) and the conformance harness.
+pub fn score_winners(
+    winners: &[Option<usize>],
+    items: &[GammaItem],
+    q: usize,
+) -> (usize, f64, f64) {
+    let (mut pred, mut truth) = (Vec::new(), Vec::new());
+    for (w, item) in winners.iter().zip(items) {
+        if let (Some(w), Some(l)) = (*w, item.label) {
+            pred.push(w);
+            truth.push(l);
+        }
+    }
+    if pred.is_empty() {
+        return (0, 0.0, 0.0);
+    }
+    let ri = crate::ucr::rand_index(&pred, &truth);
+    let pu = crate::ucr::purity(&pred, &truth, q, q);
+    (pred.len(), ri, pu)
 }
 
 /// Build a golden UCR engine with density-scaled θ.
@@ -224,10 +282,15 @@ pub fn ucr_engine_with(
     rng: &mut Rng64,
 ) -> crate::Result<Engine<'static>> {
     let theta = crate::tnn::encode::sparse_theta(p, params.w_max(), volley_density(items));
+    // One shared construction path: every behavioral engine starts from the
+    // same randomly-initialised column (identical weight draws for a given
+    // rng state), so cross-engine runs on a shared seed are comparable
+    // volley for volley.
     let col = Column::with_random_weights(p, q, theta, params, rng);
     match kind {
         EngineKind::Golden => Ok(Engine::Golden(col)),
         EngineKind::Batched => Ok(Engine::Batched(col.batched())),
+        EngineKind::Gate => Ok(Engine::Gate(GateColumn::from_column(&col)?)),
         EngineKind::Xla => anyhow::bail!("XLA engines require a runtime; use Engine::xla"),
     }
 }
@@ -359,6 +422,84 @@ mod tests {
             assert_eq!(
                 golden.infer_winner(&item.volley).unwrap(),
                 batched.infer_winner(&item.volley).unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn volley_density_sums_per_item_lengths() {
+        let items = vec![
+            GammaItem {
+                volley: vec![SpikeTime::at(0), SpikeTime::NONE],
+                label: None,
+            },
+            GammaItem {
+                volley: vec![SpikeTime::at(1); 6],
+                label: None,
+            },
+        ];
+        // 7 spikes over 2 + 6 = 8 lines. The old `items[0]`-based
+        // denominator (2 items × 2 lines = 4) reported 1.75 here — an
+        // impossible density that inflated θ for mixed-length item sets.
+        let d = volley_density(&items);
+        assert!((d - 7.0 / 8.0).abs() < 1e-12, "density {d}");
+        assert_eq!(volley_density(&[]), 0.0);
+    }
+
+    #[test]
+    fn gate_engine_streams_bit_exactly_with_golden() {
+        // The tentpole contract: on a shared seed, the gate-level macro
+        // netlist engine produces the same winners as the golden model on
+        // every training gamma, and ends every epoch with identical
+        // weights. Reduced geometry keeps the netlist small for CI.
+        let cfg = UcrConfig {
+            name: "TwoLeadECG",
+            p: 12,
+            q: 2,
+        };
+        let data = ucr::generate(cfg, 8, 5);
+        let items = encode_ucr(&data, 8);
+        let mut rng_a = Rng64::seed_from_u64(21);
+        let mut rng_b = Rng64::seed_from_u64(21);
+        let params = TnnParams::default();
+        let mut golden = ucr_engine_with(
+            crate::config::EngineKind::Golden,
+            12,
+            2,
+            &items,
+            params.clone(),
+            &mut rng_a,
+        )
+        .unwrap();
+        let mut gate = ucr_engine_with(
+            crate::config::EngineKind::Gate,
+            12,
+            2,
+            &items,
+            params,
+            &mut rng_b,
+        )
+        .unwrap();
+        assert_eq!(gate.kind(), crate::config::EngineKind::Gate);
+        assert_eq!(gate.geometry(), (12, 2));
+        assert_eq!(gate.weights(), golden.weights(), "identical initial weights");
+
+        for epoch in 0..2 {
+            let og = run_stream(&mut golden, items.clone(), 8, 300 + epoch).unwrap();
+            let oh = run_stream(&mut gate, items.clone(), 8, 300 + epoch).unwrap();
+            assert_eq!(og.winners, oh.winners, "epoch {epoch}: training winners");
+            assert_eq!(gate.weights(), golden.weights(), "epoch {epoch}: weights");
+        }
+
+        // Draw-free inference agrees too — per item and through the gate
+        // engine's 64-lane word-parallel batch path.
+        let wg = golden.infer_winners(&items).unwrap();
+        let wh = gate.infer_winners(&items).unwrap();
+        assert_eq!(wg, wh, "batched inference winners");
+        for item in &items {
+            assert_eq!(
+                golden.infer_winner(&item.volley).unwrap(),
+                gate.infer_winner(&item.volley).unwrap()
             );
         }
     }

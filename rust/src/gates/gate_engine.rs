@@ -1,0 +1,346 @@
+//! The gate-level macro netlist as a first-class column engine.
+//!
+//! [`ColumnSim`](super::column_design::ColumnSim) began life as a test-only
+//! cross-check harness; this module promotes the same netlist — the nine
+//! TNN7 macros assembled into the full p×q column of Fig. 1 — to a
+//! selectable engine (`config::EngineKind::Gate`) behind the
+//! `coordinator::Engine` interface, so **every workload doubles as an
+//! RTL-vs-behavioral equivalence check**:
+//!
+//! * **Training** ([`GateColumn::step`]) draws its uniforms with exactly the
+//!   golden model's protocol (one `fill_f64` for the case draws, one for the
+//!   stabilization draws, row-major p×q) and feeds them to the netlist as
+//!   Bernoulli-thresholded BRV inputs. On a shared seed the gate engine's
+//!   WTA winners *and* its synaptic weights are bit-exact with
+//!   `Column::step`, gamma cycle for gamma cycle.
+//! * **Inference** ([`GateColumn::infer_winner`]) is draw-free: all-ones
+//!   uniforms block every STDP case, exactly like the golden/batched
+//!   engines' inference paths.
+//! * **Batched inference** ([`GateColumn::infer_batch`]) packs up to 64
+//!   gamma items into the lanes of a [`WordSimulator`] over the same
+//!   netlist: gates evaluate as bitwise word ops, so a full-dataset
+//!   gate-level inference sweep costs roughly one scalar pass. Lane `l` is
+//!   bit-for-bit the scalar engine on item `l`, so the winners are
+//!   bit-exact with the scalar path (and hence with the golden model).
+//!
+//! Gate netlists are immutable once built and levelized, so designs are
+//! interned in a process-lifetime cache ([`cached_design`]): each (p, q, θ)
+//! geometry is built once and shared by every engine, test and sweep that
+//! asks for it — the in-memory analogue of an AOT-compiled hardware
+//! artifact.
+
+use super::column_design::{build_column, BrvSource, ColumnDesign, ColumnSim};
+use super::macros9::MacroState;
+use super::wordsim::{WordSimulator, LANES};
+use crate::tnn::column::Column;
+use crate::tnn::params::TnnParams;
+use crate::tnn::spike::{earliest_spike, SpikeTime};
+use crate::util::Rng64;
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+
+/// Design-cache key: (p, q, θ).
+type DesignKey = (usize, usize, u32);
+
+fn design_cache() -> &'static Mutex<HashMap<DesignKey, &'static ColumnDesign>> {
+    static CACHE: OnceLock<Mutex<HashMap<DesignKey, &'static ColumnDesign>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Build (or fetch) the interned `BrvSource::Inputs` column netlist for a
+/// geometry. The design is leaked into the process lifetime on first use —
+/// one allocation per distinct geometry, shared by every simulator bound to
+/// it (netlists are immutable after `NetBuilder::finish`).
+pub fn cached_design(p: usize, q: usize, theta: u32) -> &'static ColumnDesign {
+    // A panic inside a build (e.g. a bad geometry assert) aborts before the
+    // entry is inserted, so the map stays consistent — clear the poison
+    // rather than cascading "poisoned" panics into unrelated callers.
+    let mut map = design_cache()
+        .lock()
+        .unwrap_or_else(|poisoned| poisoned.into_inner());
+    *map.entry((p, q, theta))
+        .or_insert_with(|| Box::leak(Box::new(build_column(p, q, theta, BrvSource::Inputs))))
+}
+
+/// The gate-level column engine: the macro netlist plus a persistent scalar
+/// simulator (synaptic weights live in the `syn_weight_update` macro
+/// states) and a lazily-built word simulator for batched inference sweeps.
+pub struct GateColumn {
+    design: &'static ColumnDesign,
+    sim: ColumnSim<'static>,
+    /// 64-lane engine over the same netlist, built on first batched sweep.
+    wsim: Option<WordSimulator<'static>>,
+    params: TnnParams,
+    /// All-ones uniforms: `u >= 1` fails every `u < µ` test, so no BRV
+    /// fires and a gamma cycle is pure inference.
+    ones: Vec<f64>,
+    // training draw buffers (reused; the golden model allocates per step,
+    // but consumes the identical stream)
+    u_case: Vec<f64>,
+    u_stab: Vec<f64>,
+}
+
+impl GateColumn {
+    /// Build from an existing golden column, copying geometry, parameters
+    /// and the current weight matrix — the constructor `ucr_engine_with`
+    /// uses so all engines start from identical state on a shared seed.
+    pub fn from_column(col: &Column) -> crate::Result<GateColumn> {
+        Self::with_weights(
+            col.p(),
+            col.q(),
+            col.theta(),
+            col.params().clone(),
+            col.weights(),
+        )
+    }
+
+    /// Build for a geometry with explicit initial weights (row-major p×q).
+    pub fn with_weights(
+        p: usize,
+        q: usize,
+        theta: u32,
+        params: TnnParams,
+        ws: &[u8],
+    ) -> crate::Result<GateColumn> {
+        let design = cached_design(p, q, theta);
+        let mut sim = ColumnSim::new(design, params.clone()).map_err(anyhow::Error::msg)?;
+        sim.set_weights(ws);
+        let n = p * q;
+        Ok(GateColumn {
+            design,
+            sim,
+            wsim: None,
+            params,
+            ones: vec![1.0; n],
+            u_case: vec![0.0; n],
+            u_stab: vec![0.0; n],
+        })
+    }
+
+    pub fn p(&self) -> usize {
+        self.design.p
+    }
+    pub fn q(&self) -> usize {
+        self.design.q
+    }
+    pub fn theta(&self) -> u32 {
+        self.design.theta
+    }
+    pub fn params(&self) -> &TnnParams {
+        &self.params
+    }
+
+    /// Read the synaptic weights back out of the macro states.
+    pub fn weights(&self) -> Vec<u8> {
+        self.sim.weights()
+    }
+
+    /// Preload synaptic weights (row-major p×q).
+    pub fn set_weights(&mut self, ws: &[u8]) {
+        self.sim.set_weights(ws);
+    }
+
+    /// One learning gamma cycle through the netlist, drawing uniforms with
+    /// the golden model's protocol (`u_case` fill, then `u_stab` fill) so
+    /// gate and golden consume a shared stream identically. Returns the
+    /// post-WTA winner.
+    pub fn step(&mut self, xs: &[SpikeTime], rng: &mut Rng64) -> Option<usize> {
+        rng.fill_f64(&mut self.u_case);
+        rng.fill_f64(&mut self.u_stab);
+        let out = self.sim.run_gamma(xs, &self.u_case, &self.u_stab);
+        out.iter().position(|t| t.is_spike())
+    }
+
+    /// Draw-free inference: the post-WTA output volley (weights untouched).
+    pub fn infer(&mut self, xs: &[SpikeTime]) -> Vec<SpikeTime> {
+        self.sim.run_gamma(xs, &self.ones, &self.ones)
+    }
+
+    /// Draw-free inference winner.
+    pub fn infer_winner(&mut self, xs: &[SpikeTime]) -> Option<usize> {
+        self.infer(xs).iter().position(|t| t.is_spike())
+    }
+
+    /// Word-parallel gate-level inference sweep: packs up to 64 volleys per
+    /// pass into the lanes of a [`WordSimulator`] over the same netlist.
+    /// Weights are broadcast into every lane and all BRV inputs are held
+    /// low (the word-level analogue of the scalar path's all-ones
+    /// uniforms), so each lane runs the exact scalar inference gamma cycle
+    /// and winners are bit-exact with [`GateColumn::infer_winner`].
+    pub fn infer_batch(&mut self, volleys: &[&[SpikeTime]]) -> Vec<Option<usize>> {
+        let d = self.design;
+        // Hard assert, matching the scalar path (`ColumnSim::run_gamma`): a
+        // malformed volley must fail loudly on both paths, in release too.
+        for (k, v) in volleys.iter().enumerate() {
+            assert_eq!(v.len(), d.p, "volley {k} length != p");
+        }
+        let g = self.params.gamma_cycles;
+        let q = d.q;
+        let ws = self.sim.weights();
+        let wsim = self
+            .wsim
+            .get_or_insert_with(|| WordSimulator::new(&d.netlist).expect("cached design levelizes"));
+
+        let mut winners = Vec::with_capacity(volleys.len());
+        for chunk in volleys.chunks(LANES) {
+            wsim.reset_state();
+            // Broadcast the current weights into every lane and silence the
+            // BRV streams (no case ever fires → pure inference).
+            for (k, &inst) in d.syn_inst.iter().enumerate() {
+                let mut st = MacroState::default();
+                st.set_weight(ws[k]);
+                wsim.set_macro_state_broadcast(inst as usize, &st);
+            }
+            for case in &d.brv_case {
+                for &net in case {
+                    wsim.set_input_net(net, 0);
+                }
+            }
+            for stab in &d.brv_stab {
+                for &net in stab {
+                    wsim.set_input_net(net, 0);
+                }
+            }
+
+            // Run one gamma cycle in all lanes, recording each lane's first
+            // cycle with the output net high (level semantics, identical to
+            // `ColumnSim::run_gamma`).
+            let mut times = vec![SpikeTime::NONE; chunk.len() * q];
+            let mut seen = vec![0u64; q];
+            for t in 0..g {
+                for (i, &net) in d.in_pulse.iter().enumerate() {
+                    let mut word = 0u64;
+                    for (l, volley) in chunk.iter().enumerate() {
+                        let x = volley[i];
+                        if x.is_spike() && x.0 == t {
+                            word |= 1u64 << l;
+                        }
+                    }
+                    wsim.set_input_net(net, word);
+                }
+                wsim.set_input_net(d.grst, if t == g - 1 { !0u64 } else { 0 });
+                wsim.settle();
+                for (j, &net) in d.out_spike.iter().enumerate() {
+                    let fresh = wsim.get(net) & !seen[j];
+                    if fresh != 0 {
+                        seen[j] |= fresh;
+                        let mut bits = fresh;
+                        while bits != 0 {
+                            let l = bits.trailing_zeros() as usize;
+                            bits &= bits - 1;
+                            if l < chunk.len() {
+                                times[l * q + j] = SpikeTime::at(t);
+                            }
+                        }
+                    }
+                }
+                wsim.clock();
+            }
+            for lane_times in times.chunks_exact(q) {
+                let (idx, t) = earliest_spike(lane_times);
+                winners.push(t.is_spike().then_some(idx));
+            }
+        }
+        winners
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn random_volley(p: usize, rng: &mut Rng64) -> Vec<SpikeTime> {
+        crate::tnn::spike::random_volley(p, 0.3, 8, rng)
+    }
+
+    #[test]
+    fn cached_design_is_interned_per_geometry() {
+        let a = cached_design(4, 2, 5);
+        let b = cached_design(4, 2, 5);
+        let c = cached_design(4, 2, 6);
+        assert!(std::ptr::eq(a, b), "same geometry shares one design");
+        assert!(!std::ptr::eq(a, c), "distinct θ gets its own design");
+        assert_eq!(a.p, 4);
+        assert_eq!(a.q, 2);
+        assert!(!a.brv_case.is_empty(), "engine designs carry BRV inputs");
+    }
+
+    #[test]
+    fn gate_step_matches_golden_on_a_shared_stream() {
+        // The engine contract: identical winners AND identical weights,
+        // gamma for gamma, when both engines consume the same seed.
+        let mut setup = Rng64::seed_from_u64(404);
+        let (p, q, theta) = (6, 3, 7);
+        let params = TnnParams::default();
+        let mut golden = Column::with_random_weights(p, q, theta, params, &mut setup);
+        let mut gate = GateColumn::from_column(&golden).unwrap();
+        assert_eq!(gate.weights(), golden.weights());
+        assert_eq!((gate.p(), gate.q(), gate.theta()), (p, q, theta));
+
+        let mut rng_gold = Rng64::seed_from_u64(77);
+        let mut rng_gate = rng_gold.clone();
+        let mut data = Rng64::seed_from_u64(5);
+        for gamma in 0..30 {
+            let xs = random_volley(p, &mut data);
+            let want = golden.step(&xs, &mut rng_gold).winner;
+            let got = gate.step(&xs, &mut rng_gate);
+            assert_eq!(got, want, "gamma {gamma}: winner mismatch");
+            assert_eq!(gate.weights(), golden.weights(), "gamma {gamma}: weights");
+        }
+        // Stream alignment: both engines consumed the same number of draws.
+        assert_eq!(rng_gold.next_u64(), rng_gate.next_u64());
+    }
+
+    #[test]
+    fn infer_is_draw_free_and_leaves_weights_untouched() {
+        let mut rng = Rng64::seed_from_u64(8);
+        let golden = Column::with_random_weights(5, 2, 6, TnnParams::default(), &mut rng);
+        let mut gate = GateColumn::from_column(&golden).unwrap();
+        let before = gate.weights();
+        for _ in 0..10 {
+            let xs = random_volley(5, &mut rng);
+            assert_eq!(gate.infer_winner(&xs), golden.infer(&xs).winner);
+        }
+        assert_eq!(gate.weights(), before);
+    }
+
+    #[test]
+    fn word_batch_inference_matches_scalar_and_golden_across_chunks() {
+        // 70 volleys forces a second 64-lane chunk.
+        let mut rng = Rng64::seed_from_u64(1234);
+        let golden = Column::with_random_weights(6, 2, 8, TnnParams::default(), &mut rng);
+        let mut gate = GateColumn::from_column(&golden).unwrap();
+        let volleys: Vec<Vec<SpikeTime>> =
+            (0..70).map(|_| random_volley(6, &mut rng)).collect();
+        let refs: Vec<&[SpikeTime]> = volleys.iter().map(|v| v.as_slice()).collect();
+        let batch = gate.infer_batch(&refs);
+        assert_eq!(batch.len(), 70);
+        let mut fired = 0;
+        for (k, v) in volleys.iter().enumerate() {
+            assert_eq!(batch[k], gate.infer_winner(v), "volley {k} vs scalar gate");
+            assert_eq!(batch[k], golden.infer(v).winner, "volley {k} vs golden");
+            fired += usize::from(batch[k].is_some());
+        }
+        assert!(fired > 0, "stimulus should make some neuron fire");
+    }
+
+    #[test]
+    fn word_batch_after_training_uses_current_weights() {
+        // Train the gate engine a little, then check the batched sweep
+        // reflects the updated weights (and still matches the scalar path).
+        let mut rng = Rng64::seed_from_u64(2024);
+        let golden = Column::with_random_weights(4, 2, 4, TnnParams::default(), &mut rng);
+        let mut gate = GateColumn::from_column(&golden).unwrap();
+        let mut stream = Rng64::seed_from_u64(99);
+        let volleys: Vec<Vec<SpikeTime>> =
+            (0..12).map(|_| random_volley(4, &mut rng)).collect();
+        for v in &volleys {
+            gate.step(v, &mut stream);
+        }
+        let refs: Vec<&[SpikeTime]> = volleys.iter().map(|v| v.as_slice()).collect();
+        let batch = gate.infer_batch(&refs);
+        for (k, v) in volleys.iter().enumerate() {
+            assert_eq!(batch[k], gate.infer_winner(v), "volley {k}");
+        }
+    }
+}

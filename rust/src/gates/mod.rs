@@ -7,20 +7,36 @@
 //! extraction — the scalar reference engine ([`sim`]) and the 64-lane
 //! bit-parallel engine ([`wordsim`]), selectable via [`SimBackend`] — the
 //! nine TNN7 macros, each with a cycle-accurate behavioral model (scalar
-//! *and* word-level) plus a generic-gate expansion ([`macros9`]), and the
+//! *and* word-level) plus a generic-gate expansion ([`macros9`]), the
 //! structural generator that assembles full p×q TNN columns out of them
-//! ([`column_design`]).
+//! ([`column_design`]), and the gate-level *column engine* that runs real
+//! workloads on the macro netlist behind the `coordinator::Engine`
+//! interface ([`gate_engine`]).
 
 pub mod column_design;
+pub mod gate_engine;
 pub mod macros9;
 pub mod netlist;
 pub mod sim;
 pub mod wordsim;
 
+pub use gate_engine::GateColumn;
 pub use macros9::MacroKind;
 pub use netlist::{Gate, NetBuilder, NetId, Netlist};
 pub use sim::Simulator;
 pub use wordsim::{WordSimulator, LANES};
+
+/// Seeded (p, q, seed) geometry matrix shared by the word-simulator lane-0
+/// equivalence tests and the three-engine conformance harness
+/// (`harness::conformance`): one flagship column (the 82×2 TwoLeadECG
+/// design of Fig. 13) plus small geometries that cover tall, wide and
+/// single-neuron corner shapes.
+pub const CONFORMANCE_GEOMETRIES: [(usize, usize, u64); 4] = [
+    (82, 2, 0xBEEF),
+    (16, 3, 0xA11CE),
+    (7, 4, 0x5EED),
+    (33, 1, 0xD00D),
+];
 
 use crate::util::Rng64;
 

@@ -420,20 +420,19 @@ mod tests {
         }
     }
 
-    /// The acceptance-criteria equivalence test: lane 0 of the word engine
-    /// matches the scalar engine net-for-net on the 82×2 TwoLeadECG UCR
-    /// column over >1000 cycles of random stimulus (all other lanes carry
-    /// independent random stimulus at the same time).
-    #[test]
-    fn lane0_matches_scalar_engine_on_82x2_column_over_1k_cycles() {
-        let d = build_column(82, 2, 143, BrvSource::Lfsr);
+    /// Shared body of the lane-0 equivalence matrix: lane 0 of the word
+    /// engine must match the scalar engine net-for-net under identical
+    /// stimulus (all other lanes carry independent random stimulus at the
+    /// same time).
+    fn assert_lane0_matches_scalar(p: usize, q: usize, seed: u64, cycles: u32) {
+        let d = build_column(p, q, (p as u32 * 7) / 4, BrvSource::Lfsr);
         let nl = &d.netlist;
         let mut ssim = Simulator::new(nl).unwrap();
         let mut wsim = WordSimulator::new(nl).unwrap();
         let inputs: Vec<_> = nl.inputs.iter().map(|(_, id)| *id).collect();
-        let mut rng = Rng64::seed_from_u64(0xBEEF);
+        let mut rng = Rng64::seed_from_u64(seed);
         let n = nl.len() as NetId;
-        for cycle in 0..1024u32 {
+        for cycle in 0..cycles {
             for &id in &inputs {
                 // sparse pulses (p = 1/8), independent per lane
                 let word = rng.next_u64() & rng.next_u64() & rng.next_u64();
@@ -446,17 +445,31 @@ mod tests {
                 assert_eq!(
                     wsim.get_lane(id, 0),
                     ssim.get(id),
-                    "net {id} cycle {cycle} (settled)"
+                    "{p}x{q} seed {seed:#x}: net {id} cycle {cycle} (settled)"
                 );
             }
             wsim.clock();
             ssim.clock();
         }
-        assert_eq!(ssim.cycles(), 1024);
-        assert_eq!(wsim.lane_cycles(), 1024 * LANES as u64);
+        assert_eq!(ssim.cycles(), cycles as u64);
+        assert_eq!(wsim.lane_cycles(), cycles as u64 * LANES as u64);
         // Both engines saw activity (the LFSR alone guarantees toggles).
         assert!(ssim.activity() > 0.0);
         assert!(wsim.activity() > 0.0);
+    }
+
+    /// The acceptance-criteria equivalence matrix: every (p, q, seed)
+    /// geometry shared with the conformance harness
+    /// (`gates::CONFORMANCE_GEOMETRIES`) is checked lane-for-net against
+    /// the scalar engine. The 82×2 TwoLeadECG flagship keeps its original
+    /// >1000-cycle budget; the smaller corner shapes (wide, tall,
+    /// single-neuron) run 256 cycles each.
+    #[test]
+    fn lane0_matches_scalar_engine_across_conformance_geometries() {
+        for &(p, q, seed) in crate::gates::CONFORMANCE_GEOMETRIES.iter() {
+            let cycles = if p * q >= 128 { 1024 } else { 256 };
+            assert_lane0_matches_scalar(p, q, seed, cycles);
+        }
     }
 
     /// Aggregate toggle statistics from the two engines must agree

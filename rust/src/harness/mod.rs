@@ -4,6 +4,7 @@
 //! print a paper-style table.
 
 use crate::cells;
+use crate::config::EngineKind;
 use crate::gates::column_design::{build_column, BrvSource};
 use crate::gates::macros9::{expand, MacroKind, ALL_MACROS};
 use crate::gates::netlist::NetBuilder;
@@ -604,6 +605,345 @@ pub fn train_engines_json(rows: &[TrainEnginesRow]) -> Json {
 }
 
 // ---------------------------------------------------------------------
+// Conformance — three-engine differential testing: the same seeded UCR
+// workload runs on the golden, batched and gate-level engines, and the
+// winners / weights / clustering-quality tables are diffed per geometry.
+// The gate engine (the TNN7 macro netlist) must match the golden model
+// bit for bit; the batched engine must match on every draw-free inference
+// and is held to a loose clustering-quality floor on training (its leaner
+// draw discipline samples the same stochastic process — see `tnn::batch` —
+// so trajectories differ, but a catastrophic training regression may not
+// hide behind that).
+// ---------------------------------------------------------------------
+
+/// One engine's diff against the golden reference on a conformance table.
+#[derive(Clone, Debug)]
+pub struct ConformanceEngineRow {
+    pub engine: EngineKind,
+    /// Winner mismatches vs golden on the draw-free pre-training inference
+    /// pass (identical initial weights — must be 0 for every engine).
+    pub infer_mismatches: usize,
+    /// Winner mismatches vs golden across all training gammas.
+    pub train_mismatches: usize,
+    /// Post-training weight cells differing from golden.
+    pub weight_mismatches: usize,
+    /// Post-training inference: instances that fired, and clustering scores.
+    pub fired: usize,
+    pub rand_index: f64,
+    pub purity: f64,
+    /// Whether this engine is required to match golden bit for bit
+    /// (gate: yes; batched: training is statistical by design).
+    pub bit_exact: bool,
+    /// Golden reference clustering quality on the same workload (the bound
+    /// the statistical rows are held to).
+    pub ref_purity: f64,
+    pub ref_fired: usize,
+}
+
+/// How far below the golden engine's purity a statistical (non-bit-exact)
+/// engine may land and still pass — wide enough for two valid samples of
+/// the same stochastic STDP process on small conformance tables, tight
+/// enough to catch a catastrophic training regression (e.g. all weights
+/// railed to 0 leaves purity at chance, 1/q).
+pub const CONFORMANCE_PURITY_MARGIN: f64 = 0.4;
+
+impl ConformanceEngineRow {
+    /// Does this row meet its conformance requirement? Bit-exact rows must
+    /// match golden on every training winner and weight; statistical rows
+    /// (batched) must still fire when golden fires and keep clustering
+    /// quality within [`CONFORMANCE_PURITY_MARGIN`] of golden's.
+    pub fn ok(&self) -> bool {
+        if self.infer_mismatches != 0 {
+            return false;
+        }
+        if self.bit_exact {
+            self.train_mismatches == 0 && self.weight_mismatches == 0
+        } else {
+            (self.ref_fired == 0 || self.fired > 0)
+                && self.purity + CONFORMANCE_PURITY_MARGIN >= self.ref_purity
+        }
+    }
+
+    pub fn verdict(&self) -> &'static str {
+        match (self.ok(), self.bit_exact) {
+            (true, true) => "OK (bit-exact)",
+            (true, false) => "OK (statistical)",
+            (false, _) => "MISMATCH",
+        }
+    }
+}
+
+/// One conformance table: one geometry, all three engines.
+#[derive(Clone, Debug)]
+pub struct ConformanceReport {
+    pub dataset: String,
+    pub p: usize,
+    pub q: usize,
+    pub items: usize,
+    pub epochs: usize,
+    pub seed: u64,
+    /// Rows in engine order golden (reference), batched, gate.
+    pub rows: Vec<ConformanceEngineRow>,
+    /// Gate engine only: winner mismatches between the 64-lane
+    /// word-parallel inference sweep and the scalar gate path (must be 0).
+    pub word_batch_mismatches: usize,
+}
+
+impl ConformanceReport {
+    pub fn all_agree(&self) -> bool {
+        self.word_batch_mismatches == 0 && self.rows.iter().all(|r| r.ok())
+    }
+}
+
+/// Everything observed from one engine on one conformance workload.
+struct ConformanceTrace {
+    infer0: Vec<Option<usize>>,
+    train: Vec<Option<usize>>,
+    weights: Vec<u8>,
+    fired: usize,
+    rand_index: f64,
+    purity: f64,
+    word_mismatches: usize,
+}
+
+fn conformance_trace(
+    kind: EngineKind,
+    cfg: UcrConfig,
+    items: &[crate::coordinator::GammaItem],
+    epochs: u64,
+    seed: u64,
+) -> crate::Result<ConformanceTrace> {
+    use crate::coordinator::{run_stream, ucr_engine_with};
+    use crate::util::Rng64;
+
+    let mut rng = Rng64::seed_from_u64(seed);
+    let mut engine = ucr_engine_with(
+        kind,
+        cfg.p,
+        cfg.q,
+        items,
+        crate::tnn::TnnParams::default(),
+        &mut rng,
+    )?;
+
+    // Draw-free pre-training inference (identical weights across engines).
+    let mut infer0 = Vec::with_capacity(items.len());
+    for item in items {
+        infer0.push(engine.infer_winner(&item.volley)?);
+    }
+    // For the gate engine, also sweep the word-parallel batch path and diff
+    // it against the scalar path.
+    let word_mismatches = if kind == EngineKind::Gate {
+        let word = engine.infer_winners(items)?;
+        word.iter().zip(&infer0).filter(|(a, b)| a != b).count()
+    } else {
+        0
+    };
+
+    // Online training, one shared stream seed per epoch.
+    let mut train = Vec::new();
+    for epoch in 0..epochs {
+        let out = run_stream(&mut engine, items.to_vec(), 16, seed.wrapping_add(1000 + epoch))?;
+        train.extend(out.winners);
+    }
+    let weights = engine.weights().expect("behavioral engines expose weights");
+
+    // Post-training inference → clustering quality. `infer_winners` routes
+    // the gate engine through its word-parallel sweep (bit-exact with the
+    // scalar path — proven by the pre-training diff above), so scoring
+    // costs one netlist pass per 64 items instead of one per item.
+    let post = engine.infer_winners(items)?;
+    let (fired, rand_index, purity) = crate::coordinator::score_winners(&post, items, cfg.q);
+    Ok(ConformanceTrace {
+        infer0,
+        train,
+        weights,
+        fired,
+        rand_index,
+        purity,
+        word_mismatches,
+    })
+}
+
+fn diff_winners(a: &[Option<usize>], b: &[Option<usize>]) -> usize {
+    a.iter().zip(b).filter(|(x, y)| x != y).count()
+}
+
+fn conformance_row(
+    kind: EngineKind,
+    t: &ConformanceTrace,
+    golden: &ConformanceTrace,
+    bit_exact: bool,
+) -> ConformanceEngineRow {
+    ConformanceEngineRow {
+        engine: kind,
+        infer_mismatches: diff_winners(&t.infer0, &golden.infer0),
+        train_mismatches: diff_winners(&t.train, &golden.train),
+        weight_mismatches: t
+            .weights
+            .iter()
+            .zip(&golden.weights)
+            .filter(|(a, b)| a != b)
+            .count(),
+        fired: t.fired,
+        rand_index: t.rand_index,
+        purity: t.purity,
+        bit_exact,
+        ref_purity: golden.purity,
+        ref_fired: golden.fired,
+    }
+}
+
+/// Run the three-engine conformance workload for one geometry: generate a
+/// seeded UCR-style dataset, build golden / batched / gate engines from
+/// identical initial weights, and diff winners, weights and clustering
+/// quality against the golden reference.
+pub fn conformance_for(
+    cfg: UcrConfig,
+    per_cluster: usize,
+    epochs: u64,
+    seed: u64,
+) -> crate::Result<ConformanceReport> {
+    let data = crate::ucr::generate(cfg, per_cluster, seed);
+    let items = crate::coordinator::encode_ucr(&data, 8);
+    let golden = conformance_trace(EngineKind::Golden, cfg, &items, epochs, seed)?;
+    let batched = conformance_trace(EngineKind::Batched, cfg, &items, epochs, seed)?;
+    let gate = conformance_trace(EngineKind::Gate, cfg, &items, epochs, seed)?;
+    let rows = vec![
+        conformance_row(EngineKind::Golden, &golden, &golden, true),
+        conformance_row(EngineKind::Batched, &batched, &golden, false),
+        conformance_row(EngineKind::Gate, &gate, &golden, true),
+    ];
+    Ok(ConformanceReport {
+        dataset: cfg.name.to_string(),
+        p: cfg.p,
+        q: cfg.q,
+        items: items.len(),
+        epochs: epochs as usize,
+        seed,
+        rows,
+        word_batch_mismatches: gate.word_mismatches,
+    })
+}
+
+/// Dataset name for a conformance geometry (the 82×2 entry is the real
+/// TwoLeadECG column of Fig. 13; the small shapes are synthetic).
+fn conformance_name(p: usize, q: usize) -> &'static str {
+    match (p, q) {
+        (82, 2) => "TwoLeadECG",
+        (16, 3) => "conformance-16x3",
+        (7, 4) => "conformance-7x4",
+        _ => "conformance",
+    }
+}
+
+/// The full conformance suite over the shared geometry matrix
+/// (`gates::CONFORMANCE_GEOMETRIES`; single-neuron shapes are skipped —
+/// clustering metrics need at least two clusters). `quick` shrinks item
+/// and epoch budgets to CI-smoke size. The gate engine simulates every net
+/// of the p×q netlist for 16 unit cycles per gamma item, so budgets shrink
+/// with synapse count.
+pub fn conformance(quick: bool) -> crate::Result<Vec<ConformanceReport>> {
+    let mut reports = Vec::new();
+    for &(p, q, seed) in crate::gates::CONFORMANCE_GEOMETRIES.iter() {
+        if q < 2 {
+            continue;
+        }
+        let (per_cluster, epochs) = match (quick, p * q > 64) {
+            (true, true) => (3, 1),
+            (true, false) => (5, 2),
+            (false, true) => (10, 2),
+            (false, false) => (20, 3),
+        };
+        let cfg = UcrConfig {
+            name: conformance_name(p, q),
+            p,
+            q,
+        };
+        reports.push(conformance_for(cfg, per_cluster, epochs, seed)?);
+    }
+    Ok(reports)
+}
+
+pub fn print_conformance(reports: &[ConformanceReport]) {
+    println!(
+        "Conformance: golden vs batched vs gate-level (TNN7 macro netlist) on seeded UCR workloads"
+    );
+    for r in reports {
+        println!(
+            "\n{} ({}x{}, {} items, {} epochs, seed {:#x}) — reference: golden",
+            r.dataset, r.p, r.q, r.items, r.epochs, r.seed
+        );
+        println!(
+            "{:<9} | {:>7} {:>7} {:>8} | {:>6} {:>7} {:>7} | verdict",
+            "engine", "infer≠", "train≠", "weight≠", "fired", "RI", "purity"
+        );
+        for row in &r.rows {
+            println!(
+                "{:<9} | {:>7} {:>7} {:>8} | {:>6} {:>7.3} {:>7.3} | {}",
+                row.engine.name(),
+                row.infer_mismatches,
+                row.train_mismatches,
+                row.weight_mismatches,
+                row.fired,
+                row.rand_index,
+                row.purity,
+                if row.engine == EngineKind::Golden {
+                    "reference"
+                } else {
+                    row.verdict()
+                },
+            );
+        }
+        println!(
+            "word-parallel gate sweep vs scalar gate path: {} mismatches",
+            r.word_batch_mismatches
+        );
+    }
+    if reports.iter().all(|r| r.all_agree()) {
+        println!("\nALL ENGINES AGREE ({} conformance tables)", reports.len());
+    } else {
+        println!("\nENGINE DISAGREEMENT DETECTED — see tables above");
+    }
+}
+
+pub fn conformance_json(reports: &[ConformanceReport]) -> Json {
+    Json::Arr(
+        reports
+            .iter()
+            .map(|r| {
+                Json::obj()
+                    .set("dataset", r.dataset.as_str())
+                    .set("p", r.p)
+                    .set("q", r.q)
+                    .set("items", r.items)
+                    .set("epochs", r.epochs)
+                    .set("word_batch_mismatches", r.word_batch_mismatches)
+                    .set("all_agree", r.all_agree())
+                    .set(
+                        "engines",
+                        Json::Arr(
+                            r.rows
+                                .iter()
+                                .map(|row| {
+                                    Json::obj()
+                                        .set("engine", row.engine.name())
+                                        .set("infer_mismatches", row.infer_mismatches)
+                                        .set("train_mismatches", row.train_mismatches)
+                                        .set("weight_mismatches", row.weight_mismatches)
+                                        .set("fired", row.fired)
+                                        .set("rand_index", row.rand_index)
+                                        .set("purity", row.purity)
+                                })
+                                .collect(),
+                        ),
+                    )
+            })
+            .collect(),
+    )
+}
+
+// ---------------------------------------------------------------------
 // JSON dump for all experiments
 // ---------------------------------------------------------------------
 
@@ -711,6 +1051,36 @@ mod tests {
         }
         let j = train_engines_json(&rows).to_string();
         assert!(j.contains("speedup_mt") && j.contains("batched_1t_ms"));
+    }
+
+    #[test]
+    fn conformance_small_geometry_all_engines_agree() {
+        // One small table end to end: gate bit-exact with golden, batched
+        // exact on draw-free inference, word-parallel sweep exact.
+        let cfg = UcrConfig {
+            name: "conformance-7x4",
+            p: 7,
+            q: 4,
+        };
+        let r = conformance_for(cfg, 5, 2, 0x5EED).unwrap();
+        assert_eq!(r.rows.len(), 3);
+        assert_eq!(r.items, 20);
+        let golden = &r.rows[0];
+        assert_eq!(golden.engine, EngineKind::Golden);
+        assert!(golden.ok() && golden.infer_mismatches == 0 && golden.weight_mismatches == 0);
+        let batched = &r.rows[1];
+        assert_eq!(batched.engine, EngineKind::Batched);
+        assert_eq!(batched.infer_mismatches, 0, "draw-free inference is exact");
+        assert!(!batched.bit_exact, "batched training is statistical");
+        let gate = &r.rows[2];
+        assert_eq!(gate.engine, EngineKind::Gate);
+        assert_eq!(gate.infer_mismatches, 0);
+        assert_eq!(gate.train_mismatches, 0, "gate training winners bit-exact");
+        assert_eq!(gate.weight_mismatches, 0, "gate weights bit-exact");
+        assert_eq!(r.word_batch_mismatches, 0);
+        assert!(r.all_agree());
+        let j = conformance_json(&[r]).to_string();
+        assert!(j.contains("word_batch_mismatches") && j.contains("all_agree"));
     }
 
     #[test]

@@ -26,6 +26,11 @@
 //!     counted by popcount), selectable via [`gates::SimBackend`] — used to
 //!     verify the macros against the golden model and to extract switching
 //!     activity for the power model (see README §"Simulation engines").
+//!     The macro netlist is also a first-class *column engine*
+//!     ([`gates::gate_engine`], `--engine gate`): real workloads run on the
+//!     gates and are diffed against the behavioral engines by the
+//!     three-engine conformance suite (`harness::conformance`, README
+//!     §"Verification").
 //!   - [`cells`]: a 7nm-class standard-cell library model (ASAP7-calibrated)
 //!     plus the TNN7 hard-macro library carrying the paper's Table II
 //!     characterization.

@@ -1,8 +1,8 @@
 //! `tnn7` — leader binary / CLI.
 //!
 //! Subcommands:
-//!   report table2|fig11|table3|fig12|fig13|sim|train|headline [--quick]
-//!   run ucr   [--dataset NAME] [--engine xla|golden|batched] [key=value …]
+//!   report table2|fig11|table3|fig12|fig13|sim|train|conformance|headline [--quick]
+//!   run ucr   [--dataset NAME] [--engine xla|golden|batched|gate] [key=value …]
 //!   run mnist [--layers N] [--engine golden|batched] [key=value …]
 //!   synth --p P --q Q [--flow asap7|tnn7]
 //!   serve [key=value …]         (streaming demo over the XLA runtime)
@@ -54,8 +54,8 @@ fn dispatch(args: &[String]) -> tnn7::Result<()> {
         _ => {
             eprintln!(
                 "usage: tnn7 <report|run|synth|serve|selftest> …\n\
-                 report table2|fig11|table3|fig12|fig13|sim|train|headline [--quick]\n\
-                 run ucr [--dataset NAME] [--engine xla|golden|batched] [k=v …]\n\
+                 report table2|fig11|table3|fig12|fig13|sim|train|conformance|headline [--quick]\n\
+                 run ucr [--dataset NAME] [--engine xla|golden|batched|gate] [k=v …]\n\
                  run mnist [--layers N] [--engine golden|batched] [k=v …]\n\
                  synth --p P --q Q [--flow asap7|tnn7]\n\
                  serve [k=v …]\n\
@@ -82,6 +82,14 @@ fn report(args: &[String]) -> tnn7::Result<()> {
             harness::print_sim_engines(&row);
         }
         Some("train") => harness::print_train_engines(&harness::train_engines(quick)),
+        Some("conformance") => {
+            let reports = harness::conformance(quick)?;
+            harness::print_conformance(&reports);
+            anyhow::ensure!(
+                reports.iter().all(|r| r.all_agree()),
+                "engine disagreement detected"
+            );
+        }
         Some("headline") => {
             let rows = harness::fig11(quick);
             let (p, d, a, e) = harness::average_improvements(&rows);
@@ -123,14 +131,22 @@ fn run(args: &[String]) -> tnn7::Result<()> {
             let mut rng = Rng64::seed_from_u64(cfg.seed);
             let rt;
             let mut engine = match cfg.engine {
-                EngineKind::Golden | EngineKind::Batched => tnn7::coordinator::ucr_engine_with(
-                    cfg.engine,
-                    dataset.p,
-                    dataset.q,
-                    &items,
-                    TnnParams::default(),
-                    &mut rng,
-                )?,
+                EngineKind::Golden | EngineKind::Batched | EngineKind::Gate => {
+                    if cfg.engine == EngineKind::Gate && cfg.gamma_instances > 100 {
+                        eprintln!(
+                            "note: the gate engine simulates the full macro netlist per gamma \
+                             instance; consider gamma_instances=40 for a reduced-size run"
+                        );
+                    }
+                    tnn7::coordinator::ucr_engine_with(
+                        cfg.engine,
+                        dataset.p,
+                        dataset.q,
+                        &items,
+                        TnnParams::default(),
+                        &mut rng,
+                    )?
+                }
                 EngineKind::Xla => {
                     rt = XlaRuntime::load(&cfg.artifacts_dir)?;
                     let exe = rt.column(dataset.p, dataset.q, "step")?;
@@ -142,23 +158,17 @@ fn run(args: &[String]) -> tnn7::Result<()> {
                 out = run_stream(&mut engine, items.clone(), cfg.channel_depth, cfg.seed + epoch)?;
             }
             println!("{}", out.metrics.summary(out.wall));
-            // score clustering on a fresh inference pass
-            let mut pred = Vec::new();
-            let mut truth = Vec::new();
-            for item in &items {
-                if let (Some(w), Some(l)) =
-                    (engine.infer_winner(&item.volley)?, item.label)
-                {
-                    pred.push(w);
-                    truth.push(l);
-                }
-            }
+            // Score clustering on a fresh inference pass. `infer_winners`
+            // routes the gate engine through its 64-lane word-parallel
+            // netlist sweep (bit-exact with the per-item path), and
+            // `score_winners` is the same convention the conformance
+            // harness reports.
+            let winners = engine.infer_winners(&items)?;
+            let (fired, ri, pu) =
+                tnn7::coordinator::score_winners(&winners, &items, dataset.q);
             println!(
-                "{name}: {} instances, rand index {:.3}, purity {:.3} (fired on {}/{})",
+                "{name}: {} instances, rand index {ri:.3}, purity {pu:.3} (fired on {fired}/{})",
                 out.processed,
-                ucr::rand_index(&pred, &truth),
-                ucr::purity(&pred, &truth, dataset.q, dataset.q),
-                pred.len(),
                 items.len(),
             );
         }
@@ -202,7 +212,9 @@ fn run_mnist(layers: usize, cfg: &RunConfig) -> tnn7::Result<()> {
                 cfg.threads,
             );
         }
-        EngineKind::Xla => anyhow::bail!("run mnist supports --engine golden|batched"),
+        EngineKind::Xla | EngineKind::Gate => {
+            anyhow::bail!("run mnist supports --engine golden|batched")
+        }
     }
     // calibrate the vote readout, then test (batched inference is bit-exact
     // with the per-sample path, so use it for both engines)

@@ -675,15 +675,9 @@ mod tests {
     use super::*;
 
     fn random_volley(p: usize, rng: &mut Rng64, silent_prob: f64) -> Vec<SpikeTime> {
-        (0..p)
-            .map(|_| {
-                if rng.gen_bool(silent_prob) {
-                    SpikeTime::NONE
-                } else {
-                    SpikeTime::at(rng.gen_range(0, 8) as u32)
-                }
-            })
-            .collect()
+        // Same draw order as the shared generator (one gen_bool, then one
+        // gen_range per spiking line), so the seeded tests are unchanged.
+        crate::tnn::spike::random_volley(p, silent_prob, 8, rng)
     }
 
     #[test]

@@ -130,6 +130,27 @@ pub fn any_spike(times: &[SpikeTime]) -> bool {
     times.iter().any(|t| t.is_spike())
 }
 
+/// Random spike volley for randomized tests and benches: each of the `p`
+/// lines is silent with probability `silent_prob`, otherwise it spikes
+/// uniformly in `0..t_max`. One shared generator so the equivalence and
+/// property suites across the crate draw volleys the same way.
+pub fn random_volley(
+    p: usize,
+    silent_prob: f64,
+    t_max: u32,
+    rng: &mut crate::util::Rng64,
+) -> Vec<SpikeTime> {
+    (0..p)
+        .map(|_| {
+            if rng.gen_bool(silent_prob) {
+                SpikeTime::NONE
+            } else {
+                SpikeTime::at(rng.gen_range(0, t_max as usize) as u32)
+            }
+        })
+        .collect()
+}
+
 /// Pack spike *presence* into a bit-vector: bit `i % 64` of word `i / 64`
 /// is set iff `times[i]` carries a spike. The spike times themselves stay
 /// in the flat `SpikeTime` array; the packed form is the cheap-to-compare,

@@ -1,0 +1,177 @@
+//! Golden-file regression tests for the `ppa::report` macro tables (the
+//! paper's Table II power/delay/area rows), under `rust/tests/golden/`.
+//!
+//! Two files pin the two halves of `harness::table2()`:
+//!
+//! * `table2_tnn7.tsv` — the TNN7 hard-cell characterization (paper values
+//!   carried verbatim by `cells::TABLE2`). Committed; compared near-exactly.
+//! * `table2_baseline.tsv` — the synthesized ASAP7 standard-cell baseline of
+//!   each macro (`synthesize` → `ppa::report::analyze`). Compared with an
+//!   **explicit 0.1% relative tolerance**, so synthesis/PPA refactors that
+//!   change the numbers can't slip through silently — a drift must be
+//!   re-blessed deliberately.
+//!
+//! Blessing: `TNN7_BLESS=1 cargo test --test golden_table2` rewrites both
+//! files from the current implementation (also done automatically when a
+//! file is missing, e.g. on the first run after checkout of a branch that
+//! predates it — a warning is printed so the bless is visible).
+
+use std::fmt::Write as _;
+use std::path::PathBuf;
+use tnn7::harness;
+
+/// Relative tolerance for the TNN7 hard-cell values (library constants —
+/// any drift means the Table II data itself changed).
+const TNN7_REL_TOL: f64 = 1e-9;
+/// Explicit relative tolerance for the synthesized baseline PPA values.
+const BASELINE_REL_TOL: f64 = 1e-3;
+
+fn golden_path(file: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden")
+        .join(file)
+}
+
+fn bless_requested() -> bool {
+    std::env::var("TNN7_BLESS").is_ok()
+}
+
+/// Parse a golden TSV into (name, values) rows, skipping `#` comments.
+fn parse_golden(content: &str) -> Vec<(String, Vec<f64>)> {
+    content
+        .lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .map(|l| {
+            let mut parts = l.split('\t');
+            let name = parts.next().expect("golden row has a name").to_string();
+            let values = parts
+                .map(|v| v.parse::<f64>().unwrap_or_else(|_| panic!("bad value {v:?} in row {name}")))
+                .collect();
+            (name, values)
+        })
+        .collect()
+}
+
+fn rel_err(got: f64, want: f64) -> f64 {
+    (got - want).abs() / want.abs().max(1e-12)
+}
+
+fn check_rows(
+    file: &str,
+    golden: &[(String, Vec<f64>)],
+    current: &[(String, Vec<f64>)],
+    columns: &[&str],
+    rel_tol: f64,
+) {
+    assert_eq!(
+        golden.len(),
+        current.len(),
+        "{file}: row count changed (bless with TNN7_BLESS=1 if intended)"
+    );
+    for ((gn, gv), (cn, cv)) in golden.iter().zip(current) {
+        assert_eq!(gn, cn, "{file}: macro row order changed");
+        assert_eq!(gv.len(), cv.len(), "{file}: column count changed for {gn}");
+        for (col, (&want, &got)) in columns.iter().zip(gv.iter().zip(cv)) {
+            assert!(
+                rel_err(got, want) <= rel_tol,
+                "{file}: {gn} {col} drifted: golden {want} vs current {got} \
+                 (rel err {:.2e} > tol {rel_tol:.0e}; bless with TNN7_BLESS=1 if intended)",
+                rel_err(got, want)
+            );
+        }
+    }
+}
+
+fn write_golden(file: &str, header: &str, rows: &[(String, Vec<f64>)]) {
+    let mut out = String::from(header);
+    for (name, values) in rows {
+        let _ = write!(out, "{name}");
+        for v in values {
+            let _ = write!(out, "\t{v}");
+        }
+        out.push('\n');
+    }
+    std::fs::write(golden_path(file), out)
+        .unwrap_or_else(|e| panic!("cannot write golden {file}: {e}"));
+    eprintln!("blessed golden file tests/golden/{file} from current values");
+}
+
+fn compare_or_bless(
+    file: &str,
+    header: &str,
+    current: &[(String, Vec<f64>)],
+    columns: &[&str],
+    rel_tol: f64,
+) {
+    let path = golden_path(file);
+    if bless_requested() || !path.exists() {
+        write_golden(file, header, current);
+        return;
+    }
+    let content = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("cannot read golden {file}: {e}"));
+    let golden = parse_golden(&content);
+    check_rows(file, &golden, current, columns, rel_tol);
+}
+
+#[test]
+fn table2_tnn7_characterization_matches_golden_file() {
+    let rows: Vec<(String, Vec<f64>)> = harness::table2()
+        .iter()
+        .map(|r| {
+            (
+                r.kind.cell_name().to_string(),
+                vec![r.tnn7_leakage_nw, r.tnn7_delay_ps, r.tnn7_area_um2],
+            )
+        })
+        .collect();
+    assert_eq!(rows.len(), 9, "Table II covers the nine macros");
+    compare_or_bless(
+        "table2_tnn7.tsv",
+        "# Golden: paper Table II — TNN7 hard-macro characterization.\n\
+         # Columns: macro cell name <TAB> leakage_nw <TAB> delay_ps <TAB> area_um2\n\
+         # Row order = gates::macros9::ALL_MACROS. Regenerate only if the paper\n\
+         # values in cells::TABLE2 intentionally change (TNN7_BLESS=1 cargo test).\n",
+        &rows,
+        &["leakage_nw", "delay_ps", "area_um2"],
+        TNN7_REL_TOL,
+    );
+}
+
+#[test]
+fn table2_synthesized_baseline_matches_golden_file() {
+    let rows: Vec<(String, Vec<f64>)> = harness::table2()
+        .iter()
+        .map(|r| {
+            (
+                r.kind.cell_name().to_string(),
+                vec![
+                    r.base.leakage_nw,
+                    r.base.power_nw,
+                    r.base.critical_path_ps,
+                    r.base.cell_area_um2,
+                    r.base.std_cells as f64,
+                ],
+            )
+        })
+        .collect();
+    compare_or_bless(
+        "table2_baseline.tsv",
+        "# Golden: synthesized ASAP7 standard-cell baseline of each TNN7 macro\n\
+         # (harness::table2 -> synth::flow::synthesize -> ppa::report::analyze).\n\
+         # Columns: macro <TAB> leakage_nw <TAB> power_nw <TAB> critical_path_ps\n\
+         #          <TAB> cell_area_um2 <TAB> std_cells\n\
+         # Compared with 0.1% relative tolerance; re-bless deliberate changes\n\
+         # with TNN7_BLESS=1 cargo test --test golden_table2.\n",
+        &rows,
+        &[
+            "leakage_nw",
+            "power_nw",
+            "critical_path_ps",
+            "cell_area_um2",
+            "std_cells",
+        ],
+        BASELINE_REL_TOL,
+    );
+}
