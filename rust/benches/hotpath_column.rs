@@ -1,8 +1,7 @@
 //! L3 hot-path benchmark: gamma-cycle throughput of each engine — golden
 //! model, gate-level toggle collection (scalar vs 64-lane bit-parallel,
 //! selected via `SimBackend`), XLA single-step, and the batched XLA
-//! pipeline — on the 82×2 column. Feeds the §Perf section of
-//! EXPERIMENTS.md.
+//! pipeline — on the 82×2 column.
 use tnn7::coordinator::{encode_ucr, Engine};
 use tnn7::gates::column_design::{build_column, BrvSource};
 use tnn7::gates::{collect_toggles, SimBackend};

@@ -1,0 +1,75 @@
+//! Sweep executor throughput: cold grid vs fully warm cache on the
+//! built-in quick campaign, plus a single-point compute cost. The warm
+//! number is the sweep's "resume instantly" claim made measurable: a warm
+//! pass only hashes keys and parses kv entries, so it should be orders of
+//! magnitude faster than the cold pass it replaces.
+//!
+//! Run with `cargo bench --bench sweep_throughput` (set `TNN7_BENCH_FAST=1`
+//! for a CI-speed configuration). Writes `BENCH_sweep.json` — the same
+//! artifact name `tnn7 sweep` emits, with the bench's cold/warm medians in
+//! place of a full campaign report.
+
+use tnn7::sweep::{compute_point, run_sweep, SweepSpec};
+use tnn7::util::bench::{black_box, Bencher};
+use tnn7::util::json::Json;
+
+fn main() {
+    let mut spec = SweepSpec::quick();
+    let base = std::env::temp_dir().join(format!("tnn7_sweep_bench_{}", std::process::id()));
+    spec.cache_dir = base.join("cache");
+    spec.out_dir = base.join("out");
+    std::fs::remove_dir_all(&base).ok();
+
+    let points = spec.points();
+    println!(
+        "sweep bench: quick campaign, {} points ({} geometries x {} flows), {} workers",
+        points.len(),
+        spec.geometries.len(),
+        spec.flows.len(),
+        if spec.threads == 0 { "machine".to_string() } else { spec.threads.to_string() }
+    );
+
+    let b = Bencher::from_env();
+
+    // One grid point from scratch (synthesis + PPA + training + scoring).
+    // points[1] is the quick grid's (6x2, tnn7, golden) point.
+    let s_point = b.bench("compute_point (6x2, tnn7, golden)", || {
+        black_box(compute_point(&points[1]).unwrap().purity)
+    });
+    println!("{}", s_point.report());
+
+    // Cold grid: cache cleared before every iteration.
+    let s_cold = b.bench("run_sweep cold (6 points)", || {
+        std::fs::remove_dir_all(&spec.cache_dir).ok();
+        let o = run_sweep(&spec, true).unwrap();
+        assert_eq!(o.computed, o.rows.len());
+        black_box(o.rows.len())
+    });
+    println!("{}", s_cold.report());
+
+    // Warm grid: every point served from the cache filled above.
+    let s_warm = b.bench("run_sweep warm (6 points, all cached)", || {
+        let o = run_sweep(&spec, true).unwrap();
+        assert_eq!(o.cached, o.rows.len());
+        black_box(o.rows.len())
+    });
+    println!("{}", s_warm.report());
+
+    let resume_speedup = s_cold.median_ns() / s_warm.median_ns().max(1.0);
+    println!(
+        "  => cold {} vs warm {} per grid: warm-cache resume is {resume_speedup:.0}x faster",
+        tnn7::util::bench::fmt_dur(s_cold.median),
+        tnn7::util::bench::fmt_dur(s_warm.median),
+    );
+
+    let json = Json::obj()
+        .set("campaign", "quick")
+        .set("points", points.len())
+        .set("point_median_ns", s_point.median_ns())
+        .set("cold_median_ns", s_cold.median_ns())
+        .set("warm_median_ns", s_warm.median_ns())
+        .set("resume_speedup", resume_speedup);
+    std::fs::write("BENCH_sweep.json", json.to_pretty()).expect("write BENCH_sweep.json");
+    println!("  wrote BENCH_sweep.json");
+    std::fs::remove_dir_all(&base).ok();
+}

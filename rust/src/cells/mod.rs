@@ -1,5 +1,5 @@
 //! Cell library models — the substitute for the ASAP7 PDK + Liberate
-//! characterization flow (DESIGN.md §5).
+//! characterization flow (see `docs/ARCHITECTURE.md` §"Module map").
 //!
 //! Two libraries are provided:
 //!
@@ -8,7 +8,7 @@
 //!   models. Area follows the ASAP7 7.5-track geometry (cell height 0.27 µm,
 //!   CPP 0.054 µm); leakage and delay are calibrated so that the nine
 //!   baseline macro netlists synthesize to PPA in the regime the paper
-//!   reports relative to Table II (see EXPERIMENTS.md §Calibration).
+//!   reports relative to Table II.
 //! * [`tnn7`] — the ASAP7 library **plus** the nine TNN7 hard-macro cells
 //!   carrying the paper's Table II characterization verbatim (leakage nW,
 //!   delay ps, area µm²).
@@ -23,6 +23,7 @@ use std::collections::HashMap;
 /// One characterized cell.
 #[derive(Clone, Debug)]
 pub struct CellModel {
+    /// Library cell name (e.g. `NAND2x1`, `tnn7_less_equal`).
     pub name: &'static str,
     /// Placement footprint in µm².
     pub area_um2: f64,
@@ -46,6 +47,7 @@ pub struct CellModel {
 /// A cell library: name → model, plus macro availability.
 #[derive(Clone, Debug)]
 pub struct CellLibrary {
+    /// Library name (`ASAP7` / `TNN7`).
     pub name: &'static str,
     cells: HashMap<&'static str, CellModel>,
     /// Whether the nine TNN7 macros are available as hard cells.
@@ -53,16 +55,19 @@ pub struct CellLibrary {
 }
 
 impl CellLibrary {
+    /// The model for `name`; panics if the library lacks it.
     pub fn get(&self, name: &str) -> &CellModel {
         self.cells
             .get(name)
             .unwrap_or_else(|| panic!("library {} has no cell {name}", self.name))
     }
 
+    /// The model for `name`, if the library has it.
     pub fn try_get(&self, name: &str) -> Option<&CellModel> {
         self.cells.get(name)
     }
 
+    /// The hard-macro cell for `kind` (None in macro-less libraries).
     pub fn macro_cell(&self, kind: MacroKind) -> Option<&CellModel> {
         if self.has_macros {
             self.cells.get(kind.cell_name())
@@ -71,6 +76,7 @@ impl CellLibrary {
         }
     }
 
+    /// All cell names, sorted (for reports and tests).
     pub fn cell_names(&self) -> Vec<&'static str> {
         let mut v: Vec<_> = self.cells.keys().copied().collect();
         v.sort();
@@ -117,20 +123,35 @@ fn seq_cell(
 
 /// Standard-cell names emitted by the technology mapper.
 pub mod names {
+    /// Inverter.
     pub const INV: &str = "INVx1";
+    /// Buffer.
     pub const BUF: &str = "BUFx1";
+    /// 2-input NAND.
     pub const NAND2: &str = "NAND2x1";
+    /// 2-input NOR.
     pub const NOR2: &str = "NOR2x1";
+    /// 2-input AND.
     pub const AND2: &str = "AND2x1";
+    /// 2-input OR.
     pub const OR2: &str = "OR2x1";
+    /// 2-input XOR.
     pub const XOR2: &str = "XOR2x1";
+    /// 2-input XNOR.
     pub const XNOR2: &str = "XNOR2x1";
+    /// AND-OR-invert (2-1).
     pub const AOI21: &str = "AOI21x1";
+    /// OR-AND-invert (2-1).
     pub const OAI21: &str = "OAI21x1";
+    /// 2:1 mux.
     pub const MUX2: &str = "MUX2x1";
+    /// D flip-flop.
     pub const DFF: &str = "DFFx1";
-    pub const DFFR: &str = "DFFRx1"; // with synchronous reset
+    /// D flip-flop with synchronous reset.
+    pub const DFFR: &str = "DFFRx1";
+    /// Tie-low source.
     pub const TIE0: &str = "TIELO";
+    /// Tie-high source.
     pub const TIE1: &str = "TIEHI";
 }
 
@@ -138,10 +159,10 @@ pub mod names {
 ///
 /// Geometry: 7.5-track cells, height 0.27 µm, CPP 0.054 µm ⇒ area =
 /// width-in-CPP × 0.01458 µm². Leakage/delay/energy are RVT/TT/0.7 V-class
-/// values calibrated per EXPERIMENTS.md §Calibration.
+/// values.
 pub fn asap7() -> CellLibrary {
     use names::*;
-    // Calibration (EXPERIMENTS.md §Calibration): area/leakage scaled so the
+    // Calibration: area/leakage scaled so the
     // design-level ASAP7-vs-TNN7 gap lands in the regime the paper reports
     // (the TNN7 macro data is fixed by Table II, so the baseline library is
     // the only free parameter).
@@ -188,7 +209,7 @@ pub const TABLE2: [(MacroKind, f64, f64, f64); 9] = [
 /// typical column activity), derived from toggle-count simulation of the
 /// macro expansions scaled by the custom-cell energy factor (GDI muxes,
 /// diffusion-overlap layout ⇒ ~0.8× the standard-cell energy at
-/// iso-function; see EXPERIMENTS.md §Calibration).
+/// iso-function).
 pub fn macro_energy_fj_cycle(kind: MacroKind) -> f64 {
     match kind {
         MacroKind::SynReadout => 0.25,

@@ -1,0 +1,220 @@
+//! CLI surface of the `tnn7` binary: the subcommand table, usage/help
+//! rendering, and the small argument helpers the parser shares with it.
+//!
+//! The binary's usage text is **generated** from [`COMMANDS`] — the same
+//! table `main.rs` dispatches on — so the advertised flag set cannot
+//! drift from the parser again (each subcommand's synopsis/flags live in
+//! exactly one place, and `tests/cli_help.rs` smoke-checks every entry).
+
+/// One subcommand: its name, a one-line synopsis (shown in the global
+/// usage), and per-flag help lines (shown by `tnn7 help <cmd>` and
+/// `tnn7 <cmd> --help`).
+#[derive(Clone, Copy, Debug)]
+pub struct CommandSpec {
+    /// Subcommand name as typed on the command line.
+    pub name: &'static str,
+    /// One-line synopsis: the subcommand with its full flag set.
+    pub synopsis: &'static str,
+    /// Flag-by-flag help, one line per entry.
+    pub details: &'static [&'static str],
+}
+
+/// Every subcommand the binary dispatches, in display order. This table
+/// is the single source of truth for the usage text.
+pub const COMMANDS: &[CommandSpec] = &[
+    CommandSpec {
+        name: "report",
+        synopsis: "report table2|fig11|table3|fig12|fig13|sim|train|conformance|headline [--quick]",
+        details: &[
+            "regenerate one paper artifact (printed as a paper-style table)",
+            "--quick     CI-speed subsample (fig11/fig12/train/conformance)",
+        ],
+    },
+    CommandSpec {
+        name: "run",
+        synopsis: "run ucr|mnist [--dataset NAME] [--layers N] [--engine xla|golden|batched|gate] [key=value ...]",
+        details: &[
+            "run a workload end to end with online STDP learning",
+            "--dataset NAME   (ucr) dataset from the 36-design suite, default TwoLeadECG",
+            "--layers N       (mnist) network depth, default 3",
+            "--engine KIND    ucr: xla|golden|batched|gate; mnist: golden|batched",
+            "key=value        config overrides: seed=, gamma_instances=, channel_depth=,",
+            "                 batch=, threads=, artifacts_dir=, out_dir=, engine=",
+        ],
+    },
+    CommandSpec {
+        name: "sweep",
+        synopsis: "sweep [SPEC.kv] [--quick] [--no-cache] [key=value ...]",
+        details: &[
+            "design-space exploration: grid over (p x q, theta, flow, engine, seed) with a",
+            "resumable content-addressed point cache; writes sweep.tsv + BENCH_sweep.json",
+            "SPEC.kv          spec file (keys below); omitted = built-in 12-point default grid",
+            "--quick          built-in 6-point CI grid with tiny workload budgets",
+            "--no-cache       ignore and do not update the point cache",
+            "key=value        spec overrides: name=, geometries=8x2,12x2, datasets=TwoLeadECG,",
+            "                 theta=default|sparse|fixed:<n>, flows=asap7,tnn7,",
+            "                 engines=golden,batched,gate, seeds=, per_cluster=, epochs=,",
+            "                 threads=, cache_dir=, out_dir=",
+        ],
+    },
+    CommandSpec {
+        name: "synth",
+        synopsis: "synth [--p P] [--q Q] [--flow asap7|tnn7]",
+        details: &[
+            "synthesize one p x q column and print its PPA row",
+            "--p P            synapses per neuron, default 82",
+            "--q Q            neurons, default 2",
+            "--flow FLOW      asap7 (expand macros) or tnn7 (preserve macros), default tnn7",
+        ],
+    },
+    CommandSpec {
+        name: "serve",
+        synopsis: "serve [key=value ...]",
+        details: &[
+            "streaming demo over the XLA runtime (requires `make artifacts`)",
+            "key=value        same config overrides as `run`",
+        ],
+    },
+    CommandSpec {
+        name: "selftest",
+        synopsis: "selftest",
+        details: &["golden vs gate-level (vs XLA, if built) cross-check on a small column"],
+    },
+    CommandSpec {
+        name: "help",
+        synopsis: "help [COMMAND]",
+        details: &["print the global usage, or one subcommand's flag-by-flag help"],
+    },
+];
+
+/// Look up a subcommand's table entry.
+pub fn command(name: &str) -> Option<&'static CommandSpec> {
+    COMMANDS.iter().find(|c| c.name == name)
+}
+
+/// The global usage text, generated from [`COMMANDS`].
+pub fn usage() -> String {
+    let mut s = String::from("usage: tnn7 <command> ...\n");
+    for c in COMMANDS {
+        s.push_str("  tnn7 ");
+        s.push_str(c.synopsis);
+        s.push('\n');
+    }
+    s.push_str("run `tnn7 help <command>` for flag-by-flag help");
+    s
+}
+
+/// One subcommand's full help text, generated from its table entry.
+pub fn help_for(name: &str) -> Option<String> {
+    let c = command(name)?;
+    let mut s = format!("usage: tnn7 {}\n", c.synopsis);
+    for d in c.details {
+        s.push_str("  ");
+        s.push_str(d);
+        s.push('\n');
+    }
+    Some(s.trim_end().to_string())
+}
+
+/// Is the boolean flag present?
+pub fn flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+/// Value of `--name VALUE`, if present.
+pub fn opt<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .map(|s| s.as_str())
+}
+
+/// The `key=value` override arguments (everything containing `=` that is
+/// not a `--flag`).
+pub fn overrides(args: &[String]) -> Vec<String> {
+    args.iter()
+        .filter(|a| a.contains('=') && !a.starts_with("--"))
+        .cloned()
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn usage_lists_every_command() {
+        let u = usage();
+        for c in COMMANDS {
+            assert!(u.contains(c.name), "usage must mention {}", c.name);
+        }
+        assert!(u.contains("--engine xla|golden|batched|gate"));
+        assert!(u.contains("--quick"));
+    }
+
+    #[test]
+    fn every_command_has_nonempty_help() {
+        for c in COMMANDS {
+            let h = help_for(c.name).expect("help for every command");
+            assert!(h.starts_with(&format!("usage: tnn7 {}", c.synopsis)));
+            assert!(!c.details.is_empty(), "{} needs details", c.name);
+        }
+        assert!(help_for("nope").is_none());
+        assert_eq!(command("sweep").unwrap().name, "sweep");
+    }
+
+    #[test]
+    fn advertised_run_config_keys_are_accepted_by_the_parser() {
+        // The `run` help advertises these `key=value` overrides; each must
+        // be a real RunConfig key (this is the anti-drift tripwire).
+        let mut cfg = crate::config::RunConfig::default();
+        for kv in [
+            "seed=1",
+            "gamma_instances=2",
+            "channel_depth=3",
+            "batch=4",
+            "threads=5",
+            "artifacts_dir=a",
+            "out_dir=o",
+            "engine=golden",
+        ] {
+            cfg.apply_overrides(&[kv.to_string()])
+                .unwrap_or_else(|e| panic!("advertised key {kv:?} rejected: {e}"));
+        }
+    }
+
+    #[test]
+    fn advertised_sweep_keys_are_accepted_by_the_parser() {
+        let mut spec = crate::sweep::SweepSpec::default();
+        for kv in [
+            "name=x",
+            "geometries=8x2,12x2",
+            "datasets=TwoLeadECG",
+            "theta=fixed:9",
+            "flows=asap7,tnn7",
+            "engines=golden,batched",
+            "seeds=1,2",
+            "per_cluster=3",
+            "epochs=2",
+            "threads=2",
+            "cache_dir=c",
+            "out_dir=o",
+        ] {
+            spec.apply_overrides(&[kv.to_string()])
+                .unwrap_or_else(|e| panic!("advertised sweep key {kv:?} rejected: {e}"));
+        }
+    }
+
+    #[test]
+    fn arg_helpers() {
+        let args: Vec<String> = ["ucr", "--engine", "gate", "seed=9", "--quick"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        assert!(flag(&args, "--quick"));
+        assert!(!flag(&args, "--no-cache"));
+        assert_eq!(opt(&args, "--engine"), Some("gate"));
+        assert_eq!(opt(&args, "--missing"), None);
+        assert_eq!(overrides(&args), vec!["seed=9".to_string()]);
+    }
+}

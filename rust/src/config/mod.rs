@@ -26,6 +26,7 @@ pub enum EngineKind {
 }
 
 impl EngineKind {
+    /// Parse a CLI/config spelling.
     pub fn parse(s: &str) -> crate::Result<Self> {
         match s {
             "xla" => Ok(EngineKind::Xla),
@@ -36,6 +37,7 @@ impl EngineKind {
         }
     }
 
+    /// Canonical spelling (inverse of [`EngineKind::parse`]).
     pub fn name(self) -> &'static str {
         match self {
             EngineKind::Xla => "xla",
@@ -62,10 +64,14 @@ pub struct RunConfig {
     /// Batch size for the batched XLA path (1 = unbatched).
     pub batch: usize,
     /// Worker threads for the batched behavioral engine's column sharding
-    /// (0 = machine parallelism).
+    /// and the sweep executor (0 = machine parallelism).
     pub threads: usize,
     /// Output directory for reports.
     pub out_dir: PathBuf,
+    /// Default on-disk result-cache location for design-space sweeps —
+    /// consumed by `SweepSpec::default()` (`crate::sweep`), overridable
+    /// per sweep via the spec file or `cache_dir=` override.
+    pub cache_dir: PathBuf,
 }
 
 impl Default for RunConfig {
@@ -79,6 +85,7 @@ impl Default for RunConfig {
             batch: 1,
             threads: 0,
             out_dir: "target/reports".into(),
+            cache_dir: "target/sweep-cache".into(),
         }
     }
 }
@@ -111,6 +118,9 @@ impl RunConfig {
         if let Some(v) = doc.get("out_dir") {
             c.out_dir = v.into();
         }
+        if let Some(v) = doc.get("cache_dir") {
+            c.cache_dir = v.into();
+        }
         c.validate()?;
         Ok(c)
     }
@@ -136,12 +146,14 @@ impl RunConfig {
                 "batch" => self.batch = merged.batch,
                 "threads" => self.threads = merged.threads,
                 "out_dir" => self.out_dir = merged.out_dir.clone(),
+                "cache_dir" => self.cache_dir = merged.cache_dir.clone(),
                 other => anyhow::bail!("unknown config key {other:?}"),
             }
         }
         self.validate()
     }
 
+    /// Sanity-check the configuration.
     pub fn validate(&self) -> crate::Result<()> {
         anyhow::ensure!(self.channel_depth >= 1, "channel_depth must be >= 1");
         anyhow::ensure!(self.batch >= 1, "batch must be >= 1");
@@ -192,6 +204,17 @@ mod tests {
         assert_eq!(c.threads, 0, "default: machine parallelism");
         c.apply_overrides(&["threads=2".into()]).unwrap();
         assert_eq!(c.threads, 2);
+    }
+
+    #[test]
+    fn cache_dir_parses_and_overrides() {
+        let doc = KvDoc::parse("cache_dir = /tmp/points\n").unwrap();
+        let c = RunConfig::from_kv(&doc).unwrap();
+        assert_eq!(c.cache_dir, PathBuf::from("/tmp/points"));
+        let mut c = RunConfig::default();
+        assert_eq!(c.cache_dir, PathBuf::from("target/sweep-cache"));
+        c.apply_overrides(&["cache_dir=elsewhere".into()]).unwrap();
+        assert_eq!(c.cache_dir, PathBuf::from("elsewhere"));
     }
 
     #[test]

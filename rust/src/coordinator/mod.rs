@@ -24,6 +24,7 @@ use std::time::{Duration, Instant};
 /// One unit of streamed work: an encoded gamma instance.
 #[derive(Clone, Debug)]
 pub struct GammaItem {
+    /// The encoded input spike volley (one SpikeTime per input line).
     pub volley: Vec<SpikeTime>,
     /// Ground-truth label if known (for purity scoring downstream).
     pub label: Option<usize>,
@@ -33,16 +34,24 @@ pub struct GammaItem {
 /// `gates::SimBackend` on the hardware half: a reference engine and a
 /// throughput engine with identical semantics, plus the XLA path).
 pub enum Engine<'a> {
+    /// The scalar golden model (the bit-accurate reference).
     Golden(Column),
+    /// The batched SoA kernel engine (`tnn::batch`).
     Batched(BatchedColumn),
+    /// The gate-level TNN7 macro-netlist engine (`gates::gate_engine`).
     Gate(GateColumn),
+    /// An AOT-compiled XLA column executable (weights live host-side and
+    /// cross the PJRT boundary every step).
     Xla {
+        /// The bound executable.
         exe: ColumnExecutable<'a>,
+        /// Current synaptic weights, row-major p×q.
         weights: Vec<f32>,
     },
 }
 
 impl Engine<'_> {
+    /// Which engine kind this is.
     pub fn kind(&self) -> EngineKind {
         match self {
             Engine::Golden(_) => EngineKind::Golden,
@@ -52,6 +61,7 @@ impl Engine<'_> {
         }
     }
 
+    /// The engine's column geometry `(p, q)`.
     pub fn geometry(&self) -> (usize, usize) {
         match self {
             Engine::Golden(c) => (c.p(), c.q()),
@@ -140,13 +150,17 @@ impl Engine<'_> {
 /// Results of one streaming run.
 #[derive(Debug)]
 pub struct StreamOutcome {
+    /// Gamma instances processed.
     pub processed: u64,
+    /// End-to-end wall time.
     pub wall: Duration,
+    /// Processed instances per second.
     pub throughput_hz: f64,
     /// Winner neuron per instance (post-WTA), in arrival order.
     pub winners: Vec<Option<usize>>,
     /// Labels echoed from the items (same order).
     pub labels: Vec<Option<usize>>,
+    /// Counters and latency histogram of the run.
     pub metrics: StreamMetrics,
 }
 
@@ -282,10 +296,24 @@ pub fn ucr_engine_with(
     rng: &mut Rng64,
 ) -> crate::Result<Engine<'static>> {
     let theta = crate::tnn::encode::sparse_theta(p, params.w_max(), volley_density(items));
-    // One shared construction path: every behavioral engine starts from the
-    // same randomly-initialised column (identical weight draws for a given
-    // rng state), so cross-engine runs on a shared seed are comparable
-    // volley for volley.
+    engine_with_theta(kind, p, q, theta, params, rng)
+}
+
+/// Build a behavioral engine with an explicit θ — the one shared
+/// construction path behind [`ucr_engine_with`] and the design-space sweep
+/// executor ([`crate::sweep`]): every engine kind starts from the same
+/// randomly-initialised column (identical weight draws for a given rng
+/// state), so cross-engine runs on a shared seed are comparable volley for
+/// volley — which is what makes the swept engines the *conformance-checked*
+/// engines rather than lookalikes.
+pub fn engine_with_theta(
+    kind: EngineKind,
+    p: usize,
+    q: usize,
+    theta: u32,
+    params: TnnParams,
+    rng: &mut Rng64,
+) -> crate::Result<Engine<'static>> {
     let col = Column::with_random_weights(p, q, theta, params, rng);
     match kind {
         EngineKind::Golden => Ok(Engine::Golden(col)),

@@ -44,9 +44,13 @@ pub enum BrvSource {
 /// Handles into the generated netlist for stimulus and observation.
 #[derive(Clone, Debug)]
 pub struct ColumnDesign {
+    /// The generated column netlist (macros + glue).
     pub netlist: Netlist,
+    /// Synapse lines per neuron.
     pub p: usize,
+    /// Neurons in the column.
     pub q: usize,
+    /// Neuron firing threshold baked into the comparator tree.
     pub theta: u32,
     /// Per input line: the IN pulse net.
     pub in_pulse: Vec<NetId>,
@@ -191,7 +195,7 @@ pub fn build_column(p: usize, q: usize, theta: u32, brv: BrvSource) -> ColumnDes
             let cases = b.macro_inst(MacroKind::StdpCaseGen, vec![greater, ein[i], eout[j]]);
             let (c0, c1, c2, c3) = (cases[0], cases[1], cases[2], cases[3]);
             // Direction-dependent stabilize select: INC uses W, DEC uses ~W
-            // (prob (w+1)/8 up, (w_max−w+1)/8 down — DESIGN.md §2).
+            // (prob (w+1)/8 up, (w_max−w+1)/8 down).
             let inc_case = b.or(c0, c2);
             let [w0, w1, w2] = w_bits[k];
             let nw0 = b.not(w0);
@@ -306,11 +310,13 @@ pub fn build_column(p: usize, q: usize, theta: u32, brv: BrvSource) -> ColumnDes
 /// Gate-level column simulation harness (requires `BrvSource::Inputs`).
 pub struct ColumnSim<'a> {
     design: &'a ColumnDesign,
+    /// The underlying netlist simulator (exposed for probing nets).
     pub sim: Simulator<'a>,
     params: TnnParams,
 }
 
 impl<'a> ColumnSim<'a> {
+    /// Build a simulator over `design` (requires input-driven BRVs).
     pub fn new(design: &'a ColumnDesign, params: TnnParams) -> Result<Self, String> {
         assert!(
             !design.brv_case.is_empty(),

@@ -117,15 +117,19 @@ impl GateColumn {
         })
     }
 
+    /// Synapse lines per neuron.
     pub fn p(&self) -> usize {
         self.design.p
     }
+    /// Neurons in the column.
     pub fn q(&self) -> usize {
         self.design.q
     }
+    /// Neuron firing threshold.
     pub fn theta(&self) -> u32 {
         self.design.theta
     }
+    /// The engine's hyper-parameters.
     pub fn params(&self) -> &TnnParams {
         &self.params
     }

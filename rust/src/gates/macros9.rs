@@ -43,6 +43,7 @@ pub enum MacroKind {
     Edge2Pulse,
 }
 
+/// All nine macros, in the paper's Fig. 2–10 order.
 pub const ALL_MACROS: [MacroKind; 9] = [
     MacroKind::SynReadout,
     MacroKind::SynWeightUpdate,
@@ -71,6 +72,7 @@ impl MacroKind {
         }
     }
 
+    /// Inverse of `cell_name` (None for non-macro cell names).
     pub fn from_cell_name(name: &str) -> Option<MacroKind> {
         ALL_MACROS.iter().copied().find(|m| m.cell_name() == name)
     }
@@ -159,6 +161,7 @@ impl MacroKind {
         }
     }
 
+    /// Does this macro hold state across unit cycles?
     pub fn is_sequential(&self) -> bool {
         self.state_bits() > 0
     }
@@ -389,6 +392,7 @@ impl WordMacroState {
         self.planes[k]
     }
 
+    /// Overwrite state-bit plane `k` across all lanes.
     pub fn set_plane(&mut self, k: usize, v: u64) {
         self.planes[k] = v;
     }

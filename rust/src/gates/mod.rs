@@ -1,7 +1,7 @@
 //! Gate-level hardware substrate.
 //!
 //! This module replaces the schematic/netlist layer of the paper's
-//! Cadence-based flow (see DESIGN.md §5): a generic gate-level netlist IR
+//! Cadence-based flow (see `docs/ARCHITECTURE.md`): a generic gate-level netlist IR
 //! with a structural builder ([`netlist`]), **two** levelized synchronous
 //! simulators used for functional verification and switching-activity
 //! extraction — the scalar reference engine ([`sim`]) and the 64-lane
@@ -55,6 +55,7 @@ pub enum SimBackend {
 }
 
 impl SimBackend {
+    /// Display name (`scalar` / `bit-parallel-64`).
     pub fn name(&self) -> &'static str {
         match self {
             SimBackend::Scalar => "scalar",
@@ -76,6 +77,7 @@ pub(crate) fn mean_activity(toggles: &[u64], cycles: u64) -> f64 {
 /// Per-net toggle statistics from a randomized toggle-collection run.
 #[derive(Clone, Debug)]
 pub struct ToggleReport {
+    /// Backend that produced the statistics.
     pub backend: SimBackend,
     /// Per-net toggle counts (summed over every simulated cycle; for the
     /// bit-parallel backend, over every lane of every pass).

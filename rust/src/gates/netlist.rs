@@ -7,10 +7,10 @@
 //! else is combinational.
 //!
 //! The builder doubles as the "RTL elaboration" front-end of the synthesis
-//! flow (DESIGN.md §4): designs — including the full TNN column — are
+//! flow: designs — including the full TNN column — are
 //! described structurally through it (vectors, adders, comparators, trees),
 //! producing the generic netlist that [`crate::synth`] optimizes and maps
-//! onto a cell library.
+//! onto a cell library (see `docs/ARCHITECTURE.md` §"Module map").
 
 use super::macros9::MacroKind;
 use std::collections::HashMap;
@@ -31,9 +31,13 @@ pub enum Gate {
     /// Identity buffer — also the forward-wire placeholder (`wire()` /
     /// `connect()`): created with `PENDING_D` and patched later.
     Buf(NetId),
+    /// Inverter.
     Not(NetId),
+    /// 2-input AND.
     And(NetId, NetId),
+    /// 2-input OR.
     Or(NetId, NetId),
+    /// 2-input XOR.
     Xor(NetId, NetId),
     /// `sel ? b : a`.
     Mux(NetId, NetId, NetId),
@@ -76,6 +80,7 @@ impl Gate {
 /// A hard-macro instance (one of the nine TNN7 macros).
 #[derive(Clone, Debug)]
 pub struct MacroInst {
+    /// Which of the nine TNN7 macros is instantiated.
     pub kind: MacroKind,
     /// Input nets, in the pin order defined by `kind.input_pins()`.
     pub inputs: Vec<NetId>,
@@ -87,8 +92,11 @@ pub struct MacroInst {
 /// A gate-level netlist.
 #[derive(Clone, Debug, Default)]
 pub struct Netlist {
+    /// Design name (labels reports and simulators).
     pub name: String,
+    /// All gates; index == output [`NetId`].
     pub gates: Vec<Gate>,
+    /// Hard-macro instances (referenced by [`Gate::MacroOut`] nodes).
     pub macros: Vec<MacroInst>,
     /// Primary inputs: (name, net).
     pub inputs: Vec<(String, NetId)>,
@@ -97,14 +105,17 @@ pub struct Netlist {
 }
 
 impl Netlist {
+    /// The gate driving net `id`.
     pub fn gate(&self, id: NetId) -> &Gate {
         &self.gates[id as usize]
     }
 
+    /// Total net (gate) count.
     pub fn len(&self) -> usize {
         self.gates.len()
     }
 
+    /// Is the netlist empty?
     pub fn is_empty(&self) -> bool {
         self.gates.is_empty()
     }
@@ -239,12 +250,18 @@ impl Netlist {
     }
 }
 
+/// Gate counts by coarse class (the [`Netlist::census`] result).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct Census {
+    /// Combinational gates.
     pub comb: usize,
+    /// D flip-flops.
     pub dffs: usize,
+    /// Hard-macro instances.
     pub macros: usize,
+    /// Macro output pins (one net each).
     pub macro_pins: usize,
+    /// Primary inputs and constants.
     pub sources: usize,
 }
 
@@ -269,6 +286,7 @@ pub struct NetBuilder {
 }
 
 impl NetBuilder {
+    /// Start building a netlist named `name` (sharing off).
     pub fn new(name: &str) -> Self {
         NetBuilder {
             nl: Netlist {
@@ -304,18 +322,21 @@ impl NetBuilder {
 
     // ---- primitives -----------------------------------------------------
 
+    /// Declare a primary input.
     pub fn input(&mut self, name: &str) -> NetId {
         let id = self.push(Gate::Input);
         self.nl.inputs.push((name.to_string(), id));
         id
     }
 
+    /// Declare a `width`-bit primary input vector (`name[k]` per bit).
     pub fn input_vec(&mut self, name: &str, width: usize) -> Vec<NetId> {
         (0..width)
             .map(|k| self.input(&format!("{name}[{k}]")))
             .collect()
     }
 
+    /// Constant 0/1 net (deduplicated per builder).
     pub fn constant(&mut self, v: bool) -> NetId {
         let slot = if v { &mut self.one } else { &mut self.zero };
         if let Some(id) = *slot {
@@ -327,30 +348,38 @@ impl NetBuilder {
         id
     }
 
+    /// Inverter.
     pub fn not(&mut self, a: NetId) -> NetId {
         self.push(Gate::Not(a))
     }
+    /// 2-input AND.
     pub fn and(&mut self, a: NetId, b: NetId) -> NetId {
         self.push(Gate::And(a, b))
     }
+    /// 2-input OR.
     pub fn or(&mut self, a: NetId, b: NetId) -> NetId {
         self.push(Gate::Or(a, b))
     }
+    /// 2-input XOR.
     pub fn xor(&mut self, a: NetId, b: NetId) -> NetId {
         self.push(Gate::Xor(a, b))
     }
+    /// 2:1 mux (`sel ? b : a`).
     pub fn mux(&mut self, sel: NetId, a: NetId, b: NetId) -> NetId {
         self.push(Gate::Mux(sel, a, b))
     }
+    /// 2-input NAND (AND + NOT pair; the optimizer re-fuses them).
     pub fn nand(&mut self, a: NetId, b: NetId) -> NetId {
         let x = self.and(a, b);
         self.not(x)
     }
+    /// 2-input NOR (OR + NOT pair).
     pub fn nor(&mut self, a: NetId, b: NetId) -> NetId {
         let x = self.or(a, b);
         self.not(x)
     }
 
+    /// D flip-flop with optional synchronous reset to `init`.
     pub fn dff(&mut self, d: NetId, rst: Option<NetId>, init: bool) -> NetId {
         self.push(Gate::Dff { d, rst, init })
     }
@@ -643,16 +672,19 @@ impl NetBuilder {
 
     // ---- finalization ----------------------------------------------------
 
+    /// Declare a primary output.
     pub fn output(&mut self, name: &str, net: NetId) {
         self.nl.outputs.push((name.to_string(), net));
     }
 
+    /// Declare a primary output vector (`name[k]` per bit).
     pub fn output_vec(&mut self, name: &str, nets: &[NetId]) {
         for (k, &n) in nets.iter().enumerate() {
             self.output(&format!("{name}[{k}]"), n);
         }
     }
 
+    /// Finish building and return the netlist.
     pub fn finish(self) -> Netlist {
         for (i, g) in self.nl.gates.iter().enumerate() {
             match g {

@@ -34,6 +34,8 @@ pub struct Simulator<'a> {
 }
 
 impl<'a> Simulator<'a> {
+    /// Build a levelized simulator over `nl` (errors on true
+    /// combinational cycles).
     pub fn new(nl: &'a Netlist) -> Result<Self, String> {
         let order = nl.levelize()?;
         let mut values = vec![false; nl.gates.len()];

@@ -64,6 +64,8 @@ pub struct WordSimulator<'a> {
 }
 
 impl<'a> WordSimulator<'a> {
+    /// Build a level-packed 64-lane simulator over `nl` (errors on true
+    /// combinational cycles).
     pub fn new(nl: &'a Netlist) -> Result<Self, String> {
         let levels = nl.levelize_buckets()?;
         let mut sched = Vec::with_capacity(levels.iter().map(|l| l.len()).sum());

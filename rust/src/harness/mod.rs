@@ -1,7 +1,7 @@
 //! Experiment harness: regenerates every table and figure of the paper's
-//! evaluation (DESIGN.md §6 experiment index). Each function both returns
-//! structured rows (consumed by the benches and the JSON reporter) and can
-//! print a paper-style table.
+//! evaluation (see the README "Reproduction matrix" for the command that
+//! drives each one). Each function both returns structured rows (consumed
+//! by the benches and the JSON reporter) and can print a paper-style table.
 
 use crate::cells;
 use crate::config::EngineKind;
@@ -26,12 +26,16 @@ pub const GAMMA_CYCLES: u32 = 16;
 // Table II — per-macro PPA: TNN7 characterization vs synthesized baseline
 // ---------------------------------------------------------------------
 
+/// One Table II comparison: a TNN7 hard macro vs its synthesized baseline.
 #[derive(Clone, Debug)]
 pub struct Table2Row {
+    /// Which of the nine macros this row characterizes.
     pub kind: MacroKind,
-    /// Paper Table II values carried by the TNN7 library.
+    /// Paper Table II leakage carried by the TNN7 library, nW.
     pub tnn7_leakage_nw: f64,
+    /// Paper Table II delay carried by the TNN7 library, ps.
     pub tnn7_delay_ps: f64,
+    /// Paper Table II area carried by the TNN7 library, µm².
     pub tnn7_area_um2: f64,
     /// Our synthesized standard-cell baseline of the same function.
     pub base: PpaReport,
@@ -69,6 +73,7 @@ pub fn table2() -> Vec<Table2Row> {
         .collect()
 }
 
+/// Print [`table2`] in the paper's Table II layout.
 pub fn print_table2(rows: &[Table2Row]) {
     println!("TABLE II: 7nm PPA for proposed custom macros (TNN7 cell vs synthesized ASAP7 baseline)");
     println!(
@@ -93,10 +98,14 @@ pub fn print_table2(rows: &[Table2Row]) {
 // Fig. 11 — PPA scaling across the 36 UCR columns, ASAP7 vs TNN7
 // ---------------------------------------------------------------------
 
+/// One Fig. 11 point: a UCR column synthesized and analyzed under both flows.
 #[derive(Clone, Debug)]
 pub struct Fig11Row {
+    /// The dataset's column geometry.
     pub config: UcrConfig,
+    /// PPA under the ASAP7 baseline flow.
     pub base: PpaReport,
+    /// PPA under the TNN7 macro flow.
     pub tnn7: PpaReport,
 }
 
@@ -124,6 +133,7 @@ pub fn fig11(quick: bool) -> Vec<Fig11Row> {
         .collect()
 }
 
+/// Print [`fig11`] as the paper's PPA-scaling table.
 pub fn print_fig11(rows: &[Fig11Row]) {
     println!("Fig. 11: ASAP7 vs TNN7 7nm PPA scaling across synapse counts (36 UCR columns)");
     println!(
@@ -170,15 +180,22 @@ pub fn average_improvements(rows: &[Fig11Row]) -> (f64, f64, f64, f64) {
 // Table III — MNIST multi-layer prototypes, ASAP7 vs TNN7
 // ---------------------------------------------------------------------
 
+/// One Table III row: an MNIST prototype's network-level PPA under both flows.
 #[derive(Clone, Debug)]
 pub struct Table3Row {
+    /// Prototype name (1/3/4-layer).
     pub name: &'static str,
+    /// MNIST error rate the paper reports for this prototype, %.
     pub paper_error_pct: f64,
+    /// Total synapse count (the Table III scaling variable).
     pub synapses: usize,
+    /// Network PPA under the ASAP7 baseline flow.
     pub base: NetworkPpa,
+    /// Network PPA under the TNN7 macro flow.
     pub tnn7: NetworkPpa,
 }
 
+/// Synthesize + scale the three MNIST prototype networks under both flows.
 pub fn table3() -> Vec<Table3Row> {
     mnist_layer_geometries()
         .into_iter()
@@ -192,6 +209,7 @@ pub fn table3() -> Vec<Table3Row> {
         .collect()
 }
 
+/// Print [`table3`] in the paper's Table III layout.
 pub fn print_table3(rows: &[Table3Row]) {
     println!("TABLE III: ASAP7 vs TNN7 7nm PPA for the three MNIST TNN prototypes");
     println!(
@@ -212,21 +230,31 @@ pub fn print_table3(rows: &[Table3Row]) {
 // Fig. 12 — synthesis runtime, ASAP7 vs TNN7
 // ---------------------------------------------------------------------
 
+/// One Fig. 12 point: metered synthesis runtime of a UCR column under both
+/// flows.
 #[derive(Clone, Debug)]
 pub struct Fig12Row {
+    /// The dataset's column geometry.
     pub config: UcrConfig,
+    /// Baseline (ASAP7) synthesis wall time.
     pub base_wall: Duration,
+    /// TNN7 synthesis wall time.
     pub tnn7_wall: Duration,
+    /// Gates entering the baseline optimizer.
     pub base_gates: usize,
+    /// Gates entering the TNN7 optimizer (macros preserved, so far fewer).
     pub tnn7_gates: usize,
 }
 
 impl Fig12Row {
+    /// Baseline-over-TNN7 synthesis-runtime ratio (the Fig. 12 y-axis).
     pub fn speedup(&self) -> f64 {
         self.base_wall.as_secs_f64() / self.tnn7_wall.as_secs_f64().max(1e-9)
     }
 }
 
+/// Synthesize the UCR suite under both flows, metering wall time.
+/// `quick` subsamples to every 4th design (CI-speed).
 pub fn fig12(quick: bool) -> Vec<Fig12Row> {
     let suite = ucr_suite();
     suite
@@ -249,6 +277,7 @@ pub fn fig12(quick: bool) -> Vec<Fig12Row> {
         .collect()
 }
 
+/// Print [`fig12`] as the paper's synthesis-runtime table.
 pub fn print_fig12(rows: &[Fig12Row]) {
     println!("Fig. 12: ASAP7 vs TNN7 synthesis runtime (netlist generation)");
     println!(
@@ -275,6 +304,8 @@ pub fn print_fig12(rows: &[Fig12Row]) {
 // Fig. 13 — layout routing density for the 82×2 TwoLeadECG column
 // ---------------------------------------------------------------------
 
+/// Place-and-estimate the 82×2 TwoLeadECG column under both flows
+/// (returns `(ASAP7, TNN7)` layout reports).
 pub fn fig13() -> (LayoutReport, LayoutReport) {
     let cfg = ucr_suite()
         .into_iter()
@@ -290,6 +321,7 @@ pub fn fig13() -> (LayoutReport, LayoutReport) {
     )
 }
 
+/// Print [`fig13`]'s routing-density comparison.
 pub fn print_fig13(base: &LayoutReport, t7: &LayoutReport) {
     println!("Fig. 13: ASAP7 vs TNN7 placement & routing-density, 82x2 TwoLeadECG column");
     for r in [base, t7] {
@@ -312,17 +344,25 @@ pub fn print_fig13(base: &LayoutReport, t7: &LayoutReport) {
 // hot path feeding the activity-based power model)
 // ---------------------------------------------------------------------
 
+/// Scalar vs bit-parallel toggle-collection comparison on one design.
 #[derive(Clone, Debug)]
 pub struct SimEnginesRow {
+    /// Design (netlist) name.
     pub design: String,
+    /// Net count of the simulated netlist.
     pub nets: usize,
     /// Simulated cycles per backend (the bit-parallel engine rounds up to a
     /// whole number of 64-lane passes).
     pub scalar_cycles: u64,
+    /// Lane-cycles simulated by the bit-parallel backend.
     pub word_cycles: u64,
+    /// Scalar-backend wall time.
     pub scalar_wall: Duration,
+    /// Bit-parallel-backend wall time.
     pub word_wall: Duration,
+    /// Mean switching activity α measured by the scalar backend.
     pub scalar_activity: f64,
+    /// Mean switching activity α measured by the bit-parallel backend.
     pub word_activity: f64,
 }
 
@@ -363,6 +403,7 @@ pub fn sim_engines(cycles: u64) -> SimEnginesRow {
     }
 }
 
+/// Print [`sim_engines`]'s backend comparison.
 pub fn print_sim_engines(r: &SimEnginesRow) {
     println!(
         "Simulation engines: gate-sim toggle collection, {} ({} nets)",
@@ -390,6 +431,7 @@ pub fn print_sim_engines(r: &SimEnginesRow) {
     );
 }
 
+/// JSON form of a [`SimEnginesRow`] (the `report sim` artifact schema).
 pub fn sim_engines_json(r: &SimEnginesRow) -> Json {
     Json::obj()
         .set("design", r.design.as_str())
@@ -410,14 +452,22 @@ pub fn sim_engines_json(r: &SimEnginesRow) -> Json {
 // MNIST network epoch and UCR TwoLeadECG online training
 // ---------------------------------------------------------------------
 
+/// Scalar vs batched training-engine comparison on one workload.
 #[derive(Clone, Debug)]
 pub struct TrainEnginesRow {
+    /// Workload label (mnist-4layer / ucr-TwoLeadECG).
     pub workload: String,
+    /// Synapse count of the trained model.
     pub synapses: usize,
+    /// Training samples in the epoch.
     pub samples: usize,
+    /// Worker threads used for the multi-threaded measurement.
     pub threads: usize,
+    /// Scalar golden-model epoch wall time.
     pub scalar_wall: Duration,
+    /// Batched-kernel single-thread epoch wall time.
     pub batched_1t_wall: Duration,
+    /// Batched-kernel multi-thread epoch wall time.
     pub batched_mt_wall: Duration,
 }
 
@@ -557,6 +607,7 @@ pub fn train_engines(quick: bool) -> Vec<TrainEnginesRow> {
     rows
 }
 
+/// Print [`train_engines`]'s engine comparison.
 pub fn print_train_engines(rows: &[TrainEnginesRow]) {
     println!(
         "Training engines: scalar golden model vs batched SoA kernel (tnn::batch; \
@@ -585,6 +636,7 @@ pub fn print_train_engines(rows: &[TrainEnginesRow]) {
     );
 }
 
+/// JSON form of [`train_engines`] rows (the `BENCH_tnn.json` schema).
 pub fn train_engines_json(rows: &[TrainEnginesRow]) -> Json {
     Json::Arr(
         rows.iter()
@@ -619,6 +671,7 @@ pub fn train_engines_json(rows: &[TrainEnginesRow]) -> Json {
 /// One engine's diff against the golden reference on a conformance table.
 #[derive(Clone, Debug)]
 pub struct ConformanceEngineRow {
+    /// Which engine this row diffs against the golden reference.
     pub engine: EngineKind,
     /// Winner mismatches vs golden on the draw-free pre-training inference
     /// pass (identical initial weights — must be 0 for every engine).
@@ -627,9 +680,11 @@ pub struct ConformanceEngineRow {
     pub train_mismatches: usize,
     /// Post-training weight cells differing from golden.
     pub weight_mismatches: usize,
-    /// Post-training inference: instances that fired, and clustering scores.
+    /// Post-training inference: instances that fired.
     pub fired: usize,
+    /// Rand index of post-training winners vs ground truth.
     pub rand_index: f64,
+    /// Cluster purity of post-training winners.
     pub purity: f64,
     /// Whether this engine is required to match golden bit for bit
     /// (gate: yes; batched: training is statistical by design).
@@ -637,6 +692,7 @@ pub struct ConformanceEngineRow {
     /// Golden reference clustering quality on the same workload (the bound
     /// the statistical rows are held to).
     pub ref_purity: f64,
+    /// Instances the golden reference fired on.
     pub ref_fired: usize,
 }
 
@@ -664,6 +720,7 @@ impl ConformanceEngineRow {
         }
     }
 
+    /// Human-readable pass/fail label for the conformance table.
     pub fn verdict(&self) -> &'static str {
         match (self.ok(), self.bit_exact) {
             (true, true) => "OK (bit-exact)",
@@ -676,11 +733,17 @@ impl ConformanceEngineRow {
 /// One conformance table: one geometry, all three engines.
 #[derive(Clone, Debug)]
 pub struct ConformanceReport {
+    /// Dataset label (real UCR name or synthetic conformance shape).
     pub dataset: String,
+    /// Synapse lines per neuron.
     pub p: usize,
+    /// Neurons per column.
     pub q: usize,
+    /// Gamma items in the workload.
     pub items: usize,
+    /// Training epochs run.
     pub epochs: usize,
+    /// Workload seed.
     pub seed: u64,
     /// Rows in engine order golden (reference), batched, gate.
     pub rows: Vec<ConformanceEngineRow>,
@@ -690,6 +753,7 @@ pub struct ConformanceReport {
 }
 
 impl ConformanceReport {
+    /// Did every engine meet its conformance requirement on this table?
     pub fn all_agree(&self) -> bool {
         self.word_batch_mismatches == 0 && self.rows.iter().all(|r| r.ok())
     }
@@ -865,6 +929,7 @@ pub fn conformance(quick: bool) -> crate::Result<Vec<ConformanceReport>> {
     Ok(reports)
 }
 
+/// Print the [`conformance`] tables with per-engine verdicts.
 pub fn print_conformance(reports: &[ConformanceReport]) {
     println!(
         "Conformance: golden vs batched vs gate-level (TNN7 macro netlist) on seeded UCR workloads"
@@ -907,6 +972,7 @@ pub fn print_conformance(reports: &[ConformanceReport]) {
     }
 }
 
+/// JSON form of [`conformance`] reports.
 pub fn conformance_json(reports: &[ConformanceReport]) -> Json {
     Json::Arr(
         reports
@@ -958,6 +1024,8 @@ fn ppa_json(r: &PpaReport) -> Json {
         .set("macros", r.macro_cells)
 }
 
+/// JSON form of [`fig11`] rows (written to `target/reports/fig11.json`
+/// by `benches/fig11_ucr_ppa.rs`).
 pub fn fig11_json(rows: &[Fig11Row]) -> Json {
     Json::Arr(
         rows.iter()
@@ -972,6 +1040,8 @@ pub fn fig11_json(rows: &[Fig11Row]) -> Json {
     )
 }
 
+/// JSON form of [`fig12`] rows (written to `target/reports/fig12.json`
+/// by `benches/fig12_synth_runtime.rs`).
 pub fn fig12_json(rows: &[Fig12Row]) -> Json {
     Json::Arr(
         rows.iter()

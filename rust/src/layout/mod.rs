@@ -17,18 +17,25 @@ use std::collections::HashMap;
 /// Placement + routing-estimate results.
 #[derive(Clone, Debug)]
 pub struct LayoutReport {
+    /// Design (netlist) name.
     pub design: String,
+    /// Library the design was mapped to.
     pub library: &'static str,
+    /// Die width, µm.
     pub die_w_um: f64,
+    /// Die height, µm.
     pub die_h_um: f64,
+    /// Standard-cell rows.
     pub rows: usize,
+    /// Placed objects (cells + macros).
     pub placed_cells: usize,
     /// Total estimated wirelength (HPWL sum), µm.
     pub total_wl_um: f64,
     /// Wirelength per unit die area, µm/µm² — the routing-density metric.
     pub wl_density: f64,
-    /// Mean and peak routing demand per congestion bin (wl µm per bin).
+    /// Mean routing demand per congestion bin (wl µm per bin).
     pub avg_congestion: f64,
+    /// Peak routing demand per congestion bin (wl µm per bin).
     pub peak_congestion: f64,
 }
 

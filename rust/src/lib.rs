@@ -42,11 +42,24 @@
 //!     estimates, EDP).
 //!   - [`layout`]: row placement and routing-congestion estimation (Fig. 13).
 //!
-//! [`harness`] regenerates every table and figure of the paper's evaluation;
-//! see `DESIGN.md` §6 for the experiment index and `EXPERIMENTS.md` for
-//! paper-vs-measured results.
+//! [`harness`] regenerates every table and figure of the paper's evaluation,
+//! and [`sweep`] generalizes them to declarative design-space exploration
+//! campaigns — a grid over (geometry, θ policy, flow, engine, seed) executed
+//! in parallel behind a resumable content-addressed result cache, reported
+//! as Pareto frontiers.
+//!
+//! Two documents complement this API reference:
+//!
+//! * `docs/ARCHITECTURE.md` — module map, the stimulus → engines → toggles →
+//!   α → PPA dataflow, and the **normative determinism contract** every
+//!   parallel pipeline in this crate follows;
+//! * `README.md` §"Reproduction matrix" — one table mapping each paper
+//!   artifact (Table II/III, Fig. 11/12/13) to the exact command that
+//!   regenerates it and the file it writes.
+#![warn(missing_docs)]
 
 pub mod cells;
+pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod gates;
@@ -56,6 +69,7 @@ pub mod metrics;
 pub mod mnist;
 pub mod ppa;
 pub mod runtime;
+pub mod sweep;
 pub mod synth;
 pub mod tnn;
 pub mod ucr;

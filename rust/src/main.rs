@@ -1,19 +1,17 @@
 //! `tnn7` — leader binary / CLI.
 //!
-//! Subcommands:
-//!   report table2|fig11|table3|fig12|fig13|sim|train|conformance|headline [--quick]
-//!   run ucr   [--dataset NAME] [--engine xla|golden|batched|gate] [key=value …]
-//!   run mnist [--layers N] [--engine golden|batched] [key=value …]
-//!   synth --p P --q Q [--flow asap7|tnn7]
-//!   serve [key=value …]         (streaming demo over the XLA runtime)
-//!   selftest                    (golden vs gate-level vs XLA cross-check)
+//! The subcommand surface (synopses, flags, help text) is defined once in
+//! `tnn7::cli::COMMANDS` and rendered by `tnn7::cli::usage`; this file
+//! only dispatches. Run `tnn7 help <command>` for flag-by-flag help.
 
+use tnn7::cli::{self, flag, help_for, opt, overrides, usage};
 use tnn7::config::{EngineKind, RunConfig};
 use tnn7::coordinator::{encode_ucr, run_stream, Engine};
 use tnn7::gates::column_design::{build_column, BrvSource};
 use tnn7::harness;
 use tnn7::runtime::XlaRuntime;
-use tnn7::synth::flow::{synthesize, Flow};
+use tnn7::sweep::{self, SweepSpec};
+use tnn7::synth::flow::Flow;
 use tnn7::tnn::params::TnnParams;
 use tnn7::ucr;
 use tnn7::util::Rng64;
@@ -26,41 +24,31 @@ fn main() {
     }
 }
 
-fn flag(args: &[String], name: &str) -> bool {
-    args.iter().any(|a| a == name)
-}
-
-fn opt<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
-    args.iter()
-        .position(|a| a == name)
-        .and_then(|i| args.get(i + 1))
-        .map(|s| s.as_str())
-}
-
-fn overrides(args: &[String]) -> Vec<String> {
-    args.iter()
-        .filter(|a| a.contains('=') && !a.starts_with("--"))
-        .cloned()
-        .collect()
-}
-
 fn dispatch(args: &[String]) -> tnn7::Result<()> {
-    match args.first().map(|s| s.as_str()) {
+    let cmd = args.first().map(|s| s.as_str());
+    // `tnn7 <cmd> --help` prints the same text as `tnn7 help <cmd>`.
+    if let (Some(c), true) = (cmd, flag(args, "--help")) {
+        if let Some(h) = help_for(c) {
+            println!("{h}");
+            return Ok(());
+        }
+    }
+    match cmd {
         Some("report") => report(args),
         Some("run") => run(args),
+        Some("sweep") => sweep_cmd(args),
         Some("synth") => synth_cmd(args),
         Some("serve") => serve(args),
         Some("selftest") => selftest(),
+        Some("help") => {
+            match args.get(1).map(|s| s.as_str()).and_then(help_for) {
+                Some(h) => println!("{h}"),
+                None => println!("{}", usage()),
+            }
+            Ok(())
+        }
         _ => {
-            eprintln!(
-                "usage: tnn7 <report|run|synth|serve|selftest> …\n\
-                 report table2|fig11|table3|fig12|fig13|sim|train|conformance|headline [--quick]\n\
-                 run ucr [--dataset NAME] [--engine xla|golden|batched|gate] [k=v …]\n\
-                 run mnist [--layers N] [--engine golden|batched] [k=v …]\n\
-                 synth --p P --q Q [--flow asap7|tnn7]\n\
-                 serve [k=v …]\n\
-                 selftest"
-            );
+            eprintln!("{}", usage());
             Ok(())
         }
     }
@@ -107,7 +95,7 @@ fn report(args: &[String]) -> tnn7::Result<()> {
                 largest.tnn7.power_nw / 1000.0
             );
         }
-        other => anyhow::bail!("unknown report {other:?}"),
+        other => anyhow::bail!("unknown report {other:?}\n{}", cli::help_for("report").unwrap()),
     }
     Ok(())
 }
@@ -176,7 +164,7 @@ fn run(args: &[String]) -> tnn7::Result<()> {
             let layers: usize = opt(args, "--layers").unwrap_or("3").parse()?;
             run_mnist(layers, &cfg)?;
         }
-        other => anyhow::bail!("unknown run target {other:?}"),
+        other => anyhow::bail!("unknown run target {other:?}\n{}", cli::help_for("run").unwrap()),
     }
     Ok(())
 }
@@ -238,17 +226,35 @@ fn run_mnist(layers: usize, cfg: &RunConfig) -> tnn7::Result<()> {
     Ok(())
 }
 
+fn sweep_cmd(args: &[String]) -> tnn7::Result<()> {
+    // Spec resolution order: file (first non-flag, non-override argument
+    // after "sweep") < built-in default/quick grid; then key=value
+    // overrides on top. The default cache location is shared with
+    // RunConfig's `cache_dir` key.
+    let spec_file = args[1..]
+        .iter()
+        .find(|a| !a.starts_with("--") && !a.contains('='));
+    let mut spec = match spec_file {
+        Some(path) => SweepSpec::load(path)?,
+        None if flag(args, "--quick") => SweepSpec::quick(),
+        None => SweepSpec::default(),
+    };
+    spec.apply_overrides(&overrides(args))?;
+    let use_cache = !flag(args, "--no-cache");
+    let outcome = sweep::run_sweep(&spec, use_cache)?;
+    sweep::print_summary(&outcome);
+    let (tsv, json) = sweep::write_reports(&outcome)?;
+    println!("wrote {} and {}", tsv.display(), json.display());
+    Ok(())
+}
+
 fn synth_cmd(args: &[String]) -> tnn7::Result<()> {
     let p: usize = opt(args, "--p").unwrap_or("82").parse()?;
     let q: usize = opt(args, "--q").unwrap_or("2").parse()?;
-    let flow = match opt(args, "--flow").unwrap_or("tnn7") {
-        "asap7" => Flow::Baseline,
-        "tnn7" => Flow::Tnn7,
-        other => anyhow::bail!("unknown flow {other}"),
-    };
+    let flow = Flow::parse(opt(args, "--flow").unwrap_or("tnn7"))?;
     let theta = (p as u32 * 7) / 4;
     let d = build_column(p, q, theta, BrvSource::Lfsr);
-    let out = synthesize(&d.netlist, flow);
+    let out = flow.run(&d.netlist);
     let lib = flow.library();
     let rep = tnn7::ppa::report::analyze(&out.mapped, &lib, harness::GAMMA_CYCLES);
     println!(

@@ -9,12 +9,15 @@ use std::time::Duration;
 pub struct Counter(AtomicU64);
 
 impl Counter {
+    /// Increment by one.
     pub fn inc(&self) {
         self.0.fetch_add(1, Ordering::Relaxed);
     }
+    /// Increment by `n`.
     pub fn add(&self, n: u64) {
         self.0.fetch_add(n, Ordering::Relaxed);
     }
+    /// Current value.
     pub fn get(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
     }
@@ -41,6 +44,7 @@ impl Default for LatencyHistogram {
 }
 
 impl LatencyHistogram {
+    /// Record one latency observation.
     pub fn observe(&self, d: Duration) {
         let us = d.as_micros() as u64;
         let k = (64 - us.max(1).leading_zeros() as u64 - 1).min(23) as usize;
@@ -50,10 +54,12 @@ impl LatencyHistogram {
         self.max_us.fetch_max(us, Ordering::Relaxed);
     }
 
+    /// Number of recorded observations.
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Mean latency in µs (0 when empty).
     pub fn mean_us(&self) -> f64 {
         let c = self.count();
         if c == 0 {
@@ -63,6 +69,7 @@ impl LatencyHistogram {
         }
     }
 
+    /// Maximum observed latency in µs.
     pub fn max_us(&self) -> u64 {
         self.max_us.load(Ordering::Relaxed)
     }
@@ -88,14 +95,20 @@ impl LatencyHistogram {
 /// Coordinator metrics bundle.
 #[derive(Debug, Default)]
 pub struct StreamMetrics {
+    /// Items the producer pushed into the channel.
     pub enqueued: Counter,
+    /// Items the consumer finished stepping.
     pub processed: Counter,
+    /// Items dropped (reserved; the bounded channel blocks instead).
     pub dropped: Counter,
+    /// Producer stalls caused by a full channel (backpressure events).
     pub backpressure_stalls: Counter,
+    /// Per-item engine step latency.
     pub step_latency: LatencyHistogram,
 }
 
 impl StreamMetrics {
+    /// One-line run summary (throughput, stalls, latency profile).
     pub fn summary(&self, wall: Duration) -> String {
         let proc = self.processed.get();
         let thr = proc as f64 / wall.as_secs_f64().max(1e-9);

@@ -4,7 +4,7 @@
 //! perturbed per sample: sub-pixel translation, rotation, stroke-width
 //! jitter and pixel noise. The corpus is linearly separable enough to
 //! expose the paper's error-rate ordering (deeper TNNs → lower error) while
-//! remaining honest about what it is (documented in EXPERIMENTS.md).
+//! remaining honest about what it is.
 
 use crate::util::Rng64;
 
@@ -153,7 +153,9 @@ fn splat(img: &mut [f64], px: f64, py: f64, width: f64) {
 /// A labelled corpus of rendered digits.
 #[derive(Clone, Debug)]
 pub struct DigitCorpus {
+    /// Rendered images, row-major SIDE×SIDE intensities in [0,1].
     pub images: Vec<Vec<f64>>,
+    /// Digit label per image.
     pub labels: Vec<usize>,
 }
 
@@ -177,10 +179,12 @@ impl DigitCorpus {
         }
     }
 
+    /// Number of samples.
     pub fn len(&self) -> usize {
         self.images.len()
     }
 
+    /// Is the corpus empty?
     pub fn is_empty(&self) -> bool {
         self.images.is_empty()
     }

@@ -14,15 +14,19 @@ use crate::tnn::{ColumnLayer, ReceptiveField, TnnNetwork, TnnParams};
 /// One Table III row: name, layer geometries, paper's reported error rate.
 #[derive(Clone, Debug)]
 pub struct MnistDesign {
+    /// Prototype name (1/3/4-layer).
     pub name: &'static str,
+    /// Per-layer geometries used for synaptic-count scaling.
     pub layers: Vec<LayerGeometry>,
+    /// MNIST error rate the paper reports, %.
     pub paper_error_pct: f64,
+    /// Total synapse count the paper reports.
     pub paper_synapses: usize,
 }
 
 /// The three Table III designs. Layer geometries are chosen to land the
 /// paper's exact total synapse counts with MNIST-plausible shapes
-/// (28×28 on/off input → patchy column layers; see DESIGN.md §5).
+/// (28×28 on/off input → patchy column layers).
 pub fn mnist_layer_geometries() -> Vec<MnistDesign> {
     vec![
         MnistDesign {

@@ -15,7 +15,9 @@ use crate::synth::map::MappedNetlist;
 /// Per-net (P, α).
 #[derive(Clone, Debug)]
 pub struct Activity {
+    /// Per-net static signal probability P(high).
     pub prob: Vec<f64>,
+    /// Per-net transition density (toggles per aclk cycle).
     pub alpha: Vec<f64>,
 }
 
@@ -26,8 +28,9 @@ pub struct ActivityPriors {
     pub input_prob: f64,
     /// Transition density of primary inputs (toggles/cycle).
     pub input_alpha: f64,
-    /// Signal probability / transition density for hard-macro output pins.
+    /// Signal probability for hard-macro output pins.
     pub macro_prob: f64,
+    /// Transition density for hard-macro output pins.
     pub macro_alpha: f64,
 }
 
@@ -109,6 +112,7 @@ pub struct MeasuredActivity {
     /// Simulated cycles behind the estimate (lane-cycles for the
     /// bit-parallel backend).
     pub cycles: u64,
+    /// Simulation backend that produced the measurement.
     pub backend: SimBackend,
 }
 

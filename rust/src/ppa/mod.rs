@@ -32,8 +32,7 @@ pub use scale::{scale_network, NetworkPpa};
 pub const ACLK_HZ: f64 = 100_000.0;
 
 /// Net-area per pin (µm²) — routing overhead proxy calibrated so the
-/// largest UCR column lands in the paper's reported absolute-area regime
-/// (EXPERIMENTS.md §Calibration).
+/// largest UCR column lands in the paper's reported absolute-area regime.
 pub const NET_AREA_PER_PIN_UM2: f64 = 0.045;
 
 /// Clock-tree energy per sequential element per aclk cycle (fJ).

@@ -9,17 +9,26 @@ use crate::synth::map::MappedNetlist;
 /// Post-synthesis PPA of one design (single column or flat module).
 #[derive(Clone, Debug)]
 pub struct PpaReport {
+    /// Design (netlist) name.
     pub design: String,
+    /// Library the design was analyzed under.
     pub library: &'static str,
     // --- area ---
+    /// Cell placement area, µm².
     pub cell_area_um2: f64,
+    /// Routing/net area estimate (per-pin model), µm².
     pub net_area_um2: f64,
+    /// Total area (cell + net), µm².
     pub area_um2: f64,
     // --- power (at `aclk_hz`) ---
+    /// Static leakage, nW.
     pub leakage_nw: f64,
+    /// Activity-dependent dynamic power, nW.
     pub dynamic_nw: f64,
+    /// Total power (leakage + dynamic), nW.
     pub power_nw: f64,
     // --- timing ---
+    /// Longest register-to-register combinational path, ps.
     pub critical_path_ps: f64,
     /// Computation time: critical path × unit cycles per gamma ([6]'s
     /// performance metric; the paper's "Comp. Time").
@@ -30,8 +39,11 @@ pub struct PpaReport {
     /// Energy-delay product, fJ·ns.
     pub edp_fj_ns: f64,
     // --- inventory ---
+    /// Mapped standard-cell count.
     pub std_cells: usize,
+    /// Preserved hard-macro count.
     pub macro_cells: usize,
+    /// Sequential cell count (drives clock-tree energy).
     pub seq_cells: usize,
 }
 
@@ -162,6 +174,7 @@ impl PpaReport {
         )
     }
 
+    /// One-line summary (library, inventory, area/power/time/EDP).
     pub fn row(&self) -> String {
         format!(
             "{:<18} {:>8} cells {:>6} macros | {:>9.2} µm² | {:>9.3} µW | {:>8.2} ns | EDP {:>10.1}",
@@ -174,6 +187,40 @@ impl PpaReport {
             self.edp_fj_ns,
         )
     }
+}
+
+/// Indices of the Pareto-optimal points of a 2-D **minimization** trade-off
+/// (e.g. power vs clustering error): a point survives iff no other point is
+/// at least as good on both axes and strictly better on one. Duplicate
+/// coordinates all survive. The returned indices are sorted by `(x, y)`
+/// ascending, so walking them traces the frontier curve left to right —
+/// the shape the design-space sweep reports ([`crate::sweep`]).
+pub fn pareto_front(points: &[(f64, f64)]) -> Vec<usize> {
+    // NaN/Inf points never dominate and never survive — and they must be
+    // dropped BEFORE sorting: a comparator that maps incomparable pairs to
+    // `Equal` is inconsistent and can scramble the whole order.
+    let mut idx: Vec<usize> = (0..points.len())
+        .filter(|&i| points[i].0.is_finite() && points[i].1.is_finite())
+        .collect();
+    // Sort by x then y; ties keep index order (stable sort) so the result
+    // is deterministic for duplicated coordinates.
+    idx.sort_by(|&a, &b| {
+        points[a]
+            .partial_cmp(&points[b])
+            .expect("finite points are totally ordered")
+    });
+    let mut front = Vec::new();
+    let mut best_y = f64::INFINITY;
+    let mut last: Option<(f64, f64)> = None;
+    for &i in &idx {
+        let (x, y) = points[i];
+        if Some((x, y)) == last || y < best_y {
+            front.push(i);
+            best_y = best_y.min(y);
+            last = Some((x, y));
+        }
+    }
+    front
 }
 
 #[cfg(test)]
@@ -227,6 +274,18 @@ mod tests {
         assert_eq!(r_meas.area_um2, r_prob.area_um2);
         assert_eq!(r_meas.leakage_nw, r_prob.leakage_nw);
         assert_eq!(r_meas.critical_path_ps, r_prob.critical_path_ps);
+    }
+
+    #[test]
+    fn pareto_front_keeps_only_nondominated_points() {
+        // Index:            0         1         2         3         4
+        let pts = [(1.0, 9.0), (2.0, 5.0), (3.0, 6.0), (4.0, 1.0), (2.0, 5.0)];
+        // 2 is dominated by 1; 4 duplicates 1 and survives with it.
+        assert_eq!(pareto_front(&pts), vec![0, 1, 4, 3]);
+        assert_eq!(pareto_front(&[]), Vec::<usize>::new());
+        // A single point is trivially on the frontier; NaN points drop out.
+        assert_eq!(pareto_front(&[(1.0, 1.0)]), vec![0]);
+        assert_eq!(pareto_front(&[(f64::NAN, 1.0), (2.0, 2.0)]), vec![1]);
     }
 
     #[test]

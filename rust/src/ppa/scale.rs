@@ -24,6 +24,7 @@ pub struct LayerGeometry {
 }
 
 impl LayerGeometry {
+    /// Total synapse count of the layer (p·q per column × columns).
     pub fn synapses(&self) -> usize {
         self.p * self.q * self.columns
     }
@@ -32,11 +33,17 @@ impl LayerGeometry {
 /// Network-level scaled PPA.
 #[derive(Clone, Debug)]
 pub struct NetworkPpa {
+    /// Flow the reference columns were synthesized under.
     pub flow: Flow,
+    /// Total network synapse count (the scaling variable).
     pub synapse_count: usize,
+    /// Scaled network area, mm².
     pub area_mm2: f64,
+    /// Scaled network power, mW.
     pub power_mw: f64,
+    /// Per-input computation time (layer critical paths summed), ns.
     pub comp_time_ns: f64,
+    /// Network energy-delay product.
     pub edp: f64,
     /// The per-layer reference reports the scaling was derived from.
     pub layer_refs: Vec<PpaReport>,

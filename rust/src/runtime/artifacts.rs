@@ -6,27 +6,42 @@ use std::path::{Path, PathBuf};
 /// Metadata of one compiled artifact (one section of the manifest).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ArtifactMeta {
+    /// Artifact name (the manifest section header).
     pub name: String,
+    /// Path of the compiled HLO text, relative to the manifest dir.
     pub path: PathBuf,
     /// Entry-point kind: "step" | "infer" | "step_batched" | "infer_batched".
     pub kind: String,
+    /// Synapse lines per neuron.
     pub p: usize,
+    /// Neurons per column.
     pub q: usize,
+    /// Neuron firing threshold baked into the artifact.
     pub theta: u32,
+    /// Batch dimension (1 = unbatched).
     pub batch: usize,
+    /// Unit cycles per gamma cycle.
     pub gamma_cycles: u32,
+    /// Synaptic weight precision, bits.
     pub weight_bits: u8,
+    /// STDP capture probability.
     pub mu_capture: f64,
+    /// STDP minus probability.
     pub mu_minus: f64,
+    /// STDP search probability.
     pub mu_search: f64,
+    /// STDP backoff probability.
     pub mu_backoff: f64,
+    /// Whether bimodal weight stabilization is applied.
     pub stabilize: bool,
 }
 
 /// The parsed manifest.
 #[derive(Clone, Debug, Default)]
 pub struct ArtifactManifest {
+    /// Directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// All artifact entries, in name order.
     pub artifacts: Vec<ArtifactMeta>,
 }
 

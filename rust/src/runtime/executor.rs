@@ -9,6 +9,7 @@ use std::path::Path;
 /// Shared PJRT CPU client + compiled executables, keyed by artifact name.
 pub struct XlaRuntime {
     client: xla::PjRtClient,
+    /// The parsed artifact manifest the executables were compiled from.
     pub manifest: ArtifactManifest,
     executables: HashMap<String, xla::PjRtLoadedExecutable>,
 }
@@ -37,10 +38,12 @@ impl XlaRuntime {
         })
     }
 
+    /// PJRT platform name (e.g. `cpu`).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
+    /// Names of all compiled artifacts, sorted.
     pub fn artifact_names(&self) -> Vec<&str> {
         let mut v: Vec<&str> = self.executables.keys().map(|s| s.as_str()).collect();
         v.sort();
@@ -75,6 +78,7 @@ impl XlaRuntime {
 
 /// One bound column entry point.
 pub struct ColumnExecutable<'a> {
+    /// The artifact's manifest entry (geometry, θ, STDP parameters).
     pub meta: ArtifactMeta,
     exe: &'a xla::PjRtLoadedExecutable,
 }

@@ -1,0 +1,193 @@
+//! Content-addressed on-disk cache for sweep point results.
+//!
+//! Every grid point is keyed by a stable 64-bit FNV-1a hash of its
+//! [`SweepPoint::canonical`](super::spec::SweepPoint::canonical) string
+//! plus [`CACHE_VERSION`]; the result lives in `<cache_dir>/<key>.kv` in
+//! the crate's usual key-value format. A killed sweep therefore resumes
+//! instantly — re-running a spec re-reads every finished point and
+//! recomputes only the missing (or version-invalidated) ones. Entries are
+//! written atomically (temp file + rename), so a crash mid-write can never
+//! leave a half-entry that later parses.
+//!
+//! Deterministic fields (PPA, clustering quality, synthesis gate counts)
+//! round-trip exactly: they are serialized with Rust's shortest-roundtrip
+//! float formatting, so a merged report built from cached points is
+//! byte-identical to one built from a cold run. Wall-clock fields
+//! (`synth_ms`, `train_ms`) are cached as measured on the run that
+//! computed the point.
+
+use super::exec::PointResult;
+use super::spec::SweepPoint;
+use crate::util::kv::KvDoc;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide sequence for temp-file names: two writers storing the same
+/// key concurrently (or two processes sharing a cache directory) must
+/// never collide on the temp path, or the loser's rename fails spuriously.
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Cache format/semantics version. Bump whenever a change anywhere in the
+/// measurement pipeline (engines, synthesis, PPA model, workload
+/// generation, draw disciplines) invalidates previously-cached results —
+/// every old entry then misses and is recomputed.
+pub const CACHE_VERSION: &str = "tnn7-sweep-v1";
+
+/// Stable 64-bit FNV-1a hash (the cache's content address). Frozen: keys
+/// must not change across platforms or releases, or warm caches would be
+/// silently abandoned.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// On-disk cache handle (a directory of `<key>.kv` entries).
+#[derive(Clone, Debug)]
+pub struct PointCache {
+    dir: PathBuf,
+}
+
+impl PointCache {
+    /// Open (and create if needed) a cache directory.
+    pub fn open(dir: impl AsRef<Path>) -> crate::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)?;
+        Ok(PointCache { dir })
+    }
+
+    /// The content address of a point under [`CACHE_VERSION`].
+    pub fn key(point: &SweepPoint) -> String {
+        let canon = format!("{};{}", CACHE_VERSION, point.canonical());
+        format!("{:016x}", fnv1a64(canon.as_bytes()))
+    }
+
+    /// Path of a point's cache entry.
+    pub fn path(&self, point: &SweepPoint) -> PathBuf {
+        self.dir.join(format!("{}.kv", Self::key(point)))
+    }
+
+    /// Load a point's cached result, if present and parseable. A corrupt
+    /// or stale-schema entry is treated as a miss (the point recomputes
+    /// and overwrites it), never as an error.
+    pub fn load(&self, point: &SweepPoint) -> Option<PointResult> {
+        let doc = KvDoc::load(self.path(point)).ok()?;
+        // Reject entries whose canonical string does not match exactly —
+        // a hash collision or a hand-edited file must not alias a result.
+        if doc.get("point") != Some(point.canonical().as_str()) {
+            return None;
+        }
+        PointResult::from_kv(point, &doc)
+    }
+
+    /// Atomically persist a point's result (temp file + rename).
+    pub fn store(&self, point: &SweepPoint, result: &PointResult) -> crate::Result<()> {
+        let mut doc = result.to_kv();
+        doc.set("version", CACHE_VERSION);
+        doc.set("point", point.canonical());
+        let final_path = self.path(point);
+        let tmp = self.dir.join(format!(
+            "{}.tmp.{}.{}",
+            Self::key(point),
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed),
+        ));
+        std::fs::write(&tmp, doc.to_text())?;
+        std::fs::rename(&tmp, &final_path)?;
+        Ok(())
+    }
+
+    /// Remove a point's cache entry (returns whether one existed) —
+    /// targeted invalidation, used by the resumability tests and by
+    /// operators who want to force one point to re-measure.
+    pub fn invalidate(&self, point: &SweepPoint) -> bool {
+        std::fs::remove_file(self.path(point)).is_ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineKind;
+    use crate::sweep::spec::ThetaPolicy;
+    use crate::synth::flow::Flow;
+
+    fn point() -> SweepPoint {
+        SweepPoint {
+            p: 8,
+            q: 2,
+            theta: ThetaPolicy::Default,
+            flow: Flow::Tnn7,
+            engine: EngineKind::Golden,
+            seed: 7,
+            per_cluster: 4,
+            epochs: 1,
+        }
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("tnn7_cache_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn fnv_is_frozen() {
+        // Golden values: the empty string hashes to the FNV offset basis,
+        // and "a" to the reference FNV-1a value. These pin the algorithm.
+        assert_eq!(fnv1a64(b""), 0xCBF2_9CE4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xAF63_DC4C_8601_EC8C);
+        assert_ne!(fnv1a64(b"ab"), fnv1a64(b"ba"));
+    }
+
+    #[test]
+    fn key_depends_on_every_point_field_and_version() {
+        let base = point();
+        let k0 = PointCache::key(&base);
+        let mut variants = Vec::new();
+        variants.push(SweepPoint { p: 9, ..base.clone() });
+        variants.push(SweepPoint { q: 3, ..base.clone() });
+        variants.push(SweepPoint { theta: ThetaPolicy::Fixed(5), ..base.clone() });
+        variants.push(SweepPoint { flow: Flow::Baseline, ..base.clone() });
+        variants.push(SweepPoint { engine: EngineKind::Batched, ..base.clone() });
+        variants.push(SweepPoint { seed: 8, ..base.clone() });
+        variants.push(SweepPoint { per_cluster: 5, ..base.clone() });
+        variants.push(SweepPoint { epochs: 2, ..base.clone() });
+        for v in variants {
+            assert_ne!(PointCache::key(&v), k0, "key must separate {v:?}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_store_load_invalidate() {
+        let dir = tmpdir("roundtrip");
+        let cache = PointCache::open(&dir).unwrap();
+        let p = point();
+        assert!(cache.load(&p).is_none(), "cold cache misses");
+        let r = PointResult::synthetic_for_tests();
+        cache.store(&p, &r).unwrap();
+        let got = cache.load(&p).expect("warm cache hits");
+        assert_eq!(got, r, "deterministic fields round-trip exactly");
+        assert!(cache.invalidate(&p));
+        assert!(cache.load(&p).is_none(), "invalidated point misses");
+        assert!(!cache.invalidate(&p), "second invalidate is a no-op");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn mismatched_canonical_string_is_a_miss() {
+        let dir = tmpdir("mismatch");
+        let cache = PointCache::open(&dir).unwrap();
+        let p = point();
+        cache.store(&p, &PointResult::synthetic_for_tests()).unwrap();
+        // Corrupt the stored canonical string: the entry must stop hitting.
+        let path = cache.path(&p);
+        let text = std::fs::read_to_string(&path).unwrap().replace("seed=7", "seed=8");
+        std::fs::write(&path, text).unwrap();
+        assert!(cache.load(&p).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,415 @@
+//! Sweep executor: shards grid points across worker threads, with warm
+//! results served from the [`PointCache`](super::cache::PointCache).
+//!
+//! # Determinism contract
+//!
+//! Every deterministic field of a [`PointResult`] is a pure function of
+//! the [`SweepPoint`] alone — never of grid position, worker assignment,
+//! or thread count. Per-point randomness derives from the point's own
+//! seed through the frozen [`Rng64::split_stream`] discipline (the same
+//! contract `tnn::batch` shards training by):
+//!
+//! * initial weights draw from `Rng64::seed_from_u64(seed).split_stream(0)`;
+//! * training epoch `e` streams with seed
+//!   `Rng64::seed_from_u64(seed).split_stream(1 + e).next_u64()`.
+//!
+//! Sharding therefore cannot change results: a sweep run with 1, 2 or 8
+//! workers produces bit-identical deterministic fields, and a point cached
+//! by one grid is valid in any other grid that contains the same point.
+//! Only the wall-clock fields (`synth_ms`, `train_ms`) vary run to run.
+
+use super::cache::PointCache;
+use super::spec::{SweepPoint, SweepSpec, ThetaPolicy};
+use crate::coordinator::{encode_ucr, run_stream, score_winners, volley_density};
+use crate::gates::column_design::{build_column, BrvSource};
+use crate::ppa::report::analyze;
+use crate::synth::flow::synthesize;
+use crate::tnn::params::TnnParams;
+use crate::ucr::UcrConfig;
+use crate::util::kv::KvDoc;
+use crate::util::Rng64;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Everything measured at one grid point. All fields except `synth_ms` /
+/// `train_ms` are deterministic (see the module docs) and round-trip
+/// exactly through the cache.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PointResult {
+    /// Resolved neuron threshold (after applying the point's θ policy).
+    pub theta: u32,
+    // --- post-synthesis PPA (flow's library, harness::GAMMA_CYCLES) ---
+    /// Total area (cells + net estimate), µm².
+    pub area_um2: f64,
+    /// Total power at the standard operating point, nW.
+    pub power_nw: f64,
+    /// Leakage component of `power_nw`, nW.
+    pub leakage_nw: f64,
+    /// Computation time per gamma (critical path × gamma cycles), ns.
+    pub comp_time_ns: f64,
+    /// Energy-delay product, fJ·ns.
+    pub edp_fj_ns: f64,
+    // --- synthesis shape (deterministic) ---
+    /// Gates entering the optimizer (the Fig. 12 search-space size).
+    pub gates_in: usize,
+    /// Standard cells in the mapped netlist.
+    pub cells_out: usize,
+    /// Preserved hard-macro instances in the mapped netlist.
+    pub macros_out: usize,
+    // --- workload quality ---
+    /// Gamma items in the generated workload.
+    pub items: usize,
+    /// Items that fired on the post-training inference pass.
+    pub fired: usize,
+    /// Rand index of post-training winners vs ground-truth clusters.
+    pub rand_index: f64,
+    /// Cluster purity of post-training winners.
+    pub purity: f64,
+    // --- wall clock (nondeterministic; cached as measured) ---
+    /// Metered synthesis wall time (the Fig. 12 quantity), ms.
+    pub synth_ms: f64,
+    /// Training + scoring wall time, ms.
+    pub train_ms: f64,
+}
+
+impl PointResult {
+    /// Clustering error in percent (`(1 − purity) × 100`) — the y-axis the
+    /// Pareto frontiers trade PPA against.
+    pub fn error_pct(&self) -> f64 {
+        (1.0 - self.purity) * 100.0
+    }
+
+    /// Serialize to the cache entry format (field per key).
+    pub fn to_kv(&self) -> KvDoc {
+        let mut d = KvDoc::default();
+        d.set("theta", self.theta);
+        d.set("area_um2", self.area_um2);
+        d.set("power_nw", self.power_nw);
+        d.set("leakage_nw", self.leakage_nw);
+        d.set("comp_time_ns", self.comp_time_ns);
+        d.set("edp_fj_ns", self.edp_fj_ns);
+        d.set("gates_in", self.gates_in);
+        d.set("cells_out", self.cells_out);
+        d.set("macros_out", self.macros_out);
+        d.set("items", self.items);
+        d.set("fired", self.fired);
+        d.set("rand_index", self.rand_index);
+        d.set("purity", self.purity);
+        d.set("synth_ms", self.synth_ms);
+        d.set("train_ms", self.train_ms);
+        d
+    }
+
+    /// Deserialize a cache entry; `None` (a cache miss) on any missing or
+    /// malformed field. The `point` argument is unused today but keeps the
+    /// signature ready for per-point schema evolution.
+    pub fn from_kv(_point: &SweepPoint, doc: &KvDoc) -> Option<PointResult> {
+        let f = |k: &str| doc.get_f64(k).ok().flatten();
+        let u = |k: &str| doc.get_usize(k).ok().flatten();
+        Some(PointResult {
+            theta: doc.get_u64("theta").ok().flatten()? as u32,
+            area_um2: f("area_um2")?,
+            power_nw: f("power_nw")?,
+            leakage_nw: f("leakage_nw")?,
+            comp_time_ns: f("comp_time_ns")?,
+            edp_fj_ns: f("edp_fj_ns")?,
+            gates_in: u("gates_in")?,
+            cells_out: u("cells_out")?,
+            macros_out: u("macros_out")?,
+            items: u("items")?,
+            fired: u("fired")?,
+            rand_index: f("rand_index")?,
+            purity: f("purity")?,
+            synth_ms: f("synth_ms")?,
+            train_ms: f("train_ms")?,
+        })
+    }
+
+    #[cfg(test)]
+    pub(crate) fn synthetic_for_tests() -> PointResult {
+        PointResult {
+            theta: 14,
+            area_um2: 123.456789,
+            power_nw: 987.0000001,
+            leakage_nw: 55.5,
+            comp_time_ns: 3.25,
+            edp_fj_ns: 101.0,
+            gates_in: 1000,
+            cells_out: 420,
+            macros_out: 18,
+            items: 8,
+            fired: 7,
+            rand_index: 0.875,
+            purity: 0.75,
+            synth_ms: 1.5,
+            train_ms: 2.5,
+        }
+    }
+}
+
+/// One merged report row: the point, its result, and whether the result
+/// was served from the warm cache.
+#[derive(Clone, Debug)]
+pub struct SweepRow {
+    /// The grid point.
+    pub point: SweepPoint,
+    /// Its measurements.
+    pub result: PointResult,
+    /// `true` when the result came from the cache rather than being
+    /// computed by this run.
+    pub cached: bool,
+}
+
+/// A finished sweep: every point's row in canonical grid order, plus
+/// cache-hit accounting.
+#[derive(Clone, Debug)]
+pub struct SweepOutcome {
+    /// The spec that defined the grid.
+    pub spec: SweepSpec,
+    /// One row per point, in [`SweepSpec::points`] order.
+    pub rows: Vec<SweepRow>,
+    /// Points computed by this run.
+    pub computed: usize,
+    /// Points served from the warm cache.
+    pub cached: usize,
+}
+
+/// Measure one grid point from scratch: generate the seeded workload,
+/// resolve θ, synthesize the column under the point's flow (metered, the
+/// Fig. 12 quantity), analyze PPA, then train the point's engine through
+/// the same streaming path the conformance harness drives and score the
+/// post-training clustering.
+pub fn compute_point(point: &SweepPoint) -> crate::Result<PointResult> {
+    let params = TnnParams::default();
+    // Workload: the same synthetic UCR-style generator the conformance
+    // suite sweeps, at the point's geometry.
+    let cfg = UcrConfig {
+        name: "sweep",
+        p: point.p,
+        q: point.q,
+    };
+    let data = crate::ucr::generate(cfg, point.per_cluster, point.seed);
+    let items = encode_ucr(&data, params.t_max());
+    let theta = match point.theta {
+        ThetaPolicy::Default => params.default_theta(point.p),
+        ThetaPolicy::Sparse => crate::tnn::encode::sparse_theta(
+            point.p,
+            params.w_max(),
+            volley_density(&items),
+        ),
+        ThetaPolicy::Fixed(n) => n,
+    };
+
+    // Hardware: synthesize this geometry under the point's flow and run
+    // the PPA models on the mapped netlist.
+    let design = build_column(point.p, point.q, theta, BrvSource::Lfsr);
+    let out = synthesize(&design.netlist, point.flow);
+    let lib = point.flow.library();
+    let ppa = analyze(&out.mapped, &lib, crate::harness::GAMMA_CYCLES);
+
+    // Function: train the engine online (same run_stream pipeline as
+    // `run ucr` and the conformance harness), then score a draw-free
+    // inference pass. All randomness follows the split_stream discipline
+    // documented in the module docs.
+    let root = Rng64::seed_from_u64(point.seed);
+    let mut weight_rng = root.split_stream(0);
+    let mut engine = crate::coordinator::engine_with_theta(
+        point.engine,
+        point.p,
+        point.q,
+        theta,
+        params,
+        &mut weight_rng,
+    )?;
+    let t_train = Instant::now();
+    for epoch in 0..point.epochs {
+        let mut stream = root.split_stream(1 + epoch);
+        run_stream(&mut engine, items.clone(), 16, stream.next_u64())?;
+    }
+    let winners = engine.infer_winners(&items)?;
+    let train_ms = t_train.elapsed().as_secs_f64() * 1e3;
+    let (fired, rand_index, purity) = score_winners(&winners, &items, point.q);
+
+    Ok(PointResult {
+        theta,
+        area_um2: ppa.area_um2,
+        power_nw: ppa.power_nw,
+        leakage_nw: ppa.leakage_nw,
+        comp_time_ns: ppa.comp_time_ns,
+        edp_fj_ns: ppa.edp_fj_ns,
+        gates_in: out.stats.gates_in,
+        cells_out: out.stats.cells_out,
+        macros_out: out.stats.macros_out,
+        items: items.len(),
+        fired,
+        rand_index,
+        purity,
+        synth_ms: out.stats.wall.as_secs_f64() * 1e3,
+        train_ms,
+    })
+}
+
+/// Run a sweep: serve warm points from the cache (when `use_cache`),
+/// shard the rest across `spec.threads` workers (0 = machine
+/// parallelism), persist every freshly-computed point, and merge rows in
+/// canonical grid order. The first point error stops every worker before
+/// its next point and aborts the sweep; already-computed points stay
+/// cached, so the retry resumes where it failed.
+pub fn run_sweep(spec: &SweepSpec, use_cache: bool) -> crate::Result<SweepOutcome> {
+    let points = spec.points();
+    let cache = if use_cache {
+        Some(PointCache::open(&spec.cache_dir)?)
+    } else {
+        None
+    };
+
+    let mut slots: Vec<Option<(PointResult, bool)>> = vec![None; points.len()];
+    let mut todo: Vec<usize> = Vec::new();
+    for (i, pt) in points.iter().enumerate() {
+        match cache.as_ref().and_then(|c| c.load(pt)) {
+            Some(r) => slots[i] = Some((r, true)),
+            None => todo.push(i),
+        }
+    }
+
+    let threads = if spec.threads == 0 {
+        crate::tnn::batch::default_threads()
+    } else {
+        spec.threads
+    }
+    .clamp(1, todo.len().max(1));
+
+    let next = AtomicUsize::new(0);
+    let fresh: Mutex<Vec<(usize, PointResult)>> = Mutex::new(Vec::new());
+    let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                // Stop promptly once any worker has failed — on a large
+                // grid the operator should not wait for the remaining
+                // points to finish before seeing the error.
+                if first_err.lock().unwrap().is_some() {
+                    break;
+                }
+                let k = next.fetch_add(1, Ordering::Relaxed);
+                if k >= todo.len() {
+                    break;
+                }
+                let i = todo[k];
+                let outcome = compute_point(&points[i]).and_then(|r| {
+                    if let Some(c) = &cache {
+                        c.store(&points[i], &r)?;
+                    }
+                    Ok(r)
+                });
+                match outcome {
+                    Ok(r) => fresh.lock().unwrap().push((i, r)),
+                    Err(e) => {
+                        let mut slot = first_err.lock().unwrap();
+                        if slot.is_none() {
+                            *slot = Some(e);
+                        }
+                        break;
+                    }
+                }
+            });
+        }
+    });
+    if let Some(e) = first_err.into_inner().unwrap() {
+        return Err(e);
+    }
+
+    let computed = {
+        let fresh = fresh.into_inner().unwrap();
+        let n = fresh.len();
+        for (i, r) in fresh {
+            slots[i] = Some((r, false));
+        }
+        n
+    };
+    let rows: Vec<SweepRow> = points
+        .into_iter()
+        .zip(slots)
+        .map(|(point, slot)| {
+            let (result, cached) = slot.expect("every point computed or cached");
+            SweepRow {
+                point,
+                result,
+                cached,
+            }
+        })
+        .collect();
+    let cached = rows.iter().filter(|r| r.cached).count();
+    Ok(SweepOutcome {
+        spec: spec.clone(),
+        rows,
+        computed,
+        cached,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineKind;
+    use crate::synth::flow::Flow;
+
+    fn small_point(engine: EngineKind) -> SweepPoint {
+        SweepPoint {
+            p: 6,
+            q: 2,
+            theta: ThetaPolicy::Default,
+            flow: Flow::Tnn7,
+            engine,
+            seed: 11,
+            per_cluster: 3,
+            epochs: 1,
+        }
+    }
+
+    #[test]
+    fn compute_point_is_reproducible() {
+        let p = small_point(EngineKind::Golden);
+        let a = compute_point(&p).unwrap();
+        let b = compute_point(&p).unwrap();
+        // Deterministic fields identical; wall clocks excluded.
+        assert_eq!(a.theta, b.theta);
+        assert_eq!(a.area_um2, b.area_um2);
+        assert_eq!(a.power_nw, b.power_nw);
+        assert_eq!(a.edp_fj_ns, b.edp_fj_ns);
+        assert_eq!(a.gates_in, b.gates_in);
+        assert_eq!((a.fired, a.rand_index, a.purity), (b.fired, b.rand_index, b.purity));
+        assert_eq!(a.items, 6);
+        assert!(a.area_um2 > 0.0 && a.power_nw > 0.0);
+    }
+
+    #[test]
+    fn golden_and_batched_agree_on_draw_free_fields() {
+        // Both engines share the weight-draw protocol, so the synthesized
+        // hardware and the workload are identical; training trajectories
+        // may differ (batched uses a leaner draw discipline).
+        let g = compute_point(&small_point(EngineKind::Golden)).unwrap();
+        let b = compute_point(&small_point(EngineKind::Batched)).unwrap();
+        assert_eq!(g.theta, b.theta);
+        assert_eq!(g.area_um2, b.area_um2);
+        assert_eq!(g.gates_in, b.gates_in);
+        assert_eq!(g.items, b.items);
+    }
+
+    #[test]
+    fn result_kv_roundtrip_is_exact() {
+        let p = small_point(EngineKind::Golden);
+        let r = compute_point(&p).unwrap();
+        let doc = r.to_kv();
+        let back = PointResult::from_kv(&p, &doc).unwrap();
+        assert_eq!(back, r, "shortest-roundtrip floats must survive kv");
+    }
+
+    #[test]
+    fn error_pct_inverts_purity() {
+        let mut r = PointResult::synthetic_for_tests();
+        r.purity = 0.8;
+        assert!((r.error_pct() - 20.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,37 @@
+//! Design-space exploration sweeps with a resumable artifact cache.
+//!
+//! The paper's headline claim is not one design point but a *design
+//! space*: nine macros whose PPA and synthesis-runtime advantages hold
+//! from a 40 µW UCR column up to multi-mm² MNIST networks. This module
+//! turns "evaluate the whole space" into one declarative job:
+//!
+//! * [`spec`] — a [`SweepSpec`] names the grid (column geometries `p`×`q`,
+//!   θ policy, synthesis flows, behavioral engines, seeds) in the crate's
+//!   `key = value` format, or assembles it from CLI flags;
+//! * [`exec`] — the executor shards points across worker threads under the
+//!   frozen [`Rng64::split_stream`](crate::util::Rng64::split_stream)
+//!   determinism contract: deterministic results are bit-exact at any
+//!   thread count, and every point runs on the same conformance-checked
+//!   engine constructions as `harness::conformance`;
+//! * [`cache`] — every finished point persists under a content address
+//!   (stable hash of the point definition + a cache version tag), so a
+//!   killed sweep resumes instantly and re-runs only missing or
+//!   invalidated points;
+//! * [`report`] — the merged grid is reported as a deterministic TSV, the
+//!   power–error / area–error / EDP–error Pareto frontiers, the
+//!   Baseline-vs-TNN7 synthesis-runtime ratio curve (Fig. 12 generalized
+//!   to the grid), and a `BENCH_sweep.json` artifact.
+//!
+//! Entry point: `tnn7 sweep [spec.kv] [--quick] [--no-cache] [key=value …]`
+//! (see `docs/ARCHITECTURE.md` §"Sweep subsystem" and the README
+//! reproduction matrix).
+
+pub mod cache;
+pub mod exec;
+pub mod report;
+pub mod spec;
+
+pub use cache::{PointCache, CACHE_VERSION};
+pub use exec::{compute_point, run_sweep, PointResult, SweepOutcome, SweepRow};
+pub use report::{pareto, print_summary, synth_ratio_curve, tsv, write_reports, ParetoFronts};
+pub use spec::{SweepPoint, SweepSpec, ThetaPolicy};

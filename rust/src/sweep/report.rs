@@ -1,0 +1,377 @@
+//! Sweep reporting: the merged per-point table (TSV), Pareto-frontier
+//! extraction over the PPA/accuracy trade-offs, the Baseline-vs-TNN7
+//! synthesis-runtime ratio curve (the paper's Fig. 12 generalized to the
+//! whole grid), and the `BENCH_sweep.json` artifact.
+//!
+//! The TSV contains **only deterministic fields** — its bytes are
+//! invariant under thread count and cache warmth, which is what the
+//! resumability tests compare. Wall-clock measurements (synthesis and
+//! training times, and the ratio curve built from them) live in the JSON
+//! artifact and the console summary.
+
+use super::exec::{SweepOutcome, SweepRow};
+use crate::ppa::report::pareto_front;
+use crate::util::json::Json;
+use std::path::PathBuf;
+
+/// The three Pareto frontiers the sweep extracts, as row indices into
+/// [`SweepOutcome::rows`] (each sorted along the frontier; all axes are
+/// minimized, with clustering error as the common quality axis).
+#[derive(Clone, Debug)]
+pub struct ParetoFronts {
+    /// Power (nW) vs clustering error (%).
+    pub power_error: Vec<usize>,
+    /// Area (µm²) vs clustering error (%).
+    pub area_error: Vec<usize>,
+    /// Energy-delay product (fJ·ns) vs clustering error (%).
+    pub edp_error: Vec<usize>,
+}
+
+/// Extract the power–error, area–error and EDP–error frontiers of a grid.
+pub fn pareto(rows: &[SweepRow]) -> ParetoFronts {
+    let with = |f: fn(&SweepRow) -> f64| -> Vec<usize> {
+        let pts: Vec<(f64, f64)> = rows
+            .iter()
+            .map(|r| (f(r), r.result.error_pct()))
+            .collect();
+        pareto_front(&pts)
+    };
+    ParetoFronts {
+        power_error: with(|r| r.result.power_nw),
+        area_error: with(|r| r.result.area_um2),
+        edp_error: with(|r| r.result.edp_fj_ns),
+    }
+}
+
+/// One Baseline/TNN7 pair of the synthesis-runtime ratio curve.
+#[derive(Clone, Debug)]
+pub struct RatioRow {
+    /// Synapse lines per neuron.
+    pub p: usize,
+    /// Neurons per column.
+    pub q: usize,
+    /// Synapse count (the curve's x-axis).
+    pub synapses: usize,
+    /// Workload seed of the paired points.
+    pub seed: u64,
+    /// Metered baseline (ASAP7) synthesis wall time, ms.
+    pub asap7_ms: f64,
+    /// Metered TNN7 synthesis wall time, ms.
+    pub tnn7_ms: f64,
+}
+
+impl RatioRow {
+    /// Baseline-over-TNN7 synthesis-runtime ratio (>1 means the macro
+    /// flow is faster; the paper reports 3.17× on average).
+    pub fn ratio(&self) -> f64 {
+        self.asap7_ms / self.tnn7_ms.max(1e-9)
+    }
+}
+
+/// Pair up grid points that differ only in flow and compute the
+/// synthesis-runtime ratio for each pair, sorted by synapse count. Points
+/// without a counterpart under the other flow are skipped (e.g. a spec
+/// that sweeps only one flow produces an empty curve).
+pub fn synth_ratio_curve(rows: &[SweepRow]) -> Vec<RatioRow> {
+    use crate::synth::flow::Flow;
+    let mut curve = Vec::new();
+    for base in rows.iter().filter(|r| r.point.flow == Flow::Baseline) {
+        let want = crate::sweep::spec::SweepPoint {
+            flow: Flow::Tnn7,
+            ..base.point.clone()
+        };
+        if let Some(t7) = rows.iter().find(|r| r.point == want) {
+            curve.push(RatioRow {
+                p: base.point.p,
+                q: base.point.q,
+                synapses: base.point.synapses(),
+                seed: base.point.seed,
+                asap7_ms: base.result.synth_ms,
+                tnn7_ms: t7.result.synth_ms,
+            });
+        }
+    }
+    curve.sort_by_key(|r| (r.synapses, r.p, r.seed));
+    curve
+}
+
+/// Render the deterministic per-point table. Stable column set and
+/// formatting: bytes are identical across thread counts and cache
+/// warmth for the same spec (see the module docs).
+pub fn tsv(outcome: &SweepOutcome) -> String {
+    let mut s = String::from(
+        "p\tq\ttheta\tflow\tengine\tseed\tsynapses\tarea_um2\tpower_uw\tcomp_ns\t\
+         edp_fj_ns\tgates_in\tcells\tmacros\titems\tfired\trand_index\tpurity\terror_pct\n",
+    );
+    for r in &outcome.rows {
+        let (pt, res) = (&r.point, &r.result);
+        s.push_str(&format!(
+            "{}\t{}\t{}\t{}\t{}\t{}\t{}\t{:.2}\t{:.3}\t{:.2}\t{:.1}\t{}\t{}\t{}\t{}\t{}\t{:.4}\t{:.4}\t{:.2}\n",
+            pt.p,
+            pt.q,
+            res.theta,
+            pt.flow.name(),
+            pt.engine.name(),
+            pt.seed,
+            pt.synapses(),
+            res.area_um2,
+            res.power_nw / 1000.0,
+            res.comp_time_ns,
+            res.edp_fj_ns,
+            res.gates_in,
+            res.cells_out,
+            res.macros_out,
+            res.items,
+            res.fired,
+            res.rand_index,
+            res.purity,
+            res.error_pct(),
+        ));
+    }
+    s
+}
+
+/// Build the `BENCH_sweep.json` document: per-point rows (including the
+/// wall-clock fields), the three Pareto frontiers, the synthesis-runtime
+/// ratio curve, and cache accounting.
+pub fn to_json(outcome: &SweepOutcome) -> Json {
+    let fronts = pareto(&outcome.rows);
+    let curve = synth_ratio_curve(&outcome.rows);
+    Json::obj()
+        .set("name", outcome.spec.name.as_str())
+        .set("points", outcome.rows.len())
+        .set("computed", outcome.computed)
+        .set("cached", outcome.cached)
+        .set(
+            "rows",
+            Json::Arr(
+                outcome
+                    .rows
+                    .iter()
+                    .map(|r| {
+                        Json::obj()
+                            .set("p", r.point.p)
+                            .set("q", r.point.q)
+                            .set("theta", r.result.theta)
+                            .set("flow", r.point.flow.name())
+                            .set("engine", r.point.engine.name())
+                            .set("seed", Json::Int(r.point.seed as i64))
+                            .set("synapses", r.point.synapses())
+                            .set("area_um2", r.result.area_um2)
+                            .set("power_nw", r.result.power_nw)
+                            .set("leakage_nw", r.result.leakage_nw)
+                            .set("comp_time_ns", r.result.comp_time_ns)
+                            .set("edp_fj_ns", r.result.edp_fj_ns)
+                            .set("gates_in", r.result.gates_in)
+                            .set("cells_out", r.result.cells_out)
+                            .set("macros_out", r.result.macros_out)
+                            .set("items", r.result.items)
+                            .set("fired", r.result.fired)
+                            .set("rand_index", r.result.rand_index)
+                            .set("purity", r.result.purity)
+                            .set("error_pct", r.result.error_pct())
+                            .set("synth_ms", r.result.synth_ms)
+                            .set("train_ms", r.result.train_ms)
+                            .set("cached", r.cached)
+                    })
+                    .collect(),
+            ),
+        )
+        .set(
+            "pareto",
+            Json::obj()
+                .set("power_error", fronts.power_error)
+                .set("area_error", fronts.area_error)
+                .set("edp_error", fronts.edp_error),
+        )
+        .set(
+            "synth_runtime_ratio",
+            Json::Arr(
+                curve
+                    .iter()
+                    .map(|r| {
+                        Json::obj()
+                            .set("p", r.p)
+                            .set("q", r.q)
+                            .set("synapses", r.synapses)
+                            .set("seed", Json::Int(r.seed as i64))
+                            .set("asap7_ms", r.asap7_ms)
+                            .set("tnn7_ms", r.tnn7_ms)
+                            .set("ratio", r.ratio())
+                    })
+                    .collect(),
+            ),
+        )
+}
+
+/// Print the human-readable sweep summary: the point table, frontier
+/// membership, the runtime-ratio curve and cache accounting.
+pub fn print_summary(outcome: &SweepOutcome) {
+    println!(
+        "Sweep '{}': {} points ({} computed, {} cached)",
+        outcome.spec.name,
+        outcome.rows.len(),
+        outcome.computed,
+        outcome.cached
+    );
+    println!(
+        "{:<10} {:>5} | {:<6} {:<8} {:>4} | {:>10} {:>9} {:>8} {:>11} | {:>6} {:>7} | {:>9}",
+        "geometry", "theta", "flow", "engine", "seed", "area µm²", "power µW", "comp ns",
+        "EDP fJ·ns", "err %", "purity", "synth"
+    );
+    for r in &outcome.rows {
+        println!(
+            "{:<10} {:>5} | {:<6} {:<8} {:>4} | {:>10.2} {:>9.3} {:>8.2} {:>11.1} | {:>6.2} {:>7.3} | {:>9}",
+            format!("{}x{}", r.point.p, r.point.q),
+            r.result.theta,
+            r.point.flow.name(),
+            r.point.engine.name(),
+            r.point.seed,
+            r.result.area_um2,
+            r.result.power_nw / 1000.0,
+            r.result.comp_time_ns,
+            r.result.edp_fj_ns,
+            r.result.error_pct(),
+            r.result.purity,
+            if r.cached {
+                "cached".to_string()
+            } else {
+                format!("{:.1} ms", r.result.synth_ms)
+            },
+        );
+    }
+    let fronts = pareto(&outcome.rows);
+    let describe = |name: &str, front: &[usize]| {
+        let members: Vec<String> = front
+            .iter()
+            .map(|&i| {
+                let r = &outcome.rows[i];
+                format!("{}x{}/{}", r.point.p, r.point.q, r.point.flow.name())
+            })
+            .collect();
+        println!("Pareto {name}: {}", members.join(" -> "));
+    };
+    describe("power-error", &fronts.power_error);
+    describe("area-error", &fronts.area_error);
+    describe("EDP-error", &fronts.edp_error);
+    let curve = synth_ratio_curve(&outcome.rows);
+    if !curve.is_empty() {
+        let avg: f64 = curve.iter().map(|r| r.ratio()).sum::<f64>() / curve.len() as f64;
+        println!("Synthesis-runtime ratio (ASAP7/TNN7) by synapse count:");
+        for r in &curve {
+            println!(
+                "  {:>6} synapses ({}x{}): {:>8.2} ms / {:>8.2} ms = {:>5.2}x",
+                r.synapses, r.p, r.q, r.asap7_ms, r.tnn7_ms, r.ratio()
+            );
+        }
+        println!("  average {avg:.2}x (paper Fig. 12: 3.17x)");
+    }
+}
+
+/// Write `sweep.tsv` and `BENCH_sweep.json` into the spec's `out_dir`;
+/// returns both paths.
+pub fn write_reports(outcome: &SweepOutcome) -> crate::Result<(PathBuf, PathBuf)> {
+    std::fs::create_dir_all(&outcome.spec.out_dir)?;
+    let tsv_path = outcome.spec.out_dir.join("sweep.tsv");
+    std::fs::write(&tsv_path, tsv(outcome))?;
+    let json_path = outcome.spec.out_dir.join("BENCH_sweep.json");
+    std::fs::write(&json_path, to_json(outcome).to_pretty())?;
+    Ok((tsv_path, json_path))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineKind;
+    use crate::sweep::exec::{PointResult, SweepRow};
+    use crate::sweep::spec::{SweepPoint, SweepSpec, ThetaPolicy};
+    use crate::synth::flow::Flow;
+
+    fn row(p: usize, flow: Flow, purity: f64, power: f64, synth_ms: f64) -> SweepRow {
+        let mut result = PointResult::synthetic_for_tests();
+        result.purity = purity;
+        result.power_nw = power;
+        result.area_um2 = power / 2.0;
+        result.edp_fj_ns = power * 3.0;
+        result.synth_ms = synth_ms;
+        SweepRow {
+            point: SweepPoint {
+                p,
+                q: 2,
+                theta: ThetaPolicy::Default,
+                flow,
+                engine: EngineKind::Golden,
+                seed: 7,
+                per_cluster: 4,
+                epochs: 1,
+            },
+            result,
+            cached: false,
+        }
+    }
+
+    fn outcome(rows: Vec<SweepRow>) -> SweepOutcome {
+        SweepOutcome {
+            spec: SweepSpec::default(),
+            computed: rows.len(),
+            cached: 0,
+            rows,
+        }
+    }
+
+    #[test]
+    fn pareto_prefers_cheap_accurate_points() {
+        // r1 dominates r0 (lower power, lower error); r2 trades error for
+        // power and survives alongside r1.
+        let rows = vec![
+            row(8, Flow::Baseline, 0.70, 900.0, 4.0),
+            row(10, Flow::Tnn7, 0.80, 700.0, 2.0),
+            row(12, Flow::Tnn7, 0.60, 500.0, 2.5),
+        ];
+        let f = pareto(&rows);
+        assert_eq!(f.power_error, vec![2, 1]);
+        assert_eq!(f.area_error, vec![2, 1]);
+        assert_eq!(f.edp_error, vec![2, 1]);
+    }
+
+    #[test]
+    fn ratio_curve_pairs_flows_per_geometry() {
+        let rows = vec![
+            row(8, Flow::Baseline, 0.7, 900.0, 9.0),
+            row(8, Flow::Tnn7, 0.7, 700.0, 3.0),
+            row(16, Flow::Baseline, 0.7, 900.0, 20.0),
+            row(16, Flow::Tnn7, 0.7, 700.0, 4.0),
+            // Unpaired geometry: no Tnn7 counterpart -> skipped.
+            row(32, Flow::Baseline, 0.7, 900.0, 50.0),
+        ];
+        let curve = synth_ratio_curve(&rows);
+        assert_eq!(curve.len(), 2);
+        assert_eq!((curve[0].p, curve[1].p), (8, 16), "sorted by synapses");
+        assert!((curve[0].ratio() - 3.0).abs() < 1e-9);
+        assert!((curve[1].ratio() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tsv_is_deterministic_and_excludes_wall_clock() {
+        let mk = |synth_ms| outcome(vec![row(8, Flow::Tnn7, 0.75, 800.0, synth_ms)]);
+        let (a, b) = (tsv(&mk(1.0)), tsv(&mk(999.0)));
+        assert_eq!(a, b, "wall clock must not reach the TSV");
+        assert!(a.starts_with("p\tq\ttheta\tflow\tengine\tseed\tsynapses"));
+        assert!(a.contains("TNN7"));
+        assert!(a.lines().count() == 2);
+    }
+
+    #[test]
+    fn json_carries_rows_pareto_and_ratio_curve() {
+        let o = outcome(vec![
+            row(8, Flow::Baseline, 0.7, 900.0, 9.0),
+            row(8, Flow::Tnn7, 0.8, 700.0, 3.0),
+        ]);
+        let j = to_json(&o).to_string();
+        assert!(j.contains("\"pareto\""));
+        assert!(j.contains("\"synth_runtime_ratio\""));
+        assert!(j.contains("\"power_error\""));
+        assert!(j.contains("\"error_pct\""));
+        assert!(j.contains("\"cached\""));
+    }
+}

@@ -1,0 +1,467 @@
+//! Declarative sweep specifications.
+//!
+//! A [`SweepSpec`] names a grid over the TNN design space — column
+//! geometries `p`×`q`, a θ sizing policy, synthesis flows, behavioral
+//! engines, and workload seeds — plus the per-point workload budget. It is
+//! parsed from the same `key = value` format as every other config in this
+//! crate ([`crate::util::kv::KvDoc`]), and CLI `key=value` overrides merge
+//! on top, so a whole experiment campaign is one small text file.
+
+use crate::config::EngineKind;
+use crate::synth::flow::Flow;
+use crate::tnn::params::TnnParams;
+use crate::util::kv::KvDoc;
+use std::path::PathBuf;
+
+/// How each point's neuron firing threshold θ is chosen.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ThetaPolicy {
+    /// `TnnParams::default_theta(p)` — the θ ∝ p·w_max/4 rule of [1].
+    Default,
+    /// Density-scaled θ from the generated workload's measured spike
+    /// density (`tnn::encode::sparse_theta`, the `run ucr` sizing rule).
+    Sparse,
+    /// One fixed θ for every geometry.
+    Fixed(u32),
+}
+
+impl ThetaPolicy {
+    /// Parse `default` / `sparse` / `fixed:<n>`.
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s {
+            "default" => Ok(ThetaPolicy::Default),
+            "sparse" => Ok(ThetaPolicy::Sparse),
+            other => match other.strip_prefix("fixed:") {
+                Some(n) => Ok(ThetaPolicy::Fixed(n.parse().map_err(|_| {
+                    anyhow::anyhow!("theta: bad fixed value {n:?}")
+                })?)),
+                None => anyhow::bail!("unknown theta policy {other:?} (default|sparse|fixed:<n>)"),
+            },
+        }
+    }
+
+    /// Canonical spelling (inverse of [`ThetaPolicy::parse`]).
+    pub fn name(&self) -> String {
+        match self {
+            ThetaPolicy::Default => "default".into(),
+            ThetaPolicy::Sparse => "sparse".into(),
+            ThetaPolicy::Fixed(n) => format!("fixed:{n}"),
+        }
+    }
+}
+
+/// A declarative design-space sweep: the cartesian product of geometries ×
+/// flows × engines × seeds, with one workload budget shared by every point.
+///
+/// ```
+/// use tnn7::sweep::SweepSpec;
+/// use tnn7::util::kv::KvDoc;
+///
+/// let doc = KvDoc::parse(
+///     "geometries = 8x2,12x2\n\
+///      flows = asap7,tnn7\n\
+///      seeds = 7\n\
+///      per_cluster = 4\n\
+///      epochs = 1\n",
+/// ).unwrap();
+/// let spec = SweepSpec::from_kv(&doc).unwrap();
+/// assert_eq!(spec.points().len(), 2 * 2 * 1 * 1); // geoms × flows × engines × seeds
+/// ```
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    /// Campaign name (labels reports; not part of point cache keys).
+    pub name: String,
+    /// Column geometries to sweep, as `(p, q)` pairs.
+    pub geometries: Vec<(usize, usize)>,
+    /// θ sizing policy applied to every point.
+    pub theta: ThetaPolicy,
+    /// Synthesis flows to sweep ([`Flow::Baseline`] = ASAP7, [`Flow::Tnn7`]).
+    pub flows: Vec<Flow>,
+    /// Behavioral engines to sweep (golden / batched / gate; the XLA engine
+    /// needs AOT artifacts and is not sweepable).
+    pub engines: Vec<EngineKind>,
+    /// Workload seeds (each seed is a full grid axis).
+    pub seeds: Vec<u64>,
+    /// Generated samples per cluster for each point's training workload.
+    pub per_cluster: usize,
+    /// Training epochs per point.
+    pub epochs: u64,
+    /// Executor worker threads (0 = machine parallelism).
+    pub threads: usize,
+    /// On-disk point cache directory.
+    pub cache_dir: PathBuf,
+    /// Report output directory (`sweep.tsv`, `BENCH_sweep.json`).
+    pub out_dir: PathBuf,
+}
+
+impl Default for SweepSpec {
+    fn default() -> Self {
+        // The default campaign: a 12-point (p, q) × flow grid — six column
+        // geometries spanning wide/tall shapes under both synthesis flows,
+        // golden engine, one seed. `tnn7 sweep` with no spec file runs this.
+        // The cache location and worker count default from `RunConfig`, so
+        // the `cache_dir`/`threads` config keys are the single source of
+        // truth for both the run and sweep surfaces.
+        let run = crate::config::RunConfig::default();
+        SweepSpec {
+            name: "default".into(),
+            geometries: vec![(8, 2), (10, 3), (12, 2), (16, 3), (20, 2), (16, 4)],
+            theta: ThetaPolicy::Default,
+            flows: vec![Flow::Baseline, Flow::Tnn7],
+            engines: vec![EngineKind::Golden],
+            seeds: vec![7],
+            per_cluster: 12,
+            epochs: 2,
+            threads: run.threads,
+            cache_dir: run.cache_dir,
+            out_dir: ".".into(),
+        }
+    }
+}
+
+/// One fully-resolved grid point (everything that defines its result —
+/// the cache key hashes exactly these fields plus the cache version).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SweepPoint {
+    /// Synapse lines per neuron.
+    pub p: usize,
+    /// Neurons (clusters) per column.
+    pub q: usize,
+    /// θ policy this point resolves θ under.
+    pub theta: ThetaPolicy,
+    /// Synthesis flow.
+    pub flow: Flow,
+    /// Behavioral engine that runs the training workload.
+    pub engine: EngineKind,
+    /// Workload seed.
+    pub seed: u64,
+    /// Samples per cluster in the generated workload.
+    pub per_cluster: usize,
+    /// Training epochs.
+    pub epochs: u64,
+}
+
+impl SweepPoint {
+    /// Total synapse count (the Fig. 11 x-axis).
+    pub fn synapses(&self) -> usize {
+        self.p * self.q
+    }
+
+    /// Canonical one-line description — the string the cache key hashes.
+    /// Every field that can change the result (and the TNN operating
+    /// point) must appear here.
+    pub fn canonical(&self) -> String {
+        let tp = TnnParams::default();
+        format!(
+            "p={};q={};theta={};flow={};engine={};seed={};per_cluster={};epochs={};wbits={};gamma={}",
+            self.p,
+            self.q,
+            self.theta.name(),
+            self.flow.name(),
+            self.engine.name(),
+            self.seed,
+            self.per_cluster,
+            self.epochs,
+            tp.weight_bits,
+            tp.gamma_cycles,
+        )
+    }
+}
+
+fn parse_geometry(s: &str) -> crate::Result<(usize, usize)> {
+    let (p, q) = s
+        .split_once('x')
+        .ok_or_else(|| anyhow::anyhow!("geometry must be <p>x<q>, got {s:?}"))?;
+    let (p, q) = (p.trim().parse()?, q.trim().parse()?);
+    anyhow::ensure!(p >= 1 && q >= 1, "geometry {s:?}: p and q must be >= 1");
+    Ok((p, q))
+}
+
+fn split_list(s: &str) -> impl Iterator<Item = &str> {
+    s.split(',').map(str::trim).filter(|t| !t.is_empty())
+}
+
+impl SweepSpec {
+    /// Load from a kv file; missing keys keep [`SweepSpec::default`] values.
+    pub fn load(path: impl AsRef<std::path::Path>) -> crate::Result<Self> {
+        Self::from_kv(&KvDoc::load(path)?)
+    }
+
+    /// Build from a parsed kv document; missing keys keep defaults.
+    ///
+    /// Recognized keys: `name`, `geometries` (`8x2,12x2,…`), `datasets`
+    /// (UCR suite names, appended to `geometries`), `theta`
+    /// (`default|sparse|fixed:<n>`), `flows` (`asap7,tnn7`), `engines`
+    /// (`golden,batched,gate`), `seeds`, `per_cluster`, `epochs`,
+    /// `threads`, `cache_dir`, `out_dir`.
+    pub fn from_kv(doc: &KvDoc) -> crate::Result<Self> {
+        let mut s = SweepSpec::default();
+        if let Some(v) = doc.get("name") {
+            s.name = v.to_string();
+        }
+        let mut geoms = Vec::new();
+        if let Some(v) = doc.get("geometries") {
+            for g in split_list(v) {
+                geoms.push(parse_geometry(g)?);
+            }
+        }
+        if let Some(v) = doc.get("datasets") {
+            let suite = crate::ucr::ucr_suite();
+            for name in split_list(v) {
+                let cfg = suite
+                    .iter()
+                    .find(|c| c.name == name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown dataset {name:?}"))?;
+                geoms.push((cfg.p, cfg.q));
+            }
+        }
+        if !geoms.is_empty() {
+            s.geometries = geoms;
+        }
+        if let Some(v) = doc.get("theta") {
+            s.theta = ThetaPolicy::parse(v)?;
+        }
+        if let Some(v) = doc.get("flows") {
+            s.flows = split_list(v).map(Flow::parse).collect::<crate::Result<_>>()?;
+        }
+        if let Some(v) = doc.get("engines") {
+            s.engines = split_list(v)
+                .map(|e| {
+                    let kind = EngineKind::parse(e)?;
+                    anyhow::ensure!(
+                        kind != EngineKind::Xla,
+                        "the xla engine needs AOT artifacts and cannot be swept"
+                    );
+                    Ok(kind)
+                })
+                .collect::<crate::Result<_>>()?;
+        }
+        if let Some(v) = doc.get("seeds") {
+            s.seeds = split_list(v)
+                .map(|x| {
+                    x.parse()
+                        .map_err(|_| anyhow::anyhow!("seeds: bad u64 {x:?}"))
+                })
+                .collect::<crate::Result<_>>()?;
+        }
+        if let Some(v) = doc.get_usize("per_cluster")? {
+            s.per_cluster = v;
+        }
+        if let Some(v) = doc.get_u64("epochs")? {
+            s.epochs = v;
+        }
+        if let Some(v) = doc.get_usize("threads")? {
+            s.threads = v;
+        }
+        if let Some(v) = doc.get("cache_dir") {
+            s.cache_dir = v.into();
+        }
+        if let Some(v) = doc.get("out_dir") {
+            s.out_dir = v.into();
+        }
+        s.validate()?;
+        Ok(s)
+    }
+
+    /// Apply `key=value` CLI overrides on top of this spec (same keys as
+    /// [`SweepSpec::from_kv`]; list-valued keys replace the whole list).
+    pub fn apply_overrides(&mut self, overrides: &[String]) -> crate::Result<()> {
+        if overrides.is_empty() {
+            return Ok(());
+        }
+        let mut doc = KvDoc::default();
+        for o in overrides {
+            let (k, v) = o
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("override must be key=value: {o}"))?;
+            doc.set(k.trim(), v.trim());
+        }
+        const KEYS: [&str; 12] = [
+            "name", "geometries", "datasets", "theta", "flows", "engines", "seeds",
+            "per_cluster", "epochs", "threads", "cache_dir", "out_dir",
+        ];
+        for key in doc.keys() {
+            anyhow::ensure!(KEYS.contains(&key), "unknown sweep key {key:?}");
+        }
+        let merged = Self::from_kv(&doc)?;
+        for key in doc.keys() {
+            match key {
+                "name" => self.name = merged.name.clone(),
+                "geometries" | "datasets" => self.geometries = merged.geometries.clone(),
+                "theta" => self.theta = merged.theta,
+                "flows" => self.flows = merged.flows.clone(),
+                "engines" => self.engines = merged.engines.clone(),
+                "seeds" => self.seeds = merged.seeds.clone(),
+                "per_cluster" => self.per_cluster = merged.per_cluster,
+                "epochs" => self.epochs = merged.epochs,
+                "threads" => self.threads = merged.threads,
+                "cache_dir" => self.cache_dir = merged.cache_dir.clone(),
+                "out_dir" => self.out_dir = merged.out_dir.clone(),
+                _ => unreachable!("key set checked above"),
+            }
+        }
+        self.validate()
+    }
+
+    /// A CI-speed campaign: 6 points (3 geometries × both flows), tiny
+    /// workload budgets. `tnn7 sweep --quick` runs this.
+    pub fn quick() -> Self {
+        SweepSpec {
+            name: "quick".into(),
+            geometries: vec![(6, 2), (8, 2), (7, 3)],
+            per_cluster: 4,
+            epochs: 1,
+            ..SweepSpec::default()
+        }
+    }
+
+    /// Sanity-check the grid axes.
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(!self.geometries.is_empty(), "sweep needs >= 1 geometry");
+        anyhow::ensure!(!self.flows.is_empty(), "sweep needs >= 1 flow");
+        anyhow::ensure!(!self.engines.is_empty(), "sweep needs >= 1 engine");
+        anyhow::ensure!(!self.seeds.is_empty(), "sweep needs >= 1 seed");
+        anyhow::ensure!(self.per_cluster >= 1, "per_cluster must be >= 1");
+        anyhow::ensure!(self.epochs >= 1, "epochs must be >= 1");
+        Ok(())
+    }
+
+    /// Expand the grid to its fully-resolved points, in canonical order
+    /// (geometry-major, then flow, engine, seed). The order is part of the
+    /// report contract: merged reports list points in this order whether
+    /// they were computed or loaded from cache. Duplicate points (a
+    /// geometry listed twice, or `datasets` repeating a `geometries`
+    /// shape) are dropped, keeping the first occurrence — they would
+    /// waste compute and make two workers race on one cache entry.
+    pub fn points(&self) -> Vec<SweepPoint> {
+        let mut pts = Vec::new();
+        for &(p, q) in &self.geometries {
+            for &flow in &self.flows {
+                for &engine in &self.engines {
+                    for &seed in &self.seeds {
+                        pts.push(SweepPoint {
+                            p,
+                            q,
+                            theta: self.theta,
+                            flow,
+                            engine,
+                            seed,
+                            per_cluster: self.per_cluster,
+                            epochs: self.epochs,
+                        });
+                    }
+                }
+            }
+        }
+        let mut seen = std::collections::HashSet::new();
+        pts.retain(|p| seen.insert(p.canonical()));
+        pts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_grid_has_twelve_points() {
+        let spec = SweepSpec::default();
+        spec.validate().unwrap();
+        assert_eq!(spec.points().len(), 12);
+        assert_eq!(SweepSpec::quick().points().len(), 6);
+    }
+
+    #[test]
+    fn kv_parsing_covers_all_axes() {
+        let doc = KvDoc::parse(
+            "name = trial\n\
+             geometries = 4x2, 8x3\n\
+             theta = fixed:9\n\
+             flows = tnn7\n\
+             engines = golden,batched\n\
+             seeds = 1,2,3\n\
+             per_cluster = 5\n\
+             epochs = 4\n\
+             threads = 2\n\
+             cache_dir = /tmp/c\n\
+             out_dir = /tmp/o\n",
+        )
+        .unwrap();
+        let s = SweepSpec::from_kv(&doc).unwrap();
+        assert_eq!(s.name, "trial");
+        assert_eq!(s.geometries, vec![(4, 2), (8, 3)]);
+        assert_eq!(s.theta, ThetaPolicy::Fixed(9));
+        assert_eq!(s.flows, vec![Flow::Tnn7]);
+        assert_eq!(s.engines, vec![EngineKind::Golden, EngineKind::Batched]);
+        assert_eq!(s.seeds, vec![1, 2, 3]);
+        assert_eq!(s.per_cluster, 5);
+        assert_eq!(s.epochs, 4);
+        assert_eq!(s.threads, 2);
+        // 2 geoms × 1 flow × 2 engines × 3 seeds
+        assert_eq!(s.points().len(), 12);
+    }
+
+    #[test]
+    fn datasets_resolve_to_suite_geometries() {
+        let doc = KvDoc::parse("datasets = TwoLeadECG,ECG200\n").unwrap();
+        let s = SweepSpec::from_kv(&doc).unwrap();
+        assert_eq!(s.geometries, vec![(82, 2), (96, 2)]);
+        assert!(SweepSpec::from_kv(&KvDoc::parse("datasets = NoSuch\n").unwrap()).is_err());
+    }
+
+    #[test]
+    fn duplicate_grid_entries_expand_to_one_point() {
+        // A repeated geometry — or `datasets` echoing a `geometries` shape —
+        // must not produce duplicate points (two workers would race on one
+        // cache entry).
+        let doc = KvDoc::parse(
+            "geometries = 8x2,8x2,82x2\ndatasets = TwoLeadECG\nflows = tnn7\n",
+        )
+        .unwrap();
+        let s = SweepSpec::from_kv(&doc).unwrap();
+        assert_eq!(s.geometries, vec![(8, 2), (8, 2), (82, 2), (82, 2)]);
+        let pts = s.points();
+        assert_eq!(pts.len(), 2, "8x2 and 82x2 once each");
+        assert_eq!((pts[0].p, pts[1].p), (8, 82), "first occurrence order kept");
+    }
+
+    #[test]
+    fn overrides_merge_and_reject_unknown() {
+        let mut s = SweepSpec::default();
+        s.apply_overrides(&["seeds=9,10".into(), "theta=sparse".into()])
+            .unwrap();
+        assert_eq!(s.seeds, vec![9, 10]);
+        assert_eq!(s.theta, ThetaPolicy::Sparse);
+        // untouched axes keep defaults
+        assert_eq!(s.geometries.len(), 6);
+        assert!(s.apply_overrides(&["bogus=1".into()]).is_err());
+        assert!(s.apply_overrides(&["engines=xla".into()]).is_err());
+    }
+
+    #[test]
+    fn theta_policy_roundtrips() {
+        for t in [ThetaPolicy::Default, ThetaPolicy::Sparse, ThetaPolicy::Fixed(17)] {
+            assert_eq!(ThetaPolicy::parse(&t.name()).unwrap(), t);
+        }
+        assert!(ThetaPolicy::parse("fixed:x").is_err());
+        assert!(ThetaPolicy::parse("nope").is_err());
+    }
+
+    #[test]
+    fn canonical_strings_distinguish_points() {
+        let spec = SweepSpec::default();
+        let pts = spec.points();
+        let mut canon: Vec<String> = pts.iter().map(|p| p.canonical()).collect();
+        canon.sort();
+        canon.dedup();
+        assert_eq!(canon.len(), pts.len(), "canonical strings must be unique");
+        assert!(canon[0].contains("wbits=3") && canon[0].contains("gamma=16"));
+    }
+
+    #[test]
+    fn bad_geometry_rejected() {
+        assert!(parse_geometry("8x0").is_err());
+        assert!(parse_geometry("8").is_err());
+        assert_eq!(parse_geometry(" 82x2 ".trim()).unwrap(), (82, 2));
+    }
+}

@@ -20,6 +20,8 @@ pub enum Flow {
 }
 
 impl Flow {
+    /// The cell library this flow maps to (ASAP7 standard cells for the
+    /// baseline, the TNN7 macro suite + glue cells otherwise).
     pub fn library(&self) -> CellLibrary {
         match self {
             Flow::Baseline => cells::asap7(),
@@ -27,34 +29,73 @@ impl Flow {
         }
     }
 
+    /// Display name, as used in the paper's tables.
     pub fn name(&self) -> &'static str {
         match self {
             Flow::Baseline => "ASAP7",
             Flow::Tnn7 => "TNN7",
         }
     }
+
+    /// Parse a CLI/config spelling (`asap7`/`baseline` or `tnn7`).
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s {
+            "asap7" | "baseline" => Ok(Flow::Baseline),
+            "tnn7" => Ok(Flow::Tnn7),
+            other => anyhow::bail!("unknown flow {other:?} (asap7|tnn7)"),
+        }
+    }
+
+    /// Synthesize a design under this flow (method form of [`synthesize`]).
+    ///
+    /// ```
+    /// use tnn7::gates::column_design::{build_column, BrvSource};
+    /// use tnn7::synth::flow::Flow;
+    ///
+    /// let design = build_column(4, 2, 4, BrvSource::Lfsr);
+    /// let base = Flow::Baseline.run(&design.netlist);
+    /// let tnn7 = Flow::Tnn7.run(&design.netlist);
+    /// // TNN7 preserves the nine macros as hard cells; the baseline
+    /// // expands them into gates, so it enters the optimizer far larger —
+    /// // the mechanism behind the paper's Fig. 12 runtime gap.
+    /// assert!(tnn7.mapped.macro_count() > 0);
+    /// assert_eq!(base.mapped.macro_count(), 0);
+    /// assert!(base.stats.gates_in > tnn7.stats.gates_in);
+    /// ```
+    pub fn run(&self, design: &Netlist) -> SynthOutcome {
+        synthesize(design, *self)
+    }
 }
 
 /// Statistics of one synthesis run.
 #[derive(Clone, Debug)]
 pub struct SynthStats {
+    /// Flow the run used.
     pub flow: Flow,
     /// End-to-end netlist-generation wall time (elaborate/expand + optimize
     /// + map) — the quantity Fig. 12 compares.
     pub wall: Duration,
+    /// Macro-expansion (elaboration) wall time (baseline flow only).
     pub expand_wall: Duration,
+    /// Logic-optimization wall time.
     pub opt_wall: Duration,
+    /// Technology-mapping wall time.
     pub map_wall: Duration,
     /// Gate count entering the optimizer (the search-space size).
     pub gates_in: usize,
+    /// Optimizer statistics (iterations, rewrites, work).
     pub opt: OptStats,
+    /// Mapped standard-cell count.
     pub cells_out: usize,
+    /// Preserved hard-macro count.
     pub macros_out: usize,
 }
 
 /// Result of a synthesis run.
 pub struct SynthOutcome {
+    /// The technology-mapped netlist.
     pub mapped: MappedNetlist,
+    /// Metering and inventory statistics.
     pub stats: SynthStats,
 }
 

@@ -10,6 +10,7 @@ use crate::gates::netlist::{Gate, NetId, Netlist};
 /// One mapped standard-cell instance.
 #[derive(Clone, Debug)]
 pub struct MappedCell {
+    /// Library cell name.
     pub cell: &'static str,
     /// Output net (generic NetId namespace of the source netlist).
     pub out: NetId,
@@ -22,20 +23,26 @@ pub struct MappedCell {
 /// A technology-mapped netlist: standard cells + hard-macro instances.
 #[derive(Clone, Debug)]
 pub struct MappedNetlist {
+    /// Design name (inherited from the source netlist).
     pub name: String,
+    /// Mapped standard cells.
     pub cells: Vec<MappedCell>,
     /// (kind, input nets, output nets) per preserved macro instance.
     pub macros: Vec<(MacroKind, Vec<NetId>, Vec<NetId>)>,
+    /// Primary inputs: (name, net).
     pub inputs: Vec<(String, NetId)>,
+    /// Primary outputs: (name, net).
     pub outputs: Vec<(String, NetId)>,
     /// Upper bound of the net id namespace.
     pub net_space: usize,
 }
 
 impl MappedNetlist {
+    /// Mapped standard-cell count.
     pub fn cell_count(&self) -> usize {
         self.cells.len()
     }
+    /// Preserved hard-macro count.
     pub fn macro_count(&self) -> usize {
         self.macros.len()
     }

@@ -13,11 +13,15 @@ use std::collections::HashMap;
 /// Optimization statistics (also the Fig. 12 "work" evidence).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct OptStats {
+    /// Gate count entering the optimizer.
     pub gates_before: usize,
+    /// Gate count after the fixpoint.
     pub gates_after: usize,
+    /// Rewrite+DCE iterations until the fixpoint (bounded).
     pub iterations: usize,
     /// Total gate visits across all passes (the optimizer's work measure).
     pub work: u64,
+    /// Total rewrites applied.
     pub rewrites: u64,
 }
 

@@ -127,6 +127,7 @@ impl VolleyBatch {
         self.data.len() / self.lines
     }
 
+    /// Is the batch empty?
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
@@ -186,6 +187,7 @@ pub struct ColumnKernel {
 }
 
 impl ColumnKernel {
+    /// A fresh kernel (scratch allocates lazily on first use).
     pub fn new() -> Self {
         Self::default()
     }
@@ -292,6 +294,7 @@ pub struct StdpTables {
 }
 
 impl StdpTables {
+    /// Precompute the integer Bernoulli thresholds for `p`'s STDP rates.
     pub fn new(p: &TnnParams) -> Self {
         let w_max = p.w_max();
         StdpTables {
@@ -417,6 +420,7 @@ pub struct BatchedColumn {
 }
 
 impl BatchedColumn {
+    /// Wrap a column with reusable kernel scratch and STDP tables.
     pub fn new(col: Column) -> Self {
         let tables = StdpTables::new(col.params());
         let out = vec![SpikeTime::NONE; col.q()];
@@ -428,6 +432,7 @@ impl BatchedColumn {
         }
     }
 
+    /// The wrapped column (weights, geometry, parameters).
     pub fn column(&self) -> &Column {
         &self.col
     }
@@ -635,6 +640,21 @@ impl ColumnLayer {
 impl TnnNetwork {
     /// Batched inference through all layers. Bit-exact with per-sample
     /// [`TnnNetwork::infer`] at any thread count.
+    ///
+    /// ```
+    /// use tnn7::tnn::{ColumnLayer, ReceptiveField, SpikeTime, TnnNetwork, TnnParams, VolleyBatch};
+    ///
+    /// let layer = ColumnLayer::new(4, ReceptiveField::Full, 2, Some(3), TnnParams::default());
+    /// let net = TnnNetwork::new(vec![layer]);
+    /// let mut batch = VolleyBatch::new(4);
+    /// batch.push(&[SpikeTime::at(0), SpikeTime::at(0), SpikeTime::NONE, SpikeTime::NONE]);
+    /// batch.push(&[SpikeTime::NONE; 4]);
+    ///
+    /// let out = net.infer_batch(&batch, 2);
+    /// assert_eq!((out.len(), out.lines()), (2, net.output_len()));
+    /// // Bit-exact with the per-sample path, at any thread count.
+    /// assert_eq!(out.volley(0), &net.infer(batch.volley(0))[..]);
+    /// ```
     pub fn infer_batch(&self, batch: &VolleyBatch, threads: usize) -> VolleyBatch {
         let (first, rest) = self.layers().split_first().expect("network has layers");
         let mut v = first.infer_batch(batch, threads);

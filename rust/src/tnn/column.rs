@@ -70,21 +70,27 @@ impl Column {
         c
     }
 
+    /// Synapse lines per neuron.
     pub fn p(&self) -> usize {
         self.p
     }
+    /// Neurons in the column.
     pub fn q(&self) -> usize {
         self.q
     }
+    /// Neuron firing threshold.
     pub fn theta(&self) -> u32 {
         self.theta
     }
+    /// The column's hyper-parameters.
     pub fn params(&self) -> &TnnParams {
         &self.params
     }
+    /// Row-major p×q weight matrix.
     pub fn weights(&self) -> &[u8] {
         &self.weights
     }
+    /// Mutable access to the weight matrix (tests and weight injection).
     pub fn weights_mut(&mut self) -> &mut [u8] {
         &mut self.weights
     }
@@ -177,6 +183,20 @@ impl Column {
 
     /// One full gamma cycle with STDP learning, drawing the uniforms from
     /// `rng` (convenience wrapper for the online-learning pipelines).
+    ///
+    /// ```
+    /// use tnn7::tnn::{Column, SpikeTime, TnnParams};
+    /// use tnn7::util::Rng64;
+    ///
+    /// let mut rng = Rng64::seed_from_u64(7);
+    /// let mut col = Column::with_default_theta(4, 2, TnnParams::default());
+    /// let volley = [SpikeTime::at(0), SpikeTime::at(1), SpikeTime::NONE, SpikeTime::at(3)];
+    ///
+    /// let out = col.step(&volley, &mut rng);
+    /// // 1-WTA lateral inhibition: at most one of the q = 2 outputs spikes.
+    /// assert_eq!(out.output.len(), 2);
+    /// assert!(out.output.iter().filter(|t| t.is_spike()).count() <= 1);
+    /// ```
     pub fn step(&mut self, xs: &[SpikeTime], rng: &mut Rng64) -> GammaOutput {
         let n = self.p * self.q;
         let mut u_case = vec![0.0f64; n];

@@ -140,12 +140,15 @@ impl ColumnLayer {
         }
     }
 
+    /// The layer's receptive-field scheme.
     pub fn receptive_field(&self) -> &ReceptiveField {
         &self.rf
     }
+    /// The layer's columns.
     pub fn columns(&self) -> &[Column] {
         &self.columns
     }
+    /// Mutable access to the layer's columns.
     pub fn columns_mut(&mut self) -> &mut [Column] {
         &mut self.columns
     }
@@ -170,6 +173,7 @@ impl ColumnLayer {
             })
             .collect()
     }
+    /// Input volley length the layer expects.
     pub fn input_len(&self) -> usize {
         self.input_len
     }

@@ -12,6 +12,7 @@ pub struct TnnNetwork {
 }
 
 impl TnnNetwork {
+    /// Build a network from layers whose output/input lengths chain.
     pub fn new(layers: Vec<ColumnLayer>) -> Self {
         assert!(!layers.is_empty());
         for w in layers.windows(2) {
@@ -24,15 +25,19 @@ impl TnnNetwork {
         TnnNetwork { layers }
     }
 
+    /// The layer stack.
     pub fn layers(&self) -> &[ColumnLayer] {
         &self.layers
     }
+    /// Mutable access to the layer stack.
     pub fn layers_mut(&mut self) -> &mut [ColumnLayer] {
         &mut self.layers
     }
+    /// Input lines expected by the first layer.
     pub fn input_len(&self) -> usize {
         self.layers[0].input_len()
     }
+    /// Output lines produced by the last layer.
     pub fn output_len(&self) -> usize {
         self.layers.last().unwrap().output_len()
     }
@@ -101,6 +106,7 @@ pub struct VoteClassifier {
 }
 
 impl VoteClassifier {
+    /// A classifier for `output_len` lines over `num_classes` classes.
     pub fn new(output_len: usize, num_classes: usize) -> Self {
         VoteClassifier {
             votes: vec![vec![0; num_classes]; output_len],

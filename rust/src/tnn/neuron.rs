@@ -147,6 +147,7 @@ pub struct NeuronBody {
 }
 
 impl NeuronBody {
+    /// A body with firing threshold `theta` (potential at 0).
     pub fn new(theta: u32) -> Self {
         NeuronBody {
             potential: 0,
@@ -173,6 +174,7 @@ impl NeuronBody {
         }
     }
 
+    /// When the neuron fired this gamma (NONE if it has not).
     pub fn fired_at(&self) -> SpikeTime {
         self.fired_at
     }

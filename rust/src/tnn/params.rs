@@ -12,12 +12,14 @@ pub struct TnnParams {
     /// Unit (`aclk`) cycles per gamma (`gclk`) cycle. Must be at least
     /// `2 * t_max()` so a latest-possible spike's full RNL ramp fits.
     pub gamma_cycles: u32,
-    /// STDP case probabilities (Bernoulli parameters of the BRV streams fed
-    /// to the `incdec` macro). Names follow [6]: capture / minus / search /
-    /// backoff.
+    /// STDP capture probability (Bernoulli parameter of the BRV stream fed
+    /// to the `incdec` macro; names follow [6]).
     pub mu_capture: f64,
+    /// STDP minus probability.
     pub mu_minus: f64,
+    /// STDP search probability.
     pub mu_search: f64,
+    /// STDP backoff probability.
     pub mu_backoff: f64,
     /// Whether the bimodal stabilization function (`stabilize_func` macro) is
     /// applied on top of the case probabilities.

@@ -49,6 +49,7 @@ pub struct RnlSynapse {
 }
 
 impl RnlSynapse {
+    /// A synapse with initial `weight` (clamped semantics up to `w_max`).
     pub fn new(weight: u8, w_max: u8) -> Self {
         assert!(weight <= w_max, "weight {weight} exceeds w_max {w_max}");
         RnlSynapse {

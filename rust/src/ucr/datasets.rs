@@ -15,12 +15,16 @@ use crate::util::Rng64;
 /// One dataset configuration (name, series length p, clusters q).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct UcrConfig {
+    /// Dataset name (UCR archive spelling).
     pub name: &'static str,
+    /// Series length = synapse lines per neuron.
     pub p: usize,
+    /// Cluster count = neurons per column.
     pub q: usize,
 }
 
 impl UcrConfig {
+    /// Column synapse count (p·q — the Fig. 11/12 x-axis).
     pub fn synapses(&self) -> usize {
         self.p * self.q
     }
@@ -79,8 +83,11 @@ pub fn ucr_suite() -> Vec<UcrConfig> {
 /// `labels[s]` the ground-truth cluster.
 #[derive(Clone, Debug)]
 pub struct UcrData {
+    /// The geometry/configuration the data was generated for.
     pub config: UcrConfig,
+    /// Generated series, each length-p in [0,1].
     pub series: Vec<Vec<f64>>,
+    /// Ground-truth cluster per series.
     pub labels: Vec<usize>,
 }
 

@@ -9,16 +9,24 @@ use std::time::{Duration, Instant};
 /// One benchmark measurement summary (times are per-iteration).
 #[derive(Clone, Debug)]
 pub struct BenchStats {
+    /// Benchmark name.
     pub name: String,
+    /// Samples collected.
     pub samples: usize,
+    /// Iterations per sample (chosen adaptively).
     pub iters_per_sample: u64,
+    /// Mean per-iteration time.
     pub mean: Duration,
+    /// Median per-iteration time (the headline number).
     pub median: Duration,
+    /// Fastest sample.
     pub min: Duration,
+    /// 95th-percentile sample.
     pub p95: Duration,
 }
 
 impl BenchStats {
+    /// One-line report (median/mean/min/p95 + sampling configuration).
     pub fn report(&self) -> String {
         format!(
             "{:<48} median {:>12} mean {:>12} min {:>12} p95 {:>12} ({} samples x {} iters)",
@@ -38,6 +46,7 @@ impl BenchStats {
     }
 }
 
+/// Human-readable duration (ns/µs/ms/s with sensible precision).
 pub fn fmt_dur(d: Duration) -> String {
     let ns = d.as_secs_f64() * 1e9;
     if ns < 1e3 {

@@ -8,16 +8,24 @@ use std::fmt::Write as _;
 /// A JSON value builder.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// A float (NaN/Inf serialize as `null`).
     Num(f64),
+    /// An integer (serialized without a decimal point).
     Int(i64),
+    /// A string (escaped on write).
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object with stable (insertion) field order.
     Obj(Vec<(String, Json)>),
 }
 
 impl Json {
+    /// An empty object (chain [`Json::set`] to add fields).
     pub fn obj() -> Json {
         Json::Obj(Vec::new())
     }

@@ -17,9 +17,13 @@ pub struct KvDoc {
 /// Parse error with line information.
 #[derive(Debug)]
 pub enum KvError {
+    /// Line `n` is not `key = value` (raw line echoed).
     BadLine(usize, String),
+    /// A required key is absent.
     Missing(String),
+    /// A key's value failed to parse as the requested type.
     BadValue(String, String, &'static str),
+    /// Underlying file I/O error.
     Io(std::io::Error),
 }
 
@@ -54,6 +58,7 @@ impl From<std::io::Error> for KvError {
 }
 
 impl KvDoc {
+    /// Parse a document from text.
     pub fn parse(text: &str) -> Result<KvDoc, KvError> {
         let mut map = BTreeMap::new();
         let mut section = String::new();
@@ -79,38 +84,47 @@ impl KvDoc {
         Ok(KvDoc { map })
     }
 
+    /// Load and parse a file.
     pub fn load(path: impl AsRef<Path>) -> Result<KvDoc, KvError> {
         Self::parse(&std::fs::read_to_string(path)?)
     }
 
+    /// Set (or overwrite) a key.
     pub fn set(&mut self, key: &str, value: impl ToString) {
         self.map.insert(key.to_string(), value.to_string());
     }
 
+    /// Raw string value of a key.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.map.get(key).map(|s| s.as_str())
     }
 
+    /// Raw value of a key that must exist.
     pub fn require(&self, key: &str) -> Result<&str, KvError> {
         self.get(key).ok_or_else(|| KvError::Missing(key.into()))
     }
 
+    /// Raw value with a default.
     pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
     }
 
+    /// Typed accessor: usize.
     pub fn get_usize(&self, key: &str) -> Result<Option<usize>, KvError> {
         self.typed(key, "usize", |s| s.parse().ok())
     }
 
+    /// Typed accessor: u64.
     pub fn get_u64(&self, key: &str) -> Result<Option<u64>, KvError> {
         self.typed(key, "u64", |s| s.parse().ok())
     }
 
+    /// Typed accessor: f64.
     pub fn get_f64(&self, key: &str) -> Result<Option<f64>, KvError> {
         self.typed(key, "f64", |s| s.parse().ok())
     }
 
+    /// Typed accessor: bool (`true/false`, `1/0`, `yes/no`).
     pub fn get_bool(&self, key: &str) -> Result<Option<bool>, KvError> {
         self.typed(key, "bool", |s| match s {
             "true" | "1" | "yes" => Some(true),
@@ -157,6 +171,7 @@ impl KvDoc {
         out
     }
 
+    /// All keys, sorted (BTreeMap order).
     pub fn keys(&self) -> impl Iterator<Item = &str> {
         self.map.keys().map(|s| s.as_str())
     }

@@ -1,0 +1,46 @@
+//! CLI help smoke tests: every subcommand advertised by the shared command
+//! table renders usage and help text without panicking, and the global
+//! usage is generated from the same table `main.rs` dispatches on — the
+//! anti-drift guarantee of the one-table design.
+
+use tnn7::cli::{command, help_for, usage, COMMANDS};
+
+#[test]
+fn every_advertised_subcommand_prints_help() {
+    assert!(!COMMANDS.is_empty());
+    for c in COMMANDS {
+        let h = help_for(c.name)
+            .unwrap_or_else(|| panic!("subcommand {} must have help text", c.name));
+        assert!(h.contains(c.name), "{}'s help must show its own synopsis", c.name);
+        assert!(
+            h.lines().count() >= 2,
+            "{}'s help should include at least one detail line",
+            c.name
+        );
+    }
+}
+
+#[test]
+fn global_usage_covers_the_dispatch_table() {
+    let u = usage();
+    for name in ["report", "run", "sweep", "synth", "serve", "selftest", "help"] {
+        assert!(
+            command(name).is_some(),
+            "dispatchable subcommand {name} missing from the table"
+        );
+        assert!(u.contains(name), "usage must advertise {name}");
+    }
+    // The flags that drifted historically must be present in the synopses…
+    for flag in ["--engine", "--quick", "--dataset", "--layers", "--no-cache"] {
+        assert!(u.contains(flag), "usage must advertise {flag}");
+    }
+    // …and the config-override keys in the per-command detail lines.
+    let run_help = help_for("run").unwrap();
+    for key in ["threads=", "seed=", "gamma_instances="] {
+        assert!(run_help.contains(key), "run help must advertise {key}");
+    }
+    let sweep_help = help_for("sweep").unwrap();
+    for key in ["geometries=", "flows=", "engines=", "cache_dir="] {
+        assert!(sweep_help.contains(key), "sweep help must advertise {key}");
+    }
+}

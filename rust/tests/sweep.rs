@@ -1,0 +1,120 @@
+//! Sweep subsystem end-to-end tests: cache resumability (delete one point,
+//! re-run, only that point recomputes, and the merged report is
+//! byte-identical to an uncached full run) and worker-thread-count
+//! invariance of the deterministic report.
+
+use std::path::PathBuf;
+use tnn7::sweep::{run_sweep, tsv, PointCache, SweepSpec};
+use tnn7::util::kv::KvDoc;
+
+/// A 4-point grid (2 geometries × 2 flows) small enough for test budgets.
+fn small_spec(tag: &str, threads: usize) -> SweepSpec {
+    let doc = KvDoc::parse(&format!(
+        "name = test-{tag}\n\
+         geometries = 5x2,6x2\n\
+         flows = asap7,tnn7\n\
+         engines = golden\n\
+         seeds = 3\n\
+         per_cluster = 3\n\
+         epochs = 1\n\
+         threads = {threads}\n"
+    ))
+    .unwrap();
+    let mut spec = SweepSpec::from_kv(&doc).unwrap();
+    let base = std::env::temp_dir().join(format!("tnn7_sweep_{tag}_{}", std::process::id()));
+    spec.cache_dir = base.join("cache");
+    spec.out_dir = base.join("out");
+    spec
+}
+
+fn cleanup(spec: &SweepSpec) {
+    if let Some(base) = spec.cache_dir.parent() {
+        std::fs::remove_dir_all(base).ok();
+    }
+}
+
+#[test]
+fn warm_cache_resumes_and_recomputes_only_invalidated_points() {
+    let spec = small_spec("resume", 2);
+    cleanup(&spec); // stale state from a previous crashed run
+
+    // Cold run: every point computes and the cache fills.
+    let cold = run_sweep(&spec, true).unwrap();
+    assert_eq!(cold.rows.len(), 4);
+    assert_eq!((cold.computed, cold.cached), (4, 0));
+    let cold_tsv = tsv(&cold);
+
+    // Fully warm run: nothing recomputes; the merged report is unchanged.
+    let warm = run_sweep(&spec, true).unwrap();
+    assert_eq!((warm.computed, warm.cached), (0, 4));
+    assert_eq!(tsv(&warm), cold_tsv, "warm report must be byte-identical");
+
+    // Invalidate exactly one cached point…
+    let cache = PointCache::open(&spec.cache_dir).unwrap();
+    let victim = warm.rows[2].point.clone();
+    assert!(cache.invalidate(&victim), "victim entry must exist");
+    // …and re-run: only that point recomputes, everything else is served
+    // warm, and the merged report is still byte-identical.
+    let resumed = run_sweep(&spec, true).unwrap();
+    assert_eq!((resumed.computed, resumed.cached), (1, 3));
+    assert!(!resumed.rows[2].cached, "the invalidated point recomputed");
+    assert!(
+        resumed.rows.iter().enumerate().all(|(i, r)| r.cached || i == 2),
+        "no other point may recompute"
+    );
+    assert_eq!(tsv(&resumed), cold_tsv, "resumed report must be byte-identical");
+
+    // A fully uncached run (cache bypassed in both directions) agrees too:
+    // cached results are real measurements, not stale approximations.
+    let uncached = run_sweep(&spec, false).unwrap();
+    assert_eq!((uncached.computed, uncached.cached), (4, 0));
+    assert_eq!(tsv(&uncached), cold_tsv, "uncached rerun must be byte-identical");
+
+    cleanup(&spec);
+}
+
+#[test]
+fn reports_are_invariant_under_worker_thread_count() {
+    let mut reference: Option<String> = None;
+    for threads in [1usize, 2, 4] {
+        let spec = small_spec(&format!("threads{threads}"), threads);
+        cleanup(&spec);
+        let outcome = run_sweep(&spec, false).unwrap();
+        assert_eq!(outcome.rows.len(), 4);
+        assert_eq!(outcome.computed, 4);
+        let t = tsv(&outcome);
+        match &reference {
+            None => reference = Some(t),
+            Some(r) => assert_eq!(
+                &t, r,
+                "deterministic sweep fields must be bit-exact at {threads} threads"
+            ),
+        }
+        cleanup(&spec);
+    }
+}
+
+#[test]
+fn sweep_outputs_land_in_out_dir() {
+    let spec = small_spec("outputs", 1);
+    cleanup(&spec);
+    let outcome = run_sweep(&spec, true).unwrap();
+    let (tsv_path, json_path) = tnn7::sweep::write_reports(&outcome).unwrap();
+    assert_eq!(tsv_path, spec.out_dir.join("sweep.tsv"));
+    assert_eq!(json_path, spec.out_dir.join("BENCH_sweep.json"));
+    let tsv_text = std::fs::read_to_string(&tsv_path).unwrap();
+    assert_eq!(tsv_text, tsv(&outcome));
+    let json_text = std::fs::read_to_string(&json_path).unwrap();
+    assert!(json_text.contains("\"pareto\""));
+    assert!(json_text.contains("\"synth_runtime_ratio\""));
+    // Both flows present at both geometries → two ratio pairs.
+    assert_eq!(tnn7::sweep::synth_ratio_curve(&outcome.rows).len(), 2);
+    // Cache files are content-addressed .kv entries.
+    let entries: Vec<PathBuf> = std::fs::read_dir(&spec.cache_dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .collect();
+    assert_eq!(entries.len(), 4);
+    assert!(entries.iter().all(|p| p.extension().is_some_and(|e| e == "kv")));
+    cleanup(&spec);
+}
