@@ -1,0 +1,116 @@
+//! Compiled-netlist-program throughput: the interpreted 64-lane engine vs
+//! the compiled lane-block engine (`gates::compile`) across lane-block
+//! widths `W` and settle worker counts, on the flagship 82×2 TwoLeadECG
+//! column and a 16×8 (128-synapse) MNIST-layer-shaped geometry.
+//!
+//! Every iteration simulates the same number of *lane-cycles* on every
+//! configuration, so medians compare like for like; the headline metric is
+//! net·lane-cycles per second. Bit-exactness of the compiled engine at
+//! `W = 1` against the interpreter is asserted before any timing. Records
+//! the full matrix in `BENCH_compiled.json`.
+//!
+//! Run with `cargo bench --bench compiled_sim` (set `TNN7_BENCH_FAST=1`
+//! for a CI-speed configuration).
+
+use tnn7::gates::column_design::{build_column, BrvSource};
+use tnn7::gates::{collect_toggles, SimBackend};
+use tnn7::util::bench::{black_box, Bencher};
+use tnn7::util::json::Json;
+
+fn main() {
+    let fast = std::env::var("TNN7_BENCH_FAST").is_ok();
+    // Lane-cycles per logical iteration: a multiple of 64·W for every
+    // tested W, so all configurations do identical work per iteration.
+    let lane_cycles: u64 = if fast { 512 } else { 4096 };
+    // (words, threads) matrix for the compiled engine.
+    let configs: &[(usize, usize)] = if fast {
+        &[(1, 1), (4, 1), (4, 2)]
+    } else {
+        &[(1, 1), (2, 1), (4, 1), (4, 2), (4, 4)]
+    };
+    // The acceptance geometries: the 82×2 UCR flagship and a ≥16×8 shape.
+    let geoms: &[(&str, usize, usize)] = &[("TwoLeadECG-82x2", 82, 2), ("mnist-layer-16x8", 16, 8)];
+
+    let b = Bencher::from_env();
+    let mut design_rows: Vec<Json> = Vec::new();
+    for &(name, p, q) in geoms {
+        let d = build_column(p, q, (p as u32 * 7) / 4, BrvSource::Lfsr);
+        let nl = &d.netlist;
+        println!(
+            "{name}: {} nets, {} macro instances, {lane_cycles} lane-cycles/iter",
+            nl.len(),
+            nl.macros.len()
+        );
+
+        // Equivalence guard before any timing: compiled W=1 reproduces the
+        // interpreter's toggle report bit for bit.
+        let a = collect_toggles(nl, 256, 3, SimBackend::BitParallel64).unwrap();
+        let c = collect_toggles(
+            nl,
+            256,
+            3,
+            SimBackend::Compiled { words: 1, threads: 1 },
+        )
+        .unwrap();
+        assert_eq!(a.cycles, c.cycles, "{name}: cycle accounting");
+        assert_eq!(a.toggles, c.toggles, "{name}: compiled W=1 != interpreter");
+
+        let rate = |median_ns: f64| nl.len() as f64 * lane_cycles as f64 / (median_ns * 1e-9);
+        let s_word = b.bench(&format!("interpreted bit-parallel-64 ({name})"), || {
+            let r = collect_toggles(nl, lane_cycles, 7, SimBackend::BitParallel64).unwrap();
+            black_box(r.cycles)
+        });
+        println!("{}", s_word.report());
+        let word_rate = rate(s_word.median_ns());
+
+        let mut compiled_rows: Vec<Json> = Vec::new();
+        for &(words, threads) in configs {
+            let s = b.bench(
+                &format!("compiled W={words} threads={threads} ({name})"),
+                || {
+                    let r = collect_toggles(
+                        nl,
+                        lane_cycles,
+                        7,
+                        SimBackend::Compiled { words, threads },
+                    )
+                    .unwrap();
+                    black_box(r.cycles)
+                },
+            );
+            println!("{}", s.report());
+            let speedup = s_word.median_ns() / s.median_ns();
+            println!(
+                "  => W={words} t={threads}: {:.2e} net·lane-cycles/s, {speedup:.2}x vs interpreted",
+                rate(s.median_ns())
+            );
+            compiled_rows.push(
+                Json::obj()
+                    .set("words", words)
+                    .set("threads", threads)
+                    .set("median_ns", s.median_ns())
+                    .set("net_lane_cycles_per_sec", rate(s.median_ns()))
+                    .set("speedup_vs_interpreted", speedup),
+            );
+        }
+        design_rows.push(
+            Json::obj()
+                .set("design", name)
+                .set("p", p)
+                .set("q", q)
+                .set("nets", nl.len())
+                .set("lane_cycles_per_iter", lane_cycles as f64)
+                .set(
+                    "interpreted",
+                    Json::obj()
+                        .set("median_ns", s_word.median_ns())
+                        .set("net_lane_cycles_per_sec", word_rate),
+                )
+                .set("compiled", Json::Arr(compiled_rows)),
+        );
+    }
+
+    let json = Json::obj().set("designs", Json::Arr(design_rows));
+    std::fs::write("BENCH_compiled.json", json.to_pretty()).expect("write BENCH_compiled.json");
+    println!("wrote BENCH_compiled.json");
+}

@@ -32,14 +32,18 @@ pub const COMMANDS: &[CommandSpec] = &[
     },
     CommandSpec {
         name: "run",
-        synopsis: "run ucr|mnist [--dataset NAME] [--layers N] [--engine xla|golden|batched|gate] [key=value ...]",
+        synopsis: "run ucr|mnist [--dataset NAME] [--layers N] [--engine xla|golden|batched|gate] [--sim-backend B] [key=value ...]",
         details: &[
             "run a workload end to end with online STDP learning",
             "--dataset NAME   (ucr) dataset from the 36-design suite, default TwoLeadECG",
             "--layers N       (mnist) network depth, default 3",
             "--engine KIND    ucr: xla|golden|batched|gate; mnist: golden|batched",
+            "--sim-backend B  gate-engine batched-inference simulator:",
+            "                 scalar|bit-parallel-64|compiled (winners identical; compiled",
+            "                 runs sim_words x 64 lanes per pass, sharded over threads=)",
             "key=value        config overrides: seed=, gamma_instances=, channel_depth=,",
-            "                 batch=, threads=, artifacts_dir=, out_dir=, engine=",
+            "                 batch=, threads=, artifacts_dir=, out_dir=, engine=,",
+            "                 sim_backend=, sim_words=",
         ],
     },
     CommandSpec {
@@ -54,7 +58,9 @@ pub const COMMANDS: &[CommandSpec] = &[
             "key=value        spec overrides: name=, geometries=8x2,12x2, datasets=TwoLeadECG,",
             "                 theta=default|sparse|fixed:<n>, flows=asap7,tnn7,",
             "                 engines=golden,batched,gate, seeds=, per_cluster=, epochs=,",
-            "                 threads=, cache_dir=, out_dir=",
+            "                 threads=, cache_dir=, out_dir=, sim_backend=, sim_words=",
+            "                 (sim_backend/sim_words are execution knobs like threads=:",
+            "                 results and cache keys are identical under every backend)",
         ],
     },
     CommandSpec {
@@ -177,6 +183,8 @@ mod tests {
             "artifacts_dir=a",
             "out_dir=o",
             "engine=golden",
+            "sim_backend=compiled",
+            "sim_words=4",
         ] {
             cfg.apply_overrides(&[kv.to_string()])
                 .unwrap_or_else(|e| panic!("advertised key {kv:?} rejected: {e}"));
@@ -199,6 +207,8 @@ mod tests {
             "threads=2",
             "cache_dir=c",
             "out_dir=o",
+            "sim_backend=compiled",
+            "sim_words=4",
         ] {
             spec.apply_overrides(&[kv.to_string()])
                 .unwrap_or_else(|e| panic!("advertised sweep key {kv:?} rejected: {e}"));

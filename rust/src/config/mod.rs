@@ -2,6 +2,7 @@
 //! (`configs/*.kv`), with CLI-style overrides — the launcher's config
 //! system.
 
+use crate::gates::SimBackend;
 use crate::util::kv::KvDoc;
 use std::path::PathBuf;
 
@@ -72,6 +73,14 @@ pub struct RunConfig {
     /// consumed by `SweepSpec::default()` (`crate::sweep`), overridable
     /// per sweep via the spec file or `cache_dir=` override.
     pub cache_dir: PathBuf,
+    /// Gate-level simulator backend for the gate engine's batched
+    /// inference sweeps (`sim_backend` key / `--sim-backend` flag:
+    /// `scalar` | `bit-parallel-64` | `compiled`). Winners are bit-exact
+    /// across backends — a throughput knob, never a semantics knob.
+    pub sim_backend: SimBackend,
+    /// Lane-block width `W` for the compiled backend (`sim_words` key):
+    /// `W` × 64 lanes per compiled pass, `1..=64`.
+    pub sim_words: usize,
 }
 
 impl Default for RunConfig {
@@ -86,6 +95,8 @@ impl Default for RunConfig {
             threads: 0,
             out_dir: "target/reports".into(),
             cache_dir: "target/sweep-cache".into(),
+            sim_backend: SimBackend::BitParallel64,
+            sim_words: crate::gates::DEFAULT_SIM_WORDS,
         }
     }
 }
@@ -121,8 +132,28 @@ impl RunConfig {
         if let Some(v) = doc.get("cache_dir") {
             c.cache_dir = v.into();
         }
+        if let Some(v) = doc.get("sim_backend") {
+            c.sim_backend = SimBackend::parse(v)?;
+        }
+        if let Some(v) = doc.get_usize("sim_words")? {
+            c.sim_words = v;
+        }
         c.validate()?;
         Ok(c)
+    }
+
+    /// The fully-resolved simulator backend: a `compiled` selection picks
+    /// up the `sim_words` lane-block width and the `threads` worker count
+    /// (the same key the batched engine and sweep executor use; 0 =
+    /// machine parallelism).
+    pub fn resolved_sim_backend(&self) -> SimBackend {
+        match self.sim_backend {
+            SimBackend::Compiled { .. } => SimBackend::Compiled {
+                words: self.sim_words,
+                threads: self.threads,
+            },
+            b => b,
+        }
     }
 
     /// Apply `key=value` CLI overrides.
@@ -147,6 +178,8 @@ impl RunConfig {
                 "threads" => self.threads = merged.threads,
                 "out_dir" => self.out_dir = merged.out_dir.clone(),
                 "cache_dir" => self.cache_dir = merged.cache_dir.clone(),
+                "sim_backend" => self.sim_backend = merged.sim_backend,
+                "sim_words" => self.sim_words = merged.sim_words,
                 other => anyhow::bail!("unknown config key {other:?}"),
             }
         }
@@ -158,6 +191,10 @@ impl RunConfig {
         anyhow::ensure!(self.channel_depth >= 1, "channel_depth must be >= 1");
         anyhow::ensure!(self.batch >= 1, "batch must be >= 1");
         anyhow::ensure!(self.gamma_instances >= 1, "gamma_instances must be >= 1");
+        anyhow::ensure!(
+            (1..=64).contains(&self.sim_words),
+            "sim_words must be in 1..=64"
+        );
         Ok(())
     }
 }
@@ -215,6 +252,27 @@ mod tests {
         assert_eq!(c.cache_dir, PathBuf::from("target/sweep-cache"));
         c.apply_overrides(&["cache_dir=elsewhere".into()]).unwrap();
         assert_eq!(c.cache_dir, PathBuf::from("elsewhere"));
+    }
+
+    #[test]
+    fn sim_backend_and_words_parse_and_resolve() {
+        let doc = KvDoc::parse("sim_backend = compiled\nsim_words = 4\nthreads = 2\n").unwrap();
+        let c = RunConfig::from_kv(&doc).unwrap();
+        assert_eq!(c.sim_words, 4);
+        assert_eq!(
+            c.resolved_sim_backend(),
+            SimBackend::Compiled { words: 4, threads: 2 }
+        );
+        let c = RunConfig::default();
+        assert_eq!(c.resolved_sim_backend(), SimBackend::BitParallel64);
+        let mut c = RunConfig::default();
+        c.apply_overrides(&["sim_backend=scalar".into(), "sim_words=8".into()])
+            .unwrap();
+        assert_eq!(c.sim_backend, SimBackend::Scalar);
+        assert_eq!(c.sim_words, 8);
+        assert!(c.apply_overrides(&["sim_words=0".into()]).is_err());
+        assert!(c.apply_overrides(&["sim_words=65".into()]).is_err());
+        assert!(c.apply_overrides(&["sim_backend=vcs".into()]).is_err());
     }
 
     #[test]

@@ -118,10 +118,22 @@ impl Engine<'_> {
         }
     }
 
+    /// Select the gate-level simulator backend behind the gate engine's
+    /// batched inference sweeps ([`GateColumn::set_sim_backend`]); a no-op
+    /// for every other engine. Winners are bit-exact across backends, so
+    /// this only changes throughput — never results (which is what keeps
+    /// sweep cache keys backend-stable, see `crate::sweep`).
+    pub fn set_sim_backend(&mut self, backend: crate::gates::SimBackend) {
+        if let Engine::Gate(g) = self {
+            g.set_sim_backend(backend);
+        }
+    }
+
     /// Inference-only winners over a whole item set. The gate engine routes
-    /// through its 64-lane word-parallel netlist sweep
-    /// ([`GateColumn::infer_batch`] — bit-exact with the per-item path);
-    /// every other engine loops [`Engine::infer_winner`].
+    /// through its batched netlist sweep ([`GateColumn::infer_batch`] — 64
+    /// interpreter lanes or `words × 64` compiled lanes per pass, bit-exact
+    /// with the per-item path); every other engine loops
+    /// [`Engine::infer_winner`].
     pub fn infer_winners(&mut self, items: &[GammaItem]) -> crate::Result<Vec<Option<usize>>> {
         if let Engine::Gate(g) = self {
             let volleys: Vec<&[SpikeTime]> = items.iter().map(|i| i.volley.as_slice()).collect();
@@ -519,11 +531,17 @@ mod tests {
             assert_eq!(gate.weights(), golden.weights(), "epoch {epoch}: weights");
         }
 
-        // Draw-free inference agrees too — per item and through the gate
-        // engine's 64-lane word-parallel batch path.
+        // Draw-free inference agrees too — per item, through the gate
+        // engine's 64-lane word-parallel batch path, and through the
+        // compiled lane-block backend (set_sim_backend is a no-op on
+        // golden, so calling it on both engines is symmetric).
         let wg = golden.infer_winners(&items).unwrap();
         let wh = gate.infer_winners(&items).unwrap();
         assert_eq!(wg, wh, "batched inference winners");
+        golden.set_sim_backend(crate::gates::SimBackend::Compiled { words: 2, threads: 1 });
+        gate.set_sim_backend(crate::gates::SimBackend::Compiled { words: 2, threads: 1 });
+        let wc = gate.infer_winners(&items).unwrap();
+        assert_eq!(wg, wc, "compiled batched inference winners");
         for item in &items {
             assert_eq!(
                 golden.infer_winner(&item.volley).unwrap(),

@@ -1,0 +1,954 @@
+//! Compiled netlist programs: the gate-level hot loop as a flat
+//! instruction stream over multi-word lane blocks.
+//!
+//! [`WordSimulator`](super::wordsim::WordSimulator) interprets the
+//! level-packed schedule by re-matching on [`Gate`] variants and
+//! re-resolving macro pins every settle. This module *compiles* that
+//! schedule once — [`CompiledProgram::compile`] lowers
+//! [`Netlist::levelize_buckets`] output into a flat stream of fixed-width
+//! instructions (a `u8` opcode plus pre-resolved operand net slots), with
+//! the macro pins of each instance grouped per level so the instance's
+//! behavioral model evaluates **once per level** and its pins commit as
+//! plain stores (no per-pin input comparison at all) — and
+//! [`CompiledSim`] executes it:
+//!
+//! * **Lane blocks.** Every net carries `W` `u64` words
+//!   (`W` = [`CompiledSim::words`], the `sim_words` config key), so one
+//!   settle pass advances `W × 64` independent stimulus lanes. Word `w`
+//!   of the compiled engine is bit-for-bit an independent 64-lane
+//!   `WordSimulator` run under the same stimulus, and lane 0 of word 0
+//!   is the scalar engine — both enforced by `tests/compiled_sim.rs`.
+//! * **Sharded levels.** Each level's instruction slice is split into
+//!   contiguous, work-indexed chunks across `threads` `std::thread`
+//!   workers (chunk `k` of a level is always the same instructions, no
+//!   matter which worker runs it). Every instruction writes only its own
+//!   destination net's value words and toggle counter, and reads only
+//!   nets settled in earlier levels, so the partitioning cannot change
+//!   any value or toggle count: results are **bit-exact at any worker
+//!   count** — the determinism contract of `docs/ARCHITECTURE.md`.
+//!
+//! The interpreted engines stay as the reference: the differential suite
+//! (`tests/compiled_sim.rs`) holds the compiled engine to exact value and
+//! toggle equality against both of them over the shared
+//! [`super::CONFORMANCE_GEOMETRIES`] matrix.
+
+use super::macros9::{self, MacroKind, MacroState, WordMacroState};
+use super::netlist::{Gate, NetId, Netlist};
+use std::collections::BTreeMap;
+use std::sync::Barrier;
+
+/// Lanes per word (one bit per lane).
+const LANES: usize = macros9::WORD_LANES;
+
+/// Sentinel for "no reset net" in a [`DffSlot`].
+const NO_RST: u32 = u32::MAX;
+
+/// Sentinel in a macro group's gather list for an input position outside
+/// the group's dep union: read as constant 0 instead of touching the net.
+const NO_NET: u32 = u32::MAX;
+
+/// Compiled opcodes. `Macro` evaluates one macro instance for one level
+/// and commits all of that level's pins of the instance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Op {
+    Buf,
+    Not,
+    And,
+    Or,
+    Xor,
+    Mux,
+    Macro,
+}
+
+/// One fixed-width instruction: opcode + pre-resolved operand slots.
+/// Gate ops read nets `a`/`b`/`c` (Mux: `a` = select, `b` = else-net,
+/// `c` = then-net) and write net `dst`; `Macro` reads group `a` of
+/// [`CompiledProgram::groups`] (its `dst`/`b`/`c` are unused).
+#[derive(Clone, Copy, Debug)]
+struct Instr {
+    op: Op,
+    dst: u32,
+    a: u32,
+    b: u32,
+    c: u32,
+}
+
+/// One (macro instance, level) evaluation group: which instance to
+/// evaluate and which of its pins commit in this level.
+#[derive(Clone, Copy, Debug)]
+struct MacroGroup {
+    /// Macro instance index (into [`CompiledProgram::minsts`]).
+    inst: u32,
+    /// Range into [`CompiledProgram::group_pins`].
+    pin_start: u32,
+    pin_end: u32,
+    /// Range into [`CompiledProgram::group_gather`]: the instance's full
+    /// input arity, with positions outside this group's dep union set to
+    /// [`NO_NET`]. Restricting settle-time reads to declared deps is what
+    /// keeps the sharded execution race-free — a non-dep input may be
+    /// driven by a net in this very level (levelization only orders pins
+    /// after their *deps*), and by the `pin_deps` contract the committed
+    /// pins' outputs cannot depend on it, so it is read as constant 0.
+    in_start: u32,
+    in_end: u32,
+}
+
+/// Per-instance macro metadata shared by settle groups, `clock` state
+/// stepping and Moore-pin refresh.
+#[derive(Clone, Copy, Debug)]
+struct MInst {
+    kind: MacroKind,
+    /// Range into [`CompiledProgram::minputs`].
+    in_start: u32,
+    in_end: u32,
+    /// Range into [`CompiledProgram::moore_pins`].
+    moore_start: u32,
+    moore_end: u32,
+}
+
+/// One D flip-flop: output net, data net, reset net (`NO_RST` = never
+/// resets) and reset/init value.
+#[derive(Clone, Copy, Debug)]
+struct DffSlot {
+    net: u32,
+    d: u32,
+    rst: u32,
+    init: bool,
+}
+
+/// A netlist lowered to a flat, self-contained instruction stream.
+///
+/// The program copies everything the executor needs out of the source
+/// [`Netlist`] (schedule, operand slots, macro pin tables, DFF table,
+/// constants, port names), so it owns no borrows and outlives the
+/// netlist it was compiled from.
+#[derive(Clone, Debug)]
+pub struct CompiledProgram {
+    /// Design name (inherited from the netlist; labels reports).
+    pub name: String,
+    n_nets: usize,
+    instrs: Vec<Instr>,
+    /// `level_ends[k]` = exclusive end index of level `k` in `instrs`.
+    level_ends: Vec<u32>,
+    groups: Vec<MacroGroup>,
+    /// `(pin, dst net)` pairs, grouped by [`MacroGroup`] ranges.
+    group_pins: Vec<(u8, u32)>,
+    /// Per-group settle gather lists (dep-union inputs; [`NO_NET`] = 0).
+    group_gather: Vec<NetId>,
+    minsts: Vec<MInst>,
+    minputs: Vec<NetId>,
+    /// `(pin, dst net)` pairs of Moore (state-only) macro outputs.
+    moore_pins: Vec<(u8, u32)>,
+    dffs: Vec<DffSlot>,
+    /// Nets driven by `Const(true)`.
+    const_ones: Vec<NetId>,
+    /// Primary-input flags (for the `set_input_net` debug assert).
+    is_input: Vec<bool>,
+    /// Primary inputs: (name, net) — resolved by `bind_inputs`.
+    inputs: Vec<(String, NetId)>,
+    /// Primary outputs: (name, net) — resolved by `bind_outputs`.
+    outputs: Vec<(String, NetId)>,
+    /// Widest macro input list (gather-buffer size).
+    max_macro_inputs: usize,
+}
+
+impl CompiledProgram {
+    /// Lower a netlist's level-packed schedule into a compiled program.
+    /// Errors on true combinational cycles (from `levelize_buckets`).
+    pub fn compile(nl: &Netlist) -> Result<CompiledProgram, String> {
+        let levels = nl.levelize_buckets()?;
+
+        // Per-instance metadata (inputs, Moore pins) for settle + clock.
+        let mut minputs = Vec::new();
+        let mut moore_pins = Vec::new();
+        let mut minsts = Vec::with_capacity(nl.macros.len());
+        let mut max_macro_inputs = 0usize;
+        for m in &nl.macros {
+            let in_start = minputs.len() as u32;
+            minputs.extend_from_slice(&m.inputs);
+            max_macro_inputs = max_macro_inputs.max(m.inputs.len());
+            let moore_start = moore_pins.len() as u32;
+            for (pin, &net) in m.outputs.iter().enumerate() {
+                if m.kind.pin_deps(pin as u8).is_empty() {
+                    moore_pins.push((pin as u8, net));
+                }
+            }
+            minsts.push(MInst {
+                kind: m.kind,
+                in_start,
+                in_end: minputs.len() as u32,
+                moore_start,
+                moore_end: moore_pins.len() as u32,
+            });
+        }
+
+        // Instruction stream: per level, gate ops in net order, then one
+        // Macro group per instance (ascending instance id) covering every
+        // Mealy pin of that instance scheduled in this level.
+        let mut instrs = Vec::new();
+        let mut level_ends = Vec::with_capacity(levels.len());
+        let mut groups: Vec<MacroGroup> = Vec::new();
+        let mut group_pins: Vec<(u8, u32)> = Vec::new();
+        let mut group_gather: Vec<NetId> = Vec::new();
+        for level in &levels {
+            let mut by_inst: BTreeMap<u32, Vec<(u8, u32)>> = BTreeMap::new();
+            for &id in level {
+                match nl.gates[id as usize] {
+                    Gate::Buf(a) => instrs.push(Instr { op: Op::Buf, dst: id, a, b: 0, c: 0 }),
+                    Gate::Not(a) => instrs.push(Instr { op: Op::Not, dst: id, a, b: 0, c: 0 }),
+                    Gate::And(a, b) => instrs.push(Instr { op: Op::And, dst: id, a, b, c: 0 }),
+                    Gate::Or(a, b) => instrs.push(Instr { op: Op::Or, dst: id, a, b, c: 0 }),
+                    Gate::Xor(a, b) => instrs.push(Instr { op: Op::Xor, dst: id, a, b, c: 0 }),
+                    Gate::Mux(s, a, b) => {
+                        instrs.push(Instr { op: Op::Mux, dst: id, a: s, b: a, c: b })
+                    }
+                    Gate::MacroOut { inst, pin } => {
+                        by_inst.entry(inst).or_default().push((pin, id));
+                    }
+                    ref g => {
+                        // Sources and state elements are never scheduled
+                        // by levelize_buckets.
+                        unreachable!("non-combinational gate {g:?} in schedule")
+                    }
+                }
+            }
+            for (inst, pins) in by_inst {
+                let m = &nl.macros[inst as usize];
+                // Settle gather = union of the group's pins' declared deps
+                // (all strictly earlier levels); every other input position
+                // reads as constant 0 — output-preserving by the pin_deps
+                // contract, and the reason sharded settles cannot race on a
+                // same-level non-dep driver.
+                let mut in_union = vec![false; m.inputs.len()];
+                for &(pin, _) in &pins {
+                    for &d in m.kind.pin_deps(pin) {
+                        in_union[d] = true;
+                    }
+                }
+                let in_start = group_gather.len() as u32;
+                for (k, &src) in m.inputs.iter().enumerate() {
+                    group_gather.push(if in_union[k] { src } else { NO_NET });
+                }
+                let pin_start = group_pins.len() as u32;
+                group_pins.extend(pins);
+                groups.push(MacroGroup {
+                    inst,
+                    pin_start,
+                    pin_end: group_pins.len() as u32,
+                    in_start,
+                    in_end: group_gather.len() as u32,
+                });
+                instrs.push(Instr {
+                    op: Op::Macro,
+                    dst: 0,
+                    a: (groups.len() - 1) as u32,
+                    b: 0,
+                    c: 0,
+                });
+            }
+            level_ends.push(instrs.len() as u32);
+        }
+
+        // Sequential + source side tables.
+        let mut dffs = Vec::new();
+        let mut const_ones = Vec::new();
+        let mut is_input = vec![false; nl.gates.len()];
+        for (i, g) in nl.gates.iter().enumerate() {
+            match *g {
+                Gate::Dff { d, rst, init } => dffs.push(DffSlot {
+                    net: i as u32,
+                    d,
+                    rst: rst.unwrap_or(NO_RST),
+                    init,
+                }),
+                Gate::Const(true) => const_ones.push(i as NetId),
+                Gate::Input => is_input[i] = true,
+                _ => {}
+            }
+        }
+
+        Ok(CompiledProgram {
+            name: nl.name.clone(),
+            n_nets: nl.gates.len(),
+            instrs,
+            level_ends,
+            groups,
+            group_pins,
+            group_gather,
+            minsts,
+            minputs,
+            moore_pins,
+            dffs,
+            const_ones,
+            is_input,
+            inputs: nl.inputs.clone(),
+            outputs: nl.outputs.clone(),
+            max_macro_inputs,
+        })
+    }
+
+    /// Net count of the compiled design.
+    pub fn net_count(&self) -> usize {
+        self.n_nets
+    }
+
+    /// Combinational levels in the schedule.
+    pub fn level_count(&self) -> usize {
+        self.level_ends.len()
+    }
+
+    /// Total instructions (gate ops + macro groups).
+    pub fn instr_count(&self) -> usize {
+        self.instrs.len()
+    }
+
+    /// (instance, level) macro evaluation groups — the number of macro
+    /// model evaluations one settle performs per word.
+    pub fn macro_group_count(&self) -> usize {
+        self.groups.len()
+    }
+}
+
+/// Contiguous work-indexed chunk `[lo, hi)` of `len` items for worker
+/// `wid` of `workers` — the frozen partitioning rule of the sharded
+/// settle (chunk boundaries depend only on `(len, wid, workers)`).
+fn chunk(len: usize, wid: usize, workers: usize) -> (usize, usize) {
+    (len * wid / workers, len * (wid + 1) / workers)
+}
+
+/// Raw-pointer view of the mutable execution state, shared by the settle
+/// workers of one `thread::scope`.
+///
+/// # Safety invariants (upheld by `settle`)
+///
+/// * `values` points at `n_nets × words` words, `toggles` at `n_nets`
+///   counters, `states` at `n_macros × words` macro states; all outlive
+///   the scope.
+/// * Within one level, every instruction writes only its own destination
+///   nets' value words and toggle counters, and destinations are unique
+///   across the level. Every operand read is a net settled in an earlier
+///   level: gate operands by `levelize_buckets` construction, and macro
+///   gathers because they are restricted to the group's pin-dep union
+///   (each dep is strictly below its pin's level; non-dep positions read
+///   as constant 0 via `NO_NET`, never as a net). So concurrent workers
+///   never touch the same slot.
+/// * `states` is only read during settle (mutated exclusively by `clock`,
+///   which runs on the driver thread with `&mut self`).
+/// * Levels are separated by a barrier all workers pass through.
+#[derive(Clone, Copy)]
+struct ExecShared<'p> {
+    prog: &'p CompiledProgram,
+    values: *mut u64,
+    toggles: *mut u64,
+    states: *const WordMacroState,
+    words: usize,
+}
+
+// SAFETY: see the invariant list on `ExecShared` — all aliasing between
+// workers is read-read, and all writes are to worker-exclusive slots.
+unsafe impl Send for ExecShared<'_> {}
+unsafe impl Sync for ExecShared<'_> {}
+
+/// Read word `w` of net `net`.
+///
+/// # Safety
+/// `net < n_nets`, `w < words`, and no concurrent writer of this slot
+/// (see [`ExecShared`]).
+#[inline]
+unsafe fn val(sh: &ExecShared, net: u32, w: usize) -> u64 {
+    *sh.values.add(net as usize * sh.words + w)
+}
+
+/// Commit word `w` of net `net`, returning the number of toggled lanes.
+///
+/// # Safety
+/// As [`val`], plus: this worker is the only writer of `net` this level.
+#[inline]
+unsafe fn commit(sh: &ExecShared, net: u32, w: usize, v: u64) -> u32 {
+    let p = sh.values.add(net as usize * sh.words + w);
+    let diff = *p ^ v;
+    if diff != 0 {
+        *p = v;
+    }
+    diff.count_ones()
+}
+
+/// Execute one instruction across all `words` lane blocks.
+///
+/// # Safety
+/// [`ExecShared`] invariants hold and `ins` belongs to the level
+/// currently being executed.
+unsafe fn exec_instr(sh: &ExecShared, ins: &Instr, min: &mut [u64], mout: &mut Vec<u64>) {
+    let words = sh.words;
+    let mut t = 0u32;
+    match ins.op {
+        Op::Buf => {
+            for w in 0..words {
+                t += commit(sh, ins.dst, w, val(sh, ins.a, w));
+            }
+        }
+        Op::Not => {
+            for w in 0..words {
+                t += commit(sh, ins.dst, w, !val(sh, ins.a, w));
+            }
+        }
+        Op::And => {
+            for w in 0..words {
+                t += commit(sh, ins.dst, w, val(sh, ins.a, w) & val(sh, ins.b, w));
+            }
+        }
+        Op::Or => {
+            for w in 0..words {
+                t += commit(sh, ins.dst, w, val(sh, ins.a, w) | val(sh, ins.b, w));
+            }
+        }
+        Op::Xor => {
+            for w in 0..words {
+                t += commit(sh, ins.dst, w, val(sh, ins.a, w) ^ val(sh, ins.b, w));
+            }
+        }
+        Op::Mux => {
+            for w in 0..words {
+                let s = val(sh, ins.a, w);
+                let v = (val(sh, ins.c, w) & s) | (val(sh, ins.b, w) & !s);
+                t += commit(sh, ins.dst, w, v);
+            }
+        }
+        Op::Macro => {
+            let g = &sh.prog.groups[ins.a as usize];
+            let mi = &sh.prog.minsts[g.inst as usize];
+            // Dep-union gather only: non-dep positions (NO_NET) read as 0
+            // instead of touching a possibly same-level net — committed
+            // pins are input-independent of them by the pin_deps contract.
+            let srcs = &sh.prog.group_gather[g.in_start as usize..g.in_end as usize];
+            let pins = &sh.prog.group_pins[g.pin_start as usize..g.pin_end as usize];
+            for w in 0..words {
+                for (k, &src) in srcs.iter().enumerate() {
+                    min[k] = if src == NO_NET { 0 } else { val(sh, src, w) };
+                }
+                let st = &*sh.states.add(g.inst as usize * words + w);
+                macros9::eval_word(mi.kind, &min[..srcs.len()], st, mout);
+                for &(pin, dst) in pins {
+                    let d = commit(sh, dst, w, mout[pin as usize]);
+                    if d != 0 {
+                        *sh.toggles.add(dst as usize) += d as u64;
+                    }
+                }
+            }
+            return;
+        }
+    }
+    if t != 0 {
+        *sh.toggles.add(ins.dst as usize) += t as u64;
+    }
+}
+
+/// One settle worker: execute this worker's chunk of every level, with a
+/// barrier between levels.
+fn settle_worker(sh: &ExecShared, wid: usize, workers: usize, barrier: &Barrier) {
+    let mut min = vec![0u64; sh.prog.max_macro_inputs];
+    let mut mout: Vec<u64> = Vec::new();
+    let mut start = 0usize;
+    for &end in &sh.prog.level_ends {
+        let end = end as usize;
+        let (lo, hi) = chunk(end - start, wid, workers);
+        for ins in &sh.prog.instrs[start + lo..start + hi] {
+            // SAFETY: the ExecShared invariants hold — unique dst per
+            // level, reads only from earlier levels, chunk slices are
+            // disjoint across workers.
+            unsafe { exec_instr(sh, ins, &mut min, &mut mout) };
+        }
+        barrier.wait();
+        start = end;
+    }
+}
+
+/// Executor for a [`CompiledProgram`]: `words × 64` lanes per pass,
+/// per-level sharding across `threads` workers, per-net toggle counters.
+///
+/// The cycle protocol is the interpreters': set primary input words,
+/// [`CompiledSim::settle`], observe outputs, [`CompiledSim::clock`].
+pub struct CompiledSim {
+    prog: CompiledProgram,
+    words: usize,
+    threads: usize,
+    /// Word `w` of net `n` lives at `values[n * words + w]`.
+    values: Vec<u64>,
+    toggles: Vec<u64>,
+    /// Word `w` of instance `i` lives at `macro_states[i * words + w]`.
+    macro_states: Vec<WordMacroState>,
+    passes: u64,
+    // clock-phase scratch (driver thread only)
+    dff_next: Vec<u64>,
+    macro_in: Vec<u64>,
+    macro_out: Vec<u64>,
+}
+
+impl CompiledSim {
+    /// Compile `nl` and build an executor with a `words`-word lane block
+    /// per net, sharding settles across `threads` workers (0 = machine
+    /// parallelism, 1 = inline). Errors on combinational cycles or a
+    /// `words` outside `1..=64`.
+    pub fn new(nl: &Netlist, words: usize, threads: usize) -> Result<CompiledSim, String> {
+        if !(1..=64).contains(&words) {
+            return Err(format!("lane-block width {words} outside 1..=64"));
+        }
+        Ok(Self::from_program(CompiledProgram::compile(nl)?, words, threads))
+    }
+
+    /// Build an executor over an already-compiled program. Panics on a
+    /// `words` outside `1..=64` (the fallible path is
+    /// [`CompiledSim::new`]).
+    pub fn from_program(prog: CompiledProgram, words: usize, threads: usize) -> CompiledSim {
+        assert!(
+            (1..=64).contains(&words),
+            "lane-block width {words} outside 1..=64"
+        );
+        let threads = if threads == 0 {
+            std::thread::available_parallelism().map_or(1, |n| n.get())
+        } else {
+            threads
+        };
+        let n = prog.net_count();
+        let mut values = vec![0u64; n * words];
+        for &c in &prog.const_ones {
+            values[c as usize * words..(c as usize + 1) * words].fill(!0);
+        }
+        for d in &prog.dffs {
+            if d.init {
+                let i = d.net as usize;
+                values[i * words..(i + 1) * words].fill(!0);
+            }
+        }
+        let macro_states = vec![WordMacroState::default(); prog.minsts.len() * words];
+        CompiledSim {
+            toggles: vec![0; n],
+            values,
+            macro_states,
+            words,
+            threads,
+            passes: 0,
+            dff_next: Vec::new(),
+            macro_in: Vec::new(),
+            macro_out: Vec::new(),
+            prog,
+        }
+    }
+
+    /// The compiled program this executor runs.
+    pub fn program(&self) -> &CompiledProgram {
+        &self.prog
+    }
+
+    /// Lane-block width `W` (u64 words per net; `W × 64` lanes per pass).
+    pub fn words(&self) -> usize {
+        self.words
+    }
+
+    /// Worker threads a settle shards its levels across.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Set word `w` of a primary input net.
+    pub fn set_input_net(&mut self, id: NetId, w: usize, word: u64) {
+        debug_assert!(self.prog.is_input[id as usize], "net {id} is not an input");
+        debug_assert!(w < self.words);
+        self.values[id as usize * self.words + w] = word;
+    }
+
+    /// Current word `w` of any net.
+    pub fn get_word(&self, id: NetId, w: usize) -> u64 {
+        self.values[id as usize * self.words + w]
+    }
+
+    /// Current value of net `id` in one of the `words × 64` lanes.
+    pub fn get_lane(&self, id: NetId, lane: usize) -> bool {
+        debug_assert!(lane < self.words * LANES);
+        self.get_word(id, lane / LANES) >> (lane % LANES) & 1 == 1
+    }
+
+    /// Resolve primary-input names to net ids in one pass (steady-state
+    /// stimulus then uses [`CompiledSim::set_input_net`] — the compiled
+    /// engine has no per-call name lookups at all). Errors on unknown
+    /// names.
+    pub fn bind_inputs(&self, names: &[&str]) -> Result<Vec<NetId>, String> {
+        super::netlist::bind_ports(&self.prog.inputs, names, "input")
+    }
+
+    /// Resolve primary-output names to net ids in one pass. Errors on
+    /// unknown names.
+    pub fn bind_outputs(&self, names: &[&str]) -> Result<Vec<NetId>, String> {
+        super::netlist::bind_ports(&self.prog.outputs, names, "output")
+    }
+
+    /// Combinational settle (one pass over all levels), sharded across
+    /// the configured worker threads. Counts toggles per lane against the
+    /// previous settled words.
+    pub fn settle(&mut self) {
+        let workers = self.threads.max(1);
+        let shared = ExecShared {
+            prog: &self.prog,
+            values: self.values.as_mut_ptr(),
+            toggles: self.toggles.as_mut_ptr(),
+            states: self.macro_states.as_ptr(),
+            words: self.words,
+        };
+        if workers == 1 {
+            let barrier = Barrier::new(1);
+            settle_worker(&shared, 0, 1, &barrier);
+        } else {
+            let barrier = Barrier::new(workers);
+            std::thread::scope(|s| {
+                for wid in 1..workers {
+                    let sh = &shared;
+                    let b = &barrier;
+                    s.spawn(move || settle_worker(sh, wid, workers, b));
+                }
+                settle_worker(&shared, 0, workers, &barrier);
+            });
+        }
+    }
+
+    /// Clock edge: capture DFFs word-wide, advance macro state, refresh
+    /// Moore macro pins — the interpreters' exact phase ordering. Runs on
+    /// the driver thread (settle is where the work is).
+    pub fn clock(&mut self) {
+        self.passes += 1;
+        let words = self.words;
+        // Capture all DFF next-words first (reads only).
+        self.dff_next.clear();
+        self.dff_next.resize(self.prog.dffs.len() * words, 0);
+        for (k, d) in self.prog.dffs.iter().enumerate() {
+            let init_word = if d.init { !0u64 } else { 0 };
+            for w in 0..words {
+                let r = if d.rst == NO_RST {
+                    0
+                } else {
+                    self.values[d.rst as usize * words + w]
+                };
+                let dv = self.values[d.d as usize * words + w];
+                self.dff_next[k * words + w] = (dv & !r) | (init_word & r);
+            }
+        }
+        // Advance macro behavioral state (reads pre-capture values).
+        for (i, mi) in self.prog.minsts.iter().enumerate() {
+            let srcs = &self.prog.minputs[mi.in_start as usize..mi.in_end as usize];
+            for w in 0..words {
+                self.macro_in.clear();
+                for &src in srcs {
+                    self.macro_in.push(self.values[src as usize * words + w]);
+                }
+                macros9::step_word(mi.kind, &self.macro_in, &mut self.macro_states[i * words + w]);
+            }
+        }
+        // Commit DFFs, counting toggles.
+        for (k, d) in self.prog.dffs.iter().enumerate() {
+            let i = d.net as usize;
+            for w in 0..words {
+                let v = self.dff_next[k * words + w];
+                let diff = self.values[i * words + w] ^ v;
+                if diff != 0 {
+                    self.toggles[i] += diff.count_ones() as u64;
+                    self.values[i * words + w] = v;
+                }
+            }
+        }
+        // Refresh Moore macro pins from the new state. (Moore outputs are
+        // input-independent by the `pin_deps` contract, so gathering
+        // post-capture inputs matches the interpreters.)
+        for (i, mi) in self.prog.minsts.iter().enumerate() {
+            if mi.moore_start == mi.moore_end {
+                continue;
+            }
+            let srcs = &self.prog.minputs[mi.in_start as usize..mi.in_end as usize];
+            let pins = &self.prog.moore_pins[mi.moore_start as usize..mi.moore_end as usize];
+            for w in 0..words {
+                self.macro_in.clear();
+                for &src in srcs {
+                    self.macro_in.push(self.values[src as usize * words + w]);
+                }
+                macros9::eval_word(
+                    mi.kind,
+                    &self.macro_in,
+                    &self.macro_states[i * words + w],
+                    &mut self.macro_out,
+                );
+                for &(pin, net) in pins {
+                    let v = self.macro_out[pin as usize];
+                    let n = net as usize;
+                    let diff = self.values[n * words + w] ^ v;
+                    if diff != 0 {
+                        self.toggles[n] += diff.count_ones() as u64;
+                        self.values[n * words + w] = v;
+                    }
+                }
+            }
+        }
+    }
+
+    /// One full pass: settle, then clock. Inputs must be set beforehand.
+    pub fn cycle(&mut self) {
+        self.settle();
+        self.clock();
+    }
+
+    /// Word passes executed so far (each is one cycle in all lanes).
+    pub fn passes(&self) -> u64 {
+        self.passes
+    }
+
+    /// Total simulated lane-cycles (`passes × words × 64`) — the
+    /// denominator for activity, comparable with the interpreters.
+    pub fn lane_cycles(&self) -> u64 {
+        self.passes * (self.words * LANES) as u64
+    }
+
+    /// Per-net toggle counts, accumulated across all lanes and passes.
+    pub fn toggles(&self) -> &[u64] {
+        &self.toggles
+    }
+
+    /// Average toggle rate (toggles per net per lane-cycle) — the α
+    /// activity factor of the dynamic power model.
+    pub fn activity(&self) -> f64 {
+        super::mean_activity(&self.toggles, self.lane_cycles())
+    }
+
+    /// Read word `w` of a macro instance's behavioral state.
+    pub fn macro_state(&self, inst: usize, w: usize) -> &WordMacroState {
+        &self.macro_states[inst * self.words + w]
+    }
+
+    /// Broadcast a scalar macro state into every lane of every word of an
+    /// instance (e.g. to preload synaptic weights before a sweep).
+    pub fn set_macro_state_broadcast(&mut self, inst: usize, st: &MacroState) {
+        let wide = WordMacroState::broadcast(st);
+        for w in 0..self.words {
+            self.macro_states[inst * self.words + w] = wide.clone();
+        }
+    }
+
+    /// Reset all state (DFFs to init, macro states cleared, toggles and
+    /// pass counters kept) — the interpreters' `reset_state` semantics.
+    pub fn reset_state(&mut self) {
+        let words = self.words;
+        for d in &self.prog.dffs {
+            let i = d.net as usize;
+            let v = if d.init { !0u64 } else { 0 };
+            self.values[i * words..(i + 1) * words].fill(v);
+        }
+        for st in &mut self.macro_states {
+            *st = WordMacroState::default();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::column_design::{build_column, BrvSource};
+    use super::super::macros9::MacroKind;
+    use super::super::netlist::NetBuilder;
+    use super::super::wordsim::WordSimulator;
+    use super::*;
+    use crate::util::Rng64;
+
+    #[test]
+    fn chunks_cover_and_partition() {
+        for len in [0usize, 1, 5, 16, 17, 1000] {
+            for workers in [1usize, 2, 3, 4, 7] {
+                let mut covered = 0;
+                let mut prev_end = 0;
+                for wid in 0..workers {
+                    let (lo, hi) = chunk(len, wid, workers);
+                    assert_eq!(lo, prev_end, "chunks are contiguous");
+                    assert!(hi >= lo);
+                    covered += hi - lo;
+                    prev_end = hi;
+                }
+                assert_eq!(covered, len, "chunks cover exactly once");
+                assert_eq!(prev_end, len);
+            }
+        }
+    }
+
+    #[test]
+    fn comb_logic_settles_per_word_and_lane() {
+        let mut b = NetBuilder::new("t");
+        let a = b.input("a");
+        let c = b.input("b");
+        let x = b.xor(a, c);
+        b.output("x", x);
+        let nl = b.finish();
+        let mut sim = CompiledSim::new(&nl, 2, 1).unwrap();
+        sim.set_input_net(a, 0, 0b0110);
+        sim.set_input_net(c, 0, 0b1100);
+        sim.set_input_net(a, 1, !0);
+        sim.set_input_net(c, 1, 0);
+        sim.settle();
+        assert_eq!(sim.get_word(x, 0) & 0b1111, 0b1010);
+        assert_eq!(sim.get_word(x, 1), !0);
+        assert!(!sim.get_lane(x, 0));
+        assert!(sim.get_lane(x, 1));
+        assert!(sim.get_lane(x, 64), "lane 64 = bit 0 of word 1");
+        assert_eq!(sim.program().level_count(), 1);
+        assert_eq!(sim.program().instr_count(), 1);
+    }
+
+    #[test]
+    fn dff_captures_word_wide_and_counts_lane_toggles() {
+        let mut b = NetBuilder::new("t");
+        let d = b.input("d");
+        let r = b.input("r");
+        let q = b.dff(d, Some(r), false);
+        b.output("q", q);
+        let nl = b.finish();
+        let mut sim = CompiledSim::new(&nl, 2, 1).unwrap();
+        sim.set_input_net(d, 0, 0xFF);
+        sim.set_input_net(r, 0, 0x0F);
+        sim.set_input_net(d, 1, 0b11);
+        sim.set_input_net(r, 1, 0);
+        sim.cycle();
+        assert_eq!(sim.get_word(q, 0), 0xF0);
+        assert_eq!(sim.get_word(q, 1), 0b11);
+        assert_eq!(sim.toggles()[q as usize], 4 + 2);
+        assert_eq!(sim.passes(), 1);
+        assert_eq!(sim.lane_cycles(), 128);
+    }
+
+    #[test]
+    fn macro_groups_evaluate_once_per_level() {
+        // stdp_case_gen has four Mealy pins in one level: the program must
+        // hold exactly one macro group (not four pin evaluations).
+        let mut b = NetBuilder::new("t");
+        let g = b.input("g");
+        let ein = b.input("ein");
+        let eout = b.input("eout");
+        let outs = b.macro_inst(MacroKind::StdpCaseGen, vec![g, ein, eout]);
+        for (k, &o) in outs.iter().enumerate() {
+            b.output(&format!("c{k}"), o);
+        }
+        let nl = b.finish();
+        let prog = CompiledProgram::compile(&nl).unwrap();
+        assert_eq!(prog.macro_group_count(), 1);
+        assert_eq!(prog.instr_count(), 1);
+        let mut sim = CompiledSim::from_program(prog, 1, 1);
+        sim.set_input_net(g, 0, 0);
+        sim.set_input_net(ein, 0, !0);
+        sim.set_input_net(eout, 0, !0);
+        sim.settle();
+        assert_eq!(sim.get_word(outs[0], 0), !0, "case0 = ein & eout & !greater");
+        assert_eq!(sim.get_word(outs[1], 0), 0);
+    }
+
+    #[test]
+    fn words_match_independent_wordsim_runs_on_a_column() {
+        // Word w of the compiled engine must be bit-for-bit an independent
+        // WordSimulator run under the same stimulus, including toggles.
+        let d = build_column(5, 2, 6, BrvSource::Lfsr);
+        let nl = &d.netlist;
+        let words = 2usize;
+        let mut csim = CompiledSim::new(nl, words, 1).unwrap();
+        let mut wsims: Vec<WordSimulator> =
+            (0..words).map(|_| WordSimulator::new(nl).unwrap()).collect();
+        let inputs: Vec<NetId> = nl.inputs.iter().map(|(_, id)| *id).collect();
+        let mut rng = Rng64::seed_from_u64(0xC0DE);
+        for _ in 0..24 {
+            for &id in &inputs {
+                for (w, ws) in wsims.iter_mut().enumerate() {
+                    let word = rng.next_u64() & rng.next_u64() & rng.next_u64();
+                    csim.set_input_net(id, w, word);
+                    ws.set_input_net(id, word);
+                }
+            }
+            csim.cycle();
+            for ws in &mut wsims {
+                ws.cycle();
+            }
+            for net in 0..nl.len() as NetId {
+                for (w, ws) in wsims.iter().enumerate() {
+                    assert_eq!(csim.get_word(net, w), ws.get(net), "net {net} word {w}");
+                }
+            }
+        }
+        let mut want = vec![0u64; nl.len()];
+        for ws in &wsims {
+            for (t, &x) in want.iter_mut().zip(ws.toggles()) {
+                *t += x;
+            }
+        }
+        assert_eq!(csim.toggles(), want.as_slice(), "toggles = sum of word runs");
+        assert!(csim.activity() > 0.0);
+    }
+
+    #[test]
+    fn sharded_settle_is_bit_exact_at_any_worker_count() {
+        let d = build_column(6, 3, 8, BrvSource::Lfsr);
+        let nl = &d.netlist;
+        let run = |threads: usize| -> (Vec<u64>, Vec<u64>) {
+            let mut sim = CompiledSim::new(nl, 2, threads).unwrap();
+            let inputs: Vec<NetId> = nl.inputs.iter().map(|(_, id)| *id).collect();
+            let mut rng = Rng64::seed_from_u64(99);
+            for _ in 0..16 {
+                for &id in &inputs {
+                    for w in 0..2 {
+                        sim.set_input_net(id, w, rng.next_u64() & rng.next_u64());
+                    }
+                }
+                sim.cycle();
+            }
+            (sim.toggles().to_vec(), sim.values.clone())
+        };
+        let (t1, v1) = run(1);
+        for threads in [2, 4] {
+            let (t, v) = run(threads);
+            assert_eq!(t, t1, "{threads}-worker toggles differ");
+            assert_eq!(v, v1, "{threads}-worker values differ");
+        }
+    }
+
+    #[test]
+    fn bind_ports_resolve_in_bulk_and_reject_unknowns() {
+        let mut b = NetBuilder::new("t");
+        let a = b.input("a");
+        let c = b.input("b");
+        let x = b.and(a, c);
+        b.output("x", x);
+        let sim = CompiledSim::new(&b.finish(), 1, 1).unwrap();
+        assert_eq!(sim.bind_inputs(&["b", "a"]).unwrap(), vec![c, a]);
+        assert_eq!(sim.bind_outputs(&["x"]).unwrap(), vec![x]);
+        assert!(sim.bind_inputs(&["nope"]).is_err());
+        assert!(sim.bind_outputs(&["a"]).is_err());
+    }
+
+    #[test]
+    fn reset_state_restores_dff_init_and_macro_state() {
+        let d = build_column(4, 2, 5, BrvSource::Lfsr);
+        let nl = &d.netlist;
+        let mut sim = CompiledSim::new(nl, 2, 1).unwrap();
+        let inputs: Vec<NetId> = nl.inputs.iter().map(|(_, id)| *id).collect();
+        let mut rng = Rng64::seed_from_u64(5);
+        for _ in 0..8 {
+            for &id in &inputs {
+                for w in 0..2 {
+                    sim.set_input_net(id, w, rng.next_u64());
+                }
+            }
+            sim.cycle();
+        }
+        let toggles_before = sim.toggles().to_vec();
+        sim.reset_state();
+        assert_eq!(sim.toggles(), toggles_before.as_slice(), "toggles kept");
+        for d in &sim.prog.dffs {
+            let want = if d.init { !0u64 } else { 0 };
+            for w in 0..2 {
+                assert_eq!(sim.get_word(d.net, w), want);
+            }
+        }
+        for st in &sim.macro_states {
+            for k in 0..super::super::macros9::MAX_STATE_BITS {
+                assert_eq!(st.plane(k), 0);
+            }
+        }
+    }
+}

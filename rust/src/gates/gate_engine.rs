@@ -30,8 +30,10 @@
 //! artifact.
 
 use super::column_design::{build_column, BrvSource, ColumnDesign, ColumnSim};
+use super::compile::CompiledSim;
 use super::macros9::MacroState;
 use super::wordsim::{WordSimulator, LANES};
+use super::SimBackend;
 use crate::tnn::column::Column;
 use crate::tnn::params::TnnParams;
 use crate::tnn::spike::{earliest_spike, SpikeTime};
@@ -70,6 +72,12 @@ pub struct GateColumn {
     sim: ColumnSim<'static>,
     /// 64-lane engine over the same netlist, built on first batched sweep.
     wsim: Option<WordSimulator<'static>>,
+    /// Compiled lane-block engine, built on first batched sweep under a
+    /// `SimBackend::Compiled` selection.
+    csim: Option<CompiledSim>,
+    /// Which simulator runs the batched inference sweeps (winners are
+    /// bit-exact across backends; this is purely a throughput knob).
+    backend: SimBackend,
     params: TnnParams,
     /// All-ones uniforms: `u >= 1` fails every `u < µ` test, so no BRV
     /// fires and a gamma cycle is pure inference.
@@ -110,6 +118,8 @@ impl GateColumn {
             design,
             sim,
             wsim: None,
+            csim: None,
+            backend: SimBackend::BitParallel64,
             params,
             ones: vec![1.0; n],
             u_case: vec![0.0; n],
@@ -165,19 +175,66 @@ impl GateColumn {
         self.infer(xs).iter().position(|t| t.is_spike())
     }
 
-    /// Word-parallel gate-level inference sweep: packs up to 64 volleys per
-    /// pass into the lanes of a [`WordSimulator`] over the same netlist.
-    /// Weights are broadcast into every lane and all BRV inputs are held
-    /// low (the word-level analogue of the scalar path's all-ones
-    /// uniforms), so each lane runs the exact scalar inference gamma cycle
-    /// and winners are bit-exact with [`GateColumn::infer_winner`].
+    /// Select the gate-level simulator behind [`GateColumn::infer_batch`]:
+    /// `Compiled { words, threads }` packs `words × 64` volleys per pass
+    /// into a [`CompiledSim`]; `BitParallel64` (the default) uses the
+    /// 64-lane [`WordSimulator`] interpreter; `Scalar` loops the per-volley
+    /// scalar path (the honest scalar baseline). Winners are bit-exact
+    /// across backends — this is a throughput knob, never a semantics
+    /// knob.
+    pub fn set_sim_backend(&mut self, backend: SimBackend) {
+        if backend != self.backend {
+            self.backend = backend;
+            self.csim = None; // rebuilt lazily with the new lane-block width
+        }
+    }
+
+    /// The simulator backend batched inference sweeps run on.
+    pub fn sim_backend(&self) -> SimBackend {
+        self.backend
+    }
+
+    /// Batched gate-level inference sweep: packs many volleys per pass
+    /// into the lanes of the selected simulator backend over the same
+    /// netlist (64 per pass on the interpreter, `words × 64` on the
+    /// compiled engine). Weights are broadcast into every lane and all BRV
+    /// inputs are held low (the word-level analogue of the scalar path's
+    /// all-ones uniforms), so each lane runs the exact scalar inference
+    /// gamma cycle and winners are bit-exact with
+    /// [`GateColumn::infer_winner`] on every backend.
     pub fn infer_batch(&mut self, volleys: &[&[SpikeTime]]) -> Vec<Option<usize>> {
-        let d = self.design;
         // Hard assert, matching the scalar path (`ColumnSim::run_gamma`): a
         // malformed volley must fail loudly on both paths, in release too.
         for (k, v) in volleys.iter().enumerate() {
-            assert_eq!(v.len(), d.p, "volley {k} length != p");
+            assert_eq!(v.len(), self.design.p, "volley {k} length != p");
         }
+        match self.backend {
+            SimBackend::Compiled { words, threads } => {
+                self.infer_batch_compiled(volleys, words, threads)
+            }
+            SimBackend::BitParallel64 => self.infer_batch_word(volleys),
+            SimBackend::Scalar => {
+                // The flag means what it says: the true scalar engine, one
+                // volley at a time (useful as a baseline / cross-check).
+                let mut winners = Vec::with_capacity(volleys.len());
+                for v in volleys {
+                    winners.push(self.infer_winner(v));
+                }
+                winners
+            }
+        }
+    }
+
+    /// The 64-lane interpreter sweep behind [`GateColumn::infer_batch`].
+    ///
+    /// NOTE: this and [`GateColumn::infer_batch_compiled`] implement the
+    /// SAME inference protocol (weight broadcast, BRV silencing, GRST on
+    /// the last gamma cycle, first-spike extraction) on two different
+    /// engines — any protocol change must land in both, and the
+    /// cross-backend equality tests (unit, conformance, bench guard) exist
+    /// to fail loudly if they drift.
+    fn infer_batch_word(&mut self, volleys: &[&[SpikeTime]]) -> Vec<Option<usize>> {
+        let d = self.design;
         let g = self.params.gamma_cycles;
         let q = d.q;
         let ws = self.sim.weights();
@@ -239,6 +296,116 @@ impl GateColumn {
                     }
                 }
                 wsim.clock();
+            }
+            for lane_times in times.chunks_exact(q) {
+                let (idx, t) = earliest_spike(lane_times);
+                winners.push(t.is_spike().then_some(idx));
+            }
+        }
+        winners
+    }
+
+    /// The compiled lane-block sweep behind [`GateColumn::infer_batch`]:
+    /// one compiled pass per `words × 64`-volley chunk, levels sharded
+    /// across `threads` workers. Same protocol as
+    /// [`GateColumn::infer_batch_word`], word by word (see the drift note
+    /// there).
+    fn infer_batch_compiled(
+        &mut self,
+        volleys: &[&[SpikeTime]],
+        words: usize,
+        threads: usize,
+    ) -> Vec<Option<usize>> {
+        let d = self.design;
+        let g = self.params.gamma_cycles;
+        let q = d.q;
+        let ws = self.sim.weights();
+        // Resolve 0 = machine parallelism BEFORE the rebuild check —
+        // `CompiledSim::threads()` reports the resolved count, and
+        // comparing it against a raw 0 would recompile every call.
+        let threads = if threads == 0 {
+            std::thread::available_parallelism().map_or(1, |n| n.get())
+        } else {
+            threads
+        };
+        let rebuild = match &self.csim {
+            Some(c) => c.words() != words || c.threads() != threads,
+            None => true,
+        };
+        if rebuild {
+            self.csim =
+                Some(CompiledSim::new(&d.netlist, words, threads).expect("cached design compiles"));
+        }
+        let csim = self.csim.as_mut().expect("built above");
+        let lanes = words * LANES;
+
+        let mut winners = Vec::with_capacity(volleys.len());
+        for chunk in volleys.chunks(lanes) {
+            csim.reset_state();
+            // Broadcast the current weights into every lane of every word
+            // and silence the BRV streams (no case ever fires → pure
+            // inference), exactly like the interpreter path.
+            for (k, &inst) in d.syn_inst.iter().enumerate() {
+                let mut st = MacroState::default();
+                st.set_weight(ws[k]);
+                csim.set_macro_state_broadcast(inst as usize, &st);
+            }
+            for case in &d.brv_case {
+                for &net in case {
+                    for w in 0..words {
+                        csim.set_input_net(net, w, 0);
+                    }
+                }
+            }
+            for stab in &d.brv_stab {
+                for &net in stab {
+                    for w in 0..words {
+                        csim.set_input_net(net, w, 0);
+                    }
+                }
+            }
+
+            // One gamma cycle in all lanes; record each lane's first cycle
+            // with the output net high (level semantics, identical to
+            // `ColumnSim::run_gamma`). `seen[j * words + w]` masks lanes of
+            // word `w` that already fired on output j.
+            let mut times = vec![SpikeTime::NONE; chunk.len() * q];
+            let mut seen = vec![0u64; q * words];
+            for t in 0..g {
+                for (i, &net) in d.in_pulse.iter().enumerate() {
+                    for w in 0..words {
+                        let mut word = 0u64;
+                        for (l, volley) in chunk.iter().skip(w * LANES).take(LANES).enumerate() {
+                            let x = volley[i];
+                            if x.is_spike() && x.0 == t {
+                                word |= 1u64 << l;
+                            }
+                        }
+                        csim.set_input_net(net, w, word);
+                    }
+                }
+                for w in 0..words {
+                    csim.set_input_net(d.grst, w, if t == g - 1 { !0u64 } else { 0 });
+                }
+                csim.settle();
+                for (j, &net) in d.out_spike.iter().enumerate() {
+                    for w in 0..words {
+                        let fresh = csim.get_word(net, w) & !seen[j * words + w];
+                        if fresh != 0 {
+                            seen[j * words + w] |= fresh;
+                            let mut bits = fresh;
+                            while bits != 0 {
+                                let l = bits.trailing_zeros() as usize;
+                                bits &= bits - 1;
+                                let idx = w * LANES + l;
+                                if idx < chunk.len() {
+                                    times[idx * q + j] = SpikeTime::at(t);
+                                }
+                            }
+                        }
+                    }
+                }
+                csim.clock();
             }
             for lane_times in times.chunks_exact(q) {
                 let (idx, t) = earliest_spike(lane_times);
@@ -326,6 +493,58 @@ mod tests {
             fired += usize::from(batch[k].is_some());
         }
         assert!(fired > 0, "stimulus should make some neuron fire");
+    }
+
+    #[test]
+    fn compiled_batch_inference_is_bit_exact_with_word_and_scalar_paths() {
+        // 150 volleys force multiple chunks at every tested lane-block
+        // width (words=1 -> 3 chunks, words=2 -> 2 chunks).
+        let mut rng = Rng64::seed_from_u64(4321);
+        let golden = Column::with_random_weights(6, 3, 8, TnnParams::default(), &mut rng);
+        let mut gate = GateColumn::from_column(&golden).unwrap();
+        let volleys: Vec<Vec<SpikeTime>> =
+            (0..150).map(|_| random_volley(6, &mut rng)).collect();
+        let refs: Vec<&[SpikeTime]> = volleys.iter().map(|v| v.as_slice()).collect();
+        assert_eq!(gate.sim_backend(), crate::gates::SimBackend::BitParallel64);
+        let word = gate.infer_batch(&refs);
+        for (words, threads) in [(1usize, 1usize), (2, 2)] {
+            gate.set_sim_backend(crate::gates::SimBackend::Compiled { words, threads });
+            assert_eq!(
+                gate.sim_backend(),
+                crate::gates::SimBackend::Compiled { words, threads }
+            );
+            let compiled = gate.infer_batch(&refs);
+            assert_eq!(compiled, word, "words={words} threads={threads}");
+        }
+        // The scalar backend loops the true per-volley scalar engine.
+        gate.set_sim_backend(crate::gates::SimBackend::Scalar);
+        assert_eq!(gate.infer_batch(&refs), word, "scalar backend batch");
+        // …and both agree with the scalar per-volley path and golden.
+        for (k, v) in volleys.iter().enumerate() {
+            assert_eq!(word[k], gate.infer_winner(v), "volley {k} vs scalar gate");
+            assert_eq!(word[k], golden.infer(v).winner, "volley {k} vs golden");
+        }
+    }
+
+    #[test]
+    fn compiled_batch_after_training_uses_current_weights() {
+        // Train a little, then check the compiled sweep reflects the
+        // updated weights (weights are re-broadcast every sweep).
+        let mut rng = Rng64::seed_from_u64(77);
+        let golden = Column::with_random_weights(4, 2, 4, TnnParams::default(), &mut rng);
+        let mut gate = GateColumn::from_column(&golden).unwrap();
+        gate.set_sim_backend(crate::gates::SimBackend::Compiled { words: 1, threads: 1 });
+        let mut stream = Rng64::seed_from_u64(31);
+        let volleys: Vec<Vec<SpikeTime>> =
+            (0..10).map(|_| random_volley(4, &mut rng)).collect();
+        for v in &volleys {
+            gate.step(v, &mut stream);
+        }
+        let refs: Vec<&[SpikeTime]> = volleys.iter().map(|v| v.as_slice()).collect();
+        let batch = gate.infer_batch(&refs);
+        for (k, v) in volleys.iter().enumerate() {
+            assert_eq!(batch[k], gate.infer_winner(v), "volley {k}");
+        }
     }
 
     #[test]

@@ -120,6 +120,14 @@ impl MacroKind {
     /// (weight → stabilize_func → incdec → syn_weight_update → weight)
     /// acyclic at the combinational level: `syn_weight_update`'s outputs are
     /// registered.
+    ///
+    /// This table is **normative**: `eval`/`eval_word` must compute pin
+    /// `pin` as a function of exactly these inputs plus state. Levelization
+    /// orders pins by it, and the compiled engine
+    /// ([`crate::gates::compile`]) feeds constant 0 for every *non*-dep
+    /// input during its sharded settle (a non-dep net may still be
+    /// settling in the same level) — an under-declared dependency here
+    /// would mis-simulate in every engine.
     pub fn pin_deps(&self, pin: u8) -> &'static [usize] {
         match self {
             MacroKind::SynReadout => &[0, 1, 2, 3],

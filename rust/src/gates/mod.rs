@@ -2,24 +2,27 @@
 //!
 //! This module replaces the schematic/netlist layer of the paper's
 //! Cadence-based flow (see `docs/ARCHITECTURE.md`): a generic gate-level netlist IR
-//! with a structural builder ([`netlist`]), **two** levelized synchronous
-//! simulators used for functional verification and switching-activity
-//! extraction — the scalar reference engine ([`sim`]) and the 64-lane
-//! bit-parallel engine ([`wordsim`]), selectable via [`SimBackend`] — the
-//! nine TNN7 macros, each with a cycle-accurate behavioral model (scalar
-//! *and* word-level) plus a generic-gate expansion ([`macros9`]), the
-//! structural generator that assembles full p×q TNN columns out of them
-//! ([`column_design`]), and the gate-level *column engine* that runs real
-//! workloads on the macro netlist behind the `coordinator::Engine`
-//! interface ([`gate_engine`]).
+//! with a structural builder ([`netlist`]), **three** levelized synchronous
+//! simulation engines used for functional verification and
+//! switching-activity extraction — the scalar reference engine ([`sim`]),
+//! the 64-lane bit-parallel interpreter ([`wordsim`]), and the compiled
+//! netlist program ([`compile`]: multi-word lane blocks + threaded level
+//! execution), selectable via [`SimBackend`] — the nine TNN7 macros, each
+//! with a cycle-accurate behavioral model (scalar *and* word-level) plus a
+//! generic-gate expansion ([`macros9`]), the structural generator that
+//! assembles full p×q TNN columns out of them ([`column_design`]), and the
+//! gate-level *column engine* that runs real workloads on the macro
+//! netlist behind the `coordinator::Engine` interface ([`gate_engine`]).
 
 pub mod column_design;
+pub mod compile;
 pub mod gate_engine;
 pub mod macros9;
 pub mod netlist;
 pub mod sim;
 pub mod wordsim;
 
+pub use compile::{CompiledProgram, CompiledSim};
 pub use gate_engine::GateColumn;
 pub use macros9::MacroKind;
 pub use netlist::{Gate, NetBuilder, NetId, Netlist};
@@ -40,26 +43,60 @@ pub const CONFORMANCE_GEOMETRIES: [(usize, usize, u64); 4] = [
 
 use crate::util::Rng64;
 
+/// Default lane-block width `W` for the compiled backend (`sim_words`
+/// config key): `W × 64` lanes per pass.
+pub const DEFAULT_SIM_WORDS: usize = 2;
+
 /// Which gate-level simulation engine collects toggle statistics.
 ///
-/// Both engines implement identical synchronous semantics (lane 0 of the
-/// bit-parallel engine is bit-for-bit the scalar engine); the bit-parallel
-/// engine simulates 64 independent stimulus lanes per pass and is the fast
-/// path for activity extraction.
+/// All engines implement identical synchronous semantics: lane 0 of the
+/// bit-parallel interpreter is bit-for-bit the scalar engine, and every
+/// word of the compiled engine is bit-for-bit an independent bit-parallel
+/// run (enforced by `tests/compiled_sim.rs`). The bit-parallel interpreter
+/// simulates 64 independent stimulus lanes per pass; the compiled engine
+/// lowers the schedule to a flat instruction stream over `words × 64`-lane
+/// blocks and shards each level across worker threads (toggle counts
+/// bit-exact at any thread count).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SimBackend {
     /// One boolean per net per cycle — the reference engine.
     Scalar,
-    /// 64 stimulus lanes packed into one `u64` per net.
+    /// 64 stimulus lanes packed into one `u64` per net (interpreter).
     BitParallel64,
+    /// Compiled netlist program ([`compile::CompiledSim`]).
+    Compiled {
+        /// Lane-block width `W`: `u64` words per net, `W × 64` lanes/pass.
+        words: usize,
+        /// Settle worker threads (0 = machine parallelism, 1 = inline).
+        threads: usize,
+    },
 }
 
 impl SimBackend {
-    /// Display name (`scalar` / `bit-parallel-64`).
+    /// Display name (`scalar` / `bit-parallel-64` / `compiled`).
     pub fn name(&self) -> &'static str {
         match self {
             SimBackend::Scalar => "scalar",
             SimBackend::BitParallel64 => "bit-parallel-64",
+            SimBackend::Compiled { .. } => "compiled",
+        }
+    }
+
+    /// Parse a CLI/config spelling: `scalar`, `bit-parallel-64` (alias
+    /// `word`), or `compiled` (lane-block width [`DEFAULT_SIM_WORDS`],
+    /// inline execution — callers override via the `sim_words` / `threads`
+    /// config keys, see `RunConfig::resolved_sim_backend`).
+    pub fn parse(s: &str) -> crate::Result<SimBackend> {
+        match s {
+            "scalar" => Ok(SimBackend::Scalar),
+            "bit-parallel-64" | "word" => Ok(SimBackend::BitParallel64),
+            "compiled" => Ok(SimBackend::Compiled {
+                words: DEFAULT_SIM_WORDS,
+                threads: 1,
+            }),
+            other => anyhow::bail!(
+                "unknown sim backend {other:?} (scalar|bit-parallel-64|compiled)"
+            ),
         }
     }
 }
@@ -107,10 +144,14 @@ impl ToggleReport {
 /// same stimulus distribution, so their toggle statistics are directly
 /// comparable (and are cross-checked in tests and benches).
 ///
-/// `cycles` is the number of simulated cycles; the bit-parallel backend
-/// runs `ceil(cycles / 64)` word passes (64 lane-cycles each), so it may
-/// simulate up to 63 extra lane-cycles — `ToggleReport::cycles` always
-/// records what was actually simulated.
+/// `cycles` is the number of simulated cycles; the word-wide backends run
+/// `ceil(cycles / lanes_per_pass)` passes (64 lane-cycles per word each),
+/// so they may simulate up to `lanes_per_pass − 1` extra lane-cycles —
+/// `ToggleReport::cycles` always records what was actually simulated.
+///
+/// The compiled backend with `words = 1` consumes the rng in exactly the
+/// bit-parallel interpreter's order, so its toggle report is bit-identical
+/// to `BitParallel64`'s (the differential tests pin this).
 pub fn collect_toggles(
     nl: &Netlist,
     cycles: u64,
@@ -118,11 +159,7 @@ pub fn collect_toggles(
     backend: SimBackend,
 ) -> Result<ToggleReport, String> {
     let mut rng = Rng64::seed_from_u64(seed);
-    let inputs: Vec<(NetId, bool)> = nl
-        .inputs
-        .iter()
-        .map(|(name, id)| (*id, name == "GRST"))
-        .collect();
+    let inputs = stimulus_inputs(nl);
     match backend {
         SimBackend::Scalar => {
             let mut sim = Simulator::new(nl)?;
@@ -160,7 +197,42 @@ pub fn collect_toggles(
                 cycles: sim.lane_cycles(),
             })
         }
+        SimBackend::Compiled { words, threads } => {
+            let mut sim = CompiledSim::new(nl, words, threads)?;
+            let lanes = (words * LANES) as u64;
+            let passes = cycles.div_ceil(lanes);
+            for _ in 0..passes {
+                for &(id, is_grst) in &inputs {
+                    // Same per-word draw rule (and, for words = 1, the
+                    // same draw order) as the bit-parallel interpreter.
+                    for w in 0..words {
+                        let mut word = rng.next_u64() & rng.next_u64() & rng.next_u64();
+                        if is_grst {
+                            word &= rng.next_u64();
+                        }
+                        sim.set_input_net(id, w, word);
+                    }
+                }
+                sim.cycle();
+            }
+            Ok(ToggleReport {
+                backend,
+                toggles: sim.toggles().to_vec(),
+                cycles: sim.lane_cycles(),
+            })
+        }
     }
+}
+
+/// The one stimulus plan shared by every [`collect_toggles`] backend:
+/// each primary input paired with its "is the GRST gamma strobe" flag
+/// (which selects the sparser Bernoulli rate). Resolved once per run —
+/// no backend touches a name map in its pass loop.
+fn stimulus_inputs(nl: &Netlist) -> Vec<(NetId, bool)> {
+    nl.inputs
+        .iter()
+        .map(|(name, id)| (*id, name == "GRST"))
+        .collect()
 }
 
 #[cfg(test)]
@@ -205,5 +277,59 @@ mod tests {
         assert_eq!(r.alpha(), vec![1.0, 0.0, 3.0]);
         assert_eq!(r.backend.name(), "scalar");
         assert_eq!(SimBackend::BitParallel64.name(), "bit-parallel-64");
+        assert_eq!(
+            SimBackend::Compiled { words: 4, threads: 2 }.name(),
+            "compiled"
+        );
+    }
+
+    #[test]
+    fn sim_backend_parses_all_spellings() {
+        assert_eq!(SimBackend::parse("scalar").unwrap(), SimBackend::Scalar);
+        assert_eq!(
+            SimBackend::parse("bit-parallel-64").unwrap(),
+            SimBackend::BitParallel64
+        );
+        assert_eq!(SimBackend::parse("word").unwrap(), SimBackend::BitParallel64);
+        assert_eq!(
+            SimBackend::parse("compiled").unwrap(),
+            SimBackend::Compiled { words: DEFAULT_SIM_WORDS, threads: 1 }
+        );
+        assert!(SimBackend::parse("vcs").is_err());
+    }
+
+    #[test]
+    fn compiled_w1_toggle_report_is_bit_identical_to_interpreter() {
+        // words = 1 consumes the rng in the interpreter's exact order, so
+        // the two reports must agree toggle for toggle — the keystone of
+        // the compiled engine's bit-exactness contract.
+        let d = build_column(5, 2, 6, BrvSource::Lfsr);
+        let w = collect_toggles(&d.netlist, 2048, 11, SimBackend::BitParallel64).unwrap();
+        let c = collect_toggles(
+            &d.netlist,
+            2048,
+            11,
+            SimBackend::Compiled { words: 1, threads: 2 },
+        )
+        .unwrap();
+        assert_eq!(c.cycles, w.cycles);
+        assert_eq!(c.toggles, w.toggles);
+    }
+
+    #[test]
+    fn compiled_multiword_backend_measures_comparable_activity() {
+        let d = build_column(6, 2, 6, BrvSource::Lfsr);
+        let w = collect_toggles(&d.netlist, 16384, 3, SimBackend::BitParallel64).unwrap();
+        let c = collect_toggles(
+            &d.netlist,
+            16384,
+            3,
+            SimBackend::Compiled { words: 4, threads: 2 },
+        )
+        .unwrap();
+        assert_eq!(c.cycles, 16384, "64 passes x 4 words x 64 lanes");
+        let (a_w, a_c) = (w.activity(), c.activity());
+        assert!(a_c > 0.0);
+        assert!((a_w - a_c).abs() < 0.05, "word α {a_w:.4} vs compiled α {a_c:.4}");
     }
 }

@@ -222,6 +222,20 @@ impl Netlist {
         Ok(self.levelize_buckets()?.into_iter().flatten().collect())
     }
 
+    /// Resolve a batch of primary-input names to net ids in one pass —
+    /// the bulk binder hot paths use so steady-state stimulus never
+    /// touches a name map (see the per-call, panicking `set_input` on the
+    /// simulators). Errors on unknown names.
+    pub fn bind_inputs(&self, names: &[&str]) -> Result<Vec<NetId>, String> {
+        bind_ports(&self.inputs, names, "input")
+    }
+
+    /// Resolve a batch of primary-output names to net ids in one pass.
+    /// Errors on unknown names.
+    pub fn bind_outputs(&self, names: &[&str]) -> Result<Vec<NetId>, String> {
+        bind_ports(&self.outputs, names, "output")
+    }
+
     /// Fanout count per net (used by timing/power models).
     pub fn fanout_counts(&self) -> Vec<u32> {
         let mut counts = vec![0u32; self.gates.len()];
@@ -248,6 +262,40 @@ impl Netlist {
         }
         counts
     }
+}
+
+/// Shared implementation of the bulk port binders: build the name index
+/// once, then resolve every requested name against it (`kind` labels the
+/// error message: "input" / "output"). Callers that already own a name
+/// index — the simulators — use [`resolve_ports`] directly instead.
+pub(crate) fn bind_ports(
+    ports: &[(String, NetId)],
+    names: &[&str],
+    kind: &str,
+) -> Result<Vec<NetId>, String> {
+    let index: HashMap<&str, NetId> = ports
+        .iter()
+        .map(|(name, id)| (name.as_str(), *id))
+        .collect();
+    resolve_ports(&index, names, kind)
+}
+
+/// Resolve a batch of port names against an existing name index (the
+/// allocation-free half of [`bind_ports`]).
+pub(crate) fn resolve_ports(
+    index: &HashMap<&str, NetId>,
+    names: &[&str],
+    kind: &str,
+) -> Result<Vec<NetId>, String> {
+    names
+        .iter()
+        .map(|&n| {
+            index
+                .get(n)
+                .copied()
+                .ok_or_else(|| format!("unknown {kind} {n:?}"))
+        })
+        .collect()
 }
 
 /// Gate counts by coarse class (the [`Netlist::census`] result).
@@ -770,6 +818,22 @@ mod tests {
         let mut b = NetBuilder::new("t");
         assert_eq!(b.constant(true), b.constant(true));
         assert_ne!(b.constant(true), b.constant(false));
+    }
+
+    #[test]
+    fn bulk_port_binders_resolve_and_reject() {
+        let mut b = NetBuilder::new("t");
+        let a = b.input("a");
+        let c = b.input("b");
+        let x = b.or(a, c);
+        b.output("x", x);
+        b.output("a_thru", a);
+        let nl = b.finish();
+        assert_eq!(nl.bind_inputs(&["b", "a", "b"]).unwrap(), vec![c, a, c]);
+        assert_eq!(nl.bind_outputs(&["a_thru", "x"]).unwrap(), vec![a, x]);
+        let err = nl.bind_inputs(&["missing"]).unwrap_err();
+        assert!(err.contains("unknown input"), "{err}");
+        assert!(nl.bind_outputs(&["missing"]).is_err());
     }
 
     #[test]

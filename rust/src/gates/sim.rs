@@ -73,7 +73,9 @@ impl<'a> Simulator<'a> {
     }
 
     /// Set a primary input by name. Panics on unknown names (tests want
-    /// loud failures).
+    /// loud failures). Per-call `HashMap` lookup — steady-state stimulus
+    /// should resolve ids once via [`Simulator::bind_inputs`] and use
+    /// [`Simulator::set_input_net`].
     pub fn set_input(&mut self, name: &str, v: bool) {
         let id = *self
             .input_index
@@ -105,6 +107,18 @@ impl<'a> Simulator<'a> {
     /// Value of a primary output by name.
     pub fn get_output(&self, name: &str) -> bool {
         self.values[self.get_output_net(name) as usize]
+    }
+
+    /// Resolve primary-input names to net ids in one pass against the
+    /// simulator's prebuilt name index. Errors on unknown names.
+    pub fn bind_inputs(&self, names: &[&str]) -> Result<Vec<NetId>, String> {
+        super::netlist::resolve_ports(&self.input_index, names, "input")
+    }
+
+    /// Resolve primary-output names to net ids in one pass against the
+    /// simulator's prebuilt name index. Errors on unknown names.
+    pub fn bind_outputs(&self, names: &[&str]) -> Result<Vec<NetId>, String> {
+        super::netlist::resolve_ports(&self.output_index, names, "output")
     }
 
     /// Combinational settle (phase 2). Counts toggles against the previous

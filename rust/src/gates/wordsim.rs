@@ -50,13 +50,17 @@ pub struct WordSimulator<'a> {
     cycles: u64,
     /// Net ids of all DFFs (precomputed so `clock` skips the full gate scan).
     dffs: Vec<NetId>,
-    // Per-instance macro evaluation cache: several Mealy pins of one
-    // instance read the same evaluation, so `eval_word` runs once per
-    // instance per distinct input vector instead of once per pin. Keyed on
-    // the gathered input words; invalidated when macro state advances.
-    cached_in: Vec<Vec<u64>>,
-    cached_out: Vec<Vec<u64>>,
-    cache_valid: Vec<bool>,
+    // Per-instance macro evaluation memo: several Mealy pins of one
+    // instance read the same evaluation, so `eval_word` runs at most once
+    // per instance per settle — the first pin evaluates and stamps the
+    // instance with the current settle generation; later pins just read
+    // `macro_outs`. No per-pin `Vec == Vec` input comparison in the hot
+    // loop. Soundness relies on every Mealy pin of an instance sharing
+    // one schedule level (validated in `new`), so the instance's inputs
+    // cannot change between its pins within a settle.
+    macro_outs: Vec<Vec<u64>>,
+    eval_gen: Vec<u64>,
+    settle_gen: u64,
     // scratch buffers
     dff_next: Vec<u64>,
     macro_in: Vec<u64>,
@@ -68,6 +72,27 @@ impl<'a> WordSimulator<'a> {
     /// combinational cycles).
     pub fn new(nl: &'a Netlist) -> Result<Self, String> {
         let levels = nl.levelize_buckets()?;
+        // The once-per-settle macro memo is sound only if every scheduled
+        // (Mealy) pin of an instance sits in one level — true for all nine
+        // TNN7 macros, whose Mealy pins share identical `pin_deps`. A
+        // future macro violating this must fail loudly, not mis-simulate.
+        let mut inst_level: Vec<Option<usize>> = vec![None; nl.macros.len()];
+        for (k, level) in levels.iter().enumerate() {
+            for &id in level {
+                if let Gate::MacroOut { inst, .. } = nl.gates[id as usize] {
+                    match inst_level[inst as usize] {
+                        None => inst_level[inst as usize] = Some(k),
+                        Some(l0) if l0 == k => {}
+                        Some(l0) => {
+                            return Err(format!(
+                                "macro instance {inst} has Mealy pins in levels {l0} and {k}; \
+                                 once-per-settle evaluation requires one level per instance"
+                            ))
+                        }
+                    }
+                }
+            }
+        }
         let mut sched = Vec::with_capacity(levels.iter().map(|l| l.len()).sum());
         let mut level_ends = Vec::with_capacity(levels.len());
         for level in levels {
@@ -110,9 +135,9 @@ impl<'a> WordSimulator<'a> {
             output_index,
             cycles: 0,
             dffs,
-            cached_in: nl.macros.iter().map(|_| Vec::new()).collect(),
-            cached_out: nl.macros.iter().map(|_| Vec::new()).collect(),
-            cache_valid: vec![false; nl.macros.len()],
+            macro_outs: nl.macros.iter().map(|_| Vec::new()).collect(),
+            eval_gen: vec![0; nl.macros.len()],
+            settle_gen: 0,
             dff_next: Vec::new(),
             macro_in: Vec::new(),
             macro_out: Vec::new(),
@@ -125,7 +150,10 @@ impl<'a> WordSimulator<'a> {
     }
 
     /// Set a primary input word by name (bit `l` = value in lane `l`).
-    /// Panics on unknown names.
+    /// Panics on unknown names. This is a per-call `HashMap` lookup —
+    /// convenient in tests; steady-state stimulus should resolve ids once
+    /// via [`WordSimulator::bind_inputs`] and use
+    /// [`WordSimulator::set_input_net`].
     pub fn set_input(&mut self, name: &str, word: u64) {
         let id = *self
             .input_index
@@ -166,6 +194,9 @@ impl<'a> WordSimulator<'a> {
     // borrows of the schedule cannot be held across it.
     #[allow(clippy::needless_range_loop)]
     pub fn settle(&mut self) {
+        // New settle pass: every instance's memo goes stale at once (a
+        // counter bump, not a per-instance invalidation sweep).
+        self.settle_gen += 1;
         let mut start = 0usize;
         for k in 0..self.level_ends.len() {
             let end = self.level_ends[k] as usize;
@@ -196,25 +227,23 @@ impl<'a> WordSimulator<'a> {
             }
             Gate::MacroOut { inst, pin } => {
                 let iu = inst as usize;
-                let m = &self.nl.macros[iu];
-                self.macro_in.clear();
-                for &src in &m.inputs {
-                    self.macro_in.push(self.values[src as usize]);
-                }
-                if !(self.cache_valid[iu] && self.cached_in[iu] == self.macro_in) {
+                if self.eval_gen[iu] != self.settle_gen {
+                    let m = &self.nl.macros[iu];
+                    self.macro_in.clear();
+                    for &src in &m.inputs {
+                        self.macro_in.push(self.values[src as usize]);
+                    }
                     macros9::eval_word(
                         m.kind,
                         &self.macro_in,
                         &self.macro_states[iu],
                         &mut self.macro_out,
                     );
-                    self.cached_in[iu].clear();
-                    self.cached_in[iu].extend_from_slice(&self.macro_in);
-                    self.cached_out[iu].clear();
-                    self.cached_out[iu].extend_from_slice(&self.macro_out);
-                    self.cache_valid[iu] = true;
+                    self.macro_outs[iu].clear();
+                    self.macro_outs[iu].extend_from_slice(&self.macro_out);
+                    self.eval_gen[iu] = self.settle_gen;
                 }
-                self.cached_out[iu][pin as usize]
+                self.macro_outs[iu][pin as usize]
             }
             Gate::Input | Gate::Const(_) | Gate::Dff { .. } => self.values[id as usize],
         }
@@ -224,11 +253,8 @@ impl<'a> WordSimulator<'a> {
     /// then refresh Moore macro pins — same ordering as the scalar engine.
     pub fn clock(&mut self) {
         self.cycles += 1;
-        // Macro state is about to advance: stale evaluations must not
-        // survive into the next settle.
-        for v in &mut self.cache_valid {
-            *v = false;
-        }
+        // (No memo invalidation needed: the next settle bumps settle_gen,
+        // which makes every instance's evaluation stale at once.)
         // Capture all DFF next-words first (no ordering hazards).
         self.dff_next.clear();
         for &id in &self.dffs {
@@ -258,10 +284,9 @@ impl<'a> WordSimulator<'a> {
             }
         }
         // Refresh Moore macro pins (state-only outputs) so they reflect the
-        // new state before the next settle. The evaluation also re-primes
-        // the per-instance cache; a Moore commit below may change another
-        // instance's inputs, which the input-equality check at the next
-        // settle detects and re-evaluates.
+        // new state before the next settle. (Moore outputs are functions of
+        // state alone, so a commit here changing another instance's inputs
+        // is harmless — the next settle re-evaluates every instance once.)
         for (inst, m) in self.nl.macros.iter().enumerate() {
             self.macro_in.clear();
             for &src in &m.inputs {
@@ -273,11 +298,6 @@ impl<'a> WordSimulator<'a> {
                 &self.macro_states[inst],
                 &mut self.macro_out,
             );
-            self.cached_in[inst].clear();
-            self.cached_in[inst].extend_from_slice(&self.macro_in);
-            self.cached_out[inst].clear();
-            self.cached_out[inst].extend_from_slice(&self.macro_out);
-            self.cache_valid[inst] = true;
             for (pin, &net) in m.outputs.iter().enumerate() {
                 if m.kind.pin_deps(pin as u8).is_empty() {
                     let v = self.macro_out[pin];
@@ -327,14 +347,26 @@ impl<'a> WordSimulator<'a> {
     /// Overwrite a macro instance's word-level state.
     pub fn set_macro_state(&mut self, inst: usize, st: WordMacroState) {
         self.macro_states[inst] = st;
-        self.cache_valid[inst] = false;
     }
 
     /// Broadcast a scalar macro state into all lanes of an instance (e.g.
     /// to preload synaptic weights before a cross-check run).
     pub fn set_macro_state_broadcast(&mut self, inst: usize, st: &MacroState) {
         self.macro_states[inst] = WordMacroState::broadcast(st);
-        self.cache_valid[inst] = false;
+    }
+
+    /// Resolve primary-input names to net ids in one pass against the
+    /// simulator's prebuilt name index (then drive the hot loop through
+    /// [`WordSimulator::set_input_net`] — per-call name lookups never
+    /// belong in steady-state stimulus). Errors on unknown names.
+    pub fn bind_inputs(&self, names: &[&str]) -> Result<Vec<NetId>, String> {
+        super::netlist::resolve_ports(&self.input_index, names, "input")
+    }
+
+    /// Resolve primary-output names to net ids in one pass against the
+    /// simulator's prebuilt name index. Errors on unknown names.
+    pub fn bind_outputs(&self, names: &[&str]) -> Result<Vec<NetId>, String> {
+        super::netlist::resolve_ports(&self.output_index, names, "output")
     }
 
     /// Reset all state (DFFs to init, macro states cleared, toggles kept).
@@ -346,9 +378,6 @@ impl<'a> WordSimulator<'a> {
         }
         for st in &mut self.macro_states {
             *st = WordMacroState::default();
-        }
-        for v in &mut self.cache_valid {
-            *v = false;
         }
     }
 }
@@ -508,6 +537,36 @@ mod tests {
             (a_s - a_w).abs() < 0.05,
             "scalar α {a_s:.4} vs word α {a_w:.4}"
         );
+    }
+
+    #[test]
+    fn macro_memo_is_per_settle_and_resettling_is_stable() {
+        // Two settles without an intervening clock must agree (the memo
+        // re-evaluates each instance exactly once per settle, against the
+        // same inputs and state), and bind_inputs resolves in bulk.
+        let mut b = NetBuilder::new("t");
+        let p = b.input("p");
+        let g = b.input("g");
+        let outs = b.macro_inst(MacroKind::Pulse2Edge, vec![p, g]);
+        b.output("edge", outs[0]);
+        let nl = b.finish();
+        let mut sim = WordSimulator::new(&nl).unwrap();
+        let bound = sim.bind_inputs(&["p", "g"]).unwrap();
+        assert_eq!(bound, vec![p, g]);
+        assert_eq!(sim.bind_outputs(&["edge"]).unwrap(), vec![outs[0]]);
+        assert!(sim.bind_inputs(&["nope"]).is_err());
+        sim.set_input_net(bound[0], 0b1010);
+        sim.set_input_net(bound[1], 0);
+        sim.settle();
+        let first = sim.get_output("edge");
+        assert_eq!(first, 0b1010);
+        sim.settle();
+        assert_eq!(sim.get_output("edge"), first, "resettle is idempotent");
+        // Changing an input between settles must be observed (the memo is
+        // per settle, not per cycle).
+        sim.set_input_net(bound[0], 0b0101);
+        sim.settle();
+        assert_eq!(sim.get_output("edge"), 0b0101);
     }
 
     #[test]

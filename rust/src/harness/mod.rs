@@ -339,31 +339,45 @@ pub fn print_fig13(base: &LayoutReport, t7: &LayoutReport) {
 }
 
 // ---------------------------------------------------------------------
-// Simulation engines — scalar vs 64-lane bit-parallel toggle collection
-// on the flagship 82×2 TwoLeadECG column (the functional-verification
-// hot path feeding the activity-based power model)
+// Simulation engines — scalar vs 64-lane bit-parallel vs compiled
+// lane-block toggle collection on the flagship 82×2 TwoLeadECG column
+// (the functional-verification hot path feeding the activity-based
+// power model)
 // ---------------------------------------------------------------------
 
-/// Scalar vs bit-parallel toggle-collection comparison on one design.
+/// Lane-block width the `report sim` compiled measurement uses.
+pub const SIM_ENGINES_WORDS: usize = 2;
+
+/// Scalar vs bit-parallel vs compiled toggle-collection comparison on one
+/// design.
 #[derive(Clone, Debug)]
 pub struct SimEnginesRow {
     /// Design (netlist) name.
     pub design: String,
     /// Net count of the simulated netlist.
     pub nets: usize,
-    /// Simulated cycles per backend (the bit-parallel engine rounds up to a
-    /// whole number of 64-lane passes).
+    /// Simulated cycles per backend (the word-wide engines round up to a
+    /// whole number of passes).
     pub scalar_cycles: u64,
     /// Lane-cycles simulated by the bit-parallel backend.
     pub word_cycles: u64,
+    /// Lane-cycles simulated by the compiled backend.
+    pub compiled_cycles: u64,
     /// Scalar-backend wall time.
     pub scalar_wall: Duration,
     /// Bit-parallel-backend wall time.
     pub word_wall: Duration,
+    /// Compiled-backend wall time.
+    pub compiled_wall: Duration,
     /// Mean switching activity α measured by the scalar backend.
     pub scalar_activity: f64,
     /// Mean switching activity α measured by the bit-parallel backend.
     pub word_activity: f64,
+    /// Mean switching activity α measured by the compiled backend.
+    pub compiled_activity: f64,
+    /// Lane-block width `W` of the compiled measurement
+    /// ([`SIM_ENGINES_WORDS`]).
+    pub compiled_words: usize,
 }
 
 impl SimEnginesRow {
@@ -374,10 +388,21 @@ impl SimEnginesRow {
         let w = self.word_wall.as_secs_f64() / self.word_cycles.max(1) as f64;
         s / w.max(1e-12)
     }
+
+    /// Wall-clock speedup of the compiled engine over the scalar engine,
+    /// normalized per simulated lane-cycle.
+    pub fn speedup_compiled(&self) -> f64 {
+        let s = self.scalar_wall.as_secs_f64() / self.scalar_cycles.max(1) as f64;
+        let c = self.compiled_wall.as_secs_f64() / self.compiled_cycles.max(1) as f64;
+        s / c.max(1e-12)
+    }
 }
 
 /// Collect `cycles` cycles of toggle statistics on the 82×2 TwoLeadECG
-/// column with both simulation backends, timing each.
+/// column with all three simulation backends, timing each. The compiled
+/// run uses a [`SIM_ENGINES_WORDS`]-word lane block, single-threaded, so
+/// the comparison isolates the compile-vs-interpret gap (thread scaling
+/// is measured by `benches/compiled_sim.rs`).
 pub fn sim_engines(cycles: u64) -> SimEnginesRow {
     let cfg = ucr_suite()
         .into_iter()
@@ -391,15 +416,31 @@ pub fn sim_engines(cycles: u64) -> SimEnginesRow {
     let t1 = Instant::now();
     let w = collect_toggles(&d.netlist, cycles, 7, SimBackend::BitParallel64).unwrap();
     let word_wall = t1.elapsed();
+    let t2 = Instant::now();
+    let c = collect_toggles(
+        &d.netlist,
+        cycles,
+        7,
+        SimBackend::Compiled {
+            words: SIM_ENGINES_WORDS,
+            threads: 1,
+        },
+    )
+    .unwrap();
+    let compiled_wall = t2.elapsed();
     SimEnginesRow {
         design: d.netlist.name.clone(),
         nets: d.netlist.len(),
         scalar_cycles: s.cycles,
         word_cycles: w.cycles,
+        compiled_cycles: c.cycles,
         scalar_wall,
         word_wall,
+        compiled_wall,
         scalar_activity: s.activity(),
         word_activity: w.activity(),
+        compiled_activity: c.activity(),
+        compiled_words: SIM_ENGINES_WORDS,
     }
 }
 
@@ -409,6 +450,7 @@ pub fn print_sim_engines(r: &SimEnginesRow) {
         "Simulation engines: gate-sim toggle collection, {} ({} nets)",
         r.design, r.nets
     );
+    let compiled_label = format!("compiled (W={})", r.compiled_words);
     for (name, cycles, wall, act) in [
         ("scalar", r.scalar_cycles, r.scalar_wall, r.scalar_activity),
         (
@@ -416,6 +458,12 @@ pub fn print_sim_engines(r: &SimEnginesRow) {
             r.word_cycles,
             r.word_wall,
             r.word_activity,
+        ),
+        (
+            compiled_label.as_str(),
+            r.compiled_cycles,
+            r.compiled_wall,
+            r.compiled_activity,
         ),
     ] {
         let per_cycle = wall.as_secs_f64() * 1e9 / cycles.max(1) as f64;
@@ -425,9 +473,11 @@ pub fn print_sim_engines(r: &SimEnginesRow) {
         );
     }
     println!(
-        "bit-parallel speedup: {:.1}x (α agreement: Δ = {:.4})",
+        "bit-parallel speedup: {:.1}x | compiled speedup: {:.1}x (α spread: Δw = {:.4}, Δc = {:.4})",
         r.speedup(),
-        (r.scalar_activity - r.word_activity).abs()
+        r.speedup_compiled(),
+        (r.scalar_activity - r.word_activity).abs(),
+        (r.scalar_activity - r.compiled_activity).abs()
     );
 }
 
@@ -438,11 +488,16 @@ pub fn sim_engines_json(r: &SimEnginesRow) -> Json {
         .set("nets", r.nets)
         .set("scalar_cycles", r.scalar_cycles as f64)
         .set("word_cycles", r.word_cycles as f64)
+        .set("compiled_cycles", r.compiled_cycles as f64)
         .set("scalar_ms", r.scalar_wall.as_secs_f64() * 1e3)
         .set("word_ms", r.word_wall.as_secs_f64() * 1e3)
+        .set("compiled_ms", r.compiled_wall.as_secs_f64() * 1e3)
         .set("scalar_activity", r.scalar_activity)
         .set("word_activity", r.word_activity)
+        .set("compiled_activity", r.compiled_activity)
+        .set("compiled_words", r.compiled_words)
         .set("speedup", r.speedup())
+        .set("speedup_compiled", r.speedup_compiled())
 }
 
 // ---------------------------------------------------------------------
@@ -1092,18 +1147,29 @@ mod tests {
         let r = sim_engines(4096);
         assert_eq!(r.scalar_cycles, 4096);
         assert_eq!(r.word_cycles, 4096, "4096 cycles = exactly 64 word passes");
+        assert_eq!(
+            r.compiled_cycles, 4096,
+            "4096 cycles = exactly 32 two-word compiled passes"
+        );
         assert!(
             (r.scalar_activity - r.word_activity).abs() < 0.05,
             "α mismatch: scalar {} word {}",
             r.scalar_activity,
             r.word_activity
         );
+        assert!(
+            (r.scalar_activity - r.compiled_activity).abs() < 0.05,
+            "α mismatch: scalar {} compiled {}",
+            r.scalar_activity,
+            r.compiled_activity
+        );
         let j = sim_engines_json(&r).to_string();
-        assert!(j.contains("speedup"));
+        assert!(j.contains("speedup") && j.contains("compiled_activity"));
         // No wall-clock assertion here: timing under `cargo test` on a
-        // loaded CI machine is nondeterministic. The ≥10× speedup claim is
-        // measured (median-of-N) by benches/sim_throughput.rs.
-        assert!(r.speedup() > 0.0);
+        // loaded CI machine is nondeterministic. The ≥10× speedup claims
+        // are measured (median-of-N) by benches/sim_throughput.rs and
+        // benches/compiled_sim.rs.
+        assert!(r.speedup() > 0.0 && r.speedup_compiled() > 0.0);
     }
 
     #[test]

@@ -21,9 +21,12 @@
 //! * **Hardware half** — what TNN hardware *costs* (the substitute for the
 //!   Cadence/ASAP7 stack, built from scratch per the reproduction rules):
 //!   - [`gates`]: gate-level netlist IR, the nine TNN7 macros as gate
-//!     netlists, and two levelized simulators — a scalar reference engine
-//!     and a 64-lane bit-parallel engine (one `u64` word per net, toggles
-//!     counted by popcount), selectable via [`gates::SimBackend`] — used to
+//!     netlists, and three levelized simulation engines — a scalar
+//!     reference engine, a 64-lane bit-parallel interpreter (one `u64`
+//!     word per net, toggles counted by popcount), and a compiled netlist
+//!     program ([`gates::compile`]: flat instruction stream over
+//!     multi-word lane blocks, levels sharded across worker threads),
+//!     selectable via [`gates::SimBackend`] — used to
 //!     verify the macros against the golden model and to extract switching
 //!     activity for the power model (see README §"Simulation engines").
 //!     The macro netlist is also a first-class *column engine*

@@ -106,6 +106,9 @@ fn run(args: &[String]) -> tnn7::Result<()> {
     if let Some(e) = opt(args, "--engine") {
         cfg.engine = EngineKind::parse(e)?;
     }
+    if let Some(b) = opt(args, "--sim-backend") {
+        cfg.sim_backend = tnn7::gates::SimBackend::parse(b)?;
+    }
     match args.get(1).map(|s| s.as_str()) {
         Some("ucr") => {
             let name = opt(args, "--dataset").unwrap_or("TwoLeadECG");
@@ -141,6 +144,10 @@ fn run(args: &[String]) -> tnn7::Result<()> {
                     Engine::xla(exe, &mut rng)
                 }
             };
+            // Batched gate-level inference runs on the selected simulator
+            // backend (`--sim-backend compiled` + `sim_words=`); winners
+            // are bit-exact across backends. No-op for other engines.
+            engine.set_sim_backend(cfg.resolved_sim_backend());
             let mut out = run_stream(&mut engine, items.clone(), cfg.channel_depth, cfg.seed)?;
             for epoch in 1..5 {
                 out = run_stream(&mut engine, items.clone(), cfg.channel_depth, cfg.seed + epoch)?;

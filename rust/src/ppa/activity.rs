@@ -119,7 +119,12 @@ pub struct MeasuredActivity {
 /// Measure per-net transition density by simulating `cycles` cycles of the
 /// standard randomized TNN workload on the selected backend. The
 /// bit-parallel backend produces the same statistics ~64× faster (see
-/// `benches/sim_throughput.rs`).
+/// `benches/sim_throughput.rs`); the compiled backend
+/// (`SimBackend::Compiled { words, threads }`) goes further with
+/// `words × 64`-lane passes and threaded level execution (see
+/// `benches/compiled_sim.rs`), and at `words = 1` reproduces the
+/// bit-parallel backend's α vector bit for bit. All stimulus ids are
+/// resolved once up front — no backend touches a name map per cycle.
 pub fn measure(
     nl: &Netlist,
     cycles: u64,
@@ -270,6 +275,36 @@ mod tests {
                 meas_s.alpha[id as usize]
             );
         }
+    }
+
+    #[test]
+    fn compiled_measure_matches_word_backend_exactly_at_w1() {
+        // words = 1 shares the interpreter's stimulus stream, so the α
+        // vectors must be identical — not merely statistically close.
+        use crate::gates::column_design::{build_column, BrvSource};
+        let d = build_column(5, 2, 6, BrvSource::Lfsr);
+        let w = measure(&d.netlist, 4096, 5, SimBackend::BitParallel64).unwrap();
+        let c = measure(
+            &d.netlist,
+            4096,
+            5,
+            SimBackend::Compiled { words: 1, threads: 2 },
+        )
+        .unwrap();
+        assert_eq!(c.backend.name(), "compiled");
+        assert_eq!(c.cycles, w.cycles);
+        assert_eq!(c.alpha, w.alpha);
+        // Multi-word blocks sample more lanes of the same process.
+        let c4 = measure(
+            &d.netlist,
+            4096,
+            5,
+            SimBackend::Compiled { words: 4, threads: 1 },
+        )
+        .unwrap();
+        assert_eq!(c4.cycles, 4096);
+        let mean = |m: &MeasuredActivity| m.alpha.iter().sum::<f64>() / m.alpha.len() as f64;
+        assert!((mean(&c4) - mean(&w)).abs() < 0.05);
     }
 
     #[test]

@@ -31,7 +31,11 @@ static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
 /// measurement pipeline (engines, synthesis, PPA model, workload
 /// generation, draw disciplines) invalidates previously-cached results —
 /// every old entry then misses and is recomputed.
-pub const CACHE_VERSION: &str = "tnn7-sweep-v1";
+///
+/// v2: points gained the `alpha_measured` field (gate-sim switching
+/// activity measured on the compiled lane-block backend, pinned by
+/// `exec::SWEEP_ALPHA_CYCLES` / `exec::SWEEP_ALPHA_WORDS`).
+pub const CACHE_VERSION: &str = "tnn7-sweep-v2";
 
 /// Stable 64-bit FNV-1a hash (the cache's content address). Frozen: keys
 /// must not change across platforms or releases, or warm caches would be

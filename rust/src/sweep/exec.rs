@@ -22,6 +22,7 @@ use super::cache::PointCache;
 use super::spec::{SweepPoint, SweepSpec, ThetaPolicy};
 use crate::coordinator::{encode_ucr, run_stream, score_winners, volley_density};
 use crate::gates::column_design::{build_column, BrvSource};
+use crate::gates::SimBackend;
 use crate::ppa::report::analyze;
 use crate::synth::flow::synthesize;
 use crate::tnn::params::TnnParams;
@@ -50,6 +51,13 @@ pub struct PointResult {
     pub comp_time_ns: f64,
     /// Energy-delay product, fJ·ns.
     pub edp_fj_ns: f64,
+    /// Mean switching activity α of the point's column netlist, measured
+    /// by gate-level simulation on the compiled lane-block backend under
+    /// the standard randomized TNN workload (the measurement is pinned by
+    /// [`SWEEP_ALPHA_CYCLES`] / [`SWEEP_ALPHA_WORDS`] and seeded by the
+    /// point, so it is a pure function of the point — deterministic at
+    /// any thread count and identical under every `sim_backend` setting).
+    pub alpha_measured: f64,
     // --- synthesis shape (deterministic) ---
     /// Gates entering the optimizer (the Fig. 12 search-space size).
     pub gates_in: usize,
@@ -89,6 +97,7 @@ impl PointResult {
         d.set("leakage_nw", self.leakage_nw);
         d.set("comp_time_ns", self.comp_time_ns);
         d.set("edp_fj_ns", self.edp_fj_ns);
+        d.set("alpha_measured", self.alpha_measured);
         d.set("gates_in", self.gates_in);
         d.set("cells_out", self.cells_out);
         d.set("macros_out", self.macros_out);
@@ -114,6 +123,7 @@ impl PointResult {
             leakage_nw: f("leakage_nw")?,
             comp_time_ns: f("comp_time_ns")?,
             edp_fj_ns: f("edp_fj_ns")?,
+            alpha_measured: f("alpha_measured")?,
             gates_in: u("gates_in")?,
             cells_out: u("cells_out")?,
             macros_out: u("macros_out")?,
@@ -135,6 +145,7 @@ impl PointResult {
             leakage_nw: 55.5,
             comp_time_ns: 3.25,
             edp_fj_ns: 101.0,
+            alpha_measured: 0.0417,
             gates_in: 1000,
             cells_out: 420,
             macros_out: 18,
@@ -175,12 +186,38 @@ pub struct SweepOutcome {
     pub cached: usize,
 }
 
+/// Lane-cycles of the per-point measured-activity run. Part of the
+/// measurement definition: changing it changes `alpha_measured` for every
+/// point, so any edit must bump [`super::cache::CACHE_VERSION`].
+pub const SWEEP_ALPHA_CYCLES: u64 = 2048;
+
+/// Lane-block width of the per-point measured-activity run (same
+/// CACHE_VERSION contract as [`SWEEP_ALPHA_CYCLES`]). Pinned here — NOT
+/// the spec's `sim_words` execution knob — so the measurement is a pure
+/// function of the point.
+pub const SWEEP_ALPHA_WORDS: usize = 2;
+
+/// Measure one grid point from scratch with the default batched-inference
+/// backend (see [`compute_point_with`]).
+pub fn compute_point(point: &SweepPoint) -> crate::Result<PointResult> {
+    compute_point_with(point, SimBackend::BitParallel64)
+}
+
 /// Measure one grid point from scratch: generate the seeded workload,
 /// resolve θ, synthesize the column under the point's flow (metered, the
-/// Fig. 12 quantity), analyze PPA, then train the point's engine through
-/// the same streaming path the conformance harness drives and score the
-/// post-training clustering.
-pub fn compute_point(point: &SweepPoint) -> crate::Result<PointResult> {
+/// Fig. 12 quantity), analyze PPA, measure gate-level switching activity
+/// on the compiled lane-block simulator, then train the point's engine
+/// through the same streaming path the conformance harness drives and
+/// score the post-training clustering.
+///
+/// `sim_backend` selects the simulator behind the gate engine's batched
+/// inference scoring only — winners are bit-exact across backends, so
+/// every deterministic field of the result is independent of it (which is
+/// what keeps cache keys backend-stable).
+pub fn compute_point_with(
+    point: &SweepPoint,
+    sim_backend: SimBackend,
+) -> crate::Result<PointResult> {
     let params = TnnParams::default();
     // Workload: the same synthetic UCR-style generator the conformance
     // suite sweeps, at the point's geometry.
@@ -207,6 +244,19 @@ pub fn compute_point(point: &SweepPoint) -> crate::Result<PointResult> {
     let out = synthesize(&design.netlist, point.flow);
     let lib = point.flow.library();
     let ppa = analyze(&out.mapped, &lib, crate::harness::GAMMA_CYCLES);
+    // Gate-level measured switching activity on the compiled lane-block
+    // simulator (pinned measurement constants + the point's seed — see
+    // the field docs; the optimizer renumbers nets, so the per-net vector
+    // cannot feed `analyze_with_alpha` on the optimized mapping and the
+    // sweep reports the mean α instead).
+    let meas = crate::ppa::activity::measure(
+        &design.netlist,
+        SWEEP_ALPHA_CYCLES,
+        point.seed,
+        SimBackend::Compiled { words: SWEEP_ALPHA_WORDS, threads: 1 },
+    )
+    .map_err(anyhow::Error::msg)?;
+    let alpha_measured = meas.alpha.iter().sum::<f64>() / meas.alpha.len().max(1) as f64;
 
     // Function: train the engine online (same run_stream pipeline as
     // `run ucr` and the conformance harness), then score a draw-free
@@ -222,6 +272,7 @@ pub fn compute_point(point: &SweepPoint) -> crate::Result<PointResult> {
         params,
         &mut weight_rng,
     )?;
+    engine.set_sim_backend(sim_backend);
     let t_train = Instant::now();
     for epoch in 0..point.epochs {
         let mut stream = root.split_stream(1 + epoch);
@@ -238,6 +289,7 @@ pub fn compute_point(point: &SweepPoint) -> crate::Result<PointResult> {
         leakage_nw: ppa.leakage_nw,
         comp_time_ns: ppa.comp_time_ns,
         edp_fj_ns: ppa.edp_fj_ns,
+        alpha_measured,
         gates_in: out.stats.gates_in,
         cells_out: out.stats.cells_out,
         macros_out: out.stats.macros_out,
@@ -258,6 +310,7 @@ pub fn compute_point(point: &SweepPoint) -> crate::Result<PointResult> {
 /// cached, so the retry resumes where it failed.
 pub fn run_sweep(spec: &SweepSpec, use_cache: bool) -> crate::Result<SweepOutcome> {
     let points = spec.points();
+    let sim_backend = spec.resolved_sim_backend();
     let cache = if use_cache {
         Some(PointCache::open(&spec.cache_dir)?)
     } else {
@@ -297,7 +350,7 @@ pub fn run_sweep(spec: &SweepSpec, use_cache: bool) -> crate::Result<SweepOutcom
                     break;
                 }
                 let i = todo[k];
-                let outcome = compute_point(&points[i]).and_then(|r| {
+                let outcome = compute_point_with(&points[i], sim_backend).and_then(|r| {
                     if let Some(c) = &cache {
                         c.store(&points[i], &r)?;
                     }
@@ -378,10 +431,35 @@ mod tests {
         assert_eq!(a.area_um2, b.area_um2);
         assert_eq!(a.power_nw, b.power_nw);
         assert_eq!(a.edp_fj_ns, b.edp_fj_ns);
+        assert_eq!(a.alpha_measured, b.alpha_measured);
         assert_eq!(a.gates_in, b.gates_in);
         assert_eq!((a.fired, a.rand_index, a.purity), (b.fired, b.rand_index, b.purity));
         assert_eq!(a.items, 6);
         assert!(a.area_um2 > 0.0 && a.power_nw > 0.0);
+        assert!(a.alpha_measured > 0.0, "LFSR column always toggles");
+    }
+
+    #[test]
+    fn sim_backend_choice_never_changes_deterministic_fields() {
+        // The cache-key contract: a gate-engine point computed under the
+        // interpreter and under the compiled backend must agree on every
+        // deterministic field (winners are bit-exact), so cache keys can
+        // legitimately exclude the backend.
+        let p = small_point(EngineKind::Gate);
+        let a = compute_point_with(&p, SimBackend::BitParallel64).unwrap();
+        let b =
+            compute_point_with(&p, SimBackend::Compiled { words: 1, threads: 1 }).unwrap();
+        let c =
+            compute_point_with(&p, SimBackend::Compiled { words: 2, threads: 1 }).unwrap();
+        for other in [&b, &c] {
+            assert_eq!(a.theta, other.theta);
+            assert_eq!(a.alpha_measured, other.alpha_measured);
+            assert_eq!(
+                (a.fired, a.rand_index, a.purity),
+                (other.fired, other.rand_index, other.purity)
+            );
+            assert_eq!(a.items, other.items);
+        }
     }
 
     #[test]
@@ -393,6 +471,7 @@ mod tests {
         let b = compute_point(&small_point(EngineKind::Batched)).unwrap();
         assert_eq!(g.theta, b.theta);
         assert_eq!(g.area_um2, b.area_um2);
+        assert_eq!(g.alpha_measured, b.alpha_measured, "same netlist, same seed");
         assert_eq!(g.gates_in, b.gates_in);
         assert_eq!(g.items, b.items);
     }

@@ -32,6 +32,9 @@ pub mod report;
 pub mod spec;
 
 pub use cache::{PointCache, CACHE_VERSION};
-pub use exec::{compute_point, run_sweep, PointResult, SweepOutcome, SweepRow};
+pub use exec::{
+    compute_point, compute_point_with, run_sweep, PointResult, SweepOutcome, SweepRow,
+    SWEEP_ALPHA_CYCLES, SWEEP_ALPHA_WORDS,
+};
 pub use report::{pareto, print_summary, synth_ratio_curve, tsv, write_reports, ParetoFronts};
 pub use spec::{SweepPoint, SweepSpec, ThetaPolicy};

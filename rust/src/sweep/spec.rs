@@ -8,6 +8,7 @@
 //! on top, so a whole experiment campaign is one small text file.
 
 use crate::config::EngineKind;
+use crate::gates::SimBackend;
 use crate::synth::flow::Flow;
 use crate::tnn::params::TnnParams;
 use crate::util::kv::KvDoc;
@@ -92,6 +93,14 @@ pub struct SweepSpec {
     pub cache_dir: PathBuf,
     /// Report output directory (`sweep.tsv`, `BENCH_sweep.json`).
     pub out_dir: PathBuf,
+    /// Gate-level simulator backend for each point's batched inference
+    /// scoring (`sim_backend` key). An **execution knob** like `threads`:
+    /// winners are bit-exact across backends, so it is deliberately NOT
+    /// part of [`SweepPoint`] or the cache key — a cache warmed under one
+    /// backend serves every other backend 100% (CI proves this).
+    pub sim_backend: SimBackend,
+    /// Lane-block width for a `compiled` `sim_backend` (`sim_words` key).
+    pub sim_words: usize,
 }
 
 impl Default for SweepSpec {
@@ -115,6 +124,11 @@ impl Default for SweepSpec {
             threads: run.threads,
             cache_dir: run.cache_dir,
             out_dir: ".".into(),
+            sim_backend: SimBackend::Compiled {
+                words: crate::gates::DEFAULT_SIM_WORDS,
+                threads: 1,
+            },
+            sim_words: crate::gates::DEFAULT_SIM_WORDS,
         }
     }
 }
@@ -193,7 +207,8 @@ impl SweepSpec {
     /// (UCR suite names, appended to `geometries`), `theta`
     /// (`default|sparse|fixed:<n>`), `flows` (`asap7,tnn7`), `engines`
     /// (`golden,batched,gate`), `seeds`, `per_cluster`, `epochs`,
-    /// `threads`, `cache_dir`, `out_dir`.
+    /// `threads`, `cache_dir`, `out_dir`, `sim_backend`
+    /// (`scalar|bit-parallel-64|compiled`), `sim_words`.
     pub fn from_kv(doc: &KvDoc) -> crate::Result<Self> {
         let mut s = SweepSpec::default();
         if let Some(v) = doc.get("name") {
@@ -259,8 +274,28 @@ impl SweepSpec {
         if let Some(v) = doc.get("out_dir") {
             s.out_dir = v.into();
         }
+        if let Some(v) = doc.get("sim_backend") {
+            s.sim_backend = SimBackend::parse(v)?;
+        }
+        if let Some(v) = doc.get_usize("sim_words")? {
+            s.sim_words = v;
+        }
         s.validate()?;
         Ok(s)
+    }
+
+    /// The fully-resolved per-point simulator backend: a `compiled`
+    /// selection picks up the `sim_words` lane-block width, single
+    /// threaded — grid points are already sharded across the executor's
+    /// workers, so per-point settle threading would only oversubscribe.
+    pub fn resolved_sim_backend(&self) -> SimBackend {
+        match self.sim_backend {
+            SimBackend::Compiled { .. } => SimBackend::Compiled {
+                words: self.sim_words,
+                threads: 1,
+            },
+            b => b,
+        }
     }
 
     /// Apply `key=value` CLI overrides on top of this spec (same keys as
@@ -276,9 +311,10 @@ impl SweepSpec {
                 .ok_or_else(|| anyhow::anyhow!("override must be key=value: {o}"))?;
             doc.set(k.trim(), v.trim());
         }
-        const KEYS: [&str; 12] = [
+        const KEYS: [&str; 14] = [
             "name", "geometries", "datasets", "theta", "flows", "engines", "seeds",
-            "per_cluster", "epochs", "threads", "cache_dir", "out_dir",
+            "per_cluster", "epochs", "threads", "cache_dir", "out_dir", "sim_backend",
+            "sim_words",
         ];
         for key in doc.keys() {
             anyhow::ensure!(KEYS.contains(&key), "unknown sweep key {key:?}");
@@ -297,6 +333,8 @@ impl SweepSpec {
                 "threads" => self.threads = merged.threads,
                 "cache_dir" => self.cache_dir = merged.cache_dir.clone(),
                 "out_dir" => self.out_dir = merged.out_dir.clone(),
+                "sim_backend" => self.sim_backend = merged.sim_backend,
+                "sim_words" => self.sim_words = merged.sim_words,
                 _ => unreachable!("key set checked above"),
             }
         }
@@ -323,6 +361,10 @@ impl SweepSpec {
         anyhow::ensure!(!self.seeds.is_empty(), "sweep needs >= 1 seed");
         anyhow::ensure!(self.per_cluster >= 1, "per_cluster must be >= 1");
         anyhow::ensure!(self.epochs >= 1, "epochs must be >= 1");
+        anyhow::ensure!(
+            (1..=64).contains(&self.sim_words),
+            "sim_words must be in 1..=64"
+        );
         Ok(())
     }
 
@@ -436,6 +478,32 @@ mod tests {
         assert_eq!(s.geometries.len(), 6);
         assert!(s.apply_overrides(&["bogus=1".into()]).is_err());
         assert!(s.apply_overrides(&["engines=xla".into()]).is_err());
+    }
+
+    #[test]
+    fn sim_backend_is_an_execution_knob_outside_the_point_definition() {
+        let doc = KvDoc::parse("sim_backend = bit-parallel-64\nsim_words = 4\n").unwrap();
+        let s = SweepSpec::from_kv(&doc).unwrap();
+        assert_eq!(s.sim_backend, SimBackend::BitParallel64);
+        assert_eq!(s.sim_words, 4);
+        assert_eq!(s.resolved_sim_backend(), SimBackend::BitParallel64);
+        let mut s = SweepSpec::default();
+        assert_eq!(
+            s.resolved_sim_backend(),
+            SimBackend::Compiled { words: crate::gates::DEFAULT_SIM_WORDS, threads: 1 }
+        );
+        s.apply_overrides(&["sim_backend=compiled".into(), "sim_words=8".into()])
+            .unwrap();
+        assert_eq!(
+            s.resolved_sim_backend(),
+            SimBackend::Compiled { words: 8, threads: 1 }
+        );
+        assert!(s.apply_overrides(&["sim_words=0".into()]).is_err());
+        // The backend must never reach the point definition (cache keys
+        // stay backend-stable): canonical strings don't mention it.
+        for p in s.points() {
+            assert!(!p.canonical().contains("sim"), "{}", p.canonical());
+        }
     }
 
     #[test]

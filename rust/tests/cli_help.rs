@@ -31,7 +31,7 @@ fn global_usage_covers_the_dispatch_table() {
         assert!(u.contains(name), "usage must advertise {name}");
     }
     // The flags that drifted historically must be present in the synopses…
-    for flag in ["--engine", "--quick", "--dataset", "--layers", "--no-cache"] {
+    for flag in ["--engine", "--quick", "--dataset", "--layers", "--no-cache", "--sim-backend"] {
         assert!(u.contains(flag), "usage must advertise {flag}");
     }
     // …and the config-override keys in the per-command detail lines.
@@ -40,7 +40,7 @@ fn global_usage_covers_the_dispatch_table() {
         assert!(run_help.contains(key), "run help must advertise {key}");
     }
     let sweep_help = help_for("sweep").unwrap();
-    for key in ["geometries=", "flows=", "engines=", "cache_dir="] {
+    for key in ["geometries=", "flows=", "engines=", "cache_dir=", "sim_backend=", "sim_words="] {
         assert!(sweep_help.contains(key), "sweep help must advertise {key}");
     }
 }

@@ -1,0 +1,185 @@
+//! Compiled-engine differential suite: the compiled netlist program
+//! (`gates::compile`) against both interpreted engines over the shared
+//! conformance geometry matrix.
+//!
+//! Contracts pinned here (the PR's acceptance criteria):
+//! * word `w` of the compiled engine is bit-for-bit an independent
+//!   64-lane `WordSimulator` run under the same stimulus — every net,
+//!   every pass, at `W ∈ {1, 2, 4}`;
+//! * lane 0 of word 0 is bit-for-bit the scalar engine;
+//! * compiled toggle counts equal the element-wise sum of the `W`
+//!   independent interpreter runs' toggle counts;
+//! * sharding settles across 1/2/4 worker threads leaves toggle arrays
+//!   (and values) byte-identical;
+//! * `collect_toggles` with the compiled backend at `words = 1` returns
+//!   the interpreter backend's report bit for bit.
+
+use tnn7::gates::column_design::{build_column, BrvSource};
+use tnn7::gates::{
+    collect_toggles, CompiledSim, NetId, Simulator, SimBackend, WordSimulator,
+    CONFORMANCE_GEOMETRIES,
+};
+use tnn7::util::Rng64;
+
+/// Drive one geometry for `passes` compiled passes with `words`-word lane
+/// blocks, checking the compiled engine word-for-word against `words`
+/// independent interpreter runs and lane 0 against the scalar engine.
+fn assert_compiled_matches_interpreters(
+    p: usize,
+    q: usize,
+    seed: u64,
+    words: usize,
+    passes: u64,
+) {
+    let d = build_column(p, q, (p as u32 * 7) / 4, BrvSource::Lfsr);
+    let nl = &d.netlist;
+    let mut csim = CompiledSim::new(nl, words, 1).unwrap();
+    let mut wsims: Vec<WordSimulator> =
+        (0..words).map(|_| WordSimulator::new(nl).unwrap()).collect();
+    let mut ssim = Simulator::new(nl).unwrap();
+    // The bulk binder resolves the stimulus ids once (satellite API).
+    let names: Vec<&str> = nl.inputs.iter().map(|(n, _)| n.as_str()).collect();
+    let inputs: Vec<NetId> = csim.bind_inputs(&names).unwrap();
+    let n = nl.len() as NetId;
+    let mut rng = Rng64::seed_from_u64(seed);
+    for pass in 0..passes {
+        for &id in &inputs {
+            for (w, ws) in wsims.iter_mut().enumerate() {
+                // sparse pulses (p = 1/8), independent per lane and word
+                let word = rng.next_u64() & rng.next_u64() & rng.next_u64();
+                csim.set_input_net(id, w, word);
+                ws.set_input_net(id, word);
+                if w == 0 {
+                    ssim.set_input_net(id, word & 1 == 1);
+                }
+            }
+        }
+        csim.settle();
+        for ws in &mut wsims {
+            ws.settle();
+        }
+        ssim.settle();
+        for net in 0..n {
+            for (w, ws) in wsims.iter().enumerate() {
+                assert_eq!(
+                    csim.get_word(net, w),
+                    ws.get(net),
+                    "{p}x{q} W={words} seed {seed:#x}: net {net} word {w} pass {pass} (settled)"
+                );
+            }
+            assert_eq!(
+                csim.get_lane(net, 0),
+                ssim.get(net),
+                "{p}x{q} W={words} seed {seed:#x}: net {net} lane 0 pass {pass} vs scalar"
+            );
+        }
+        csim.clock();
+        for ws in &mut wsims {
+            ws.clock();
+        }
+        ssim.clock();
+    }
+    // Toggle counts: the compiled engine's per-net counters must equal the
+    // element-wise sum of its words' independent interpreter runs.
+    let mut want = vec![0u64; nl.len()];
+    for ws in &wsims {
+        for (t, &x) in want.iter_mut().zip(ws.toggles()) {
+            *t += x;
+        }
+    }
+    assert_eq!(
+        csim.toggles(),
+        want.as_slice(),
+        "{p}x{q} W={words}: toggle counters"
+    );
+    assert_eq!(csim.passes(), passes);
+    assert_eq!(csim.lane_cycles(), passes * (words as u64) * 64);
+    assert!(csim.activity() > 0.0, "LFSR column always toggles");
+}
+
+/// The acceptance-criteria matrix: every shared conformance geometry, at
+/// every tested lane-block width. The 82×2 TwoLeadECG flagship runs a
+/// reduced pass budget (its netlist is ~200× the small shapes).
+#[test]
+fn compiled_matches_scalar_and_word_engines_across_conformance_geometries() {
+    for &(p, q, seed) in CONFORMANCE_GEOMETRIES.iter() {
+        let passes = if p * q >= 128 { 4 } else { 12 };
+        for words in [1usize, 2, 4] {
+            assert_compiled_matches_interpreters(p, q, seed, words, passes);
+        }
+    }
+}
+
+/// Worker-count invariance: the sharded settle must produce byte-identical
+/// toggle arrays (and values) at 1, 2 and 4 threads — the determinism
+/// contract of docs/ARCHITECTURE.md.
+#[test]
+fn compiled_toggles_are_byte_identical_at_any_worker_count() {
+    let d = build_column(16, 3, 28, BrvSource::Lfsr);
+    let nl = &d.netlist;
+    let run = |threads: usize| {
+        let mut sim = CompiledSim::new(nl, 2, threads).unwrap();
+        assert_eq!(sim.threads(), threads);
+        let inputs: Vec<NetId> = nl.inputs.iter().map(|(_, id)| *id).collect();
+        let mut rng = Rng64::seed_from_u64(0xA11CE);
+        for _ in 0..24 {
+            for &id in &inputs {
+                for w in 0..2 {
+                    sim.set_input_net(id, w, rng.next_u64() & rng.next_u64());
+                }
+            }
+            sim.cycle();
+        }
+        let vals: Vec<u64> = (0..nl.len() as NetId)
+            .flat_map(|net| (0..2).map(move |w| (net, w)))
+            .map(|(net, w)| sim.get_word(net, w))
+            .collect();
+        (sim.toggles().to_vec(), vals)
+    };
+    let (t1, v1) = run(1);
+    for threads in [2usize, 4] {
+        let (t, v) = run(threads);
+        assert_eq!(t, t1, "{threads}-worker toggle array differs");
+        assert_eq!(v, v1, "{threads}-worker value state differs");
+    }
+}
+
+/// The toggle-collection entry point: compiled at `words = 1` is
+/// bit-identical to the interpreter backend (same rng order, same toggle
+/// vector, same cycle accounting), threaded or not.
+#[test]
+fn collect_toggles_compiled_w1_reproduces_interpreter_report() {
+    let d = build_column(7, 4, 12, BrvSource::Lfsr);
+    let w = collect_toggles(&d.netlist, 4096, 0x5EED, SimBackend::BitParallel64).unwrap();
+    for threads in [1usize, 2, 4] {
+        let c = collect_toggles(
+            &d.netlist,
+            4096,
+            0x5EED,
+            SimBackend::Compiled { words: 1, threads },
+        )
+        .unwrap();
+        assert_eq!(c.cycles, w.cycles, "threads={threads}");
+        assert_eq!(c.toggles, w.toggles, "threads={threads}");
+    }
+}
+
+/// Multi-word toggle collection simulates the requested cycle budget and
+/// agrees statistically with the interpreter (different stimulus lanes of
+/// the same process).
+#[test]
+fn collect_toggles_compiled_multiword_is_statistically_consistent() {
+    let d = build_column(16, 3, 28, BrvSource::Lfsr);
+    let w = collect_toggles(&d.netlist, 8192, 9, SimBackend::BitParallel64).unwrap();
+    let c = collect_toggles(
+        &d.netlist,
+        8192,
+        9,
+        SimBackend::Compiled { words: 4, threads: 2 },
+    )
+    .unwrap();
+    assert_eq!(c.cycles, 8192, "32 passes x 256 lanes");
+    let (a_w, a_c) = (w.activity(), c.activity());
+    assert!(a_c > 0.0);
+    assert!((a_w - a_c).abs() < 0.05, "word α {a_w:.4} vs compiled α {a_c:.4}");
+}

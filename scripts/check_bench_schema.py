@@ -1,0 +1,161 @@
+#!/usr/bin/env python3
+"""Validate BENCH_*.json artifacts before CI uploads them.
+
+Each bench binary writes a JSON artifact with a frozen top-level schema;
+a refactor that silently drops a key (or emits unparseable JSON) would
+otherwise only be noticed when someone tries to plot a trajectory months
+later. Usage:
+
+    python3 scripts/check_bench_schema.py BENCH_sim.json BENCH_tnn.json ...
+
+Exits non-zero, naming the file and the missing key path, on the first
+violation. Unknown BENCH_*.json names fail too: new artifacts must
+register their schema here.
+"""
+
+import json
+import os
+import sys
+
+# Schema mini-language:
+#   dict  -> required keys of a JSON object, each mapped to a sub-schema
+#   list  -> JSON array, required non-empty; the single element is the
+#            schema of EVERY entry
+#   None  -> any value (presence is all that is checked)
+
+# One per-workload block of BENCH_tnn.json (benches/tnn_throughput.rs).
+_TNN_EPOCH = {
+    "samples_per_epoch": None,
+    "baseline_scalar": {"median_ns_per_epoch": None, "us_per_sample": None},
+    "after_batched_1t": {"median_ns_per_epoch": None, "us_per_sample": None},
+    "after_batched_mt": {"median_ns_per_epoch": None, "us_per_sample": None},
+    "speedup_1t": None,
+    "speedup_mt": None,
+}
+
+SCHEMAS = {
+    "BENCH_sim.json": {
+        "design": None,
+        "nets": None,
+        "cycles_per_iter": None,
+        "baseline_scalar": {
+            "median_ns_per_iter": None,
+            "ns_per_cycle": None,
+            "activity": None,
+        },
+        "after_bit_parallel_64": {
+            "median_ns_per_iter": None,
+            "ns_per_cycle": None,
+            "activity": None,
+        },
+        "speedup": None,
+    },
+    "BENCH_tnn.json": {
+        "threads": None,
+        "mnist_4layer_epoch": _TNN_EPOCH,
+        "ucr_twoleadecg_epoch": _TNN_EPOCH,
+    },
+    "BENCH_gate.json": {
+        "design": None,
+        "p": None,
+        "q": None,
+        "volleys": None,
+        "baseline_scalar": {"median_ns_per_sweep": None, "ns_per_volley": None},
+        "after_word_parallel": {"median_ns_per_sweep": None, "ns_per_volley": None},
+        "speedup": None,
+    },
+    "BENCH_compiled.json": {
+        "designs": [
+            {
+                "design": None,
+                "p": None,
+                "q": None,
+                "nets": None,
+                "lane_cycles_per_iter": None,
+                "interpreted": {"median_ns": None, "net_lane_cycles_per_sec": None},
+                "compiled": [
+                    {
+                        "words": None,
+                        "threads": None,
+                        "median_ns": None,
+                        "net_lane_cycles_per_sec": None,
+                        "speedup_vs_interpreted": None,
+                    }
+                ],
+            }
+        ]
+    },
+    "BENCH_sweep.json": {
+        "name": None,
+        "points": None,
+        "computed": None,
+        "cached": None,
+        "rows": [
+            {
+                "p": None,
+                "q": None,
+                "theta": None,
+                "flow": None,
+                "engine": None,
+                "seed": None,
+                "area_um2": None,
+                "power_nw": None,
+                "comp_time_ns": None,
+                "edp_fj_ns": None,
+                "alpha_measured": None,
+                "rand_index": None,
+                "purity": None,
+                "error_pct": None,
+                "synth_ms": None,
+                "cached": None,
+            }
+        ],
+        "pareto": {"power_error": None, "area_error": None, "edp_error": None},
+        "synth_runtime_ratio": None,
+    },
+}
+
+
+def check(schema, value, path):
+    if isinstance(schema, dict):
+        if not isinstance(value, dict):
+            raise ValueError(f"{path}: expected object, got {type(value).__name__}")
+        for key, sub in schema.items():
+            if key not in value:
+                raise ValueError(f"{path}: missing key {key!r}")
+            check(sub, value[key], f"{path}.{key}")
+    elif isinstance(schema, list):
+        if not isinstance(value, list):
+            raise ValueError(f"{path}: expected array, got {type(value).__name__}")
+        if not value:
+            raise ValueError(f"{path}: array is empty")
+        for i, entry in enumerate(value):
+            check(schema[0], entry, f"{path}[{i}]")
+    # schema None: any value, presence already verified by the caller
+
+
+def main(argv):
+    if len(argv) < 2:
+        print("usage: check_bench_schema.py BENCH_*.json ...", file=sys.stderr)
+        return 2
+    failures = 0
+    for arg in argv[1:]:
+        base = os.path.basename(arg)
+        if base not in SCHEMAS:
+            print(f"FAIL {arg}: no registered schema for {base!r}", file=sys.stderr)
+            failures += 1
+            continue
+        try:
+            with open(arg, encoding="utf-8") as f:
+                doc = json.load(f)
+            check(SCHEMAS[base], doc, base)
+        except (OSError, ValueError, json.JSONDecodeError) as e:
+            print(f"FAIL {arg}: {e}", file=sys.stderr)
+            failures += 1
+            continue
+        print(f"ok   {arg}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
