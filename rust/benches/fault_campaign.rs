@@ -1,0 +1,84 @@
+//! Fault-campaign throughput: how fast the lane-parallel campaign runner
+//! burns through seeded stuck-at + SEU faults on the UCR column netlist,
+//! per simulator backend. The word/compiled engines pack up to
+//! `sim_words x 64 - 1` faults per netlist pass (lane 0 stays fault-free
+//! as the reference), so faults/s is the figure of merit — the scalar
+//! engine pays one full pass per fault.
+//!
+//! Run with `cargo bench --bench fault_campaign` (set `TNN7_BENCH_FAST=1`
+//! for a CI-speed configuration). Writes `BENCH_faults.json` — the
+//! campaign report of `tnn7 faults` plus per-backend timing medians.
+
+use tnn7::gates::fault::{campaign, sample_faults};
+use tnn7::gates::gate_engine::cached_design;
+use tnn7::gates::SimBackend;
+use tnn7::harness::{fault_campaign, faults_json, FaultSpec};
+use tnn7::tnn::spike::random_volley;
+use tnn7::tnn::SpikeTime;
+use tnn7::util::bench::{black_box, Bencher};
+use tnn7::util::Rng64;
+
+fn main() {
+    let fast = std::env::var("TNN7_BENCH_FAST").is_ok();
+    let mut spec = if fast { FaultSpec::quick() } else { FaultSpec::default() };
+    // The bench times each backend separately below; keep the in-report
+    // cross-check on the cheap word engine.
+    spec.backend = SimBackend::BitParallel64;
+
+    // --- timed section: one campaign per backend on a fixed fault set ---
+    let (p, q, theta) = (16, 3, 21);
+    let d = cached_design(p, q, theta);
+    let gamma = 8u32;
+    let items = if fast { 2 } else { 6 };
+    let n_faults = if fast { 16 } else { 96 };
+    let mut rng = Rng64::seed_from_u64(0xFA017);
+    let ws: Vec<u8> = (0..p * q).map(|_| rng.gen_u8_inclusive(0, 7)).collect();
+    let volleys_data: Vec<Vec<SpikeTime>> = (0..items)
+        .map(|_| random_volley(p, 0.3, gamma, &mut rng))
+        .collect();
+    let volleys: Vec<&[SpikeTime]> = volleys_data.iter().map(|v| v.as_slice()).collect();
+    let faults = sample_faults(&d.netlist, n_faults / 2, n_faults / 2, items as u64 * gamma as u64, 11);
+    println!(
+        "fault campaign bench: {p}x{q} column, {} faults x {items} items, gamma {gamma}",
+        faults.len()
+    );
+
+    let b = Bencher::from_env();
+    let backends = [
+        ("scalar", SimBackend::Scalar),
+        ("bit-parallel-64", SimBackend::BitParallel64),
+        ("compiled-2w", SimBackend::Compiled { words: 2, threads: 1 }),
+    ];
+    let mut stats = Vec::new();
+    for (name, backend) in backends {
+        let s = b.bench(&format!("campaign {} ({} faults)", name, faults.len()), || {
+            let r = campaign(d, &ws, gamma, &volleys, &faults, backend).unwrap();
+            assert_eq!(r.counts().total(), faults.len());
+            black_box(r.outcomes.len())
+        });
+        println!("{}", s.report());
+        let faults_per_s = faults.len() as f64 / (s.median_ns() / 1e9).max(1e-12);
+        println!("  => {faults_per_s:.0} faults/s on {name}");
+        stats.push((name, s, faults_per_s));
+    }
+
+    // --- report section: the full seeded campaign `tnn7 faults` prints ---
+    let report = fault_campaign(&spec).expect("fault campaign");
+    assert!(report.gate.backends_agree, "backend fault verdicts diverged");
+
+    let json = faults_json(&report)
+        .set("fast", fast)
+        .set(
+            "bench",
+            stats.iter().fold(tnn7::util::json::Json::obj(), |j, (name, s, fps)| {
+                j.set(
+                    *name,
+                    tnn7::util::json::Json::obj()
+                        .set("median_ns", s.median_ns())
+                        .set("faults_per_s", *fps),
+                )
+            }),
+        );
+    std::fs::write("BENCH_faults.json", json.to_pretty()).expect("write BENCH_faults.json");
+    println!("  wrote BENCH_faults.json");
+}

@@ -24,10 +24,24 @@ pub struct CommandSpec {
 pub const COMMANDS: &[CommandSpec] = &[
     CommandSpec {
         name: "report",
-        synopsis: "report table2|fig11|table3|fig12|fig13|sim|train|conformance|headline [--quick]",
+        synopsis: "report table2|fig11|table3|fig12|fig13|sim|train|conformance|faults|headline [--quick]",
         details: &[
             "regenerate one paper artifact (printed as a paper-style table)",
-            "--quick     CI-speed subsample (fig11/fig12/train/conformance)",
+            "--quick     CI-speed subsample (fig11/fig12/train/conformance/faults)",
+        ],
+    },
+    CommandSpec {
+        name: "faults",
+        synopsis: "faults [--quick] [key=value ...]",
+        details: &[
+            "seeded fault-injection campaign: gate-level stuck-at + SEU faults on the UCR",
+            "column (classified masked/latent/propagated per macro type, cross-checked",
+            "bit-for-bit on every simulator backend) plus weight-memory flip ladders on",
+            "the UCR column and the 4-layer MNIST network",
+            "--quick          CI-speed campaign (few faults, tiny workloads)",
+            "key=value        spec overrides: seed=, stuck=, seu=, items=, per_cluster=,",
+            "                 mnist_samples=, flips=1,2,4, backend=scalar|bit-parallel-64|",
+            "                 compiled, sim_words=, threads=",
         ],
     },
     CommandSpec {
@@ -212,6 +226,26 @@ mod tests {
         ] {
             spec.apply_overrides(&[kv.to_string()])
                 .unwrap_or_else(|e| panic!("advertised sweep key {kv:?} rejected: {e}"));
+        }
+    }
+
+    #[test]
+    fn advertised_faults_keys_are_accepted_by_the_parser() {
+        let mut spec = crate::harness::FaultSpec::quick();
+        for kv in [
+            "seed=1",
+            "stuck=2",
+            "seu=3",
+            "items=4",
+            "per_cluster=5",
+            "mnist_samples=10",
+            "flips=1,2,4",
+            "backend=compiled",
+            "sim_words=4",
+            "threads=2",
+        ] {
+            spec.apply_overrides(&[kv.to_string()])
+                .unwrap_or_else(|e| panic!("advertised faults key {kv:?} rejected: {e}"));
         }
     }
 

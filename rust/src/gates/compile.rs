@@ -154,8 +154,11 @@ pub struct CompiledProgram {
 
 impl CompiledProgram {
     /// Lower a netlist's level-packed schedule into a compiled program.
-    /// Errors on true combinational cycles (from `levelize_buckets`).
+    /// Runs [`Netlist::verify`] first, so dangling nets, inconsistent
+    /// macro pin tables and combinational cycles all fail loudly here
+    /// instead of corrupting the instruction stream.
     pub fn compile(nl: &Netlist) -> Result<CompiledProgram, String> {
+        nl.verify()?;
         let levels = nl.levelize_buckets()?;
 
         // Per-instance metadata (inputs, Moore pins) for settle + clock.
@@ -334,6 +337,10 @@ fn chunk(len: usize, wid: usize, workers: usize) -> (usize, usize) {
 ///   never touch the same slot.
 /// * `states` is only read during settle (mutated exclusively by `clock`,
 ///   which runs on the driver thread with `&mut self`).
+/// * `force_sa0` / `force_sa1` are either both null (fault-free run) or
+///   both point at `n_nets × words` stuck-at lane masks that are only read
+///   during settle (mutated exclusively through `&mut self` between
+///   settles) — so sharing them between workers is read-read.
 /// * Levels are separated by a barrier all workers pass through.
 #[derive(Clone, Copy)]
 struct ExecShared<'p> {
@@ -341,6 +348,8 @@ struct ExecShared<'p> {
     values: *mut u64,
     toggles: *mut u64,
     states: *const WordMacroState,
+    force_sa0: *const u64,
+    force_sa1: *const u64,
     words: usize,
 }
 
@@ -360,12 +369,19 @@ unsafe fn val(sh: &ExecShared, net: u32, w: usize) -> u64 {
 }
 
 /// Commit word `w` of net `net`, returning the number of toggled lanes.
+/// Under fault injection (non-null force masks) the freshly evaluated
+/// word is clamped to its stuck-at lanes before the toggle compare, so a
+/// forced net never "recovers" mid-settle.
 ///
 /// # Safety
 /// As [`val`], plus: this worker is the only writer of `net` this level.
 #[inline]
-unsafe fn commit(sh: &ExecShared, net: u32, w: usize, v: u64) -> u32 {
-    let p = sh.values.add(net as usize * sh.words + w);
+unsafe fn commit(sh: &ExecShared, net: u32, w: usize, mut v: u64) -> u32 {
+    let idx = net as usize * sh.words + w;
+    if !sh.force_sa0.is_null() {
+        v = (v & !*sh.force_sa0.add(idx)) | *sh.force_sa1.add(idx);
+    }
+    let p = sh.values.add(idx);
     let diff = *p ^ v;
     if diff != 0 {
         *p = v;
@@ -478,6 +494,14 @@ pub struct CompiledSim {
     /// Word `w` of instance `i` lives at `macro_states[i * words + w]`.
     macro_states: Vec<WordMacroState>,
     passes: u64,
+    /// Stuck-at lane masks, indexed like `values` (`net * words + w`);
+    /// empty when fault-free — the executor then passes null pointers and
+    /// `commit` pays one branch. `forced_nets` lists nets with any forced
+    /// lane so the settle-entry clamp (covering Input/Dff/Const/Moore nets
+    /// that are not in the instruction stream) doesn't scan every net.
+    force_sa0: Vec<u64>,
+    force_sa1: Vec<u64>,
+    forced_nets: Vec<NetId>,
     // clock-phase scratch (driver thread only)
     dff_next: Vec<u64>,
     macro_in: Vec<u64>,
@@ -528,6 +552,9 @@ impl CompiledSim {
             words,
             threads,
             passes: 0,
+            force_sa0: Vec::new(),
+            force_sa1: Vec::new(),
+            forced_nets: Vec::new(),
             dff_next: Vec::new(),
             macro_in: Vec::new(),
             macro_out: Vec::new(),
@@ -586,12 +613,33 @@ impl CompiledSim {
     /// the configured worker threads. Counts toggles per lane against the
     /// previous settled words.
     pub fn settle(&mut self) {
+        // Re-clamp forced nets first (driver thread, before workers spawn):
+        // Input/Dff/Const/Moore-pin nets are not in the instruction stream,
+        // so a clock-phase write or caller stimulus would otherwise undo
+        // the force.
+        for &id in &self.forced_nets {
+            for w in 0..self.words {
+                let idx = id as usize * self.words + w;
+                self.values[idx] =
+                    (self.values[idx] & !self.force_sa0[idx]) | self.force_sa1[idx];
+            }
+        }
         let workers = self.threads.max(1);
         let shared = ExecShared {
             prog: &self.prog,
             values: self.values.as_mut_ptr(),
             toggles: self.toggles.as_mut_ptr(),
             states: self.macro_states.as_ptr(),
+            force_sa0: if self.force_sa0.is_empty() {
+                std::ptr::null()
+            } else {
+                self.force_sa0.as_ptr()
+            },
+            force_sa1: if self.force_sa1.is_empty() {
+                std::ptr::null()
+            } else {
+                self.force_sa1.as_ptr()
+            },
             words: self.words,
         };
         if workers == 1 {
@@ -727,6 +775,57 @@ impl CompiledSim {
         for w in 0..self.words {
             self.macro_states[inst * self.words + w] = wide.clone();
         }
+    }
+
+    /// Force the `sa0` lanes of word `w` of net `id` stuck at 0 and the
+    /// `sa1` lanes stuck at 1, until [`CompiledSim::clear_faults`]. Forces
+    /// accumulate across calls, are applied immediately, re-applied at
+    /// every settle entry, and clamp freshly evaluated words inside the
+    /// settle, so they hold across [`CompiledSim::clock`] and
+    /// [`CompiledSim::reset_state`]. A lane in both masks resolves to
+    /// stuck-at-1.
+    pub fn force_net_word(&mut self, id: NetId, w: usize, sa0: u64, sa1: u64) {
+        debug_assert!(w < self.words);
+        if self.force_sa0.is_empty() {
+            self.force_sa0 = vec![0; self.prog.n_nets * self.words];
+            self.force_sa1 = vec![0; self.prog.n_nets * self.words];
+        }
+        let base = id as usize * self.words;
+        if (0..self.words).all(|k| self.force_sa0[base + k] | self.force_sa1[base + k] == 0) {
+            self.forced_nets.push(id);
+        }
+        let idx = base + w;
+        self.force_sa0[idx] |= sa0;
+        self.force_sa1[idx] |= sa1;
+        self.values[idx] = (self.values[idx] & !self.force_sa0[idx]) | self.force_sa1[idx];
+    }
+
+    /// One-shot single-event upset: invert the `mask` lanes of word `w` of
+    /// net `id`. Call between clock and the next settle; the flip persists
+    /// on state nets (DFF outputs) and is swallowed by the next settle on
+    /// combinational nets.
+    pub fn flip_net_word(&mut self, id: NetId, w: usize, mask: u64) {
+        debug_assert!(w < self.words);
+        self.values[id as usize * self.words + w] ^= mask;
+    }
+
+    /// One-shot single-event upset in macro behavioral state: invert state
+    /// bit `bit` of instance `inst` in the `mask` lanes of word `w` (see
+    /// [`MacroKind::state_bits`]).
+    ///
+    /// [`MacroKind::state_bits`]: super::macros9::MacroKind::state_bits
+    pub fn flip_macro_bit_word(&mut self, inst: usize, w: usize, bit: usize, mask: u64) {
+        debug_assert!(w < self.words);
+        let st = &mut self.macro_states[inst * self.words + w];
+        let plane = st.plane(bit);
+        st.set_plane(bit, plane ^ mask);
+    }
+
+    /// Remove all stuck-at forces (flips are one-shot and need no undo).
+    pub fn clear_faults(&mut self) {
+        self.force_sa0.clear();
+        self.force_sa1.clear();
+        self.forced_nets.clear();
     }
 
     /// Reset all state (DFFs to init, macro states cleared, toggles and

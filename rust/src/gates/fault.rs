@@ -1,0 +1,948 @@
+//! Seeded deterministic fault-injection campaigns over the gate backends.
+//!
+//! TNN7 positions the nine macros as silicon for always-on edge sensing,
+//! where stuck-at defects and soft errors in synaptic-weight DFFs are the
+//! dominant reliability concern. This module makes the "unary temporal
+//! codes degrade gracefully" claim measurable: it injects faults into the
+//! column netlist and classifies each one against a fault-free reference.
+//!
+//! Three fault models ([`GateFault`]):
+//!
+//! * **stuck-at-0/1** on any net — a permanent defect, clamped at every
+//!   settle (the engines re-apply the clamp on entry so even nets outside
+//!   the combinational schedule — DFF outputs, primary inputs — hold);
+//! * **SEU on a net** — a one-shot bit flip applied immediately before the
+//!   settle of a chosen global unit cycle (state nets latch it,
+//!   combinational nets shed it at that same settle);
+//! * **SEU in macro state** — a one-shot flip of one internal state bit of
+//!   a macro instance (e.g. a `syn_weight_update` weight DFF).
+//!
+//! The campaign runner exploits the lane machinery: the bit-parallel
+//! interpreter simulates 63 distinct faults per pass and the compiled
+//! engine `words × 64 − 1`, with **lane 0 always the fault-free
+//! reference** — every lane receives the identical broadcast stimulus, so
+//! masked/propagated/latent classification falls out of a lane-vs-lane-0
+//! XOR. Gates and macros evaluate lane-wise, so a lane's trajectory never
+//! depends on which pass it shares with other faults: the scalar backend,
+//! the interpreter, and the compiled engine at any `words`/`threads`
+//! produce bit-identical [`FaultOutcome`]s (pinned by `tests/faults.rs`).
+//!
+//! Fault-site sampling follows the crate's frozen determinism discipline:
+//! fault `f` draws from `Rng64::seed_from_u64(seed).split_stream(f)`, so a
+//! campaign is reproducible from its printed seed alone, independent of
+//! backend, worker count and lane-block width.
+
+use super::column_design::ColumnDesign;
+use super::compile::CompiledSim;
+use super::macros9::MacroState;
+use super::netlist::{Gate, NetId, Netlist};
+use super::sim::Simulator;
+use super::wordsim::{WordSimulator, LANES};
+use super::SimBackend;
+use crate::tnn::spike::{earliest_spike, SpikeTime};
+use crate::util::Rng64;
+use std::collections::BTreeMap;
+
+/// A single hardware fault to inject into a campaign run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GateFault {
+    /// Permanent stuck-at defect: `net` reads `value` on every cycle.
+    StuckAt {
+        /// The defective net.
+        net: NetId,
+        /// The value the net is stuck at.
+        value: bool,
+    },
+    /// Single-event upset on a net: inverted immediately before the settle
+    /// of global unit cycle `cycle` (`item * gamma + t`).
+    SeuNet {
+        /// The upset net.
+        net: NetId,
+        /// Global unit cycle of the strike.
+        cycle: u64,
+    },
+    /// Single-event upset in one bit of a macro instance's internal state,
+    /// applied immediately before the settle of `cycle`.
+    SeuMacroBit {
+        /// Macro instance index into `Netlist::macros`.
+        inst: usize,
+        /// State bit index (`< MacroKind::state_bits()`).
+        bit: u8,
+        /// Global unit cycle of the strike.
+        cycle: u64,
+    },
+}
+
+/// How a fault manifested relative to the fault-free reference lane.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum FaultClass {
+    /// No observable difference: outputs and end-of-item state both match.
+    Masked,
+    /// Internal state diverged (DFF or macro state at some item boundary)
+    /// but the post-WTA output stream never did.
+    Latent,
+    /// The post-WTA output stream differed on at least one cycle.
+    Propagated,
+}
+
+impl FaultClass {
+    /// Display name (`masked` / `latent` / `propagated`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultClass::Masked => "masked",
+            FaultClass::Latent => "latent",
+            FaultClass::Propagated => "propagated",
+        }
+    }
+}
+
+/// Per-fault campaign verdict.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultOutcome {
+    /// The injected fault.
+    pub fault: GateFault,
+    /// Site label: the macro cell name driving the faulted net (or
+    /// `"dff"` / `"input"` / `"const"` / `"logic"` for glue).
+    pub site: String,
+    /// Masked / latent / propagated classification.
+    pub class: FaultClass,
+    /// Number of gamma items whose post-WTA winner differed from the
+    /// fault-free reference.
+    pub winner_mismatches: usize,
+}
+
+/// Masked/latent/propagated tallies.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultCounts {
+    /// Faults with no observable effect.
+    pub masked: usize,
+    /// Faults that corrupted state without reaching an output.
+    pub latent: usize,
+    /// Faults visible in the output stream.
+    pub propagated: usize,
+}
+
+impl FaultCounts {
+    /// Total classified faults.
+    pub fn total(&self) -> usize {
+        self.masked + self.latent + self.propagated
+    }
+
+    fn add(&mut self, class: FaultClass) {
+        match class {
+            FaultClass::Masked => self.masked += 1,
+            FaultClass::Latent => self.latent += 1,
+            FaultClass::Propagated => self.propagated += 1,
+        }
+    }
+}
+
+/// Result of a fault campaign: one outcome per injected fault (in input
+/// order) plus the fault-free reference winners (bit-identical to baseline
+/// batched inference on every backend).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CampaignResult {
+    /// Per-fault verdicts, in the order the faults were supplied.
+    pub outcomes: Vec<FaultOutcome>,
+    /// Fault-free post-WTA winner per gamma item (the lane-0 reference).
+    pub ref_winners: Vec<Option<usize>>,
+}
+
+impl CampaignResult {
+    /// Overall masked/latent/propagated tallies.
+    pub fn counts(&self) -> FaultCounts {
+        let mut c = FaultCounts::default();
+        for o in &self.outcomes {
+            c.add(o.class);
+        }
+        c
+    }
+
+    /// Tallies grouped by fault-site label (macro cell name or glue kind).
+    pub fn counts_by_site(&self) -> BTreeMap<String, FaultCounts> {
+        let mut m: BTreeMap<String, FaultCounts> = BTreeMap::new();
+        for o in &self.outcomes {
+            m.entry(o.site.clone()).or_default().add(o.class);
+        }
+        m
+    }
+}
+
+/// The state the latent-fault comparison inspects at every item boundary:
+/// all DFF output nets (gate-index order) plus every sequential macro
+/// instance's internal state bits (instance order).
+struct StateSites {
+    nets: Vec<NetId>,
+    macros: Vec<(usize, usize)>, // (instance, state_bits)
+}
+
+fn state_sites(nl: &Netlist) -> StateSites {
+    let nets = nl
+        .gates
+        .iter()
+        .enumerate()
+        .filter(|(_, g)| matches!(g, Gate::Dff { .. }))
+        .map(|(i, _)| i as NetId)
+        .collect();
+    let macros = nl
+        .macros
+        .iter()
+        .enumerate()
+        .filter(|(_, m)| m.kind.state_bits() > 0)
+        .map(|(i, m)| (i, m.kind.state_bits()))
+        .collect();
+    StateSites { nets, macros }
+}
+
+/// Label a fault's site: the cell name of the macro driving the net, or a
+/// glue-kind label for plain gates (`dff` / `input` / `const` / `logic`).
+pub fn site_label(nl: &Netlist, fault: &GateFault) -> String {
+    match *fault {
+        GateFault::StuckAt { net, .. } | GateFault::SeuNet { net, .. } => {
+            match &nl.gates[net as usize] {
+                Gate::MacroOut { inst, .. } => {
+                    nl.macros[*inst as usize].kind.cell_name().to_string()
+                }
+                Gate::Dff { .. } => "dff".to_string(),
+                Gate::Input => "input".to_string(),
+                Gate::Const(_) => "const".to_string(),
+                _ => "logic".to_string(),
+            }
+        }
+        GateFault::SeuMacroBit { inst, .. } => nl.macros[inst].kind.cell_name().to_string(),
+    }
+}
+
+/// Sample a reproducible fault list: `stuck` stuck-at faults on uniformly
+/// chosen nets followed by `seu` single-event upsets on uniformly chosen
+/// state sites (DFF nets and macro state bits) at uniformly chosen global
+/// cycles in `0..total_cycles`.
+///
+/// Determinism discipline: fault `f` draws **only** from
+/// `Rng64::seed_from_u64(seed).split_stream(f)` — the sampled campaign is
+/// a pure function of `(netlist, stuck, seu, total_cycles, seed)`,
+/// independent of backend, thread count and lane-block width.
+pub fn sample_faults(
+    nl: &Netlist,
+    stuck: usize,
+    seu: usize,
+    total_cycles: u64,
+    seed: u64,
+) -> Vec<GateFault> {
+    let root = Rng64::seed_from_u64(seed);
+    let n_nets = nl.gates.len();
+    let sites = state_sites(nl);
+    let mut seu_sites: Vec<GateFault> = Vec::new();
+    for &net in &sites.nets {
+        seu_sites.push(GateFault::SeuNet { net, cycle: 0 });
+    }
+    for &(inst, bits) in &sites.macros {
+        for bit in 0..bits {
+            seu_sites.push(GateFault::SeuMacroBit {
+                inst,
+                bit: bit as u8,
+                cycle: 0,
+            });
+        }
+    }
+    assert!(
+        seu == 0 || !seu_sites.is_empty(),
+        "netlist has no state to upset"
+    );
+    assert!(seu == 0 || total_cycles > 0, "SEU campaign needs cycles");
+    let mut faults = Vec::with_capacity(stuck + seu);
+    for f in 0..stuck {
+        let mut rng = root.split_stream(f as u64);
+        let net = rng.gen_range(0, n_nets) as NetId;
+        let value = rng.gen_bool(0.5);
+        faults.push(GateFault::StuckAt { net, value });
+    }
+    for f in stuck..stuck + seu {
+        let mut rng = root.split_stream(f as u64);
+        let site = rng.gen_range(0, seu_sites.len());
+        let cycle = rng.gen_range_u64(0, total_cycles - 1);
+        faults.push(match seu_sites[site] {
+            GateFault::SeuNet { net, .. } => GateFault::SeuNet { net, cycle },
+            GateFault::SeuMacroBit { inst, bit, .. } => {
+                GateFault::SeuMacroBit { inst, bit, cycle }
+            }
+            GateFault::StuckAt { .. } => unreachable!("site list holds SEUs only"),
+        });
+    }
+    faults
+}
+
+fn validate_faults(
+    nl: &Netlist,
+    faults: &[GateFault],
+    total_cycles: u64,
+) -> Result<(), String> {
+    let n = nl.gates.len();
+    for (i, f) in faults.iter().enumerate() {
+        match *f {
+            GateFault::StuckAt { net, .. } => {
+                if net as usize >= n {
+                    return Err(format!("fault {i}: net {net} out of range ({n} nets)"));
+                }
+            }
+            GateFault::SeuNet { net, cycle } => {
+                if net as usize >= n {
+                    return Err(format!("fault {i}: net {net} out of range ({n} nets)"));
+                }
+                if cycle >= total_cycles {
+                    return Err(format!(
+                        "fault {i}: SEU cycle {cycle} beyond campaign ({total_cycles} cycles)"
+                    ));
+                }
+            }
+            GateFault::SeuMacroBit { inst, bit, cycle } => {
+                if inst >= nl.macros.len() {
+                    return Err(format!(
+                        "fault {i}: macro instance {inst} out of range ({} instances)",
+                        nl.macros.len()
+                    ));
+                }
+                let bits = nl.macros[inst].kind.state_bits();
+                if bit as usize >= bits {
+                    return Err(format!(
+                        "fault {i}: state bit {bit} out of range ({} has {bits} bits)",
+                        nl.macros[inst].kind.cell_name()
+                    ));
+                }
+                if cycle >= total_cycles {
+                    return Err(format!(
+                        "fault {i}: SEU cycle {cycle} beyond campaign ({total_cycles} cycles)"
+                    ));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Run a fault campaign over a column design: every fault is simulated
+/// against the identical broadcast stimulus (`volleys`, one gamma item
+/// each, `gamma` unit cycles per item) and classified against the
+/// fault-free reference. `ws` preloads the synaptic weights (row-major
+/// p×q) once at campaign start, so weight-state corruption persists across
+/// items (that is the latency being measured).
+///
+/// The netlist must pass [`Netlist::verify`] — campaigns refuse to inject
+/// into structurally broken designs. Outcomes are bit-identical across
+/// every backend, thread count and lane-block width.
+pub fn campaign(
+    d: &ColumnDesign,
+    ws: &[u8],
+    gamma: u32,
+    volleys: &[&[SpikeTime]],
+    faults: &[GateFault],
+    backend: SimBackend,
+) -> Result<CampaignResult, String> {
+    d.netlist.verify()?;
+    if ws.len() != d.p * d.q {
+        return Err(format!(
+            "weights length {} != p*q = {}",
+            ws.len(),
+            d.p * d.q
+        ));
+    }
+    if gamma == 0 {
+        return Err("gamma must be >= 1".to_string());
+    }
+    for (k, v) in volleys.iter().enumerate() {
+        if v.len() != d.p {
+            return Err(format!("volley {k} length {} != p = {}", v.len(), d.p));
+        }
+    }
+    validate_faults(&d.netlist, faults, volleys.len() as u64 * gamma as u64)?;
+    let sites = state_sites(&d.netlist);
+    match backend {
+        SimBackend::Scalar => scalar_campaign(d, ws, gamma, volleys, faults, &sites),
+        SimBackend::BitParallel64 => word_campaign(d, ws, gamma, volleys, faults, &sites),
+        SimBackend::Compiled { words, threads } => {
+            compiled_campaign(d, ws, gamma, volleys, faults, &sites, words.max(1), threads)
+        }
+    }
+}
+
+/// All-ones for the low `n` lanes (`n` in `1..=64`).
+fn lane_mask(n: usize) -> u64 {
+    if n >= 64 {
+        !0
+    } else {
+        (1u64 << n) - 1
+    }
+}
+
+/// Broadcast the LSB of `v` (the reference lane) to all 64 lanes.
+fn splat_lsb(v: u64) -> u64 {
+    0u64.wrapping_sub(v & 1)
+}
+
+fn winner_of(times: &[SpikeTime]) -> Option<usize> {
+    let (idx, t) = earliest_spike(times);
+    t.is_spike().then_some(idx)
+}
+
+fn classify(out_diff: bool, state_diff: bool) -> FaultClass {
+    if out_diff {
+        FaultClass::Propagated
+    } else if state_diff {
+        FaultClass::Latent
+    } else {
+        FaultClass::Masked
+    }
+}
+
+/// One scalar run's full observable trace (the scalar backend's analogue
+/// of the word engines' lane-0 reference).
+struct ScalarTrace {
+    /// `out[item * gamma * q + t * q + j]`: post-settle out_spike values.
+    out: Vec<bool>,
+    /// `state[item * nets + si]`: DFF nets at each item boundary.
+    state: Vec<bool>,
+    /// `macro_bits[item * seq_macros + mi]`: macro state at each boundary.
+    macro_bits: Vec<u32>,
+    /// Post-WTA winner per item.
+    winners: Vec<Option<usize>>,
+}
+
+fn scalar_pass(
+    sim: &mut Simulator<'_>,
+    d: &ColumnDesign,
+    ws: &[u8],
+    gamma: u32,
+    volleys: &[&[SpikeTime]],
+    sites: &StateSites,
+    fault: Option<&GateFault>,
+) -> ScalarTrace {
+    let q = d.q;
+    sim.clear_faults();
+    sim.reset_state();
+    for (k, &inst) in d.syn_inst.iter().enumerate() {
+        let mut st = MacroState::default();
+        st.set_weight(ws[k]);
+        sim.set_macro_state(inst as usize, st);
+    }
+    for case in &d.brv_case {
+        for &net in case {
+            sim.set_input_net(net, false);
+        }
+    }
+    for stab in &d.brv_stab {
+        for &net in stab {
+            sim.set_input_net(net, false);
+        }
+    }
+    if let Some(&GateFault::StuckAt { net, value }) = fault {
+        sim.force_net(net, value);
+    }
+    let g = gamma;
+    let mut trace = ScalarTrace {
+        out: Vec::with_capacity(volleys.len() * g as usize * q),
+        state: Vec::with_capacity(volleys.len() * sites.nets.len()),
+        macro_bits: Vec::with_capacity(volleys.len() * sites.macros.len()),
+        winners: Vec::with_capacity(volleys.len()),
+    };
+    let mut times = vec![SpikeTime::NONE; q];
+    for (item, volley) in volleys.iter().enumerate() {
+        times.fill(SpikeTime::NONE);
+        for t in 0..g {
+            let c = item as u64 * g as u64 + t as u64;
+            for (i, &net) in d.in_pulse.iter().enumerate() {
+                let x = volley[i];
+                sim.set_input_net(net, x.is_spike() && x.0 == t);
+            }
+            sim.set_input_net(d.grst, t == g - 1);
+            match fault {
+                Some(&GateFault::SeuNet { net, cycle }) if cycle == c => sim.flip_net(net),
+                Some(&GateFault::SeuMacroBit { inst, bit, cycle }) if cycle == c => {
+                    sim.flip_macro_bit(inst, bit)
+                }
+                _ => {}
+            }
+            sim.settle();
+            for (j, &net) in d.out_spike.iter().enumerate() {
+                let v = sim.get(net);
+                trace.out.push(v);
+                if v && !times[j].is_spike() {
+                    times[j] = SpikeTime::at(t);
+                }
+            }
+            sim.clock();
+        }
+        for &net in &sites.nets {
+            trace.state.push(sim.get(net));
+        }
+        for &(inst, _) in &sites.macros {
+            trace.macro_bits.push(sim.macro_state(inst).bits());
+        }
+        trace.winners.push(winner_of(&times));
+    }
+    trace
+}
+
+fn scalar_campaign(
+    d: &ColumnDesign,
+    ws: &[u8],
+    gamma: u32,
+    volleys: &[&[SpikeTime]],
+    faults: &[GateFault],
+    sites: &StateSites,
+) -> Result<CampaignResult, String> {
+    let mut sim = Simulator::new(&d.netlist)?;
+    let reference = scalar_pass(&mut sim, d, ws, gamma, volleys, sites, None);
+    let mut outcomes = Vec::with_capacity(faults.len());
+    for f in faults {
+        let run = scalar_pass(&mut sim, d, ws, gamma, volleys, sites, Some(f));
+        let out_diff = run.out != reference.out;
+        let state_diff =
+            run.state != reference.state || run.macro_bits != reference.macro_bits;
+        let winner_mismatches = run
+            .winners
+            .iter()
+            .zip(&reference.winners)
+            .filter(|(a, b)| a != b)
+            .count();
+        outcomes.push(FaultOutcome {
+            fault: *f,
+            site: site_label(&d.netlist, f),
+            class: classify(out_diff, state_diff),
+            winner_mismatches,
+        });
+    }
+    Ok(CampaignResult {
+        outcomes,
+        ref_winners: reference.winners,
+    })
+}
+
+/// The 64-lane interpreter campaign: lane 0 fault-free, lanes 1..=63 carry
+/// one fault each, all lanes fed the identical broadcast stimulus.
+///
+/// NOTE: this and [`compiled_campaign`] implement the SAME campaign
+/// protocol (weight broadcast, BRV silencing, per-cycle SEU strikes,
+/// lane-vs-lane-0 diffing) on two engines — any protocol change must land
+/// in both, plus [`scalar_pass`]; `tests/faults.rs` pins the equality.
+fn word_campaign(
+    d: &ColumnDesign,
+    ws: &[u8],
+    gamma: u32,
+    volleys: &[&[SpikeTime]],
+    faults: &[GateFault],
+    sites: &StateSites,
+) -> Result<CampaignResult, String> {
+    let q = d.q;
+    let g = gamma;
+    let mut wsim = WordSimulator::new(&d.netlist)?;
+    let mut outcomes = Vec::with_capacity(faults.len());
+    let mut ref_winners: Vec<Option<usize>> = Vec::new();
+    let chunks: Vec<&[GateFault]> = if faults.is_empty() {
+        vec![faults]
+    } else {
+        faults.chunks(LANES - 1).collect()
+    };
+    for (ci, chunk) in chunks.iter().enumerate() {
+        wsim.clear_faults();
+        wsim.reset_state();
+        for (k, &inst) in d.syn_inst.iter().enumerate() {
+            let mut st = MacroState::default();
+            st.set_weight(ws[k]);
+            wsim.set_macro_state_broadcast(inst as usize, &st);
+        }
+        for case in &d.brv_case {
+            for &net in case {
+                wsim.set_input_net(net, 0);
+            }
+        }
+        for stab in &d.brv_stab {
+            for &net in stab {
+                wsim.set_input_net(net, 0);
+            }
+        }
+        for (k, f) in chunk.iter().enumerate() {
+            if let GateFault::StuckAt { net, value } = *f {
+                let mask = 1u64 << (k + 1);
+                if value {
+                    wsim.force_net_lanes(net, 0, mask);
+                } else {
+                    wsim.force_net_lanes(net, mask, 0);
+                }
+            }
+        }
+        let used = lane_mask(chunk.len() + 1);
+        let mut out_diff = 0u64;
+        let mut state_diff = 0u64;
+        let mut mism = vec![0usize; chunk.len()];
+        let mut times = vec![SpikeTime::NONE; LANES * q];
+        let mut seen = vec![0u64; q];
+        for (item, volley) in volleys.iter().enumerate() {
+            times.fill(SpikeTime::NONE);
+            seen.fill(0);
+            for t in 0..g {
+                let c = item as u64 * g as u64 + t as u64;
+                for (i, &net) in d.in_pulse.iter().enumerate() {
+                    let x = volley[i];
+                    wsim.set_input_net(net, if x.is_spike() && x.0 == t { !0u64 } else { 0 });
+                }
+                wsim.set_input_net(d.grst, if t == g - 1 { !0u64 } else { 0 });
+                for (k, f) in chunk.iter().enumerate() {
+                    let mask = 1u64 << (k + 1);
+                    match *f {
+                        GateFault::SeuNet { net, cycle } if cycle == c => {
+                            wsim.flip_net_lanes(net, mask)
+                        }
+                        GateFault::SeuMacroBit { inst, bit, cycle } if cycle == c => {
+                            wsim.flip_macro_bit_lanes(inst, bit as usize, mask)
+                        }
+                        _ => {}
+                    }
+                }
+                wsim.settle();
+                for (j, &net) in d.out_spike.iter().enumerate() {
+                    let v = wsim.get(net);
+                    out_diff |= (v ^ splat_lsb(v)) & used;
+                    let fresh = v & !seen[j];
+                    if fresh != 0 {
+                        seen[j] |= fresh;
+                        let mut bits = fresh;
+                        while bits != 0 {
+                            let l = bits.trailing_zeros() as usize;
+                            bits &= bits - 1;
+                            times[l * q + j] = SpikeTime::at(t);
+                        }
+                    }
+                }
+                wsim.clock();
+            }
+            for &net in &sites.nets {
+                let v = wsim.get(net);
+                state_diff |= (v ^ splat_lsb(v)) & used;
+            }
+            for &(inst, bits) in &sites.macros {
+                for b in 0..bits {
+                    let pl = wsim.macro_state(inst).plane(b);
+                    state_diff |= (pl ^ splat_lsb(pl)) & used;
+                }
+            }
+            let w0 = winner_of(&times[..q]);
+            if ci == 0 {
+                ref_winners.push(w0);
+            }
+            for (k, m) in mism.iter_mut().enumerate() {
+                let l = k + 1;
+                if winner_of(&times[l * q..(l + 1) * q]) != w0 {
+                    *m += 1;
+                }
+            }
+        }
+        for (k, f) in chunk.iter().enumerate() {
+            let lane = k + 1;
+            outcomes.push(FaultOutcome {
+                fault: *f,
+                site: site_label(&d.netlist, f),
+                class: classify(
+                    (out_diff >> lane) & 1 != 0,
+                    (state_diff >> lane) & 1 != 0,
+                ),
+                winner_mismatches: mism[k],
+            });
+        }
+    }
+    Ok(CampaignResult {
+        outcomes,
+        ref_winners,
+    })
+}
+
+/// The compiled lane-block campaign: `words × 64 − 1` faults per pass,
+/// reference in lane 0 of word 0 (see the drift note on
+/// [`word_campaign`]).
+#[allow(clippy::too_many_arguments)]
+fn compiled_campaign(
+    d: &ColumnDesign,
+    ws: &[u8],
+    gamma: u32,
+    volleys: &[&[SpikeTime]],
+    faults: &[GateFault],
+    sites: &StateSites,
+    words: usize,
+    threads: usize,
+) -> Result<CampaignResult, String> {
+    let q = d.q;
+    let g = gamma;
+    let mut csim = CompiledSim::new(&d.netlist, words, threads)?;
+    let lanes_total = words * LANES;
+    let per_pass = lanes_total - 1;
+    let mut outcomes = Vec::with_capacity(faults.len());
+    let mut ref_winners: Vec<Option<usize>> = Vec::new();
+    let chunks: Vec<&[GateFault]> = if faults.is_empty() {
+        vec![faults]
+    } else {
+        faults.chunks(per_pass).collect()
+    };
+    for (ci, chunk) in chunks.iter().enumerate() {
+        csim.clear_faults();
+        csim.reset_state();
+        for (k, &inst) in d.syn_inst.iter().enumerate() {
+            let mut st = MacroState::default();
+            st.set_weight(ws[k]);
+            csim.set_macro_state_broadcast(inst as usize, &st);
+        }
+        for case in &d.brv_case {
+            for &net in case {
+                for w in 0..words {
+                    csim.set_input_net(net, w, 0);
+                }
+            }
+        }
+        for stab in &d.brv_stab {
+            for &net in stab {
+                for w in 0..words {
+                    csim.set_input_net(net, w, 0);
+                }
+            }
+        }
+        for (k, f) in chunk.iter().enumerate() {
+            if let GateFault::StuckAt { net, value } = *f {
+                let gl = k + 1;
+                let mask = 1u64 << (gl % LANES);
+                if value {
+                    csim.force_net_word(net, gl / LANES, 0, mask);
+                } else {
+                    csim.force_net_word(net, gl / LANES, mask, 0);
+                }
+            }
+        }
+        // Per-word used-lane masks: lanes 0..=chunk.len() globally.
+        let total_used = chunk.len() + 1;
+        let used: Vec<u64> = (0..words)
+            .map(|w| {
+                let lanes = total_used.saturating_sub(w * LANES).min(LANES);
+                if lanes == 0 {
+                    0
+                } else {
+                    lane_mask(lanes)
+                }
+            })
+            .collect();
+        let mut out_diff = vec![0u64; words];
+        let mut state_diff = vec![0u64; words];
+        let mut mism = vec![0usize; chunk.len()];
+        let mut times = vec![SpikeTime::NONE; lanes_total * q];
+        let mut seen = vec![0u64; q * words];
+        for (item, volley) in volleys.iter().enumerate() {
+            times.fill(SpikeTime::NONE);
+            seen.fill(0);
+            for t in 0..g {
+                let c = item as u64 * g as u64 + t as u64;
+                for (i, &net) in d.in_pulse.iter().enumerate() {
+                    let x = volley[i];
+                    let word = if x.is_spike() && x.0 == t { !0u64 } else { 0 };
+                    for w in 0..words {
+                        csim.set_input_net(net, w, word);
+                    }
+                }
+                for w in 0..words {
+                    csim.set_input_net(d.grst, w, if t == g - 1 { !0u64 } else { 0 });
+                }
+                for (k, f) in chunk.iter().enumerate() {
+                    let gl = k + 1;
+                    let mask = 1u64 << (gl % LANES);
+                    match *f {
+                        GateFault::SeuNet { net, cycle } if cycle == c => {
+                            csim.flip_net_word(net, gl / LANES, mask)
+                        }
+                        GateFault::SeuMacroBit { inst, bit, cycle } if cycle == c => {
+                            csim.flip_macro_bit_word(inst, gl / LANES, bit as usize, mask)
+                        }
+                        _ => {}
+                    }
+                }
+                csim.settle();
+                for (j, &net) in d.out_spike.iter().enumerate() {
+                    let r = splat_lsb(csim.get_word(net, 0));
+                    for w in 0..words {
+                        let v = csim.get_word(net, w);
+                        out_diff[w] |= (v ^ r) & used[w];
+                        let fresh = v & !seen[j * words + w];
+                        if fresh != 0 {
+                            seen[j * words + w] |= fresh;
+                            let mut bits = fresh;
+                            while bits != 0 {
+                                let l = bits.trailing_zeros() as usize;
+                                bits &= bits - 1;
+                                times[(w * LANES + l) * q + j] = SpikeTime::at(t);
+                            }
+                        }
+                    }
+                }
+                csim.clock();
+            }
+            for &net in &sites.nets {
+                let r = splat_lsb(csim.get_word(net, 0));
+                for w in 0..words {
+                    state_diff[w] |= (csim.get_word(net, w) ^ r) & used[w];
+                }
+            }
+            for &(inst, bits) in &sites.macros {
+                for b in 0..bits {
+                    let r = splat_lsb(csim.macro_state(inst, 0).plane(b));
+                    for w in 0..words {
+                        state_diff[w] |= (csim.macro_state(inst, w).plane(b) ^ r) & used[w];
+                    }
+                }
+            }
+            let w0 = winner_of(&times[..q]);
+            if ci == 0 {
+                ref_winners.push(w0);
+            }
+            for (k, m) in mism.iter_mut().enumerate() {
+                let gl = k + 1;
+                if winner_of(&times[gl * q..(gl + 1) * q]) != w0 {
+                    *m += 1;
+                }
+            }
+        }
+        for (k, f) in chunk.iter().enumerate() {
+            let gl = k + 1;
+            outcomes.push(FaultOutcome {
+                fault: *f,
+                site: site_label(&d.netlist, f),
+                class: classify(
+                    (out_diff[gl / LANES] >> (gl % LANES)) & 1 != 0,
+                    (state_diff[gl / LANES] >> (gl % LANES)) & 1 != 0,
+                ),
+                winner_mismatches: mism[k],
+            });
+        }
+    }
+    Ok(CampaignResult {
+        outcomes,
+        ref_winners,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::column_design::{build_column, BrvSource};
+    use super::super::gate_engine::GateColumn;
+    use super::*;
+    use crate::tnn::params::TnnParams;
+    use crate::tnn::spike::random_volley;
+
+    fn setup(
+        p: usize,
+        q: usize,
+        theta: u32,
+        items: usize,
+        seed: u64,
+    ) -> (ColumnDesign, Vec<u8>, Vec<Vec<SpikeTime>>, u32) {
+        let mut rng = Rng64::seed_from_u64(seed);
+        let d = build_column(p, q, theta, BrvSource::Inputs);
+        let ws: Vec<u8> = (0..p * q).map(|_| rng.gen_range(0, 8) as u8).collect();
+        let gamma = TnnParams::default().gamma_cycles;
+        let volleys: Vec<Vec<SpikeTime>> = (0..items)
+            .map(|_| random_volley(p, 0.3, gamma, &mut rng))
+            .collect();
+        (d, ws, volleys, gamma)
+    }
+
+    fn backends() -> Vec<SimBackend> {
+        vec![
+            SimBackend::Scalar,
+            SimBackend::BitParallel64,
+            SimBackend::Compiled { words: 1, threads: 1 },
+            SimBackend::Compiled { words: 2, threads: 2 },
+        ]
+    }
+
+    #[test]
+    fn zero_fault_campaign_matches_baseline_inference_everywhere() {
+        let (d, ws, volleys, gamma) = setup(5, 2, 5, 9, 11);
+        let refs: Vec<&[SpikeTime]> = volleys.iter().map(|v| v.as_slice()).collect();
+        let mut gate =
+            GateColumn::with_weights(d.p, d.q, d.theta, TnnParams::default(), &ws).unwrap();
+        let baseline: Vec<Option<usize>> =
+            volleys.iter().map(|v| gate.infer_winner(v)).collect();
+        for backend in backends() {
+            let r = campaign(&d, &ws, gamma, &refs, &[], backend).unwrap();
+            assert!(r.outcomes.is_empty());
+            assert_eq!(r.ref_winners, baseline, "backend {}", backend.name());
+        }
+    }
+
+    #[test]
+    fn stuck_output_propagates_identically_on_every_backend() {
+        let (d, ws, volleys, gamma) = setup(4, 2, 4, 6, 3);
+        let refs: Vec<&[SpikeTime]> = volleys.iter().map(|v| v.as_slice()).collect();
+        let faults = [GateFault::StuckAt {
+            net: d.out_spike[0],
+            value: true,
+        }];
+        let mut results = Vec::new();
+        for backend in backends() {
+            let r = campaign(&d, &ws, gamma, &refs, &faults, backend).unwrap();
+            assert_eq!(r.outcomes.len(), 1);
+            assert_eq!(
+                r.outcomes[0].class,
+                FaultClass::Propagated,
+                "backend {}",
+                backend.name()
+            );
+            results.push(r);
+        }
+        for r in &results[1..] {
+            assert_eq!(r, &results[0]);
+        }
+    }
+
+    #[test]
+    fn sampled_campaign_outcomes_are_backend_invariant() {
+        let (d, ws, volleys, gamma) = setup(5, 2, 5, 7, 99);
+        let refs: Vec<&[SpikeTime]> = volleys.iter().map(|v| v.as_slice()).collect();
+        let total = volleys.len() as u64 * gamma as u64;
+        let faults = sample_faults(&d.netlist, 6, 6, total, 0xFA17);
+        assert_eq!(faults.len(), 12);
+        let mut results = Vec::new();
+        for backend in backends() {
+            results.push(campaign(&d, &ws, gamma, &refs, &faults, backend).unwrap());
+        }
+        for (i, r) in results.iter().enumerate().skip(1) {
+            assert_eq!(r, &results[0], "backend #{i} diverged");
+        }
+        // The sampled set should exercise macro sites (labels feed the
+        // per-macro-type report).
+        assert!(results[0].outcomes.iter().any(|o| o.site != "logic"));
+        assert_eq!(results[0].counts().total(), 12);
+    }
+
+    #[test]
+    fn sample_faults_is_reproducible_from_its_seed() {
+        let d = build_column(4, 2, 4, BrvSource::Inputs);
+        let a = sample_faults(&d.netlist, 8, 8, 128, 42);
+        let b = sample_faults(&d.netlist, 8, 8, 128, 42);
+        assert_eq!(a, b);
+        let c = sample_faults(&d.netlist, 8, 8, 128, 43);
+        assert_ne!(a, c, "distinct seeds sample distinct campaigns");
+    }
+
+    #[test]
+    fn campaign_rejects_malformed_faults() {
+        let (d, ws, volleys, gamma) = setup(3, 1, 3, 2, 1);
+        let refs: Vec<&[SpikeTime]> = volleys.iter().map(|v| v.as_slice()).collect();
+        let bad_net = GateFault::StuckAt {
+            net: d.netlist.gates.len() as NetId,
+            value: true,
+        };
+        let err = campaign(&d, &ws, gamma, &refs, &[bad_net], SimBackend::Scalar)
+            .unwrap_err();
+        assert!(err.contains("out of range"), "{err}");
+        let late = GateFault::SeuNet {
+            net: 0,
+            cycle: volleys.len() as u64 * gamma as u64,
+        };
+        let err = campaign(&d, &ws, gamma, &refs, &[late], SimBackend::Scalar).unwrap_err();
+        assert!(err.contains("beyond campaign"), "{err}");
+    }
+}

@@ -12,10 +12,13 @@
 //! generic-gate expansion ([`macros9`]), the structural generator that
 //! assembles full p×q TNN columns out of them ([`column_design`]), and the
 //! gate-level *column engine* that runs real workloads on the macro
-//! netlist behind the `coordinator::Engine` interface ([`gate_engine`]).
+//! netlist behind the `coordinator::Engine` interface ([`gate_engine`]),
+//! plus seeded deterministic fault-injection campaigns (stuck-at, SEU)
+//! that run on all three engines with bit-identical verdicts ([`fault`]).
 
 pub mod column_design;
 pub mod compile;
+pub mod fault;
 pub mod gate_engine;
 pub mod macros9;
 pub mod netlist;
@@ -23,6 +26,7 @@ pub mod sim;
 pub mod wordsim;
 
 pub use compile::{CompiledProgram, CompiledSim};
+pub use fault::{CampaignResult, FaultClass, FaultCounts, FaultOutcome, GateFault};
 pub use gate_engine::GateColumn;
 pub use macros9::MacroKind;
 pub use netlist::{Gate, NetBuilder, NetId, Netlist};

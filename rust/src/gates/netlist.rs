@@ -262,6 +262,124 @@ impl Netlist {
         }
         counts
     }
+
+    /// Structural pre-flight check, run before every compile and by the
+    /// fault-injection campaigns (which refuse to inject into unverified
+    /// netlists): every net reference must be in range and patched (no
+    /// dangling `PENDING_D`), every macro pin table must be consistent with
+    /// its `MacroOut` nodes (each pin driven by exactly the node that claims
+    /// it — the multiple-driver check in this single-output-per-net IR),
+    /// ports must resolve, and the combinational core must be acyclic.
+    /// Errors name the offending gate / instance.
+    pub fn verify(&self) -> Result<(), String> {
+        let n = self.gates.len();
+        let bad = |src: NetId| src == PENDING_D || src as usize >= n;
+        let describe = |src: NetId| {
+            if src == PENDING_D {
+                "is dangling (never patched)".to_string()
+            } else {
+                format!("is out of range (netlist has {n} nets)")
+            }
+        };
+        let mut fin = Vec::new();
+        for (i, g) in self.gates.iter().enumerate() {
+            g.comb_fanin(&mut fin);
+            if let Gate::Dff { d, rst, .. } = *g {
+                fin.push(d);
+                if let Some(r) = rst {
+                    fin.push(r);
+                }
+            }
+            for &src in &fin {
+                if bad(src) {
+                    return Err(format!(
+                        "{}: gate {i} ({g:?}): fan-in net {src} {}",
+                        self.name,
+                        describe(src)
+                    ));
+                }
+            }
+            if let Gate::MacroOut { inst, pin } = *g {
+                let m = self.macros.get(inst as usize).ok_or_else(|| {
+                    format!(
+                        "{}: gate {i}: MacroOut references missing macro instance {inst}",
+                        self.name
+                    )
+                })?;
+                if m.outputs.get(pin as usize).copied() != Some(i as NetId) {
+                    return Err(format!(
+                        "{}: gate {i}: {:?} instance {inst} pin {pin} is not the net its \
+                         pin table claims ({:?}) — multiple or missing driver",
+                        self.name,
+                        m.kind,
+                        m.outputs.get(pin as usize)
+                    ));
+                }
+            }
+        }
+        for (inst, m) in self.macros.iter().enumerate() {
+            if m.inputs.len() != m.kind.input_pins().len() {
+                return Err(format!(
+                    "{}: macro {inst} ({:?}): {} input nets for {} pins",
+                    self.name,
+                    m.kind,
+                    m.inputs.len(),
+                    m.kind.input_pins().len()
+                ));
+            }
+            if m.outputs.len() != m.kind.output_pins().len() {
+                return Err(format!(
+                    "{}: macro {inst} ({:?}): {} output nets for {} pins",
+                    self.name,
+                    m.kind,
+                    m.outputs.len(),
+                    m.kind.output_pins().len()
+                ));
+            }
+            for (k, &src) in m.inputs.iter().enumerate() {
+                if bad(src) {
+                    return Err(format!(
+                        "{}: macro {inst} ({:?}) input pin {k}: net {src} {}",
+                        self.name,
+                        m.kind,
+                        describe(src)
+                    ));
+                }
+            }
+            for (k, &net) in m.outputs.iter().enumerate() {
+                let owns = (net as usize) < n
+                    && matches!(self.gates[net as usize], Gate::MacroOut { inst: gi, pin }
+                        if gi as usize == inst && pin as usize == k);
+                if !owns {
+                    return Err(format!(
+                        "{}: macro {inst} ({:?}) output pin {k}: net {net} is not its own \
+                         MacroOut node — multiple drivers or stolen pin",
+                        self.name, m.kind
+                    ));
+                }
+            }
+        }
+        for (name, id) in &self.inputs {
+            if (*id as usize) >= n || !matches!(self.gates[*id as usize], Gate::Input) {
+                return Err(format!(
+                    "{}: input port {name:?} bound to net {id}, which is not an Input gate",
+                    self.name
+                ));
+            }
+        }
+        for (name, id) in &self.outputs {
+            if bad(*id) {
+                return Err(format!(
+                    "{}: output port {name:?}: net {id} {}",
+                    self.name,
+                    describe(*id)
+                ));
+            }
+        }
+        self.levelize_buckets()
+            .map(|_| ())
+            .map_err(|e| format!("{}: {e}", self.name))
+    }
 }
 
 /// Shared implementation of the bulk port binders: build the name index
@@ -834,6 +952,64 @@ mod tests {
         let err = nl.bind_inputs(&["missing"]).unwrap_err();
         assert!(err.contains("unknown input"), "{err}");
         assert!(nl.bind_outputs(&["missing"]).is_err());
+    }
+
+    #[test]
+    fn verify_accepts_builder_output() {
+        let mut b = NetBuilder::new("t");
+        let p = b.input("p");
+        let g = b.input("g");
+        let x = b.and(p, g);
+        let q = b.dff(x, Some(g), false);
+        let outs = b.macro_inst(MacroKind::Pulse2Edge, vec![p, g]);
+        b.output("q", q);
+        b.output("e", outs[0]);
+        b.finish().verify().unwrap();
+    }
+
+    #[test]
+    fn verify_flags_dangling_and_out_of_range_nets() {
+        let mut nl = Netlist {
+            name: "bad".into(),
+            gates: vec![Gate::Input, Gate::Buf(PENDING_D)],
+            ..Netlist::default()
+        };
+        let err = nl.verify().unwrap_err();
+        assert!(err.contains("dangling") && err.contains("gate 1"), "{err}");
+        nl.gates[1] = Gate::And(0, 99);
+        let err = nl.verify().unwrap_err();
+        assert!(err.contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn verify_flags_macro_pin_theft_naming_the_instance() {
+        let mut b = NetBuilder::new("t");
+        let p = b.input("p");
+        let g = b.input("g");
+        let outs = b.macro_inst(MacroKind::Pulse2Edge, vec![p, g]);
+        b.output("e", outs[0]);
+        let mut nl = b.finish();
+        nl.verify().unwrap();
+        // Point the instance's pin table at an input net: the MacroOut node
+        // and the pin table now disagree about who drives the pin.
+        nl.macros[0].outputs[0] = p;
+        let err = nl.verify().unwrap_err();
+        assert!(
+            err.contains("Pulse2Edge") && err.contains("pin 0"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn verify_flags_combinational_cycles() {
+        let mut b = NetBuilder::new("c");
+        let a = b.input("a");
+        let w = b.wire();
+        let x = b.and(a, w);
+        b.connect(w, x);
+        b.output("x", x);
+        let err = b.finish().verify().unwrap_err();
+        assert!(err.contains("combinational cycle"), "{err}");
     }
 
     #[test]

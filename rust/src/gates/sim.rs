@@ -27,6 +27,14 @@ pub struct Simulator<'a> {
     output_index: HashMap<&'a str, NetId>,
     toggles: Vec<u64>,
     cycles: u64,
+    // Stuck-at fault forces (empty when fault-free — the common case pays
+    // one branch per settle). `force_mask[id]` marks a forced net,
+    // `force_val[id]` its stuck value; `forced_nets` lists forced ids so the
+    // settle-entry clamp (which covers Input/Dff/Const/Moore nets that are
+    // not in the combinational schedule) doesn't scan every net.
+    force_mask: Vec<bool>,
+    force_val: Vec<bool>,
+    forced_nets: Vec<NetId>,
     // scratch buffers
     dff_next: Vec<(usize, bool)>,
     macro_in: Vec<bool>,
@@ -66,6 +74,9 @@ impl<'a> Simulator<'a> {
             input_index,
             output_index,
             cycles: 0,
+            force_mask: Vec::new(),
+            force_val: Vec::new(),
+            forced_nets: Vec::new(),
             dff_next: Vec::new(),
             macro_in: Vec::new(),
             macro_out: Vec::new(),
@@ -127,9 +138,19 @@ impl<'a> Simulator<'a> {
     // borrow of `order` cannot be held across it.
     #[allow(clippy::needless_range_loop)]
     pub fn settle(&mut self) {
+        // Re-clamp forced nets first: Input/Dff/Const/Moore-pin nets are not
+        // in the combinational schedule, so a clock-phase write (DFF commit,
+        // Moore refresh) or caller stimulus would otherwise undo the force.
+        for &id in &self.forced_nets {
+            self.values[id as usize] = self.force_val[id as usize];
+        }
+        let clamp = !self.forced_nets.is_empty();
         for k in 0..self.order.len() {
             let id = self.order[k];
-            let new = self.eval_net(id);
+            let mut new = self.eval_net(id);
+            if clamp && self.force_mask[id as usize] {
+                new = self.force_val[id as usize];
+            }
             let old = self.values[id as usize];
             if new != old {
                 self.toggles[id as usize] += 1;
@@ -260,6 +281,48 @@ impl<'a> Simulator<'a> {
         self.macro_states[inst] = st;
     }
 
+    /// Force net `id` to a stuck-at `value` until [`Simulator::clear_faults`].
+    /// The force is applied immediately, re-applied at every settle entry,
+    /// and clamps the net's freshly evaluated value during settle, so the
+    /// fault holds across [`Simulator::clock`] and
+    /// [`Simulator::reset_state`].
+    pub fn force_net(&mut self, id: NetId, value: bool) {
+        if self.force_mask.is_empty() {
+            self.force_mask = vec![false; self.nl.gates.len()];
+            self.force_val = vec![false; self.nl.gates.len()];
+        }
+        if !self.force_mask[id as usize] {
+            self.forced_nets.push(id);
+        }
+        self.force_mask[id as usize] = true;
+        self.force_val[id as usize] = value;
+        self.values[id as usize] = value;
+    }
+
+    /// One-shot single-event upset: invert the current value of net `id`.
+    /// Call between [`Simulator::clock`] and the next settle; the flip
+    /// persists on state nets (DFF outputs) and is swallowed by the next
+    /// settle on combinational nets.
+    pub fn flip_net(&mut self, id: NetId) {
+        self.values[id as usize] = !self.values[id as usize];
+    }
+
+    /// One-shot single-event upset in a macro instance's behavioral state:
+    /// invert state bit `bit` (see [`MacroKind::state_bits`]).
+    ///
+    /// [`MacroKind::state_bits`]: super::macros9::MacroKind::state_bits
+    pub fn flip_macro_bit(&mut self, inst: usize, bit: u8) {
+        let st = &self.macro_states[inst];
+        self.macro_states[inst] = MacroState::from_bits(st.bits() ^ (1 << bit));
+    }
+
+    /// Remove all stuck-at forces (flips are one-shot and need no undo).
+    pub fn clear_faults(&mut self) {
+        self.force_mask.clear();
+        self.force_val.clear();
+        self.forced_nets.clear();
+    }
+
     /// Reset all state (DFFs to init, macro states cleared, toggles kept).
     pub fn reset_state(&mut self) {
         for (i, g) in self.nl.gates.iter().enumerate() {
@@ -380,6 +443,49 @@ mod tests {
             sim.clock();
         }
         assert_eq!(hist, vec![false, false, true, true, true, true]);
+    }
+
+    #[test]
+    fn stuck_at_force_holds_across_clock_and_clears() {
+        let mut b = NetBuilder::new("t");
+        let d = b.input("d");
+        let q = b.dff(d, None, false);
+        let n = b.not(q);
+        b.output("q", q);
+        b.output("n", n);
+        let nl = b.finish();
+        let mut sim = Simulator::new(&nl).unwrap();
+        sim.force_net(q, true);
+        sim.set_input("d", false);
+        sim.settle();
+        assert!(sim.get_output("q"), "forced high despite d=0");
+        assert!(!sim.get_output("n"), "fault propagates through fan-out");
+        sim.clock();
+        sim.settle();
+        assert!(sim.get_output("q"), "force survives the clock edge");
+        sim.clear_faults();
+        sim.clock();
+        sim.settle();
+        assert!(!sim.get_output("q"), "cleared fault releases the net");
+    }
+
+    #[test]
+    fn seu_flip_persists_on_state_nets_only() {
+        let mut b = NetBuilder::new("t");
+        let d = b.input("d");
+        let q = b.dff(d, None, false);
+        let x = b.not(d);
+        b.output("q", q);
+        b.output("x", x);
+        let nl = b.finish();
+        let mut sim = Simulator::new(&nl).unwrap();
+        sim.set_input("d", false);
+        sim.cycle();
+        sim.flip_net(q); // upset the DFF state bit
+        sim.flip_net(x); // upset a combinational net
+        sim.settle();
+        assert!(sim.get_output("q"), "DFF upset persists through settle");
+        assert!(sim.get_output("x"), "comb upset is recomputed away");
     }
 
     #[test]

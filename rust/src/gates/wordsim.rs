@@ -61,6 +61,15 @@ pub struct WordSimulator<'a> {
     macro_outs: Vec<Vec<u64>>,
     eval_gen: Vec<u64>,
     settle_gen: u64,
+    // Stuck-at fault lane masks (empty when fault-free — the common case
+    // pays one branch per settle): lanes of `force_sa0[id]` are stuck at 0,
+    // lanes of `force_sa1[id]` stuck at 1. `forced_nets` lists nets with
+    // any forced lane so the settle-entry clamp (covering
+    // Input/Dff/Const/Moore nets that are not in the combinational
+    // schedule) doesn't scan every net.
+    force_sa0: Vec<u64>,
+    force_sa1: Vec<u64>,
+    forced_nets: Vec<NetId>,
     // scratch buffers
     dff_next: Vec<u64>,
     macro_in: Vec<u64>,
@@ -138,6 +147,9 @@ impl<'a> WordSimulator<'a> {
             macro_outs: nl.macros.iter().map(|_| Vec::new()).collect(),
             eval_gen: vec![0; nl.macros.len()],
             settle_gen: 0,
+            force_sa0: Vec::new(),
+            force_sa1: Vec::new(),
+            forced_nets: Vec::new(),
             dff_next: Vec::new(),
             macro_in: Vec::new(),
             macro_out: Vec::new(),
@@ -194,6 +206,15 @@ impl<'a> WordSimulator<'a> {
     // borrows of the schedule cannot be held across it.
     #[allow(clippy::needless_range_loop)]
     pub fn settle(&mut self) {
+        // Re-clamp forced nets first: Input/Dff/Const/Moore-pin nets are
+        // not in the combinational schedule, so a clock-phase write (DFF
+        // commit, Moore refresh) or caller stimulus would otherwise undo
+        // the force.
+        for &id in &self.forced_nets {
+            let i = id as usize;
+            self.values[i] = (self.values[i] & !self.force_sa0[i]) | self.force_sa1[i];
+        }
+        let clamp = !self.forced_nets.is_empty();
         // New settle pass: every instance's memo goes stale at once (a
         // counter bump, not a per-instance invalidation sweep).
         self.settle_gen += 1;
@@ -202,7 +223,11 @@ impl<'a> WordSimulator<'a> {
             let end = self.level_ends[k] as usize;
             for s in start..end {
                 let id = self.sched[s];
-                let new = self.eval_net(id);
+                let mut new = self.eval_net(id);
+                if clamp {
+                    let i = id as usize;
+                    new = (new & !self.force_sa0[i]) | self.force_sa1[i];
+                }
                 let old = self.values[id as usize];
                 let diff = new ^ old;
                 if diff != 0 {
@@ -367,6 +392,53 @@ impl<'a> WordSimulator<'a> {
     /// simulator's prebuilt name index. Errors on unknown names.
     pub fn bind_outputs(&self, names: &[&str]) -> Result<Vec<NetId>, String> {
         super::netlist::resolve_ports(&self.output_index, names, "output")
+    }
+
+    /// Force the `sa0` lanes of net `id` stuck at 0 and the `sa1` lanes
+    /// stuck at 1, until [`WordSimulator::clear_faults`]. Forces accumulate
+    /// across calls, are applied immediately, re-applied at every settle
+    /// entry, and clamp freshly evaluated words inside the settle, so they
+    /// hold across [`WordSimulator::clock`] and
+    /// [`WordSimulator::reset_state`]. A lane in both masks resolves to
+    /// stuck-at-1.
+    pub fn force_net_lanes(&mut self, id: NetId, sa0: u64, sa1: u64) {
+        if self.force_sa0.is_empty() {
+            self.force_sa0 = vec![0; self.nl.gates.len()];
+            self.force_sa1 = vec![0; self.nl.gates.len()];
+        }
+        let i = id as usize;
+        if self.force_sa0[i] | self.force_sa1[i] == 0 {
+            self.forced_nets.push(id);
+        }
+        self.force_sa0[i] |= sa0;
+        self.force_sa1[i] |= sa1;
+        self.values[i] = (self.values[i] & !self.force_sa0[i]) | self.force_sa1[i];
+    }
+
+    /// One-shot single-event upset: invert the `mask` lanes of net `id`.
+    /// Call between [`WordSimulator::clock`] and the next settle; the flip
+    /// persists on state nets (DFF outputs) and is swallowed by the next
+    /// settle on combinational nets.
+    pub fn flip_net_lanes(&mut self, id: NetId, mask: u64) {
+        self.values[id as usize] ^= mask;
+    }
+
+    /// One-shot single-event upset in macro behavioral state: invert state
+    /// bit `bit` of instance `inst` in the `mask` lanes (see
+    /// [`MacroKind::state_bits`]).
+    ///
+    /// [`MacroKind::state_bits`]: super::macros9::MacroKind::state_bits
+    pub fn flip_macro_bit_lanes(&mut self, inst: usize, bit: usize, mask: u64) {
+        let st = &mut self.macro_states[inst];
+        let plane = st.plane(bit);
+        st.set_plane(bit, plane ^ mask);
+    }
+
+    /// Remove all stuck-at forces (flips are one-shot and need no undo).
+    pub fn clear_faults(&mut self) {
+        self.force_sa0.clear();
+        self.force_sa1.clear();
+        self.forced_nets.clear();
     }
 
     /// Reset all state (DFFs to init, macro states cleared, toggles kept).
@@ -567,6 +639,30 @@ mod tests {
         sim.set_input_net(bound[0], 0b0101);
         sim.settle();
         assert_eq!(sim.get_output("edge"), 0b0101);
+    }
+
+    #[test]
+    fn stuck_at_lanes_hold_and_leave_other_lanes_alone() {
+        let mut b = NetBuilder::new("t");
+        let dn = b.input("d");
+        let q = b.dff(dn, None, false);
+        let x = b.not(q);
+        b.output("q", q);
+        b.output("x", x);
+        let nl = b.finish();
+        let mut sim = WordSimulator::new(&nl).unwrap();
+        sim.force_net_lanes(q, 0, 1 << 3); // lane 3 stuck-at-1
+        sim.set_input_net(dn, 0);
+        sim.settle();
+        assert_eq!(sim.get(q), 1 << 3, "only lane 3 forced");
+        assert_eq!(sim.get(x), !(1u64 << 3), "fan-out sees the fault");
+        sim.clock(); // captures d=0 into every lane...
+        sim.settle(); // ...but lane 3 is re-clamped at settle entry
+        assert_eq!(sim.get(q), 1 << 3, "force survives the clock edge");
+        sim.clear_faults();
+        sim.clock();
+        sim.settle();
+        assert_eq!(sim.get(q), 0, "cleared fault releases the lane");
     }
 
     #[test]

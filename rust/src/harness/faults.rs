@@ -1,0 +1,590 @@
+//! Fault-injection report: drives the gate-level campaigns
+//! ([`crate::gates::fault`]) and the behavioral weight-memory campaigns
+//! ([`crate::tnn::fault`]) over the two reproduction workloads (the UCR
+//! TwoLeadECG column and the 4-layer MNIST network) and renders the
+//! results as a paper-style table plus `BENCH_faults.json`.
+//!
+//! Everything here is reproducible from the printed seed alone: fault
+//! sites draw only from per-fault `split_stream` lanes, so the campaign
+//! is invariant under the simulator backend, `sim_words` and the worker
+//! thread count — the cross-backend agreement flag in the report is the
+//! live check of that claim.
+
+use crate::gates::fault::{campaign, sample_faults, CampaignResult, FaultCounts};
+use crate::gates::gate_engine::cached_design;
+use crate::gates::SimBackend;
+use crate::tnn::fault::{flip_column_weights, flip_network_weights};
+use crate::tnn::SpikeTime;
+use crate::util::json::Json;
+use crate::util::kv::KvDoc;
+use crate::util::Rng64;
+use std::time::{Duration, Instant};
+
+/// Campaign configuration (the `tnn7 faults` subcommand's `key=value`
+/// surface), following the same kv discipline as [`crate::config::RunConfig`].
+#[derive(Clone, Debug)]
+pub struct FaultSpec {
+    /// Root seed: drives the workloads, the gate fault sites and the
+    /// weight-flip sites. Printing it makes the whole report reproducible.
+    pub seed: u64,
+    /// Stuck-at faults to sample for the gate campaign.
+    pub stuck: usize,
+    /// Single-event upsets (net / macro-state bit flips) to sample.
+    pub seu: usize,
+    /// Gamma items each gate campaign pass simulates.
+    pub items: usize,
+    /// UCR training samples per cluster (workload size knob).
+    pub per_cluster: usize,
+    /// MNIST training samples (workload size knob).
+    pub mnist_samples: usize,
+    /// Weight-flip ladder: one behavioral campaign point per entry.
+    pub flips: Vec<usize>,
+    /// Simulator backend the primary gate campaign runs on.
+    pub backend: SimBackend,
+    /// Lane-block width for the compiled cross-check pass.
+    pub sim_words: usize,
+    /// Worker threads (0 = machine parallelism) for the compiled
+    /// cross-check and the MNIST batched engine.
+    pub threads: usize,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            seed: 7,
+            stuck: 48,
+            seu: 48,
+            items: 12,
+            per_cluster: 20,
+            mnist_samples: 100,
+            flips: vec![1, 2, 4, 8, 16, 32],
+            backend: SimBackend::BitParallel64,
+            sim_words: crate::gates::DEFAULT_SIM_WORDS,
+            threads: 0,
+        }
+    }
+}
+
+impl FaultSpec {
+    /// CI-speed campaign: a handful of faults on tiny workloads.
+    pub fn quick() -> Self {
+        FaultSpec {
+            stuck: 8,
+            seu: 8,
+            items: 3,
+            per_cluster: 6,
+            mnist_samples: 30,
+            flips: vec![1, 4, 16],
+            ..FaultSpec::default()
+        }
+    }
+
+    /// Load from a kv doc; missing keys keep defaults.
+    pub fn from_kv(doc: &KvDoc) -> crate::Result<Self> {
+        let mut c = FaultSpec::default();
+        if let Some(v) = doc.get_u64("seed")? {
+            c.seed = v;
+        }
+        if let Some(v) = doc.get_usize("stuck")? {
+            c.stuck = v;
+        }
+        if let Some(v) = doc.get_usize("seu")? {
+            c.seu = v;
+        }
+        if let Some(v) = doc.get_usize("items")? {
+            c.items = v;
+        }
+        if let Some(v) = doc.get_usize("per_cluster")? {
+            c.per_cluster = v;
+        }
+        if let Some(v) = doc.get_usize("mnist_samples")? {
+            c.mnist_samples = v;
+        }
+        if let Some(v) = doc.get("flips") {
+            c.flips = v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse::<usize>()
+                        .map_err(|_| anyhow::anyhow!("bad flips entry {s:?} (usize list)"))
+                })
+                .collect::<crate::Result<Vec<_>>>()?;
+        }
+        if let Some(v) = doc.get("backend") {
+            c.backend = SimBackend::parse(v)?;
+        }
+        if let Some(v) = doc.get_usize("sim_words")? {
+            c.sim_words = v;
+        }
+        if let Some(v) = doc.get_usize("threads")? {
+            c.threads = v;
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// Apply `key=value` CLI overrides.
+    pub fn apply_overrides(&mut self, overrides: &[String]) -> crate::Result<()> {
+        let mut doc = KvDoc::default();
+        for o in overrides {
+            let (k, v) = o
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("override must be key=value: {o}"))?;
+            doc.set(k.trim(), v.trim());
+        }
+        let merged = Self::from_kv(&doc)?;
+        // from_kv starts from defaults; re-apply only the overridden keys.
+        for key in doc.keys() {
+            match key {
+                "seed" => self.seed = merged.seed,
+                "stuck" => self.stuck = merged.stuck,
+                "seu" => self.seu = merged.seu,
+                "items" => self.items = merged.items,
+                "per_cluster" => self.per_cluster = merged.per_cluster,
+                "mnist_samples" => self.mnist_samples = merged.mnist_samples,
+                "flips" => self.flips = merged.flips.clone(),
+                "backend" => self.backend = merged.backend,
+                "sim_words" => self.sim_words = merged.sim_words,
+                "threads" => self.threads = merged.threads,
+                other => anyhow::bail!("unknown faults key {other:?}"),
+            }
+        }
+        self.validate()
+    }
+
+    /// Sanity-check the configuration.
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(self.stuck + self.seu >= 1, "need at least one gate fault");
+        anyhow::ensure!(self.items >= 1, "items must be >= 1");
+        anyhow::ensure!(self.per_cluster >= 2, "per_cluster must be >= 2");
+        anyhow::ensure!(self.mnist_samples >= 10, "mnist_samples must be >= 10");
+        anyhow::ensure!(!self.flips.is_empty(), "flips ladder must be non-empty");
+        anyhow::ensure!(
+            (1..=64).contains(&self.sim_words),
+            "sim_words must be in 1..=64"
+        );
+        Ok(())
+    }
+}
+
+/// Gate-level campaign summary on the UCR column.
+#[derive(Clone, Debug)]
+pub struct GateCampaignSummary {
+    /// Synapses per neuron of the struck column.
+    pub p: usize,
+    /// Neurons of the struck column.
+    pub q: usize,
+    /// Firing threshold of the struck column.
+    pub theta: u32,
+    /// Total faults injected (stuck-at + SEU).
+    pub faults: usize,
+    /// Gamma items each fault was simulated over.
+    pub items: usize,
+    /// Masked / latent / propagated totals.
+    pub counts: FaultCounts,
+    /// Per-site-label (macro type / dff / input / logic) classification.
+    pub by_site: Vec<(String, FaultCounts)>,
+    /// Faults whose WTA winner differed from the fault-free reference on
+    /// at least one item.
+    pub winner_mismatch_faults: usize,
+    /// Did scalar, bit-parallel-64 and compiled produce bit-identical
+    /// verdicts for every fault?
+    pub backends_agree: bool,
+    /// Backend the primary campaign ran on.
+    pub backend: String,
+    /// Wall time of the primary campaign pass.
+    pub wall: Duration,
+}
+
+/// One behavioral weight-flip point on the UCR column: WTA winner changes
+/// versus the un-flipped column over the same items.
+#[derive(Clone, Debug)]
+pub struct UcrFlipRow {
+    /// Weight bits flipped.
+    pub flips: usize,
+    /// Total weight-memory bits (fault-rate denominator).
+    pub memory_bits: usize,
+    /// Items whose winner changed under the flips.
+    pub changed: usize,
+    /// Items scored.
+    pub items: usize,
+}
+
+/// One behavioral weight-flip point on the MNIST network: vote-classifier
+/// accuracy under the flips versus the un-flipped baseline.
+#[derive(Clone, Debug)]
+pub struct MnistFlipRow {
+    /// Weight bits flipped (across the whole network memory).
+    pub flips: usize,
+    /// Total weight-memory bits (fault-rate denominator).
+    pub memory_bits: usize,
+    /// Correct test classifications under the flips.
+    pub correct: usize,
+    /// Correct test classifications of the un-flipped network.
+    pub baseline_correct: usize,
+    /// Test samples scored.
+    pub samples: usize,
+}
+
+/// Everything `tnn7 faults` prints and `BENCH_faults.json` records.
+#[derive(Clone, Debug)]
+pub struct FaultsReport {
+    /// The configuration the campaign ran under.
+    pub spec: FaultSpec,
+    /// Gate-level stuck-at + SEU campaign on the UCR column.
+    pub gate: GateCampaignSummary,
+    /// UCR winner-change ladder (error rate vs fault rate).
+    pub ucr_flips: Vec<UcrFlipRow>,
+    /// MNIST accuracy-degradation ladder.
+    pub mnist_flips: Vec<MnistFlipRow>,
+}
+
+/// Run the full fault campaign described by `spec`.
+///
+/// Three sub-campaigns share the spec's seed: (1) a gate-level stuck-at +
+/// SEU campaign on the briefly-trained UCR TwoLeadECG column, classified
+/// masked/latent/propagated and cross-checked bit-for-bit on all three
+/// simulator backends; (2) a weight-flip winner-change ladder on the same
+/// column; (3) a weight-flip accuracy ladder on the trained 4-layer MNIST
+/// network. The flip ladders use one `split_stream` lane per flip index,
+/// so each ladder point's flip set is a prefix of the next — the curves
+/// are monotone in the injected faults, not resampled per point.
+pub fn fault_campaign(spec: &FaultSpec) -> crate::Result<FaultsReport> {
+    spec.validate()?;
+
+    // --- workload: briefly-trained UCR TwoLeadECG column ---------------
+    let (mut col, items) = super::ucr_train_workload(spec.per_cluster, spec.seed);
+    let mut rng = Rng64::seed_from_u64(spec.seed.wrapping_add(3));
+    for item in &items {
+        col.step(&item.volley, &mut rng);
+    }
+
+    // --- gate-level stuck-at + SEU campaign ----------------------------
+    let d = cached_design(col.p(), col.q(), col.theta());
+    let gamma = col.params().gamma_cycles;
+    let volleys: Vec<&[SpikeTime]> = items
+        .iter()
+        .take(spec.items)
+        .map(|i| i.volley.as_slice())
+        .collect();
+    anyhow::ensure!(!volleys.is_empty(), "workload produced no gamma items");
+    let total_cycles = volleys.len() as u64 * gamma as u64;
+    let faults = sample_faults(&d.netlist, spec.stuck, spec.seu, total_cycles, spec.seed);
+
+    let t0 = Instant::now();
+    let primary = campaign(d, col.weights(), gamma, &volleys, &faults, spec.backend)
+        .map_err(anyhow::Error::msg)?;
+    let wall = t0.elapsed();
+
+    // Cross-backend agreement: the same campaign must produce
+    // bit-identical verdicts on every engine (ISSUE acceptance gate).
+    let backends_agree = [
+        SimBackend::Scalar,
+        SimBackend::BitParallel64,
+        SimBackend::Compiled {
+            words: spec.sim_words,
+            threads: spec.threads,
+        },
+    ]
+    .iter()
+    .map(|&b| campaign(d, col.weights(), gamma, &volleys, &faults, b))
+    .collect::<Result<Vec<CampaignResult>, String>>()
+    .map_err(anyhow::Error::msg)?
+    .iter()
+    .all(|r| *r == primary);
+
+    let gate = GateCampaignSummary {
+        p: col.p(),
+        q: col.q(),
+        theta: col.theta(),
+        faults: faults.len(),
+        items: volleys.len(),
+        counts: primary.counts(),
+        by_site: primary.counts_by_site().into_iter().collect(),
+        winner_mismatch_faults: primary
+            .outcomes
+            .iter()
+            .filter(|o| o.winner_mismatches > 0)
+            .count(),
+        backends_agree,
+        backend: spec.backend.name().to_string(),
+        wall,
+    };
+
+    // --- UCR weight-flip winner-change ladder --------------------------
+    let memory_bits = col.synapse_count() * col.params().weight_bits as usize;
+    let baseline: Vec<Option<usize>> = items.iter().map(|i| col.infer(&i.volley).winner).collect();
+    let ucr_flips = spec
+        .flips
+        .iter()
+        .map(|&n| {
+            let mut hit = col.clone();
+            flip_column_weights(&mut hit, n, spec.seed);
+            let changed = items
+                .iter()
+                .zip(&baseline)
+                .filter(|(i, &b)| hit.infer(&i.volley).winner != b)
+                .count();
+            UcrFlipRow {
+                flips: n,
+                memory_bits,
+                changed,
+                items: items.len(),
+            }
+        })
+        .collect();
+
+    // --- MNIST accuracy-degradation ladder -----------------------------
+    let mnist_flips = mnist_flip_ladder(spec)?;
+
+    Ok(FaultsReport {
+        spec: spec.clone(),
+        gate,
+        ucr_flips,
+        mnist_flips,
+    })
+}
+
+/// Train the 4-layer MNIST network once, then score the held-out digits
+/// under each flip count of the ladder.
+fn mnist_flip_ladder(spec: &FaultSpec) -> crate::Result<Vec<MnistFlipRow>> {
+    use crate::mnist::DigitCorpus;
+    use crate::tnn::VoteClassifier;
+
+    let (mut net, train_batch) = super::mnist_train_workload(spec.mnist_samples, spec.seed);
+    net.step_epoch(
+        &train_batch,
+        &Rng64::seed_from_u64(spec.seed ^ 0xE90C),
+        spec.threads,
+    );
+    // Labels come from re-generating the same corpus the workload encoded.
+    let train = DigitCorpus::generate(spec.mnist_samples.div_ceil(10), spec.seed);
+    let test = DigitCorpus::generate(4, spec.seed.wrapping_add(1));
+    let test_batch = test.encode_batch(8);
+
+    let mut vote = VoteClassifier::new(net.output_len(), 10);
+    let train_out = net.infer_batch(&train_batch, spec.threads);
+    for (s, &l) in train.labels.iter().enumerate() {
+        vote.observe(train_out.volley(s), l);
+    }
+    let score = |n: &crate::tnn::TnnNetwork| -> usize {
+        let out = n.infer_batch(&test_batch, spec.threads);
+        test.labels
+            .iter()
+            .enumerate()
+            .filter(|&(s, &l)| vote.classify(out.volley(s)) == Some(l))
+            .count()
+    };
+    let baseline_correct = score(&net);
+
+    let memory_bits: usize = net
+        .layers()
+        .iter()
+        .flat_map(|l| l.columns().iter())
+        .map(|c| c.synapse_count() * c.params().weight_bits as usize)
+        .sum();
+    Ok(spec
+        .flips
+        .iter()
+        .map(|&n| {
+            let mut hit = net.clone();
+            flip_network_weights(&mut hit, n, spec.seed);
+            MnistFlipRow {
+                flips: n,
+                memory_bits,
+                correct: score(&hit),
+                baseline_correct,
+                samples: test.len(),
+            }
+        })
+        .collect())
+}
+
+/// Print a [`FaultsReport`] as a paper-style table.
+pub fn print_faults(r: &FaultsReport) {
+    let g = &r.gate;
+    println!(
+        "Fault-injection campaign (seed {}; reproducible from the seed alone)",
+        r.spec.seed
+    );
+    println!(
+        "gate-level: {}x{} UCR column (theta {}), {} faults ({} stuck-at + {} SEU) x {} items on {} [{:?}]",
+        g.p, g.q, g.theta, g.faults, r.spec.stuck, r.spec.seu, g.items, g.backend, g.wall
+    );
+    println!(
+        "  masked {}  latent {}  propagated {}  (WTA winner flipped on {} faults)",
+        g.counts.masked, g.counts.latent, g.counts.propagated, g.winner_mismatch_faults
+    );
+    println!(
+        "{:<20} {:>8} {:>8} {:>12}",
+        "  site", "masked", "latent", "propagated"
+    );
+    for (site, c) in &g.by_site {
+        println!(
+            "  {:<18} {:>8} {:>8} {:>12}",
+            site, c.masked, c.latent, c.propagated
+        );
+    }
+    println!(
+        "  backends agree: {} (scalar / bit-parallel-64 / compiled verdicts bit-identical)",
+        if g.backends_agree { "yes" } else { "NO" }
+    );
+    println!("weight-memory flips, UCR TwoLeadECG column (winner changes vs un-flipped):");
+    println!(
+        "{:<8} {:>12} {:>16}",
+        "  flips", "fault rate", "changed winners"
+    );
+    for row in &r.ucr_flips {
+        println!(
+            "  {:<6} {:>11.2}% {:>13}/{}",
+            row.flips,
+            100.0 * row.flips as f64 / row.memory_bits as f64,
+            row.changed,
+            row.items
+        );
+    }
+    println!("weight-memory flips, 4-layer MNIST network (vote-classifier accuracy):");
+    println!(
+        "{:<8} {:>12} {:>10} {:>10}",
+        "  flips", "fault rate", "correct", "baseline"
+    );
+    for row in &r.mnist_flips {
+        println!(
+            "  {:<6} {:>11.3}% {:>7}/{} {:>7}/{}",
+            row.flips,
+            100.0 * row.flips as f64 / row.memory_bits as f64,
+            row.correct,
+            row.samples,
+            row.baseline_correct,
+            row.samples
+        );
+    }
+}
+
+/// JSON payload of a [`FaultsReport`] (`BENCH_faults.json`).
+pub fn faults_json(r: &FaultsReport) -> Json {
+    let g = &r.gate;
+    let counts_json = |c: &FaultCounts| {
+        Json::obj()
+            .set("masked", Json::Int(c.masked as i64))
+            .set("latent", Json::Int(c.latent as i64))
+            .set("propagated", Json::Int(c.propagated as i64))
+    };
+    Json::obj()
+        .set("seed", Json::Int(r.spec.seed as i64))
+        .set("design", format!("TwoLeadECG-{}x{}", g.p, g.q))
+        .set("p", g.p)
+        .set("q", g.q)
+        .set("theta", g.theta)
+        .set("stuck", r.spec.stuck)
+        .set("seu", r.spec.seu)
+        .set("items", g.items)
+        .set("backend", g.backend.as_str())
+        .set(
+            "gate",
+            counts_json(&g.counts)
+                .set("faults", g.faults)
+                .set("winner_mismatch_faults", g.winner_mismatch_faults)
+                .set("backends_agree", g.backends_agree)
+                .set("wall_ms", g.wall.as_secs_f64() * 1e3)
+                .set(
+                    "by_site",
+                    Json::Arr(
+                        g.by_site
+                            .iter()
+                            .map(|(site, c)| counts_json(c).set("site", site.as_str()))
+                            .collect(),
+                    ),
+                ),
+        )
+        .set(
+            "ucr_flips",
+            Json::Arr(
+                r.ucr_flips
+                    .iter()
+                    .map(|f| {
+                        Json::obj()
+                            .set("flips", f.flips)
+                            .set("memory_bits", f.memory_bits)
+                            .set("changed", f.changed)
+                            .set("items", f.items)
+                    })
+                    .collect(),
+            ),
+        )
+        .set(
+            "mnist_flips",
+            Json::Arr(
+                r.mnist_flips
+                    .iter()
+                    .map(|f| {
+                        Json::obj()
+                            .set("flips", f.flips)
+                            .set("memory_bits", f.memory_bits)
+                            .set("correct", f.correct)
+                            .set("baseline_correct", f.baseline_correct)
+                            .set("samples", f.samples)
+                    })
+                    .collect(),
+            ),
+        )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_defaults_and_quick_are_valid() {
+        FaultSpec::default().validate().unwrap();
+        FaultSpec::quick().validate().unwrap();
+    }
+
+    #[test]
+    fn spec_overrides_roundtrip_and_reject_unknown_keys() {
+        let mut s = FaultSpec::quick();
+        s.apply_overrides(&[
+            "seed=9".into(),
+            "stuck=2".into(),
+            "seu=3".into(),
+            "flips=1,2".into(),
+            "backend=compiled".into(),
+        ])
+        .unwrap();
+        assert_eq!(s.seed, 9);
+        assert_eq!(s.stuck, 2);
+        assert_eq!(s.seu, 3);
+        assert_eq!(s.flips, vec![1, 2]);
+        assert!(matches!(s.backend, SimBackend::Compiled { .. }));
+        assert_eq!(s.items, FaultSpec::quick().items, "non-overridden keys keep quick values");
+        let err = s.apply_overrides(&["bogus=1".into()]).unwrap_err();
+        assert!(err.to_string().contains("unknown faults key"));
+        let err = s.apply_overrides(&["flips=".into()]).unwrap_err();
+        assert!(err.to_string().contains("bad flips entry"));
+    }
+
+    #[test]
+    fn tiny_campaign_runs_end_to_end_and_agrees_across_backends() {
+        let spec = FaultSpec {
+            stuck: 3,
+            seu: 3,
+            items: 2,
+            per_cluster: 2,
+            mnist_samples: 10,
+            flips: vec![1, 8],
+            ..FaultSpec::default()
+        };
+        let r = fault_campaign(&spec).unwrap();
+        assert_eq!(r.gate.faults, 6);
+        assert_eq!(r.gate.counts.total(), 6);
+        assert!(r.gate.backends_agree, "backend verdicts must be bit-identical");
+        assert_eq!(r.ucr_flips.len(), 2);
+        assert_eq!(r.mnist_flips.len(), 2);
+        assert!(r.mnist_flips[0].baseline_correct <= r.mnist_flips[0].samples);
+        // The report JSON carries the headline fields the schema checks.
+        let j = faults_json(&r).to_string();
+        for key in ["\"gate\"", "\"backends_agree\"", "\"ucr_flips\"", "\"mnist_flips\""] {
+            assert!(j.contains(key), "JSON missing {key}");
+        }
+    }
+}

@@ -18,6 +18,10 @@ use crate::ucr::{ucr_suite, UcrConfig};
 use crate::util::json::Json;
 use std::time::{Duration, Instant};
 
+pub mod faults;
+
+pub use faults::{fault_campaign, faults_json, print_faults, FaultSpec, FaultsReport};
+
 /// Default gamma period (unit cycles) used by the PPA computation-time
 /// metric, matching the golden model's `TnnParams::default`.
 pub const GAMMA_CYCLES: u32 = 16;

@@ -35,6 +35,7 @@ fn dispatch(args: &[String]) -> tnn7::Result<()> {
     }
     match cmd {
         Some("report") => report(args),
+        Some("faults") => faults_cmd(args),
         Some("run") => run(args),
         Some("sweep") => sweep_cmd(args),
         Some("synth") => synth_cmd(args),
@@ -78,6 +79,7 @@ fn report(args: &[String]) -> tnn7::Result<()> {
                 "engine disagreement detected"
             );
         }
+        Some("faults") => run_faults(quick, &[])?,
         Some("headline") => {
             let rows = harness::fig11(quick);
             let (p, d, a, e) = harness::average_improvements(&rows);
@@ -97,6 +99,29 @@ fn report(args: &[String]) -> tnn7::Result<()> {
         }
         other => anyhow::bail!("unknown report {other:?}\n{}", cli::help_for("report").unwrap()),
     }
+    Ok(())
+}
+
+fn faults_cmd(args: &[String]) -> tnn7::Result<()> {
+    run_faults(flag(args, "--quick"), &overrides(args))
+}
+
+/// Shared body of `tnn7 faults` and `tnn7 report faults`: run the seeded
+/// campaign, print the table, and fail loudly if any simulator backend
+/// disagrees with the others' fault verdicts.
+fn run_faults(quick: bool, overrides: &[String]) -> tnn7::Result<()> {
+    let mut spec = if quick {
+        harness::FaultSpec::quick()
+    } else {
+        harness::FaultSpec::default()
+    };
+    spec.apply_overrides(overrides)?;
+    let report = harness::fault_campaign(&spec)?;
+    harness::print_faults(&report);
+    anyhow::ensure!(
+        report.gate.backends_agree,
+        "fault verdicts differ across simulator backends"
+    );
     Ok(())
 }
 

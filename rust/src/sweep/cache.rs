@@ -49,6 +49,20 @@ pub fn fnv1a64(bytes: &[u8]) -> u64 {
     h
 }
 
+/// Outcome of one cache probe ([`PointCache::lookup`]).
+#[derive(Clone, Debug, PartialEq)]
+pub enum CacheLookup {
+    /// A valid entry for exactly this point.
+    Hit(PointResult),
+    /// No entry on disk, or an entry whose canonical string names a
+    /// different point (hand-edit / hash collision — never quarantined).
+    Miss,
+    /// The entry was corrupt or truncated; it has been renamed
+    /// `<key>.corrupt` so the damaged bytes survive for forensics while
+    /// the point recomputes and re-stores cleanly.
+    Quarantined,
+}
+
 /// On-disk cache handle (a directory of `<key>.kv` entries).
 #[derive(Clone, Debug)]
 pub struct PointCache {
@@ -74,17 +88,55 @@ impl PointCache {
         self.dir.join(format!("{}.kv", Self::key(point)))
     }
 
-    /// Load a point's cached result, if present and parseable. A corrupt
-    /// or stale-schema entry is treated as a miss (the point recomputes
-    /// and overwrites it), never as an error.
+    /// Load a point's cached result, if present and valid ([`Self::lookup`]
+    /// collapsed to an `Option`; both a miss and a quarantined entry load
+    /// as `None` and the point recomputes).
     pub fn load(&self, point: &SweepPoint) -> Option<PointResult> {
-        let doc = KvDoc::load(self.path(point)).ok()?;
-        // Reject entries whose canonical string does not match exactly —
-        // a hash collision or a hand-edited file must not alias a result.
-        if doc.get("point") != Some(point.canonical().as_str()) {
-            return None;
+        match self.lookup(point) {
+            CacheLookup::Hit(r) => Some(r),
+            CacheLookup::Miss | CacheLookup::Quarantined => None,
         }
-        PointResult::from_kv(point, &doc)
+    }
+
+    /// Probe a point's cache entry, distinguishing the three outcomes a
+    /// sweep must account for. An unreadable/unparseable file, or one that
+    /// names this point but is missing result fields (a truncated write
+    /// from a crashed or pre-atomic-rename writer), is **quarantined**:
+    /// renamed to `<key>.corrupt` so it cannot mask the recompute's clean
+    /// re-store, and counted in the sweep summary. An entry whose
+    /// canonical string does not match exactly stays a plain miss — a
+    /// hash collision or hand-edited file must not alias a result, but it
+    /// is not damage either.
+    pub fn lookup(&self, point: &SweepPoint) -> CacheLookup {
+        let path = self.path(point);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return CacheLookup::Miss,
+            Err(_) => return self.quarantine(point),
+        };
+        let doc = match KvDoc::parse(&text) {
+            Ok(d) => d,
+            Err(_) => return self.quarantine(point),
+        };
+        if doc.get("point") != Some(point.canonical().as_str()) {
+            return CacheLookup::Miss;
+        }
+        match PointResult::from_kv(point, &doc) {
+            Some(r) => CacheLookup::Hit(r),
+            None => self.quarantine(point),
+        }
+    }
+
+    /// Path a quarantined entry is renamed to.
+    pub fn corrupt_path(&self, point: &SweepPoint) -> PathBuf {
+        self.dir.join(format!("{}.corrupt", Self::key(point)))
+    }
+
+    /// Move a damaged entry out of the key's path (best-effort: if the
+    /// rename itself fails the entry simply misses again next run).
+    fn quarantine(&self, point: &SweepPoint) -> CacheLookup {
+        std::fs::rename(self.path(point), self.corrupt_path(point)).ok();
+        CacheLookup::Quarantined
     }
 
     /// Atomically persist a point's result (temp file + rename).
@@ -178,6 +230,32 @@ mod tests {
         assert!(cache.invalidate(&p));
         assert!(cache.load(&p).is_none(), "invalidated point misses");
         assert!(!cache.invalidate(&p), "second invalidate is a no-op");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn truncated_entry_is_quarantined_not_served() {
+        let dir = tmpdir("truncate");
+        let cache = PointCache::open(&dir).unwrap();
+        let p = point();
+        cache.store(&p, &PointResult::synthetic_for_tests()).unwrap();
+        // Simulate a crashed pre-atomic-rename writer: cut the entry off
+        // mid-file (keys are sorted, so this drops the trailing fields).
+        let path = cache.path(&p);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let cut = text.find("train_ms").expect("entry carries train_ms");
+        std::fs::write(&path, &text[..cut]).unwrap();
+        assert_eq!(cache.lookup(&p), CacheLookup::Quarantined);
+        assert!(
+            cache.corrupt_path(&p).exists(),
+            "damaged bytes kept under <key>.corrupt"
+        );
+        assert!(!path.exists(), "damaged entry moved off the key's path");
+        // The quarantined entry cannot mask anything: the next probe is a
+        // plain miss, and a clean re-store hits again.
+        assert_eq!(cache.lookup(&p), CacheLookup::Miss);
+        cache.store(&p, &PointResult::synthetic_for_tests()).unwrap();
+        assert!(matches!(cache.lookup(&p), CacheLookup::Hit(_)));
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -18,7 +18,7 @@
 //! by one grid is valid in any other grid that contains the same point.
 //! Only the wall-clock fields (`synth_ms`, `train_ms`) vary run to run.
 
-use super::cache::PointCache;
+use super::cache::{CacheLookup, PointCache};
 use super::spec::{SweepPoint, SweepSpec, ThetaPolicy};
 use crate::coordinator::{encode_ucr, run_stream, score_winners, volley_density};
 use crate::gates::column_design::{build_column, BrvSource};
@@ -184,6 +184,9 @@ pub struct SweepOutcome {
     pub computed: usize,
     /// Points served from the warm cache.
     pub cached: usize,
+    /// Corrupt/truncated cache entries quarantined (renamed
+    /// `<key>.corrupt`) by this run; each such point was recomputed.
+    pub quarantined: usize,
 }
 
 /// Lane-cycles of the per-point measured-activity run. Part of the
@@ -319,10 +322,15 @@ pub fn run_sweep(spec: &SweepSpec, use_cache: bool) -> crate::Result<SweepOutcom
 
     let mut slots: Vec<Option<(PointResult, bool)>> = vec![None; points.len()];
     let mut todo: Vec<usize> = Vec::new();
+    let mut quarantined = 0usize;
     for (i, pt) in points.iter().enumerate() {
-        match cache.as_ref().and_then(|c| c.load(pt)) {
-            Some(r) => slots[i] = Some((r, true)),
-            None => todo.push(i),
+        match cache.as_ref().map(|c| c.lookup(pt)) {
+            Some(CacheLookup::Hit(r)) => slots[i] = Some((r, true)),
+            Some(CacheLookup::Quarantined) => {
+                quarantined += 1;
+                todo.push(i);
+            }
+            Some(CacheLookup::Miss) | None => todo.push(i),
         }
     }
 
@@ -350,7 +358,10 @@ pub fn run_sweep(spec: &SweepSpec, use_cache: bool) -> crate::Result<SweepOutcom
                     break;
                 }
                 let i = todo[k];
-                let outcome = compute_point_with(&points[i], sim_backend).and_then(|r| {
+                let outcome = run_point_guarded(&points[i], || {
+                    compute_point_with(&points[i], sim_backend)
+                })
+                .and_then(|r| {
                     if let Some(c) = &cache {
                         c.store(&points[i], &r)?;
                     }
@@ -399,7 +410,57 @@ pub fn run_sweep(spec: &SweepSpec, use_cache: bool) -> crate::Result<SweepOutcom
         rows,
         computed,
         cached,
+        quarantined,
     })
+}
+
+/// The `key=value` overrides that re-run exactly one grid point — the
+/// one-command repro printed when a worker panics.
+fn repro_overrides(p: &SweepPoint) -> String {
+    format!(
+        "geometries={}x{} theta={} flows={} engines={} seeds={} per_cluster={} epochs={}",
+        p.p,
+        p.q,
+        p.theta.name(),
+        p.flow.name(),
+        p.engine.name(),
+        p.seed,
+        p.per_cluster,
+        p.epochs
+    )
+}
+
+/// Render a panic payload (the `Box<dyn Any>` from `catch_unwind`).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Run one point's measurement behind a panic guard. A panicking point
+/// (a geometry assert deep in synthesis, an engine invariant trip, …)
+/// becomes a loud `Err` that names the point's canonical key and the
+/// exact `tnn7 sweep` overrides reproducing just that point — instead of
+/// unwinding through the worker scope and aborting the whole process with
+/// no pointer to the offending point. The executor's first-error protocol
+/// then stops the remaining workers cleanly at their next point boundary.
+fn run_point_guarded(
+    point: &SweepPoint,
+    compute: impl FnOnce() -> crate::Result<PointResult>,
+) -> crate::Result<PointResult> {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(compute)) {
+        Ok(outcome) => outcome,
+        Err(payload) => Err(anyhow::anyhow!(
+            "worker panicked at sweep point [{}]: {}\n  repro: tnn7 sweep {} --no-cache",
+            point.canonical(),
+            panic_message(&*payload),
+            repro_overrides(point),
+        )),
+    }
 }
 
 #[cfg(test)]
@@ -483,6 +544,72 @@ mod tests {
         let doc = r.to_kv();
         let back = PointResult::from_kv(&p, &doc).unwrap();
         assert_eq!(back, r, "shortest-roundtrip floats must survive kv");
+    }
+
+    #[test]
+    fn panicking_point_reports_canonical_key_and_repro_command() {
+        let pt = small_point(EngineKind::Golden);
+        let err = run_point_guarded(&pt, || panic!("injected failure"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("injected failure"), "payload surfaced: {err}");
+        assert!(err.contains(&pt.canonical()), "canonical key named: {err}");
+        assert!(err.contains("repro: tnn7 sweep"), "repro command: {err}");
+        assert!(err.contains("geometries=6x2") && err.contains("seeds=11"));
+        // String payloads (panic with a formatted message) surface too.
+        let err = run_point_guarded(&pt, || panic!("code {}", 7))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("code 7"));
+        // And a clean compute passes straight through the guard.
+        let ok = run_point_guarded(&pt, || compute_point(&pt)).unwrap();
+        assert_eq!(ok.items, 6);
+    }
+
+    #[test]
+    fn truncated_cache_entry_recomputes_once_and_quarantines() {
+        let base = std::env::temp_dir()
+            .join(format!("tnn7_exec_quarantine_{}", std::process::id()));
+        std::fs::remove_dir_all(&base).ok();
+        let spec = SweepSpec {
+            name: "quarantine-test".into(),
+            geometries: vec![(6, 2)],
+            flows: vec![Flow::Tnn7],
+            engines: vec![EngineKind::Golden],
+            seeds: vec![11],
+            per_cluster: 3,
+            epochs: 1,
+            threads: 1,
+            cache_dir: base.join("cache"),
+            out_dir: base.join("out"),
+            ..SweepSpec::default()
+        };
+        let first = run_sweep(&spec, true).unwrap();
+        assert_eq!(
+            (first.computed, first.cached, first.quarantined),
+            (1, 0, 0),
+            "cold run computes the point"
+        );
+        // Truncate the entry mid-file (a crashed writer's torn state).
+        let cache = PointCache::open(&spec.cache_dir).unwrap();
+        let point = &spec.points()[0];
+        let path = cache.path(point);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let cut = text.find("train_ms").expect("entry carries train_ms");
+        std::fs::write(&path, &text[..cut]).unwrap();
+        let second = run_sweep(&spec, true).unwrap();
+        assert_eq!(
+            (second.computed, second.cached, second.quarantined),
+            (1, 0, 1),
+            "exactly one recompute plus one quarantine"
+        );
+        assert!(cache.corrupt_path(point).exists());
+        // Deterministic fields of the recompute match the cold run.
+        assert_eq!(first.rows[0].result.purity, second.rows[0].result.purity);
+        // The recompute re-stored cleanly: a third run is fully warm.
+        let third = run_sweep(&spec, true).unwrap();
+        assert_eq!((third.computed, third.cached, third.quarantined), (0, 1, 0));
+        std::fs::remove_dir_all(&base).ok();
     }
 
     #[test]

@@ -31,7 +31,7 @@ pub mod exec;
 pub mod report;
 pub mod spec;
 
-pub use cache::{PointCache, CACHE_VERSION};
+pub use cache::{CacheLookup, PointCache, CACHE_VERSION};
 pub use exec::{
     compute_point, compute_point_with, run_sweep, PointResult, SweepOutcome, SweepRow,
     SWEEP_ALPHA_CYCLES, SWEEP_ALPHA_WORDS,

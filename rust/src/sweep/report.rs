@@ -143,6 +143,7 @@ pub fn to_json(outcome: &SweepOutcome) -> Json {
         .set("points", outcome.rows.len())
         .set("computed", outcome.computed)
         .set("cached", outcome.cached)
+        .set("quarantined", outcome.quarantined)
         .set(
             "rows",
             Json::Arr(
@@ -209,12 +210,20 @@ pub fn to_json(outcome: &SweepOutcome) -> Json {
 /// Print the human-readable sweep summary: the point table, frontier
 /// membership, the runtime-ratio curve and cache accounting.
 pub fn print_summary(outcome: &SweepOutcome) {
+    // The quarantine note goes after the closing paren: the "(N computed,
+    // M cached)" shape is a CI grep target and must stay byte-stable on
+    // clean runs.
     println!(
-        "Sweep '{}': {} points ({} computed, {} cached)",
+        "Sweep '{}': {} points ({} computed, {} cached){}",
         outcome.spec.name,
         outcome.rows.len(),
         outcome.computed,
-        outcome.cached
+        outcome.cached,
+        if outcome.quarantined > 0 {
+            format!(", {} corrupt cache entries quarantined", outcome.quarantined)
+        } else {
+            String::new()
+        },
     );
     println!(
         "{:<10} {:>5} | {:<6} {:<8} {:>4} | {:>10} {:>9} {:>8} {:>11} | {:>6} {:>7} | {:>9}",
@@ -317,6 +326,7 @@ mod tests {
             spec: SweepSpec::default(),
             computed: rows.len(),
             cached: 0,
+            quarantined: 0,
             rows,
         }
     }
@@ -376,5 +386,6 @@ mod tests {
         assert!(j.contains("\"error_pct\""));
         assert!(j.contains("\"alpha_measured\""));
         assert!(j.contains("\"cached\""));
+        assert!(j.contains("\"quarantined\""));
     }
 }

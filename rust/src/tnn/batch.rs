@@ -437,6 +437,13 @@ impl BatchedColumn {
         &self.col
     }
 
+    /// Mutable access to the wrapped column — fault-injection campaigns
+    /// flip weight bits in place (safe: the kernel reads the weight matrix
+    /// afresh on every gamma cycle, no cached copies).
+    pub fn column_mut(&mut self) -> &mut Column {
+        &mut self.col
+    }
+
     /// Inference only: the post-WTA output volley (bit-exact with
     /// `Column::infer(..).output`).
     pub fn infer(&mut self, xs: &[SpikeTime]) -> &[SpikeTime] {

@@ -1,0 +1,143 @@
+//! Weight-memory fault injection for the behavioral engines.
+//!
+//! The gate-level campaigns ([`crate::gates::fault`]) strike arbitrary
+//! nets and macro state; this module models the complementary — and in an
+//! always-on edge deployment, dominant — failure mode at the behavioral
+//! level: bit flips in the synaptic weight memory of a [`Column`] (and
+//! anything wrapping one: [`super::batch::BatchedColumn`],
+//! [`super::network::TnnNetwork`]).
+//!
+//! Sampling follows the crate's frozen determinism discipline: flip `f`
+//! draws **only** from `Rng64::seed_from_u64(seed).split_stream(f)`, so a
+//! weight-flip campaign is reproducible from its printed seed alone,
+//! independent of engine, thread count and batch geometry. Flips are XORs
+//! of one weight bit (`bit < weight_bits`), so a flipped weight always
+//! stays in `0..=w_max` — no engine invariant is violated, only accuracy.
+
+use super::column::Column;
+use super::network::TnnNetwork;
+use crate::util::Rng64;
+
+/// One weight-memory bit flip: XOR bit `bit` of synapse `syn`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WeightFlip {
+    /// Flat synapse index (row-major within a column; global across
+    /// columns for network campaigns).
+    pub syn: usize,
+    /// Weight bit to invert (`< weight_bits`).
+    pub bit: u8,
+}
+
+/// Sample `flips` weight-bit flips over a memory of `n_syn` synapses with
+/// `weight_bits`-bit weights. Flip `f` draws (synapse, then bit) from
+/// `Rng64::seed_from_u64(seed).split_stream(f)` — the frozen fault-site
+/// sampling discipline shared with [`crate::gates::fault::sample_faults`].
+pub fn sample_weight_flips(
+    n_syn: usize,
+    weight_bits: u8,
+    flips: usize,
+    seed: u64,
+) -> Vec<WeightFlip> {
+    assert!(n_syn > 0, "empty weight memory");
+    assert!(weight_bits >= 1, "weights carry at least one bit");
+    let root = Rng64::seed_from_u64(seed);
+    (0..flips)
+        .map(|f| {
+            let mut rng = root.split_stream(f as u64);
+            let syn = rng.gen_range(0, n_syn);
+            let bit = rng.gen_range(0, weight_bits as usize) as u8;
+            WeightFlip { syn, bit }
+        })
+        .collect()
+}
+
+/// Apply flips to a raw weight array (XOR; repeated hits on the same bit
+/// cancel, exactly like real double upsets).
+pub fn apply_weight_flips(ws: &mut [u8], flips: &[WeightFlip]) {
+    for f in flips {
+        ws[f.syn] ^= 1 << f.bit;
+    }
+}
+
+/// Sample and apply `flips` seeded weight-bit flips to a column's weight
+/// memory; returns the flip list for reporting/reversal.
+pub fn flip_column_weights(col: &mut Column, flips: usize, seed: u64) -> Vec<WeightFlip> {
+    let n = col.synapse_count();
+    let bits = col.params().weight_bits;
+    let fs = sample_weight_flips(n, bits, flips, seed);
+    apply_weight_flips(col.weights_mut(), &fs);
+    fs
+}
+
+/// Sample and apply `flips` seeded weight-bit flips across a network's
+/// whole weight memory (global synapse index: layers in order, columns in
+/// order, row-major within each column); returns the flip list.
+pub fn flip_network_weights(net: &mut TnnNetwork, flips: usize, seed: u64) -> Vec<WeightFlip> {
+    let total: usize = net
+        .layers()
+        .iter()
+        .flat_map(|l| l.columns().iter())
+        .map(|c| c.synapse_count())
+        .sum();
+    let bits = net.layers()[0].columns()[0].params().weight_bits;
+    let fs = sample_weight_flips(total, bits, flips, seed);
+    for f in &fs {
+        let mut base = 0usize;
+        'place: for layer in net.layers_mut() {
+            for col in layer.columns_mut() {
+                let n = col.synapse_count();
+                if f.syn < base + n {
+                    col.weights_mut()[f.syn - base] ^= 1 << f.bit;
+                    break 'place;
+                }
+                base += n;
+            }
+        }
+    }
+    fs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tnn::params::TnnParams;
+
+    #[test]
+    fn sampled_flips_are_reproducible_and_in_range() {
+        let a = sample_weight_flips(24, 3, 16, 7);
+        let b = sample_weight_flips(24, 3, 16, 7);
+        assert_eq!(a, b);
+        for f in &a {
+            assert!(f.syn < 24);
+            assert!(f.bit < 3);
+        }
+        assert_ne!(a, sample_weight_flips(24, 3, 16, 8));
+    }
+
+    #[test]
+    fn column_flips_stay_within_w_max_and_are_reversible() {
+        let mut rng = Rng64::seed_from_u64(5);
+        let params = TnnParams::default();
+        let w_max = params.w_max();
+        let mut col = Column::with_random_weights(6, 3, 5, params, &mut rng);
+        let before = col.weights().to_vec();
+        let fs = flip_column_weights(&mut col, 10, 0xF11F);
+        assert_eq!(fs.len(), 10);
+        assert!(col.weights().iter().all(|&w| w <= w_max));
+        // XOR faults are self-inverse: re-applying the same flip list
+        // restores the memory exactly.
+        apply_weight_flips(col.weights_mut(), &fs);
+        assert_eq!(col.weights(), &before[..]);
+    }
+
+    #[test]
+    fn double_hit_on_the_same_bit_cancels() {
+        let mut ws = vec![0b101u8; 4];
+        let fs = [
+            WeightFlip { syn: 2, bit: 1 },
+            WeightFlip { syn: 2, bit: 1 },
+        ];
+        apply_weight_flips(&mut ws, &fs);
+        assert_eq!(ws, vec![0b101u8; 4]);
+    }
+}

@@ -36,6 +36,7 @@
 pub mod batch;
 pub mod column;
 pub mod encode;
+pub mod fault;
 pub mod layer;
 pub mod network;
 pub mod neuron;
@@ -48,6 +49,7 @@ pub mod wta;
 pub use batch::{BatchedColumn, ColumnKernel, StdpTables, VolleyBatch};
 pub use column::Column;
 pub use encode::{encode_intensity, encode_onoff, encode_series};
+pub use fault::{flip_column_weights, flip_network_weights, WeightFlip};
 pub use layer::{ColumnLayer, ReceptiveField};
 pub use network::{TnnNetwork, VoteClassifier};
 pub use params::TnnParams;

@@ -90,6 +90,7 @@ SCHEMAS = {
         "points": None,
         "computed": None,
         "cached": None,
+        "quarantined": None,
         "rows": [
             {
                 "p": None,
@@ -112,6 +113,51 @@ SCHEMAS = {
         ],
         "pareto": {"power_error": None, "area_error": None, "edp_error": None},
         "synth_runtime_ratio": None,
+    },
+    # Fault-injection campaign artifact (benches/fault_campaign.rs wraps
+    # harness::faults_json with a per-backend timing block; the timed
+    # backend names vary with the matrix, so "bench" is presence-only).
+    "BENCH_faults.json": {
+        "seed": None,
+        "design": None,
+        "p": None,
+        "q": None,
+        "theta": None,
+        "stuck": None,
+        "seu": None,
+        "items": None,
+        "backend": None,
+        "gate": {
+            "masked": None,
+            "latent": None,
+            "propagated": None,
+            "faults": None,
+            "winner_mismatch_faults": None,
+            "backends_agree": None,
+            "wall_ms": None,
+            "by_site": [
+                {
+                    "site": None,
+                    "masked": None,
+                    "latent": None,
+                    "propagated": None,
+                }
+            ],
+        },
+        "ucr_flips": [
+            {"flips": None, "memory_bits": None, "changed": None, "items": None}
+        ],
+        "mnist_flips": [
+            {
+                "flips": None,
+                "memory_bits": None,
+                "correct": None,
+                "baseline_correct": None,
+                "samples": None,
+            }
+        ],
+        "fast": None,
+        "bench": None,
     },
 }
 
