@@ -1,0 +1,220 @@
+//! Netlist-optimizer payoff: the inference `PassPipeline` (`gates::opt`)
+//! measured end to end on the flagship 82×2 TwoLeadECG column and a 16×8
+//! (128-synapse) MNIST-layer-shaped geometry — instruction counts before
+//! and after specialization, compile time with and without the pipeline,
+//! and interpreted vs compiled vs compiled+optimized throughput under the
+//! same inference-shaped stimulus (BRV inputs tied low, exactly what the
+//! optimizer was told to assume).
+//!
+//! Every configuration simulates the same number of lane-cycles per
+//! iteration, and the headline metric is **net·lane-cycles/sec computed
+//! with the unoptimized design's net count** for every row — the
+//! optimized program does strictly less work for the same semantic
+//! volume, so its rate reads as an end-to-end speedup, not as a smaller
+//! denominator. Toggle equivalence on all retained nets is asserted
+//! before any timing. Records the matrix in `BENCH_opt.json`.
+//!
+//! Run with `cargo bench --bench netlist_opt` (set `TNN7_BENCH_FAST=1`
+//! for a CI-speed configuration).
+
+use std::collections::HashSet;
+
+use tnn7::gates::column_design::{build_column, BrvSource, ColumnDesign};
+use tnn7::gates::{CompiledProgram, CompiledSim, NetId, Netlist, PassPipeline, WordSimulator};
+use tnn7::util::bench::{black_box, Bencher};
+use tnn7::util::json::Json;
+use tnn7::util::Rng64;
+
+/// The tied-low BRV input set of an `Inputs`-sourced column.
+fn tied_brvs(d: &ColumnDesign) -> HashSet<NetId> {
+    d.brv_case
+        .iter()
+        .flatten()
+        .chain(d.brv_stab.iter().flatten())
+        .copied()
+        .collect()
+}
+
+/// Interpreted throughput run: sparse Bernoulli(1/8) pulses on every
+/// non-tied input, tied inputs held low, `lane_cycles / 64` passes.
+fn run_word(nl: &Netlist, tied: &HashSet<NetId>, lane_cycles: u64, seed: u64) -> u64 {
+    let mut sim = WordSimulator::new(nl).unwrap();
+    let mut rng = Rng64::seed_from_u64(seed);
+    for _ in 0..lane_cycles / 64 {
+        for (_, id) in &nl.inputs {
+            let id = *id;
+            if tied.contains(&id) {
+                sim.set_input_net(id, 0);
+            } else {
+                sim.set_input_net(id, rng.next_u64() & rng.next_u64() & rng.next_u64());
+            }
+        }
+        sim.cycle();
+    }
+    sim.lane_cycles()
+}
+
+/// Compiled throughput run under the same stimulus plan.
+fn run_compiled(
+    nl: &Netlist,
+    tied: &HashSet<NetId>,
+    lane_cycles: u64,
+    words: usize,
+    threads: usize,
+    seed: u64,
+) -> u64 {
+    let mut sim = CompiledSim::new(nl, words, threads).unwrap();
+    let mut rng = Rng64::seed_from_u64(seed);
+    for _ in 0..lane_cycles / (64 * words as u64) {
+        for (_, id) in &nl.inputs {
+            let id = *id;
+            for w in 0..words {
+                if tied.contains(&id) {
+                    sim.set_input_net(id, w, 0);
+                } else {
+                    sim.set_input_net(id, w, rng.next_u64() & rng.next_u64() & rng.next_u64());
+                }
+            }
+        }
+        sim.cycle();
+    }
+    sim.lane_cycles()
+}
+
+fn main() {
+    let fast = std::env::var("TNN7_BENCH_FAST").is_ok();
+    // Lane-cycles per logical iteration: a multiple of 64·W for every
+    // tested W, so all configurations do identical semantic work.
+    let lane_cycles: u64 = if fast { 512 } else { 4096 };
+    let (words, threads): (usize, usize) = if fast { (2, 1) } else { (4, 2) };
+    let geoms: &[(&str, usize, usize)] = &[("TwoLeadECG-82x2", 82, 2), ("mnist-layer-16x8", 16, 8)];
+
+    let b = Bencher::from_env();
+    let mut design_rows: Vec<Json> = Vec::new();
+    for &(name, p, q) in geoms {
+        // BRVs as primary inputs: that is the netlist the inference
+        // assumptions specialize (the LFSR variant has nothing to tie).
+        let d = build_column(p, q, (p as u32 * 7) / 4, BrvSource::Inputs);
+        let nl = &d.netlist;
+        let tied = tied_brvs(&d);
+
+        // Compile both programs, timing each lowering once (the engine
+        // interns them per process, so this is a one-off cost in practice).
+        let t0 = std::time::Instant::now();
+        let full = CompiledProgram::compile(nl).unwrap();
+        let compile_ms_full = t0.elapsed().as_secs_f64() * 1e3;
+        let pipeline = PassPipeline::inference(d.inference_assumptions(), d.keep_set());
+        let t0 = std::time::Instant::now();
+        let (optp, _remap) = CompiledProgram::compile_opt(nl, &pipeline).unwrap();
+        let compile_ms_opt = t0.elapsed().as_secs_f64() * 1e3;
+        let (od, remap) = d.optimize_inference().unwrap();
+        let cut = 1.0 - optp.instr_count() as f64 / full.instr_count() as f64;
+        println!(
+            "{name}: {} nets -> {}, {} instrs -> {} ({:.1}% cut), compile {compile_ms_full:.1} ms -> {compile_ms_opt:.1} ms",
+            nl.len(),
+            od.netlist.len(),
+            full.instr_count(),
+            optp.instr_count(),
+            cut * 100.0
+        );
+        if p * q >= 128 {
+            assert!(
+                cut >= 0.25,
+                "{name}: acceptance floor is a 25% instruction cut, got {:.1}%",
+                cut * 100.0
+            );
+        }
+
+        // Equivalence guard before any timing: identical stimulus draws,
+        // toggle counters bit-exact on every retained net.
+        {
+            let mut c_o = CompiledSim::new(nl, 1, 1).unwrap();
+            let mut c_p = CompiledSim::new(&od.netlist, 1, 1).unwrap();
+            let mut rng = Rng64::seed_from_u64(3);
+            for _ in 0..16 {
+                for (_, id) in &nl.inputs {
+                    let id = *id;
+                    if tied.contains(&id) {
+                        c_o.set_input_net(id, 0, 0);
+                        continue;
+                    }
+                    let w = rng.next_u64() & rng.next_u64() & rng.next_u64();
+                    c_o.set_input_net(id, 0, w);
+                    c_p.set_input_net(remap.net(id).unwrap(), 0, w);
+                }
+                c_o.cycle();
+                c_p.cycle();
+            }
+            assert_eq!(
+                &remap.translate_per_net(c_o.toggles())[..],
+                c_p.toggles(),
+                "{name}: optimized toggles diverge on retained nets"
+            );
+        }
+
+        // One shared denominator: the unoptimized design's net count.
+        let rate = |median_ns: f64| nl.len() as f64 * lane_cycles as f64 / (median_ns * 1e-9);
+        let s_word = b.bench(&format!("interpreted bit-parallel-64 ({name})"), || {
+            black_box(run_word(nl, &tied, lane_cycles, 7))
+        });
+        println!("{}", s_word.report());
+        let s_full = b.bench(
+            &format!("compiled W={words} threads={threads} ({name})"),
+            || black_box(run_compiled(nl, &tied, lane_cycles, words, threads, 7)),
+        );
+        println!("{}", s_full.report());
+        let none = HashSet::new();
+        let s_opt = b.bench(
+            &format!("compiled+opt W={words} threads={threads} ({name})"),
+            || black_box(run_compiled(&od.netlist, &none, lane_cycles, words, threads, 7)),
+        );
+        println!("{}", s_opt.report());
+        println!(
+            "  => interpreted {:.2e}, compiled {:.2e}, compiled+opt {:.2e} net·lane-cycles/s ({:.2}x over compiled)",
+            rate(s_word.median_ns()),
+            rate(s_full.median_ns()),
+            rate(s_opt.median_ns()),
+            s_full.median_ns() / s_opt.median_ns()
+        );
+
+        design_rows.push(
+            Json::obj()
+                .set("design", name)
+                .set("p", p)
+                .set("q", q)
+                .set("nets", nl.len())
+                .set("nets_optimized", od.netlist.len())
+                .set("instr_full", full.instr_count())
+                .set("instr_opt", optp.instr_count())
+                .set("instr_cut_pct", cut * 100.0)
+                .set("compile_ms_full", compile_ms_full)
+                .set("compile_ms_opt", compile_ms_opt)
+                .set("lane_cycles_per_iter", lane_cycles as f64)
+                .set("words", words)
+                .set("threads", threads)
+                .set(
+                    "interpreted",
+                    Json::obj()
+                        .set("median_ns", s_word.median_ns())
+                        .set("net_lane_cycles_per_sec", rate(s_word.median_ns())),
+                )
+                .set(
+                    "compiled",
+                    Json::obj()
+                        .set("median_ns", s_full.median_ns())
+                        .set("net_lane_cycles_per_sec", rate(s_full.median_ns())),
+                )
+                .set(
+                    "compiled_opt",
+                    Json::obj()
+                        .set("median_ns", s_opt.median_ns())
+                        .set("net_lane_cycles_per_sec", rate(s_opt.median_ns()))
+                        .set("speedup_vs_compiled", s_full.median_ns() / s_opt.median_ns()),
+                ),
+        );
+    }
+
+    let json = Json::obj().set("designs", Json::Arr(design_rows));
+    std::fs::write("BENCH_opt.json", json.to_pretty()).expect("write BENCH_opt.json");
+    println!("wrote BENCH_opt.json");
+}

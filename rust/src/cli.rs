@@ -72,9 +72,10 @@ pub const COMMANDS: &[CommandSpec] = &[
             "key=value        spec overrides: name=, geometries=8x2,12x2, datasets=TwoLeadECG,",
             "                 theta=default|sparse|fixed:<n>, flows=asap7,tnn7,",
             "                 engines=golden,batched,gate, seeds=, per_cluster=, epochs=,",
-            "                 threads=, cache_dir=, out_dir=, sim_backend=, sim_words=",
-            "                 (sim_backend/sim_words are execution knobs like threads=:",
-            "                 results and cache keys are identical under every backend)",
+            "                 threads=, cache_dir=, out_dir=, sim_backend=, sim_words=,",
+            "                 opt=none|inference (compiled-backend netlist optimization)",
+            "                 (sim_backend/sim_words/opt are execution knobs like threads=:",
+            "                 results and cache keys are identical under every backend/level)",
         ],
     },
     CommandSpec {
@@ -223,6 +224,7 @@ mod tests {
             "out_dir=o",
             "sim_backend=compiled",
             "sim_words=4",
+            "opt=inference",
         ] {
             spec.apply_overrides(&[kv.to_string()])
                 .unwrap_or_else(|e| panic!("advertised sweep key {kv:?} rejected: {e}"));

@@ -129,6 +129,17 @@ impl Engine<'_> {
         }
     }
 
+    /// Select the netlist optimization level behind the gate engine's
+    /// compiled batched sweeps ([`GateColumn::set_opt_level`]); a no-op
+    /// for every other engine. Like [`Engine::set_sim_backend`], an
+    /// execution knob: winners are bit-exact across levels, so sweep
+    /// cache keys stay opt-stable.
+    pub fn set_opt_level(&mut self, opt: crate::gates::OptLevel) {
+        if let Engine::Gate(g) = self {
+            g.set_opt_level(opt);
+        }
+    }
+
     /// Inference-only winners over a whole item set. The gate engine routes
     /// through its batched netlist sweep ([`GateColumn::infer_batch`] — 64
     /// interpreter lanes or `words × 64` compiled lanes per pass, bit-exact

@@ -27,6 +27,7 @@
 
 use super::macros9::MacroKind;
 use super::netlist::{NetBuilder, NetId, Netlist};
+use super::opt::{KeepSet, NetRemap, OptAssumptions, PassPipeline};
 use super::sim::Simulator;
 use crate::tnn::params::TnnParams;
 use crate::tnn::spike::SpikeTime;
@@ -71,6 +72,83 @@ pub struct ColumnDesign {
     pub brv_stab: Vec<[NetId; 8]>,
 }
 
+impl ColumnDesign {
+    /// The explicit keep-set for the netlist optimizer: every net the
+    /// engines stimulate or observe by id (`in_pulse`, `grst`,
+    /// `out_spike`, `fire`). Monitored nets that are primary outputs
+    /// (the `win[i]` spike-encode windows) are implicit liveness roots
+    /// already; listing the engine-addressed nets here makes the
+    /// "optimization cannot delete it" contract independent of how the
+    /// port list evolves.
+    pub fn keep_set(&self) -> KeepSet {
+        let mut keep = KeepSet::from_nets(self.in_pulse.iter().copied());
+        keep.insert(self.grst);
+        for &n in &self.out_spike {
+            keep.insert(n);
+        }
+        for &n in &self.fire {
+            keep.insert(n);
+        }
+        keep
+    }
+
+    /// The batched-inference protocol's optimizer assumptions: every BRV
+    /// input (`brv_case` + `brv_stab`) is tied low, exactly as the gate
+    /// engine and the fault campaigns silence them. Empty for
+    /// `BrvSource::Lfsr` columns (no BRV inputs to tie).
+    pub fn inference_assumptions(&self) -> OptAssumptions {
+        OptAssumptions::tied_low(
+            self.brv_case
+                .iter()
+                .flatten()
+                .chain(self.brv_stab.iter().flatten())
+                .copied(),
+        )
+    }
+
+    /// Run the inference [`PassPipeline`] over the column and return the
+    /// optimized design (all stimulus/observation handles translated via
+    /// the remap) plus the remap itself. The BRV handle vectors come back
+    /// empty: constant propagation rewires their readers and dead-code
+    /// elimination removes the tied inputs, so there is nothing left to
+    /// silence.
+    pub fn optimize_inference(&self) -> Result<(ColumnDesign, NetRemap), String> {
+        let pipeline = PassPipeline::inference(self.inference_assumptions(), self.keep_set());
+        let (netlist, remap) = pipeline.run(&self.netlist)?;
+        let net = |n: NetId| remap.net(n).expect("keep-set net survived optimization");
+        let d = ColumnDesign {
+            netlist,
+            p: self.p,
+            q: self.q,
+            theta: self.theta,
+            in_pulse: self.in_pulse.iter().map(|&n| net(n)).collect(),
+            grst: net(self.grst),
+            out_spike: self.out_spike.iter().map(|&n| net(n)).collect(),
+            fire: self.fire.iter().map(|&n| net(n)).collect(),
+            syn_inst: self
+                .syn_inst
+                .iter()
+                .map(|&i| {
+                    remap
+                        .macro_inst(i)
+                        .expect("weight-readout instance survived optimization")
+                })
+                .collect(),
+            brv_case: Vec::new(),
+            brv_stab: Vec::new(),
+        };
+        debug_assert!(
+            self.brv_case
+                .iter()
+                .flatten()
+                .chain(self.brv_stab.iter().flatten())
+                .all(|&n| remap.net(n).is_none()),
+            "tied-low BRV inputs should fold away entirely"
+        );
+        Ok((d, remap))
+    }
+}
+
 /// Build a p×q column netlist.
 pub fn build_column(p: usize, q: usize, theta: u32, brv: BrvSource) -> ColumnDesign {
     assert!(p >= 1 && q >= 1);
@@ -91,7 +169,9 @@ pub fn build_column(p: usize, q: usize, theta: u32, brv: BrvSource) -> ColumnDes
         let sp = b.macro_inst(MacroKind::Edge2Pulse, vec![e, grst])[0];
         spike.push(sp);
         // Spike-encoding window (Fig. 8) — part of the real column's encode
-        // block; monitored so optimization cannot delete it.
+        // block; monitored as a primary output, which roots it in the
+        // optimizer's liveness sweep (see `ColumnDesign::keep_set` for the
+        // non-port nets under the same contract).
         let win = b.macro_inst(MacroKind::SpikeGen, vec![x, grst])[0];
         b.output(&format!("win[{i}]"), win);
     }

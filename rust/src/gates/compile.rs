@@ -153,6 +153,23 @@ pub struct CompiledProgram {
 }
 
 impl CompiledProgram {
+    /// Run an optimizer [`PassPipeline`](super::opt::PassPipeline) over
+    /// `nl`, then lower the optimized netlist. Returns the program
+    /// together with the composed [`NetRemap`](super::opt::NetRemap) so
+    /// callers can translate net ids (stimulus, observation, fault
+    /// sites, per-net toggle/α vectors) into the optimized space.
+    ///
+    /// The program is *only* equivalent to the unoptimized one under
+    /// stimulus that honors the pipeline's `OptAssumptions` (tied-low
+    /// inputs actually held low), and only on nets the remap retains.
+    pub fn compile_opt(
+        nl: &Netlist,
+        pipeline: &super::opt::PassPipeline,
+    ) -> Result<(CompiledProgram, super::opt::NetRemap), String> {
+        let (optimized, remap) = pipeline.run(nl)?;
+        Ok((Self::compile(&optimized)?, remap))
+    }
+
     /// Lower a netlist's level-packed schedule into a compiled program.
     /// Runs [`Netlist::verify`] first, so dangling nets, inconsistent
     /// macro pin tables and combinational cycles all fail loudly here

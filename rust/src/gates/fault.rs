@@ -36,6 +36,7 @@ use super::column_design::ColumnDesign;
 use super::compile::CompiledSim;
 use super::macros9::MacroState;
 use super::netlist::{Gate, NetId, Netlist};
+use super::opt::NetRemap;
 use super::sim::Simulator;
 use super::wordsim::{WordSimulator, LANES};
 use super::SimBackend;
@@ -71,6 +72,31 @@ pub enum GateFault {
         /// Global unit cycle of the strike.
         cycle: u64,
     },
+}
+
+impl GateFault {
+    /// Translate this fault's site through a netlist-optimizer
+    /// [`NetRemap`]: the same fault expressed in the optimized netlist's
+    /// ids, or `None` when the site (net or macro instance) was optimized
+    /// away — a fault on removed logic is masked by construction, since
+    /// removed logic is unreachable from every retained net.
+    pub fn remap(&self, remap: &NetRemap) -> Option<GateFault> {
+        match *self {
+            GateFault::StuckAt { net, value } => remap
+                .net(net)
+                .map(|net| GateFault::StuckAt { net, value }),
+            GateFault::SeuNet { net, cycle } => {
+                remap.net(net).map(|net| GateFault::SeuNet { net, cycle })
+            }
+            GateFault::SeuMacroBit { inst, bit, cycle } => {
+                remap.macro_inst(inst as u32).map(|inst| GateFault::SeuMacroBit {
+                    inst: inst as usize,
+                    bit,
+                    cycle,
+                })
+            }
+        }
+    }
 }
 
 /// How a fault manifested relative to the fault-free reference lane.

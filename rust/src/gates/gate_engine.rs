@@ -27,11 +27,17 @@
 //! interned in a process-lifetime cache ([`cached_design`]): each (p, q, θ)
 //! geometry is built once and shared by every engine, test and sweep that
 //! asks for it — the in-memory analogue of an AOT-compiled hardware
-//! artifact.
+//! artifact. Compiled programs get the same treatment ([`cached_program`]):
+//! each (p, q, θ, [`OptLevel`]) is levelized, optionally optimizer-reduced
+//! and lowered to a [`CompiledProgram`](super::compile::CompiledProgram)
+//! once per process, so switching lane-block width or worker count on a
+//! `GateColumn` re-allocates executor state but never recompiles.
 
 use super::column_design::{build_column, BrvSource, ColumnDesign, ColumnSim};
-use super::compile::CompiledSim;
+use super::compile::{CompiledProgram, CompiledSim};
 use super::macros9::MacroState;
+use super::netlist::NetId;
+use super::opt::{NetRemap, OptLevel, PassPipeline};
 use super::wordsim::{WordSimulator, LANES};
 use super::SimBackend;
 use crate::tnn::column::Column;
@@ -64,6 +70,97 @@ pub fn cached_design(p: usize, q: usize, theta: u32) -> &'static ColumnDesign {
         .or_insert_with(|| Box::leak(Box::new(build_column(p, q, theta, BrvSource::Inputs))))
 }
 
+/// A compiled column program plus the design's engine-facing handles
+/// (pulse/reset/output nets, weight-readout instances) expressed in the
+/// program's own net-id space — identical to the design's ids under
+/// [`OptLevel::None`], optimizer-renumbered under [`OptLevel::Inference`].
+pub struct ColumnProgram {
+    /// The levelized instruction program the executor clones from.
+    pub prog: CompiledProgram,
+    /// IN(i) pulse input nets, one per synapse line.
+    pub in_pulse: Vec<NetId>,
+    /// The GRST (WTA reset) input net.
+    pub grst: NetId,
+    /// win(j) spike output nets, one per neuron.
+    pub out_spike: Vec<NetId>,
+    /// `SynWeightUpdate` instance index per (i, j) synapse, row-major.
+    pub syn_inst: Vec<u32>,
+    /// BRV input nets that still exist in this program and must be forced
+    /// low before an inference sweep. The full BRV set under
+    /// [`OptLevel::None`]; empty under [`OptLevel::Inference`] once the
+    /// optimizer has folded them away (kept as a list, not an assumption,
+    /// so a partially-folding pipeline would still silence the survivors).
+    pub silence: Vec<NetId>,
+    /// Design-id → program-id translation (identity under
+    /// [`OptLevel::None`]) for toggle reports and fault sites.
+    pub remap: NetRemap,
+}
+
+/// Program-cache key: (p, q, θ, optimization level).
+type ProgramKey = (usize, usize, u32, OptLevel);
+
+fn program_cache() -> &'static Mutex<HashMap<ProgramKey, &'static ColumnProgram>> {
+    static CACHE: OnceLock<Mutex<HashMap<ProgramKey, &'static ColumnProgram>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+fn build_program(d: &ColumnDesign, opt: OptLevel) -> ColumnProgram {
+    let all_brv = || {
+        d.brv_case
+            .iter()
+            .flatten()
+            .chain(d.brv_stab.iter().flatten())
+            .copied()
+    };
+    match opt {
+        OptLevel::None => ColumnProgram {
+            prog: CompiledProgram::compile(&d.netlist).expect("cached design compiles"),
+            in_pulse: d.in_pulse.clone(),
+            grst: d.grst,
+            out_spike: d.out_spike.clone(),
+            syn_inst: d.syn_inst.clone(),
+            silence: all_brv().collect(),
+            remap: NetRemap::identity(d.netlist.len(), d.netlist.macros.len()),
+        },
+        OptLevel::Inference => {
+            let pipeline = PassPipeline::inference(d.inference_assumptions(), d.keep_set());
+            let (prog, remap) = CompiledProgram::compile_opt(&d.netlist, &pipeline)
+                .expect("cached design optimizes and compiles");
+            let keep = |n: NetId| remap.net(n).expect("keep-set net survives optimization");
+            ColumnProgram {
+                in_pulse: d.in_pulse.iter().map(|&n| keep(n)).collect(),
+                grst: keep(d.grst),
+                out_spike: d.out_spike.iter().map(|&n| keep(n)).collect(),
+                syn_inst: d
+                    .syn_inst
+                    .iter()
+                    .map(|&i| remap.macro_inst(i).expect("weight instance survives"))
+                    .collect(),
+                silence: all_brv().filter_map(|n| remap.net(n)).collect(),
+                prog,
+                remap,
+            }
+        }
+    }
+}
+
+/// Build (or fetch) the interned compiled program for a geometry at an
+/// optimization level. Like [`cached_design`], the result is leaked into
+/// the process lifetime on first use: the levelize/optimize/lower pipeline
+/// runs once per (p, q, θ, opt) key, and every [`GateColumn`] that later
+/// changes lane-block width or worker count just clones the instruction
+/// stream into a fresh executor ([`CompiledSim::from_program`]) instead of
+/// recompiling.
+pub fn cached_program(p: usize, q: usize, theta: u32, opt: OptLevel) -> &'static ColumnProgram {
+    // Same poison discipline as `cached_design`: a panicking build leaves
+    // no entry behind, so clear the poison instead of cascading it.
+    let mut map = program_cache()
+        .lock()
+        .unwrap_or_else(|poisoned| poisoned.into_inner());
+    *map.entry((p, q, theta, opt))
+        .or_insert_with(|| Box::leak(Box::new(build_program(cached_design(p, q, theta), opt))))
+}
+
 /// The gate-level column engine: the macro netlist plus a persistent scalar
 /// simulator (synaptic weights live in the `syn_weight_update` macro
 /// states) and a lazily-built word simulator for batched inference sweeps.
@@ -78,6 +175,9 @@ pub struct GateColumn {
     /// Which simulator runs the batched inference sweeps (winners are
     /// bit-exact across backends; this is purely a throughput knob).
     backend: SimBackend,
+    /// Netlist optimization level for the compiled backend (the
+    /// interpreters always run the full netlist).
+    opt: OptLevel,
     params: TnnParams,
     /// All-ones uniforms: `u >= 1` fails every `u < µ` test, so no BRV
     /// fires and a gamma cycle is pure inference.
@@ -120,6 +220,7 @@ impl GateColumn {
             wsim: None,
             csim: None,
             backend: SimBackend::BitParallel64,
+            opt: OptLevel::None,
             params,
             ones: vec![1.0; n],
             u_case: vec![0.0; n],
@@ -192,6 +293,26 @@ impl GateColumn {
     /// The simulator backend batched inference sweeps run on.
     pub fn sim_backend(&self) -> SimBackend {
         self.backend
+    }
+
+    /// Select the netlist optimization level for the compiled backend:
+    /// [`OptLevel::Inference`] runs batched sweeps on the
+    /// inference-specialized program (BRV constant propagation + dead-logic
+    /// elimination + locality scheduling, via [`cached_program`]) instead
+    /// of the full learning netlist. Winners are bit-exact across levels —
+    /// like [`GateColumn::set_sim_backend`], a throughput knob, never a
+    /// semantics knob. Only the `Compiled` backend consults it; the
+    /// interpreter backends always run the full netlist.
+    pub fn set_opt_level(&mut self, opt: OptLevel) {
+        if opt != self.opt {
+            self.opt = opt;
+            self.csim = None; // rebuilt lazily from the other cached program
+        }
+    }
+
+    /// The netlist optimization level the compiled backend runs at.
+    pub fn opt_level(&self) -> OptLevel {
+        self.opt
     }
 
     /// Batched gate-level inference sweep: packs many volleys per pass
@@ -309,7 +430,10 @@ impl GateColumn {
     /// one compiled pass per `words × 64`-volley chunk, levels sharded
     /// across `threads` workers. Same protocol as
     /// [`GateColumn::infer_batch_word`], word by word (see the drift note
-    /// there).
+    /// there), addressed through the interned [`ColumnProgram`] for the
+    /// selected [`OptLevel`] — under [`OptLevel::Inference`] the program's
+    /// nets are optimizer-renumbered and the BRV silencing loop collapses
+    /// to the (normally empty) survivor list.
     fn infer_batch_compiled(
         &mut self,
         volleys: &[&[SpikeTime]],
@@ -320,21 +444,23 @@ impl GateColumn {
         let g = self.params.gamma_cycles;
         let q = d.q;
         let ws = self.sim.weights();
+        let cp = cached_program(d.p, d.q, d.theta, self.opt);
         // Resolve 0 = machine parallelism BEFORE the rebuild check —
         // `CompiledSim::threads()` reports the resolved count, and
-        // comparing it against a raw 0 would recompile every call.
+        // comparing it against a raw 0 would rebuild every call.
         let threads = if threads == 0 {
             std::thread::available_parallelism().map_or(1, |n| n.get())
         } else {
             threads
         };
+        // `set_opt_level` clears `csim`, so an existing executor always
+        // belongs to the current program — only width/workers can drift.
         let rebuild = match &self.csim {
             Some(c) => c.words() != words || c.threads() != threads,
             None => true,
         };
         if rebuild {
-            self.csim =
-                Some(CompiledSim::new(&d.netlist, words, threads).expect("cached design compiles"));
+            self.csim = Some(CompiledSim::from_program(cp.prog.clone(), words, threads));
         }
         let csim = self.csim.as_mut().expect("built above");
         let lanes = words * LANES;
@@ -343,25 +469,16 @@ impl GateColumn {
         for chunk in volleys.chunks(lanes) {
             csim.reset_state();
             // Broadcast the current weights into every lane of every word
-            // and silence the BRV streams (no case ever fires → pure
-            // inference), exactly like the interpreter path.
-            for (k, &inst) in d.syn_inst.iter().enumerate() {
+            // and silence any surviving BRV streams (no case ever fires →
+            // pure inference), exactly like the interpreter path.
+            for (k, &inst) in cp.syn_inst.iter().enumerate() {
                 let mut st = MacroState::default();
                 st.set_weight(ws[k]);
                 csim.set_macro_state_broadcast(inst as usize, &st);
             }
-            for case in &d.brv_case {
-                for &net in case {
-                    for w in 0..words {
-                        csim.set_input_net(net, w, 0);
-                    }
-                }
-            }
-            for stab in &d.brv_stab {
-                for &net in stab {
-                    for w in 0..words {
-                        csim.set_input_net(net, w, 0);
-                    }
+            for &net in &cp.silence {
+                for w in 0..words {
+                    csim.set_input_net(net, w, 0);
                 }
             }
 
@@ -372,7 +489,7 @@ impl GateColumn {
             let mut times = vec![SpikeTime::NONE; chunk.len() * q];
             let mut seen = vec![0u64; q * words];
             for t in 0..g {
-                for (i, &net) in d.in_pulse.iter().enumerate() {
+                for (i, &net) in cp.in_pulse.iter().enumerate() {
                     for w in 0..words {
                         let mut word = 0u64;
                         for (l, volley) in chunk.iter().skip(w * LANES).take(LANES).enumerate() {
@@ -385,10 +502,10 @@ impl GateColumn {
                     }
                 }
                 for w in 0..words {
-                    csim.set_input_net(d.grst, w, if t == g - 1 { !0u64 } else { 0 });
+                    csim.set_input_net(cp.grst, w, if t == g - 1 { !0u64 } else { 0 });
                 }
                 csim.settle();
-                for (j, &net) in d.out_spike.iter().enumerate() {
+                for (j, &net) in cp.out_spike.iter().enumerate() {
                     for w in 0..words {
                         let fresh = csim.get_word(net, w) & !seen[j * words + w];
                         if fresh != 0 {
@@ -524,6 +641,44 @@ mod tests {
             assert_eq!(word[k], gate.infer_winner(v), "volley {k} vs scalar gate");
             assert_eq!(word[k], golden.infer(v).winner, "volley {k} vs golden");
         }
+    }
+
+    #[test]
+    fn optimized_compiled_batch_is_bit_exact_and_leaner() {
+        let mut rng = Rng64::seed_from_u64(9090);
+        let golden = Column::with_random_weights(6, 3, 8, TnnParams::default(), &mut rng);
+        let mut gate = GateColumn::from_column(&golden).unwrap();
+        let volleys: Vec<Vec<SpikeTime>> =
+            (0..100).map(|_| random_volley(6, &mut rng)).collect();
+        let refs: Vec<&[SpikeTime]> = volleys.iter().map(|v| v.as_slice()).collect();
+        let word = gate.infer_batch(&refs);
+
+        gate.set_sim_backend(crate::gates::SimBackend::Compiled { words: 2, threads: 1 });
+        assert_eq!(gate.opt_level(), OptLevel::None);
+        let plain = gate.infer_batch(&refs);
+        gate.set_opt_level(OptLevel::Inference);
+        let lean = gate.infer_batch(&refs);
+        assert_eq!(lean, plain, "opt=inference winners drifted");
+        assert_eq!(lean, word, "opt=inference vs interpreter");
+        // Flipping back rebuilds from the cached unoptimized program.
+        gate.set_opt_level(OptLevel::None);
+        assert_eq!(gate.infer_batch(&refs), word, "opt=none after round-trip");
+
+        let full = cached_program(6, 3, 8, OptLevel::None);
+        let opt = cached_program(6, 3, 8, OptLevel::Inference);
+        assert!(
+            std::ptr::eq(opt, cached_program(6, 3, 8, OptLevel::Inference)),
+            "programs are interned per (geometry, opt) key"
+        );
+        assert!(
+            opt.prog.instr_count() < full.prog.instr_count(),
+            "inference specialization must shrink the instruction stream"
+        );
+        assert!(
+            opt.silence.is_empty(),
+            "every BRV input should fold away under the inference pipeline"
+        );
+        assert!(opt.remap.new_net_count() < opt.remap.old_net_count());
     }
 
     #[test]

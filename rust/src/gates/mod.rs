@@ -14,7 +14,10 @@
 //! gate-level *column engine* that runs real workloads on the macro
 //! netlist behind the `coordinator::Engine` interface ([`gate_engine`]),
 //! plus seeded deterministic fault-injection campaigns (stuck-at, SEU)
-//! that run on all three engines with bit-identical verdicts ([`fault`]).
+//! that run on all three engines with bit-identical verdicts ([`fault`]),
+//! and the netlist optimizer pass pipeline — constant propagation,
+//! dead-logic elimination, locality renumbering — that specializes the
+//! compiled program for inference workloads ([`opt`]).
 
 pub mod column_design;
 pub mod compile;
@@ -22,6 +25,7 @@ pub mod fault;
 pub mod gate_engine;
 pub mod macros9;
 pub mod netlist;
+pub mod opt;
 pub mod sim;
 pub mod wordsim;
 
@@ -30,6 +34,7 @@ pub use fault::{CampaignResult, FaultClass, FaultCounts, FaultOutcome, GateFault
 pub use gate_engine::GateColumn;
 pub use macros9::MacroKind;
 pub use netlist::{Gate, NetBuilder, NetId, Netlist};
+pub use opt::{KeepSet, NetRemap, OptAssumptions, OptLevel, Pass, PassPipeline};
 pub use sim::Simulator;
 pub use wordsim::{WordSimulator, LANES};
 

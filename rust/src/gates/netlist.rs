@@ -78,7 +78,7 @@ impl Gate {
 }
 
 /// A hard-macro instance (one of the nine TNN7 macros).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct MacroInst {
     /// Which of the nine TNN7 macros is instantiated.
     pub kind: MacroKind,
@@ -90,7 +90,7 @@ pub struct MacroInst {
 }
 
 /// A gate-level netlist.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct Netlist {
     /// Design name (labels reports and simulators).
     pub name: String,

@@ -1,0 +1,1128 @@
+//! Netlist optimizer pass pipeline: constant propagation seeded from
+//! `Gate::Const` nets and caller-declared tied-low inputs, dead-net /
+//! dead-instance elimination behind an explicit keep-set, and a
+//! locality-aware renumbering of the levelized schedule — with every pass
+//! returning a [`NetRemap`] so per-net artifacts (toggle reports, measured
+//! α vectors, fault sites) translate onto the optimized netlist.
+//!
+//! The pipeline is held to the repo's differential standard: on every
+//! *retained* net, values and toggle counts are **bit-exact** with the
+//! unoptimized netlist under any stimulus that honors the assumptions
+//! (tied-low inputs actually held low from before the first settle), on
+//! every simulator backend at every worker count (`tests/netlist_opt.rs`).
+//! Three arguments carry the proof obligations:
+//!
+//! * **Readers are rewired, never re-timed.** A net proven constant `c`
+//!   keeps its driver; only its *readers* move to a canonical `Const`
+//!   net. Levelization settles a net before any reader evaluates, so at
+//!   every settle a reader observes `c` either way. Folded combinational
+//!   gates are rewritten to `Buf(const)`, which commits the same word at
+//!   the same settle as the original gate (one 0→1 transition at the
+//!   first settle for a constant-true net, none for a constant-false
+//!   one). DFFs and macro output pins are never retyped — their
+//!   init/reset and pin-table semantics stay byte-identical — only their
+//!   readers move.
+//! * **State is folded only when provably frozen.** A DFF folds only if
+//!   its data input is the constant it initializes to, or its reset is
+//!   constant-true (pinning it at `init`). A macro pin folds only if
+//!   exhaustive enumeration of its unknown `pin_deps` inputs × all
+//!   `2^state_bits` behavioral state values yields a single output — an
+//!   over-approximation of the reachable state set, so it can miss folds
+//!   but never invent one. Moore pins (empty `pin_deps`) refresh only at
+//!   clock edges and read 0 until the first one, so they fold to 0 only.
+//! * **Dead logic cannot observe or be observed.** Reverse reachability
+//!   from the primary outputs plus the keep-set; a live macro instance
+//!   pins all of its inputs and output pins live (its state step reads
+//!   every input at each clock), so removing a dead instance can never
+//!   change a retained net.
+//!
+//! Pass order for the inference pipeline is `ConstProp → DeadCode →
+//! Locality`: propagation rewires readers of constant cones onto
+//! canonical `Const` nets, elimination then removes the unread cones and
+//! compacts ids, and the locality pass renumbers the survivors so the
+//! compiled instruction stream's operand slots cluster by producer.
+
+use super::macros9::{self, MacroState};
+use super::netlist::{Gate, MacroInst, NetId, Netlist};
+
+/// Optimization level selector — an *execution knob* like
+/// [`SimBackend`](super::SimBackend): it changes how fast a workload
+/// simulates, never what any retained net computes, so sweep cache keys
+/// exclude it.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum OptLevel {
+    /// Lower the netlist exactly as built (the seed behavior).
+    #[default]
+    None,
+    /// Inference specialization: assume the BRV pseudo-random inputs are
+    /// tied low (as the gate engine's batched-inference protocol holds
+    /// them), fold the training-update cone away, and renumber for
+    /// operand locality.
+    Inference,
+}
+
+impl OptLevel {
+    /// Display name (`none` / `inference`).
+    pub fn name(self) -> &'static str {
+        match self {
+            OptLevel::None => "none",
+            OptLevel::Inference => "inference",
+        }
+    }
+
+    /// Parse a CLI/config spelling (`none` | `inference`).
+    pub fn parse(s: &str) -> crate::Result<OptLevel> {
+        match s {
+            "none" => Ok(OptLevel::None),
+            "inference" => Ok(OptLevel::Inference),
+            other => anyhow::bail!("unknown opt level {other:?} (none|inference)"),
+        }
+    }
+}
+
+/// Environment facts the optimizer is allowed to assume. The assumptions
+/// are a *contract*: equivalence on retained nets holds only under
+/// stimulus that honors them.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct OptAssumptions {
+    /// Primary-input nets the execution environment holds at constant 0
+    /// from before the first settle — the gate engine populates this with
+    /// its silenced `brv_case` / `brv_stab` inputs.
+    pub tied_low_inputs: Vec<NetId>,
+}
+
+impl OptAssumptions {
+    /// No assumptions: only `Gate::Const` nets seed constant propagation.
+    pub fn none() -> OptAssumptions {
+        OptAssumptions::default()
+    }
+
+    /// Assume every net in `nets` is a primary input held at constant 0.
+    pub fn tied_low(nets: impl IntoIterator<Item = NetId>) -> OptAssumptions {
+        OptAssumptions {
+            tied_low_inputs: nets.into_iter().collect(),
+        }
+    }
+}
+
+/// Nets that dead-logic elimination must retain even when nothing in the
+/// netlist reads them — the explicit form of "monitored so optimization
+/// cannot delete it". Primary outputs are always implicit roots; the
+/// keep-set adds engine-observed nets that are not ports.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct KeepSet {
+    nets: Vec<NetId>,
+}
+
+impl KeepSet {
+    /// Empty keep-set: only primary outputs root the liveness sweep.
+    pub fn new() -> KeepSet {
+        KeepSet::default()
+    }
+
+    /// Build a keep-set from any collection of net ids.
+    pub fn from_nets(nets: impl IntoIterator<Item = NetId>) -> KeepSet {
+        let mut v: Vec<NetId> = nets.into_iter().collect();
+        v.sort_unstable();
+        v.dedup();
+        KeepSet { nets: v }
+    }
+
+    /// Add one net to the keep-set.
+    pub fn insert(&mut self, net: NetId) {
+        if let Err(i) = self.nets.binary_search(&net) {
+            self.nets.insert(i, net);
+        }
+    }
+
+    /// The kept nets, sorted ascending.
+    pub fn nets(&self) -> &[NetId] {
+        &self.nets
+    }
+
+    /// Number of kept nets.
+    pub fn len(&self) -> usize {
+        self.nets.len()
+    }
+
+    /// True when no extra nets are kept.
+    pub fn is_empty(&self) -> bool {
+        self.nets.is_empty()
+    }
+}
+
+/// Old-id → new-id translation artifact returned by every pass (and by
+/// the whole pipeline, composed). Invariants:
+///
+/// * `net(old)` is `Some(new)` iff the net survived; surviving nets keep
+///   their relative semantics (same gate kind, operands mapped), and two
+///   distinct survivors never collapse onto one new id.
+/// * `macro_inst(old)` likewise for macro instances.
+/// * Per-net artifacts indexed by old ids (toggle counts, α vectors,
+///   fault sites) translate with [`NetRemap::translate_per_net`] /
+///   [`GateFault::remap`](super::fault::GateFault::remap); entries for
+///   removed nets are dropped.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NetRemap {
+    net_map: Vec<Option<NetId>>,
+    macro_map: Vec<Option<u32>>,
+    new_nets: usize,
+    new_macros: usize,
+}
+
+impl NetRemap {
+    /// The identity remap over `nets` nets and `macros` instances.
+    pub fn identity(nets: usize, macros: usize) -> NetRemap {
+        NetRemap {
+            net_map: (0..nets).map(|i| Some(i as NetId)).collect(),
+            macro_map: (0..macros).map(|i| Some(i as u32)).collect(),
+            new_nets: nets,
+            new_macros: macros,
+        }
+    }
+
+    /// Build a remap from explicit maps — the constructor for renumbering
+    /// transforms implemented outside this module (e.g. the synthesis
+    /// flow's DCE compaction, [`crate::synth::opt::optimize_tracked`]).
+    /// Every `Some` image must be `< new_nets` / `< new_macros`, and two
+    /// survivors must never share an image (checked in debug builds).
+    pub fn from_maps(
+        net_map: Vec<Option<NetId>>,
+        new_nets: usize,
+        macro_map: Vec<Option<u32>>,
+        new_macros: usize,
+    ) -> NetRemap {
+        debug_assert!(net_map.iter().flatten().all(|&n| (n as usize) < new_nets));
+        debug_assert!(macro_map.iter().flatten().all(|&m| (m as usize) < new_macros));
+        debug_assert_eq!(
+            {
+                let mut v: Vec<NetId> = net_map.iter().flatten().copied().collect();
+                v.sort_unstable();
+                v.dedup();
+                v.len()
+            },
+            net_map.iter().flatten().count(),
+            "two survivors collapsed onto one new net id"
+        );
+        NetRemap {
+            net_map,
+            macro_map,
+            new_nets,
+            new_macros,
+        }
+    }
+
+    /// New id of `old`, or `None` if the net was removed.
+    pub fn net(&self, old: NetId) -> Option<NetId> {
+        self.net_map.get(old as usize).copied().flatten()
+    }
+
+    /// New index of macro instance `old`, or `None` if removed.
+    pub fn macro_inst(&self, old: u32) -> Option<u32> {
+        self.macro_map.get(old as usize).copied().flatten()
+    }
+
+    /// Net count of the pre-pass netlist.
+    pub fn old_net_count(&self) -> usize {
+        self.net_map.len()
+    }
+
+    /// Net count of the post-pass netlist.
+    pub fn new_net_count(&self) -> usize {
+        self.new_nets
+    }
+
+    /// Macro-instance count of the pre-pass netlist.
+    pub fn old_macro_count(&self) -> usize {
+        self.macro_map.len()
+    }
+
+    /// Macro-instance count of the post-pass netlist.
+    pub fn new_macro_count(&self) -> usize {
+        self.new_macros
+    }
+
+    /// The removed set: old net ids with no image, ascending.
+    pub fn removed_nets(&self) -> Vec<NetId> {
+        self.net_map
+            .iter()
+            .enumerate()
+            .filter(|(_, m)| m.is_none())
+            .map(|(i, _)| i as NetId)
+            .collect()
+    }
+
+    /// True when the remap maps every net and instance to itself (the
+    /// pass was a structural no-op as far as ids are concerned).
+    pub fn is_identity(&self) -> bool {
+        self.new_nets == self.net_map.len()
+            && self.new_macros == self.macro_map.len()
+            && self
+                .net_map
+                .iter()
+                .enumerate()
+                .all(|(i, m)| *m == Some(i as NetId))
+            && self
+                .macro_map
+                .iter()
+                .enumerate()
+                .all(|(i, m)| *m == Some(i as u32))
+    }
+
+    /// Compose: apply `self` (old → mid), then `next` (mid → new).
+    pub fn then(&self, next: &NetRemap) -> NetRemap {
+        NetRemap {
+            net_map: self
+                .net_map
+                .iter()
+                .map(|m| m.and_then(|mid| next.net(mid)))
+                .collect(),
+            macro_map: self
+                .macro_map
+                .iter()
+                .map(|m| m.and_then(|mid| next.macro_inst(mid)))
+                .collect(),
+            new_nets: next.new_nets,
+            new_macros: next.new_macros,
+        }
+    }
+
+    /// Translate a per-net vector indexed by old ids onto the new net
+    /// space: surviving entries move to their new index, removed entries
+    /// are dropped, and new-only nets (canonical constants appended by
+    /// constant propagation) read `T::default()`.
+    ///
+    /// Panics if `old.len()` differs from [`NetRemap::old_net_count`].
+    pub fn translate_per_net<T: Copy + Default>(&self, old: &[T]) -> Vec<T> {
+        assert_eq!(
+            old.len(),
+            self.net_map.len(),
+            "per-net vector length {} != pre-pass net count {}",
+            old.len(),
+            self.net_map.len()
+        );
+        let mut out = vec![T::default(); self.new_nets];
+        for (i, m) in self.net_map.iter().enumerate() {
+            if let Some(n) = *m {
+                out[n as usize] = old[i];
+            }
+        }
+        out
+    }
+}
+
+/// One optimizer pass.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pass {
+    /// Constant propagation + reader rewiring ([`const_propagate`]).
+    ConstProp,
+    /// Dead-net / dead-instance elimination ([`eliminate_dead`]).
+    DeadCode,
+    /// Locality-aware schedule renumbering ([`schedule_locality`]).
+    Locality,
+}
+
+/// An ordered list of passes plus the assumptions and keep-set they run
+/// under (both expressed in the *input* netlist's ids; the pipeline
+/// translates them through intermediate remaps automatically).
+#[derive(Clone, Debug, Default)]
+pub struct PassPipeline {
+    /// Tied-low input assumptions, in input-netlist ids.
+    pub assume: OptAssumptions,
+    /// Extra liveness roots, in input-netlist ids.
+    pub keep: KeepSet,
+    passes: Vec<Pass>,
+}
+
+impl PassPipeline {
+    /// The empty pipeline: `run` verifies and returns the netlist
+    /// unchanged under an identity remap.
+    pub fn none() -> PassPipeline {
+        PassPipeline::default()
+    }
+
+    /// The inference pipeline: `ConstProp → DeadCode → Locality`.
+    pub fn inference(assume: OptAssumptions, keep: KeepSet) -> PassPipeline {
+        PassPipeline {
+            assume,
+            keep,
+            passes: vec![Pass::ConstProp, Pass::DeadCode, Pass::Locality],
+        }
+    }
+
+    /// A custom pass order under the given assumptions and keep-set.
+    pub fn custom(passes: Vec<Pass>, assume: OptAssumptions, keep: KeepSet) -> PassPipeline {
+        PassPipeline { assume, keep, passes }
+    }
+
+    /// The pass order this pipeline runs.
+    pub fn passes(&self) -> &[Pass] {
+        &self.passes
+    }
+
+    /// Run the pipeline: verify `nl`, apply each pass in order, and
+    /// return the optimized netlist with the composed remap (input ids →
+    /// output ids). Assumptions and keep nets are translated through the
+    /// accumulated remap before each pass, so tied inputs removed by an
+    /// earlier pass simply drop out.
+    pub fn run(&self, nl: &Netlist) -> Result<(Netlist, NetRemap), String> {
+        nl.verify()?;
+        let mut cur = nl.clone();
+        let mut acc = NetRemap::identity(nl.len(), nl.macros.len());
+        for pass in &self.passes {
+            let (next, r) = match pass {
+                Pass::ConstProp => {
+                    let assume = OptAssumptions::tied_low(
+                        self.assume
+                            .tied_low_inputs
+                            .iter()
+                            .filter_map(|&n| acc.net(n)),
+                    );
+                    const_propagate(&cur, &assume)
+                }
+                Pass::DeadCode => {
+                    let keep =
+                        KeepSet::from_nets(self.keep.nets().iter().filter_map(|&n| acc.net(n)));
+                    eliminate_dead(&cur, &keep)
+                }
+                Pass::Locality => schedule_locality(&cur)?,
+            };
+            acc = acc.then(&r);
+            cur = next;
+        }
+        Ok((cur, acc))
+    }
+}
+
+/// Exhaustive-enumeration budget for macro-pin folding: unknown dep
+/// inputs + behavioral state bits, capped so one pin costs at most 2^12
+/// behavioral evaluations per propagation sweep.
+const FOLD_ENUM_CAP: usize = 12;
+
+/// Lattice value of one macro output pin: `Some(c)` iff the pin reads `c`
+/// for every assignment of its unknown `pin_deps` inputs × every state
+/// value (known inputs pinned to their constants, non-dep inputs
+/// irrelevant by the `pin_deps` contract). Moore pins fold to 0 only —
+/// they hold 0 until the first clock refresh.
+fn macro_pin_value(
+    m: &MacroInst,
+    pin: u8,
+    value: &[Option<bool>],
+    ins: &mut Vec<bool>,
+    out: &mut Vec<bool>,
+) -> Option<bool> {
+    let deps = m.kind.pin_deps(pin);
+    let sbits = m.kind.state_bits();
+    let unknown: Vec<usize> = deps
+        .iter()
+        .copied()
+        .filter(|&d| value[m.inputs[d] as usize].is_none())
+        .collect();
+    if unknown.len() + sbits > FOLD_ENUM_CAP {
+        return None;
+    }
+    ins.clear();
+    ins.resize(m.inputs.len(), false);
+    for &d in deps {
+        if let Some(v) = value[m.inputs[d] as usize] {
+            ins[d] = v;
+        }
+    }
+    let mut result: Option<bool> = None;
+    for ivec in 0u32..(1u32 << unknown.len()) {
+        for (k, &d) in unknown.iter().enumerate() {
+            ins[d] = (ivec >> k) & 1 == 1;
+        }
+        for st_bits in 0u32..(1u32 << sbits) {
+            let st = MacroState::from_bits(st_bits);
+            macros9::eval(m.kind, ins, &st, out);
+            let v = out[pin as usize];
+            match result {
+                None => result = Some(v),
+                Some(r) if r != v => return None,
+                _ => {}
+            }
+        }
+    }
+    if deps.is_empty() && result == Some(true) {
+        return None;
+    }
+    result
+}
+
+/// Lattice value of one combinational gate (`None` = unknown). Includes
+/// the short-circuit rules (`And` with a known-0 operand, `Or` with a
+/// known-1, `Mux` with agreeing branches).
+fn comb_value(g: &Gate, value: &[Option<bool>]) -> Option<bool> {
+    let v = |a: NetId| value[a as usize];
+    match *g {
+        Gate::Buf(a) => v(a),
+        Gate::Not(a) => v(a).map(|x| !x),
+        Gate::And(a, b) => match (v(a), v(b)) {
+            (Some(false), _) | (_, Some(false)) => Some(false),
+            (Some(x), Some(y)) => Some(x && y),
+            _ => None,
+        },
+        Gate::Or(a, b) => match (v(a), v(b)) {
+            (Some(true), _) | (_, Some(true)) => Some(true),
+            (Some(x), Some(y)) => Some(x || y),
+            _ => None,
+        },
+        Gate::Xor(a, b) => match (v(a), v(b)) {
+            (Some(x), Some(y)) => Some(x != y),
+            _ => None,
+        },
+        Gate::Mux(s, a, b) => match v(s) {
+            Some(true) => v(b),
+            Some(false) => v(a),
+            None => match (v(a), v(b)) {
+                (Some(x), Some(y)) if x == y => Some(x),
+                _ => None,
+            },
+        },
+        _ => None,
+    }
+}
+
+/// Constant propagation + reader rewiring.
+///
+/// Seeds the lattice from `Gate::Const` nets and the tied-low inputs,
+/// iterates to a fixpoint through combinational gates, DFFs (fold only
+/// when reset/init semantics provably preserve the constant) and macro
+/// pins (exhaustive `pin_deps` × state enumeration), then rewires every
+/// *reader* of a constant net onto a canonical `Const` net and rewrites
+/// folded combinational gates to `Buf(const)`. A `Mux` whose select is
+/// constant becomes a `Buf` of the selected branch, releasing the
+/// unselected cone for dead-code elimination. Drivers are never retyped:
+/// inputs, DFFs and macro pins keep their gates (and their exact values
+/// and toggle counts); they simply lose their fanout.
+///
+/// The remap is the identity over the input nets; at most two canonical
+/// constant nets are appended.
+pub fn const_propagate(nl: &Netlist, assume: &OptAssumptions) -> (Netlist, NetRemap) {
+    let n = nl.gates.len();
+    let mut value: Vec<Option<bool>> = vec![None; n];
+    for (i, g) in nl.gates.iter().enumerate() {
+        if let Gate::Const(v) = *g {
+            value[i] = Some(v);
+        }
+    }
+    for &id in &assume.tied_low_inputs {
+        assert!(
+            matches!(nl.gates[id as usize], Gate::Input),
+            "tied-low assumption on net {id}, which is not a primary input"
+        );
+        value[id as usize] = Some(false);
+    }
+    let mut ins = Vec::new();
+    let mut outs = Vec::new();
+    loop {
+        let mut changed = false;
+        for (i, g) in nl.gates.iter().enumerate() {
+            if value[i].is_some() {
+                continue;
+            }
+            let v = match *g {
+                Gate::Input | Gate::Const(_) => None,
+                Gate::Dff { d, rst, init } => {
+                    let pinned = rst.is_some_and(|r| value[r as usize] == Some(true));
+                    if pinned || value[d as usize] == Some(init) {
+                        Some(init)
+                    } else {
+                        None
+                    }
+                }
+                Gate::MacroOut { inst, pin } => {
+                    macro_pin_value(&nl.macros[inst as usize], pin, &value, &mut ins, &mut outs)
+                }
+                ref g => comb_value(g, &value),
+            };
+            if v.is_some() {
+                value[i] = v;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    // Which constant polarities will actually be read after rewiring?
+    let is_comb = |g: &Gate| {
+        matches!(
+            g,
+            Gate::Buf(_) | Gate::Not(_) | Gate::And(..) | Gate::Or(..) | Gate::Xor(..) | Gate::Mux(..)
+        )
+    };
+    let mut need = [false, false];
+    let mark = |need: &mut [bool; 2], a: NetId| {
+        if let Some(v) = value[a as usize] {
+            need[v as usize] = true;
+        }
+    };
+    for (i, g) in nl.gates.iter().enumerate() {
+        if is_comb(g) {
+            if let Some(v) = value[i] {
+                need[v as usize] = true; // folded gate becomes Buf(const)
+                continue;
+            }
+        }
+        match *g {
+            Gate::Buf(a) | Gate::Not(a) => mark(&mut need, a),
+            Gate::And(a, b) | Gate::Or(a, b) | Gate::Xor(a, b) => {
+                mark(&mut need, a);
+                mark(&mut need, b);
+            }
+            Gate::Mux(s, a, b) => {
+                // A known select reduces to Buf(branch); the surviving
+                // branch is unknown (else the mux itself would have
+                // folded), so no constant is read.
+                if value[s as usize].is_none() {
+                    mark(&mut need, s);
+                    mark(&mut need, a);
+                    mark(&mut need, b);
+                }
+            }
+            Gate::Dff { d, rst, .. } => {
+                mark(&mut need, d);
+                if let Some(r) = rst {
+                    mark(&mut need, r);
+                }
+            }
+            _ => {}
+        }
+    }
+    for m in &nl.macros {
+        for &a in &m.inputs {
+            mark(&mut need, a);
+        }
+    }
+
+    let mut out_nl = nl.clone();
+    // Canonical constant per polarity: the lowest existing `Const` net,
+    // else a fresh one appended past the original id range.
+    let mut canon: [Option<NetId>; 2] = [None, None];
+    for (i, g) in nl.gates.iter().enumerate() {
+        if let Gate::Const(v) = *g {
+            let slot = &mut canon[v as usize];
+            if slot.is_none() {
+                *slot = Some(i as NetId);
+            }
+        }
+    }
+    for v in 0..2usize {
+        if need[v] && canon[v].is_none() {
+            canon[v] = Some(out_nl.gates.len() as NetId);
+            out_nl.gates.push(Gate::Const(v == 1));
+        }
+    }
+
+    let canon_net = |v: bool| canon[v as usize].expect("canonical const allocated");
+    let sub = |a: NetId| match value[a as usize] {
+        Some(v) => canon_net(v),
+        None => a,
+    };
+    for (i, g) in nl.gates.iter().enumerate() {
+        let folded = if is_comb(g) { value[i] } else { None };
+        out_nl.gates[i] = match *g {
+            Gate::Input | Gate::Const(_) | Gate::MacroOut { .. } => continue,
+            Gate::Dff { d, rst, init } => Gate::Dff {
+                d: sub(d),
+                rst: rst.map(sub),
+                init,
+            },
+            _ if folded.is_some() => Gate::Buf(canon_net(folded.unwrap())),
+            Gate::Buf(a) => Gate::Buf(sub(a)),
+            Gate::Not(a) => Gate::Not(sub(a)),
+            Gate::And(a, b) => Gate::And(sub(a), sub(b)),
+            Gate::Or(a, b) => Gate::Or(sub(a), sub(b)),
+            Gate::Xor(a, b) => Gate::Xor(sub(a), sub(b)),
+            Gate::Mux(s, a, b) => match value[s as usize] {
+                Some(sv) => Gate::Buf(sub(if sv { b } else { a })),
+                None => Gate::Mux(sub(s), sub(a), sub(b)),
+            },
+        };
+    }
+    for m in &mut out_nl.macros {
+        for a in &mut m.inputs {
+            *a = sub(*a);
+        }
+    }
+
+    let new_nets = out_nl.gates.len();
+    let remap = NetRemap {
+        net_map: (0..n).map(|i| Some(i as NetId)).collect(),
+        macro_map: (0..nl.macros.len()).map(|i| Some(i as u32)).collect(),
+        new_nets,
+        new_macros: nl.macros.len(),
+    };
+    (out_nl, remap)
+}
+
+/// Dead-net / dead-instance elimination.
+///
+/// Liveness is reverse reachability from every primary output plus the
+/// keep-set. A DFF roots its data and reset nets; a live macro instance
+/// roots **all** of its inputs (the behavioral state step reads every
+/// input at each clock) and retains all of its output-pin nets (the
+/// pin-table consistency `Netlist::verify` demands). Everything else —
+/// including primary inputs nothing reads any more — is removed, and the
+/// survivors are compacted in their original relative order.
+pub fn eliminate_dead(nl: &Netlist, keep: &KeepSet) -> (Netlist, NetRemap) {
+    let n = nl.gates.len();
+    let mut live = vec![false; n];
+    let mut live_inst = vec![false; nl.macros.len()];
+    let mut stack: Vec<NetId> = Vec::new();
+    for (_, id) in &nl.outputs {
+        stack.push(*id);
+    }
+    for &id in keep.nets() {
+        assert!(
+            (id as usize) < n,
+            "keep-set net {id} out of range ({n} nets)"
+        );
+        stack.push(id);
+    }
+    let mut fanin = Vec::new();
+    while let Some(id) = stack.pop() {
+        let i = id as usize;
+        if live[i] {
+            continue;
+        }
+        live[i] = true;
+        match nl.gates[i] {
+            Gate::Dff { d, rst, .. } => {
+                stack.push(d);
+                if let Some(r) = rst {
+                    stack.push(r);
+                }
+            }
+            Gate::MacroOut { inst, .. } => {
+                let mi = inst as usize;
+                if !live_inst[mi] {
+                    live_inst[mi] = true;
+                    stack.extend_from_slice(&nl.macros[mi].inputs);
+                    stack.extend_from_slice(&nl.macros[mi].outputs);
+                }
+            }
+            ref g => {
+                g.comb_fanin(&mut fanin);
+                stack.extend_from_slice(&fanin);
+            }
+        }
+    }
+
+    let mut net_map: Vec<Option<NetId>> = vec![None; n];
+    let mut next = 0u32;
+    for (i, &alive) in live.iter().enumerate() {
+        if alive {
+            net_map[i] = Some(next);
+            next += 1;
+        }
+    }
+    let mut macro_map: Vec<Option<u32>> = vec![None; nl.macros.len()];
+    let mut mnext = 0u32;
+    for (i, &alive) in live_inst.iter().enumerate() {
+        if alive {
+            macro_map[i] = Some(mnext);
+            mnext += 1;
+        }
+    }
+    let map = |a: NetId| net_map[a as usize].expect("live net reads a dead net");
+
+    let mut gates = Vec::with_capacity(next as usize);
+    for (i, g) in nl.gates.iter().enumerate() {
+        if !live[i] {
+            continue;
+        }
+        gates.push(match *g {
+            Gate::Input => Gate::Input,
+            Gate::Const(v) => Gate::Const(v),
+            Gate::Buf(a) => Gate::Buf(map(a)),
+            Gate::Not(a) => Gate::Not(map(a)),
+            Gate::And(a, b) => Gate::And(map(a), map(b)),
+            Gate::Or(a, b) => Gate::Or(map(a), map(b)),
+            Gate::Xor(a, b) => Gate::Xor(map(a), map(b)),
+            Gate::Mux(s, a, b) => Gate::Mux(map(s), map(a), map(b)),
+            Gate::Dff { d, rst, init } => Gate::Dff {
+                d: map(d),
+                rst: rst.map(map),
+                init,
+            },
+            Gate::MacroOut { inst, pin } => Gate::MacroOut {
+                inst: macro_map[inst as usize].expect("live pin of a dead instance"),
+                pin,
+            },
+        });
+    }
+    let macros = nl
+        .macros
+        .iter()
+        .zip(&live_inst)
+        .filter(|(_, &alive)| alive)
+        .map(|(m, _)| MacroInst {
+            kind: m.kind,
+            inputs: m.inputs.iter().map(|&a| map(a)).collect(),
+            outputs: m.outputs.iter().map(|&a| map(a)).collect(),
+        })
+        .collect();
+    let inputs = nl
+        .inputs
+        .iter()
+        .filter(|(_, id)| live[*id as usize])
+        .map(|(name, id)| (name.clone(), map(*id)))
+        .collect();
+    let outputs = nl
+        .outputs
+        .iter()
+        .map(|(name, id)| (name.clone(), map(*id)))
+        .collect();
+
+    let out_nl = Netlist {
+        name: nl.name.clone(),
+        gates,
+        macros,
+        inputs,
+        outputs,
+    };
+    let remap = NetRemap {
+        net_map,
+        macro_map,
+        new_nets: next as usize,
+        new_macros: mnext as usize,
+    };
+    (out_nl, remap)
+}
+
+/// Locality-aware schedule renumbering (fanout-aware instruction
+/// scheduling for the compiled engine).
+///
+/// `Netlist::levelize_buckets` orders each level by ascending net id and
+/// `CompiledProgram::compile` emits instructions in that order, so the
+/// within-level schedule *is* the numbering. This pass renumbers nets so
+/// that (a) every level's destination slots are contiguous — commits walk
+/// the value array forward — and (b) within a level, instructions are
+/// clustered by the smallest new id among their operands (producer
+/// locality), high-fanout producers first so the operands most readers
+/// share sit at the front of each cluster. A pure renumbering: values,
+/// toggles and levels are preserved net-for-net under the remap.
+pub fn schedule_locality(nl: &Netlist) -> Result<(Netlist, NetRemap), String> {
+    let n = nl.gates.len();
+    let levels = nl.levelize_buckets()?;
+    let mut scheduled = vec![false; n];
+    for level in &levels {
+        for &id in level {
+            scheduled[id as usize] = true;
+        }
+    }
+    let mut new_of: Vec<NetId> = vec![NetId::MAX; n];
+    let mut next = 0u32;
+    // Sources (inputs, constants, DFFs, Moore pins) first, in old order.
+    for (i, &s) in scheduled.iter().enumerate() {
+        if !s {
+            new_of[i] = next;
+            next += 1;
+        }
+    }
+    let fanout = nl.fanout_counts();
+    let mut fanin = Vec::new();
+    for level in &levels {
+        let mut keyed: Vec<(NetId, u32, NetId)> = Vec::with_capacity(level.len());
+        for &id in level {
+            nl.comb_fanin_full(id, &mut fanin);
+            let locality = fanin
+                .iter()
+                .map(|&d| new_of[d as usize])
+                .min()
+                .unwrap_or(0);
+            keyed.push((locality, u32::MAX - fanout[id as usize], id));
+        }
+        keyed.sort_unstable();
+        for &(_, _, id) in &keyed {
+            new_of[id as usize] = next;
+            next += 1;
+        }
+    }
+    debug_assert_eq!(next as usize, n, "every net renumbered exactly once");
+    if new_of.iter().enumerate().all(|(i, &m)| m == i as NetId) {
+        return Ok((nl.clone(), NetRemap::identity(n, nl.macros.len())));
+    }
+
+    let map = |a: NetId| new_of[a as usize];
+    let mut gates = vec![Gate::Input; n];
+    for (i, g) in nl.gates.iter().enumerate() {
+        gates[new_of[i] as usize] = match *g {
+            Gate::Input => Gate::Input,
+            Gate::Const(v) => Gate::Const(v),
+            Gate::Buf(a) => Gate::Buf(map(a)),
+            Gate::Not(a) => Gate::Not(map(a)),
+            Gate::And(a, b) => Gate::And(map(a), map(b)),
+            Gate::Or(a, b) => Gate::Or(map(a), map(b)),
+            Gate::Xor(a, b) => Gate::Xor(map(a), map(b)),
+            Gate::Mux(s, a, b) => Gate::Mux(map(s), map(a), map(b)),
+            Gate::Dff { d, rst, init } => Gate::Dff {
+                d: map(d),
+                rst: rst.map(map),
+                init,
+            },
+            Gate::MacroOut { inst, pin } => Gate::MacroOut { inst, pin },
+        };
+    }
+    let macros = nl
+        .macros
+        .iter()
+        .map(|m| MacroInst {
+            kind: m.kind,
+            inputs: m.inputs.iter().map(|&a| map(a)).collect(),
+            outputs: m.outputs.iter().map(|&a| map(a)).collect(),
+        })
+        .collect();
+    let inputs = nl
+        .inputs
+        .iter()
+        .map(|(name, id)| (name.clone(), map(*id)))
+        .collect();
+    let outputs = nl
+        .outputs
+        .iter()
+        .map(|(name, id)| (name.clone(), map(*id)))
+        .collect();
+
+    let out_nl = Netlist {
+        name: nl.name.clone(),
+        gates,
+        macros,
+        inputs,
+        outputs,
+    };
+    let remap = NetRemap {
+        net_map: new_of.iter().map(|&m| Some(m)).collect(),
+        macro_map: (0..nl.macros.len()).map(|i| Some(i as u32)).collect(),
+        new_nets: n,
+        new_macros: nl.macros.len(),
+    };
+    Ok((out_nl, remap))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::macros9::MacroKind;
+    use super::super::netlist::NetBuilder;
+    use super::*;
+
+    #[test]
+    fn opt_level_parses_and_names() {
+        assert_eq!(OptLevel::parse("none").unwrap(), OptLevel::None);
+        assert_eq!(OptLevel::parse("inference").unwrap(), OptLevel::Inference);
+        assert!(OptLevel::parse("full").is_err());
+        assert_eq!(OptLevel::None.name(), "none");
+        assert_eq!(OptLevel::Inference.name(), "inference");
+        assert_eq!(OptLevel::default(), OptLevel::None);
+    }
+
+    #[test]
+    fn tied_low_input_folds_its_cone_and_rewires_readers() {
+        let mut b = NetBuilder::new("t");
+        let x = b.input("X");
+        let y = b.input("Y");
+        let z = b.and(x, y); // constant 0 under the assumption
+        let w = b.or(z, y); // reader of z: rewired to the const net
+        b.output("W", w);
+        let nl = b.finish();
+        let (opt, remap) = const_propagate(&nl, &OptAssumptions::tied_low([x]));
+        assert!(remap.removed_nets().is_empty(), "const prop never removes");
+        let zero = match opt.gates[z as usize] {
+            Gate::Buf(c) => c,
+            ref g => panic!("folded AND should be Buf(const), got {g:?}"),
+        };
+        assert_eq!(opt.gates[zero as usize], Gate::Const(false));
+        assert_eq!(opt.gates[w as usize], Gate::Or(zero, y));
+        opt.verify().unwrap();
+    }
+
+    #[test]
+    fn mux_with_constant_select_releases_the_unselected_branch() {
+        let mut b = NetBuilder::new("t");
+        let a = b.input("A");
+        let x = b.input("X");
+        let sel = b.constant(true);
+        let deep = b.not(x); // only read through the unselected... selected branch
+        let m = b.mux(sel, a, deep); // sel=1 → picks `deep`
+        b.output("M", m);
+        let nl = b.finish();
+        let (opt, _) = const_propagate(&nl, &OptAssumptions::none());
+        assert_eq!(opt.gates[m as usize], Gate::Buf(deep));
+        opt.verify().unwrap();
+        // And the dual: constant-false select picks the first branch.
+        let mut b = NetBuilder::new("t2");
+        let a = b.input("A");
+        let x = b.input("X");
+        let sel = b.constant(false);
+        let deep = b.not(x);
+        let m = b.mux(sel, a, deep);
+        b.output("M", m);
+        let nl = b.finish();
+        let (opt, _) = const_propagate(&nl, &OptAssumptions::none());
+        assert_eq!(opt.gates[m as usize], Gate::Buf(a));
+        // `deep` is now unread; dead-code elimination removes it and X.
+        let (dce, remap) = eliminate_dead(&opt, &KeepSet::new());
+        assert_eq!(remap.net(deep), None);
+        assert_eq!(remap.net(x), None);
+        assert!(remap.net(m).is_some());
+        dce.verify().unwrap();
+    }
+
+    #[test]
+    fn dff_folds_only_when_init_matches_the_constant_data() {
+        let mut b = NetBuilder::new("t");
+        let zero = b.constant(false);
+        let q0 = b.dff(zero, None, false); // d = 0, init = 0: frozen at 0
+        let q1 = b.dff(zero, None, true); // d = 0, init = 1: toggles once
+        let y = b.input("Y");
+        let r0 = b.and(q0, y);
+        let r1 = b.and(q1, y);
+        b.output("R0", r0);
+        b.output("R1", r1);
+        let nl = b.finish();
+        let (opt, _) = const_propagate(&nl, &OptAssumptions::none());
+        // q0's reader is rewired onto the constant; q1's is not.
+        assert_eq!(opt.gates[r0 as usize], Gate::And(zero, y));
+        assert_eq!(opt.gates[r1 as usize], Gate::And(q1, y));
+        // The folded DFF itself is never retyped.
+        assert!(matches!(opt.gates[q0 as usize], Gate::Dff { .. }));
+        opt.verify().unwrap();
+    }
+
+    #[test]
+    fn stabilize_func_folds_to_zero_when_brv_inputs_are_tied() {
+        let mut b = NetBuilder::new("t");
+        let sels: Vec<_> = (0..3).map(|i| b.input(&format!("S{i}"))).collect();
+        let brvs: Vec<_> = (0..8).map(|i| b.input(&format!("B{i}"))).collect();
+        let mut ins = sels.clone();
+        ins.extend_from_slice(&brvs);
+        let outs = b.macro_inst(MacroKind::StabilizeFunc, ins);
+        let y = b.input("Y");
+        let r = b.and(outs[0], y);
+        b.output("R", r);
+        let nl = b.finish();
+        let (opt, _) = const_propagate(&nl, &OptAssumptions::tied_low(brvs.clone()));
+        // OUT is an 8:1 mux over all-zero data: constant 0 for any select
+        // and the reader moves to a const net, leaving the pin unread.
+        let zero = match opt.gates[r as usize] {
+            Gate::And(c, yy) => {
+                assert_eq!(yy, y);
+                c
+            }
+            ref g => panic!("expected And, got {g:?}"),
+        };
+        assert_eq!(opt.gates[zero as usize], Gate::Const(false));
+        // The pin net itself keeps its MacroOut gate (pin-table safety).
+        assert!(matches!(opt.gates[outs[0] as usize], Gate::MacroOut { .. }));
+        // DCE then drops the whole instance and the tied inputs.
+        let (dce, remap) = eliminate_dead(&opt, &KeepSet::new());
+        assert_eq!(remap.new_macro_count(), 0);
+        for &bn in &brvs {
+            assert_eq!(remap.net(bn), None);
+        }
+        dce.verify().unwrap();
+    }
+
+    #[test]
+    fn keep_set_roots_liveness_like_an_output() {
+        let mut b = NetBuilder::new("t");
+        let x = b.input("X");
+        let y = b.input("Y");
+        let dead = b.and(x, y);
+        let kept = b.or(x, y);
+        b.output("X2", x);
+        let nl = b.finish();
+        let (dce, remap) = eliminate_dead(&nl, &KeepSet::from_nets([kept]));
+        assert_eq!(remap.net(dead), None, "unread and unkept: removed");
+        let new_kept = remap.net(kept).expect("kept net survives");
+        assert!(matches!(dce.gates[new_kept as usize], Gate::Or(..)));
+        assert!(remap.net(y).is_some(), "read by the kept net");
+        dce.verify().unwrap();
+    }
+
+    #[test]
+    fn locality_pass_is_a_pure_renumbering() {
+        let mut b = NetBuilder::new("t");
+        let xs = b.input_vec("X", 8);
+        let count = b.popcount(&xs);
+        let ge = b.ge_const(&count, 3);
+        b.output("GE", ge);
+        let nl = b.finish();
+        let (re, remap) = schedule_locality(&nl).unwrap();
+        re.verify().unwrap();
+        assert_eq!(re.len(), nl.len());
+        assert_eq!(re.census(), nl.census());
+        assert!(remap.removed_nets().is_empty());
+        // Bijection: every old gate appears at its new id with operands
+        // mapped — checked here for kinds via the census and spot-checked
+        // for the output port.
+        let (_, old_out) = nl.outputs[0].clone();
+        let (_, new_out) = re.outputs[0].clone();
+        assert_eq!(remap.net(old_out), Some(new_out));
+        // Levels keep their populations (renumbering never re-times).
+        let old_levels: Vec<usize> =
+            nl.levelize_buckets().unwrap().iter().map(|l| l.len()).collect();
+        let new_levels: Vec<usize> =
+            re.levelize_buckets().unwrap().iter().map(|l| l.len()).collect();
+        assert_eq!(old_levels, new_levels);
+        // New ids inside each level are contiguous ascending.
+        let buckets = re.levelize_buckets().unwrap();
+        for level in &buckets {
+            for pair in level.windows(2) {
+                assert_eq!(pair[1], pair[0] + 1, "level ids contiguous");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_assumption_pipeline_is_a_structural_noop_on_live_const_free_logic() {
+        // No Const gates, no dead nets, no assumptions: ConstProp and
+        // DeadCode must return the netlist byte-for-byte with identity
+        // remaps.
+        let mut b = NetBuilder::new("t");
+        let xs = b.input_vec("X", 4);
+        let n0 = b.and(xs[0], xs[1]);
+        let n1 = b.xor(xs[2], xs[3]);
+        let n2 = b.mux(n0, n1, xs[0]);
+        let q = b.dff(n2, Some(xs[1]), false);
+        let outs = b.macro_inst(MacroKind::Pulse2Edge, vec![q]);
+        b.output("OUT", outs[0]);
+        let nl = b.finish();
+        let (cp, r1) = const_propagate(&nl, &OptAssumptions::none());
+        assert!(r1.is_identity());
+        assert_eq!(cp, nl);
+        let (dce, r2) = eliminate_dead(&nl, &KeepSet::new());
+        assert!(r2.is_identity());
+        assert_eq!(dce, nl);
+    }
+
+    #[test]
+    fn remap_compose_and_translate() {
+        let a = NetRemap {
+            net_map: vec![Some(1), None, Some(0)],
+            macro_map: vec![Some(0)],
+            new_nets: 2,
+            new_macros: 1,
+        };
+        let b = NetRemap {
+            net_map: vec![Some(0), Some(1)],
+            macro_map: vec![None],
+            new_nets: 2,
+            new_macros: 0,
+        };
+        let c = a.then(&b);
+        assert_eq!(c.net(0), Some(1));
+        assert_eq!(c.net(1), None);
+        assert_eq!(c.net(2), Some(0));
+        assert_eq!(c.macro_inst(0), None);
+        assert_eq!(c.removed_nets(), vec![1]);
+        assert!(!c.is_identity());
+        assert!(NetRemap::identity(4, 2).is_identity());
+        let v = a.translate_per_net(&[10u64, 20, 30]);
+        assert_eq!(v, vec![30, 10]);
+    }
+}

@@ -72,6 +72,25 @@ pub fn analyze_with_alpha(
     analyze_core(mapped, lib, gamma_cycles, ACLK_HZ, alpha)
 }
 
+/// [`analyze_with_alpha`] for a netlist the synthesis optimizer
+/// renumbered: `alpha` is indexed by the *optimizer input* netlist's ids
+/// (the space toggle collection ran on) and is carried onto the mapped
+/// netlist through the optimizer's [`NetRemap`]
+/// ([`crate::synth::flow::SynthOutcome::remap`]). Surviving nets keep
+/// their measured activity; nets the optimizer aliased away contributed
+/// their switching through their canonical survivor, so dropping their
+/// entries double-counts nothing.
+pub fn analyze_with_alpha_remapped(
+    mapped: &MappedNetlist,
+    lib: &CellLibrary,
+    gamma_cycles: u32,
+    alpha: &[f64],
+    remap: &crate::gates::opt::NetRemap,
+) -> PpaReport {
+    let translated = remap.translate_per_net(alpha);
+    analyze_with_alpha(mapped, lib, gamma_cycles, &translated)
+}
+
 /// Full-control variant.
 pub fn analyze_at(
     mapped: &MappedNetlist,
@@ -274,6 +293,33 @@ mod tests {
         assert_eq!(r_meas.area_um2, r_prob.area_um2);
         assert_eq!(r_meas.leakage_nw, r_prob.leakage_nw);
         assert_eq!(r_meas.critical_path_ps, r_prob.critical_path_ps);
+    }
+
+    #[test]
+    fn remapped_measured_alpha_feeds_the_optimized_mapping() {
+        use crate::gates::SimBackend;
+        use crate::ppa::activity::measure;
+        // The Tnn7 flow optimizes (and renumbers) the design netlist, so
+        // the measured per-net vector only lines up after translation
+        // through the flow's remap — the path PR 5 couldn't take.
+        let d = build_column(6, 2, 6, BrvSource::Lfsr);
+        let lib = cells::tnn7();
+        let out = synthesize(&d.netlist, Flow::Tnn7);
+        let meas = measure(&d.netlist, 4096, 9, SimBackend::BitParallel64).unwrap();
+        assert_eq!(meas.alpha.len(), out.remap.old_net_count());
+        assert_eq!(out.remap.new_net_count(), out.mapped.net_space);
+        let r = analyze_with_alpha_remapped(&out.mapped, &lib, 16, &meas.alpha, &out.remap);
+        let r_prob = analyze(&out.mapped, &lib, 16);
+        assert!(r.dynamic_nw > 0.0);
+        let ratio = r.dynamic_nw / r_prob.dynamic_nw;
+        assert!(
+            ratio > 0.1 && ratio < 10.0,
+            "measured/probabilistic dynamic power ratio {ratio:.3}"
+        );
+        // Only dynamic power depends on the activity source.
+        assert_eq!(r.area_um2, r_prob.area_um2);
+        assert_eq!(r.leakage_nw, r_prob.leakage_nw);
+        assert_eq!(r.critical_path_ps, r_prob.critical_path_ps);
     }
 
     #[test]

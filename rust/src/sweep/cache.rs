@@ -35,7 +35,12 @@ static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
 /// v2: points gained the `alpha_measured` field (gate-sim switching
 /// activity measured on the compiled lane-block backend, pinned by
 /// `exec::SWEEP_ALPHA_CYCLES` / `exec::SWEEP_ALPHA_WORDS`).
-pub const CACHE_VERSION: &str = "tnn7-sweep-v2";
+///
+/// v3: points gained `alpha_opt_measured` / `power_meas_nw` — the
+/// measured per-net α carried onto the synthesis optimizer's renumbered
+/// mapping through its `NetRemap` (TNN7 flow; baseline rows fall back to
+/// the probabilistic values).
+pub const CACHE_VERSION: &str = "tnn7-sweep-v3";
 
 /// Stable 64-bit FNV-1a hash (the cache's content address). Frozen: keys
 /// must not change across platforms or releases, or warm caches would be

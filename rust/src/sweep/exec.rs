@@ -22,7 +22,7 @@ use super::cache::{CacheLookup, PointCache};
 use super::spec::{SweepPoint, SweepSpec, ThetaPolicy};
 use crate::coordinator::{encode_ucr, run_stream, score_winners, volley_density};
 use crate::gates::column_design::{build_column, BrvSource};
-use crate::gates::SimBackend;
+use crate::gates::{OptLevel, SimBackend};
 use crate::ppa::report::analyze;
 use crate::synth::flow::synthesize;
 use crate::tnn::params::TnnParams;
@@ -58,6 +58,20 @@ pub struct PointResult {
     /// point, so it is a pure function of the point — deterministic at
     /// any thread count and identical under every `sim_backend` setting).
     pub alpha_measured: f64,
+    /// Mean measured α over the nets *retained by the synthesis
+    /// optimizer*, i.e. the measured per-net vector carried onto the
+    /// optimized mapping through the flow's
+    /// [`NetRemap`](crate::gates::opt::NetRemap). Defined for the
+    /// macro-preserving TNN7 flow (whose optimizer input is the measured
+    /// design netlist); baseline rows report `alpha_measured` (the
+    /// expanded netlist's ids don't correspond to the measured ones).
+    pub alpha_opt_measured: f64,
+    /// Total power re-analyzed with the measured per-net α on the
+    /// optimized mapping
+    /// ([`crate::ppa::report::analyze_with_alpha_remapped`]) — the
+    /// measured-activity counterpart of `power_nw`. Baseline rows report
+    /// the probabilistic `power_nw` (same caveat as `alpha_opt_measured`).
+    pub power_meas_nw: f64,
     // --- synthesis shape (deterministic) ---
     /// Gates entering the optimizer (the Fig. 12 search-space size).
     pub gates_in: usize,
@@ -98,6 +112,8 @@ impl PointResult {
         d.set("comp_time_ns", self.comp_time_ns);
         d.set("edp_fj_ns", self.edp_fj_ns);
         d.set("alpha_measured", self.alpha_measured);
+        d.set("alpha_opt_measured", self.alpha_opt_measured);
+        d.set("power_meas_nw", self.power_meas_nw);
         d.set("gates_in", self.gates_in);
         d.set("cells_out", self.cells_out);
         d.set("macros_out", self.macros_out);
@@ -124,6 +140,8 @@ impl PointResult {
             comp_time_ns: f("comp_time_ns")?,
             edp_fj_ns: f("edp_fj_ns")?,
             alpha_measured: f("alpha_measured")?,
+            alpha_opt_measured: f("alpha_opt_measured")?,
+            power_meas_nw: f("power_meas_nw")?,
             gates_in: u("gates_in")?,
             cells_out: u("cells_out")?,
             macros_out: u("macros_out")?,
@@ -146,6 +164,8 @@ impl PointResult {
             comp_time_ns: 3.25,
             edp_fj_ns: 101.0,
             alpha_measured: 0.0417,
+            alpha_opt_measured: 0.0432,
+            power_meas_nw: 991.25,
             gates_in: 1000,
             cells_out: 420,
             macros_out: 18,
@@ -201,9 +221,9 @@ pub const SWEEP_ALPHA_CYCLES: u64 = 2048;
 pub const SWEEP_ALPHA_WORDS: usize = 2;
 
 /// Measure one grid point from scratch with the default batched-inference
-/// backend (see [`compute_point_with`]).
+/// backend and no netlist optimization (see [`compute_point_with`]).
 pub fn compute_point(point: &SweepPoint) -> crate::Result<PointResult> {
-    compute_point_with(point, SimBackend::BitParallel64)
+    compute_point_with(point, SimBackend::BitParallel64, OptLevel::None)
 }
 
 /// Measure one grid point from scratch: generate the seeded workload,
@@ -214,12 +234,14 @@ pub fn compute_point(point: &SweepPoint) -> crate::Result<PointResult> {
 /// score the post-training clustering.
 ///
 /// `sim_backend` selects the simulator behind the gate engine's batched
-/// inference scoring only — winners are bit-exact across backends, so
-/// every deterministic field of the result is independent of it (which is
-/// what keeps cache keys backend-stable).
+/// inference scoring only, and `opt` the netlist optimization level of a
+/// compiled selection — winners are bit-exact across backends and levels,
+/// so every deterministic field of the result is independent of both
+/// (which is what keeps cache keys backend- and opt-stable).
 pub fn compute_point_with(
     point: &SweepPoint,
     sim_backend: SimBackend,
+    opt: OptLevel,
 ) -> crate::Result<PointResult> {
     let params = TnnParams::default();
     // Workload: the same synthetic UCR-style generator the conformance
@@ -249,9 +271,13 @@ pub fn compute_point_with(
     let ppa = analyze(&out.mapped, &lib, crate::harness::GAMMA_CYCLES);
     // Gate-level measured switching activity on the compiled lane-block
     // simulator (pinned measurement constants + the point's seed — see
-    // the field docs; the optimizer renumbers nets, so the per-net vector
-    // cannot feed `analyze_with_alpha` on the optimized mapping and the
-    // sweep reports the mean α instead).
+    // the field docs). The synthesis optimizer renumbers nets, so the
+    // per-net vector is carried onto the optimized mapping through the
+    // flow's NetRemap before feeding `analyze_with_alpha_remapped` — only
+    // meaningful for the macro-preserving TNN7 flow, whose optimizer
+    // input *is* the measured design netlist; the baseline flow expands
+    // macros into a fresh id space first, so its rows keep the
+    // probabilistic power and the mean α as before.
     let meas = crate::ppa::activity::measure(
         &design.netlist,
         SWEEP_ALPHA_CYCLES,
@@ -260,6 +286,22 @@ pub fn compute_point_with(
     )
     .map_err(anyhow::Error::msg)?;
     let alpha_measured = meas.alpha.iter().sum::<f64>() / meas.alpha.len().max(1) as f64;
+    let (alpha_opt_measured, power_meas_nw) = match point.flow {
+        crate::synth::flow::Flow::Tnn7 => {
+            let translated = out.remap.translate_per_net(&meas.alpha);
+            let mean =
+                translated.iter().sum::<f64>() / translated.len().max(1) as f64;
+            let ppa_meas = crate::ppa::report::analyze_with_alpha_remapped(
+                &out.mapped,
+                &lib,
+                crate::harness::GAMMA_CYCLES,
+                &meas.alpha,
+                &out.remap,
+            );
+            (mean, ppa_meas.power_nw)
+        }
+        crate::synth::flow::Flow::Baseline => (alpha_measured, ppa.power_nw),
+    };
 
     // Function: train the engine online (same run_stream pipeline as
     // `run ucr` and the conformance harness), then score a draw-free
@@ -276,6 +318,7 @@ pub fn compute_point_with(
         &mut weight_rng,
     )?;
     engine.set_sim_backend(sim_backend);
+    engine.set_opt_level(opt);
     let t_train = Instant::now();
     for epoch in 0..point.epochs {
         let mut stream = root.split_stream(1 + epoch);
@@ -293,6 +336,8 @@ pub fn compute_point_with(
         comp_time_ns: ppa.comp_time_ns,
         edp_fj_ns: ppa.edp_fj_ns,
         alpha_measured,
+        alpha_opt_measured,
+        power_meas_nw,
         gates_in: out.stats.gates_in,
         cells_out: out.stats.cells_out,
         macros_out: out.stats.macros_out,
@@ -359,7 +404,7 @@ pub fn run_sweep(spec: &SweepSpec, use_cache: bool) -> crate::Result<SweepOutcom
                 }
                 let i = todo[k];
                 let outcome = run_point_guarded(&points[i], || {
-                    compute_point_with(&points[i], sim_backend)
+                    compute_point_with(&points[i], sim_backend, spec.opt)
                 })
                 .and_then(|r| {
                     if let Some(c) = &cache {
@@ -493,25 +538,40 @@ mod tests {
         assert_eq!(a.power_nw, b.power_nw);
         assert_eq!(a.edp_fj_ns, b.edp_fj_ns);
         assert_eq!(a.alpha_measured, b.alpha_measured);
+        assert_eq!(a.alpha_opt_measured, b.alpha_opt_measured);
+        assert_eq!(a.power_meas_nw, b.power_meas_nw);
         assert_eq!(a.gates_in, b.gates_in);
         assert_eq!((a.fired, a.rand_index, a.purity), (b.fired, b.rand_index, b.purity));
         assert_eq!(a.items, 6);
         assert!(a.area_um2 > 0.0 && a.power_nw > 0.0);
         assert!(a.alpha_measured > 0.0, "LFSR column always toggles");
+        // TNN7 flow: the per-net path is live, not the mean-α fallback.
+        assert!(a.alpha_opt_measured > 0.0 && a.power_meas_nw > 0.0);
+        assert_ne!(a.power_meas_nw, a.power_nw, "measured α differs from priors");
     }
 
     #[test]
     fn sim_backend_choice_never_changes_deterministic_fields() {
         // The cache-key contract: a gate-engine point computed under the
-        // interpreter and under the compiled backend must agree on every
-        // deterministic field (winners are bit-exact), so cache keys can
-        // legitimately exclude the backend.
+        // interpreter, the compiled backend, and the optimizer-reduced
+        // compiled backend must agree on every deterministic field
+        // (winners are bit-exact), so cache keys can legitimately exclude
+        // both the backend and the opt level.
         let p = small_point(EngineKind::Gate);
-        let a = compute_point_with(&p, SimBackend::BitParallel64).unwrap();
-        let b =
-            compute_point_with(&p, SimBackend::Compiled { words: 1, threads: 1 }).unwrap();
-        let c =
-            compute_point_with(&p, SimBackend::Compiled { words: 2, threads: 1 }).unwrap();
+        let a =
+            compute_point_with(&p, SimBackend::BitParallel64, OptLevel::None).unwrap();
+        let b = compute_point_with(
+            &p,
+            SimBackend::Compiled { words: 1, threads: 1 },
+            OptLevel::None,
+        )
+        .unwrap();
+        let c = compute_point_with(
+            &p,
+            SimBackend::Compiled { words: 2, threads: 1 },
+            OptLevel::Inference,
+        )
+        .unwrap();
         for other in [&b, &c] {
             assert_eq!(a.theta, other.theta);
             assert_eq!(a.alpha_measured, other.alpha_measured);

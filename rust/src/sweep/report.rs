@@ -101,12 +101,12 @@ pub fn synth_ratio_curve(rows: &[SweepRow]) -> Vec<RatioRow> {
 pub fn tsv(outcome: &SweepOutcome) -> String {
     let mut s = String::from(
         "p\tq\ttheta\tflow\tengine\tseed\tsynapses\tarea_um2\tpower_uw\tcomp_ns\t\
-         edp_fj_ns\talpha_meas\tgates_in\tcells\tmacros\titems\tfired\trand_index\tpurity\terror_pct\n",
+         edp_fj_ns\talpha_meas\talpha_opt\tpower_meas_uw\tgates_in\tcells\tmacros\titems\tfired\trand_index\tpurity\terror_pct\n",
     );
     for r in &outcome.rows {
         let (pt, res) = (&r.point, &r.result);
         s.push_str(&format!(
-            "{}\t{}\t{}\t{}\t{}\t{}\t{}\t{:.2}\t{:.3}\t{:.2}\t{:.1}\t{:.5}\t{}\t{}\t{}\t{}\t{}\t{:.4}\t{:.4}\t{:.2}\n",
+            "{}\t{}\t{}\t{}\t{}\t{}\t{}\t{:.2}\t{:.3}\t{:.2}\t{:.1}\t{:.5}\t{:.5}\t{:.3}\t{}\t{}\t{}\t{}\t{}\t{:.4}\t{:.4}\t{:.2}\n",
             pt.p,
             pt.q,
             res.theta,
@@ -119,6 +119,8 @@ pub fn tsv(outcome: &SweepOutcome) -> String {
             res.comp_time_ns,
             res.edp_fj_ns,
             res.alpha_measured,
+            res.alpha_opt_measured,
+            res.power_meas_nw / 1000.0,
             res.gates_in,
             res.cells_out,
             res.macros_out,
@@ -165,6 +167,8 @@ pub fn to_json(outcome: &SweepOutcome) -> Json {
                             .set("comp_time_ns", r.result.comp_time_ns)
                             .set("edp_fj_ns", r.result.edp_fj_ns)
                             .set("alpha_measured", r.result.alpha_measured)
+                            .set("alpha_opt_measured", r.result.alpha_opt_measured)
+                            .set("power_meas_nw", r.result.power_meas_nw)
                             .set("gates_in", r.result.gates_in)
                             .set("cells_out", r.result.cells_out)
                             .set("macros_out", r.result.macros_out)
@@ -385,6 +389,8 @@ mod tests {
         assert!(j.contains("\"power_error\""));
         assert!(j.contains("\"error_pct\""));
         assert!(j.contains("\"alpha_measured\""));
+        assert!(j.contains("\"alpha_opt_measured\""));
+        assert!(j.contains("\"power_meas_nw\""));
         assert!(j.contains("\"cached\""));
         assert!(j.contains("\"quarantined\""));
     }

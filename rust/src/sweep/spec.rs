@@ -8,7 +8,7 @@
 //! on top, so a whole experiment campaign is one small text file.
 
 use crate::config::EngineKind;
-use crate::gates::SimBackend;
+use crate::gates::{OptLevel, SimBackend};
 use crate::synth::flow::Flow;
 use crate::tnn::params::TnnParams;
 use crate::util::kv::KvDoc;
@@ -101,6 +101,13 @@ pub struct SweepSpec {
     pub sim_backend: SimBackend,
     /// Lane-block width for a `compiled` `sim_backend` (`sim_words` key).
     pub sim_words: usize,
+    /// Netlist optimization level for each point's compiled gate-engine
+    /// inference scoring (`opt` key, `none|inference`). An **execution
+    /// knob** exactly like `sim_backend`: winners are bit-exact across
+    /// levels, so it is deliberately NOT part of [`SweepPoint`] or the
+    /// cache key — a cache warmed at one level serves every other level
+    /// 100% (CI proves this).
+    pub opt: OptLevel,
 }
 
 impl Default for SweepSpec {
@@ -129,6 +136,7 @@ impl Default for SweepSpec {
                 threads: 1,
             },
             sim_words: crate::gates::DEFAULT_SIM_WORDS,
+            opt: OptLevel::None,
         }
     }
 }
@@ -208,7 +216,8 @@ impl SweepSpec {
     /// (`default|sparse|fixed:<n>`), `flows` (`asap7,tnn7`), `engines`
     /// (`golden,batched,gate`), `seeds`, `per_cluster`, `epochs`,
     /// `threads`, `cache_dir`, `out_dir`, `sim_backend`
-    /// (`scalar|bit-parallel-64|compiled`), `sim_words`.
+    /// (`scalar|bit-parallel-64|compiled`), `sim_words`, `opt`
+    /// (`none|inference`).
     pub fn from_kv(doc: &KvDoc) -> crate::Result<Self> {
         let mut s = SweepSpec::default();
         if let Some(v) = doc.get("name") {
@@ -280,6 +289,9 @@ impl SweepSpec {
         if let Some(v) = doc.get_usize("sim_words")? {
             s.sim_words = v;
         }
+        if let Some(v) = doc.get("opt") {
+            s.opt = OptLevel::parse(v)?;
+        }
         s.validate()?;
         Ok(s)
     }
@@ -311,10 +323,10 @@ impl SweepSpec {
                 .ok_or_else(|| anyhow::anyhow!("override must be key=value: {o}"))?;
             doc.set(k.trim(), v.trim());
         }
-        const KEYS: [&str; 14] = [
+        const KEYS: [&str; 15] = [
             "name", "geometries", "datasets", "theta", "flows", "engines", "seeds",
             "per_cluster", "epochs", "threads", "cache_dir", "out_dir", "sim_backend",
-            "sim_words",
+            "sim_words", "opt",
         ];
         for key in doc.keys() {
             anyhow::ensure!(KEYS.contains(&key), "unknown sweep key {key:?}");
@@ -335,6 +347,7 @@ impl SweepSpec {
                 "out_dir" => self.out_dir = merged.out_dir.clone(),
                 "sim_backend" => self.sim_backend = merged.sim_backend,
                 "sim_words" => self.sim_words = merged.sim_words,
+                "opt" => self.opt = merged.opt,
                 _ => unreachable!("key set checked above"),
             }
         }
@@ -503,6 +516,24 @@ mod tests {
         // stay backend-stable): canonical strings don't mention it.
         for p in s.points() {
             assert!(!p.canonical().contains("sim"), "{}", p.canonical());
+        }
+    }
+
+    #[test]
+    fn opt_is_an_execution_knob_outside_the_point_definition() {
+        let doc = KvDoc::parse("opt = inference\n").unwrap();
+        let s = SweepSpec::from_kv(&doc).unwrap();
+        assert_eq!(s.opt, OptLevel::Inference);
+        let mut s = SweepSpec::default();
+        assert_eq!(s.opt, OptLevel::None, "default level is none");
+        s.apply_overrides(&["opt=inference".into()]).unwrap();
+        assert_eq!(s.opt, OptLevel::Inference);
+        assert!(s.apply_overrides(&["opt=bogus".into()]).is_err());
+        // Like sim_backend, opt must never reach the point definition
+        // (cache keys stay level-stable): canonical strings don't mention
+        // it.
+        for p in s.points() {
+            assert!(!p.canonical().contains("opt="), "{}", p.canonical());
         }
     }
 

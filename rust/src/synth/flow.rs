@@ -3,9 +3,10 @@
 
 use super::expand::expand_macros;
 use super::map::{tech_map, MappedNetlist};
-use super::opt::{optimize, OptStats};
+use super::opt::{optimize_tracked, OptStats};
 use crate::cells::{self, CellLibrary};
 use crate::gates::netlist::Netlist;
+use crate::gates::opt::NetRemap;
 use std::time::{Duration, Instant};
 
 /// Which cell library / macro policy to synthesize with.
@@ -97,6 +98,14 @@ pub struct SynthOutcome {
     pub mapped: MappedNetlist,
     /// Metering and inventory statistics.
     pub stats: SynthStats,
+    /// Optimizer-input-id → mapped-netlist-id translation (tech mapping
+    /// preserves net ids, so this is exactly the logic optimizer's
+    /// composed DCE remap). The *input* id space is the design netlist for
+    /// [`Flow::Tnn7`]; for [`Flow::Baseline`] it is the macro-expanded
+    /// netlist, whose ids do **not** correspond to the design's — per-net
+    /// artifacts measured on the design netlist only translate under the
+    /// macro-preserving flow.
+    pub remap: NetRemap,
 }
 
 /// Synthesize a design netlist under the given flow.
@@ -115,7 +124,7 @@ pub fn synthesize(design: &Netlist, flow: Flow) -> SynthOutcome {
     let gates_in = working.gates.len();
 
     let topt = Instant::now();
-    let (optimized, opt_stats) = optimize(working);
+    let (optimized, opt_stats, remap) = optimize_tracked(working);
     let opt_wall = topt.elapsed();
 
     let tmap = Instant::now();
@@ -133,7 +142,7 @@ pub fn synthesize(design: &Netlist, flow: Flow) -> SynthOutcome {
         cells_out: mapped.cell_count(),
         macros_out: mapped.macro_count(),
     };
-    SynthOutcome { mapped, stats }
+    SynthOutcome { mapped, stats, remap }
 }
 
 #[cfg(test)]

@@ -8,6 +8,7 @@
 //! (Fig. 12 of the paper).
 
 use crate::gates::netlist::{Gate, MacroInst, NetId, Netlist};
+use crate::gates::opt::NetRemap;
 use std::collections::HashMap;
 
 /// Optimization statistics (also the Fig. 12 "work" evidence).
@@ -26,23 +27,43 @@ pub struct OptStats {
 }
 
 /// Run the optimization pipeline on a netlist.
-pub fn optimize(mut nl: Netlist) -> (Netlist, OptStats) {
+pub fn optimize(nl: Netlist) -> (Netlist, OptStats) {
+    let (nl, stats, _) = optimize_tracked(nl);
+    (nl, stats)
+}
+
+/// [`optimize`], additionally returning the input-id → output-id
+/// [`NetRemap`]: rewrite passes only redirect references (identity on the
+/// id space), so the remap is the composition of every DCE compaction. A
+/// net that was aliased away or removed maps to `None`; its readers now
+/// reference the canonical survivor, which keeps its own activity — which
+/// is what lets a per-net toggle vector measured on the *input* netlist be
+/// carried onto the optimized mapping
+/// ([`crate::ppa::report::analyze_with_alpha_remapped`]).
+pub fn optimize_tracked(mut nl: Netlist) -> (Netlist, OptStats, NetRemap) {
     let mut stats = OptStats {
         gates_before: nl.gates.len(),
         ..OptStats::default()
     };
+    let mut remap = NetRemap::identity(nl.gates.len(), nl.macros.len());
     const MAX_ITERS: usize = 12;
     loop {
         stats.iterations += 1;
         let rewrites = rewrite_pass(&mut nl, &mut stats.work);
         stats.rewrites += rewrites;
-        let removed = dce(&mut nl, &mut stats.work);
-        if (rewrites == 0 && removed == 0) || stats.iterations >= MAX_ITERS {
+        let removed = match dce(&mut nl, &mut stats.work) {
+            Some(step) => {
+                remap = remap.then(&step);
+                true
+            }
+            None => false,
+        };
+        if (rewrites == 0 && !removed) || stats.iterations >= MAX_ITERS {
             break;
         }
     }
     stats.gates_after = nl.gates.len();
-    (nl, stats)
+    (nl, stats, remap)
 }
 
 /// One local-rewrite sweep: computes a replacement map (net → equivalent
@@ -246,8 +267,10 @@ fn rewrite_pass(nl: &mut Netlist, work: &mut u64) -> u64 {
 /// Dead-code elimination with compaction: keeps everything reachable from
 /// primary outputs, macro instances (always live — they implement declared
 /// design function), live DFF fan-ins, and primary inputs (pin interface).
-/// Returns the number of removed gates.
-fn dce(nl: &mut Netlist, work: &mut u64) -> u64 {
+/// Returns the compaction's [`NetRemap`], or `None` when nothing was
+/// removed (macro instances are never removed, so the macro map is always
+/// identity).
+fn dce(nl: &mut Netlist, work: &mut u64) -> Option<NetRemap> {
     let n = nl.gates.len();
     let mut live = vec![false; n];
     let mut stack: Vec<NetId> = Vec::new();
@@ -295,13 +318,13 @@ fn dce(nl: &mut Netlist, work: &mut u64) -> u64 {
             }
         }
     }
-    let removed = live.iter().filter(|&&l| !l).count() as u64;
+    let removed = live.iter().filter(|&&l| !l).count();
     if removed == 0 {
-        return 0;
+        return None;
     }
     // Compact.
     let mut remap: Vec<NetId> = vec![u32::MAX; n];
-    let mut gates = Vec::with_capacity(n - removed as usize);
+    let mut gates = Vec::with_capacity(n - removed);
     for i in 0..n {
         if live[i] {
             remap[i] = gates.len() as NetId;
@@ -343,7 +366,17 @@ fn dce(nl: &mut Netlist, work: &mut u64) -> u64 {
     for (_, net) in &mut nl.outputs {
         *net = remap[*net as usize];
     }
-    removed
+    let new_nets = nl.gates.len();
+    let n_macros = nl.macros.len();
+    Some(NetRemap::from_maps(
+        remap
+            .iter()
+            .map(|&m| (m != u32::MAX).then_some(m))
+            .collect(),
+        new_nets,
+        (0..n_macros as u32).map(Some).collect(),
+        n_macros,
+    ))
 }
 
 #[cfg(test)]
@@ -370,6 +403,35 @@ mod tests {
         let (_, out) = nl.outputs[0];
         assert_eq!(out, nl.inputs[0].1);
         assert!(nl.gates.len() <= 3, "gates left: {}", nl.gates.len());
+    }
+
+    #[test]
+    fn tracked_remap_translates_per_net_vectors_onto_the_optimized_netlist() {
+        let mut b = NetBuilder::new("t");
+        let a = b.input("a");
+        let c = b.input("b");
+        let dead = b.xor(a, c); // unreferenced → removed by DCE
+        let x = b.and(a, c);
+        let y = b.and(a, c); // CSE alias of x → removed
+        let o = b.or(x, y); // or(x,x) → alias of x → removed
+        b.output("o", o);
+        let original = b.finish();
+        let n = original.gates.len();
+        let (opt, _, remap) = optimize_tracked(original);
+        assert_eq!(remap.old_net_count(), n);
+        assert_eq!(remap.new_net_count(), opt.gates.len());
+        assert!(remap.net(a).is_some() && remap.net(c).is_some());
+        assert_eq!(remap.net(dead), None, "dead xor has no image");
+        assert_eq!(remap.net(y), None, "CSE alias has no image");
+        // The output port now points at the surviving and-gate's image.
+        let (_, out) = opt.outputs[0];
+        assert_eq!(remap.net(x), Some(out));
+        // A per-net vector translates: survivors carry their entries to
+        // their new indices, removed entries drop.
+        let per_net: Vec<f64> = (0..n).map(|i| i as f64).collect();
+        let t = remap.translate_per_net(&per_net);
+        assert_eq!(t.len(), opt.gates.len());
+        assert_eq!(t[out as usize], x as f64);
     }
 
     #[test]

@@ -1,0 +1,437 @@
+//! Netlist-optimizer differential suite (the PR's acceptance gates):
+//!
+//! 1. the inference pipeline (`ConstProp → DeadCode → Locality`) keeps
+//!    values **and** toggle counts bit-exact on every *retained* net —
+//!    checked against the unoptimized netlist on all three simulator
+//!    backends, over the shared conformance geometry matrix, at 1/2/4
+//!    compiled worker threads, under identical per-input stimulus draws
+//!    (tied BRV inputs held low on the unoptimized side, exactly the
+//!    assumption the optimizer was handed);
+//! 2. each pass is independently equivalent on its own remap — dead-code
+//!    elimination and locality renumbering under *unrestricted* stimulus
+//!    (their soundness does not depend on the tied-low assumptions);
+//! 3. a zero-assumption `ConstProp + DeadCode` pipeline is a structural
+//!    no-op on const-free fully-live logic, and the empty pipeline is an
+//!    identity on any verifiable netlist;
+//! 4. a fault campaign on the optimized column agrees with the remapped
+//!    unoptimized campaign for every surviving fault site (output streams
+//!    and winner mismatches bit-exact; a verdict may only weaken from
+//!    latent to masked when the diverging state was itself optimized
+//!    away);
+//! 5. inference specialization removes at least 25% of the compiled
+//!    instructions on the 82×2 UCR flagship, and the gate engine's
+//!    winners are identical across opt levels, backends and threads.
+
+use std::collections::HashSet;
+
+use tnn7::gates::column_design::{build_column, BrvSource};
+use tnn7::gates::fault::{campaign, sample_faults};
+use tnn7::gates::gate_engine::{cached_program, GateColumn};
+use tnn7::gates::opt::{const_propagate, eliminate_dead, schedule_locality};
+use tnn7::gates::{
+    CompiledProgram, CompiledSim, FaultClass, GateFault, KeepSet, NetBuilder, NetId, NetRemap,
+    Netlist, OptAssumptions, OptLevel, Pass, PassPipeline, SimBackend, Simulator, WordSimulator,
+    CONFORMANCE_GEOMETRIES,
+};
+use tnn7::tnn::spike::random_volley;
+use tnn7::tnn::{SpikeTime, TnnParams};
+use tnn7::util::Rng64;
+
+/// One differential run's configuration (bundled so the helper stays
+/// under clippy's argument budget).
+struct DiffRun<'a> {
+    tag: String,
+    /// Original-netlist input nets held low on both sides (the optimizer's
+    /// tied-low assumption set; empty = unrestricted stimulus).
+    tied: &'a HashSet<NetId>,
+    seed: u64,
+    passes: u64,
+    threads: usize,
+}
+
+/// Drive `orig` and `optd` with identical per-input stimulus draws on all
+/// three backends and assert that every retained net (per `remap`) carries
+/// identical values after every settle — and identical toggle counters at
+/// the end — on each backend independently.
+fn assert_retained_equivalence(orig: &Netlist, optd: &Netlist, remap: &NetRemap, run: &DiffRun) {
+    let tag = &run.tag;
+    let mut s_o = Simulator::new(orig).unwrap();
+    let mut s_p = Simulator::new(optd).unwrap();
+    let mut w_o = WordSimulator::new(orig).unwrap();
+    let mut w_p = WordSimulator::new(optd).unwrap();
+    let mut c_o = CompiledSim::new(orig, 2, run.threads).unwrap();
+    let mut c_p = CompiledSim::new(optd, 2, run.threads).unwrap();
+    let mut rng = Rng64::seed_from_u64(run.seed);
+    for pass in 0..run.passes {
+        for (_, id) in &orig.inputs {
+            let id = *id;
+            if run.tied.contains(&id) {
+                s_o.set_input_net(id, false);
+                w_o.set_input_net(id, 0);
+                for w in 0..2 {
+                    c_o.set_input_net(id, w, 0);
+                }
+                // A per-pass run may keep a tied input alive (only the full
+                // pipeline's DeadCode removes it) — hold it low there too.
+                if let Some(m) = remap.net(id) {
+                    s_p.set_input_net(m, false);
+                    w_p.set_input_net(m, 0);
+                    for w in 0..2 {
+                        c_p.set_input_net(m, w, 0);
+                    }
+                }
+                continue;
+            }
+            // Sparse Bernoulli(1/8) pulses, one draw per compiled word.
+            let w0 = rng.next_u64() & rng.next_u64() & rng.next_u64();
+            let w1 = rng.next_u64() & rng.next_u64() & rng.next_u64();
+            s_o.set_input_net(id, w0 & 1 == 1);
+            w_o.set_input_net(id, w0);
+            c_o.set_input_net(id, 0, w0);
+            c_o.set_input_net(id, 1, w1);
+            // A structurally dead input may be removed outright — sound,
+            // because removal proves no path from it to any retained net.
+            if let Some(m) = remap.net(id) {
+                s_p.set_input_net(m, w0 & 1 == 1);
+                w_p.set_input_net(m, w0);
+                c_p.set_input_net(m, 0, w0);
+                c_p.set_input_net(m, 1, w1);
+            }
+        }
+        s_o.settle();
+        s_p.settle();
+        w_o.settle();
+        w_p.settle();
+        c_o.settle();
+        c_p.settle();
+        for net in 0..orig.len() as NetId {
+            let Some(m) = remap.net(net) else { continue };
+            assert_eq!(
+                s_o.get(net),
+                s_p.get(m),
+                "{tag}: net {net}->{m} pass {pass} (scalar)"
+            );
+            assert_eq!(
+                w_o.get(net),
+                w_p.get(m),
+                "{tag}: net {net}->{m} pass {pass} (word)"
+            );
+            for w in 0..2 {
+                assert_eq!(
+                    c_o.get_word(net, w),
+                    c_p.get_word(m, w),
+                    "{tag}: net {net}->{m} pass {pass} word {w} (compiled)"
+                );
+            }
+        }
+        s_o.clock();
+        s_p.clock();
+        w_o.clock();
+        w_p.clock();
+        c_o.clock();
+        c_p.clock();
+    }
+    // Toggle counters on retained nets translate exactly: every optimized
+    // net is the image of exactly one original net, and its value sequence
+    // was bit-identical above.
+    assert_eq!(
+        &remap.translate_per_net(s_o.toggles())[..],
+        s_p.toggles(),
+        "{tag}: scalar toggle counters on retained nets"
+    );
+    assert_eq!(
+        &remap.translate_per_net(w_o.toggles())[..],
+        w_p.toggles(),
+        "{tag}: word toggle counters on retained nets"
+    );
+    assert_eq!(
+        &remap.translate_per_net(c_o.toggles())[..],
+        c_p.toggles(),
+        "{tag}: compiled toggle counters on retained nets"
+    );
+}
+
+/// The tied-low BRV input set of an `Inputs`-sourced column, in original
+/// netlist ids.
+fn tied_brvs(d: &tnn7::gates::column_design::ColumnDesign) -> HashSet<NetId> {
+    d.brv_case
+        .iter()
+        .flatten()
+        .chain(d.brv_stab.iter().flatten())
+        .copied()
+        .collect()
+}
+
+/// Acceptance matrix: the full inference pipeline over every shared
+/// conformance geometry, differentially equivalent on all three backends
+/// at 1, 2 and 4 compiled worker threads. The 82×2 flagship runs a
+/// reduced pass budget (its netlist is ~200× the small shapes).
+#[test]
+fn inference_pipeline_is_bit_exact_on_retained_nets_across_geometries() {
+    for &(p, q, seed) in CONFORMANCE_GEOMETRIES.iter() {
+        let d = build_column(p, q, (p as u32 * 7) / 4, BrvSource::Inputs);
+        let (od, remap) = d.optimize_inference().unwrap();
+        assert!(
+            od.netlist.len() < d.netlist.len(),
+            "{p}x{q}: inference specialization must shrink the netlist"
+        );
+        assert_eq!(remap.old_net_count(), d.netlist.len());
+        assert_eq!(remap.new_net_count(), od.netlist.len());
+        assert!(od.brv_case.is_empty() && od.brv_stab.is_empty());
+        let tied = tied_brvs(&d);
+        let passes = if p * q >= 128 { 2 } else { 8 };
+        for threads in [1usize, 2, 4] {
+            assert_retained_equivalence(
+                &d.netlist,
+                &od.netlist,
+                &remap,
+                &DiffRun {
+                    tag: format!("{p}x{q} threads={threads}"),
+                    tied: &tied,
+                    seed,
+                    passes,
+                    threads,
+                },
+            );
+        }
+    }
+}
+
+/// Pass-by-pass equivalence, each pass on its own remap. DeadCode and
+/// Locality are checked under *unrestricted* stimulus (BRVs driven
+/// randomly): their soundness is purely structural and must not depend on
+/// the tied-low assumptions.
+#[test]
+fn each_pass_is_independently_equivalent_on_its_retained_nets() {
+    let (p, q, seed) = (7usize, 4usize, 0x5EEDu64);
+    let d = build_column(p, q, 12, BrvSource::Inputs);
+    let tied = tied_brvs(&d);
+    let empty = HashSet::new();
+
+    let (nl_cp, r_cp) = const_propagate(&d.netlist, &d.inference_assumptions());
+    assert_retained_equivalence(
+        &d.netlist,
+        &nl_cp,
+        &r_cp,
+        &DiffRun {
+            tag: "const-prop".into(),
+            tied: &tied,
+            seed,
+            passes: 10,
+            threads: 1,
+        },
+    );
+
+    let (nl_dc, r_dc) = eliminate_dead(&d.netlist, &d.keep_set());
+    assert!(nl_dc.len() <= d.netlist.len());
+    assert_retained_equivalence(
+        &d.netlist,
+        &nl_dc,
+        &r_dc,
+        &DiffRun {
+            tag: "dead-code".into(),
+            tied: &empty,
+            seed: seed ^ 1,
+            passes: 10,
+            threads: 2,
+        },
+    );
+
+    let (nl_loc, r_loc) = schedule_locality(&d.netlist).unwrap();
+    assert_eq!(nl_loc.len(), d.netlist.len(), "locality is a pure renumbering");
+    assert_eq!(r_loc.new_net_count(), r_loc.old_net_count());
+    assert!(r_loc.removed_nets().is_empty());
+    assert_retained_equivalence(
+        &d.netlist,
+        &nl_loc,
+        &r_loc,
+        &DiffRun {
+            tag: "locality".into(),
+            tied: &empty,
+            seed: seed ^ 2,
+            passes: 10,
+            threads: 4,
+        },
+    );
+}
+
+/// Zero-assumption no-op property: with nothing assumed constant and every
+/// gate live, `ConstProp + DeadCode` must return the input netlist
+/// unchanged under an identity remap — the optimizer never rewrites logic
+/// it cannot prove anything about. The empty pipeline is an identity on
+/// any verifiable netlist, column included.
+#[test]
+fn zero_assumption_pipeline_is_a_structural_no_op_on_const_free_live_logic() {
+    let mut b = NetBuilder::new("noop");
+    let a = b.input("a");
+    let c = b.input("c");
+    let x = b.xor(a, c);
+    let n = b.not(x);
+    let m = b.mux(a, x, n);
+    let qn = b.dff(m, Some(c), false);
+    let o = b.or(qn, m);
+    b.output("o", o);
+    let nl = b.finish();
+    let pipe = PassPipeline::custom(
+        vec![Pass::ConstProp, Pass::DeadCode],
+        OptAssumptions::none(),
+        KeepSet::new(),
+    );
+    let (out, remap) = pipe.run(&nl).unwrap();
+    assert!(remap.is_identity());
+    assert_eq!(out, nl, "const-free fully-live logic must pass through untouched");
+
+    let d = build_column(5, 2, 8, BrvSource::Inputs);
+    let (same, r) = PassPipeline::none().run(&d.netlist).unwrap();
+    assert!(r.is_identity());
+    assert_eq!(same, d.netlist);
+}
+
+/// Fault-campaign agreement: faults sampled on the original column,
+/// filtered through [`GateFault::remap`], classified on the optimized
+/// column — output-stream verdicts bit-exact, state verdicts allowed to
+/// weaken from latent to masked only when the diverging state itself was
+/// optimized away.
+#[test]
+fn optimized_fault_campaign_agrees_with_the_remapped_original() {
+    let (p, q) = (16usize, 3usize);
+    let params = TnnParams::default();
+    let theta = params.default_theta(p);
+    let d = build_column(p, q, theta, BrvSource::Inputs);
+    let gamma = params.gamma_cycles;
+    let items = 4usize;
+    let mut rng = Rng64::seed_from_u64(0xFA11);
+    let ws: Vec<u8> = (0..p * q)
+        .map(|_| rng.gen_u8_inclusive(0, params.w_max()))
+        .collect();
+    let volleys: Vec<Vec<SpikeTime>> = (0..items)
+        .map(|_| random_volley(p, 0.3, 8, &mut rng))
+        .collect();
+    let vrefs: Vec<&[SpikeTime]> = volleys.iter().map(|v| v.as_slice()).collect();
+    let total_cycles = items as u64 * gamma as u64;
+    let faults = sample_faults(&d.netlist, 30, 30, total_cycles, 0xF00D);
+    let reference = campaign(&d, &ws, gamma, &vrefs, &faults, SimBackend::BitParallel64).unwrap();
+
+    let (od, remap) = d.optimize_inference().unwrap();
+    let surviving: Vec<(usize, GateFault)> = faults
+        .iter()
+        .enumerate()
+        .filter_map(|(i, f)| f.remap(&remap).map(|g| (i, g)))
+        .collect();
+    assert!(
+        !surviving.is_empty(),
+        "some sampled faults must land on retained logic"
+    );
+    assert!(
+        surviving.len() < faults.len(),
+        "inference specialization must remove some sampled fault sites"
+    );
+    let opt_faults: Vec<GateFault> = surviving.iter().map(|&(_, g)| g).collect();
+    for backend in [
+        SimBackend::Scalar,
+        SimBackend::BitParallel64,
+        SimBackend::Compiled { words: 2, threads: 2 },
+    ] {
+        let r = campaign(&od, &ws, gamma, &vrefs, &opt_faults, backend).unwrap();
+        assert_eq!(
+            r.ref_winners,
+            reference.ref_winners,
+            "fault-free winners must survive optimization ({})",
+            backend.name()
+        );
+        for (k, &(i, _)) in surviving.iter().enumerate() {
+            let orig = &reference.outcomes[i];
+            let opt = &r.outcomes[k];
+            assert_eq!(
+                orig.winner_mismatches,
+                opt.winner_mismatches,
+                "fault {i} on {}: winner mismatches differ",
+                backend.name()
+            );
+            assert_eq!(
+                orig.class == FaultClass::Propagated,
+                opt.class == FaultClass::Propagated,
+                "fault {i} on {}: output-stream verdict differs ({:?} vs {:?})",
+                backend.name(),
+                orig.class,
+                opt.class
+            );
+            assert!(
+                opt.class == orig.class
+                    || (orig.class == FaultClass::Latent && opt.class == FaultClass::Masked),
+                "fault {i} on {}: {:?} may only weaken to masked, got {:?}",
+                backend.name(),
+                orig.class,
+                opt.class
+            );
+        }
+    }
+}
+
+/// The headline acceptance number: inference specialization removes at
+/// least 25% of the compiled instructions on the 82×2 UCR flagship.
+#[test]
+fn inference_specialization_cuts_a_quarter_of_flagship_instructions() {
+    let (p, q, _) = CONFORMANCE_GEOMETRIES[0];
+    let theta = (p as u32 * 7) / 4;
+    let d = build_column(p, q, theta, BrvSource::Inputs);
+    let full = CompiledProgram::compile(&d.netlist).unwrap();
+    let pipeline = PassPipeline::inference(d.inference_assumptions(), d.keep_set());
+    let (opt, remap) = CompiledProgram::compile_opt(&d.netlist, &pipeline).unwrap();
+    assert_eq!(remap.old_net_count(), d.netlist.len());
+    assert_eq!(remap.new_net_count(), opt.net_count());
+    let cut = 1.0 - opt.instr_count() as f64 / full.instr_count() as f64;
+    assert!(
+        cut >= 0.25,
+        "expected >= 25% instruction cut on {p}x{q}, got {:.1}% ({} -> {})",
+        cut * 100.0,
+        full.instr_count(),
+        opt.instr_count()
+    );
+}
+
+/// End-to-end engine contract: winners are identical across opt levels,
+/// backends, lane-block widths and worker threads, and the interned
+/// inference program is strictly leaner with nothing left to silence.
+#[test]
+fn engine_winners_are_identical_across_opt_levels_backends_and_threads() {
+    let (p, q) = (16usize, 3usize);
+    let params = TnnParams::default();
+    let theta = params.default_theta(p);
+    let mut rng = Rng64::seed_from_u64(0xBEE);
+    let ws: Vec<u8> = (0..p * q)
+        .map(|_| rng.gen_u8_inclusive(0, params.w_max()))
+        .collect();
+    let volleys: Vec<Vec<SpikeTime>> = (0..6).map(|_| random_volley(p, 0.3, 8, &mut rng)).collect();
+    let vrefs: Vec<&[SpikeTime]> = volleys.iter().map(|v| v.as_slice()).collect();
+    let mut gate = GateColumn::with_weights(p, q, theta, params, &ws).unwrap();
+    let want = gate.infer_batch(&vrefs);
+    for (backend, opt) in [
+        (SimBackend::BitParallel64, OptLevel::Inference),
+        (SimBackend::Compiled { words: 1, threads: 1 }, OptLevel::Inference),
+        (SimBackend::Compiled { words: 2, threads: 2 }, OptLevel::Inference),
+        (SimBackend::Compiled { words: 2, threads: 4 }, OptLevel::None),
+        (SimBackend::Compiled { words: 4, threads: 2 }, OptLevel::Inference),
+    ] {
+        gate.set_sim_backend(backend);
+        gate.set_opt_level(opt);
+        assert_eq!(
+            gate.infer_batch(&vrefs),
+            want,
+            "winners under {} opt={}",
+            backend.name(),
+            opt.name()
+        );
+    }
+    // Round-trip back to the unoptimized program.
+    gate.set_opt_level(OptLevel::None);
+    assert_eq!(gate.infer_batch(&vrefs), want);
+    // The interned programs are shared per (geometry, opt) and the
+    // inference one is strictly leaner with no BRVs left to silence.
+    let full = cached_program(p, q, theta, OptLevel::None);
+    let opt = cached_program(p, q, theta, OptLevel::Inference);
+    assert!(std::ptr::eq(full, cached_program(p, q, theta, OptLevel::None)));
+    assert!(std::ptr::eq(opt, cached_program(p, q, theta, OptLevel::Inference)));
+    assert!(opt.prog.instr_count() < full.prog.instr_count());
+    assert!(opt.silence.is_empty());
+}

@@ -85,6 +85,36 @@ SCHEMAS = {
             }
         ]
     },
+    # Netlist-optimizer payoff artifact (benches/netlist_opt.rs):
+    # instruction counts before/after inference specialization, one-off
+    # compile times, and interpreted vs compiled vs compiled+optimized
+    # throughput (all rates share the unoptimized net-count denominator).
+    "BENCH_opt.json": {
+        "designs": [
+            {
+                "design": None,
+                "p": None,
+                "q": None,
+                "nets": None,
+                "nets_optimized": None,
+                "instr_full": None,
+                "instr_opt": None,
+                "instr_cut_pct": None,
+                "compile_ms_full": None,
+                "compile_ms_opt": None,
+                "lane_cycles_per_iter": None,
+                "words": None,
+                "threads": None,
+                "interpreted": {"median_ns": None, "net_lane_cycles_per_sec": None},
+                "compiled": {"median_ns": None, "net_lane_cycles_per_sec": None},
+                "compiled_opt": {
+                    "median_ns": None,
+                    "net_lane_cycles_per_sec": None,
+                    "speedup_vs_compiled": None,
+                },
+            }
+        ]
+    },
     "BENCH_sweep.json": {
         "name": None,
         "points": None,
@@ -104,6 +134,8 @@ SCHEMAS = {
                 "comp_time_ns": None,
                 "edp_fj_ns": None,
                 "alpha_measured": None,
+                "alpha_opt_measured": None,
+                "power_meas_nw": None,
                 "rand_index": None,
                 "purity": None,
                 "error_pct": None,

@@ -1,0 +1,884 @@
+#!/usr/bin/env python3
+"""Differential fuzz harness for the netlist optimizer (rust/src/gates/opt.rs).
+
+This container has no Rust toolchain, so — per the repo's verification
+convention (ROADMAP "Verification reality") — the optimizer's hot logic is
+ported to Python line-for-line and fuzzed differentially against a port of
+the levelized simulator:
+
+  * `const_propagate`: lattice fixpoint (comb short-circuit rules, DFF
+    reset/init folding, exhaustive macro-pin enumeration with the Moore
+    fold-to-0-only rule and the 2^FOLD_ENUM_CAP budget), canonical-const
+    allocation, reader rewiring.
+  * `eliminate_dead`: reverse reachability from outputs + keep-set (DFF
+    roots d/rst; a live macro instance roots all inputs and retains all
+    output pins), order-preserving compaction.
+  * `schedule_locality`: sources-first renumbering, per-level
+    (locality, u32::MAX - fanout, id) sort, identity shortcut.
+  * `NetRemap`: identity / composition / translate_per_net.
+  * `PassPipeline::run`: assumption/keep translation through the
+    accumulated remap.
+
+Checked properties, per random netlist (gates + DFF feedback + toy macro
+instances with partial pin_deps and behavioral state):
+
+  1. ConstProp: identity remap over old ids; every lattice `Some(c)` net
+     actually reads `c` at every settle under tied-low stimulus; values
+     AND toggle counts bit-exact on every original net.
+  2. DCE: retained-net values/toggles bit-exact under *unrestricted*
+     stimulus (dead-input removal must be stimulus-independent).
+  3. Locality: a pure renumbering — census and per-level populations
+     preserved, permutation remap, bit-exact under the remap.
+  4. Full pipeline: bit-exact on retained nets under tied-low stimulus,
+     toggles compared through `translate_per_net`.
+  5. Zero-assumption structural no-op on const-free, macro-free netlists
+     with an all-nets keep-set.
+
+Every optimized netlist must also pass the `Netlist::verify` port.
+
+Usage:  python3 scripts/fuzz_netlist_opt.py [--trials N] [--seed S]
+"""
+
+import argparse
+import random
+import sys
+
+PENDING = -1
+FOLD_ENUM_CAP = 12
+
+# --------------------------------------------------------------------------
+# Toy macros: deterministic behavioral models honoring the pin_deps
+# contract (a pin's eval reads only its declared dep inputs + state).
+# Shapes chosen to exercise the fold paths: T2.pin0 folds to 0 when either
+# input is tied low; T2.pin1 is a constant-true Moore pin, which the
+# optimizer must REFUSE to fold (Moore pins read 0 until the first clock).
+# --------------------------------------------------------------------------
+
+
+class ToyKind:
+    def __init__(self, name, n_inputs, state_bits, pins, step):
+        self.name = name
+        self.n_inputs = n_inputs
+        self.state_bits = state_bits
+        self.pins = pins  # list of (deps tuple, eval(ins, state) -> bool)
+        self.step = step  # step(ins, state) -> new state
+
+    def pin_deps(self, pin):
+        return self.pins[pin][0]
+
+
+TOY_KINDS = [
+    ToyKind(
+        "T0", 2, 1,
+        [((0, 1), lambda ins, s: (ins[0] ^ ins[1]) or bool(s & 1)),
+         ((), lambda ins, s: bool(s & 1))],
+        lambda ins, s: s ^ (1 if (ins[0] and ins[1]) else 0),
+    ),
+    ToyKind(
+        "T1", 3, 2,
+        [((1,), lambda ins, s: ins[1] ^ bool(s & 1)),
+         ((), lambda ins, s: s == 3)],
+        lambda ins, s: (1 if (ins[0] or (bool(s & 1) and not ins[2])) else 0)
+        | (((s >> 1) ^ (1 if ins[1] else 0)) << 1),
+    ),
+    ToyKind(
+        "T2", 2, 1,
+        [((0, 1), lambda ins, s: ins[0] and ins[1]),
+         ((), lambda ins, s: True)],
+        lambda ins, s: s ^ 1,
+    ),
+]
+
+
+def macro_eval(kind, ins, state):
+    return [fn(ins, state) for (_, fn) in kind.pins]
+
+
+# --------------------------------------------------------------------------
+# Netlist model. Gates are tuples:
+#   ("input",) ("const", v) ("buf", a) ("not", a) ("and", a, b)
+#   ("or", a, b) ("xor", a, b) ("mux", s, a, b)
+#   ("dff", d, rst_or_None, init) ("macroout", inst, pin)
+# Macros are [kind, inputs, outputs] lists.
+# --------------------------------------------------------------------------
+
+
+class Netlist:
+    def __init__(self):
+        self.gates = []
+        self.macros = []
+        self.inputs = []   # (name, id)
+        self.outputs = []  # (name, id)
+
+    def clone(self):
+        nl = Netlist()
+        nl.gates = list(self.gates)
+        nl.macros = [[k, list(i), list(o)] for (k, i, o) in self.macros]
+        nl.inputs = list(self.inputs)
+        nl.outputs = list(self.outputs)
+        return nl
+
+
+def comb_fanin(g):
+    op = g[0]
+    if op in ("buf", "not"):
+        return [g[1]]
+    if op in ("and", "or", "xor"):
+        return [g[1], g[2]]
+    if op == "mux":
+        return [g[1], g[2], g[3]]
+    return []
+
+
+def comb_fanin_full(nl, i):
+    g = nl.gates[i]
+    if g[0] == "macroout":
+        kind, inputs, _ = nl.macros[g[1]]
+        return [inputs[d] for d in kind.pin_deps(g[2])]
+    return comb_fanin(g)
+
+
+def levelize_buckets(nl):
+    n = len(nl.gates)
+    is_comb = [bool(comb_fanin_full(nl, i)) for i in range(n)]
+    indegree = [0] * n
+    fanout = [[] for _ in range(n)]
+    comb_count = 0
+    for i in range(n):
+        if not is_comb[i]:
+            continue
+        comb_count += 1
+        for src in comb_fanin_full(nl, i):
+            if is_comb[src]:
+                indegree[i] += 1
+                fanout[src].append(i)
+    frontier = [i for i in range(n) if is_comb[i] and indegree[i] == 0]
+    levels = []
+    scheduled = 0
+    while frontier:
+        scheduled += len(frontier)
+        nxt = []
+        for i in frontier:
+            for succ in fanout[i]:
+                indegree[succ] -= 1
+                if indegree[succ] == 0:
+                    nxt.append(succ)
+        nxt.sort()
+        levels.append(frontier)
+        frontier = nxt
+    if scheduled != comb_count:
+        raise ValueError("combinational cycle")
+    return levels
+
+
+def fanout_counts(nl):
+    counts = [0] * len(nl.gates)
+    for g in nl.gates:
+        for src in comb_fanin(g):
+            counts[src] += 1
+        if g[0] == "dff":
+            counts[g[1]] += 1
+            if g[2] is not None:
+                counts[g[2]] += 1
+    for (_, inputs, _) in nl.macros:
+        for src in inputs:
+            counts[src] += 1
+    for (_, net) in nl.outputs:
+        counts[net] += 1
+    return counts
+
+
+def verify(nl):
+    n = len(nl.gates)
+
+    def ok(src):
+        return src != PENDING and 0 <= src < n
+
+    for i, g in enumerate(nl.gates):
+        fins = list(comb_fanin(g))
+        if g[0] == "dff":
+            fins.append(g[1])
+            if g[2] is not None:
+                fins.append(g[2])
+        for src in fins:
+            if not ok(src):
+                raise ValueError(f"gate {i} {g}: bad fan-in net {src}")
+        if g[0] == "macroout":
+            inst, pin = g[1], g[2]
+            if inst >= len(nl.macros):
+                raise ValueError(f"gate {i}: missing macro {inst}")
+            if nl.macros[inst][2][pin] != i:
+                raise ValueError(f"gate {i}: pin table disagrees")
+    for inst, (kind, inputs, outputs) in enumerate(nl.macros):
+        if len(inputs) != kind.n_inputs or len(outputs) != len(kind.pins):
+            raise ValueError(f"macro {inst}: pin count mismatch")
+        for src in inputs:
+            if not ok(src):
+                raise ValueError(f"macro {inst}: bad input net {src}")
+        for pin, net in enumerate(outputs):
+            g = nl.gates[net] if 0 <= net < n else None
+            if g != ("macroout", inst, pin):
+                raise ValueError(f"macro {inst} pin {pin}: stolen pin")
+    for (name, i) in nl.inputs:
+        if not (0 <= i < n) or nl.gates[i][0] != "input":
+            raise ValueError(f"input {name} not an Input gate")
+    for (name, i) in nl.outputs:
+        if not ok(i):
+            raise ValueError(f"output {name}: bad net")
+    levelize_buckets(nl)
+
+
+# --------------------------------------------------------------------------
+# Levelized simulator port (gates/sim.rs): settle in topological order
+# with per-net toggle counting; clock captures DFFs (reset-to-init wins),
+# steps macro state on PRE-commit values, commits DFFs, then refreshes
+# Moore pins on post-commit values.
+# --------------------------------------------------------------------------
+
+
+class Sim:
+    def __init__(self, nl):
+        self.nl = nl
+        self.order = [i for level in levelize_buckets(nl) for i in level]
+        self.values = [False] * len(nl.gates)
+        for i, g in enumerate(nl.gates):
+            if g[0] == "const":
+                self.values[i] = g[1]
+            elif g[0] == "dff":
+                self.values[i] = g[3]
+        self.macro_states = [0] * len(nl.macros)
+        self.toggles = [0] * len(nl.gates)
+
+    def set_input(self, i, v):
+        assert self.nl.gates[i][0] == "input"
+        self.values[i] = v
+
+    def eval_net(self, i):
+        g = self.nl.gates[i]
+        v = self.values
+        op = g[0]
+        if op == "buf":
+            return v[g[1]]
+        if op == "not":
+            return not v[g[1]]
+        if op == "and":
+            return v[g[1]] and v[g[2]]
+        if op == "or":
+            return v[g[1]] or v[g[2]]
+        if op == "xor":
+            return v[g[1]] ^ v[g[2]]
+        if op == "mux":
+            return v[g[3]] if v[g[1]] else v[g[2]]
+        if op == "macroout":
+            kind, inputs, _ = self.nl.macros[g[1]]
+            ins = [v[s] for s in inputs]
+            return macro_eval(kind, ins, self.macro_states[g[1]])[g[2]]
+        return v[i]
+
+    def settle(self):
+        for i in self.order:
+            new = self.eval_net(i)
+            if new != self.values[i]:
+                self.toggles[i] += 1
+                self.values[i] = new
+
+    def clock(self):
+        dff_next = []
+        for i, g in enumerate(self.nl.gates):
+            if g[0] == "dff":
+                _, d, rst, init = g
+                if rst is not None and self.values[rst]:
+                    dff_next.append((i, init))
+                else:
+                    dff_next.append((i, self.values[d]))
+        for inst, (kind, inputs, _) in enumerate(self.nl.macros):
+            ins = [self.values[s] for s in inputs]
+            self.macro_states[inst] = kind.step(ins, self.macro_states[inst])
+        for (i, v) in dff_next:
+            if self.values[i] != v:
+                self.toggles[i] += 1
+                self.values[i] = v
+        for inst, (kind, inputs, outputs) in enumerate(self.nl.macros):
+            ins = [self.values[s] for s in inputs]
+            outs = macro_eval(kind, ins, self.macro_states[inst])
+            for pin, net in enumerate(outputs):
+                if not kind.pin_deps(pin):
+                    if self.values[net] != outs[pin]:
+                        self.toggles[net] += 1
+                        self.values[net] = outs[pin]
+
+
+# --------------------------------------------------------------------------
+# NetRemap port.
+# --------------------------------------------------------------------------
+
+
+class NetRemap:
+    def __init__(self, net_map, new_nets, macro_map, new_macros):
+        images = [m for m in net_map if m is not None]
+        assert len(images) == len(set(images)), "survivors collapsed"
+        assert all(0 <= m < new_nets for m in images)
+        self.net_map = net_map
+        self.macro_map = macro_map
+        self.new_nets = new_nets
+        self.new_macros = new_macros
+
+    @staticmethod
+    def identity(nets, macros):
+        return NetRemap(list(range(nets)), nets, list(range(macros)), macros)
+
+    def net(self, old):
+        return self.net_map[old]
+
+    def macro_inst(self, old):
+        return self.macro_map[old]
+
+    def removed_nets(self):
+        return [i for i, m in enumerate(self.net_map) if m is None]
+
+    def is_identity(self):
+        return (
+            self.new_nets == len(self.net_map)
+            and self.new_macros == len(self.macro_map)
+            and all(m == i for i, m in enumerate(self.net_map))
+            and all(m == i for i, m in enumerate(self.macro_map))
+        )
+
+    def then(self, nxt):
+        return NetRemap(
+            [None if m is None else nxt.net(m) for m in self.net_map],
+            nxt.new_nets,
+            [None if m is None else nxt.macro_inst(m) for m in self.macro_map],
+            nxt.new_macros,
+        )
+
+    def translate_per_net(self, old):
+        assert len(old) == len(self.net_map)
+        out = [0] * self.new_nets
+        for i, m in enumerate(self.net_map):
+            if m is not None:
+                out[m] = old[i]
+        return out
+
+
+# --------------------------------------------------------------------------
+# Pass 1: const_propagate port.
+# --------------------------------------------------------------------------
+
+COMB_OPS = ("buf", "not", "and", "or", "xor", "mux")
+
+
+def macro_pin_value(kind, inputs, pin, value):
+    deps = kind.pin_deps(pin)
+    sbits = kind.state_bits
+    unknown = [d for d in deps if value[inputs[d]] is None]
+    if len(unknown) + sbits > FOLD_ENUM_CAP:
+        return None
+    ins = [False] * len(inputs)
+    for d in deps:
+        if value[inputs[d]] is not None:
+            ins[d] = value[inputs[d]]
+    result = None
+    for ivec in range(1 << len(unknown)):
+        for k, d in enumerate(unknown):
+            ins[d] = bool((ivec >> k) & 1)
+        for st in range(1 << sbits):
+            v = macro_eval(kind, ins, st)[pin]
+            if result is None:
+                result = v
+            elif result != v:
+                return None
+    if not deps and result is True:
+        return None  # Moore pins read 0 until the first clock refresh
+    return result
+
+
+def comb_value(g, value):
+    op = g[0]
+    if op == "buf":
+        return value[g[1]]
+    if op == "not":
+        a = value[g[1]]
+        return None if a is None else (not a)
+    if op == "and":
+        a, b = value[g[1]], value[g[2]]
+        if a is False or b is False:
+            return False
+        if a is not None and b is not None:
+            return a and b
+        return None
+    if op == "or":
+        a, b = value[g[1]], value[g[2]]
+        if a is True or b is True:
+            return True
+        if a is not None and b is not None:
+            return a or b
+        return None
+    if op == "xor":
+        a, b = value[g[1]], value[g[2]]
+        if a is not None and b is not None:
+            return a != b
+        return None
+    if op == "mux":
+        s, a, b = value[g[1]], value[g[2]], value[g[3]]
+        if s is True:
+            return b
+        if s is False:
+            return a
+        if a is not None and a == b:
+            return a
+        return None
+    return None
+
+
+def const_propagate(nl, tied_low):
+    n = len(nl.gates)
+    value = [None] * n
+    for i, g in enumerate(nl.gates):
+        if g[0] == "const":
+            value[i] = g[1]
+    for i in tied_low:
+        assert nl.gates[i][0] == "input", "tied-low on non-input"
+        value[i] = False
+    while True:
+        changed = False
+        for i, g in enumerate(nl.gates):
+            if value[i] is not None:
+                continue
+            op = g[0]
+            if op in ("input", "const"):
+                v = None
+            elif op == "dff":
+                _, d, rst, init = g
+                pinned = rst is not None and value[rst] is True
+                v = init if (pinned or value[d] == init) else None
+            elif op == "macroout":
+                kind, inputs, _ = nl.macros[g[1]]
+                v = macro_pin_value(kind, inputs, g[2], value)
+            else:
+                v = comb_value(g, value)
+            if v is not None:
+                value[i] = v
+                changed = True
+        if not changed:
+            break
+
+    # Which constant polarities are read after rewiring?
+    need = [False, False]
+
+    def mark(a):
+        if value[a] is not None:
+            need[int(value[a])] = True
+
+    for i, g in enumerate(nl.gates):
+        op = g[0]
+        if op in COMB_OPS and value[i] is not None:
+            need[int(value[i])] = True
+            continue
+        if op in ("buf", "not"):
+            mark(g[1])
+        elif op in ("and", "or", "xor"):
+            mark(g[1])
+            mark(g[2])
+        elif op == "mux":
+            if value[g[1]] is None:
+                mark(g[1])
+                mark(g[2])
+                mark(g[3])
+        elif op == "dff":
+            mark(g[1])
+            if g[2] is not None:
+                mark(g[2])
+    for (_, inputs, _) in nl.macros:
+        for a in inputs:
+            mark(a)
+
+    out_nl = nl.clone()
+    canon = [None, None]
+    for i, g in enumerate(nl.gates):
+        if g[0] == "const" and canon[int(g[1])] is None:
+            canon[int(g[1])] = i
+    for v in range(2):
+        if need[v] and canon[v] is None:
+            canon[v] = len(out_nl.gates)
+            out_nl.gates.append(("const", v == 1))
+
+    def sub(a):
+        return a if value[a] is None else canon[int(value[a])]
+
+    for i, g in enumerate(nl.gates):
+        op = g[0]
+        if op in ("input", "const", "macroout"):
+            continue
+        folded = value[i] if op in COMB_OPS else None
+        if op == "dff":
+            _, d, rst, init = g
+            out_nl.gates[i] = ("dff", sub(d), None if rst is None else sub(rst), init)
+        elif folded is not None:
+            out_nl.gates[i] = ("buf", canon[int(folded)])
+        elif op in ("buf", "not"):
+            out_nl.gates[i] = (op, sub(g[1]))
+        elif op in ("and", "or", "xor"):
+            out_nl.gates[i] = (op, sub(g[1]), sub(g[2]))
+        elif op == "mux":
+            sv = value[g[1]]
+            if sv is not None:
+                out_nl.gates[i] = ("buf", sub(g[3] if sv else g[2]))
+            else:
+                out_nl.gates[i] = ("mux", sub(g[1]), sub(g[2]), sub(g[3]))
+    for m in out_nl.macros:
+        m[1] = [sub(a) for a in m[1]]
+
+    remap = NetRemap(
+        list(range(n)), len(out_nl.gates),
+        list(range(len(nl.macros))), len(nl.macros),
+    )
+    return out_nl, remap, value
+
+
+# --------------------------------------------------------------------------
+# Pass 2: eliminate_dead port.
+# --------------------------------------------------------------------------
+
+
+def eliminate_dead(nl, keep):
+    n = len(nl.gates)
+    live = [False] * n
+    live_inst = [False] * len(nl.macros)
+    stack = [i for (_, i) in nl.outputs]
+    for i in keep:
+        assert 0 <= i < n, "keep-set net out of range"
+        stack.append(i)
+    while stack:
+        i = stack.pop()
+        if live[i]:
+            continue
+        live[i] = True
+        g = nl.gates[i]
+        if g[0] == "dff":
+            stack.append(g[1])
+            if g[2] is not None:
+                stack.append(g[2])
+        elif g[0] == "macroout":
+            mi = g[1]
+            if not live_inst[mi]:
+                live_inst[mi] = True
+                stack.extend(nl.macros[mi][1])
+                stack.extend(nl.macros[mi][2])
+        else:
+            stack.extend(comb_fanin(g))
+
+    net_map = [None] * n
+    nxt = 0
+    for i in range(n):
+        if live[i]:
+            net_map[i] = nxt
+            nxt += 1
+    macro_map = [None] * len(nl.macros)
+    mnext = 0
+    for i in range(len(nl.macros)):
+        if live_inst[i]:
+            macro_map[i] = mnext
+            mnext += 1
+
+    def mp(a):
+        assert net_map[a] is not None, "live net reads a dead net"
+        return net_map[a]
+
+    out = Netlist()
+    for i, g in enumerate(nl.gates):
+        if not live[i]:
+            continue
+        op = g[0]
+        if op in ("input", "const"):
+            out.gates.append(g)
+        elif op in ("buf", "not"):
+            out.gates.append((op, mp(g[1])))
+        elif op in ("and", "or", "xor"):
+            out.gates.append((op, mp(g[1]), mp(g[2])))
+        elif op == "mux":
+            out.gates.append(("mux", mp(g[1]), mp(g[2]), mp(g[3])))
+        elif op == "dff":
+            out.gates.append(
+                ("dff", mp(g[1]), None if g[2] is None else mp(g[2]), g[3])
+            )
+        else:
+            out.gates.append(("macroout", macro_map[g[1]], g[2]))
+    out.macros = [
+        [k, [mp(a) for a in ins], [mp(a) for a in outs]]
+        for (k, ins, outs), alive in zip(nl.macros, live_inst)
+        if alive
+    ]
+    out.inputs = [(nm, mp(i)) for (nm, i) in nl.inputs if live[i]]
+    out.outputs = [(nm, mp(i)) for (nm, i) in nl.outputs]
+    return out, NetRemap(net_map, nxt, macro_map, mnext)
+
+
+# --------------------------------------------------------------------------
+# Pass 3: schedule_locality port.
+# --------------------------------------------------------------------------
+
+
+def schedule_locality(nl):
+    n = len(nl.gates)
+    levels = levelize_buckets(nl)
+    scheduled = [False] * n
+    for level in levels:
+        for i in level:
+            scheduled[i] = True
+    new_of = [None] * n
+    nxt = 0
+    for i in range(n):
+        if not scheduled[i]:
+            new_of[i] = nxt
+            nxt += 1
+    fanout = fanout_counts(nl)
+    U32_MAX = 0xFFFFFFFF
+    for level in levels:
+        keyed = []
+        for i in level:
+            fins = comb_fanin_full(nl, i)
+            locality = min((new_of[d] for d in fins), default=0)
+            keyed.append((locality, U32_MAX - fanout[i], i))
+        keyed.sort()
+        for (_, _, i) in keyed:
+            new_of[i] = nxt
+            nxt += 1
+    assert nxt == n
+    if all(m == i for i, m in enumerate(new_of)):
+        return nl.clone(), NetRemap.identity(n, len(nl.macros))
+
+    def mp(a):
+        return new_of[a]
+
+    out = Netlist()
+    out.gates = [None] * n
+    for i, g in enumerate(nl.gates):
+        op = g[0]
+        if op in ("input", "const", "macroout"):
+            ng = g
+        elif op in ("buf", "not"):
+            ng = (op, mp(g[1]))
+        elif op in ("and", "or", "xor"):
+            ng = (op, mp(g[1]), mp(g[2]))
+        elif op == "mux":
+            ng = ("mux", mp(g[1]), mp(g[2]), mp(g[3]))
+        else:
+            ng = ("dff", mp(g[1]), None if g[2] is None else mp(g[2]), g[3])
+        out.gates[new_of[i]] = ng
+    out.macros = [
+        [k, [mp(a) for a in ins], [mp(a) for a in outs]]
+        for (k, ins, outs) in nl.macros
+    ]
+    out.inputs = [(nm, mp(i)) for (nm, i) in nl.inputs]
+    out.outputs = [(nm, mp(i)) for (nm, i) in nl.outputs]
+    return out, NetRemap(new_of, n, list(range(len(nl.macros))), len(nl.macros))
+
+
+def run_pipeline(nl, tied_low, keep):
+    verify(nl)
+    cur = nl.clone()
+    acc = NetRemap.identity(len(nl.gates), len(nl.macros))
+    for pass_name in ("constprop", "deadcode", "locality"):
+        if pass_name == "constprop":
+            assume = [m for m in (acc.net(i) for i in tied_low) if m is not None]
+            cur, r, _ = const_propagate(cur, assume)
+        elif pass_name == "deadcode":
+            kept = sorted({m for m in (acc.net(i) for i in keep) if m is not None})
+            cur, r = eliminate_dead(cur, kept)
+        else:
+            cur, r = schedule_locality(cur)
+        acc = acc.then(r)
+    return cur, acc
+
+
+# --------------------------------------------------------------------------
+# Random netlist generation: inputs, consts, comb gates over earlier nets
+# (acyclic comb core), DFFs with optional feedback patched after the fact,
+# toy macro instances, random output subset (some logic left dead).
+# --------------------------------------------------------------------------
+
+
+def random_netlist(rng, allow_macros=True, allow_consts=True):
+    nl = Netlist()
+    n_in = rng.randrange(2, 7)
+    for k in range(n_in):
+        nl.inputs.append((f"i{k}", len(nl.gates)))
+        nl.gates.append(("input",))
+    if allow_consts and rng.random() < 0.7:
+        nl.gates.append(("const", rng.random() < 0.5))
+        if rng.random() < 0.4:
+            nl.gates.append(("const", rng.random() < 0.5))
+    pending_dffs = []
+    for _ in range(rng.randrange(10, 45)):
+        pool = len(nl.gates)
+
+        def pick():
+            return rng.randrange(pool)
+
+        roll = rng.random()
+        if roll < 0.12:
+            nl.gates.append(("not", pick()))
+        elif roll < 0.34:
+            nl.gates.append((rng.choice(["and", "or"]), pick(), pick()))
+        elif roll < 0.46:
+            nl.gates.append(("xor", pick(), pick()))
+        elif roll < 0.58:
+            nl.gates.append(("mux", pick(), pick(), pick()))
+        elif roll < 0.62:
+            nl.gates.append(("buf", pick()))
+        elif roll < 0.82:
+            rst = pick() if rng.random() < 0.5 else None
+            init = rng.random() < 0.5
+            if rng.random() < 0.4:
+                pending_dffs.append(len(nl.gates))
+                nl.gates.append(("dff", PENDING, rst, init))
+            else:
+                nl.gates.append(("dff", pick(), rst, init))
+        elif allow_macros:
+            kind = rng.choice(TOY_KINDS)
+            ins = [pick() for _ in range(kind.n_inputs)]
+            inst = len(nl.macros)
+            outs = []
+            for pin in range(len(kind.pins)):
+                outs.append(len(nl.gates))
+                nl.gates.append(("macroout", inst, pin))
+            nl.macros.append([kind, ins, outs])
+        else:
+            nl.gates.append(("xor", pick(), pick()))
+    n = len(nl.gates)
+    for i in pending_dffs:
+        g = nl.gates[i]
+        nl.gates[i] = ("dff", rng.randrange(n), g[2], g[3])
+    for k in range(rng.randrange(1, 5)):
+        nl.outputs.append((f"o{k}", rng.randrange(n)))
+    return nl
+
+
+# --------------------------------------------------------------------------
+# Differential equivalence check: drive both netlists with aligned
+# stimulus (tied inputs held 0; inputs removed by DCE driven only on the
+# original), compare every retained net's value after each settle and the
+# full toggle vector (through translate_per_net) at the end.
+# --------------------------------------------------------------------------
+
+
+def assert_equiv(orig, opt, remap, tied, seed, cycles=24, lattice=None):
+    so, sp = Sim(orig), Sim(opt)
+    rng = random.Random(seed)
+    tied_set = set(tied)
+    for t in range(cycles):
+        for (_, i) in orig.inputs:
+            v = False if i in tied_set else (rng.random() < 0.45)
+            so.set_input(i, v)
+            m = remap.net(i)
+            if m is not None:
+                sp.set_input(m, v)
+        so.settle()
+        sp.settle()
+        if lattice is not None:
+            for i, c in enumerate(lattice):
+                if c is not None:
+                    assert so.values[i] == c, (
+                        f"lattice says net {i}={c} but sim reads "
+                        f"{so.values[i]} at cycle {t}"
+                    )
+        for old in range(len(orig.gates)):
+            m = remap.net(old)
+            if m is None:
+                continue
+            assert so.values[old] == sp.values[m], (
+                f"cycle {t}: net {old}->{m} value mismatch "
+                f"({so.values[old]} vs {sp.values[m]})"
+            )
+        so.clock()
+        sp.clock()
+    assert remap.translate_per_net(so.toggles) == sp.toggles, "toggle mismatch"
+
+
+def census(nl):
+    from collections import Counter
+
+    return Counter(g[0] for g in nl.gates)
+
+
+def run_trial(trial, rng):
+    nl = random_netlist(rng)
+    verify(nl)
+    n = len(nl.gates)
+    input_ids = [i for (_, i) in nl.inputs]
+
+    # 1. ConstProp under a random tied-low subset.
+    tied = [i for i in input_ids if rng.random() < 0.5]
+    cp, r1, lattice = const_propagate(nl, tied)
+    verify(cp)
+    assert all(r1.net(i) == i for i in range(n)), "constprop must keep old ids"
+    assert not r1.removed_nets()
+    assert_equiv(nl, cp, r1, tied, seed=trial * 7 + 1, lattice=lattice)
+
+    # 2. DCE under a random keep-set, UNRESTRICTED stimulus.
+    keep = sorted({rng.randrange(n) for _ in range(rng.randrange(0, 4))})
+    dce, r2 = eliminate_dead(nl, keep)
+    verify(dce)
+    for i in keep:
+        assert r2.net(i) is not None, "kept net removed"
+    for (_, i) in nl.outputs:
+        assert r2.net(i) is not None, "output removed"
+    survivors = [m for m in (r2.net(i) for i in range(n)) if m is not None]
+    assert survivors == sorted(survivors), "DCE compaction must keep order"
+    assert_equiv(nl, dce, r2, [], seed=trial * 7 + 2)
+
+    # 3. Locality: pure renumbering.
+    loc, r3 = schedule_locality(nl)
+    verify(loc)
+    assert len(loc.gates) == n and not r3.removed_nets()
+    assert census(loc) == census(nl), "locality changed the gate census"
+    old_pops = [len(l) for l in levelize_buckets(nl)]
+    new_pops = [len(l) for l in levelize_buckets(loc)]
+    assert old_pops == new_pops, "locality re-timed a level"
+    for level in levelize_buckets(loc):
+        for a, b in zip(level, level[1:]):
+            assert b == a + 1, "level ids not contiguous"
+    assert_equiv(nl, loc, r3, [], seed=trial * 7 + 3)
+
+    # 4. Full pipeline (ConstProp -> DCE -> Locality), composed remap.
+    out, acc = run_pipeline(nl, tied, keep)
+    verify(out)
+    for i in keep:
+        assert acc.net(i) is not None, "kept net lost through the pipeline"
+    assert_equiv(nl, out, acc, tied, seed=trial * 7 + 4)
+
+    # 5. Zero-assumption structural no-op on const-free, macro-free logic
+    # with every net kept alive.
+    plain = random_netlist(rng, allow_macros=False, allow_consts=False)
+    verify(plain)
+    cp2, r4, lat2 = const_propagate(plain, [])
+    assert all(v is None for v in lat2), "fold without consts or assumptions"
+    assert r4.is_identity() and cp2.gates == plain.gates
+    dce2, r5 = eliminate_dead(plain, list(range(len(plain.gates))))
+    assert r5.is_identity() and dce2.gates == plain.gates
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trials", type=int, default=400)
+    ap.add_argument("--seed", type=int, default=0xC0DE)
+    args = ap.parse_args()
+    for trial in range(args.trials):
+        rng = random.Random(args.seed + trial)
+        try:
+            run_trial(trial, rng)
+        except AssertionError as e:
+            print(f"FAIL trial {trial}: {e}", file=sys.stderr)
+            return 1
+        if (trial + 1) % 100 == 0:
+            print(f"  {trial + 1}/{args.trials} trials ok")
+    print(
+        f"PASS: {args.trials} trials x (constprop, dce, locality, pipeline, "
+        f"no-op) differential checks"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
