@@ -10,7 +10,7 @@
 //! campaign report of `tnn7 faults` plus per-backend timing medians.
 
 use tnn7::gates::fault::{campaign, sample_faults};
-use tnn7::gates::gate_engine::cached_design;
+use tnn7::gates::artifact_cache::design_handle;
 use tnn7::gates::SimBackend;
 use tnn7::harness::{fault_campaign, faults_json, FaultSpec};
 use tnn7::tnn::spike::random_volley;
@@ -27,7 +27,7 @@ fn main() {
 
     // --- timed section: one campaign per backend on a fixed fault set ---
     let (p, q, theta) = (16, 3, 21);
-    let d = cached_design(p, q, theta);
+    let d = design_handle(p, q, theta).expect("design builds");
     let gamma = 8u32;
     let items = if fast { 2 } else { 6 };
     let n_faults = if fast { 16 } else { 96 };
@@ -52,7 +52,7 @@ fn main() {
     let mut stats = Vec::new();
     for (name, backend) in backends {
         let s = b.bench(&format!("campaign {} ({} faults)", name, faults.len()), || {
-            let r = campaign(d, &ws, gamma, &volleys, &faults, backend).unwrap();
+            let r = campaign(&d, &ws, gamma, &volleys, &faults, backend).unwrap();
             assert_eq!(r.counts().total(), faults.len());
             black_box(r.outcomes.len())
         });

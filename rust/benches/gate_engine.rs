@@ -66,7 +66,7 @@ fn main() {
 
     // Equivalence guard before timing: the word sweep must reproduce the
     // scalar path winner for winner.
-    let word_winners = gate.infer_batch(&volleys);
+    let word_winners = gate.infer_batch(&volleys).unwrap();
     let scalar_winners: Vec<Option<usize>> =
         volleys.iter().map(|v| gate.infer_winner(v)).collect();
     assert_eq!(
@@ -84,7 +84,7 @@ fn main() {
     });
     println!("{}", s_scalar.report());
     let s_word = b.bench("word-parallel gate inference (64-lane sweep)", || {
-        black_box(gate.infer_batch(&volleys)).len()
+        black_box(gate.infer_batch(&volleys).unwrap()).len()
     });
     println!("{}", s_word.report());
 

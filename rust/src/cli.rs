@@ -90,10 +90,24 @@ pub const COMMANDS: &[CommandSpec] = &[
     },
     CommandSpec {
         name: "serve",
-        synopsis: "serve [key=value ...]",
+        synopsis: "serve [--stdin | --listen ADDR] [--quick] [key=value ...]",
         details: &[
-            "streaming demo over the XLA runtime (requires `make artifacts`)",
-            "key=value        same config overrides as `run`",
+            "always-on dynamic-batching inference service: a mixed-engine,",
+            "mixed-geometry registry (entries named <engine>:<p>x<q>), same-entry",
+            "arrivals coalesced into words x 64-lane compiled passes — winners",
+            "bit-exact with sequential inference at any worker count",
+            "(default)        bench mode: seeded client sweeps steady|bursty|shuffled",
+            "                 arrivals, diffs batched winners against a sequential",
+            "                 reference, writes BENCH_serve.json + serve_transcript.tsv",
+            "--stdin          pipe mode: requests `<id> <entry> <t1,...,tp>` on stdin",
+            "                 (`-` = no spike), replies `<id> <winner|->` sorted by id",
+            "--listen ADDR    socket mode: serve the same line protocol on a local",
+            "                 TCP address (e.g. 127.0.0.1:7411)",
+            "--quick          CI-speed bench (1-word lane blocks, small budgets)",
+            "key=value        spec overrides: seed=, workers=, words=, threads=,",
+            "                 engines=gate,golden, geometries=12x2,8x3, per_cluster=,",
+            "                 requests=, patterns=steady,bursty,shuffled, capacity=,",
+            "                 out_dir=",
         ],
     },
     CommandSpec {
@@ -248,6 +262,27 @@ mod tests {
         ] {
             spec.apply_overrides(&[kv.to_string()])
                 .unwrap_or_else(|e| panic!("advertised faults key {kv:?} rejected: {e}"));
+        }
+    }
+
+    #[test]
+    fn advertised_serve_keys_are_accepted_by_the_parser() {
+        let mut spec = crate::serve::ServeSpec::quick();
+        for kv in [
+            "seed=1",
+            "workers=2",
+            "words=2",
+            "threads=1",
+            "engines=gate,golden",
+            "geometries=12x2,8x3",
+            "per_cluster=4",
+            "requests=8",
+            "patterns=steady,bursty,shuffled",
+            "capacity=8",
+            "out_dir=o",
+        ] {
+            spec.apply_overrides(&[kv.to_string()])
+                .unwrap_or_else(|e| panic!("advertised serve key {kv:?} rejected: {e}"));
         }
     }
 

@@ -9,6 +9,10 @@
 //! **golden model** — applying STDP online and recording WTA winners and
 //! latency metrics.
 
+mod service;
+
+pub use service::ServiceEngine;
+
 use crate::config::EngineKind;
 use crate::gates::gate_engine::GateColumn;
 use crate::metrics::StreamMetrics;
@@ -148,9 +152,30 @@ impl Engine<'_> {
     pub fn infer_winners(&mut self, items: &[GammaItem]) -> crate::Result<Vec<Option<usize>>> {
         if let Engine::Gate(g) = self {
             let volleys: Vec<&[SpikeTime]> = items.iter().map(|i| i.volley.as_slice()).collect();
-            return Ok(g.infer_batch(&volleys));
+            return g.infer_batch(&volleys);
         }
         items.iter().map(|i| self.infer_winner(&i.volley)).collect()
+    }
+
+    /// Freeze this engine's inference state (geometry, θ, params, weights)
+    /// into a `Send + Sync` [`ServiceEngine`] for the serving layer. The
+    /// engine itself is untouched — the handle is a snapshot, so training
+    /// after the freeze does not flow into it (re-freeze to publish new
+    /// weights). `words`/`threads` size the gate kind's pooled compiled
+    /// executors and are ignored for the behavioral kinds; the XLA kind is
+    /// rejected (device-side state).
+    pub fn service(&self, words: usize, threads: usize) -> crate::Result<ServiceEngine> {
+        let (p, q) = self.geometry();
+        let (theta, params) = match self {
+            Engine::Golden(c) => (c.theta(), c.params().clone()),
+            Engine::Batched(b) => (b.column().theta(), b.column().params().clone()),
+            Engine::Gate(g) => (g.theta(), g.params().clone()),
+            Engine::Xla { .. } => {
+                anyhow::bail!("XLA engines cannot be served (device-side state)")
+            }
+        };
+        let ws = self.weights().expect("behavioral engines expose weights");
+        ServiceEngine::new(self.kind(), p, q, theta, params, &ws, words, threads)
     }
 
     /// Build a Golden engine for a geometry.

@@ -1,0 +1,276 @@
+//! `Send + Sync` inference service handles — the serving-side face of
+//! [`Engine`](super::Engine).
+//!
+//! The batch [`Engine`] is deliberately `&mut self` stateful: training
+//! mutates weights, and even its inference paths reuse kernel scratch
+//! (the batched engine) or persistent simulators (the gate engine). A
+//! long-lived server cannot hand one `&mut` engine to N workers, so
+//! [`ServiceEngine`] freezes an engine's inference-relevant state —
+//! geometry, θ, hyper-parameters, the weight snapshot — into an immutable
+//! handle whose methods take `&self` and keep all mutable state
+//! *per-request*:
+//!
+//! * **Golden / batched kinds** run the draw-free scalar
+//!   [`Column::infer`] path, which is already `&self` (the batched
+//!   engine's inference winners are bit-exact with the golden model's, so
+//!   one frozen column serves both kinds).
+//! * **Gate kind** holds [`Arc`] handles to the shared design and the
+//!   [`OptLevel::Inference`]-specialized compiled program from the
+//!   artifact cache, plus a checkout **pool of compiled executors**
+//!   ([`CompiledSim`] is plain owned data, hence `Send`): a request
+//!   checks one out (or builds a fresh one under pool pressure), runs the
+//!   shared lane-block sweep, and returns it. Executor state is
+//!   per-request scratch; the program is shared and never mutated.
+//!
+//! Inference is draw-free on every engine (all-ones uniforms block every
+//! STDP case), so a `ServiceEngine` holds no RNG at all — which is the
+//! determinism rule that makes dynamic batching semantics-free: winners
+//! depend only on (weights, volley), never on which pass a volley landed
+//! in or which worker ran it.
+
+use crate::config::EngineKind;
+use crate::gates::artifact_cache::{design_handle, program_handle, ColumnProgram};
+use crate::gates::column_design::ColumnDesign;
+use crate::gates::compile::CompiledSim;
+use crate::gates::gate_engine::compiled_inference_sweep;
+use crate::gates::opt::OptLevel;
+use crate::tnn::column::Column;
+use crate::tnn::params::TnnParams;
+use crate::tnn::spike::SpikeTime;
+use std::sync::{Arc, Mutex};
+
+/// Gate-kind serving state: shared immutable artifacts plus the executor
+/// checkout pool.
+struct GateService {
+    /// The shared design artifact (held so cache eviction cannot outlive
+    /// an active server, and so tests can assert sharing via
+    /// [`Arc::ptr_eq`]).
+    design: Arc<ColumnDesign>,
+    /// The inference-specialized compiled program all executors clone from.
+    program: Arc<ColumnProgram>,
+    /// Lane-block width of pooled executors.
+    words: usize,
+    /// Settle worker threads per executor (resolved, never 0).
+    threads: usize,
+    /// Returned executors awaiting the next request (LIFO: the warmest
+    /// executor is reused first).
+    pool: Mutex<Vec<CompiledSim>>,
+}
+
+/// An immutable, thread-safe inference handle over a frozen engine
+/// snapshot. See the module docs for the design; construct via
+/// [`Engine::service`](super::Engine::service) or [`ServiceEngine::new`].
+pub struct ServiceEngine {
+    kind: EngineKind,
+    /// The frozen scalar column: weight snapshot + θ + params. Serves
+    /// golden/batched requests directly and is the geometry/weight source
+    /// of truth for the gate path.
+    column: Column,
+    /// Present iff `kind == Gate`.
+    gate: Option<GateService>,
+}
+
+impl ServiceEngine {
+    /// Freeze an inference service handle for `kind` at an explicit
+    /// geometry and weight snapshot (row-major p×q). For the gate kind,
+    /// `words`/`threads` size the pooled compiled executors (`threads = 0`
+    /// resolves to machine parallelism); both are ignored otherwise. The
+    /// XLA kind is rejected: its weights live across the PJRT boundary and
+    /// its executable is not shareable scratch.
+    #[allow(clippy::too_many_arguments)] // mirrors engine_with_theta + pool knobs
+    pub fn new(
+        kind: EngineKind,
+        p: usize,
+        q: usize,
+        theta: u32,
+        params: TnnParams,
+        ws: &[u8],
+        words: usize,
+        threads: usize,
+    ) -> crate::Result<ServiceEngine> {
+        anyhow::ensure!(
+            ws.len() == p * q,
+            "weight snapshot length {} != p*q = {}",
+            ws.len(),
+            p * q
+        );
+        let mut column = Column::new(p, q, theta, params);
+        column.set_weights(ws);
+        let gate = match kind {
+            EngineKind::Gate => {
+                let design = design_handle(p, q, theta)?;
+                let program = program_handle(p, q, theta, OptLevel::Inference)?;
+                let threads = if threads == 0 {
+                    std::thread::available_parallelism().map_or(1, |n| n.get())
+                } else {
+                    threads
+                };
+                Some(GateService {
+                    design,
+                    program,
+                    words: words.max(1),
+                    threads,
+                    pool: Mutex::new(Vec::new()),
+                })
+            }
+            EngineKind::Golden | EngineKind::Batched => None,
+            EngineKind::Xla => anyhow::bail!("XLA engines cannot be served (device-side state)"),
+        };
+        Ok(ServiceEngine { kind, column, gate })
+    }
+
+    /// Which engine kind this handle serves.
+    pub fn kind(&self) -> EngineKind {
+        self.kind
+    }
+
+    /// The frozen geometry `(p, q)`.
+    pub fn geometry(&self) -> (usize, usize) {
+        (self.column.p(), self.column.q())
+    }
+
+    /// The frozen firing threshold.
+    pub fn theta(&self) -> u32 {
+        self.column.theta()
+    }
+
+    /// The frozen weight snapshot (row-major p×q).
+    pub fn weights(&self) -> &[u8] {
+        self.column.weights()
+    }
+
+    /// The shared design artifact behind the gate path (`None` for the
+    /// behavioral kinds) — the [`Arc::ptr_eq`] witness that server, engine
+    /// and fault harness resolve one cache entry.
+    pub fn design_handle(&self) -> Option<&Arc<ColumnDesign>> {
+        self.gate.as_ref().map(|g| &g.design)
+    }
+
+    /// Serve one query: the draw-free inference winner for `xs`.
+    /// Equivalent to `infer_batch(&[xs])` (batching is semantics-free).
+    pub fn infer_winner(&self, xs: &[SpikeTime]) -> crate::Result<Option<usize>> {
+        Ok(self.infer_batch(&[xs])?[0])
+    }
+
+    /// Serve a coalesced batch: draw-free inference winners for `volleys`,
+    /// in order. Gate kind packs the batch into `words × 64`-lane compiled
+    /// passes on a pooled executor; behavioral kinds loop the scalar
+    /// column. Winners are bit-exact with sequential
+    /// [`Engine::infer_winner`](super::Engine::infer_winner) calls on the
+    /// same queries regardless of how arrivals were coalesced.
+    pub fn infer_batch(&self, volleys: &[&[SpikeTime]]) -> crate::Result<Vec<Option<usize>>> {
+        match &self.gate {
+            Some(g) => {
+                // Per-request scratch: check an executor out of the pool
+                // (or build one under pool pressure — the program Arc makes
+                // that a clone of the instruction stream, not a recompile).
+                let checked_out = g.pool.lock().unwrap_or_else(|p| p.into_inner()).pop();
+                let mut csim = checked_out.unwrap_or_else(|| {
+                    CompiledSim::from_program(g.program.prog.clone(), g.words, g.threads)
+                });
+                let winners = compiled_inference_sweep(
+                    &g.program,
+                    &mut csim,
+                    self.column.params().gamma_cycles,
+                    self.column.q(),
+                    self.column.weights(),
+                    volleys,
+                );
+                g.pool.lock().unwrap_or_else(|p| p.into_inner()).push(csim);
+                Ok(winners)
+            }
+            None => Ok(volleys
+                .iter()
+                .map(|v| self.column.infer(v).winner)
+                .collect()),
+        }
+    }
+
+    /// Executors currently idle in the gate pool (0 for behavioral kinds);
+    /// its high-water mark is the server's effective concurrency.
+    pub fn pooled_executors(&self) -> usize {
+        self.gate
+            .as_ref()
+            .map_or(0, |g| g.pool.lock().unwrap_or_else(|p| p.into_inner()).len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{encode_ucr, ucr_engine_with};
+    use crate::ucr::{self, UcrConfig};
+    use crate::util::Rng64;
+
+    fn assert_send_sync<T: Send + Sync>() {}
+
+    #[test]
+    fn service_engine_is_send_and_sync() {
+        // The whole point of the type: shareable across server workers.
+        assert_send_sync::<ServiceEngine>();
+        assert_send_sync::<Arc<ServiceEngine>>();
+    }
+
+    #[test]
+    fn service_matches_stateful_engine_for_every_behavioral_kind() {
+        let cfg = UcrConfig { name: "TwoLeadECG", p: 12, q: 2 };
+        let data = ucr::generate(cfg, 10, 7);
+        let items = encode_ucr(&data, 8);
+        for kind in [EngineKind::Golden, EngineKind::Batched, EngineKind::Gate] {
+            let mut rng = Rng64::seed_from_u64(33);
+            let mut engine =
+                ucr_engine_with(kind, 12, 2, &items, TnnParams::default(), &mut rng).unwrap();
+            let svc = engine.service(2, 1).unwrap();
+            assert_eq!(svc.kind(), kind);
+            assert_eq!(svc.geometry(), (12, 2));
+            // Batched against sequential: bit-exact per volley.
+            let volleys: Vec<&[SpikeTime]> =
+                items.iter().map(|i| i.volley.as_slice()).collect();
+            let batch = svc.infer_batch(&volleys).unwrap();
+            for (k, item) in items.iter().enumerate() {
+                let want = engine.infer_winner(&item.volley).unwrap();
+                assert_eq!(batch[k], want, "{kind:?} volley {k}");
+                assert_eq!(svc.infer_winner(&item.volley).unwrap(), want);
+            }
+        }
+    }
+
+    #[test]
+    fn gate_service_shares_cached_artifacts_and_pools_executors() {
+        let svc = ServiceEngine::new(
+            EngineKind::Gate,
+            6,
+            2,
+            7,
+            TnnParams::default(),
+            &[1u8; 12],
+            1,
+            1,
+        )
+        .unwrap();
+        let d = design_handle(6, 2, 7).unwrap();
+        assert!(Arc::ptr_eq(svc.design_handle().unwrap(), &d));
+        assert_eq!(svc.pooled_executors(), 0, "pool starts empty");
+        let volley = vec![SpikeTime::at(0); 6];
+        svc.infer_winner(&volley).unwrap();
+        assert_eq!(svc.pooled_executors(), 1, "executor returned to pool");
+        svc.infer_winner(&volley).unwrap();
+        assert_eq!(svc.pooled_executors(), 1, "pooled executor was reused");
+    }
+
+    #[test]
+    fn xla_kind_is_rejected() {
+        let err = ServiceEngine::new(
+            EngineKind::Xla,
+            4,
+            2,
+            5,
+            TnnParams::default(),
+            &[0u8; 8],
+            1,
+            1,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("cannot be served"), "{err}");
+    }
+}

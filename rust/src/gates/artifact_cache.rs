@@ -1,0 +1,511 @@
+//! Concurrent, evicting cache for gate-level build artifacts.
+//!
+//! Column designs and compiled programs are expensive to construct
+//! (netlist assembly, levelization, the optimizer pipeline) and immutable
+//! once built, so every engine, test, sweep point and fault campaign that
+//! asks for the same (p, q, θ) — or (p, q, θ, [`OptLevel`]) — should share
+//! one artifact. The first implementation interned them with `Box::leak`
+//! into the process lifetime, which leaked one design + program per key
+//! *forever*: fine for a one-shot CLI, unbounded memory growth for the
+//! long-lived `tnn7 serve` loop sweeping the full UCR geometry mix. This
+//! module replaces those interners with a proper cache:
+//!
+//! * **Sharded `RwLock` map** — readers of different keys never contend
+//!   on one global mutex; the hot path (hit) takes one shard read lock.
+//! * **`Arc`-handed entries** — callers hold [`Arc`] handles, so an
+//!   evicted entry stays alive for exactly as long as someone still uses
+//!   it. Until eviction, every handle for a key is pointer-identical
+//!   (builds are deduplicated through a per-key [`OnceLock`]).
+//! * **LRU eviction with a capacity knob** — inserting past capacity
+//!   evicts the least-recently-used entry ([`ShardedLruCache::set_capacity`]
+//!   resizes live; the serve spec's `capacity=` key feeds it).
+//! * **Memoized build failures** — a builder that panics (or errors) is
+//!   caught once and the failure stored under the key; every later caller
+//!   gets a clean `Err` instead of re-running the panicking build (the
+//!   old clear-poison-and-retry discipline turned one bad geometry into a
+//!   panic storm under a server). An evicted failure may be retried
+//!   later — deliberate, so transient conditions are not pinned forever —
+//!   but at most once per eviction cycle, never once per call.
+//!
+//! The concrete caches live behind [`design_handle`] / [`program_handle`];
+//! the gate engine, the sweep executor (through [`GateColumn`]) and the
+//! fault harness all resolve artifacts through them, which is what makes
+//! "campaign and engine share one design" a provable [`Arc::ptr_eq`]
+//! check rather than a convention.
+//!
+//! [`GateColumn`]: super::gate_engine::GateColumn
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock, RwLock};
+
+use super::column_design::{build_column, BrvSource, ColumnDesign};
+use super::compile::CompiledProgram;
+use super::netlist::NetId;
+use super::opt::{NetRemap, OptLevel, PassPipeline};
+
+/// One cache slot: the build cell every caller of the key shares, plus an
+/// LRU stamp bumped on every hit (atomically, so hits stay on the shard
+/// *read* lock).
+struct Slot<V> {
+    cell: Arc<OnceLock<Result<Arc<V>, String>>>,
+    last_used: Arc<AtomicU64>,
+}
+
+/// A concurrent build-once cache: sharded `RwLock` map from key to
+/// [`Arc`]-handed value, LRU eviction past a runtime-adjustable capacity,
+/// and per-key memoization of build failures (panics included).
+///
+/// Eviction removes the map entry only; outstanding [`Arc`] handles keep
+/// their artifact alive, and the next `get_or_build` of that key rebuilds
+/// a fresh entry. Victim selection is approximate LRU: the scan walks the
+/// shards one read lock at a time, so a concurrent touch can revive an
+/// entry between selection and removal — in that case the eviction loop
+/// simply picks again. Capacity is enforced globally, not per shard.
+pub struct ShardedLruCache<K, V> {
+    shards: Vec<RwLock<HashMap<K, Slot<V>>>>,
+    capacity: AtomicUsize,
+    len: AtomicUsize,
+    clock: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl<K: Eq + Hash + Clone, V> ShardedLruCache<K, V> {
+    /// An empty cache with `shards` lock shards (≥ 1) and room for
+    /// `capacity` entries (≥ 1) before LRU eviction kicks in.
+    pub fn new(shards: usize, capacity: usize) -> ShardedLruCache<K, V> {
+        ShardedLruCache {
+            shards: (0..shards.max(1)).map(|_| RwLock::new(HashMap::new())).collect(),
+            capacity: AtomicUsize::new(capacity.max(1)),
+            len: AtomicUsize::new(0),
+            clock: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    fn shard_of(&self, key: &K) -> usize {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        (h.finish() as usize) % self.shards.len()
+    }
+
+    /// Fetch the entry for `key`, running `build` (outside every lock) if
+    /// it is not cached. Concurrent callers of the same key share one
+    /// build — the [`OnceLock`] serializes them and hands each the same
+    /// `Arc`, so handles are pointer-identical until the entry is evicted.
+    /// A build that returns `Err` or panics is memoized: later callers get
+    /// the stored error without re-running the build.
+    pub fn get_or_build(
+        &self,
+        key: K,
+        build: impl FnOnce() -> Result<V, String>,
+    ) -> Result<Arc<V>, String> {
+        let stamp = self.clock.fetch_add(1, Ordering::Relaxed);
+        let shard = &self.shards[self.shard_of(&key)];
+        // Fast path: shard read lock, bump the LRU stamp atomically.
+        let cell = {
+            let map = shard.read().unwrap_or_else(|p| p.into_inner());
+            map.get(&key).map(|s| {
+                s.last_used.store(stamp, Ordering::Relaxed);
+                s.cell.clone()
+            })
+        };
+        let cell = match cell {
+            Some(c) => c,
+            None => {
+                let mut map = shard.write().unwrap_or_else(|p| p.into_inner());
+                // Re-check under the write lock: a racing miss may have
+                // inserted the slot while we upgraded.
+                if let Some(s) = map.get(&key) {
+                    s.last_used.store(stamp, Ordering::Relaxed);
+                    s.cell.clone()
+                } else {
+                    let slot = Slot {
+                        cell: Arc::new(OnceLock::new()),
+                        last_used: Arc::new(AtomicU64::new(stamp)),
+                    };
+                    let cell = slot.cell.clone();
+                    map.insert(key.clone(), slot);
+                    drop(map);
+                    self.len.fetch_add(1, Ordering::Relaxed);
+                    self.evict_over_capacity(Some(&key));
+                    cell
+                }
+            }
+        };
+        // The build runs outside all shard locks, so building one key
+        // never blocks hits (or builds) of other keys. A panic is caught
+        // and stored as the key's permanent (until eviction) result — the
+        // fix for the old interner's clear-poison-rebuild-repanic storm.
+        let res = cell.get_or_init(|| {
+            catch_unwind(AssertUnwindSafe(build))
+                .unwrap_or_else(|payload| {
+                    Err(format!("artifact build panicked: {}", panic_message(&*payload)))
+                })
+                .map(Arc::new)
+        });
+        match res {
+            Ok(v) => Ok(v.clone()),
+            Err(e) => Err(e.clone()),
+        }
+    }
+
+    /// Evict least-recently-used entries until `len <= capacity`, never
+    /// evicting `keep` (the key being inserted).
+    fn evict_over_capacity(&self, keep: Option<&K>) {
+        loop {
+            let cap = self.capacity.load(Ordering::Relaxed).max(1);
+            if self.len.load(Ordering::Relaxed) <= cap {
+                return;
+            }
+            // Scan for the globally-oldest stamp, one shard read lock at
+            // a time (approximate: see the type-level doc).
+            let mut victim: Option<(usize, K, u64)> = None;
+            for (i, shard) in self.shards.iter().enumerate() {
+                let map = shard.read().unwrap_or_else(|p| p.into_inner());
+                for (k, s) in map.iter() {
+                    if keep == Some(k) {
+                        continue;
+                    }
+                    let lu = s.last_used.load(Ordering::Relaxed);
+                    let older = match &victim {
+                        None => true,
+                        Some((_, _, best)) => lu < *best,
+                    };
+                    if older {
+                        victim = Some((i, k.clone(), lu));
+                    }
+                }
+            }
+            let Some((i, k, lu)) = victim else { return };
+            let mut map = self.shards[i].write().unwrap_or_else(|p| p.into_inner());
+            match map.get(&k) {
+                // Untouched since selection: evict it.
+                Some(s) if s.last_used.load(Ordering::Relaxed) == lu => {
+                    map.remove(&k);
+                    self.len.fetch_sub(1, Ordering::Relaxed);
+                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+                // Revived (or a racing evictor removed it): pick again.
+                _ => {}
+            }
+        }
+    }
+
+    /// Number of cached entries (outstanding handles to evicted entries
+    /// are not counted — they live on the callers' side).
+    pub fn len(&self) -> usize {
+        self.len.load(Ordering::Relaxed)
+    }
+
+    /// True when the cache holds no entries.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The current eviction threshold.
+    pub fn capacity(&self) -> usize {
+        self.capacity.load(Ordering::Relaxed)
+    }
+
+    /// Resize the eviction threshold (min 1) and immediately evict down
+    /// to it — the serve spec's `capacity=` knob lands here.
+    pub fn set_capacity(&self, capacity: usize) {
+        self.capacity.store(capacity.max(1), Ordering::Relaxed);
+        self.evict_over_capacity(None);
+    }
+
+    /// Total entries evicted over the cache's lifetime.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+}
+
+/// Render a `catch_unwind` payload as the memoized error string.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    payload
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "non-string panic payload".to_string())
+}
+
+// ---------------------------------------------------------------------------
+// The concrete gate-artifact caches.
+// ---------------------------------------------------------------------------
+
+/// Design-cache key: (p, q, θ).
+pub type DesignKey = (usize, usize, u32);
+
+/// Program-cache key: (p, q, θ, optimization level).
+pub type ProgramKey = (usize, usize, u32, OptLevel);
+
+/// Default capacity of the global design cache — comfortably above the
+/// 36-dataset UCR suite plus the conformance geometries, so batch runs
+/// still behave like the old interner (no eviction mid-run) while the
+/// serve loop stays memory-stable under arbitrary geometry churn.
+pub const DESIGN_CACHE_CAPACITY: usize = 64;
+
+/// Default capacity of the global program cache (two [`OptLevel`]s per
+/// geometry, so twice the design headroom).
+pub const PROGRAM_CACHE_CAPACITY: usize = 128;
+
+const CACHE_SHARDS: usize = 8;
+
+/// The process-wide design cache behind [`design_handle`].
+pub fn design_cache() -> &'static ShardedLruCache<DesignKey, ColumnDesign> {
+    static CACHE: OnceLock<ShardedLruCache<DesignKey, ColumnDesign>> = OnceLock::new();
+    CACHE.get_or_init(|| ShardedLruCache::new(CACHE_SHARDS, DESIGN_CACHE_CAPACITY))
+}
+
+/// The process-wide compiled-program cache behind [`program_handle`].
+pub fn program_cache() -> &'static ShardedLruCache<ProgramKey, ColumnProgram> {
+    static CACHE: OnceLock<ShardedLruCache<ProgramKey, ColumnProgram>> = OnceLock::new();
+    CACHE.get_or_init(|| ShardedLruCache::new(CACHE_SHARDS, PROGRAM_CACHE_CAPACITY))
+}
+
+/// Build (or fetch) the shared `BrvSource::Inputs` column netlist for a
+/// geometry. Every engine, test, sweep point and fault campaign resolving
+/// the same (p, q, θ) gets the same [`Arc`] (pointer-identical until
+/// eviction) — the in-memory analogue of an AOT-compiled hardware
+/// artifact, minus the old interner's unbounded leak.
+pub fn design_handle(p: usize, q: usize, theta: u32) -> crate::Result<Arc<ColumnDesign>> {
+    design_cache()
+        .get_or_build((p, q, theta), || Ok(build_column(p, q, theta, BrvSource::Inputs)))
+        .map_err(anyhow::Error::msg)
+}
+
+/// Build (or fetch) the shared compiled program for a geometry at an
+/// optimization level. The levelize/optimize/lower pipeline runs once per
+/// live (p, q, θ, opt) key; a [`GateColumn`](super::gate_engine::GateColumn)
+/// that changes lane-block width or worker count clones the instruction
+/// stream into a fresh executor instead of recompiling.
+pub fn program_handle(
+    p: usize,
+    q: usize,
+    theta: u32,
+    opt: OptLevel,
+) -> crate::Result<Arc<ColumnProgram>> {
+    let d = design_handle(p, q, theta)?;
+    program_cache()
+        .get_or_build((p, q, theta, opt), || Ok(build_program(&d, opt)))
+        .map_err(anyhow::Error::msg)
+}
+
+/// Set both global cache capacities (the serve spec's `capacity=` knob).
+pub fn set_cache_capacities(designs: usize, programs: usize) {
+    design_cache().set_capacity(designs);
+    program_cache().set_capacity(programs);
+}
+
+/// Snapshot of the global caches, reported into `BENCH_serve.json`.
+#[derive(Clone, Copy, Debug)]
+pub struct CacheStats {
+    /// Live entries in the design cache.
+    pub designs: usize,
+    /// Live entries in the program cache.
+    pub programs: usize,
+    /// Design-cache eviction threshold.
+    pub design_capacity: usize,
+    /// Program-cache eviction threshold.
+    pub program_capacity: usize,
+    /// Lifetime evictions across both caches.
+    pub evictions: u64,
+}
+
+/// Read the global caches' current occupancy and eviction counters.
+pub fn cache_stats() -> CacheStats {
+    CacheStats {
+        designs: design_cache().len(),
+        programs: program_cache().len(),
+        design_capacity: design_cache().capacity(),
+        program_capacity: program_cache().capacity(),
+        evictions: design_cache().evictions() + program_cache().evictions(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The compiled-program artifact itself.
+// ---------------------------------------------------------------------------
+
+/// A compiled column program plus the design's engine-facing handles
+/// (pulse/reset/output nets, weight-readout instances) expressed in the
+/// program's own net-id space — identical to the design's ids under
+/// [`OptLevel::None`], optimizer-renumbered under [`OptLevel::Inference`].
+pub struct ColumnProgram {
+    /// The levelized instruction program the executor clones from.
+    pub prog: CompiledProgram,
+    /// IN(i) pulse input nets, one per synapse line.
+    pub in_pulse: Vec<NetId>,
+    /// The GRST (WTA reset) input net.
+    pub grst: NetId,
+    /// win(j) spike output nets, one per neuron.
+    pub out_spike: Vec<NetId>,
+    /// `SynWeightUpdate` instance index per (i, j) synapse, row-major.
+    pub syn_inst: Vec<u32>,
+    /// BRV input nets that still exist in this program and must be forced
+    /// low before an inference sweep. The full BRV set under
+    /// [`OptLevel::None`]; empty under [`OptLevel::Inference`] once the
+    /// optimizer has folded them away (kept as a list, not an assumption,
+    /// so a partially-folding pipeline would still silence the survivors).
+    pub silence: Vec<NetId>,
+    /// Design-id → program-id translation (identity under
+    /// [`OptLevel::None`]) for toggle reports and fault sites.
+    pub remap: NetRemap,
+}
+
+fn build_program(d: &ColumnDesign, opt: OptLevel) -> ColumnProgram {
+    let all_brv = || {
+        d.brv_case
+            .iter()
+            .flatten()
+            .chain(d.brv_stab.iter().flatten())
+            .copied()
+    };
+    match opt {
+        OptLevel::None => ColumnProgram {
+            prog: CompiledProgram::compile(&d.netlist).expect("cached design compiles"),
+            in_pulse: d.in_pulse.clone(),
+            grst: d.grst,
+            out_spike: d.out_spike.clone(),
+            syn_inst: d.syn_inst.clone(),
+            silence: all_brv().collect(),
+            remap: NetRemap::identity(d.netlist.len(), d.netlist.macros.len()),
+        },
+        OptLevel::Inference => {
+            let pipeline = PassPipeline::inference(d.inference_assumptions(), d.keep_set());
+            let (prog, remap) = CompiledProgram::compile_opt(&d.netlist, &pipeline)
+                .expect("cached design optimizes and compiles");
+            let keep = |n: NetId| remap.net(n).expect("keep-set net survives optimization");
+            ColumnProgram {
+                in_pulse: d.in_pulse.iter().map(|&n| keep(n)).collect(),
+                grst: keep(d.grst),
+                out_spike: d.out_spike.iter().map(|&n| keep(n)).collect(),
+                syn_inst: d
+                    .syn_inst
+                    .iter()
+                    .map(|&i| remap.macro_inst(i).expect("weight instance survives"))
+                    .collect(),
+                silence: all_brv().filter_map(|n| remap.net(n)).collect(),
+                prog,
+                remap,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn handles_are_pointer_identical_and_rebuilt_after_eviction() {
+        let cache: ShardedLruCache<u32, u32> = ShardedLruCache::new(4, 8);
+        let a = cache.get_or_build(1, || Ok(10)).unwrap();
+        let b = cache.get_or_build(1, || Ok(99)).unwrap(); // build must not rerun
+        assert!(Arc::ptr_eq(&a, &b), "same key shares one Arc until eviction");
+        assert_eq!(*b, 10, "second build closure never ran");
+        // Evict everything by shrinking capacity around a flood of keys.
+        for k in 2..12 {
+            cache.get_or_build(k, || Ok(k)).unwrap();
+        }
+        cache.set_capacity(1);
+        assert!(cache.len() <= 1);
+        let c = cache.get_or_build(1, || Ok(20)).unwrap();
+        assert!(!Arc::ptr_eq(&a, &c), "evicted key rebuilds a fresh entry");
+        assert_eq!(*c, 20);
+        // The old handle still works: eviction never invalidates it.
+        assert_eq!(*a, 10);
+    }
+
+    #[test]
+    fn eviction_fires_past_capacity_and_is_memory_stable() {
+        // The regression test for the Box::leak interner: past capacity,
+        // entries must actually leave the map (len stays bounded and the
+        // eviction counter advances) instead of accumulating forever.
+        let cache: ShardedLruCache<u64, Vec<u8>> = ShardedLruCache::new(4, 3);
+        for k in 0..50u64 {
+            cache.get_or_build(k, || Ok(vec![0u8; 64])).unwrap();
+            assert!(cache.len() <= 3, "len {} exceeded capacity at key {k}", cache.len());
+        }
+        assert_eq!(cache.capacity(), 3);
+        assert!(cache.evictions() >= 47, "evictions {} too low", cache.evictions());
+    }
+
+    #[test]
+    fn lru_order_decides_the_victim() {
+        let cache: ShardedLruCache<u8, u8> = ShardedLruCache::new(1, 2);
+        cache.get_or_build(1, || Ok(1)).unwrap();
+        cache.get_or_build(2, || Ok(2)).unwrap();
+        // Touch 1 so 2 becomes the LRU entry, then insert 3.
+        cache.get_or_build(1, || Ok(0)).unwrap();
+        cache.get_or_build(3, || Ok(3)).unwrap();
+        let ran = AtomicUsize::new(0);
+        cache
+            .get_or_build(1, || {
+                ran.fetch_add(1, Ordering::Relaxed);
+                Ok(0)
+            })
+            .unwrap();
+        assert_eq!(ran.load(Ordering::Relaxed), 0, "recently-used key survived");
+        cache
+            .get_or_build(2, || {
+                ran.fetch_add(1, Ordering::Relaxed);
+                Ok(2)
+            })
+            .unwrap();
+        assert_eq!(ran.load(Ordering::Relaxed), 1, "LRU key was the victim");
+    }
+
+    #[test]
+    fn build_failures_are_memoized_not_repanicked() {
+        // The panic-storm fix: the first caller eats the panic (as a clean
+        // Err), every later caller gets the same Err, and the builder is
+        // never run again for that key.
+        let cache: ShardedLruCache<u8, u8> = ShardedLruCache::new(2, 4);
+        let runs = AtomicUsize::new(0);
+        for attempt in 0..3 {
+            let err = cache
+                .get_or_build(7, || {
+                    runs.fetch_add(1, Ordering::Relaxed);
+                    panic!("bad geometry");
+                })
+                .unwrap_err();
+            assert!(err.contains("bad geometry"), "attempt {attempt}: {err}");
+        }
+        assert_eq!(runs.load(Ordering::Relaxed), 1, "panicking build ran once");
+        // Plain Err results are memoized the same way.
+        let err_runs = AtomicUsize::new(0);
+        for _ in 0..3 {
+            let err = cache
+                .get_or_build(8, || {
+                    err_runs.fetch_add(1, Ordering::Relaxed);
+                    Err("no such design".to_string())
+                })
+                .unwrap_err();
+            assert_eq!(err, "no such design");
+        }
+        assert_eq!(err_runs.load(Ordering::Relaxed), 1);
+        // Failed entries occupy slots and are evictable like any other.
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn design_and_program_handles_share_artifacts() {
+        let a = design_handle(4, 2, 5).unwrap();
+        let b = design_handle(4, 2, 5).unwrap();
+        let c = design_handle(4, 2, 6).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "same geometry shares one design");
+        assert!(!Arc::ptr_eq(&a, &c), "distinct θ gets its own design");
+        assert_eq!((a.p, a.q, a.theta), (4, 2, 5));
+        let p1 = program_handle(4, 2, 5, OptLevel::None).unwrap();
+        let p2 = program_handle(4, 2, 5, OptLevel::None).unwrap();
+        assert!(Arc::ptr_eq(&p1, &p2), "programs shared per (geometry, opt)");
+        let lean = program_handle(4, 2, 5, OptLevel::Inference).unwrap();
+        assert!(lean.prog.instr_count() < p1.prog.instr_count());
+    }
+}

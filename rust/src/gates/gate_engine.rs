@@ -23,155 +23,49 @@
 //!   bit-for-bit the scalar engine on item `l`, so the winners are
 //!   bit-exact with the scalar path (and hence with the golden model).
 //!
-//! Gate netlists are immutable once built and levelized, so designs are
-//! interned in a process-lifetime cache ([`cached_design`]): each (p, q, θ)
-//! geometry is built once and shared by every engine, test and sweep that
-//! asks for it — the in-memory analogue of an AOT-compiled hardware
-//! artifact. Compiled programs get the same treatment ([`cached_program`]):
-//! each (p, q, θ, [`OptLevel`]) is levelized, optionally optimizer-reduced
-//! and lowered to a [`CompiledProgram`](super::compile::CompiledProgram)
-//! once per process, so switching lane-block width or worker count on a
-//! `GateColumn` re-allocates executor state but never recompiles.
+//! Gate netlists are immutable once built and levelized, so designs and
+//! compiled programs are shared through the concurrent artifact cache
+//! ([`super::artifact_cache`]): each (p, q, θ) geometry is built once and
+//! handed out as an [`Arc`] to every engine, test, sweep point and fault
+//! campaign that asks for it — the in-memory analogue of an AOT-compiled
+//! hardware artifact, with LRU eviction instead of the old
+//! process-lifetime leak. Compiled programs get the same treatment
+//! ([`program_handle`](super::artifact_cache::program_handle)): each
+//! (p, q, θ, [`OptLevel`]) is levelized, optionally optimizer-reduced and
+//! lowered to a [`CompiledProgram`](super::compile::CompiledProgram) once
+//! per live cache entry, so switching lane-block width or worker count on
+//! a `GateColumn` re-allocates executor state but never recompiles.
 
-use super::column_design::{build_column, BrvSource, ColumnDesign, ColumnSim};
-use super::compile::{CompiledProgram, CompiledSim};
+use super::artifact_cache::{design_handle, program_handle, ColumnProgram};
+use super::column_design::{ColumnDesign, ColumnSim};
+use super::compile::CompiledSim;
 use super::macros9::MacroState;
-use super::netlist::NetId;
-use super::opt::{NetRemap, OptLevel, PassPipeline};
+use super::opt::OptLevel;
 use super::wordsim::{WordSimulator, LANES};
 use super::SimBackend;
 use crate::tnn::column::Column;
 use crate::tnn::params::TnnParams;
 use crate::tnn::spike::{earliest_spike, SpikeTime};
 use crate::util::Rng64;
-use std::collections::HashMap;
-use std::sync::{Mutex, OnceLock};
-
-/// Design-cache key: (p, q, θ).
-type DesignKey = (usize, usize, u32);
-
-fn design_cache() -> &'static Mutex<HashMap<DesignKey, &'static ColumnDesign>> {
-    static CACHE: OnceLock<Mutex<HashMap<DesignKey, &'static ColumnDesign>>> = OnceLock::new();
-    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
-}
-
-/// Build (or fetch) the interned `BrvSource::Inputs` column netlist for a
-/// geometry. The design is leaked into the process lifetime on first use —
-/// one allocation per distinct geometry, shared by every simulator bound to
-/// it (netlists are immutable after `NetBuilder::finish`).
-pub fn cached_design(p: usize, q: usize, theta: u32) -> &'static ColumnDesign {
-    // A panic inside a build (e.g. a bad geometry assert) aborts before the
-    // entry is inserted, so the map stays consistent — clear the poison
-    // rather than cascading "poisoned" panics into unrelated callers.
-    let mut map = design_cache()
-        .lock()
-        .unwrap_or_else(|poisoned| poisoned.into_inner());
-    *map.entry((p, q, theta))
-        .or_insert_with(|| Box::leak(Box::new(build_column(p, q, theta, BrvSource::Inputs))))
-}
-
-/// A compiled column program plus the design's engine-facing handles
-/// (pulse/reset/output nets, weight-readout instances) expressed in the
-/// program's own net-id space — identical to the design's ids under
-/// [`OptLevel::None`], optimizer-renumbered under [`OptLevel::Inference`].
-pub struct ColumnProgram {
-    /// The levelized instruction program the executor clones from.
-    pub prog: CompiledProgram,
-    /// IN(i) pulse input nets, one per synapse line.
-    pub in_pulse: Vec<NetId>,
-    /// The GRST (WTA reset) input net.
-    pub grst: NetId,
-    /// win(j) spike output nets, one per neuron.
-    pub out_spike: Vec<NetId>,
-    /// `SynWeightUpdate` instance index per (i, j) synapse, row-major.
-    pub syn_inst: Vec<u32>,
-    /// BRV input nets that still exist in this program and must be forced
-    /// low before an inference sweep. The full BRV set under
-    /// [`OptLevel::None`]; empty under [`OptLevel::Inference`] once the
-    /// optimizer has folded them away (kept as a list, not an assumption,
-    /// so a partially-folding pipeline would still silence the survivors).
-    pub silence: Vec<NetId>,
-    /// Design-id → program-id translation (identity under
-    /// [`OptLevel::None`]) for toggle reports and fault sites.
-    pub remap: NetRemap,
-}
-
-/// Program-cache key: (p, q, θ, optimization level).
-type ProgramKey = (usize, usize, u32, OptLevel);
-
-fn program_cache() -> &'static Mutex<HashMap<ProgramKey, &'static ColumnProgram>> {
-    static CACHE: OnceLock<Mutex<HashMap<ProgramKey, &'static ColumnProgram>>> = OnceLock::new();
-    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
-}
-
-fn build_program(d: &ColumnDesign, opt: OptLevel) -> ColumnProgram {
-    let all_brv = || {
-        d.brv_case
-            .iter()
-            .flatten()
-            .chain(d.brv_stab.iter().flatten())
-            .copied()
-    };
-    match opt {
-        OptLevel::None => ColumnProgram {
-            prog: CompiledProgram::compile(&d.netlist).expect("cached design compiles"),
-            in_pulse: d.in_pulse.clone(),
-            grst: d.grst,
-            out_spike: d.out_spike.clone(),
-            syn_inst: d.syn_inst.clone(),
-            silence: all_brv().collect(),
-            remap: NetRemap::identity(d.netlist.len(), d.netlist.macros.len()),
-        },
-        OptLevel::Inference => {
-            let pipeline = PassPipeline::inference(d.inference_assumptions(), d.keep_set());
-            let (prog, remap) = CompiledProgram::compile_opt(&d.netlist, &pipeline)
-                .expect("cached design optimizes and compiles");
-            let keep = |n: NetId| remap.net(n).expect("keep-set net survives optimization");
-            ColumnProgram {
-                in_pulse: d.in_pulse.iter().map(|&n| keep(n)).collect(),
-                grst: keep(d.grst),
-                out_spike: d.out_spike.iter().map(|&n| keep(n)).collect(),
-                syn_inst: d
-                    .syn_inst
-                    .iter()
-                    .map(|&i| remap.macro_inst(i).expect("weight instance survives"))
-                    .collect(),
-                silence: all_brv().filter_map(|n| remap.net(n)).collect(),
-                prog,
-                remap,
-            }
-        }
-    }
-}
-
-/// Build (or fetch) the interned compiled program for a geometry at an
-/// optimization level. Like [`cached_design`], the result is leaked into
-/// the process lifetime on first use: the levelize/optimize/lower pipeline
-/// runs once per (p, q, θ, opt) key, and every [`GateColumn`] that later
-/// changes lane-block width or worker count just clones the instruction
-/// stream into a fresh executor ([`CompiledSim::from_program`]) instead of
-/// recompiling.
-pub fn cached_program(p: usize, q: usize, theta: u32, opt: OptLevel) -> &'static ColumnProgram {
-    // Same poison discipline as `cached_design`: a panicking build leaves
-    // no entry behind, so clear the poison instead of cascading it.
-    let mut map = program_cache()
-        .lock()
-        .unwrap_or_else(|poisoned| poisoned.into_inner());
-    *map.entry((p, q, theta, opt))
-        .or_insert_with(|| Box::leak(Box::new(build_program(cached_design(p, q, theta), opt))))
-}
+use std::sync::Arc;
 
 /// The gate-level column engine: the macro netlist plus a persistent scalar
 /// simulator (synaptic weights live in the `syn_weight_update` macro
 /// states) and a lazily-built word simulator for batched inference sweeps.
 pub struct GateColumn {
-    design: &'static ColumnDesign,
+    // NOTE field order: `sim` and `wsim` borrow the design owned by
+    // `design_owner` (see `with_weights` for the safety argument), so they
+    // are declared first and drop first.
     sim: ColumnSim<'static>,
     /// 64-lane engine over the same netlist, built on first batched sweep.
     wsim: Option<WordSimulator<'static>>,
     /// Compiled lane-block engine, built on first batched sweep under a
     /// `SimBackend::Compiled` selection.
     csim: Option<CompiledSim>,
+    /// The cached program behind `csim` (same opt level), held so repeated
+    /// sweeps skip the cache lookup and the entry survives eviction for as
+    /// long as this engine uses it.
+    cprog: Option<Arc<ColumnProgram>>,
     /// Which simulator runs the batched inference sweeps (winners are
     /// bit-exact across backends; this is purely a throughput knob).
     backend: SimBackend,
@@ -186,6 +80,11 @@ pub struct GateColumn {
     // but consumes the identical stream)
     u_case: Vec<f64>,
     u_stab: Vec<f64>,
+    /// Borrow of `design_owner`'s pointee (never handed out as `'static`).
+    design: &'static ColumnDesign,
+    /// The cache handle that keeps `design` alive for this engine's whole
+    /// lifetime, eviction or not.
+    design_owner: Arc<ColumnDesign>,
 }
 
 impl GateColumn {
@@ -210,21 +109,34 @@ impl GateColumn {
         params: TnnParams,
         ws: &[u8],
     ) -> crate::Result<GateColumn> {
-        let design = cached_design(p, q, theta);
+        let design_owner = design_handle(p, q, theta)?;
+        // SAFETY: `design` points into the heap allocation owned by
+        // `design_owner`, which this struct holds for its entire lifetime;
+        // `Arc`'s pointee address is stable under moves of the handle (and
+        // of the `GateColumn`), and a `ColumnDesign` is never mutated after
+        // construction. The reference is confined to this struct's private
+        // fields and the simulators borrowing from them — no accessor
+        // re-exports it — so it cannot outlive `design_owner`. This is the
+        // owning-handle pattern that lets cache entries be evictable
+        // (`Arc`) while the borrowing simulators keep their plain-`&`
+        // APIs.
+        let design: &'static ColumnDesign = unsafe { &*Arc::as_ptr(&design_owner) };
         let mut sim = ColumnSim::new(design, params.clone()).map_err(anyhow::Error::msg)?;
         sim.set_weights(ws);
         let n = p * q;
         Ok(GateColumn {
-            design,
             sim,
             wsim: None,
             csim: None,
+            cprog: None,
             backend: SimBackend::BitParallel64,
             opt: OptLevel::None,
             params,
             ones: vec![1.0; n],
             u_case: vec![0.0; n],
             u_stab: vec![0.0; n],
+            design,
+            design_owner,
         })
     }
 
@@ -243,6 +155,14 @@ impl GateColumn {
     /// The engine's hyper-parameters.
     pub fn params(&self) -> &TnnParams {
         &self.params
+    }
+
+    /// The shared cache handle this engine's design came from — the same
+    /// `Arc` every other consumer of this (p, q, θ) holds (until
+    /// eviction), which is what makes "fault campaign and engine run one
+    /// design artifact" a checkable [`Arc::ptr_eq`] fact.
+    pub fn design_handle(&self) -> &Arc<ColumnDesign> {
+        &self.design_owner
     }
 
     /// Read the synaptic weights back out of the macro states.
@@ -298,7 +218,8 @@ impl GateColumn {
     /// Select the netlist optimization level for the compiled backend:
     /// [`OptLevel::Inference`] runs batched sweeps on the
     /// inference-specialized program (BRV constant propagation + dead-logic
-    /// elimination + locality scheduling, via [`cached_program`]) instead
+    /// elimination + locality scheduling, via
+    /// [`program_handle`](super::artifact_cache::program_handle)) instead
     /// of the full learning netlist. Winners are bit-exact across levels —
     /// like [`GateColumn::set_sim_backend`], a throughput knob, never a
     /// semantics knob. Only the `Compiled` backend consults it; the
@@ -307,6 +228,7 @@ impl GateColumn {
         if opt != self.opt {
             self.opt = opt;
             self.csim = None; // rebuilt lazily from the other cached program
+            self.cprog = None;
         }
     }
 
@@ -322,8 +244,10 @@ impl GateColumn {
     /// inputs are held low (the word-level analogue of the scalar path's
     /// all-ones uniforms), so each lane runs the exact scalar inference
     /// gamma cycle and winners are bit-exact with
-    /// [`GateColumn::infer_winner`] on every backend.
-    pub fn infer_batch(&mut self, volleys: &[&[SpikeTime]]) -> Vec<Option<usize>> {
+    /// [`GateColumn::infer_winner`] on every backend. Errs only when the
+    /// compiled backend's program build failed (a memoized cache error —
+    /// the interpreter backends never fail).
+    pub fn infer_batch(&mut self, volleys: &[&[SpikeTime]]) -> crate::Result<Vec<Option<usize>>> {
         // Hard assert, matching the scalar path (`ColumnSim::run_gamma`): a
         // malformed volley must fail loudly on both paths, in release too.
         for (k, v) in volleys.iter().enumerate() {
@@ -333,7 +257,7 @@ impl GateColumn {
             SimBackend::Compiled { words, threads } => {
                 self.infer_batch_compiled(volleys, words, threads)
             }
-            SimBackend::BitParallel64 => self.infer_batch_word(volleys),
+            SimBackend::BitParallel64 => Ok(self.infer_batch_word(volleys)),
             SimBackend::Scalar => {
                 // The flag means what it says: the true scalar engine, one
                 // volley at a time (useful as a baseline / cross-check).
@@ -341,19 +265,19 @@ impl GateColumn {
                 for v in volleys {
                     winners.push(self.infer_winner(v));
                 }
-                winners
+                Ok(winners)
             }
         }
     }
 
     /// The 64-lane interpreter sweep behind [`GateColumn::infer_batch`].
     ///
-    /// NOTE: this and [`GateColumn::infer_batch_compiled`] implement the
-    /// SAME inference protocol (weight broadcast, BRV silencing, GRST on
-    /// the last gamma cycle, first-spike extraction) on two different
-    /// engines — any protocol change must land in both, and the
-    /// cross-backend equality tests (unit, conformance, bench guard) exist
-    /// to fail loudly if they drift.
+    /// NOTE: this and [`compiled_inference_sweep`] implement the SAME
+    /// inference protocol (weight broadcast, BRV silencing, GRST on the
+    /// last gamma cycle, first-spike extraction) on two different engines —
+    /// any protocol change must land in both, and the cross-backend
+    /// equality tests (unit, conformance, bench guard) exist to fail
+    /// loudly if they drift.
     fn infer_batch_word(&mut self, volleys: &[&[SpikeTime]]) -> Vec<Option<usize>> {
         let d = self.design;
         let g = self.params.gamma_cycles;
@@ -428,23 +352,24 @@ impl GateColumn {
 
     /// The compiled lane-block sweep behind [`GateColumn::infer_batch`]:
     /// one compiled pass per `words × 64`-volley chunk, levels sharded
-    /// across `threads` workers. Same protocol as
-    /// [`GateColumn::infer_batch_word`], word by word (see the drift note
-    /// there), addressed through the interned [`ColumnProgram`] for the
-    /// selected [`OptLevel`] — under [`OptLevel::Inference`] the program's
-    /// nets are optimizer-renumbered and the BRV silencing loop collapses
-    /// to the (normally empty) survivor list.
+    /// across `threads` workers, addressed through the cached
+    /// [`ColumnProgram`] for the selected [`OptLevel`] — under
+    /// [`OptLevel::Inference`] the program's nets are optimizer-renumbered
+    /// and the BRV silencing loop collapses to the (normally empty)
+    /// survivor list. The sweep body itself is the shared
+    /// [`compiled_inference_sweep`], which the serve-path
+    /// `coordinator::ServiceEngine` also drives.
     fn infer_batch_compiled(
         &mut self,
         volleys: &[&[SpikeTime]],
         words: usize,
         threads: usize,
-    ) -> Vec<Option<usize>> {
+    ) -> crate::Result<Vec<Option<usize>>> {
         let d = self.design;
-        let g = self.params.gamma_cycles;
-        let q = d.q;
-        let ws = self.sim.weights();
-        let cp = cached_program(d.p, d.q, d.theta, self.opt);
+        if self.cprog.is_none() {
+            self.cprog = Some(program_handle(d.p, d.q, d.theta, self.opt)?);
+        }
+        let cp = self.cprog.as_ref().expect("set above").clone();
         // Resolve 0 = machine parallelism BEFORE the rebuild check —
         // `CompiledSim::threads()` reports the resolved count, and
         // comparing it against a raw 0 would rebuild every call.
@@ -453,8 +378,9 @@ impl GateColumn {
         } else {
             threads
         };
-        // `set_opt_level` clears `csim`, so an existing executor always
-        // belongs to the current program — only width/workers can drift.
+        // `set_opt_level` clears `csim` and `cprog`, so an existing
+        // executor always belongs to the current program — only
+        // width/workers can drift.
         let rebuild = match &self.csim {
             Some(c) => c.words() != words || c.threads() != threads,
             None => true,
@@ -463,74 +389,108 @@ impl GateColumn {
             self.csim = Some(CompiledSim::from_program(cp.prog.clone(), words, threads));
         }
         let csim = self.csim.as_mut().expect("built above");
-        let lanes = words * LANES;
+        let ws = self.sim.weights();
+        Ok(compiled_inference_sweep(
+            &cp,
+            csim,
+            self.params.gamma_cycles,
+            d.q,
+            &ws,
+            volleys,
+        ))
+    }
+}
 
-        let mut winners = Vec::with_capacity(volleys.len());
-        for chunk in volleys.chunks(lanes) {
-            csim.reset_state();
-            // Broadcast the current weights into every lane of every word
-            // and silence any surviving BRV streams (no case ever fires →
-            // pure inference), exactly like the interpreter path.
-            for (k, &inst) in cp.syn_inst.iter().enumerate() {
-                let mut st = MacroState::default();
-                st.set_weight(ws[k]);
-                csim.set_macro_state_broadcast(inst as usize, &st);
-            }
-            for &net in &cp.silence {
-                for w in 0..words {
-                    csim.set_input_net(net, w, 0);
-                }
-            }
+/// One batched inference sweep on a compiled executor: chunks `volleys`
+/// into `csim.words() × 64`-lane passes, broadcasts `ws` into every lane,
+/// silences the program's surviving BRV inputs, pulses GRST on the last
+/// gamma cycle and extracts each lane's earliest output spike — the exact
+/// protocol of [`GateColumn::infer_batch`]'s interpreter path, word by
+/// word (see the drift note there).
+///
+/// Shared by the gate engine and the serving layer
+/// (`coordinator::ServiceEngine`), which runs it on pooled executors so
+/// concurrent requests get per-request scratch over one cached program.
+pub(crate) fn compiled_inference_sweep(
+    cp: &ColumnProgram,
+    csim: &mut CompiledSim,
+    gamma: u32,
+    q: usize,
+    ws: &[u8],
+    volleys: &[&[SpikeTime]],
+) -> Vec<Option<usize>> {
+    let p = cp.in_pulse.len();
+    for (k, v) in volleys.iter().enumerate() {
+        assert_eq!(v.len(), p, "volley {k} length != p");
+    }
+    let words = csim.words();
+    let lanes = words * LANES;
 
-            // One gamma cycle in all lanes; record each lane's first cycle
-            // with the output net high (level semantics, identical to
-            // `ColumnSim::run_gamma`). `seen[j * words + w]` masks lanes of
-            // word `w` that already fired on output j.
-            let mut times = vec![SpikeTime::NONE; chunk.len() * q];
-            let mut seen = vec![0u64; q * words];
-            for t in 0..g {
-                for (i, &net) in cp.in_pulse.iter().enumerate() {
-                    for w in 0..words {
-                        let mut word = 0u64;
-                        for (l, volley) in chunk.iter().skip(w * LANES).take(LANES).enumerate() {
-                            let x = volley[i];
-                            if x.is_spike() && x.0 == t {
-                                word |= 1u64 << l;
-                            }
-                        }
-                        csim.set_input_net(net, w, word);
-                    }
-                }
-                for w in 0..words {
-                    csim.set_input_net(cp.grst, w, if t == g - 1 { !0u64 } else { 0 });
-                }
-                csim.settle();
-                for (j, &net) in cp.out_spike.iter().enumerate() {
-                    for w in 0..words {
-                        let fresh = csim.get_word(net, w) & !seen[j * words + w];
-                        if fresh != 0 {
-                            seen[j * words + w] |= fresh;
-                            let mut bits = fresh;
-                            while bits != 0 {
-                                let l = bits.trailing_zeros() as usize;
-                                bits &= bits - 1;
-                                let idx = w * LANES + l;
-                                if idx < chunk.len() {
-                                    times[idx * q + j] = SpikeTime::at(t);
-                                }
-                            }
-                        }
-                    }
-                }
-                csim.clock();
-            }
-            for lane_times in times.chunks_exact(q) {
-                let (idx, t) = earliest_spike(lane_times);
-                winners.push(t.is_spike().then_some(idx));
+    let mut winners = Vec::with_capacity(volleys.len());
+    for chunk in volleys.chunks(lanes) {
+        csim.reset_state();
+        // Broadcast the current weights into every lane of every word
+        // and silence any surviving BRV streams (no case ever fires →
+        // pure inference), exactly like the interpreter path.
+        for (k, &inst) in cp.syn_inst.iter().enumerate() {
+            let mut st = MacroState::default();
+            st.set_weight(ws[k]);
+            csim.set_macro_state_broadcast(inst as usize, &st);
+        }
+        for &net in &cp.silence {
+            for w in 0..words {
+                csim.set_input_net(net, w, 0);
             }
         }
-        winners
+
+        // One gamma cycle in all lanes; record each lane's first cycle
+        // with the output net high (level semantics, identical to
+        // `ColumnSim::run_gamma`). `seen[j * words + w]` masks lanes of
+        // word `w` that already fired on output j.
+        let mut times = vec![SpikeTime::NONE; chunk.len() * q];
+        let mut seen = vec![0u64; q * words];
+        for t in 0..gamma {
+            for (i, &net) in cp.in_pulse.iter().enumerate() {
+                for w in 0..words {
+                    let mut word = 0u64;
+                    for (l, volley) in chunk.iter().skip(w * LANES).take(LANES).enumerate() {
+                        let x = volley[i];
+                        if x.is_spike() && x.0 == t {
+                            word |= 1u64 << l;
+                        }
+                    }
+                    csim.set_input_net(net, w, word);
+                }
+            }
+            for w in 0..words {
+                csim.set_input_net(cp.grst, w, if t == gamma - 1 { !0u64 } else { 0 });
+            }
+            csim.settle();
+            for (j, &net) in cp.out_spike.iter().enumerate() {
+                for w in 0..words {
+                    let fresh = csim.get_word(net, w) & !seen[j * words + w];
+                    if fresh != 0 {
+                        seen[j * words + w] |= fresh;
+                        let mut bits = fresh;
+                        while bits != 0 {
+                            let l = bits.trailing_zeros() as usize;
+                            bits &= bits - 1;
+                            let idx = w * LANES + l;
+                            if idx < chunk.len() {
+                                times[idx * q + j] = SpikeTime::at(t);
+                            }
+                        }
+                    }
+                }
+            }
+            csim.clock();
+        }
+        for lane_times in times.chunks_exact(q) {
+            let (idx, t) = earliest_spike(lane_times);
+            winners.push(t.is_spike().then_some(idx));
+        }
     }
+    winners
 }
 
 #[cfg(test)]
@@ -542,15 +502,18 @@ mod tests {
     }
 
     #[test]
-    fn cached_design_is_interned_per_geometry() {
-        let a = cached_design(4, 2, 5);
-        let b = cached_design(4, 2, 5);
-        let c = cached_design(4, 2, 6);
-        assert!(std::ptr::eq(a, b), "same geometry shares one design");
-        assert!(!std::ptr::eq(a, c), "distinct θ gets its own design");
+    fn designs_are_shared_per_geometry_until_eviction() {
+        let a = design_handle(4, 2, 5).unwrap();
+        let b = design_handle(4, 2, 5).unwrap();
+        let c = design_handle(4, 2, 6).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "same geometry shares one design");
+        assert!(!Arc::ptr_eq(&a, &c), "distinct θ gets its own design");
         assert_eq!(a.p, 4);
         assert_eq!(a.q, 2);
         assert!(!a.brv_case.is_empty(), "engine designs carry BRV inputs");
+        // The engine holds the same shared artifact.
+        let gate = GateColumn::with_weights(4, 2, 5, TnnParams::default(), &[0; 8]).unwrap();
+        assert!(Arc::ptr_eq(&a, gate.design_handle()));
     }
 
     #[test]
@@ -601,7 +564,7 @@ mod tests {
         let volleys: Vec<Vec<SpikeTime>> =
             (0..70).map(|_| random_volley(6, &mut rng)).collect();
         let refs: Vec<&[SpikeTime]> = volleys.iter().map(|v| v.as_slice()).collect();
-        let batch = gate.infer_batch(&refs);
+        let batch = gate.infer_batch(&refs).unwrap();
         assert_eq!(batch.len(), 70);
         let mut fired = 0;
         for (k, v) in volleys.iter().enumerate() {
@@ -623,19 +586,19 @@ mod tests {
             (0..150).map(|_| random_volley(6, &mut rng)).collect();
         let refs: Vec<&[SpikeTime]> = volleys.iter().map(|v| v.as_slice()).collect();
         assert_eq!(gate.sim_backend(), crate::gates::SimBackend::BitParallel64);
-        let word = gate.infer_batch(&refs);
+        let word = gate.infer_batch(&refs).unwrap();
         for (words, threads) in [(1usize, 1usize), (2, 2)] {
             gate.set_sim_backend(crate::gates::SimBackend::Compiled { words, threads });
             assert_eq!(
                 gate.sim_backend(),
                 crate::gates::SimBackend::Compiled { words, threads }
             );
-            let compiled = gate.infer_batch(&refs);
+            let compiled = gate.infer_batch(&refs).unwrap();
             assert_eq!(compiled, word, "words={words} threads={threads}");
         }
         // The scalar backend loops the true per-volley scalar engine.
         gate.set_sim_backend(crate::gates::SimBackend::Scalar);
-        assert_eq!(gate.infer_batch(&refs), word, "scalar backend batch");
+        assert_eq!(gate.infer_batch(&refs).unwrap(), word, "scalar backend batch");
         // …and both agree with the scalar per-volley path and golden.
         for (k, v) in volleys.iter().enumerate() {
             assert_eq!(word[k], gate.infer_winner(v), "volley {k} vs scalar gate");
@@ -651,24 +614,24 @@ mod tests {
         let volleys: Vec<Vec<SpikeTime>> =
             (0..100).map(|_| random_volley(6, &mut rng)).collect();
         let refs: Vec<&[SpikeTime]> = volleys.iter().map(|v| v.as_slice()).collect();
-        let word = gate.infer_batch(&refs);
+        let word = gate.infer_batch(&refs).unwrap();
 
         gate.set_sim_backend(crate::gates::SimBackend::Compiled { words: 2, threads: 1 });
         assert_eq!(gate.opt_level(), OptLevel::None);
-        let plain = gate.infer_batch(&refs);
+        let plain = gate.infer_batch(&refs).unwrap();
         gate.set_opt_level(OptLevel::Inference);
-        let lean = gate.infer_batch(&refs);
+        let lean = gate.infer_batch(&refs).unwrap();
         assert_eq!(lean, plain, "opt=inference winners drifted");
         assert_eq!(lean, word, "opt=inference vs interpreter");
         // Flipping back rebuilds from the cached unoptimized program.
         gate.set_opt_level(OptLevel::None);
-        assert_eq!(gate.infer_batch(&refs), word, "opt=none after round-trip");
+        assert_eq!(gate.infer_batch(&refs).unwrap(), word, "opt=none after round-trip");
 
-        let full = cached_program(6, 3, 8, OptLevel::None);
-        let opt = cached_program(6, 3, 8, OptLevel::Inference);
+        let full = program_handle(6, 3, 8, OptLevel::None).unwrap();
+        let opt = program_handle(6, 3, 8, OptLevel::Inference).unwrap();
         assert!(
-            std::ptr::eq(opt, cached_program(6, 3, 8, OptLevel::Inference)),
-            "programs are interned per (geometry, opt) key"
+            Arc::ptr_eq(&opt, &program_handle(6, 3, 8, OptLevel::Inference).unwrap()),
+            "programs are shared per (geometry, opt) key"
         );
         assert!(
             opt.prog.instr_count() < full.prog.instr_count(),
@@ -696,7 +659,7 @@ mod tests {
             gate.step(v, &mut stream);
         }
         let refs: Vec<&[SpikeTime]> = volleys.iter().map(|v| v.as_slice()).collect();
-        let batch = gate.infer_batch(&refs);
+        let batch = gate.infer_batch(&refs).unwrap();
         for (k, v) in volleys.iter().enumerate() {
             assert_eq!(batch[k], gate.infer_winner(v), "volley {k}");
         }
@@ -716,7 +679,7 @@ mod tests {
             gate.step(v, &mut stream);
         }
         let refs: Vec<&[SpikeTime]> = volleys.iter().map(|v| v.as_slice()).collect();
-        let batch = gate.infer_batch(&refs);
+        let batch = gate.infer_batch(&refs).unwrap();
         for (k, v) in volleys.iter().enumerate() {
             assert_eq!(batch[k], gate.infer_winner(v), "volley {k}");
         }

@@ -17,8 +17,12 @@
 //! that run on all three engines with bit-identical verdicts ([`fault`]),
 //! and the netlist optimizer pass pipeline — constant propagation,
 //! dead-logic elimination, locality renumbering — that specializes the
-//! compiled program for inference workloads ([`opt`]).
+//! compiled program for inference workloads ([`opt`]), and the concurrent
+//! evicting artifact cache that shares built designs and compiled programs
+//! across engines, sweeps, fault campaigns and the serving layer
+//! ([`artifact_cache`]).
 
+pub mod artifact_cache;
 pub mod column_design;
 pub mod compile;
 pub mod fault;
@@ -29,6 +33,9 @@ pub mod opt;
 pub mod sim;
 pub mod wordsim;
 
+pub use artifact_cache::{
+    cache_stats, design_handle, program_handle, CacheStats, ColumnProgram, ShardedLruCache,
+};
 pub use compile::{CompiledProgram, CompiledSim};
 pub use fault::{CampaignResult, FaultClass, FaultCounts, FaultOutcome, GateFault};
 pub use gate_engine::GateColumn;

@@ -10,8 +10,8 @@
 //! thread count — the cross-backend agreement flag in the report is the
 //! live check of that claim.
 
+use crate::gates::artifact_cache::design_handle;
 use crate::gates::fault::{campaign, sample_faults, CampaignResult, FaultCounts};
-use crate::gates::gate_engine::cached_design;
 use crate::gates::SimBackend;
 use crate::tnn::fault::{flip_column_weights, flip_network_weights};
 use crate::tnn::SpikeTime;
@@ -260,7 +260,10 @@ pub fn fault_campaign(spec: &FaultSpec) -> crate::Result<FaultsReport> {
     }
 
     // --- gate-level stuck-at + SEU campaign ----------------------------
-    let d = cached_design(col.p(), col.q(), col.theta());
+    // Resolve through the shared artifact cache: the campaign strikes the
+    // SAME design `Arc` every gate engine of this geometry runs (pinned by
+    // `Arc::ptr_eq` in `tests/faults.rs`), not a private rebuild.
+    let d = design_handle(col.p(), col.q(), col.theta())?;
     let gamma = col.params().gamma_cycles;
     let volleys: Vec<&[SpikeTime]> = items
         .iter()
@@ -272,7 +275,7 @@ pub fn fault_campaign(spec: &FaultSpec) -> crate::Result<FaultsReport> {
     let faults = sample_faults(&d.netlist, spec.stuck, spec.seu, total_cycles, spec.seed);
 
     let t0 = Instant::now();
-    let primary = campaign(d, col.weights(), gamma, &volleys, &faults, spec.backend)
+    let primary = campaign(&d, col.weights(), gamma, &volleys, &faults, spec.backend)
         .map_err(anyhow::Error::msg)?;
     let wall = t0.elapsed();
 
@@ -287,7 +290,7 @@ pub fn fault_campaign(spec: &FaultSpec) -> crate::Result<FaultsReport> {
         },
     ]
     .iter()
-    .map(|&b| campaign(d, col.weights(), gamma, &volleys, &faults, b))
+    .map(|&b| campaign(&d, col.weights(), gamma, &volleys, &faults, b))
     .collect::<Result<Vec<CampaignResult>, String>>()
     .map_err(anyhow::Error::msg)?
     .iter()

@@ -17,6 +17,10 @@
 //!     request path).
 //!   - [`ucr`] and [`mnist`]: the two application workloads the paper
 //!     evaluates (unsupervised time-series clustering; digit recognition).
+//!   - [`serve`]: the always-on deployment shape — a dynamic-batching
+//!     inference server coalescing mixed-engine, mixed-geometry query
+//!     streams into compiled lane-block passes over shared artifacts
+//!     from [`gates::artifact_cache`].
 //!
 //! * **Hardware half** — what TNN hardware *costs* (the substitute for the
 //!   Cadence/ASAP7 stack, built from scratch per the reproduction rules):
@@ -72,6 +76,7 @@ pub mod metrics;
 pub mod mnist;
 pub mod ppa;
 pub mod runtime;
+pub mod serve;
 pub mod sweep;
 pub mod synth;
 pub mod tnn;

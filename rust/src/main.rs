@@ -299,25 +299,47 @@ fn synth_cmd(args: &[String]) -> tnn7::Result<()> {
 }
 
 fn serve(args: &[String]) -> tnn7::Result<()> {
-    let mut cfg = RunConfig::default();
-    cfg.apply_overrides(&overrides(args))?;
-    let rt = XlaRuntime::load(&cfg.artifacts_dir)?;
+    use tnn7::serve::{
+        print_summary, run_bench, serve_lines, serve_socket, write_report, ServeSpec, Server,
+    };
+    let mut spec = if flag(args, "--quick") {
+        ServeSpec::quick()
+    } else {
+        ServeSpec::default()
+    };
+    spec.apply_overrides(&overrides(args))?;
+    if spec.capacity > 0 {
+        tnn7::gates::artifact_cache::set_cache_capacities(spec.capacity, spec.capacity * 2);
+    }
+    if flag(args, "--stdin") {
+        // CI pipe mode: requests on stdin until EOF, replies (sorted by
+        // request id, byte-stable at any worker count) on stdout.
+        let server = Server::start(&spec)?;
+        let n = serve_lines(&server, std::io::stdin().lock(), std::io::stdout().lock())?;
+        eprintln!(
+            "tnn7 serve: answered {n} requests in {} lane-block passes",
+            server.batches()
+        );
+        server.shutdown();
+        return Ok(());
+    }
+    if let Some(addr) = opt(args, "--listen") {
+        let server = Server::start(&spec)?;
+        return serve_socket(&server, addr);
+    }
+    // Default: bench mode with the deterministic seeded client.
+    let report = run_bench(&spec)?;
+    print_summary(&report);
+    write_report(&report)?;
     println!(
-        "PJRT platform: {}; artifacts: {:?}",
-        rt.platform(),
-        rt.artifact_names()
+        "wrote {} and {}",
+        spec.out_dir.join("BENCH_serve.json").display(),
+        spec.out_dir.join("serve_transcript.tsv").display()
     );
-    let dataset = ucr::ucr_suite()
-        .into_iter()
-        .find(|c| c.name == "TwoLeadECG")
-        .unwrap();
-    let data = ucr::generate(dataset, cfg.gamma_instances / 2, cfg.seed);
-    let items = encode_ucr(&data, 8);
-    let mut rng = Rng64::seed_from_u64(cfg.seed);
-    let exe = rt.column(dataset.p, dataset.q, "step")?;
-    let mut engine = Engine::xla(exe, &mut rng);
-    let out = run_stream(&mut engine, items, cfg.channel_depth, cfg.seed)?;
-    println!("serve (XLA column, online learning): {}", out.metrics.summary(out.wall));
+    anyhow::ensure!(
+        report.patterns.iter().all(|p| p.winners_match_sequential),
+        "batched winners diverged from the sequential reference"
+    );
     Ok(())
 }
 

@@ -1,0 +1,413 @@
+//! Bench mode: drive the server with the deterministic seeded client
+//! over every arrival pattern, verify batched winners against an
+//! independently rebuilt sequential reference, and report latency
+//! quantiles + sustained throughput into `BENCH_serve.json`.
+
+use super::server::{build_entry_engine, Reply, Server};
+use super::{ArrivalPattern, ServeSpec};
+use crate::gates::artifact_cache::{cache_stats, set_cache_capacities, CacheStats};
+use crate::metrics::LatencyHistogram;
+use crate::util::json::Json;
+use crate::util::Rng64;
+use std::fmt::Write as _;
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// One registry entry as reported (names only; the live engines stay in
+/// the server).
+#[derive(Clone, Debug)]
+pub struct EntrySummary {
+    /// Wire name (`gate:12x2`).
+    pub name: String,
+    /// Engine kind spelling.
+    pub kind: String,
+    /// Synapse lines per neuron.
+    pub p: usize,
+    /// Neurons in the column.
+    pub q: usize,
+    /// Query-pool size.
+    pub queries: usize,
+}
+
+/// Latency/throughput summary of one arrival pattern's run.
+#[derive(Clone, Debug)]
+pub struct PatternStats {
+    /// The arrival schedule this row measured.
+    pub pattern: ArrivalPattern,
+    /// Requests the client sent.
+    pub requests: usize,
+    /// Lane-block passes the server executed for them.
+    pub batches: u64,
+    /// Mean requests coalesced per pass.
+    pub mean_batch: f64,
+    /// Median end-to-end latency (µs, bucket upper bound).
+    pub p50_us: u64,
+    /// 99th-percentile end-to-end latency (µs, bucket upper bound).
+    pub p99_us: u64,
+    /// Mean end-to-end latency (µs).
+    pub mean_us: f64,
+    /// Worst observed latency (µs).
+    pub max_us: u64,
+    /// Sustained queries/sec over the pattern's wall time.
+    pub qps: f64,
+    /// Did every server winner equal the sequential reference's?
+    pub winners_match_sequential: bool,
+}
+
+/// Everything bench mode measures (and `BENCH_serve.json` records).
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    /// The configuration the service ran under.
+    pub spec: ServeSpec,
+    /// The registry (engines × geometries).
+    pub entries: Vec<EntrySummary>,
+    /// One row per arrival pattern.
+    pub patterns: Vec<PatternStats>,
+    /// Artifact-cache occupancy/evictions after the run.
+    pub cache: CacheStats,
+    /// TSV transcript, `pattern \t id \t entry \t winner` sorted by
+    /// (pattern order, id) — byte-stable at any worker count; diffed
+    /// against the committed golden in CI.
+    pub transcript: String,
+}
+
+/// Render a winner for the transcript / summary (`-` = no spike).
+fn fmt_winner(w: Option<usize>) -> String {
+    w.map_or_else(|| "-".to_string(), |i| i.to_string())
+}
+
+/// The seeded client's arrival schedule for one pattern: request i is
+/// `(entry index, query index)`. Deterministic from (seed, pattern slot).
+fn make_schedule(
+    spec: &ServeSpec,
+    pattern: ArrivalPattern,
+    slot: u64,
+    pools: &[usize],
+    caps: &[usize],
+) -> Vec<(usize, usize)> {
+    let n = pools.len();
+    let mut rng = Rng64::seed_from_u64(spec.seed ^ 0xA11C_E5E0).split_stream(slot);
+    let mut sched = Vec::with_capacity(spec.requests);
+    match pattern {
+        ArrivalPattern::Steady => {
+            for i in 0..spec.requests {
+                let e = i % n;
+                sched.push((e, (i / n) % pools[e]));
+            }
+        }
+        ArrivalPattern::Bursty => {
+            while sched.len() < spec.requests {
+                let e = rng.gen_range(0, n);
+                let burst = rng.gen_range(2, caps[e].max(3));
+                let base = rng.gen_range(0, pools[e]);
+                for b in 0..burst {
+                    if sched.len() == spec.requests {
+                        break;
+                    }
+                    sched.push((e, (base + b) % pools[e]));
+                }
+            }
+        }
+        ArrivalPattern::Shuffled => {
+            for _ in 0..spec.requests {
+                let e = rng.gen_range(0, n);
+                sched.push((e, rng.gen_range(0, pools[e])));
+            }
+        }
+    }
+    sched
+}
+
+/// Run the full bench: build the sequential reference, start the server,
+/// sweep every arrival pattern, and assemble the report. The reference
+/// winners come from stateful engines rebuilt independently through
+/// [`build_entry_engine`] and queried one volley at a time with
+/// `Engine::infer_winner` — the differential the tentpole's
+/// "batching is semantics-free" claim is checked against.
+pub fn run_bench(spec: &ServeSpec) -> crate::Result<ServeReport> {
+    spec.validate()?;
+    if spec.capacity > 0 {
+        set_cache_capacities(spec.capacity, spec.capacity * 2);
+    }
+
+    // --- sequential reference: fresh engines, one query at a time ------
+    let mut expected: Vec<Vec<Option<usize>>> = Vec::new();
+    {
+        let mut idx = 0u64;
+        for &kind in &spec.engines {
+            for &(p, q) in &spec.geometries {
+                let (mut engine, queries) = build_entry_engine(spec, kind, p, q, idx)?;
+                let mut winners = Vec::with_capacity(queries.len());
+                for v in &queries {
+                    winners.push(engine.infer_winner(v)?);
+                }
+                expected.push(winners);
+                idx += 1;
+            }
+        }
+    }
+
+    // --- the server under test -----------------------------------------
+    let server = Server::start(spec)?;
+    let entries: Vec<EntrySummary> = server
+        .entries()
+        .iter()
+        .map(|e| EntrySummary {
+            name: e.name.clone(),
+            kind: e.kind.name().to_string(),
+            p: e.p,
+            q: e.q,
+            queries: e.queries.len(),
+        })
+        .collect();
+    let pools: Vec<usize> = server.entries().iter().map(|e| e.queries.len()).collect();
+    let caps: Vec<usize> = server.entries().iter().map(|e| e.max_batch).collect();
+
+    let mut patterns = Vec::new();
+    let mut transcript = String::new();
+    for (slot, &pattern) in spec.patterns.iter().enumerate() {
+        let sched = make_schedule(spec, pattern, slot as u64, &pools, &caps);
+        let b0 = server.batches();
+        let (tx, rx) = mpsc::channel();
+        let t0 = Instant::now();
+        for (i, &(e, qi)) in sched.iter().enumerate() {
+            let volley = server.entries()[e].queries[qi].clone();
+            server.submit(i as u64, e, volley, tx.clone())?;
+        }
+        drop(tx);
+        let mut replies: Vec<Reply> = rx.iter().collect();
+        let wall = t0.elapsed();
+        let batches = server.batches() - b0;
+        anyhow::ensure!(
+            replies.len() == sched.len(),
+            "{}: {} replies for {} requests",
+            pattern.name(),
+            replies.len(),
+            sched.len()
+        );
+        replies.sort_by_key(|r| r.id);
+
+        let hist = LatencyHistogram::default();
+        let mut matched = true;
+        for r in &replies {
+            hist.observe(r.latency);
+            let (e, qi) = sched[r.id as usize];
+            let ok = matches!(&r.outcome, Ok(w) if *w == expected[e][qi]);
+            matched &= ok;
+            let _ = writeln!(
+                transcript,
+                "{}\t{}\t{}\t{}",
+                pattern.name(),
+                r.id,
+                entries[e].name,
+                match &r.outcome {
+                    Ok(w) => fmt_winner(*w),
+                    Err(msg) => format!("!{msg}"),
+                }
+            );
+        }
+        patterns.push(PatternStats {
+            pattern,
+            requests: sched.len(),
+            batches,
+            mean_batch: sched.len() as f64 / (batches as f64).max(1.0),
+            p50_us: hist.quantile_us(0.5),
+            p99_us: hist.quantile_us(0.99),
+            mean_us: hist.mean_us(),
+            max_us: hist.max_us(),
+            qps: sched.len() as f64 / wall.as_secs_f64().max(1e-9),
+            winners_match_sequential: matched,
+        });
+    }
+
+    let cache = cache_stats();
+    server.shutdown();
+    Ok(ServeReport {
+        spec: spec.clone(),
+        entries,
+        patterns,
+        cache,
+        transcript,
+    })
+}
+
+/// Print a [`ServeReport`] as a human-readable summary table.
+pub fn print_summary(r: &ServeReport) {
+    println!(
+        "tnn7 serve bench: seed {}, {} workers x {}w lane blocks, {} registry entries",
+        r.spec.seed,
+        r.spec.workers,
+        r.spec.words,
+        r.entries.len()
+    );
+    for e in &r.entries {
+        println!("  entry {:<14} {} queries", e.name, e.queries);
+    }
+    println!(
+        "{:<10} {:>8} {:>8} {:>10} {:>9} {:>9} {:>10} {:>6}",
+        "pattern", "requests", "batches", "mean batch", "p50 us", "p99 us", "qps", "exact"
+    );
+    for p in &r.patterns {
+        println!(
+            "{:<10} {:>8} {:>8} {:>10.2} {:>9} {:>9} {:>10.0} {:>6}",
+            p.pattern.name(),
+            p.requests,
+            p.batches,
+            p.mean_batch,
+            p.p50_us,
+            p.p99_us,
+            p.qps,
+            if p.winners_match_sequential { "yes" } else { "NO" }
+        );
+    }
+    println!(
+        "cache: {} designs / {} programs live (capacity {}/{}), {} evictions",
+        r.cache.designs,
+        r.cache.programs,
+        r.cache.design_capacity,
+        r.cache.program_capacity,
+        r.cache.evictions
+    );
+}
+
+/// JSON payload of a [`ServeReport`] (`BENCH_serve.json`).
+pub fn serve_json(r: &ServeReport) -> Json {
+    Json::obj()
+        .set("seed", Json::Int(r.spec.seed as i64))
+        .set("workers", r.spec.workers)
+        .set("words", r.spec.words)
+        .set("requests_total", r.spec.requests * r.spec.patterns.len())
+        .set(
+            "registry",
+            Json::Arr(
+                r.entries
+                    .iter()
+                    .map(|e| {
+                        Json::obj()
+                            .set("entry", e.name.as_str())
+                            .set("kind", e.kind.as_str())
+                            .set("p", e.p)
+                            .set("q", e.q)
+                            .set("queries", e.queries)
+                    })
+                    .collect(),
+            ),
+        )
+        .set(
+            "patterns",
+            Json::Arr(
+                r.patterns
+                    .iter()
+                    .map(|p| {
+                        Json::obj()
+                            .set("pattern", p.pattern.name())
+                            .set("requests", p.requests)
+                            .set("batches", Json::Int(p.batches as i64))
+                            .set("mean_batch", p.mean_batch)
+                            .set("p50_us", Json::Int(p.p50_us as i64))
+                            .set("p99_us", Json::Int(p.p99_us as i64))
+                            .set("mean_us", p.mean_us)
+                            .set("max_us", Json::Int(p.max_us as i64))
+                            .set("qps", p.qps)
+                            .set("winners_match_sequential", p.winners_match_sequential)
+                    })
+                    .collect(),
+            ),
+        )
+        .set(
+            "cache",
+            Json::obj()
+                .set("designs", r.cache.designs)
+                .set("programs", r.cache.programs)
+                .set("design_capacity", r.cache.design_capacity)
+                .set("program_capacity", r.cache.program_capacity)
+                .set("evictions", Json::Int(r.cache.evictions as i64)),
+        )
+}
+
+/// Write `BENCH_serve.json` and `serve_transcript.tsv` into the spec's
+/// `out_dir` (created if missing).
+pub fn write_report(r: &ServeReport) -> crate::Result<()> {
+    std::fs::create_dir_all(&r.spec.out_dir)?;
+    std::fs::write(
+        r.spec.out_dir.join("BENCH_serve.json"),
+        serve_json(r).to_pretty(),
+    )?;
+    std::fs::write(r.spec.out_dir.join("serve_transcript.tsv"), &r.transcript)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineKind;
+
+    fn tiny_spec() -> ServeSpec {
+        let mut s = ServeSpec::quick();
+        s.engines = vec![EngineKind::Golden, EngineKind::Gate];
+        s.geometries = vec![(6, 2)];
+        s.per_cluster = 3;
+        s.requests = 24;
+        s.words = 1;
+        s
+    }
+
+    #[test]
+    fn schedules_are_deterministic_and_sized() {
+        let spec = tiny_spec();
+        let pools = vec![6, 6];
+        let caps = vec![64, 64];
+        for (slot, p) in [
+            ArrivalPattern::Steady,
+            ArrivalPattern::Bursty,
+            ArrivalPattern::Shuffled,
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let a = make_schedule(&spec, p, slot as u64, &pools, &caps);
+            let b = make_schedule(&spec, p, slot as u64, &pools, &caps);
+            assert_eq!(a, b, "{} schedule must reproduce", p.name());
+            assert_eq!(a.len(), spec.requests);
+            for &(e, qi) in &a {
+                assert!(e < 2 && qi < 6);
+            }
+        }
+        // Steady really interleaves entries.
+        let s = make_schedule(&spec, ArrivalPattern::Steady, 0, &pools, &caps);
+        assert_eq!(s[0].0, 0);
+        assert_eq!(s[1].0, 1);
+    }
+
+    #[test]
+    fn bench_runs_end_to_end_and_matches_the_sequential_reference() {
+        let r = run_bench(&tiny_spec()).unwrap();
+        assert_eq!(r.entries.len(), 2);
+        assert_eq!(r.patterns.len(), 3);
+        for p in &r.patterns {
+            assert!(p.winners_match_sequential, "{} diverged", p.pattern.name());
+            assert_eq!(p.requests, 24);
+            assert!(p.batches >= 1);
+            assert!(p.mean_batch >= 1.0);
+            assert!(p.qps > 0.0);
+        }
+        assert_eq!(
+            r.transcript.lines().count(),
+            3 * 24,
+            "one transcript line per request"
+        );
+        // The report JSON carries the headline fields the schema checks.
+        let j = serve_json(&r).to_string();
+        for key in [
+            "\"registry\"",
+            "\"patterns\"",
+            "\"p50_us\"",
+            "\"p99_us\"",
+            "\"qps\"",
+            "\"winners_match_sequential\"",
+            "\"cache\"",
+        ] {
+            assert!(j.contains(key), "JSON missing {key}");
+        }
+    }
+}

@@ -1,0 +1,324 @@
+//! `tnn7 serve` — the always-on dynamic-batching inference service.
+//!
+//! Every other entry point in the repo is a one-shot batch CLI; this
+//! module is the long-lived deployment shape the paper's µW-scale
+//! "online sensory processing" story implies: a persistent server that
+//! absorbs streams of UCR-style queries and answers each with a WTA
+//! winner. The request lifecycle is
+//!
+//! 1. **arrival** — a client submits `(id, entry, volley)` (over a
+//!    line-delimited local socket, a stdin pipe, or in-process from the
+//!    bench client); the request is timestamped and queued;
+//! 2. **coalesce** — a free worker pops the oldest request and greedily
+//!    extracts every queued request for the *same registry entry*, up to
+//!    the entry's lane budget (`words × 64`, PR 5's compiled lane blocks
+//!    as the batching unit);
+//! 3. **lane-block pass** — the batch runs as one compiled-sim pass on
+//!    the entry's [`ServiceEngine`](crate::coordinator::ServiceEngine)
+//!    (per-request executor scratch over the shared
+//!    `OptLevel::Inference` program from the artifact cache);
+//! 4. **respond** — each request gets its winner and its end-to-end
+//!    latency (queue wait + service time) on its own reply channel.
+//!
+//! **Determinism rule:** inference is RNG-free on every engine (all-ones
+//! uniforms block every STDP case), so a winner depends only on
+//! (entry weights, volley) — never on which pass a volley landed in,
+//! which worker ran it, or what else shared its lane block. Dynamic
+//! batching is therefore *semantics-free*: server winners are bit-exact
+//! with sequential `Engine::infer_winner` calls on the same queries,
+//! which `run_bench` re-verifies on every run and `tests/serve.rs` pins
+//! at 1/2/4 workers.
+//!
+//! The registry is the engine-cross-geometry product of the spec
+//! (mixed-engine, mixed-geometry traffic out of the box), each entry
+//! deterministically trained from `seed` via the frozen `split_stream`
+//! discipline — so the whole service, including its committed golden
+//! transcript, reproduces from the printed seed alone.
+
+mod bench;
+mod proto;
+mod server;
+
+pub use bench::{print_summary, run_bench, serve_json, write_report, EntrySummary, PatternStats, ServeReport};
+pub use proto::{parse_request, serve_lines, serve_socket};
+pub use server::{build_entry_engine, Reply, ServeEntry, Server};
+
+use crate::config::EngineKind;
+use crate::util::kv::KvDoc;
+use std::path::PathBuf;
+
+/// Client arrival schedule shapes the bench mode drives (`patterns=` key).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArrivalPattern {
+    /// Entries round-robined one query at a time — the coalescer sees a
+    /// maximally interleaved (worst-case mixed-geometry) queue.
+    Steady,
+    /// Seeded same-entry bursts of random length — the coalescer's best
+    /// case, exercising full lane blocks.
+    Bursty,
+    /// Every request's entry and query drawn independently at random —
+    /// unstructured mixed-engine traffic.
+    Shuffled,
+}
+
+impl ArrivalPattern {
+    /// Canonical spelling (inverse of [`ArrivalPattern::parse`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            ArrivalPattern::Steady => "steady",
+            ArrivalPattern::Bursty => "bursty",
+            ArrivalPattern::Shuffled => "shuffled",
+        }
+    }
+
+    /// Parse a CLI/config spelling.
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s {
+            "steady" => Ok(ArrivalPattern::Steady),
+            "bursty" => Ok(ArrivalPattern::Bursty),
+            "shuffled" => Ok(ArrivalPattern::Shuffled),
+            other => anyhow::bail!("unknown arrival pattern {other:?} (steady|bursty|shuffled)"),
+        }
+    }
+}
+
+/// Service configuration (the `tnn7 serve` subcommand's `key=value`
+/// surface), following the same kv discipline as
+/// [`crate::config::RunConfig`].
+#[derive(Clone, Debug)]
+pub struct ServeSpec {
+    /// Root seed: drives entry weights (via per-entry `split_stream`
+    /// lanes), query pools and the bench client's arrival schedules.
+    pub seed: u64,
+    /// Server worker threads draining the request queue.
+    pub workers: usize,
+    /// Lane-block width `W` of pooled compiled executors (`W × 64` lanes
+    /// per pass = the per-entry coalescing budget).
+    pub words: usize,
+    /// Settle threads per pooled executor (0 = machine parallelism).
+    pub threads: usize,
+    /// Engine kinds in the registry (`engines=gate,golden`).
+    pub engines: Vec<EngineKind>,
+    /// Column geometries in the registry (`geometries=12x2,8x3`); the
+    /// registry is the engines × geometries product.
+    pub geometries: Vec<(usize, usize)>,
+    /// UCR samples per cluster in each entry's training set / query pool.
+    pub per_cluster: usize,
+    /// Requests the bench client sends per arrival pattern.
+    pub requests: usize,
+    /// Arrival patterns the bench mode sweeps.
+    pub patterns: Vec<ArrivalPattern>,
+    /// Artifact-cache capacity override (0 = keep the global defaults);
+    /// applied to the design cache, with 2× for the program cache.
+    pub capacity: usize,
+    /// Output directory for `BENCH_serve.json` + `serve_transcript.tsv`.
+    pub out_dir: PathBuf,
+}
+
+impl Default for ServeSpec {
+    fn default() -> Self {
+        ServeSpec {
+            seed: 7,
+            workers: 2,
+            words: crate::gates::DEFAULT_SIM_WORDS,
+            threads: 1,
+            engines: vec![EngineKind::Gate, EngineKind::Golden],
+            geometries: vec![(12, 2), (8, 3)],
+            per_cluster: 8,
+            requests: 400,
+            patterns: vec![
+                ArrivalPattern::Steady,
+                ArrivalPattern::Bursty,
+                ArrivalPattern::Shuffled,
+            ],
+            capacity: 0,
+            out_dir: PathBuf::from("."),
+        }
+    }
+}
+
+impl ServeSpec {
+    /// CI-speed service: the full mixed-engine × mixed-geometry registry
+    /// on a small request budget (also the committed golden transcript's
+    /// configuration — keep them in lockstep).
+    pub fn quick() -> Self {
+        ServeSpec {
+            words: 1,
+            per_cluster: 4,
+            requests: 96,
+            ..ServeSpec::default()
+        }
+    }
+
+    /// Load from a kv doc; missing keys keep defaults.
+    pub fn from_kv(doc: &KvDoc) -> crate::Result<Self> {
+        let mut c = ServeSpec::default();
+        if let Some(v) = doc.get_u64("seed")? {
+            c.seed = v;
+        }
+        if let Some(v) = doc.get_usize("workers")? {
+            c.workers = v;
+        }
+        if let Some(v) = doc.get_usize("words")? {
+            c.words = v;
+        }
+        if let Some(v) = doc.get_usize("threads")? {
+            c.threads = v;
+        }
+        if let Some(v) = doc.get("engines") {
+            c.engines = v
+                .split(',')
+                .map(|s| EngineKind::parse(s.trim()))
+                .collect::<crate::Result<Vec<_>>>()?;
+        }
+        if let Some(v) = doc.get("geometries") {
+            c.geometries = v
+                .split(',')
+                .map(parse_geometry)
+                .collect::<crate::Result<Vec<_>>>()?;
+        }
+        if let Some(v) = doc.get_usize("per_cluster")? {
+            c.per_cluster = v;
+        }
+        if let Some(v) = doc.get_usize("requests")? {
+            c.requests = v;
+        }
+        if let Some(v) = doc.get("patterns") {
+            c.patterns = v
+                .split(',')
+                .map(|s| ArrivalPattern::parse(s.trim()))
+                .collect::<crate::Result<Vec<_>>>()?;
+        }
+        if let Some(v) = doc.get_usize("capacity")? {
+            c.capacity = v;
+        }
+        if let Some(v) = doc.get("out_dir") {
+            c.out_dir = PathBuf::from(v);
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// Apply `key=value` CLI overrides.
+    pub fn apply_overrides(&mut self, overrides: &[String]) -> crate::Result<()> {
+        let mut doc = KvDoc::default();
+        for o in overrides {
+            let (k, v) = o
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("override must be key=value: {o}"))?;
+            doc.set(k.trim(), v.trim());
+        }
+        let merged = Self::from_kv(&doc)?;
+        // from_kv starts from defaults; re-apply only the overridden keys.
+        for key in doc.keys() {
+            match key {
+                "seed" => self.seed = merged.seed,
+                "workers" => self.workers = merged.workers,
+                "words" => self.words = merged.words,
+                "threads" => self.threads = merged.threads,
+                "engines" => self.engines = merged.engines.clone(),
+                "geometries" => self.geometries = merged.geometries.clone(),
+                "per_cluster" => self.per_cluster = merged.per_cluster,
+                "requests" => self.requests = merged.requests,
+                "patterns" => self.patterns = merged.patterns.clone(),
+                "capacity" => self.capacity = merged.capacity,
+                "out_dir" => self.out_dir = merged.out_dir.clone(),
+                other => anyhow::bail!("unknown serve key {other:?}"),
+            }
+        }
+        self.validate()
+    }
+
+    /// Sanity-check the configuration.
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(self.workers >= 1, "workers must be >= 1");
+        anyhow::ensure!(
+            (1..=64).contains(&self.words),
+            "words must be in 1..=64"
+        );
+        anyhow::ensure!(!self.engines.is_empty(), "engines must be non-empty");
+        anyhow::ensure!(
+            !self.engines.contains(&EngineKind::Xla),
+            "the XLA engine cannot be served (device-side state)"
+        );
+        anyhow::ensure!(!self.geometries.is_empty(), "geometries must be non-empty");
+        for &(p, q) in &self.geometries {
+            anyhow::ensure!(p >= 1 && q >= 1, "geometry {p}x{q} must have p,q >= 1");
+        }
+        anyhow::ensure!(self.per_cluster >= 2, "per_cluster must be >= 2");
+        anyhow::ensure!(self.requests >= 1, "requests must be >= 1");
+        anyhow::ensure!(!self.patterns.is_empty(), "patterns must be non-empty");
+        Ok(())
+    }
+}
+
+/// Parse one `PxQ` geometry spelling (e.g. `12x2`).
+fn parse_geometry(s: &str) -> crate::Result<(usize, usize)> {
+    let (p, q) = s
+        .trim()
+        .split_once('x')
+        .ok_or_else(|| anyhow::anyhow!("bad geometry {s:?} (want PxQ, e.g. 12x2)"))?;
+    Ok((
+        p.parse()
+            .map_err(|_| anyhow::anyhow!("bad geometry p in {s:?}"))?,
+        q.parse()
+            .map_err(|_| anyhow::anyhow!("bad geometry q in {s:?}"))?,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_defaults_and_quick_are_valid() {
+        ServeSpec::default().validate().unwrap();
+        ServeSpec::quick().validate().unwrap();
+    }
+
+    #[test]
+    fn spec_overrides_roundtrip_and_reject_unknown_keys() {
+        let mut s = ServeSpec::quick();
+        s.apply_overrides(&[
+            "seed=9".into(),
+            "workers=4".into(),
+            "engines=golden".into(),
+            "geometries=4x2,6x3".into(),
+            "patterns=bursty".into(),
+            "capacity=8".into(),
+            "out_dir=target/serve".into(),
+        ])
+        .unwrap();
+        assert_eq!(s.seed, 9);
+        assert_eq!(s.workers, 4);
+        assert_eq!(s.engines, vec![EngineKind::Golden]);
+        assert_eq!(s.geometries, vec![(4, 2), (6, 3)]);
+        assert_eq!(s.patterns, vec![ArrivalPattern::Bursty]);
+        assert_eq!(s.capacity, 8);
+        assert_eq!(s.out_dir, PathBuf::from("target/serve"));
+        assert_eq!(
+            s.requests,
+            ServeSpec::quick().requests,
+            "non-overridden keys keep quick values"
+        );
+        let err = s.apply_overrides(&["bogus=1".into()]).unwrap_err();
+        assert!(err.to_string().contains("unknown serve key"));
+        let err = s.apply_overrides(&["geometries=12".into()]).unwrap_err();
+        assert!(err.to_string().contains("bad geometry"));
+        let err = s.apply_overrides(&["engines=xla".into()]).unwrap_err();
+        assert!(err.to_string().contains("cannot be served"));
+        let err = s.apply_overrides(&["patterns=diurnal".into()]).unwrap_err();
+        assert!(err.to_string().contains("unknown arrival pattern"));
+    }
+
+    #[test]
+    fn arrival_pattern_names_roundtrip() {
+        for p in [
+            ArrivalPattern::Steady,
+            ArrivalPattern::Bursty,
+            ArrivalPattern::Shuffled,
+        ] {
+            assert_eq!(ArrivalPattern::parse(p.name()).unwrap(), p);
+        }
+    }
+}

@@ -1,0 +1,199 @@
+//! The wire protocol: line-delimited requests over stdin (CI pipe mode)
+//! or a local TCP socket.
+//!
+//! Request line:  `<id> <entry> <volley>`
+//!   * `id` — client-chosen u64, echoed verbatim in the reply;
+//!   * `entry` — registry wire name, `<engine>:<p>x<q>` (e.g. `gate:12x2`);
+//!   * `volley` — `p` comma-separated spike times (`-` = no spike on
+//!     that line), e.g. `1,-,2,0`.
+//!
+//! Reply line:  `<id> <winner>` where `winner` is the WTA neuron index or
+//! `-` when no neuron fired; a failed request replies `<id> !<error>`.
+//!
+//! Replies are emitted sorted by request id, so the output byte stream is
+//! identical at any worker count — the property the CI smoke pins by
+//! diffing 1/2/4-worker transcripts.
+
+use super::server::{Reply, Server};
+use crate::tnn::spike::SpikeTime;
+use std::io::{BufRead, Write};
+use std::sync::mpsc;
+
+/// Parse one request line against `server`'s registry. Returns
+/// `(id, entry index, volley)`.
+pub fn parse_request(
+    server: &Server,
+    line: &str,
+) -> crate::Result<(u64, usize, Vec<SpikeTime>)> {
+    let mut parts = line.split_whitespace();
+    let id: u64 = parts
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("empty request line"))?
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad request id in {line:?}"))?;
+    let entry_name = parts
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("request {id}: missing entry name"))?;
+    let entry = server
+        .entry_index(entry_name)
+        .ok_or_else(|| anyhow::anyhow!("request {id}: unknown entry {entry_name:?}"))?;
+    let volley_text = parts
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("request {id}: missing volley"))?;
+    anyhow::ensure!(
+        parts.next().is_none(),
+        "request {id}: trailing tokens after volley"
+    );
+    let volley = volley_text
+        .split(',')
+        .map(|t| {
+            if t == "-" {
+                Ok(SpikeTime::NONE)
+            } else {
+                t.parse::<u32>()
+                    .map(SpikeTime::at)
+                    .map_err(|_| anyhow::anyhow!("request {id}: bad spike time {t:?}"))
+            }
+        })
+        .collect::<crate::Result<Vec<_>>>()?;
+    Ok((id, entry, volley))
+}
+
+/// Render one reply line (without the trailing newline).
+fn format_reply(r: &Reply) -> String {
+    match &r.outcome {
+        Ok(Some(w)) => format!("{} {w}", r.id),
+        Ok(None) => format!("{} -", r.id),
+        Err(e) => format!("{} !{e}", r.id),
+    }
+}
+
+/// Pipe mode: read request lines from `reader` until EOF, serve them all
+/// through `server`, and write one reply line per request to `writer`,
+/// sorted by request id (byte-stable at any worker count). Returns the
+/// number of requests served. Blank lines and `#` comments are skipped;
+/// a malformed line fails the whole stream (the pipe is a CI artifact,
+/// not untrusted input).
+pub fn serve_lines(
+    server: &Server,
+    reader: impl BufRead,
+    mut writer: impl Write,
+) -> crate::Result<u64> {
+    let (tx, rx) = mpsc::channel();
+    let mut submitted = 0u64;
+    for line in reader.lines() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let (id, entry, volley) = parse_request(server, t)?;
+        server.submit(id, entry, volley, tx.clone())?;
+        submitted += 1;
+    }
+    // Our clone of the sender is gone; the channel closes once every
+    // in-flight request has replied.
+    drop(tx);
+    let mut replies: Vec<Reply> = rx.iter().collect();
+    debug_assert_eq!(replies.len() as u64, submitted);
+    replies.sort_by_key(|r| r.id);
+    for r in &replies {
+        writeln!(writer, "{}", format_reply(r))?;
+    }
+    writer.flush()?;
+    Ok(submitted)
+}
+
+/// Socket mode: bind `addr` (e.g. `127.0.0.1:7411`) and serve forever,
+/// one [`serve_lines`] exchange per connection (concurrent connections
+/// each get their own thread; they share the server's worker pool and
+/// coalesce into each other's lane blocks). Never returns except on a
+/// bind/accept error.
+pub fn serve_socket(server: &Server, addr: &str) -> crate::Result<()> {
+    let listener = std::net::TcpListener::bind(addr)
+        .map_err(|e| anyhow::anyhow!("cannot bind {addr}: {e}"))?;
+    eprintln!(
+        "tnn7 serve: listening on {} ({} registry entries)",
+        listener.local_addr()?,
+        server.entries().len(),
+    );
+    std::thread::scope(|scope| -> crate::Result<()> {
+        for conn in listener.incoming() {
+            let stream = conn?;
+            scope.spawn(move || {
+                let reader = match stream.try_clone() {
+                    Ok(s) => std::io::BufReader::new(s),
+                    Err(e) => {
+                        eprintln!("tnn7 serve: connection clone failed: {e}");
+                        return;
+                    }
+                };
+                if let Err(e) = serve_lines(server, reader, &stream) {
+                    eprintln!("tnn7 serve: connection error: {e}");
+                }
+            });
+        }
+        Ok(())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineKind;
+    use crate::serve::ServeSpec;
+
+    fn spec() -> ServeSpec {
+        let mut s = ServeSpec::quick();
+        s.engines = vec![EngineKind::Golden];
+        s.geometries = vec![(4, 2)];
+        s.per_cluster = 2;
+        s.words = 1;
+        s
+    }
+
+    #[test]
+    fn parse_request_accepts_the_wire_format_and_rejects_garbage() {
+        let server = Server::start(&spec()).unwrap();
+        let (id, entry, volley) = parse_request(&server, "7 golden:4x2 1,-,2,0").unwrap();
+        assert_eq!(id, 7);
+        assert_eq!(entry, 0);
+        assert_eq!(
+            volley,
+            vec![
+                SpikeTime::at(1),
+                SpikeTime::NONE,
+                SpikeTime::at(2),
+                SpikeTime::at(0)
+            ]
+        );
+        for bad in [
+            "x golden:4x2 1,-,2,0",
+            "7 gate:9x9 1,-,2,0",
+            "7 golden:4x2 1,-,zz,0",
+            "7 golden:4x2",
+            "7 golden:4x2 1,-,2,0 extra",
+        ] {
+            assert!(parse_request(&server, bad).is_err(), "accepted {bad:?}");
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn serve_lines_replies_in_id_order_with_comments_skipped() {
+        let server = Server::start(&spec()).unwrap();
+        let input = "# smoke\n5 golden:4x2 1,-,2,0\n\n2 golden:4x2 0,0,0,0\n9 golden:4x2 -,-,-,-\n";
+        let mut out = Vec::new();
+        let n = serve_lines(&server, input.as_bytes(), &mut out).unwrap();
+        assert_eq!(n, 3);
+        let text = String::from_utf8(out).unwrap();
+        let ids: Vec<&str> = text
+            .lines()
+            .map(|l| l.split_whitespace().next().unwrap())
+            .collect();
+        assert_eq!(ids, ["2", "5", "9"], "replies sorted by id:\n{text}");
+        // The all-silent volley cannot fire any neuron.
+        assert!(text.lines().any(|l| l == "9 -"), "{text}");
+        server.shutdown();
+    }
+}

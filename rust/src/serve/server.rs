@@ -1,0 +1,365 @@
+//! The serving core: the deterministic entry registry, the shared request
+//! queue, and the worker pool that coalesces arrivals into lane-block
+//! passes (the module-level docs in [`super`] walk the request lifecycle).
+
+use super::ServeSpec;
+use crate::config::EngineKind;
+use crate::coordinator::{encode_ucr, ucr_engine_with, Engine, ServiceEngine};
+use crate::gates::wordsim::LANES;
+use crate::tnn::params::TnnParams;
+use crate::tnn::spike::SpikeTime;
+use crate::ucr::{self, UcrConfig};
+use crate::util::Rng64;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// One registry entry: a frozen [`ServiceEngine`] plus the seeded query
+/// pool clients draw from. Addressed by `name` (`<engine>:<p>x<q>`).
+pub struct ServeEntry {
+    /// Wire name, `<engine>:<p>x<q>` (e.g. `gate:12x2`).
+    pub name: String,
+    /// Engine kind serving this entry.
+    pub kind: EngineKind,
+    /// Synapse lines per neuron.
+    pub p: usize,
+    /// Neurons (= clusters) in the column.
+    pub q: usize,
+    /// The `Send + Sync` inference handle requests run on.
+    pub service: ServiceEngine,
+    /// Seeded query pool (encoded UCR volleys) for bench/smoke clients.
+    pub queries: Vec<Vec<SpikeTime>>,
+    /// Coalescing budget: requests per lane-block pass (`words × 64`).
+    pub max_batch: usize,
+}
+
+/// One answered request.
+#[derive(Clone, Debug)]
+pub struct Reply {
+    /// Echo of the client's request id.
+    pub id: u64,
+    /// Registry index the request ran on.
+    pub entry: usize,
+    /// The WTA winner (`Ok(None)` = no neuron fired), or the service
+    /// error (e.g. a memoized program-build failure).
+    pub outcome: Result<Option<usize>, String>,
+    /// End-to-end latency: queue wait + lane-block service time.
+    pub latency: Duration,
+    /// Size of the coalesced pass this request rode in.
+    pub batch: usize,
+}
+
+/// A queued request (internal; built by [`Server::submit`]).
+struct Request {
+    id: u64,
+    entry: usize,
+    volley: Vec<SpikeTime>,
+    t0: Instant,
+    tx: mpsc::Sender<Reply>,
+}
+
+/// Queue state under the mutex: the pending requests plus the open flag
+/// (inside the lock so shutdown can't race a worker's wait).
+struct QueueState {
+    queue: VecDeque<Request>,
+    open: bool,
+}
+
+struct Shared {
+    state: Mutex<QueueState>,
+    cv: Condvar,
+    batches: AtomicU64,
+    coalesced: AtomicU64,
+}
+
+fn lock_state(shared: &Shared) -> std::sync::MutexGuard<'_, QueueState> {
+    shared.state.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// The always-on inference server: a deterministic entry registry, one
+/// shared FIFO request queue, and `workers` draining threads that batch
+/// same-entry arrivals into lane-block passes.
+pub struct Server {
+    entries: Arc<Vec<ServeEntry>>,
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Build the registry from `spec` and start the worker pool.
+    pub fn start(spec: &ServeSpec) -> crate::Result<Server> {
+        let entries = Arc::new(build_entries(spec)?);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(QueueState {
+                queue: VecDeque::new(),
+                open: true,
+            }),
+            cv: Condvar::new(),
+            batches: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+        });
+        let workers = (0..spec.workers.max(1))
+            .map(|_| {
+                let entries = entries.clone();
+                let shared = shared.clone();
+                std::thread::spawn(move || worker_loop(&entries, &shared))
+            })
+            .collect();
+        Ok(Server {
+            entries,
+            shared,
+            workers,
+        })
+    }
+
+    /// The registry, in construction order (engines × geometries).
+    pub fn entries(&self) -> &[ServeEntry] {
+        &self.entries
+    }
+
+    /// Look up a registry entry by wire name (`gate:12x2`).
+    pub fn entry_index(&self, name: &str) -> Option<usize> {
+        self.entries.iter().position(|e| e.name == name)
+    }
+
+    /// Enqueue one request; its [`Reply`] arrives on `tx`. Errs on an
+    /// unknown entry index or a volley whose length is not the entry's
+    /// `p` (rejected up front, so a malformed query can never poison a
+    /// coalesced pass for its batch-mates).
+    pub fn submit(
+        &self,
+        id: u64,
+        entry: usize,
+        volley: Vec<SpikeTime>,
+        tx: mpsc::Sender<Reply>,
+    ) -> crate::Result<()> {
+        let e = self
+            .entries
+            .get(entry)
+            .ok_or_else(|| anyhow::anyhow!("unknown entry index {entry}"))?;
+        anyhow::ensure!(
+            volley.len() == e.p,
+            "request {id}: volley length {} != p = {} of entry {}",
+            volley.len(),
+            e.p,
+            e.name
+        );
+        let mut st = lock_state(&self.shared);
+        anyhow::ensure!(st.open, "server is shutting down");
+        st.queue.push_back(Request {
+            id,
+            entry,
+            volley,
+            t0: Instant::now(),
+            tx,
+        });
+        drop(st);
+        self.shared.cv.notify_one();
+        Ok(())
+    }
+
+    /// Lane-block passes executed so far.
+    pub fn batches(&self) -> u64 {
+        self.shared.batches.load(Ordering::Relaxed)
+    }
+
+    /// Requests answered so far (across all passes).
+    pub fn coalesced(&self) -> u64 {
+        self.shared.coalesced.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting requests, drain the queue, and join the workers.
+    pub fn shutdown(mut self) {
+        self.close_and_join();
+    }
+
+    fn close_and_join(&mut self) {
+        lock_state(&self.shared).open = false;
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.close_and_join();
+    }
+}
+
+/// Worker: pop the oldest request, greedily coalesce queued same-entry
+/// requests up to the entry's lane budget (relative order of everything
+/// left behind is preserved), run one batched pass, reply to each rider.
+fn worker_loop(entries: &[ServeEntry], shared: &Shared) {
+    loop {
+        let batch: Vec<Request> = {
+            let mut st = lock_state(shared);
+            loop {
+                if let Some(front) = st.queue.pop_front() {
+                    let (e, cap) = (front.entry, entries[front.entry].max_batch);
+                    let mut batch = vec![front];
+                    let mut rest = VecDeque::with_capacity(st.queue.len());
+                    while let Some(r) = st.queue.pop_front() {
+                        if r.entry == e && batch.len() < cap {
+                            batch.push(r);
+                        } else {
+                            rest.push_back(r);
+                        }
+                    }
+                    st.queue = rest;
+                    break batch;
+                }
+                if !st.open {
+                    return;
+                }
+                st = shared
+                    .cv
+                    .wait(st)
+                    .unwrap_or_else(|p| p.into_inner());
+            }
+        };
+        let (e, n) = (batch[0].entry, batch.len());
+        let volleys: Vec<&[SpikeTime]> = batch.iter().map(|r| r.volley.as_slice()).collect();
+        let result = entries[e].service.infer_batch(&volleys);
+        drop(volleys);
+        shared.batches.fetch_add(1, Ordering::Relaxed);
+        shared.coalesced.fetch_add(n as u64, Ordering::Relaxed);
+        match result {
+            Ok(winners) => {
+                for (r, w) in batch.into_iter().zip(winners) {
+                    let _ = r.tx.send(Reply {
+                        id: r.id,
+                        entry: e,
+                        outcome: Ok(w),
+                        latency: r.t0.elapsed(),
+                        batch: n,
+                    });
+                }
+            }
+            Err(err) => {
+                let msg = err.to_string();
+                for r in batch {
+                    let _ = r.tx.send(Reply {
+                        id: r.id,
+                        entry: e,
+                        outcome: Err(msg.clone()),
+                        latency: r.t0.elapsed(),
+                        batch: n,
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Build the stateful engine + query pool for registry slot `idx` of
+/// `spec` — entry weights come from one epoch of online STDP on a seeded
+/// UCR workload, all drawn from frozen per-entry `split_stream` lanes.
+/// This is the ONE recipe shared by [`Server::start`] and the bench
+/// mode's sequential reference, which is what makes "batched winners are
+/// bit-exact with sequential `infer_winner`" a differential test of the
+/// server rather than a tautology.
+pub fn build_entry_engine(
+    spec: &ServeSpec,
+    kind: EngineKind,
+    p: usize,
+    q: usize,
+    idx: u64,
+) -> crate::Result<(Engine<'static>, Vec<Vec<SpikeTime>>)> {
+    let root = Rng64::seed_from_u64(spec.seed);
+    let data = ucr::generate(
+        UcrConfig {
+            name: "serve",
+            p,
+            q,
+        },
+        spec.per_cluster,
+        spec.seed ^ idx.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+    );
+    let items = encode_ucr(&data, 8);
+    let mut init_rng = root.split_stream(2 * idx);
+    let mut engine = ucr_engine_with(kind, p, q, &items, TnnParams::default(), &mut init_rng)?;
+    let mut train_rng = root.split_stream(2 * idx + 1);
+    for item in &items {
+        engine.step(&item.volley, &mut train_rng)?;
+    }
+    Ok((engine, items.into_iter().map(|i| i.volley).collect()))
+}
+
+/// Materialize the registry: engines × geometries, each frozen into a
+/// [`ServiceEngine`] via [`build_entry_engine`].
+fn build_entries(spec: &ServeSpec) -> crate::Result<Vec<ServeEntry>> {
+    let mut entries = Vec::new();
+    for &kind in &spec.engines {
+        for &(p, q) in &spec.geometries {
+            let idx = entries.len() as u64;
+            let (engine, queries) = build_entry_engine(spec, kind, p, q, idx)?;
+            let service = engine.service(spec.words, spec.threads)?;
+            entries.push(ServeEntry {
+                name: format!("{}:{p}x{q}", kind.name()),
+                kind,
+                p,
+                q,
+                service,
+                queries,
+                max_batch: spec.words.max(1) * LANES,
+            });
+        }
+    }
+    Ok(entries)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec() -> ServeSpec {
+        let mut s = ServeSpec::quick();
+        s.engines = vec![EngineKind::Golden, EngineKind::Gate];
+        s.geometries = vec![(6, 2)];
+        s.per_cluster = 3;
+        s.workers = 2;
+        s.words = 1;
+        s
+    }
+
+    #[test]
+    fn registry_is_the_engine_geometry_product_with_seeded_pools() {
+        let server = Server::start(&tiny_spec()).unwrap();
+        assert_eq!(server.entries().len(), 2);
+        assert_eq!(server.entries()[0].name, "golden:6x2");
+        assert_eq!(server.entries()[1].name, "gate:6x2");
+        assert_eq!(server.entry_index("gate:6x2"), Some(1));
+        assert_eq!(server.entry_index("gate:9x9"), None);
+        for e in server.entries() {
+            assert_eq!(e.queries.len(), 6, "per_cluster x q queries");
+            assert_eq!(e.max_batch, LANES);
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn submissions_are_answered_and_malformed_volleys_rejected_up_front() {
+        let server = Server::start(&tiny_spec()).unwrap();
+        let (tx, rx) = mpsc::channel();
+        let q = server.entries()[0].queries[0].clone();
+        server.submit(42, 0, q, tx.clone()).unwrap();
+        let r = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(r.id, 42);
+        assert_eq!(r.entry, 0);
+        assert!(r.outcome.is_ok());
+        assert!(r.batch >= 1);
+        // Wrong-length volley: rejected at submit, never queued.
+        let err = server
+            .submit(43, 0, vec![SpikeTime::NONE; 3], tx.clone())
+            .unwrap_err();
+        assert!(err.to_string().contains("volley length"), "{err}");
+        let err = server.submit(44, 9, vec![], tx).unwrap_err();
+        assert!(err.to_string().contains("unknown entry"), "{err}");
+        assert_eq!(server.coalesced(), 1);
+        server.shutdown();
+    }
+}

@@ -12,7 +12,9 @@
 //!    (the frozen `split_stream` fault-site sampling discipline).
 
 use tnn7::gates::fault::{campaign, sample_faults};
-use tnn7::gates::gate_engine::{cached_design, GateColumn};
+use tnn7::gates::artifact_cache::design_handle;
+use tnn7::gates::gate_engine::GateColumn;
+use std::sync::Arc;
 use tnn7::gates::{SimBackend, CONFORMANCE_GEOMETRIES};
 use tnn7::tnn::fault::{apply_weight_flips, flip_column_weights, sample_weight_flips};
 use tnn7::tnn::spike::random_volley;
@@ -40,13 +42,17 @@ fn zero_fault_campaign_is_bit_identical_to_baseline_on_every_backend() {
     for &(p, q, seed) in CONFORMANCE_GEOMETRIES.iter() {
         let items = if p * q >= 128 { 3 } else { 6 };
         let (theta, ws, volleys) = workload(p, q, seed, items);
-        let d = cached_design(p, q, theta);
+        let d = design_handle(p, q, theta).unwrap();
         let params = TnnParams::default();
         let gamma = params.gamma_cycles;
         let vrefs: Vec<&[SpikeTime]> = volleys.iter().map(|v| v.as_slice()).collect();
         // Baseline: the gate engine's own inference path, no fault
         // machinery anywhere near it.
         let mut gate = GateColumn::with_weights(p, q, theta, params, &ws).unwrap();
+        assert!(
+            Arc::ptr_eq(&d, gate.design_handle()),
+            "campaign and engine must strike one shared design artifact"
+        );
         let want: Vec<Option<usize>> = volleys.iter().map(|v| gate.infer_winner(v)).collect();
         for backend in [
             SimBackend::Scalar,
@@ -54,7 +60,7 @@ fn zero_fault_campaign_is_bit_identical_to_baseline_on_every_backend() {
             SimBackend::Compiled { words: 1, threads: 1 },
             SimBackend::Compiled { words: 3, threads: 2 },
         ] {
-            let r = campaign(d, &ws, gamma, &vrefs, &[], backend).unwrap();
+            let r = campaign(&d, &ws, gamma, &vrefs, &[], backend).unwrap();
             assert!(r.outcomes.is_empty(), "no faults, no outcomes");
             assert_eq!(
                 r.ref_winners,
@@ -73,7 +79,7 @@ fn fault_verdicts_are_invariant_across_backends_words_and_threads() {
     let (p, q, seed) = (16usize, 3usize, 0xA11CEu64);
     let items = 5usize;
     let (theta, ws, volleys) = workload(p, q, seed, items);
-    let d = cached_design(p, q, theta);
+    let d = design_handle(p, q, theta).unwrap();
     let gamma = TnnParams::default().gamma_cycles;
     let vrefs: Vec<&[SpikeTime]> = volleys.iter().map(|v| v.as_slice()).collect();
     let total_cycles = items as u64 * gamma as u64;
@@ -81,7 +87,7 @@ fn fault_verdicts_are_invariant_across_backends_words_and_threads() {
     // one word on the 1-word compiled engine — the chunking machinery is
     // genuinely exercised, not just the single-pass fast path.
     let faults = sample_faults(&d.netlist, 40, 40, total_cycles, 77);
-    let reference = campaign(d, &ws, gamma, &vrefs, &faults, SimBackend::Scalar).unwrap();
+    let reference = campaign(&d, &ws, gamma, &vrefs, &faults, SimBackend::Scalar).unwrap();
     assert_eq!(reference.counts().total(), faults.len());
     // A campaign that classified everything masked would be vacuous.
     let c = reference.counts();
@@ -96,7 +102,7 @@ fn fault_verdicts_are_invariant_across_backends_words_and_threads() {
         SimBackend::Compiled { words: 2, threads: 4 },
         SimBackend::Compiled { words: 4, threads: 2 },
     ] {
-        let r = campaign(d, &ws, gamma, &vrefs, &faults, backend).unwrap();
+        let r = campaign(&d, &ws, gamma, &vrefs, &faults, backend).unwrap();
         assert_eq!(
             r,
             reference,

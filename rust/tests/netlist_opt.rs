@@ -26,7 +26,9 @@ use std::collections::HashSet;
 
 use tnn7::gates::column_design::{build_column, BrvSource};
 use tnn7::gates::fault::{campaign, sample_faults};
-use tnn7::gates::gate_engine::{cached_program, GateColumn};
+use tnn7::gates::artifact_cache::program_handle;
+use tnn7::gates::gate_engine::GateColumn;
+use std::sync::Arc;
 use tnn7::gates::opt::{const_propagate, eliminate_dead, schedule_locality};
 use tnn7::gates::{
     CompiledProgram, CompiledSim, FaultClass, GateFault, KeepSet, NetBuilder, NetId, NetRemap,
@@ -405,7 +407,7 @@ fn engine_winners_are_identical_across_opt_levels_backends_and_threads() {
     let volleys: Vec<Vec<SpikeTime>> = (0..6).map(|_| random_volley(p, 0.3, 8, &mut rng)).collect();
     let vrefs: Vec<&[SpikeTime]> = volleys.iter().map(|v| v.as_slice()).collect();
     let mut gate = GateColumn::with_weights(p, q, theta, params, &ws).unwrap();
-    let want = gate.infer_batch(&vrefs);
+    let want = gate.infer_batch(&vrefs).unwrap();
     for (backend, opt) in [
         (SimBackend::BitParallel64, OptLevel::Inference),
         (SimBackend::Compiled { words: 1, threads: 1 }, OptLevel::Inference),
@@ -416,7 +418,7 @@ fn engine_winners_are_identical_across_opt_levels_backends_and_threads() {
         gate.set_sim_backend(backend);
         gate.set_opt_level(opt);
         assert_eq!(
-            gate.infer_batch(&vrefs),
+            gate.infer_batch(&vrefs).unwrap(),
             want,
             "winners under {} opt={}",
             backend.name(),
@@ -425,13 +427,13 @@ fn engine_winners_are_identical_across_opt_levels_backends_and_threads() {
     }
     // Round-trip back to the unoptimized program.
     gate.set_opt_level(OptLevel::None);
-    assert_eq!(gate.infer_batch(&vrefs), want);
-    // The interned programs are shared per (geometry, opt) and the
+    assert_eq!(gate.infer_batch(&vrefs).unwrap(), want);
+    // The cached programs are shared per (geometry, opt) and the
     // inference one is strictly leaner with no BRVs left to silence.
-    let full = cached_program(p, q, theta, OptLevel::None);
-    let opt = cached_program(p, q, theta, OptLevel::Inference);
-    assert!(std::ptr::eq(full, cached_program(p, q, theta, OptLevel::None)));
-    assert!(std::ptr::eq(opt, cached_program(p, q, theta, OptLevel::Inference)));
+    let full = program_handle(p, q, theta, OptLevel::None).unwrap();
+    let opt = program_handle(p, q, theta, OptLevel::Inference).unwrap();
+    assert!(Arc::ptr_eq(&full, &program_handle(p, q, theta, OptLevel::None).unwrap()));
+    assert!(Arc::ptr_eq(&opt, &program_handle(p, q, theta, OptLevel::Inference).unwrap()));
     assert!(opt.prog.instr_count() < full.prog.instr_count());
     assert!(opt.silence.is_empty());
 }

@@ -1,0 +1,206 @@
+//! Integration tests for `tnn7 serve`: the batched-vs-sequential
+//! differential (dynamic batching must be semantics-free at every worker
+//! count), the concurrent artifact-cache stress, and the committed golden
+//! transcript of the quick bench configuration.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use tnn7::config::EngineKind;
+use tnn7::gates::artifact_cache::design_handle;
+use tnn7::gates::ShardedLruCache;
+use tnn7::serve::{run_bench, ServeSpec};
+
+/// A bench spec small enough to run three times (1/2/4 workers) in one
+/// test, while still covering mixed engines × mixed geometries and every
+/// arrival pattern.
+fn differential_spec(workers: usize) -> ServeSpec {
+    let mut s = ServeSpec::quick();
+    s.workers = workers;
+    s.engines = vec![EngineKind::Golden, EngineKind::Gate];
+    s.geometries = vec![(6, 2), (5, 3)];
+    s.per_cluster = 3;
+    s.requests = 36;
+    s.words = 1;
+    s
+}
+
+/// The tentpole's acceptance check: server winners are bit-exact with
+/// sequential `infer_winner` on the same queries under bursty,
+/// mixed-geometry, mixed-engine arrivals — and the reply transcript is
+/// byte-identical at 1, 2 and 4 workers (coalescing and scheduling are
+/// invisible in the output).
+#[test]
+fn batched_winners_are_bit_exact_at_1_2_4_workers() {
+    let mut transcripts = Vec::new();
+    for workers in [1usize, 2, 4] {
+        let report = run_bench(&differential_spec(workers)).unwrap();
+        assert_eq!(report.patterns.len(), 3);
+        for p in &report.patterns {
+            assert!(
+                p.winners_match_sequential,
+                "{} pattern diverged from the sequential reference at {workers} workers",
+                p.pattern.name()
+            );
+            assert_eq!(p.requests, 36);
+            assert!(p.batches >= 1, "at least one lane-block pass ran");
+        }
+        transcripts.push((workers, report.transcript));
+    }
+    let (_, base) = &transcripts[0];
+    for (workers, t) in &transcripts[1..] {
+        assert_eq!(
+            t, base,
+            "transcript at {workers} workers differs from 1 worker"
+        );
+    }
+}
+
+/// Satellite: concurrent-cache stress. Phase 1 (no eviction pressure):
+/// N threads hammering mixed keys must share one build per key and get
+/// pointer-identical handles. Phase 2: shrinking capacity under the same
+/// key mix must actually evict (bounded occupancy, advancing counter) —
+/// the memory-stability property the `Box::leak` interner lacked.
+#[test]
+fn concurrent_cache_stress_with_mixed_keys() {
+    const THREADS: usize = 8;
+    const KEYS: u64 = 12;
+    let cache: Arc<ShardedLruCache<u64, Vec<u64>>> =
+        Arc::new(ShardedLruCache::new(4, KEYS as usize));
+    let builds = Arc::new(AtomicUsize::new(0));
+
+    // Phase 1: capacity >= key count, so no eviction can occur.
+    let handles: Vec<Vec<(u64, Arc<Vec<u64>>)>> = std::thread::scope(|scope| {
+        (0..THREADS)
+            .map(|t| {
+                let cache = cache.clone();
+                let builds = builds.clone();
+                scope.spawn(move || {
+                    let mut got = Vec::new();
+                    for round in 0..50u64 {
+                        let k = (t as u64 + round) % KEYS;
+                        let v = cache
+                            .get_or_build(k, || {
+                                builds.fetch_add(1, Ordering::Relaxed);
+                                Ok(vec![k; 8])
+                            })
+                            .unwrap();
+                        assert_eq!(v[0], k);
+                        got.push((k, v));
+                    }
+                    got
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .collect()
+    });
+    assert_eq!(
+        builds.load(Ordering::Relaxed),
+        KEYS as usize,
+        "every key built exactly once across {THREADS} threads"
+    );
+    let mut canonical: Vec<Option<Arc<Vec<u64>>>> = vec![None; KEYS as usize];
+    for (k, v) in handles.into_iter().flatten() {
+        match &canonical[k as usize] {
+            None => canonical[k as usize] = Some(v),
+            Some(c) => assert!(
+                Arc::ptr_eq(c, &v),
+                "key {k}: handles must be pointer-identical until eviction"
+            ),
+        }
+    }
+    assert_eq!(cache.evictions(), 0, "phase 1 must not evict");
+
+    // Phase 2: shrink capacity and churn — occupancy stays bounded.
+    cache.set_capacity(3);
+    std::thread::scope(|scope| {
+        for t in 0..THREADS {
+            let cache = cache.clone();
+            scope.spawn(move || {
+                for round in 0..50u64 {
+                    let k = (t as u64 * 7 + round) % KEYS;
+                    cache.get_or_build(k, || Ok(vec![k; 8])).unwrap();
+                }
+            });
+        }
+    });
+    assert!(
+        cache.len() <= 3,
+        "occupancy {} exceeds shrunken capacity",
+        cache.len()
+    );
+    assert!(cache.evictions() > 0, "eviction must fire past capacity");
+    // Pre-eviction handles stay alive and correct on the callers' side.
+    for (k, c) in canonical.iter().enumerate() {
+        assert_eq!(c.as_ref().unwrap()[0], k as u64);
+    }
+}
+
+/// The real artifact path under concurrency: every thread resolving the
+/// same geometry through the global cache gets the same design `Arc`.
+#[test]
+fn concurrent_design_handles_are_shared_per_geometry() {
+    let geoms = [(4usize, 2usize, 5u32), (5, 2, 6), (4, 3, 5)];
+    let per_geom: Vec<Vec<Arc<_>>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..6)
+            .map(|t| {
+                scope.spawn(move || {
+                    let (p, q, theta) = geoms[t % geoms.len()];
+                    let a = design_handle(p, q, theta).unwrap();
+                    assert_eq!((a.p, a.q, a.theta), (p, q, theta));
+                    (t % geoms.len(), a)
+                })
+            })
+            .collect();
+        let mut per_geom: Vec<Vec<Arc<_>>> = vec![Vec::new(); geoms.len()];
+        for h in handles {
+            let (g, a) = h.join().unwrap();
+            per_geom[g].push(a);
+        }
+        per_geom
+    });
+    for (g, list) in per_geom.iter().enumerate() {
+        assert_eq!(list.len(), 2);
+        assert!(
+            Arc::ptr_eq(&list[0], &list[1]),
+            "geometry {g}: concurrent resolvers must share one design"
+        );
+    }
+}
+
+/// Golden transcript of the quick bench configuration (the CI smoke's
+/// spec). Blessed on first run or under `TNN7_BLESS=1`, byte-compared
+/// afterwards — any change to entry training, query pools, schedules or
+/// the wire format shows up as a diff that must be re-blessed
+/// deliberately.
+#[test]
+fn quick_bench_transcript_matches_golden() {
+    let report = run_bench(&ServeSpec::quick()).unwrap();
+    for p in &report.patterns {
+        assert!(p.winners_match_sequential, "{} diverged", p.pattern.name());
+    }
+    let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden/serve_transcript_quick.tsv");
+    let header = "# Golden: tnn7 serve --quick bench transcript (ServeSpec::quick()).\n\
+                  # Columns: pattern <TAB> request id <TAB> entry <TAB> winner (- = silent).\n\
+                  # Deterministic from the spec seed; re-bless deliberate changes with\n\
+                  # TNN7_BLESS=1 cargo test --test serve.\n";
+    if std::env::var("TNN7_BLESS").is_ok() || !path.exists() {
+        std::fs::write(&path, format!("{header}{}", report.transcript))
+            .unwrap_or_else(|e| panic!("cannot write golden transcript: {e}"));
+        eprintln!("blessed golden file tests/golden/serve_transcript_quick.tsv");
+        return;
+    }
+    let golden = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("cannot read golden transcript: {e}"));
+    let want: Vec<&str> = golden
+        .lines()
+        .filter(|l| !l.starts_with('#') && !l.trim().is_empty())
+        .collect();
+    let got: Vec<&str> = report.transcript.lines().collect();
+    assert_eq!(
+        got, want,
+        "serve transcript drifted from golden (bless with TNN7_BLESS=1 if intended)"
+    );
+}

@@ -191,6 +191,40 @@ SCHEMAS = {
         "fast": None,
         "bench": None,
     },
+    # Serving artifact (tnn7 serve bench mode, src/serve/bench.rs): per
+    # arrival pattern, coalescing + latency quantiles + throughput, plus
+    # the differential verdict against the sequential reference and the
+    # artifact-cache occupancy after the run.
+    "BENCH_serve.json": {
+        "seed": None,
+        "workers": None,
+        "words": None,
+        "requests_total": None,
+        "registry": [
+            {"entry": None, "kind": None, "p": None, "q": None, "queries": None}
+        ],
+        "patterns": [
+            {
+                "pattern": None,
+                "requests": None,
+                "batches": None,
+                "mean_batch": None,
+                "p50_us": None,
+                "p99_us": None,
+                "mean_us": None,
+                "max_us": None,
+                "qps": None,
+                "winners_match_sequential": None,
+            }
+        ],
+        "cache": {
+            "designs": None,
+            "programs": None,
+            "design_capacity": None,
+            "program_capacity": None,
+            "evictions": None,
+        },
+    },
 }
 
 
