@@ -89,6 +89,31 @@ pub const COMMANDS: &[CommandSpec] = &[
         ],
     },
     CommandSpec {
+        name: "emit-verilog",
+        synopsis: "emit-verilog [--flat] [--p P] [--q Q] [OUT.v]",
+        details: &[
+            "emit a p x q column netlist as tnn7-v1 structural Verilog (the frozen",
+            "naming contract in docs/ARCHITECTURE.md): byte-deterministic, macro",
+            "instances preserved as TNN7 cell instantiations, parseable back into",
+            "the exact netlist by `parse-verilog`",
+            "--flat           behavioral fallback: expand each macro into its generic-gate",
+            "                 implementation (no TNN7 cells; for flows without the library)",
+            "--p P            synapses per neuron, default 82",
+            "--q Q            neurons, default 2",
+            "OUT.v            output path; omitted or `-` writes to stdout",
+        ],
+    },
+    CommandSpec {
+        name: "parse-verilog",
+        synopsis: "parse-verilog FILE.v",
+        details: &[
+            "parse tnn7-v1 structural Verilog (the `emit-verilog` subset) back into a",
+            "netlist, verify it, and print its census (nets, gates, macros, ports);",
+            "errors carry the 1-based line and column of the offending token",
+            "FILE.v           input path; `-` reads stdin",
+        ],
+    },
+    CommandSpec {
         name: "serve",
         synopsis: "serve [--stdin | --listen ADDR] [--quick] [key=value ...]",
         details: &[
@@ -185,6 +210,8 @@ mod tests {
         }
         assert!(u.contains("--engine xla|golden|batched|gate"));
         assert!(u.contains("--quick"));
+        assert!(u.contains("emit-verilog [--flat]"));
+        assert!(u.contains("parse-verilog FILE.v"));
     }
 
     #[test]

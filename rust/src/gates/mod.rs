@@ -20,7 +20,10 @@
 //! compiled program for inference workloads ([`opt`]), and the concurrent
 //! evicting artifact cache that shares built designs and compiled programs
 //! across engines, sweeps, fault campaigns and the serving layer
-//! ([`artifact_cache`]).
+//! ([`artifact_cache`]), and the structural-Verilog interchange layer —
+//! deterministic synthesizable emission plus a parser that rebuilds the
+//! exact netlist, round-trip-proven bit-identical on every backend
+//! ([`verilog`]).
 
 pub mod artifact_cache;
 pub mod column_design;
@@ -31,6 +34,7 @@ pub mod macros9;
 pub mod netlist;
 pub mod opt;
 pub mod sim;
+pub mod verilog;
 pub mod wordsim;
 
 pub use artifact_cache::{
@@ -43,6 +47,7 @@ pub use macros9::MacroKind;
 pub use netlist::{Gate, NetBuilder, NetId, Netlist};
 pub use opt::{KeepSet, NetRemap, OptAssumptions, OptLevel, Pass, PassPipeline};
 pub use sim::Simulator;
+pub use verilog::{ParsedModule, VerilogError};
 pub use wordsim::{WordSimulator, LANES};
 
 /// Seeded (p, q, seed) geometry matrix shared by the word-simulator lane-0

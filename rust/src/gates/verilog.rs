@@ -1,0 +1,1307 @@
+//! Structural Verilog interchange: deterministic emission of any
+//! [`Netlist`] as synthesizable structural Verilog, and a parser for the
+//! emitted subset that rebuilds the exact netlist — the repo's first
+//! externally-consumable artifact (the EDA-tool handoff the paper's flow
+//! claims hinge on).
+//!
+//! # The `tnn7-v1` naming contract (normative)
+//!
+//! Emission is a pure function of the netlist — byte-reproducible — and
+//! the text obeys a frozen naming contract so the parser can rebuild the
+//! *exact* structure (same net ids, same instance indices, same port
+//! order):
+//!
+//! * net `k` is named `n<k>`; macro instance `k` is named `m<k>`; the
+//!   single implicit clock is the port `clk`;
+//! * declared port names are preserved: a name is emitted verbatim iff it
+//!   is a *simple identifier* (`[A-Za-z_][A-Za-z0-9_]*`) that is not a
+//!   reserved word, not `clk`, and not of the reserved net/instance shape
+//!   `n<digits>` / `m<digits>`; every other name is emitted as a Verilog
+//!   escaped identifier (`\name` + mandatory trailing space);
+//! * statement order is frozen: module header (clk, then inputs in
+//!   declaration order, then outputs), net declarations in id order
+//!   (`wire n<k>;` for combinational nets, `reg n<k> = 1'b<init>;` for
+//!   DFFs), input-port binds in declaration order, gate statements in id
+//!   order, macro instances in index order, output-port binds;
+//! * gates map to `assign` forms (`Mux(s, a, b)` emits `s ? b : a`),
+//!   [`Gate::Dff`] to a guarded `always @(posedge clk)` block
+//!   (synchronous reset to the declared initializer), and each TNN7 macro
+//!   to a module instantiation of its library cell
+//!   ([`MacroKind::cell_name`]) with named pin connections — sequential
+//!   cells take `.CLK(clk)` as their first connection.
+//!
+//! [`emit_flat`] is the behavioral fallback for flows without the TNN7
+//! library: every macro instance is replaced by its generic-gate
+//! expansion ([`super::macros9::expand`]) before emission, so the text
+//! contains no cell instances (net ids are *not* preserved — flat
+//! equivalence is behavioral, checked on the ports).
+//!
+//! Round-trip conformance — parse(emit(nl)) simulates bit-identically
+//! (values *and* toggle counts) to `nl` on every simulator backend — is
+//! the fourth differential leg of `harness::conformance`, pinned by
+//! [`roundtrip_mismatches`], `tests/verilog.rs`, randomized property
+//! tests, and the no-toolchain Python port
+//! (`scripts/fuzz_verilog_roundtrip.py`).
+//!
+//! ```
+//! use tnn7::gates::{NetBuilder, verilog};
+//! let mut b = NetBuilder::new("toy");
+//! let a = b.input("a");
+//! let q = b.dff(a, None, false);
+//! b.output("q", q);
+//! let nl = b.finish();
+//! let text = verilog::emit(&nl).unwrap();
+//! let back = verilog::parse(&text).unwrap();
+//! assert_eq!(back.netlist, nl);
+//! assert_eq!(verilog::emit(&back.netlist).unwrap(), text); // fixpoint
+//! ```
+
+use super::macros9::{self, MacroKind};
+use super::netlist::{Gate, MacroInst, NetBuilder, NetId, Netlist};
+use std::collections::{HashMap, HashSet};
+use std::fmt::Write as _;
+
+/// Words that can never be emitted verbatim as a port name (they would
+/// collide with the emitted subset's own vocabulary); such names are
+/// escaped instead. Part of the normative `tnn7-v1` contract.
+const RESERVED: &[&str] = &[
+    "module", "endmodule", "input", "output", "inout", "wire", "reg", "assign", "always",
+    "posedge", "negedge", "if", "else", "begin", "end", "clk",
+];
+
+/// Is `s` a simple identifier: `[A-Za-z_][A-Za-z0-9_]*`?
+fn simple_ident(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' => {}
+        _ => return false,
+    }
+    s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+/// Does `s` have the reserved net/instance shape `n<digits>` / `m<digits>`?
+fn net_like(s: &str) -> bool {
+    let mut chars = s.chars();
+    matches!(chars.next(), Some('n') | Some('m'))
+        && s.len() > 1
+        && chars.all(|c| c.is_ascii_digit())
+}
+
+/// Render a port name under the naming contract: verbatim when simple and
+/// unreserved, escaped-identifier form otherwise. Errors on names the
+/// escaped form cannot carry (empty, whitespace, backslash).
+fn render_port(name: &str) -> Result<String, String> {
+    if name.is_empty() || name.contains(|c: char| c.is_whitespace() || c == '\\') {
+        return Err(format!(
+            "port name {name:?} cannot be emitted (empty or contains whitespace/backslash)"
+        ));
+    }
+    if simple_ident(name) && !RESERVED.contains(&name) && !net_like(name) {
+        Ok(name.to_string())
+    } else {
+        Ok(format!("\\{name} "))
+    }
+}
+
+/// Emit `nl` as `tnn7-v1` structural Verilog (see the module docs for the
+/// normative contract). The netlist is [`Netlist::verify`]-ed first; the
+/// remaining error cases are naming problems (an `Input` gate with no
+/// port, duplicate port names, a non-identifier module name).
+pub fn emit(nl: &Netlist) -> Result<String, String> {
+    nl.verify()?;
+    if !simple_ident(&nl.name) || net_like(&nl.name) || RESERVED.contains(&nl.name.as_str()) {
+        return Err(format!(
+            "module name {:?} is not a plain unreserved identifier",
+            nl.name
+        ));
+    }
+    let n = nl.gates.len();
+    // Port sanity: unique names, every Input gate reachable from exactly
+    // one input port (the bind statement is its only driver).
+    let mut seen: HashSet<&str> = HashSet::new();
+    for (name, _) in nl.inputs.iter().chain(nl.outputs.iter()) {
+        if !seen.insert(name.as_str()) {
+            return Err(format!("duplicate port name {name:?}"));
+        }
+    }
+    let mut input_port: Vec<Option<&str>> = vec![None; n];
+    for (name, id) in &nl.inputs {
+        let slot = &mut input_port[*id as usize];
+        if slot.is_some() {
+            return Err(format!("two input ports bound to net n{id}"));
+        }
+        *slot = Some(name.as_str());
+    }
+    for (i, g) in nl.gates.iter().enumerate() {
+        if matches!(g, Gate::Input) && input_port[i].is_none() {
+            return Err(format!("input net n{i} has no port name"));
+        }
+    }
+
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "// tnn7-v1 {}: {} nets, {} macros",
+        nl.name,
+        n,
+        nl.macros.len()
+    );
+    let _ = writeln!(s, "module {} (", nl.name);
+    let mut ports: Vec<String> = vec!["  input wire clk".to_string()];
+    for (name, _) in &nl.inputs {
+        ports.push(format!("  input wire {}", render_port(name)?));
+    }
+    for (name, _) in &nl.outputs {
+        ports.push(format!("  output wire {}", render_port(name)?));
+    }
+    let _ = writeln!(s, "{}\n);", ports.join(",\n"));
+
+    // Net declarations, id order.
+    for (i, g) in nl.gates.iter().enumerate() {
+        match g {
+            Gate::Dff { init, .. } => {
+                let _ = writeln!(s, "  reg n{i} = 1'b{};", *init as u8);
+            }
+            _ => {
+                let _ = writeln!(s, "  wire n{i};");
+            }
+        }
+    }
+    // Input-port binds, declaration order.
+    for (name, id) in &nl.inputs {
+        let _ = writeln!(s, "  assign n{id} = {};", render_port(name)?);
+    }
+    // Gate statements, id order.
+    for (i, g) in nl.gates.iter().enumerate() {
+        match *g {
+            Gate::Input | Gate::MacroOut { .. } => {}
+            Gate::Const(v) => {
+                let _ = writeln!(s, "  assign n{i} = 1'b{};", v as u8);
+            }
+            Gate::Buf(a) => {
+                let _ = writeln!(s, "  assign n{i} = n{a};");
+            }
+            Gate::Not(a) => {
+                let _ = writeln!(s, "  assign n{i} = ~n{a};");
+            }
+            Gate::And(a, b) => {
+                let _ = writeln!(s, "  assign n{i} = n{a} & n{b};");
+            }
+            Gate::Or(a, b) => {
+                let _ = writeln!(s, "  assign n{i} = n{a} | n{b};");
+            }
+            Gate::Xor(a, b) => {
+                let _ = writeln!(s, "  assign n{i} = n{a} ^ n{b};");
+            }
+            Gate::Mux(sel, a, b) => {
+                let _ = writeln!(s, "  assign n{i} = n{sel} ? n{b} : n{a};");
+            }
+            Gate::Dff { d, rst, init } => match rst {
+                Some(r) => {
+                    let _ = writeln!(
+                        s,
+                        "  always @(posedge clk) if (n{r}) n{i} <= 1'b{}; else n{i} <= n{d};",
+                        init as u8
+                    );
+                }
+                None => {
+                    let _ = writeln!(s, "  always @(posedge clk) n{i} <= n{d};");
+                }
+            },
+        }
+    }
+    // Macro instances, index order: named pin connections in pin-table
+    // order, `.CLK(clk)` first for sequential cells.
+    for (k, m) in nl.macros.iter().enumerate() {
+        let mut pins: Vec<String> = Vec::new();
+        if m.kind.is_sequential() {
+            pins.push(".CLK(clk)".to_string());
+        }
+        for (pin, &net) in m.kind.input_pins().iter().zip(&m.inputs) {
+            pins.push(format!(".{pin}(n{net})"));
+        }
+        for (pin, &net) in m.kind.output_pins().iter().zip(&m.outputs) {
+            pins.push(format!(".{pin}(n{net})"));
+        }
+        let _ = writeln!(s, "  {} m{k} ({});", m.kind.cell_name(), pins.join(", "));
+    }
+    // Output-port binds, declaration order.
+    for (name, id) in &nl.outputs {
+        let _ = writeln!(s, "  assign {} = n{id};", render_port(name)?);
+    }
+    s.push_str("endmodule\n");
+    Ok(s)
+}
+
+/// Replace every macro instance with its generic-gate expansion
+/// ([`super::macros9::expand`]) — the behavioral-RTL form the ASAP7
+/// baseline flow synthesizes. Net ids are renumbered (the expansion
+/// allocates fresh nets); port names and order are preserved, so flat
+/// equivalence with the original is behavioral on the ports.
+pub fn flatten(nl: &Netlist) -> Result<Netlist, String> {
+    nl.verify()?;
+    let n = nl.gates.len();
+    let mut input_port: Vec<Option<&str>> = vec![None; n];
+    for (name, id) in &nl.inputs {
+        if input_port[*id as usize].is_some() {
+            return Err(format!("two input ports bound to net n{id}"));
+        }
+        input_port[*id as usize] = Some(name.as_str());
+    }
+    let mut b = NetBuilder::new(&nl.name);
+    // Pass 1: one placeholder per net, preserving relative order — inputs
+    // and constants directly, DFFs as pending cells, everything else as a
+    // forward wire (netlists may reference forward through wires/DFFs).
+    let mut map: Vec<NetId> = Vec::with_capacity(n);
+    for (i, g) in nl.gates.iter().enumerate() {
+        let new = match g {
+            Gate::Input => b.input(
+                input_port[i].ok_or_else(|| format!("input net n{i} has no port name"))?,
+            ),
+            Gate::Const(v) => b.constant(*v),
+            Gate::Dff { .. } => b.dff_cell_vec(1)[0],
+            _ => b.wire(),
+        };
+        map.push(new);
+    }
+    // Pass 2: build the real logic behind each placeholder.
+    for (i, g) in nl.gates.iter().enumerate() {
+        let w = map[i];
+        match *g {
+            Gate::Input | Gate::Const(_) | Gate::MacroOut { .. } => {}
+            Gate::Buf(a) => b.connect(w, map[a as usize]),
+            Gate::Not(a) => {
+                let x = b.not(map[a as usize]);
+                b.connect(w, x);
+            }
+            Gate::And(a, c) => {
+                let x = b.and(map[a as usize], map[c as usize]);
+                b.connect(w, x);
+            }
+            Gate::Or(a, c) => {
+                let x = b.or(map[a as usize], map[c as usize]);
+                b.connect(w, x);
+            }
+            Gate::Xor(a, c) => {
+                let x = b.xor(map[a as usize], map[c as usize]);
+                b.connect(w, x);
+            }
+            Gate::Mux(sel, a, c) => {
+                let x = b.mux(map[sel as usize], map[a as usize], map[c as usize]);
+                b.connect(w, x);
+            }
+            Gate::Dff { d, rst, init } => {
+                b.patch_dff_vec(
+                    &[w],
+                    &[map[d as usize]],
+                    rst.map(|r| map[r as usize]),
+                    init as u64,
+                );
+            }
+        }
+    }
+    for m in &nl.macros {
+        let ins: Vec<NetId> = m.inputs.iter().map(|&a| map[a as usize]).collect();
+        let outs = macros9::expand(m.kind, &mut b, &ins);
+        debug_assert_eq!(outs.len(), m.outputs.len());
+        for (&old, &new) in m.outputs.iter().zip(&outs) {
+            b.connect(map[old as usize], new);
+        }
+    }
+    for (name, id) in &nl.outputs {
+        b.output(name, map[*id as usize]);
+    }
+    let flat = b.finish();
+    flat.verify()?;
+    Ok(flat)
+}
+
+/// [`emit`] the macro-free [`flatten`]-ed form of `nl` — the `--flat`
+/// behavioral fallback of `tnn7 emit-verilog`.
+pub fn emit_flat(nl: &Netlist) -> Result<String, String> {
+    emit(&flatten(nl)?)
+}
+
+// ---------------------------------------------------------------------
+// Parser
+// ---------------------------------------------------------------------
+
+/// Structured parse error: 1-based line and column plus a message.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct VerilogError {
+    /// 1-based source line of the offending token.
+    pub line: usize,
+    /// 1-based source column of the offending token.
+    pub col: usize,
+    /// What went wrong.
+    pub msg: String,
+}
+
+impl std::fmt::Display for VerilogError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "line {}, col {}: {}", self.line, self.col, self.msg)
+    }
+}
+
+impl std::error::Error for VerilogError {}
+
+/// A parsed `tnn7-v1` module: the rebuilt netlist plus the flat port/name
+/// map (every declared port, both directions, name → net id). The
+/// netlist's own `inputs` / `outputs` tables carry the declaration order.
+#[derive(Clone, Debug)]
+pub struct ParsedModule {
+    /// The rebuilt netlist (structurally identical to the emitted one).
+    pub netlist: Netlist,
+    /// Port name → bound net id, inputs and outputs together.
+    pub ports: HashMap<String, NetId>,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum Tok {
+    /// Identifier; `escaped` distinguishes `\n5 ` (a port named "n5")
+    /// from the net reference `n5`.
+    Ident { name: String, escaped: bool },
+    /// `1'b0` / `1'b1`.
+    Lit(bool),
+    /// Single-character punctuation: `( ) ; , . = ~ & | ^ ? : @`.
+    Punct(char),
+    /// `<=` (non-blocking assignment).
+    LtEq,
+}
+
+#[derive(Clone, Debug)]
+struct Token {
+    tok: Tok,
+    line: usize,
+    col: usize,
+}
+
+fn err(line: usize, col: usize, msg: impl Into<String>) -> VerilogError {
+    VerilogError {
+        line,
+        col,
+        msg: msg.into(),
+    }
+}
+
+fn lex(src: &str) -> Result<Vec<Token>, VerilogError> {
+    let mut toks = Vec::new();
+    let bytes = src.as_bytes();
+    let (mut i, mut line, mut col) = (0usize, 1usize, 1usize);
+    while i < bytes.len() {
+        let c = bytes[i] as char;
+        let (tl, tc) = (line, col);
+        match c {
+            '\n' => {
+                i += 1;
+                line += 1;
+                col = 1;
+            }
+            c if c.is_ascii_whitespace() => {
+                i += 1;
+                col += 1;
+            }
+            '/' => {
+                if i + 1 < bytes.len() && bytes[i + 1] == b'/' {
+                    while i < bytes.len() && bytes[i] != b'\n' {
+                        i += 1;
+                    }
+                    // newline handled by the loop; col reset there
+                    col += 2; // position tracking not needed inside comments
+                } else {
+                    return Err(err(tl, tc, "unexpected character '/'"));
+                }
+            }
+            '\\' => {
+                let start = i + 1;
+                let mut j = start;
+                while j < bytes.len() && !(bytes[j] as char).is_ascii_whitespace() {
+                    j += 1;
+                }
+                if j == start {
+                    return Err(err(tl, tc, "empty escaped identifier"));
+                }
+                let name = src[start..j].to_string();
+                toks.push(Token {
+                    tok: Tok::Ident { name, escaped: true },
+                    line: tl,
+                    col: tc,
+                });
+                col += j - i;
+                i = j;
+            }
+            '1' => {
+                // The only literal shape in the subset is 1'b0 / 1'b1.
+                if i + 3 < bytes.len()
+                    && bytes[i + 1] == b'\''
+                    && bytes[i + 2] == b'b'
+                    && (bytes[i + 3] == b'0' || bytes[i + 3] == b'1')
+                {
+                    toks.push(Token {
+                        tok: Tok::Lit(bytes[i + 3] == b'1'),
+                        line: tl,
+                        col: tc,
+                    });
+                    i += 4;
+                    col += 4;
+                } else {
+                    return Err(err(tl, tc, "malformed literal (expected 1'b0 or 1'b1)"));
+                }
+            }
+            '<' => {
+                if i + 1 < bytes.len() && bytes[i + 1] == b'=' {
+                    toks.push(Token {
+                        tok: Tok::LtEq,
+                        line: tl,
+                        col: tc,
+                    });
+                    i += 2;
+                    col += 2;
+                } else {
+                    return Err(err(tl, tc, "unexpected character '<'"));
+                }
+            }
+            '(' | ')' | ';' | ',' | '.' | '=' | '~' | '&' | '|' | '^' | '?' | ':' | '@' => {
+                toks.push(Token {
+                    tok: Tok::Punct(c),
+                    line: tl,
+                    col: tc,
+                });
+                i += 1;
+                col += 1;
+            }
+            c if c.is_ascii_alphabetic() || c == '_' => {
+                let start = i;
+                let mut j = i;
+                while j < bytes.len() {
+                    let cj = bytes[j] as char;
+                    if cj.is_ascii_alphanumeric() || cj == '_' {
+                        j += 1;
+                    } else {
+                        break;
+                    }
+                }
+                toks.push(Token {
+                    tok: Tok::Ident {
+                        name: src[start..j].to_string(),
+                        escaped: false,
+                    },
+                    line: tl,
+                    col: tc,
+                });
+                col += j - i;
+                i = j;
+            }
+            other => return Err(err(tl, tc, format!("unexpected character {other:?}"))),
+        }
+    }
+    Ok(toks)
+}
+
+/// One declared net during parsing.
+struct NetSlot {
+    is_reg: bool,
+    init: bool,
+    line: usize,
+    col: usize,
+    driver: Option<Gate>,
+}
+
+/// One declared port during parsing.
+struct PortSlot {
+    name: String,
+    net: Option<NetId>,
+    line: usize,
+    col: usize,
+}
+
+struct Cursor {
+    toks: Vec<Token>,
+    pos: usize,
+    eof_line: usize,
+}
+
+impl Cursor {
+    fn peek(&self) -> Option<&Token> {
+        self.toks.get(self.pos)
+    }
+
+    fn next(&mut self) -> Result<Token, VerilogError> {
+        let t = self
+            .toks
+            .get(self.pos)
+            .cloned()
+            .ok_or_else(|| err(self.eof_line, 1, "unexpected end of input"))?;
+        self.pos += 1;
+        Ok(t)
+    }
+
+    fn expect_punct(&mut self, c: char) -> Result<(), VerilogError> {
+        let t = self.next()?;
+        if t.tok == Tok::Punct(c) {
+            Ok(())
+        } else {
+            Err(err(t.line, t.col, format!("expected {c:?}")))
+        }
+    }
+
+    fn expect_lteq(&mut self) -> Result<(), VerilogError> {
+        let t = self.next()?;
+        if t.tok == Tok::LtEq {
+            Ok(())
+        } else {
+            Err(err(t.line, t.col, "expected \"<=\""))
+        }
+    }
+
+    fn expect_keyword(&mut self, kw: &str) -> Result<(), VerilogError> {
+        let t = self.next()?;
+        match &t.tok {
+            Tok::Ident { name, escaped: false } if name == kw => Ok(()),
+            _ => Err(err(t.line, t.col, format!("expected {kw:?}"))),
+        }
+    }
+
+    fn expect_lit(&mut self) -> Result<(bool, usize, usize), VerilogError> {
+        let t = self.next()?;
+        match t.tok {
+            Tok::Lit(v) => Ok((v, t.line, t.col)),
+            _ => Err(err(t.line, t.col, "expected 1'b0 or 1'b1")),
+        }
+    }
+
+    /// Any identifier (simple or escaped); returns (name, escaped, line, col).
+    fn expect_ident(&mut self) -> Result<(String, bool, usize, usize), VerilogError> {
+        let t = self.next()?;
+        match t.tok {
+            Tok::Ident { name, escaped } => Ok((name, escaped, t.line, t.col)),
+            _ => Err(err(t.line, t.col, "expected an identifier")),
+        }
+    }
+}
+
+/// Decode a (non-escaped) `n<k>` / `m<k>` identifier into its index.
+fn decode_indexed(name: &str, prefix: char) -> Option<usize> {
+    let mut chars = name.chars();
+    if chars.next() != Some(prefix) {
+        return None;
+    }
+    let digits = &name[1..];
+    if digits.is_empty() || !digits.chars().all(|c| c.is_ascii_digit()) {
+        return None;
+    }
+    digits.parse().ok()
+}
+
+/// Parse `tnn7-v1` structural Verilog (the [`emit`]-ed subset) back into a
+/// [`Netlist`] plus the port/name map. Errors carry the 1-based line and
+/// column of the offending token; structural violations — dangling
+/// (never-driven) nets, duplicate drivers, unbound or unknown ports,
+/// malformed macro instances — are rejected with a specific message.
+pub fn parse(src: &str) -> Result<ParsedModule, VerilogError> {
+    let eof_line = src.lines().count() + 1;
+    let mut cur = Cursor {
+        toks: lex(src)?,
+        pos: 0,
+        eof_line,
+    };
+
+    // --- module header -------------------------------------------------
+    cur.expect_keyword("module")?;
+    let (name, escaped, nl_, nc_) = cur.expect_ident()?;
+    if escaped || !simple_ident(&name) {
+        return Err(err(nl_, nc_, "module name must be a simple identifier"));
+    }
+    cur.expect_punct('(')?;
+    // First port is always the implicit clock.
+    cur.expect_keyword("input")?;
+    cur.expect_keyword("wire")?;
+    let (clk, clk_esc, cl, cc) = cur.expect_ident()?;
+    if clk_esc || clk != "clk" {
+        return Err(err(cl, cc, "first port must be `input wire clk`"));
+    }
+    let mut in_ports: Vec<PortSlot> = Vec::new();
+    let mut out_ports: Vec<PortSlot> = Vec::new();
+    loop {
+        let t = cur.next()?;
+        match t.tok {
+            Tok::Punct(')') => break,
+            Tok::Punct(',') => {
+                let dir = cur.expect_ident()?;
+                let is_input = match dir.0.as_str() {
+                    "input" if !dir.1 => true,
+                    "output" if !dir.1 => false,
+                    _ => return Err(err(dir.2, dir.3, "expected \"input\" or \"output\"")),
+                };
+                cur.expect_keyword("wire")?;
+                let (pname, _esc, pl, pc) = cur.expect_ident()?;
+                if in_ports
+                    .iter()
+                    .chain(out_ports.iter())
+                    .any(|p| p.name == pname)
+                {
+                    return Err(err(pl, pc, format!("duplicate port name {pname:?}")));
+                }
+                let slot = PortSlot {
+                    name: pname,
+                    net: None,
+                    line: pl,
+                    col: pc,
+                };
+                if is_input {
+                    in_ports.push(slot);
+                } else {
+                    out_ports.push(slot);
+                }
+            }
+            _ => return Err(err(t.line, t.col, "expected ',' or ')' in port list")),
+        }
+    }
+    cur.expect_punct(';')?;
+
+    // --- body ----------------------------------------------------------
+    let mut nets: Vec<NetSlot> = Vec::new();
+    let mut macros: Vec<MacroInst> = Vec::new();
+
+    // Resolve an already-declared net reference.
+    fn net_ref(nets: &[NetSlot], cur: &mut Cursor) -> Result<NetId, VerilogError> {
+        let (nm, esc, l, c) = cur.expect_ident()?;
+        let k = (!esc)
+            .then(|| decode_indexed(&nm, 'n'))
+            .flatten()
+            .ok_or_else(|| err(l, c, format!("expected a net identifier, found {nm:?}")))?;
+        if k >= nets.len() {
+            return Err(err(l, c, format!("undeclared net n{k}")));
+        }
+        Ok(k as NetId)
+    }
+    // Install a driver, rejecting duplicates and wire/reg statement-kind
+    // mismatches.
+    fn drive(
+        nets: &mut [NetSlot],
+        k: NetId,
+        g: Gate,
+        l: usize,
+        c: usize,
+    ) -> Result<(), VerilogError> {
+        let slot = &mut nets[k as usize];
+        if slot.driver.is_some() {
+            return Err(err(l, c, format!("duplicate driver for net n{k}")));
+        }
+        if slot.is_reg != matches!(g, Gate::Dff { .. }) {
+            let (decl, stmt) = if slot.is_reg {
+                ("reg", "a continuous driver")
+            } else {
+                ("wire", "an always block")
+            };
+            return Err(err(l, c, format!("net n{k} is declared {decl} but driven by {stmt}")));
+        }
+        slot.driver = Some(g);
+        Ok(())
+    }
+
+    loop {
+        let t = cur.next()?;
+        let (sl, sc) = (t.line, t.col);
+        let kw = match t.tok {
+            Tok::Ident { ref name, escaped: false } => name.clone(),
+            _ => return Err(err(sl, sc, "expected a statement keyword or cell name")),
+        };
+        match kw.as_str() {
+            "endmodule" => break,
+            "wire" | "reg" => {
+                let (nm, esc, l, c) = cur.expect_ident()?;
+                let k = (!esc)
+                    .then(|| decode_indexed(&nm, 'n'))
+                    .flatten()
+                    .ok_or_else(|| err(l, c, format!("expected a net name, found {nm:?}")))?;
+                if k != nets.len() {
+                    return Err(err(
+                        l,
+                        c,
+                        format!("net declarations must be contiguous (expected n{})", nets.len()),
+                    ));
+                }
+                let (is_reg, init) = if kw == "reg" {
+                    cur.expect_punct('=')?;
+                    let (v, _, _) = cur.expect_lit()?;
+                    (true, v)
+                } else {
+                    (false, false)
+                };
+                cur.expect_punct(';')?;
+                nets.push(NetSlot {
+                    is_reg,
+                    init,
+                    line: l,
+                    col: c,
+                    driver: None,
+                });
+            }
+            "assign" => {
+                let (lhs, lhs_esc, ll, lc) = cur.expect_ident()?;
+                let lhs_net = (!lhs_esc).then(|| decode_indexed(&lhs, 'n')).flatten();
+                cur.expect_punct('=')?;
+                match lhs_net {
+                    Some(k) if k < nets.len() => {
+                        let k = k as NetId;
+                        // RHS: literal, port bind, or a gate expression.
+                        let rt = cur.next()?;
+                        let gate = match rt.tok {
+                            Tok::Lit(v) => {
+                                cur.expect_punct(';')?;
+                                Gate::Const(v)
+                            }
+                            Tok::Punct('~') => {
+                                let a = net_ref(&nets, &mut cur)?;
+                                cur.expect_punct(';')?;
+                                Gate::Not(a)
+                            }
+                            Tok::Ident { ref name, escaped } => {
+                                let a = (!escaped).then(|| decode_indexed(name, 'n')).flatten();
+                                match a {
+                                    Some(a) if a < nets.len() => {
+                                        let a = a as NetId;
+                                        let op = cur.next()?;
+                                        match op.tok {
+                                            Tok::Punct(';') => Gate::Buf(a),
+                                            Tok::Punct('&') => {
+                                                let b2 = net_ref(&nets, &mut cur)?;
+                                                cur.expect_punct(';')?;
+                                                Gate::And(a, b2)
+                                            }
+                                            Tok::Punct('|') => {
+                                                let b2 = net_ref(&nets, &mut cur)?;
+                                                cur.expect_punct(';')?;
+                                                Gate::Or(a, b2)
+                                            }
+                                            Tok::Punct('^') => {
+                                                let b2 = net_ref(&nets, &mut cur)?;
+                                                cur.expect_punct(';')?;
+                                                Gate::Xor(a, b2)
+                                            }
+                                            Tok::Punct('?') => {
+                                                // sel ? b : a  ⇒  Mux(sel, a, b)
+                                                let bb = net_ref(&nets, &mut cur)?;
+                                                cur.expect_punct(':')?;
+                                                let aa = net_ref(&nets, &mut cur)?;
+                                                cur.expect_punct(';')?;
+                                                Gate::Mux(a, aa, bb)
+                                            }
+                                            _ => {
+                                                return Err(err(
+                                                    op.line,
+                                                    op.col,
+                                                    "expected ';' or a binary operator",
+                                                ))
+                                            }
+                                        }
+                                    }
+                                    Some(a) => {
+                                        return Err(err(
+                                            rt.line,
+                                            rt.col,
+                                            format!("undeclared net n{a}"),
+                                        ))
+                                    }
+                                    None => {
+                                        // Input-port bind: assign n<k> = <port>;
+                                        let port = in_ports
+                                            .iter_mut()
+                                            .find(|p| p.name == *name)
+                                            .ok_or_else(|| {
+                                                err(
+                                                    rt.line,
+                                                    rt.col,
+                                                    format!("unknown input port {name:?}"),
+                                                )
+                                            })?;
+                                        if port.net.is_some() {
+                                            return Err(err(
+                                                rt.line,
+                                                rt.col,
+                                                format!("input port {name:?} bound twice"),
+                                            ));
+                                        }
+                                        port.net = Some(k);
+                                        cur.expect_punct(';')?;
+                                        Gate::Input
+                                    }
+                                }
+                            }
+                            _ => return Err(err(rt.line, rt.col, "expected an expression")),
+                        };
+                        drive(&mut nets, k, gate, ll, lc)?;
+                    }
+                    Some(k) => return Err(err(ll, lc, format!("undeclared net n{k}"))),
+                    None => {
+                        // Output-port bind: assign <port> = n<k>;
+                        let src_net = net_ref(&nets, &mut cur)?;
+                        cur.expect_punct(';')?;
+                        let port = out_ports
+                            .iter_mut()
+                            .find(|p| p.name == lhs)
+                            .ok_or_else(|| {
+                                err(ll, lc, format!("unknown output port {lhs:?}"))
+                            })?;
+                        if port.net.is_some() {
+                            return Err(err(ll, lc, format!("output port {lhs:?} bound twice")));
+                        }
+                        port.net = Some(src_net);
+                    }
+                }
+            }
+            "always" => {
+                cur.expect_punct('@')?;
+                cur.expect_punct('(')?;
+                cur.expect_keyword("posedge")?;
+                cur.expect_keyword("clk")?;
+                cur.expect_punct(')')?;
+                let t2 = cur.next()?;
+                match t2.tok {
+                    Tok::Ident { ref name, escaped: false } if name == "if" => {
+                        cur.expect_punct('(')?;
+                        let rst = net_ref(&nets, &mut cur)?;
+                        cur.expect_punct(')')?;
+                        let (qn, _, ql, qc) = cur.expect_ident()?;
+                        let q = decode_indexed(&qn, 'n')
+                            .filter(|&k| k < nets.len())
+                            .ok_or_else(|| err(ql, qc, format!("undeclared net {qn:?}")))?
+                            as NetId;
+                        cur.expect_lteq()?;
+                        let (v, vl, vc) = cur.expect_lit()?;
+                        if v != nets[q as usize].init {
+                            return Err(err(
+                                vl,
+                                vc,
+                                format!("reset value 1'b{} disagrees with n{q}'s initializer", v as u8),
+                            ));
+                        }
+                        cur.expect_punct(';')?;
+                        cur.expect_keyword("else")?;
+                        let (qn2, _, q2l, q2c) = cur.expect_ident()?;
+                        if qn2 != qn {
+                            return Err(err(
+                                q2l,
+                                q2c,
+                                "reset and data branches drive different nets",
+                            ));
+                        }
+                        cur.expect_lteq()?;
+                        let d = net_ref(&nets, &mut cur)?;
+                        cur.expect_punct(';')?;
+                        let init = nets[q as usize].init;
+                        drive(&mut nets, q, Gate::Dff { d, rst: Some(rst), init }, ql, qc)?;
+                    }
+                    Tok::Ident { ref name, escaped: false } => {
+                        let q = decode_indexed(name, 'n')
+                            .filter(|&k| k < nets.len())
+                            .ok_or_else(|| {
+                                err(t2.line, t2.col, format!("undeclared net {name:?}"))
+                            })? as NetId;
+                        cur.expect_lteq()?;
+                        let d = net_ref(&nets, &mut cur)?;
+                        cur.expect_punct(';')?;
+                        let init = nets[q as usize].init;
+                        drive(&mut nets, q, Gate::Dff { d, rst: None, init }, t2.line, t2.col)?;
+                    }
+                    _ => return Err(err(t2.line, t2.col, "expected \"if\" or a net name")),
+                }
+            }
+            cell => {
+                // Macro instance: <cell> m<k> (.PIN(net), ...);
+                let kind = MacroKind::from_cell_name(cell)
+                    .ok_or_else(|| err(sl, sc, format!("unknown macro cell {cell:?}")))?;
+                let (inm, iesc, il, ic) = cur.expect_ident()?;
+                let k = (!iesc).then(|| decode_indexed(&inm, 'm')).flatten();
+                if k != Some(macros.len()) {
+                    return Err(err(
+                        il,
+                        ic,
+                        format!("expected instance m{} (instances are emitted in index order)", macros.len()),
+                    ));
+                }
+                let inst = macros.len() as u32;
+                cur.expect_punct('(')?;
+                let mut expected: Vec<(&str, bool)> = Vec::new(); // (pin, is_output)
+                if kind.is_sequential() {
+                    expected.push(("CLK", false));
+                }
+                expected.extend(kind.input_pins().iter().map(|&p| (p, false)));
+                expected.extend(kind.output_pins().iter().map(|&p| (p, true)));
+                let mut inputs: Vec<NetId> = Vec::new();
+                let mut outputs: Vec<NetId> = Vec::new();
+                let last = expected.len() - 1;
+                for (idx, (pin, is_out)) in expected.iter().enumerate() {
+                    cur.expect_punct('.')?;
+                    let (pn, pesc, pl, pc) = cur.expect_ident()?;
+                    if pesc || pn != *pin {
+                        return Err(err(
+                            pl,
+                            pc,
+                            format!("expected pin .{pin} of {}, found .{pn}", kind.cell_name()),
+                        ));
+                    }
+                    cur.expect_punct('(')?;
+                    if *pin == "CLK" {
+                        cur.expect_keyword("clk")?;
+                    } else {
+                        let (nn, nesc, nl2, nc2) = cur.expect_ident()?;
+                        let net = (!nesc)
+                            .then(|| decode_indexed(&nn, 'n'))
+                            .flatten()
+                            .filter(|&n| n < nets.len())
+                            .ok_or_else(|| {
+                                err(nl2, nc2, format!("undeclared net {nn:?} on pin .{pin}"))
+                            })? as NetId;
+                        if *is_out {
+                            drive(
+                                &mut nets,
+                                net,
+                                Gate::MacroOut { inst, pin: outputs.len() as u8 },
+                                nl2,
+                                nc2,
+                            )?;
+                            outputs.push(net);
+                        } else {
+                            inputs.push(net);
+                        }
+                    }
+                    cur.expect_punct(')')?;
+                    if idx < last {
+                        cur.expect_punct(',')?;
+                    }
+                }
+                cur.expect_punct(')')?;
+                cur.expect_punct(';')?;
+                macros.push(MacroInst { kind, inputs, outputs });
+            }
+        }
+    }
+    if let Some(t) = cur.peek() {
+        return Err(err(t.line, t.col, "trailing tokens after endmodule"));
+    }
+
+    // --- structural completion checks ----------------------------------
+    for (k, slot) in nets.iter().enumerate() {
+        if slot.driver.is_none() {
+            return Err(err(slot.line, slot.col, format!("net n{k} is never driven")));
+        }
+    }
+    for p in &in_ports {
+        if p.net.is_none() {
+            return Err(err(
+                p.line,
+                p.col,
+                format!("input port {:?} is never bound to a net", p.name),
+            ));
+        }
+    }
+    for p in &out_ports {
+        if p.net.is_none() {
+            return Err(err(
+                p.line,
+                p.col,
+                format!("output port {:?} is never bound to a net", p.name),
+            ));
+        }
+    }
+
+    let netlist = Netlist {
+        name,
+        gates: nets.iter().map(|s| s.driver.unwrap()).collect(),
+        macros,
+        inputs: in_ports
+            .iter()
+            .map(|p| (p.name.clone(), p.net.unwrap()))
+            .collect(),
+        outputs: out_ports
+            .iter()
+            .map(|p| (p.name.clone(), p.net.unwrap()))
+            .collect(),
+    };
+    netlist
+        .verify()
+        .map_err(|e| err(eof_line - 1, 1, format!("netlist verification failed: {e}")))?;
+    let ports = netlist
+        .inputs
+        .iter()
+        .chain(netlist.outputs.iter())
+        .map(|(n2, id)| (n2.clone(), *id))
+        .collect();
+    Ok(ParsedModule { netlist, ports })
+}
+
+// ---------------------------------------------------------------------
+// Round-trip differential check (the fourth conformance leg's engine)
+// ---------------------------------------------------------------------
+
+/// The simulator-backend matrix every round trip is checked on: the
+/// scalar reference, the 64-lane interpreter, and the compiled engine at
+/// 1, 2 and 4 worker threads.
+fn roundtrip_backends() -> [super::SimBackend; 5] {
+    use super::SimBackend::*;
+    [
+        Scalar,
+        BitParallel64,
+        Compiled { words: 2, threads: 1 },
+        Compiled { words: 2, threads: 2 },
+        Compiled { words: 2, threads: 4 },
+    ]
+}
+
+/// Differential round-trip check: emit `nl`, parse the text back, and
+/// count every disagreement between the original and the round-tripped
+/// netlist — byte-determinism of emission, structural equality,
+/// emit∘parse∘emit fixpoint, per-backend toggle-report equality
+/// (scalar / bit-parallel-64 / compiled at 1, 2 and 4 workers), and
+/// per-net value equality under lockstep stimulus on the scalar and
+/// compiled engines. Returns 0 iff the round trip is bit-exact; parse
+/// failures are hard errors.
+pub fn roundtrip_mismatches(nl: &Netlist, cycles: u64, seed: u64) -> Result<usize, String> {
+    use super::{collect_toggles, CompiledSim, Simulator};
+    use crate::util::Rng64;
+
+    let mut m = 0usize;
+    let text = emit(nl)?;
+    if emit(nl)? != text {
+        m += 1; // emission must be byte-deterministic
+    }
+    let parsed = parse(&text).map_err(|e| format!("parse-back failed: {e}"))?.netlist;
+    if parsed != *nl {
+        m += 1;
+    }
+    if emit(&parsed)? != text {
+        m += 1; // emit∘parse∘emit fixpoint
+    }
+    for backend in roundtrip_backends() {
+        let a = collect_toggles(nl, cycles, seed, backend)?;
+        let b = collect_toggles(&parsed, cycles, seed, backend)?;
+        if a.cycles != b.cycles || a.toggles != b.toggles {
+            m += 1;
+        }
+    }
+    if parsed.len() != nl.len() || parsed.inputs.len() != nl.inputs.len() {
+        return Ok(m + 2); // value checks subsumed by the structural diff
+    }
+    let n = nl.len() as NetId;
+    // Scalar lockstep: every net, every settled cycle.
+    {
+        let mut a = Simulator::new(nl)?;
+        let mut b = Simulator::new(&parsed)?;
+        let mut rng = Rng64::seed_from_u64(seed ^ 0x56C0_57A7);
+        let mut bad = false;
+        for _ in 0..cycles.min(64) {
+            for ((_, ia), (_, ib)) in nl.inputs.iter().zip(&parsed.inputs) {
+                let v = rng.gen_bool(0.125);
+                a.set_input_net(*ia, v);
+                b.set_input_net(*ib, v);
+            }
+            a.settle();
+            b.settle();
+            for net in 0..n {
+                if a.get(net) != b.get(net) {
+                    bad = true;
+                }
+            }
+            a.clock();
+            b.clock();
+        }
+        if bad {
+            m += 1;
+        }
+    }
+    // Compiled lockstep (2 words × 4 workers): every net, every word.
+    {
+        let mut a = CompiledSim::new(nl, 2, 4)?;
+        let mut b = CompiledSim::new(&parsed, 2, 4)?;
+        let mut rng = Rng64::seed_from_u64(seed ^ 0xC0_4417);
+        let mut bad = false;
+        for _ in 0..8 {
+            for ((_, ia), (_, ib)) in nl.inputs.iter().zip(&parsed.inputs) {
+                for w in 0..2 {
+                    let word = rng.next_u64() & rng.next_u64() & rng.next_u64();
+                    a.set_input_net(*ia, w, word);
+                    b.set_input_net(*ib, w, word);
+                }
+            }
+            a.cycle();
+            b.cycle();
+            for net in 0..n {
+                for w in 0..2 {
+                    if a.get_word(net, w) != b.get_word(net, w) {
+                        bad = true;
+                    }
+                }
+            }
+        }
+        if bad {
+            m += 1;
+        }
+    }
+    Ok(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Netlist {
+        let mut b = NetBuilder::new("toy");
+        let a = b.input("a");
+        let g = b.input("IN[0]"); // needs escaping
+        let x = b.and(a, g);
+        let nx = b.not(x);
+        let q = b.dff(nx, Some(g), true);
+        let outs = b.macro_inst(MacroKind::Pulse2Edge, vec![x, g]);
+        let cse = b.macro_inst(MacroKind::StdpCaseGen, vec![a, g, q]);
+        let mx = b.mux(a, q, outs[0]);
+        b.output("q", q);
+        b.output("wire", mx); // reserved word → escaped
+        b.output("case0", cse[0]);
+        b.finish()
+    }
+
+    #[test]
+    fn emit_parse_roundtrip_is_exact_and_a_fixpoint() {
+        let nl = toy();
+        let text = emit(&nl).unwrap();
+        assert_eq!(emit(&nl).unwrap(), text, "byte-deterministic");
+        let back = parse(&text).unwrap();
+        assert_eq!(back.netlist, nl);
+        assert_eq!(emit(&back.netlist).unwrap(), text, "fixpoint");
+        for (name, id) in nl.inputs.iter().chain(&nl.outputs) {
+            assert_eq!(back.ports.get(name), Some(id), "port map covers {name}");
+        }
+    }
+
+    #[test]
+    fn escaping_rules_follow_the_contract() {
+        assert_eq!(render_port("GRST").unwrap(), "GRST");
+        assert_eq!(render_port("IN[0]").unwrap(), "\\IN[0] ");
+        assert_eq!(render_port("clk").unwrap(), "\\clk ");
+        assert_eq!(render_port("wire").unwrap(), "\\wire ");
+        assert_eq!(render_port("n5").unwrap(), "\\n5 ");
+        assert_eq!(render_port("m12").unwrap(), "\\m12 ");
+        assert_eq!(render_port("n5x").unwrap(), "n5x");
+        assert!(render_port("has space").is_err());
+        assert!(render_port("").is_err());
+    }
+
+    #[test]
+    fn ports_named_like_reserved_words_roundtrip() {
+        let mut b = NetBuilder::new("t");
+        let a = b.input("clk"); // escaped, distinct from the clock port
+        let x = b.not(a);
+        b.output("n0", x); // net-shaped name → escaped
+        let nl = b.finish();
+        let text = emit(&nl).unwrap();
+        let back = parse(&text).unwrap().netlist;
+        assert_eq!(back, nl);
+    }
+
+    #[test]
+    fn mux_polarity_survives_the_text(){
+        // Mux(s, a, b) = s ? b : a — polarity must survive the text form.
+        let mut b = NetBuilder::new("t");
+        let s = b.input("s");
+        let a = b.input("a");
+        let c = b.input("c");
+        let x = b.mux(s, a, c);
+        b.output("x", x);
+        let nl = b.finish();
+        let text = emit(&nl).unwrap();
+        assert!(text.contains("assign n3 = n0 ? n2 : n1;"), "{text}");
+        assert_eq!(parse(&text).unwrap().netlist, nl);
+    }
+
+    #[test]
+    fn emit_rejects_bad_names() {
+        let mut b = NetBuilder::new("bad name");
+        let a = b.input("a");
+        b.output("x", a);
+        assert!(emit(&b.finish()).unwrap_err().contains("module name"));
+
+        let mut b = NetBuilder::new("t");
+        let a = b.input("dup");
+        b.output("dup", a);
+        assert!(emit(&b.finish()).unwrap_err().contains("duplicate port"));
+
+        // Input gate with no port entry.
+        let nl = Netlist {
+            name: "t".into(),
+            gates: vec![Gate::Input],
+            ..Netlist::default()
+        };
+        assert!(emit(&nl).unwrap_err().contains("no port name"));
+    }
+
+    #[test]
+    fn parse_reports_positions_for_structural_violations() {
+        // Dangling net: declared, never driven (position = the decl's name).
+        let src = "module t (\n  input wire clk,\n  input wire a\n);\n  wire n0;\n  wire n1;\n  assign n0 = a;\nendmodule\n";
+        let e = parse(src).unwrap_err();
+        assert_eq!((e.line, e.col), (6, 8), "{e}");
+        assert!(e.msg.contains("n1 is never driven"), "{e}");
+
+        // Duplicate driver: position = the second statement's LHS.
+        let src = "module t (\n  input wire clk,\n  input wire a\n);\n  wire n0;\n  assign n0 = a;\n  assign n0 = 1'b1;\nendmodule\n";
+        let e = parse(src).unwrap_err();
+        assert_eq!((e.line, e.col), (7, 10), "{e}");
+        assert!(e.msg.contains("duplicate driver"), "{e}");
+
+        // Bad port: RHS names a port that was never declared.
+        let src = "module t (\n  input wire clk,\n  input wire a\n);\n  wire n0;\n  assign n0 = b;\nendmodule\n";
+        let e = parse(src).unwrap_err();
+        assert_eq!((e.line, e.col), (6, 15), "{e}");
+        assert!(e.msg.contains("unknown input port"), "{e}");
+    }
+
+    #[test]
+    fn parse_rejects_malformed_instances_and_literals() {
+        let src = "module t (\n  input wire clk,\n  input wire a\n);\n  wire n0;\n  wire n1;\n  assign n0 = a;\n  bogus_cell m0 (.X(n0), .Y(n1));\nendmodule\n";
+        let e = parse(src).unwrap_err();
+        assert!(e.msg.contains("unknown macro cell"), "{e}");
+        assert_eq!(e.line, 8);
+
+        let src = "module t (\n  input wire clk,\n  input wire a\n);\n  wire n0;\n  assign n0 = 2'b10;\nendmodule\n";
+        let e = parse(src).unwrap_err();
+        assert!(e.msg.contains("unexpected character"), "{e}");
+
+        // Wrong pin name for a real cell.
+        let src = "module t (\n  input wire clk,\n  input wire a\n);\n  wire n0;\n  wire n1;\n  assign n0 = a;\n  pulse2edge m0 (.CLK(clk), .PULSES(n0), .GRST(n0), .EDGE(n1));\nendmodule\n";
+        let e = parse(src).unwrap_err();
+        assert!(e.msg.contains("expected pin .PULSE"), "{e}");
+        assert_eq!((e.line, e.col), (8, 30), "{e}");
+    }
+
+    #[test]
+    fn flatten_removes_macros_and_keeps_ports() {
+        let nl = toy();
+        let flat = flatten(&nl).unwrap();
+        assert!(flat.macros.is_empty());
+        assert_eq!(
+            flat.inputs.iter().map(|(n, _)| n.clone()).collect::<Vec<_>>(),
+            nl.inputs.iter().map(|(n, _)| n.clone()).collect::<Vec<_>>()
+        );
+        assert_eq!(
+            flat.outputs.iter().map(|(n, _)| n.clone()).collect::<Vec<_>>(),
+            nl.outputs.iter().map(|(n, _)| n.clone()).collect::<Vec<_>>()
+        );
+        // Flat text parses back to the flat netlist exactly.
+        let text = emit_flat(&nl).unwrap();
+        assert_eq!(parse(&text).unwrap().netlist, flat);
+        assert!(!text.contains("pulse2edge"), "no cell instances in flat mode");
+    }
+
+    #[test]
+    fn roundtrip_mismatches_is_zero_on_a_small_column() {
+        let d = super::super::column_design::build_column(
+            3,
+            2,
+            4,
+            super::super::column_design::BrvSource::Lfsr,
+        );
+        assert_eq!(roundtrip_mismatches(&d.netlist, 256, 0xF00D).unwrap(), 0);
+    }
+}

@@ -809,12 +809,21 @@ pub struct ConformanceReport {
     /// Gate engine only: winner mismatches between the 64-lane
     /// word-parallel inference sweep and the scalar gate path (must be 0).
     pub word_batch_mismatches: usize,
+    /// Fourth differential leg: structural-Verilog round-trip mismatches
+    /// for this geometry's column netlist — emit → parse must rebuild a
+    /// netlist that simulates bit-identically (values *and* toggles) on
+    /// every backend, for the original and the `opt=inference` netlist,
+    /// with the `NetRemap` toggle-translation law holding across the text
+    /// (must be 0; see [`verilog_roundtrip_mismatches`]).
+    pub verilog_roundtrip_mismatches: usize,
 }
 
 impl ConformanceReport {
     /// Did every engine meet its conformance requirement on this table?
     pub fn all_agree(&self) -> bool {
-        self.word_batch_mismatches == 0 && self.rows.iter().all(|r| r.ok())
+        self.word_batch_mismatches == 0
+            && self.verilog_roundtrip_mismatches == 0
+            && self.rows.iter().all(|r| r.ok())
     }
 }
 
@@ -946,7 +955,62 @@ pub fn conformance_for(
         seed,
         rows,
         word_batch_mismatches: gate.word_mismatches,
+        verilog_roundtrip_mismatches: verilog_roundtrip_mismatches(cfg.p, cfg.q, seed)?,
     })
+}
+
+/// Fourth differential conformance leg: the structural-Verilog round trip
+/// of this geometry's column netlist must be lossless. Builds the p×q
+/// column (LFSR BRVs, default θ), then counts every disagreement between
+/// the netlist and its emit→parse round trip — byte-determinism,
+/// structural equality, re-emission fixpoint, and bit-identical values +
+/// toggle counts on the scalar, bit-parallel-64 and compiled (1/2/4
+/// worker) backends ([`crate::gates::verilog::roundtrip_mismatches`]).
+/// The `opt=inference` pipeline output must round-trip too, and the PR 7
+/// remap law must hold *across the text*: toggles measured on the
+/// original netlist, translated through the [`crate::gates::NetRemap`],
+/// must equal toggles measured on the netlist parsed back from the
+/// optimized module's emission (lockstep stimulus via the remapped input
+/// ids — the `tests/netlist_opt.rs` discipline). Returns 0 iff every
+/// check agrees.
+pub fn verilog_roundtrip_mismatches(p: usize, q: usize, seed: u64) -> crate::Result<usize> {
+    use crate::gates::column_design::{build_column, BrvSource};
+    use crate::gates::{verilog, WordSimulator};
+    use crate::util::Rng64;
+
+    let theta = (p as u32 * 7) / 4;
+    let design = build_column(p, q, theta, BrvSource::Lfsr);
+    // The flagship geometry is ~10× the small shapes; keep its leg at the
+    // same gate-eval budget by shrinking the toggle-collection window.
+    let cycles: u64 = if p * q >= 128 { 256 } else { 1024 };
+    let mut m = verilog::roundtrip_mismatches(&design.netlist, cycles, seed)
+        .map_err(anyhow::Error::msg)?;
+
+    let (opt, remap) = design.optimize_inference().map_err(anyhow::Error::msg)?;
+    m += verilog::roundtrip_mismatches(&opt.netlist, cycles, seed).map_err(anyhow::Error::msg)?;
+
+    let text = verilog::emit(&opt.netlist).map_err(anyhow::Error::msg)?;
+    let back = verilog::parse(&text)
+        .map_err(|e| anyhow::anyhow!("round-tripped optimized netlist: {e}"))?
+        .netlist;
+    let mut orig = WordSimulator::new(&design.netlist).map_err(anyhow::Error::msg)?;
+    let mut rt = WordSimulator::new(&back).map_err(anyhow::Error::msg)?;
+    let mut rng = Rng64::seed_from_u64(seed ^ 0x04E7_1157);
+    for _ in 0..16 {
+        for (_, id) in &design.netlist.inputs {
+            let w = rng.next_u64() & rng.next_u64() & rng.next_u64();
+            orig.set_input_net(*id, w);
+            if let Some(new) = remap.net(*id) {
+                rt.set_input_net(new, w);
+            }
+        }
+        orig.cycle();
+        rt.cycle();
+    }
+    if &remap.translate_per_net(orig.toggles())[..] != rt.toggles() {
+        m += 1;
+    }
+    Ok(m)
 }
 
 /// Dataset name for a conformance geometry (the 82×2 entry is the real
@@ -1023,6 +1087,10 @@ pub fn print_conformance(reports: &[ConformanceReport]) {
             "word-parallel gate sweep vs scalar gate path: {} mismatches",
             r.word_batch_mismatches
         );
+        println!(
+            "verilog round-trip (emit→parse, original + opt=inference): {} mismatches",
+            r.verilog_roundtrip_mismatches
+        );
     }
     if reports.iter().all(|r| r.all_agree()) {
         println!("\nALL ENGINES AGREE ({} conformance tables)", reports.len());
@@ -1044,6 +1112,7 @@ pub fn conformance_json(reports: &[ConformanceReport]) -> Json {
                     .set("items", r.items)
                     .set("epochs", r.epochs)
                     .set("word_batch_mismatches", r.word_batch_mismatches)
+                    .set("verilog_roundtrip_mismatches", r.verilog_roundtrip_mismatches)
                     .set("all_agree", r.all_agree())
                     .set(
                         "engines",
@@ -1218,9 +1287,14 @@ mod tests {
         assert_eq!(gate.train_mismatches, 0, "gate training winners bit-exact");
         assert_eq!(gate.weight_mismatches, 0, "gate weights bit-exact");
         assert_eq!(r.word_batch_mismatches, 0);
+        assert_eq!(
+            r.verilog_roundtrip_mismatches, 0,
+            "emit→parse round trip must be lossless on the 7x4 column"
+        );
         assert!(r.all_agree());
         let j = conformance_json(&[r]).to_string();
         assert!(j.contains("word_batch_mismatches") && j.contains("all_agree"));
+        assert!(j.contains("verilog_roundtrip_mismatches"));
     }
 
     #[test]

@@ -39,6 +39,8 @@ fn dispatch(args: &[String]) -> tnn7::Result<()> {
         Some("run") => run(args),
         Some("sweep") => sweep_cmd(args),
         Some("synth") => synth_cmd(args),
+        Some("emit-verilog") => emit_verilog(args),
+        Some("parse-verilog") => parse_verilog(args),
         Some("serve") => serve(args),
         Some("selftest") => selftest(),
         Some("help") => {
@@ -295,6 +297,81 @@ fn synth_cmd(args: &[String]) -> tnn7::Result<()> {
         out.stats.cells_out, out.stats.macros_out, out.stats.opt.iterations
     );
     println!("{}", rep.row());
+    Ok(())
+}
+
+fn emit_verilog(args: &[String]) -> tnn7::Result<()> {
+    use tnn7::gates::verilog;
+    let p: usize = opt(args, "--p").unwrap_or("82").parse()?;
+    let q: usize = opt(args, "--q").unwrap_or("2").parse()?;
+    let theta = (p as u32 * 7) / 4;
+    let d = build_column(p, q, theta, BrvSource::Lfsr);
+    let flat = flag(args, "--flat");
+    let text = if flat {
+        verilog::emit_flat(&d.netlist)
+    } else {
+        verilog::emit(&d.netlist)
+    }
+    .map_err(anyhow::Error::msg)?;
+    // First positional argument = output path; skip the flag and the two
+    // valued options when scanning for it.
+    let mut out = None;
+    let mut it = args[1..].iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--flat" => {}
+            "--p" | "--q" => {
+                it.next();
+            }
+            other => {
+                out = Some(other.to_string());
+                break;
+            }
+        }
+    }
+    match out.as_deref() {
+        None | Some("-") => print!("{text}"),
+        Some(path) => {
+            std::fs::write(path, &text)?;
+            eprintln!(
+                "wrote {path}: {}x{} column, {} nets, {} macros{}",
+                p,
+                q,
+                d.netlist.len(),
+                d.netlist.macros.len(),
+                if flat { " (flattened)" } else { "" }
+            );
+        }
+    }
+    Ok(())
+}
+
+fn parse_verilog(args: &[String]) -> tnn7::Result<()> {
+    use tnn7::gates::verilog;
+    let file = args
+        .get(1)
+        .map(|s| s.as_str())
+        .ok_or_else(|| anyhow::anyhow!("parse-verilog needs a file argument (`-` = stdin)"))?;
+    let src = if file == "-" {
+        std::io::read_to_string(std::io::stdin().lock())?
+    } else {
+        std::fs::read_to_string(file)?
+    };
+    let parsed = verilog::parse(&src).map_err(|e| anyhow::anyhow!("{file}: {e}"))?;
+    let nl = &parsed.netlist;
+    let c = nl.census();
+    println!(
+        "parsed module {}: {} nets ({} comb, {} dffs, {} sources), {} macros ({} macro pins), {} inputs, {} outputs",
+        nl.name,
+        nl.len(),
+        c.comb,
+        c.dffs,
+        c.sources,
+        c.macros,
+        c.macro_pins,
+        nl.inputs.len(),
+        nl.outputs.len()
+    );
     Ok(())
 }
 

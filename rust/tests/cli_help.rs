@@ -23,7 +23,17 @@ fn every_advertised_subcommand_prints_help() {
 #[test]
 fn global_usage_covers_the_dispatch_table() {
     let u = usage();
-    for name in ["report", "run", "sweep", "synth", "serve", "selftest", "help"] {
+    for name in [
+        "report",
+        "run",
+        "sweep",
+        "synth",
+        "emit-verilog",
+        "parse-verilog",
+        "serve",
+        "selftest",
+        "help",
+    ] {
         assert!(
             command(name).is_some(),
             "dispatchable subcommand {name} missing from the table"
@@ -31,7 +41,15 @@ fn global_usage_covers_the_dispatch_table() {
         assert!(u.contains(name), "usage must advertise {name}");
     }
     // The flags that drifted historically must be present in the synopses…
-    for flag in ["--engine", "--quick", "--dataset", "--layers", "--no-cache", "--sim-backend"] {
+    for flag in [
+        "--engine",
+        "--quick",
+        "--dataset",
+        "--layers",
+        "--no-cache",
+        "--sim-backend",
+        "--flat",
+    ] {
         assert!(u.contains(flag), "usage must advertise {flag}");
     }
     // …and the config-override keys in the per-command detail lines.

@@ -13,8 +13,16 @@
 //!  3. `neuron::fire_time` is monotone in added input spikes: adding a
 //!     spike to a silent line can only move the fire time earlier (or
 //!     leave it unchanged) — extra ramps never delay a threshold crossing.
+//!  4. Structural-Verilog round trips are lossless on *arbitrary* valid
+//!     netlists (DFF feedback loops, partial-`pin_deps` macros, Const/Buf
+//!     chains — not just column designs): emit → parse rebuilds the exact
+//!     netlist, re-emission is a byte fixpoint, simulation is bit-exact,
+//!     and the `--flat` macro expansion preserves port behavior.
 
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use tnn7::gates::macros9::ALL_MACROS;
+use tnn7::gates::netlist::NetId;
+use tnn7::gates::{verilog, NetBuilder, Netlist, Simulator};
 use tnn7::tnn::column::Column;
 use tnn7::tnn::neuron::fire_time;
 use tnn7::tnn::params::TnnParams;
@@ -98,6 +106,205 @@ fn prop_stdp_keeps_weights_in_range() {
             );
         }
     });
+}
+
+/// Generate a random valid netlist: a few primary inputs (some with
+/// escape-needing names), optional constants, forward-declared DFF
+/// feedback cells (patched at the end, so state loops are exercised),
+/// then a run of random gates — inverters, 2-input gates, muxes, Buf
+/// chains via `wire`/`connect`, standalone DFFs, and macro instances
+/// drawn from all nine kinds (including the partial-`pin_deps` Mealy
+/// macros). Every combinational fan-in references an already-allocated
+/// net, so the result always passes `Netlist::verify`.
+fn random_netlist(rng: &mut Rng64) -> Netlist {
+    fn pick(rng: &mut Rng64, pool: &[NetId]) -> NetId {
+        pool[rng.gen_range(0, pool.len())]
+    }
+    let mut b = NetBuilder::new("fuzz");
+    let mut pool: Vec<NetId> = Vec::new();
+    let n_in = rng.gen_range(2, 8);
+    for k in 0..n_in {
+        let id = if k == 0 && rng.gen_bool(0.3) {
+            b.input(&format!("in[{k}]")) // escaped-identifier path
+        } else {
+            b.input(&format!("i{k}"))
+        };
+        pool.push(id);
+    }
+    if rng.gen_bool(0.5) {
+        pool.push(b.constant(false));
+    }
+    if rng.gen_bool(0.5) {
+        pool.push(b.constant(true));
+    }
+    // Feedback state: usable as fan-in immediately, data patched last.
+    let fb = b.dff_cell_vec(rng.gen_range(0, 4));
+    pool.extend(&fb);
+    for _ in 0..rng.gen_range(10, 46) {
+        let id = match rng.gen_range(0, 8) {
+            0 => {
+                let a = pick(rng, &pool);
+                b.not(a)
+            }
+            1 => {
+                let (a, c) = (pick(rng, &pool), pick(rng, &pool));
+                b.and(a, c)
+            }
+            2 => {
+                let (a, c) = (pick(rng, &pool), pick(rng, &pool));
+                b.or(a, c)
+            }
+            3 => {
+                let (a, c) = (pick(rng, &pool), pick(rng, &pool));
+                b.xor(a, c)
+            }
+            4 => {
+                let (s, a, c) = (pick(rng, &pool), pick(rng, &pool), pick(rng, &pool));
+                b.mux(s, a, c)
+            }
+            5 => {
+                // Buf chain: the wire/connect forward-reference idiom.
+                let a = pick(rng, &pool);
+                let w = b.wire();
+                b.connect(w, a);
+                w
+            }
+            6 => {
+                let d = pick(rng, &pool);
+                let rst = rng.gen_bool(0.5).then(|| pick(rng, &pool));
+                b.dff(d, rst, rng.gen_bool(0.5))
+            }
+            _ => {
+                let kind = ALL_MACROS[rng.gen_range(0, ALL_MACROS.len())];
+                let ins: Vec<NetId> = (0..kind.input_pins().len())
+                    .map(|_| pick(rng, &pool))
+                    .collect();
+                let outs = b.macro_inst(kind, ins);
+                let last = *outs.last().unwrap();
+                pool.extend(&outs[..outs.len() - 1]);
+                last
+            }
+        };
+        pool.push(id);
+    }
+    for (k, &cell) in fb.iter().enumerate() {
+        let d = pick(rng, &pool);
+        let rst = rng.gen_bool(0.3).then(|| pick(rng, &pool));
+        b.patch_dff_vec(&[cell], &[d], rst, (k as u64) & 1);
+    }
+    for k in 0..rng.gen_range(1, 6) {
+        let src = pick(rng, &pool);
+        b.output(&format!("o{k}"), src);
+    }
+    let nl = b.finish();
+    nl.verify().expect("generator must produce a valid netlist");
+    nl
+}
+
+#[test]
+fn prop_verilog_roundtrip_rebuilds_the_exact_netlist() {
+    check_property("verilog_roundtrip_exact", 120, 0x7E27, |rng| {
+        let nl = random_netlist(rng);
+        let text = verilog::emit(&nl).unwrap();
+        assert_eq!(verilog::emit(&nl).unwrap(), text, "emission is byte-deterministic");
+        let back = verilog::parse(&text).unwrap_or_else(|e| panic!("parse-back failed: {e}"));
+        assert_eq!(back.netlist, nl, "parse must rebuild the exact netlist");
+        assert_eq!(
+            verilog::emit(&back.netlist).unwrap(),
+            text,
+            "emit∘parse∘emit is a fixpoint"
+        );
+        for (name, id) in nl.inputs.iter().chain(&nl.outputs) {
+            assert_eq!(back.ports.get(name), Some(id), "port map entry {name}");
+        }
+    });
+}
+
+#[test]
+fn prop_verilog_roundtrip_simulates_bit_exact() {
+    check_property("verilog_roundtrip_sim", 40, 0x51B3, |rng| {
+        let nl = random_netlist(rng);
+        let seed = rng.next_u64();
+        // Values + toggle counts on scalar / bit-parallel-64 / compiled
+        // (1, 2, 4 workers), plus determinism and the re-emission fixpoint.
+        assert_eq!(verilog::roundtrip_mismatches(&nl, 64, seed).unwrap(), 0);
+    });
+}
+
+#[test]
+fn prop_flat_expansion_preserves_port_behavior() {
+    check_property("verilog_flat_behavior", 40, 0xF1A7, |rng| {
+        let nl = random_netlist(rng);
+        let flat = verilog::flatten(&nl).unwrap();
+        assert!(flat.macros.is_empty());
+        let parsed = verilog::parse(&verilog::emit_flat(&nl).unwrap())
+            .unwrap_or_else(|e| panic!("flat parse-back failed: {e}"))
+            .netlist;
+        assert_eq!(parsed, flat, "flat text parses back to the flattened netlist");
+        // Behavioral equality on the ports: macro behavioral models (left)
+        // vs their gate expansions through the text (right).
+        let mut a = Simulator::new(&nl).unwrap();
+        let mut b = Simulator::new(&parsed).unwrap();
+        for cycle in 0..48 {
+            for ((_, ia), (_, ib)) in nl.inputs.iter().zip(&parsed.inputs) {
+                let v = rng.gen_bool(0.25);
+                a.set_input_net(*ia, v);
+                b.set_input_net(*ib, v);
+            }
+            a.settle();
+            b.settle();
+            for ((name, oa), (_, ob)) in nl.outputs.iter().zip(&parsed.outputs) {
+                assert_eq!(
+                    a.get(*oa),
+                    b.get(*ob),
+                    "output {name} diverged at cycle {cycle}"
+                );
+            }
+            a.clock();
+            b.clock();
+        }
+    });
+}
+
+#[test]
+fn verilog_parser_rejects_malformed_input_with_positions() {
+    use tnn7::gates::verilog::parse;
+
+    // Dangling net: n1 declared, never driven — anchored at the decl.
+    let src = "module t (\n  input wire clk,\n  input wire a\n);\n  wire n0;\n  wire n1;\n  assign n0 = a;\nendmodule\n";
+    let e = parse(src).unwrap_err();
+    assert!(e.msg.contains("n1 is never driven"), "{e}");
+    assert_eq!((e.line, e.col), (6, 8), "{e}");
+
+    // Duplicate driver — anchored at the second statement's LHS.
+    let src = "module t (\n  input wire clk,\n  input wire a\n);\n  wire n0;\n  assign n0 = a;\n  assign n0 = a;\nendmodule\n";
+    let e = parse(src).unwrap_err();
+    assert!(e.msg.contains("duplicate driver for net n0"), "{e}");
+    assert_eq!((e.line, e.col), (7, 10), "{e}");
+
+    // Bad port: RHS names an undeclared input port.
+    let src = "module t (\n  input wire clk,\n  input wire a\n);\n  wire n0;\n  assign n0 = b;\nendmodule\n";
+    let e = parse(src).unwrap_err();
+    assert!(e.msg.contains("unknown input port \"b\""), "{e}");
+    assert_eq!((e.line, e.col), (6, 15), "{e}");
+
+    // Undeclared net reference in an expression.
+    let src = "module t (\n  input wire clk,\n  input wire a\n);\n  wire n0;\n  assign n0 = n4 & n0;\nendmodule\n";
+    let e = parse(src).unwrap_err();
+    assert!(e.msg.contains("undeclared net n4"), "{e}");
+    assert_eq!((e.line, e.col), (6, 15), "{e}");
+
+    // Declared input port that is never bound to a net.
+    let src = "module t (\n  input wire clk,\n  input wire a,\n  input wire b\n);\n  wire n0;\n  assign n0 = a;\nendmodule\n";
+    let e = parse(src).unwrap_err();
+    assert!(e.msg.contains("input port \"b\" is never bound"), "{e}");
+    assert_eq!((e.line, e.col), (4, 14), "{e}");
+
+    // Net declarations must be contiguous from n0.
+    let src = "module t (\n  input wire clk,\n  input wire a\n);\n  wire n1;\nendmodule\n";
+    let e = parse(src).unwrap_err();
+    assert!(e.msg.contains("contiguous"), "{e}");
+    assert_eq!((e.line, e.col), (5, 8), "{e}");
 }
 
 #[test]

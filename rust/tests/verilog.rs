@@ -1,0 +1,161 @@
+//! Structural-Verilog round-trip conformance: for every conformance
+//! geometry, `verilog::emit` → `verilog::parse` must rebuild the exact
+//! netlist (structural equality, emit∘parse∘emit fixpoint, byte-stable
+//! re-emission) and the round-tripped netlist must simulate
+//! bit-identically — values *and* toggle counts — on the scalar,
+//! bit-parallel-64 and compiled (1/2/4 worker) backends. The same
+//! contract covers the `opt=inference` pipeline output, composing with
+//! the `NetRemap` toggle-translation law of `tests/netlist_opt.rs`, and
+//! the `--flat` behavioral fallback. The committed golden
+//! `tests/golden/column_12x2.v` pins the emitted text itself: the
+//! tnn7-v1 naming contract is frozen, so emission drift is a test
+//! failure, not a formatting choice.
+
+use tnn7::gates::column_design::{build_column, BrvSource};
+use tnn7::gates::{verilog, Simulator, WordSimulator, CONFORMANCE_GEOMETRIES};
+use tnn7::harness;
+use tnn7::util::Rng64;
+
+/// Default θ policy of `synth` / `emit-verilog` (θ = 7p/4).
+fn theta(p: usize) -> u32 {
+    (p as u32 * 7) / 4
+}
+
+/// Toggle-collection window per geometry: the 82×2 flagship is ~10× the
+/// small shapes, so it runs a shorter window at the same gate-eval budget
+/// (the `tests/compiled_sim.rs` discipline).
+fn cycles(p: usize, q: usize) -> u64 {
+    if p * q >= 128 {
+        256
+    } else {
+        1024
+    }
+}
+
+#[test]
+fn roundtrip_bit_exact_across_conformance_geometries() {
+    for &(p, q, seed) in CONFORMANCE_GEOMETRIES.iter() {
+        let d = build_column(p, q, theta(p), BrvSource::Lfsr);
+        let m = verilog::roundtrip_mismatches(&d.netlist, cycles(p, q), seed).unwrap();
+        assert_eq!(
+            m, 0,
+            "{p}x{q}: emit→parse round trip must be bit-exact on every backend"
+        );
+    }
+}
+
+#[test]
+fn harness_fourth_leg_is_green_for_every_geometry() {
+    // The exact check `report conformance` runs: original + opt=inference
+    // round trips plus the NetRemap toggle-translation law across the text.
+    for &(p, q, seed) in CONFORMANCE_GEOMETRIES.iter() {
+        let m = harness::verilog_roundtrip_mismatches(p, q, seed).unwrap();
+        assert_eq!(m, 0, "{p}x{q}: fourth differential leg");
+    }
+}
+
+#[test]
+fn optimized_inputs_column_roundtrips_and_translates_toggles() {
+    // BrvSource::Inputs gives the optimizer real work: tied-low BRV input
+    // assumptions remove nets and whole input ports, so the remap is far
+    // from identity — the round trip and the translation law must still
+    // hold on the netlist that came back from the optimized module's text.
+    let d = build_column(16, 3, theta(16), BrvSource::Inputs);
+    let (opt, remap) = d.optimize_inference().unwrap();
+    assert_eq!(
+        verilog::roundtrip_mismatches(&opt.netlist, 512, 0xA11CE).unwrap(),
+        0,
+        "optimized netlist round trip"
+    );
+    let back = verilog::parse(&verilog::emit(&opt.netlist).unwrap())
+        .unwrap()
+        .netlist;
+    assert_eq!(back, opt.netlist);
+    // Lockstep stimulus through the remapped input ids (tied BRV inputs
+    // held at their assumed-low value on the original side).
+    let mut orig = WordSimulator::new(&d.netlist).unwrap();
+    let mut rt = WordSimulator::new(&back).unwrap();
+    let mut rng = Rng64::seed_from_u64(0x600D_5EED);
+    for _ in 0..24 {
+        for (_, id) in &d.netlist.inputs {
+            match remap.net(*id) {
+                Some(new) => {
+                    let w = rng.next_u64() & rng.next_u64();
+                    orig.set_input_net(*id, w);
+                    rt.set_input_net(new, w);
+                }
+                None => orig.set_input_net(*id, 0),
+            }
+        }
+        orig.cycle();
+        rt.cycle();
+    }
+    assert_eq!(
+        &remap.translate_per_net(orig.toggles())[..],
+        rt.toggles(),
+        "toggles measured on the original must translate onto the round-tripped optimized netlist"
+    );
+}
+
+#[test]
+fn flat_emission_is_macro_free_and_behaviorally_equal() {
+    let d = build_column(7, 4, theta(7), BrvSource::Lfsr);
+    let flat = verilog::flatten(&d.netlist).unwrap();
+    assert!(flat.macros.is_empty(), "--flat expands every macro");
+    // The flat text parses back to the flat netlist exactly (flat mode
+    // changes net ids, so equivalence with the *original* is behavioral).
+    let text = verilog::emit_flat(&d.netlist).unwrap();
+    let parsed = verilog::parse(&text).unwrap().netlist;
+    assert_eq!(parsed, flat);
+    // Port-level behavioral equality, scalar engines side by side: the
+    // macro behavioral models vs their gate expansions, through the text.
+    let mut a = Simulator::new(&d.netlist).unwrap();
+    let mut b = Simulator::new(&parsed).unwrap();
+    let mut rng = Rng64::seed_from_u64(0xF1A7);
+    for cycle in 0..200u32 {
+        for ((na, ia), (nb, ib)) in d.netlist.inputs.iter().zip(&parsed.inputs) {
+            assert_eq!(na, nb, "flatten preserves input port order");
+            let v = rng.gen_bool(if na == "GRST" { 0.0625 } else { 0.125 });
+            a.set_input_net(*ia, v);
+            b.set_input_net(*ib, v);
+        }
+        a.settle();
+        b.settle();
+        for ((na, oa), (nb, ob)) in d.netlist.outputs.iter().zip(&parsed.outputs) {
+            assert_eq!(na, nb, "flatten preserves output port order");
+            assert_eq!(
+                a.get(*oa),
+                b.get(*ob),
+                "output {na} diverged at cycle {cycle}"
+            );
+        }
+        a.clock();
+        b.clock();
+    }
+}
+
+/// Golden-file regression on the emitted text itself (the
+/// `golden_table2.tsv` idiom): compare byte-exact against the committed
+/// `tests/golden/column_12x2.v`, blessing it only when `TNN7_BLESS` is
+/// set or the file is missing — CI's golden-guard step fails if a test
+/// run rewrites the committed file.
+#[test]
+fn golden_column_12x2_verilog_is_byte_stable() {
+    let d = build_column(12, 2, theta(12), BrvSource::Lfsr);
+    let text = verilog::emit(&d.netlist).unwrap();
+    let path =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden/column_12x2.v");
+    if std::env::var_os("TNN7_BLESS").is_some() || !path.exists() {
+        std::fs::write(&path, &text).unwrap();
+        eprintln!("blessed golden file tests/golden/column_12x2.v from current emission");
+        return;
+    }
+    let want = std::fs::read_to_string(&path).unwrap();
+    assert!(
+        text == want,
+        "tests/golden/column_12x2.v drifted from the current emission — the tnn7-v1 \
+         naming contract is frozen; if the change is intentional, re-bless with TNN7_BLESS=1"
+    );
+    // The committed artifact itself parses back to the exact netlist.
+    assert_eq!(verilog::parse(&want).unwrap().netlist, d.netlist);
+}

@@ -1,0 +1,1429 @@
+#!/usr/bin/env python3
+"""Differential fuzz harness for the Verilog interchange layer
+(rust/src/gates/verilog.rs).
+
+This container has no Rust toolchain, so — per the repo's verification
+convention (ROADMAP "Verification reality") — the emitter and parser are
+ported to Python line-for-line and fuzzed differentially:
+
+  * `emit`: the normative `tnn7-v1` contract, byte-for-byte — header
+    comment, port list (clk first, escaped identifiers where the contract
+    requires), net declarations in id order, input binds, gate statements
+    (`Mux(s, a, b)` as `s ? b : a`), guarded `always` blocks for DFFs,
+    macro cell instances with named pins (`.CLK(clk)` first on sequential
+    cells), output binds.
+  * `parse`: the same lexer and recursive descent as the Rust parser,
+    with identical 1-based line/column error positions.
+  * `NetBuilder` + `build_column` (the `BrvSource::Lfsr` branch),
+    statement-for-statement, so net-id allocation matches the Rust
+    elaboration exactly — this is what makes the golden file
+    (`rust/tests/golden/column_12x2.v`) a genuine cross-language check:
+    the Python port generates/verifies the same bytes the Rust test
+    `golden_column_12x2_verilog_is_byte_stable` pins.
+
+Checked properties:
+
+  1. Parser rejection: malformed sources fail with the exact (line, col)
+     the Rust unit/property tests assert.
+  2. Emitter rejection: bad module names, duplicate ports, unbound input
+     gates; `render_port` escaping rules.
+  3. Conformance geometries (+ the 12x2 golden shape): build_column →
+     emit is deterministic, parses back to the exact netlist, and
+     emit∘parse∘emit is a fixpoint.
+  4. Fuzz (default 400 trials): random netlists (DFF feedback, forward
+     wires, all nine TNN7 macro kinds, ports needing escaping) round-trip
+     through the text — structural equality, fixpoint, port map — and
+     simulate bit-identically (values AND per-net toggle counts) before
+     and after the round trip.
+  5. `--golden PATH`: emit the 12x2 Lfsr column; byte-compare against the
+     committed file (write it only if missing).
+
+The simulator's macro model is a *pseudo-model*: a deterministic function
+honoring the `pin_deps` contract (Mealy pins = XOR of dep inputs, state
+bit and a pin constant; Moore pins = state only, refreshed post-clock).
+It does NOT reproduce the Rust behavioral semantics — both sides of every
+differential comparison run the same Python model, which is all
+round-trip equivalence needs.
+
+Usage:  python3 scripts/fuzz_verilog_roundtrip.py [--trials N] [--seed S]
+                [--golden PATH]
+"""
+
+import argparse
+import random
+import re
+import sys
+
+PENDING = -1
+
+# --------------------------------------------------------------------------
+# The nine TNN7 macro kinds (port of macros9.rs: cell names, pin tables,
+# pin_deps, state_bits / is_sequential).
+# --------------------------------------------------------------------------
+
+
+class MacroKind:
+    def __init__(self, cell_name, input_pins, output_pins, deps, state_bits):
+        self.cell_name = cell_name
+        self.input_pins = input_pins
+        self.output_pins = output_pins
+        self.deps = deps  # per output pin: tuple of input-pin indices
+        self.state_bits = state_bits
+        self.is_sequential = state_bits > 0
+
+    def pin_deps(self, pin):
+        return self.deps[pin]
+
+    def __repr__(self):
+        return self.cell_name
+
+
+SYN_READOUT = MacroKind(
+    "syn_readout", ("C0", "C1", "C2", "RD"), ("RESP",), [(0, 1, 2, 3)], 0
+)
+SYN_WEIGHT_UPDATE = MacroKind(
+    "syn_weight_update",
+    ("SPIKE", "WT_INC", "WT_DEC", "GRST"),
+    ("W0", "W1", "W2", "C0", "C1", "C2", "RD"),
+    [(), (), (), (0,), (0,), (0,), (0,)],
+    7,
+)
+LESS_EQUAL = MacroKind(
+    "less_equal", ("DATA", "INHIBIT", "GRST"), ("OUT",), [(0,)], 2
+)
+STDP_CASE_GEN = MacroKind(
+    "stdp_case_gen",
+    ("GREATER", "EIN", "EOUT"),
+    ("CASE0", "CASE1", "CASE2", "CASE3"),
+    [(0, 1, 2)] * 4,
+    0,
+)
+INCDEC = MacroKind(
+    "incdec",
+    ("C0", "C1", "C2", "C3", "BCAP", "BMIN", "BSRCH", "BBKF", "BSTAB"),
+    ("INC", "DEC"),
+    [tuple(range(9))] * 2,
+    0,
+)
+STABILIZE_FUNC = MacroKind(
+    "stabilize_func",
+    ("S0", "S1", "S2", "B0", "B1", "B2", "B3", "B4", "B5", "B6", "B7"),
+    ("OUT",),
+    [tuple(range(11))],
+    0,
+)
+SPIKE_GEN = MacroKind("spike_gen", ("PULSE", "GRST"), ("SPIKE",), [()], 5)
+PULSE2EDGE = MacroKind("pulse2edge", ("PULSE", "GRST"), ("EDGE",), [(0,)], 1)
+EDGE2PULSE = MacroKind("edge2pulse", ("EDGE", "GRST"), ("PULSE",), [(0,)], 1)
+
+ALL_MACROS = [
+    SYN_READOUT,
+    SYN_WEIGHT_UPDATE,
+    LESS_EQUAL,
+    STDP_CASE_GEN,
+    INCDEC,
+    STABILIZE_FUNC,
+    SPIKE_GEN,
+    PULSE2EDGE,
+    EDGE2PULSE,
+]
+FROM_CELL = {m.cell_name: m for m in ALL_MACROS}
+
+
+# --------------------------------------------------------------------------
+# Netlist model + verify (port of netlist.rs). Gates are tuples:
+#   ("input",) ("const", v) ("buf", a) ("not", a) ("and", a, b)
+#   ("or", a, b) ("xor", a, b) ("mux", s, a, b)
+#   ("dff", d, rst_or_None, init) ("macroout", inst, pin)
+# Macros are [kind, inputs, outputs] lists.
+# --------------------------------------------------------------------------
+
+
+class Netlist:
+    def __init__(self, name=""):
+        self.name = name
+        self.gates = []
+        self.macros = []
+        self.inputs = []   # (name, id)
+        self.outputs = []  # (name, id)
+
+    def __eq__(self, other):
+        return (
+            self.name == other.name
+            and self.gates == other.gates
+            and self.macros == other.macros
+            and self.inputs == other.inputs
+            and self.outputs == other.outputs
+        )
+
+
+def comb_fanin(g):
+    op = g[0]
+    if op in ("buf", "not"):
+        return [g[1]]
+    if op in ("and", "or", "xor"):
+        return [g[1], g[2]]
+    if op == "mux":
+        return [g[1], g[2], g[3]]
+    return []
+
+
+def comb_fanin_full(nl, i):
+    g = nl.gates[i]
+    if g[0] == "macroout":
+        kind, inputs, _ = nl.macros[g[1]]
+        return [inputs[d] for d in kind.pin_deps(g[2])]
+    return comb_fanin(g)
+
+
+def levelize_buckets(nl):
+    n = len(nl.gates)
+    is_comb = [bool(comb_fanin_full(nl, i)) for i in range(n)]
+    indegree = [0] * n
+    fanout = [[] for _ in range(n)]
+    comb_count = 0
+    for i in range(n):
+        if not is_comb[i]:
+            continue
+        comb_count += 1
+        for src in comb_fanin_full(nl, i):
+            if is_comb[src]:
+                indegree[i] += 1
+                fanout[src].append(i)
+    frontier = [i for i in range(n) if is_comb[i] and indegree[i] == 0]
+    levels = []
+    scheduled = 0
+    while frontier:
+        scheduled += len(frontier)
+        nxt = []
+        for i in frontier:
+            for succ in fanout[i]:
+                indegree[succ] -= 1
+                if indegree[succ] == 0:
+                    nxt.append(succ)
+        nxt.sort()
+        levels.append(frontier)
+        frontier = nxt
+    if scheduled != comb_count:
+        raise ValueError("combinational cycle")
+    return levels
+
+
+def verify(nl):
+    n = len(nl.gates)
+
+    def ok(src):
+        return src != PENDING and 0 <= src < n
+
+    for i, g in enumerate(nl.gates):
+        fins = list(comb_fanin(g))
+        if g[0] == "dff":
+            fins.append(g[1])
+            if g[2] is not None:
+                fins.append(g[2])
+        for src in fins:
+            if not ok(src):
+                raise ValueError(f"gate {i} {g}: bad fan-in net {src}")
+        if g[0] == "macroout":
+            inst, pin = g[1], g[2]
+            if inst >= len(nl.macros):
+                raise ValueError(f"gate {i}: missing macro {inst}")
+            if nl.macros[inst][2][pin] != i:
+                raise ValueError(f"gate {i}: pin table disagrees")
+    for inst, (kind, inputs, outputs) in enumerate(nl.macros):
+        if len(inputs) != len(kind.input_pins):
+            raise ValueError(f"macro {inst} ({kind}): input pin count mismatch")
+        if len(outputs) != len(kind.output_pins):
+            raise ValueError(f"macro {inst} ({kind}): output pin count mismatch")
+        for src in inputs:
+            if not ok(src):
+                raise ValueError(f"macro {inst}: bad input net {src}")
+        for pin, net in enumerate(outputs):
+            g = nl.gates[net] if 0 <= net < n else None
+            if g != ("macroout", inst, pin):
+                raise ValueError(f"macro {inst} pin {pin}: stolen pin")
+    for (name, i) in nl.inputs:
+        if not (0 <= i < n) or nl.gates[i][0] != "input":
+            raise ValueError(f"input {name} not an Input gate")
+    for (name, i) in nl.outputs:
+        if not ok(i):
+            raise ValueError(f"output {name}: bad net")
+    levelize_buckets(nl)
+
+
+# --------------------------------------------------------------------------
+# NetBuilder port (the subset build_column and the generator use),
+# method-for-method so net-id allocation matches the Rust elaboration.
+# --------------------------------------------------------------------------
+
+
+class NetBuilder:
+    def __init__(self, name):
+        self.nl = Netlist(name)
+        self._zero = None
+        self._one = None
+
+    def push(self, g):
+        self.nl.gates.append(g)
+        return len(self.nl.gates) - 1
+
+    def input(self, name):
+        i = self.push(("input",))
+        self.nl.inputs.append((name, i))
+        return i
+
+    def constant(self, v):
+        slot = self._one if v else self._zero
+        if slot is not None:
+            return slot
+        i = len(self.nl.gates)
+        self.nl.gates.append(("const", bool(v)))
+        if v:
+            self._one = i
+        else:
+            self._zero = i
+        return i
+
+    def not_(self, a):
+        return self.push(("not", a))
+
+    def and_(self, a, b):
+        return self.push(("and", a, b))
+
+    def or_(self, a, b):
+        return self.push(("or", a, b))
+
+    def xor(self, a, b):
+        return self.push(("xor", a, b))
+
+    def mux(self, sel, a, b):
+        # value = b if sel else a (Gate::Mux(sel, a, b) = sel ? b : a)
+        return self.push(("mux", sel, a, b))
+
+    def dff(self, d, rst, init):
+        return self.push(("dff", d, rst, bool(init)))
+
+    def dff_cell_vec(self, width):
+        return [self.push(("dff", PENDING, None, False)) for _ in range(width)]
+
+    def patch_dff_vec(self, cells, d, rst, init):
+        assert len(cells) == len(d)
+        for k, (cell, dn) in enumerate(zip(cells, d)):
+            g = self.nl.gates[cell]
+            assert g[0] == "dff" and g[1] == PENDING, f"DFF {cell} already patched"
+            self.nl.gates[cell] = ("dff", dn, rst, bool((init >> k) & 1))
+
+    def wire(self):
+        return self.push(("buf", PENDING))
+
+    def connect(self, w, src):
+        g = self.nl.gates[w]
+        assert g[0] == "buf" and g[1] == PENDING, f"wire {w} already connected"
+        self.nl.gates[w] = ("buf", src)
+
+    def macro_inst(self, kind, inputs):
+        assert len(inputs) == len(kind.input_pins), f"{kind}: wrong input count"
+        inst = len(self.nl.macros)
+        outs = [
+            self.push(("macroout", inst, pin))
+            for pin in range(len(kind.output_pins))
+        ]
+        self.nl.macros.append([kind, list(inputs), outs])
+        return outs
+
+    def full_adder(self, a, b, c):
+        ab = self.xor(a, b)
+        s = self.xor(ab, c)
+        and1 = self.and_(a, b)
+        and2 = self.and_(ab, c)
+        carry = self.or_(and1, and2)
+        return s, carry
+
+    def half_adder(self, a, b):
+        return self.xor(a, b), self.and_(a, b)
+
+    def add_vec(self, a, b):
+        assert len(a) == len(b)
+        out = []
+        carry = self.constant(False)
+        for x, y in zip(a, b):
+            s, c = self.full_adder(x, y, carry)
+            out.append(s)
+            carry = c
+        out.append(carry)
+        return out
+
+    def ge_const(self, a, k):
+        gt = self.constant(False)
+        eq = self.constant(True)
+        for i in range(len(a) - 1, -1, -1):
+            bit = a[i]
+            if (k >> i) & 1:
+                eq = self.and_(eq, bit)
+            else:
+                win = self.and_(eq, bit)
+                gt = self.or_(gt, win)
+        return self.or_(gt, eq)
+
+    def popcount(self, xs):
+        assert xs
+        if len(xs) == 1:
+            return [xs[0]]
+        cols = [list(xs)]
+        while True:
+            if max(len(c) for c in cols) <= 2:
+                break
+            nxt = [[] for _ in range(len(cols) + 1)]
+            for w in range(len(cols)):
+                col = cols[w]
+                i = 0
+                while len(col) - i >= 3:
+                    s, c = self.full_adder(col[i], col[i + 1], col[i + 2])
+                    nxt[w].append(s)
+                    nxt[w + 1].append(c)
+                    i += 3
+                if len(col) - i == 2:
+                    s, c = self.half_adder(col[i], col[i + 1])
+                    nxt[w].append(s)
+                    nxt[w + 1].append(c)
+                elif len(col) - i == 1:
+                    nxt[w].append(col[i])
+            while nxt and not nxt[-1]:
+                nxt.pop()
+            cols = nxt
+        zero = self.constant(False)
+        a = [c[0] if c else zero for c in cols]
+        if all(len(c) <= 1 for c in cols):
+            return a
+        b = [c[1] if len(c) > 1 else zero for c in cols]
+        return self.add_vec(a, b)
+
+    def output(self, name, net):
+        self.nl.outputs.append((name, net))
+
+    def finish(self):
+        for i, g in enumerate(self.nl.gates):
+            if g[0] == "dff":
+                assert g[1] != PENDING, f"DFF {i} was never patched"
+            if g[0] == "buf":
+                assert g[1] != PENDING, f"wire {i} was never connected"
+        return self.nl
+
+
+# --------------------------------------------------------------------------
+# build_column port (column_design.rs, BrvSource::Lfsr branch only),
+# statement-for-statement — net ids must match the Rust elaboration.
+# --------------------------------------------------------------------------
+
+
+def build_column(p, q, theta):
+    assert p >= 1 and q >= 1
+    b = NetBuilder(f"column_{p}x{q}")
+    grst = b.input("GRST")
+    ein = []
+    spike = []
+    for i in range(p):
+        x = b.input(f"IN[{i}]")
+        e = b.macro_inst(PULSE2EDGE, [x, grst])[0]
+        ein.append(e)
+        sp = b.macro_inst(EDGE2PULSE, [e, grst])[0]
+        spike.append(sp)
+        win = b.macro_inst(SPIKE_GEN, [x, grst])[0]
+        b.output(f"win[{i}]", win)
+
+    # 16-bit Fibonacci LFSR (x^16 + x^15 + x^13 + x^4 + 1).
+    cells = b.dff_cell_vec(16)
+    t0 = b.xor(cells[15], cells[14])
+    t1 = b.xor(t0, cells[12])
+    fb = b.xor(t1, cells[3])
+    nxt = [fb] + cells[:15]
+    b.patch_dff_vec(cells, nxt, None, 0xACE1)
+    lfsr_bits = cells
+    lfsr_rot = 0
+
+    resp = [[] for _ in range(q)]
+    wt_inc_wires = []
+    wt_dec_wires = []
+    w_bits = []
+    for i in range(p):
+        for j in range(q):
+            wi = b.wire()
+            wd = b.wire()
+            wt_inc_wires.append(wi)
+            wt_dec_wires.append(wd)
+            outs = b.macro_inst(SYN_WEIGHT_UPDATE, [spike[i], wi, wd, grst])
+            w_bits.append((outs[0], outs[1], outs[2]))
+            r = b.macro_inst(SYN_READOUT, [outs[3], outs[4], outs[5], outs[6]])[0]
+            resp[j].append(r)
+
+    fire = []
+    for j in range(q):
+        cnt = b.popcount(resp[j])
+        max_pot = p * 7
+        wa = max_pot.bit_length()  # 64 - leading_zeros(p*7)
+        zero = b.constant(False)
+        cnt_w = list(cnt)
+        if len(cnt_w) < wa:
+            cnt_w += [zero] * (wa - len(cnt_w))
+        else:
+            cnt_w = cnt_w[:wa]
+        acc = b.dff_cell_vec(wa)
+        s = b.add_vec(acc, cnt_w)
+        b.patch_dff_vec(acc, s[:wa], grst, 0)
+        f = b.ge_const(s[:wa], theta)
+        fire.append(f)
+        b.output(f"fire[{j}]", f)
+
+    fal = b.constant(False)
+    prefix = [fal] * q
+    for j in range(1, q):
+        prefix[j] = b.or_(prefix[j - 1], fire[j - 1])
+    suffix = [fal] * q
+    for j in range(q - 2, -1, -1):
+        suffix[j] = b.or_(suffix[j + 1], fire[j + 1])
+    le_out = []
+    for j in range(q):
+        inh = b.or_(prefix[j], suffix[j])
+        le = b.macro_inst(LESS_EQUAL, [fire[j], inh, grst])[0]
+        le_out.append(le)
+    eout = []
+    le_pre = fal
+    for j in range(q):
+        nle = b.not_(le_pre)
+        e = b.and_(le_out[j], nle)
+        eout.append(e)
+        b.output(f"out[{j}]", e)
+        le_pre = b.or_(le_pre, le_out[j])
+
+    for i in range(p):
+        for j in range(q):
+            k = i * q + j
+            le = b.macro_inst(LESS_EQUAL, [ein[i], eout[j], grst])[0]
+            greater = b.not_(le)
+            cases = b.macro_inst(STDP_CASE_GEN, [greater, ein[i], eout[j]])
+            c0, c1, c2, c3 = cases
+            inc_case = b.or_(c0, c2)
+            w0, w1, w2 = w_bits[k]
+            nw0 = b.not_(w0)
+            nw1 = b.not_(w1)
+            nw2 = b.not_(w2)
+            s0 = b.mux(inc_case, nw0, w0)
+            s1 = b.mux(inc_case, nw1, w1)
+            s2 = b.mux(inc_case, nw2, w2)
+            one = b.constant(True)
+            t = [lfsr_bits[(lfsr_rot + m * 5) % 16] for m in range(6)]
+            lfsr_rot = (lfsr_rot + 7) % 16
+            srch1 = b.and_(t[0], t[1])
+            srch2 = b.and_(t[2], t[3])
+            srch = b.and_(srch1, srch2)
+            case_nets = [one, t[4], srch, t[5]]
+            u = [lfsr_bits[(lfsr_rot + m * 5) % 16] for m in range(3)]
+            lfsr_rot = (lfsr_rot + 7) % 16
+            ta, tb, tc = u
+            and_ab = b.and_(ta, tb)
+            and_abc = b.and_(and_ab, tc)
+            or_bc = b.or_(tb, tc)
+            a_and_orbc = b.and_(ta, or_bc)
+            and_bc = b.and_(tb, tc)
+            a_or_andbc = b.or_(ta, and_bc)
+            ab_or = b.or_(ta, tb)
+            abc_or = b.or_(ab_or, tc)
+            stab_nets = [and_abc, and_ab, a_and_orbc, ta, a_or_andbc, ab_or, abc_or, one]
+            bstab = b.macro_inst(STABILIZE_FUNC, [s0, s1, s2] + stab_nets)[0]
+            idp = b.macro_inst(INCDEC, [c0, c1, c2, c3] + case_nets + [bstab])
+            wt_inc = b.and_(idp[0], grst)
+            wt_dec = b.and_(idp[1], grst)
+            b.connect(wt_inc_wires[k], wt_inc)
+            b.connect(wt_dec_wires[k], wt_dec)
+
+    return b.finish()
+
+
+# --------------------------------------------------------------------------
+# Emitter port (verilog.rs emit, byte-for-byte).
+# --------------------------------------------------------------------------
+
+RESERVED = (
+    "module", "endmodule", "input", "output", "inout", "wire", "reg",
+    "assign", "always", "posedge", "negedge", "if", "else", "begin", "end",
+    "clk",
+)
+_SIMPLE = re.compile(r"[A-Za-z_][A-Za-z0-9_]*\Z")
+_NET_LIKE = re.compile(r"[nm][0-9]+\Z")
+
+
+class EmitError(Exception):
+    pass
+
+
+def simple_ident(s):
+    return bool(_SIMPLE.match(s))
+
+
+def net_like(s):
+    return bool(_NET_LIKE.match(s))
+
+
+def render_port(name):
+    if name == "" or "\\" in name or any(c.isspace() for c in name):
+        raise EmitError(
+            f'port name "{name}" cannot be emitted (empty or contains '
+            "whitespace/backslash)"
+        )
+    if simple_ident(name) and name not in RESERVED and not net_like(name):
+        return name
+    return "\\" + name + " "
+
+
+def emit(nl):
+    verify(nl)
+    if not simple_ident(nl.name) or net_like(nl.name) or nl.name in RESERVED:
+        raise EmitError(
+            f'module name "{nl.name}" is not a plain unreserved identifier'
+        )
+    n = len(nl.gates)
+    seen = set()
+    for (name, _) in nl.inputs + nl.outputs:
+        if name in seen:
+            raise EmitError(f'duplicate port name "{name}"')
+        seen.add(name)
+    input_port = [None] * n
+    for (name, i) in nl.inputs:
+        if input_port[i] is not None:
+            raise EmitError(f"two input ports bound to net n{i}")
+        input_port[i] = name
+    for i, g in enumerate(nl.gates):
+        if g[0] == "input" and input_port[i] is None:
+            raise EmitError(f"input net n{i} has no port name")
+
+    out = [f"// tnn7-v1 {nl.name}: {n} nets, {len(nl.macros)} macros\n"]
+    out.append(f"module {nl.name} (\n")
+    ports = ["  input wire clk"]
+    for (name, _) in nl.inputs:
+        ports.append(f"  input wire {render_port(name)}")
+    for (name, _) in nl.outputs:
+        ports.append(f"  output wire {render_port(name)}")
+    out.append(",\n".join(ports) + "\n);\n")
+    for i, g in enumerate(nl.gates):
+        if g[0] == "dff":
+            out.append(f"  reg n{i} = 1'b{int(g[3])};\n")
+        else:
+            out.append(f"  wire n{i};\n")
+    for (name, i) in nl.inputs:
+        out.append(f"  assign n{i} = {render_port(name)};\n")
+    for i, g in enumerate(nl.gates):
+        op = g[0]
+        if op in ("input", "macroout"):
+            continue
+        if op == "const":
+            out.append(f"  assign n{i} = 1'b{int(g[1])};\n")
+        elif op == "buf":
+            out.append(f"  assign n{i} = n{g[1]};\n")
+        elif op == "not":
+            out.append(f"  assign n{i} = ~n{g[1]};\n")
+        elif op == "and":
+            out.append(f"  assign n{i} = n{g[1]} & n{g[2]};\n")
+        elif op == "or":
+            out.append(f"  assign n{i} = n{g[1]} | n{g[2]};\n")
+        elif op == "xor":
+            out.append(f"  assign n{i} = n{g[1]} ^ n{g[2]};\n")
+        elif op == "mux":
+            out.append(f"  assign n{i} = n{g[1]} ? n{g[3]} : n{g[2]};\n")
+        else:  # dff
+            _, d, rst, init = g
+            if rst is not None:
+                out.append(
+                    f"  always @(posedge clk) if (n{rst}) n{i} <= "
+                    f"1'b{int(init)}; else n{i} <= n{d};\n"
+                )
+            else:
+                out.append(f"  always @(posedge clk) n{i} <= n{d};\n")
+    for k, (kind, ins, outs_) in enumerate(nl.macros):
+        pins = []
+        if kind.is_sequential:
+            pins.append(".CLK(clk)")
+        for pin, net in zip(kind.input_pins, ins):
+            pins.append(f".{pin}(n{net})")
+        for pin, net in zip(kind.output_pins, outs_):
+            pins.append(f".{pin}(n{net})")
+        out.append(f"  {kind.cell_name} m{k} ({', '.join(pins)});\n")
+    for (name, i) in nl.outputs:
+        out.append(f"  assign {render_port(name)} = n{i};\n")
+    out.append("endmodule\n")
+    return "".join(out)
+
+
+# --------------------------------------------------------------------------
+# Parser port (verilog.rs lex + parse, with identical line/col positions).
+# --------------------------------------------------------------------------
+
+
+class VError(Exception):
+    def __init__(self, line, col, msg):
+        super().__init__(f"line {line}, col {col}: {msg}")
+        self.line = line
+        self.col = col
+        self.msg = msg
+
+
+PUNCT = set("();,.=~&|^?:@")
+
+
+def lex(src):
+    toks = []
+    i, line, col = 0, 1, 1
+    n = len(src)
+    while i < n:
+        c = src[i]
+        tl, tc = line, col
+        if c == "\n":
+            i += 1
+            line += 1
+            col = 1
+        elif c.isspace():
+            i += 1
+            col += 1
+        elif c == "/":
+            if i + 1 < n and src[i + 1] == "/":
+                while i < n and src[i] != "\n":
+                    i += 1
+                col += 2
+            else:
+                raise VError(tl, tc, "unexpected character '/'")
+        elif c == "\\":
+            start = i + 1
+            j = start
+            while j < n and not src[j].isspace():
+                j += 1
+            if j == start:
+                raise VError(tl, tc, "empty escaped identifier")
+            toks.append(("id", (src[start:j], True), tl, tc))
+            col += j - i
+            i = j
+        elif c == "1":
+            if i + 3 < n and src[i + 1] == "'" and src[i + 2] == "b" and src[i + 3] in "01":
+                toks.append(("lit", src[i + 3] == "1", tl, tc))
+                i += 4
+                col += 4
+            else:
+                raise VError(tl, tc, "malformed literal (expected 1'b0 or 1'b1)")
+        elif c == "<":
+            if i + 1 < n and src[i + 1] == "=":
+                toks.append(("lteq", None, tl, tc))
+                i += 2
+                col += 2
+            else:
+                raise VError(tl, tc, "unexpected character '<'")
+        elif c in PUNCT:
+            toks.append(("p", c, tl, tc))
+            i += 1
+            col += 1
+        elif c == "_" or (c.isascii() and c.isalpha()):
+            j = i
+            while j < n and (src[j] == "_" or (src[j].isascii() and src[j].isalnum())):
+                j += 1
+            toks.append(("id", (src[i:j], False), tl, tc))
+            col += j - i
+            i = j
+        else:
+            raise VError(tl, tc, f"unexpected character {c!r}")
+    return toks
+
+
+def decode_indexed(name, prefix):
+    if len(name) < 2 or name[0] != prefix or not name[1:].isdigit():
+        return None
+    return int(name[1:])
+
+
+class Cursor:
+    def __init__(self, toks, eof_line):
+        self.toks = toks
+        self.pos = 0
+        self.eof_line = eof_line
+
+    def peek(self):
+        return self.toks[self.pos] if self.pos < len(self.toks) else None
+
+    def next(self):
+        if self.pos >= len(self.toks):
+            raise VError(self.eof_line, 1, "unexpected end of input")
+        t = self.toks[self.pos]
+        self.pos += 1
+        return t
+
+    def expect_punct(self, c):
+        k, v, l, co = self.next()
+        if k != "p" or v != c:
+            raise VError(l, co, f"expected {c!r}")
+
+    def expect_lteq(self):
+        k, _, l, co = self.next()
+        if k != "lteq":
+            raise VError(l, co, 'expected "<="')
+
+    def expect_keyword(self, kw):
+        k, v, l, co = self.next()
+        if k != "id" or v[1] or v[0] != kw:
+            raise VError(l, co, f'expected "{kw}"')
+
+    def expect_lit(self):
+        k, v, l, co = self.next()
+        if k != "lit":
+            raise VError(l, co, "expected 1'b0 or 1'b1")
+        return v, l, co
+
+    def expect_ident(self):
+        k, v, l, co = self.next()
+        if k != "id":
+            raise VError(l, co, "expected an identifier")
+        return v[0], v[1], l, co
+
+
+class ParsedModule:
+    def __init__(self, netlist, ports):
+        self.netlist = netlist
+        self.ports = ports
+
+
+def parse(src):
+    eof_line = len(src.splitlines()) + 1
+    cur = Cursor(lex(src), eof_line)
+
+    cur.expect_keyword("module")
+    name, escaped, nl_, nc_ = cur.expect_ident()
+    if escaped or not simple_ident(name):
+        raise VError(nl_, nc_, "module name must be a simple identifier")
+    cur.expect_punct("(")
+    cur.expect_keyword("input")
+    cur.expect_keyword("wire")
+    clk, clk_esc, cl, cc = cur.expect_ident()
+    if clk_esc or clk != "clk":
+        raise VError(cl, cc, "first port must be `input wire clk`")
+    in_ports = []   # [name, net_or_None, line, col]
+    out_ports = []
+    while True:
+        k, v, l, co = cur.next()
+        if k == "p" and v == ")":
+            break
+        if k == "p" and v == ",":
+            dn, desc, dl, dc = cur.expect_ident()
+            if desc or dn not in ("input", "output"):
+                raise VError(dl, dc, 'expected "input" or "output"')
+            cur.expect_keyword("wire")
+            pname, _pesc, pl, pc = cur.expect_ident()
+            if any(p[0] == pname for p in in_ports + out_ports):
+                raise VError(pl, pc, f'duplicate port name "{pname}"')
+            slot = [pname, None, pl, pc]
+            (in_ports if dn == "input" else out_ports).append(slot)
+        else:
+            raise VError(l, co, "expected ',' or ')' in port list")
+    cur.expect_punct(";")
+
+    nets = []    # [is_reg, init, line, col, driver]
+    macros = []
+
+    def net_ref():
+        nm, esc, l, c = cur.expect_ident()
+        k = None if esc else decode_indexed(nm, "n")
+        if k is None:
+            raise VError(l, c, f'expected a net identifier, found "{nm}"')
+        if k >= len(nets):
+            raise VError(l, c, f"undeclared net n{k}")
+        return k
+
+    def drive(k, g, l, c):
+        slot = nets[k]
+        if slot[4] is not None:
+            raise VError(l, c, f"duplicate driver for net n{k}")
+        if slot[0] != (g[0] == "dff"):
+            decl, stmt = (
+                ("reg", "a continuous driver")
+                if slot[0]
+                else ("wire", "an always block")
+            )
+            raise VError(l, c, f"net n{k} is declared {decl} but driven by {stmt}")
+        slot[4] = g
+
+    while True:
+        k0, v0, sl, sc = cur.next()
+        if k0 != "id" or v0[1]:
+            raise VError(sl, sc, "expected a statement keyword or cell name")
+        kw = v0[0]
+        if kw == "endmodule":
+            break
+        elif kw in ("wire", "reg"):
+            nm, esc, l, c = cur.expect_ident()
+            k = None if esc else decode_indexed(nm, "n")
+            if k is None:
+                raise VError(l, c, f'expected a net name, found "{nm}"')
+            if k != len(nets):
+                raise VError(
+                    l, c,
+                    f"net declarations must be contiguous (expected n{len(nets)})",
+                )
+            if kw == "reg":
+                cur.expect_punct("=")
+                init, _, _ = cur.expect_lit()
+                is_reg = True
+            else:
+                is_reg, init = False, False
+            cur.expect_punct(";")
+            nets.append([is_reg, init, l, c, None])
+        elif kw == "assign":
+            lhs, lhs_esc, ll, lc = cur.expect_ident()
+            lhs_net = None if lhs_esc else decode_indexed(lhs, "n")
+            cur.expect_punct("=")
+            if lhs_net is not None and lhs_net < len(nets):
+                k = lhs_net
+                rk, rv, rl, rc = cur.next()
+                if rk == "lit":
+                    cur.expect_punct(";")
+                    gate = ("const", rv)
+                elif rk == "p" and rv == "~":
+                    a = net_ref()
+                    cur.expect_punct(";")
+                    gate = ("not", a)
+                elif rk == "id":
+                    rname, resc = rv
+                    a = None if resc else decode_indexed(rname, "n")
+                    if a is not None and a < len(nets):
+                        ok, ov, ol, oc = cur.next()
+                        if ok == "p" and ov == ";":
+                            gate = ("buf", a)
+                        elif ok == "p" and ov in "&|^":
+                            b2 = net_ref()
+                            cur.expect_punct(";")
+                            gate = ({"&": "and", "|": "or", "^": "xor"}[ov], a, b2)
+                        elif ok == "p" and ov == "?":
+                            # sel ? b : a  =>  mux(sel, a, b)
+                            bb = net_ref()
+                            cur.expect_punct(":")
+                            aa = net_ref()
+                            cur.expect_punct(";")
+                            gate = ("mux", a, aa, bb)
+                        else:
+                            raise VError(ol, oc, "expected ';' or a binary operator")
+                    elif a is not None:
+                        raise VError(rl, rc, f"undeclared net n{a}")
+                    else:
+                        # Input-port bind: assign n<k> = <port>;
+                        port = next((p for p in in_ports if p[0] == rname), None)
+                        if port is None:
+                            raise VError(rl, rc, f'unknown input port "{rname}"')
+                        if port[1] is not None:
+                            raise VError(rl, rc, f'input port "{rname}" bound twice')
+                        port[1] = k
+                        cur.expect_punct(";")
+                        gate = ("input",)
+                else:
+                    raise VError(rl, rc, "expected an expression")
+                drive(k, gate, ll, lc)
+            elif lhs_net is not None:
+                raise VError(ll, lc, f"undeclared net n{lhs_net}")
+            else:
+                # Output-port bind: assign <port> = n<k>;
+                src_net = net_ref()
+                cur.expect_punct(";")
+                port = next((p for p in out_ports if p[0] == lhs), None)
+                if port is None:
+                    raise VError(ll, lc, f'unknown output port "{lhs}"')
+                if port[1] is not None:
+                    raise VError(ll, lc, f'output port "{lhs}" bound twice')
+                port[1] = src_net
+        elif kw == "always":
+            cur.expect_punct("@")
+            cur.expect_punct("(")
+            cur.expect_keyword("posedge")
+            cur.expect_keyword("clk")
+            cur.expect_punct(")")
+            tk, tv, tl2, tc2 = cur.next()
+            if tk == "id" and not tv[1] and tv[0] == "if":
+                cur.expect_punct("(")
+                rst = net_ref()
+                cur.expect_punct(")")
+                qn, _, ql, qc = cur.expect_ident()
+                q = decode_indexed(qn, "n")
+                if q is None or q >= len(nets):
+                    raise VError(ql, qc, f'undeclared net "{qn}"')
+                cur.expect_lteq()
+                v, vl, vc = cur.expect_lit()
+                if v != nets[q][1]:
+                    raise VError(
+                        vl, vc,
+                        f"reset value 1'b{int(v)} disagrees with n{q}'s initializer",
+                    )
+                cur.expect_punct(";")
+                cur.expect_keyword("else")
+                qn2, _, q2l, q2c = cur.expect_ident()
+                if qn2 != qn:
+                    raise VError(q2l, q2c, "reset and data branches drive different nets")
+                cur.expect_lteq()
+                d = net_ref()
+                cur.expect_punct(";")
+                drive(q, ("dff", d, rst, nets[q][1]), ql, qc)
+            elif tk == "id" and not tv[1]:
+                q = decode_indexed(tv[0], "n")
+                if q is None or q >= len(nets):
+                    raise VError(tl2, tc2, f'undeclared net "{tv[0]}"')
+                cur.expect_lteq()
+                d = net_ref()
+                cur.expect_punct(";")
+                drive(q, ("dff", d, None, nets[q][1]), tl2, tc2)
+            else:
+                raise VError(tl2, tc2, 'expected "if" or a net name')
+        else:
+            # Macro instance: <cell> m<k> (.PIN(net), ...);
+            kind = FROM_CELL.get(kw)
+            if kind is None:
+                raise VError(sl, sc, f'unknown macro cell "{kw}"')
+            inm, iesc, il, ic = cur.expect_ident()
+            k = None if iesc else decode_indexed(inm, "m")
+            if k != len(macros):
+                raise VError(
+                    il, ic,
+                    f"expected instance m{len(macros)} "
+                    "(instances are emitted in index order)",
+                )
+            inst = len(macros)
+            cur.expect_punct("(")
+            expected = []
+            if kind.is_sequential:
+                expected.append(("CLK", False))
+            expected += [(p, False) for p in kind.input_pins]
+            expected += [(p, True) for p in kind.output_pins]
+            inputs = []
+            outputs = []
+            last = len(expected) - 1
+            for idx, (pin, is_out) in enumerate(expected):
+                cur.expect_punct(".")
+                pn, pesc, pl, pc = cur.expect_ident()
+                if pesc or pn != pin:
+                    raise VError(
+                        pl, pc,
+                        f"expected pin .{pin} of {kind.cell_name}, found .{pn}",
+                    )
+                cur.expect_punct("(")
+                if pin == "CLK":
+                    cur.expect_keyword("clk")
+                else:
+                    nn, nesc, nl2, nc2 = cur.expect_ident()
+                    net = None if nesc else decode_indexed(nn, "n")
+                    if net is None or net >= len(nets):
+                        raise VError(nl2, nc2, f'undeclared net "{nn}" on pin .{pin}')
+                    if is_out:
+                        drive(net, ("macroout", inst, len(outputs)), nl2, nc2)
+                        outputs.append(net)
+                    else:
+                        inputs.append(net)
+                cur.expect_punct(")")
+                if idx < last:
+                    cur.expect_punct(",")
+            cur.expect_punct(")")
+            cur.expect_punct(";")
+            macros.append([kind, inputs, outputs])
+
+    t = cur.peek()
+    if t is not None:
+        raise VError(t[2], t[3], "trailing tokens after endmodule")
+
+    for k, slot in enumerate(nets):
+        if slot[4] is None:
+            raise VError(slot[2], slot[3], f"net n{k} is never driven")
+    for p in in_ports:
+        if p[1] is None:
+            raise VError(p[2], p[3], f'input port "{p[0]}" is never bound to a net')
+    for p in out_ports:
+        if p[1] is None:
+            raise VError(p[2], p[3], f'output port "{p[0]}" is never bound to a net')
+
+    netlist = Netlist(name)
+    netlist.gates = [slot[4] for slot in nets]
+    netlist.macros = macros
+    netlist.inputs = [(p[0], p[1]) for p in in_ports]
+    netlist.outputs = [(p[0], p[1]) for p in out_ports]
+    try:
+        verify(netlist)
+    except ValueError as e:
+        raise VError(eof_line - 1, 1, f"netlist verification failed: {e}") from e
+    ports = {n2: i for (n2, i) in netlist.inputs + netlist.outputs}
+    return ParsedModule(netlist, ports)
+
+
+# --------------------------------------------------------------------------
+# Levelized simulator with per-net toggle counting. The macro model is a
+# deterministic PSEUDO-model honoring pin_deps (see the module docstring);
+# both sides of every differential comparison use it, which is all
+# round-trip equivalence needs.
+# --------------------------------------------------------------------------
+
+
+def macro_eval(kind, ins, state):
+    outs = []
+    for pin in range(len(kind.output_pins)):
+        v = bool((state >> (pin % 32)) & 1) ^ bool((0x9E3779B9 >> (pin % 32)) & 1)
+        for d in kind.pin_deps(pin):
+            v ^= ins[d]
+        outs.append(v)
+    return outs
+
+
+def macro_step(kind, ins, state):
+    if kind.state_bits == 0:
+        return state
+    x = state
+    for k, v in enumerate(ins):
+        if v:
+            x ^= 2 * k + 1
+    return (x * 5 + 1) & ((1 << kind.state_bits) - 1)
+
+
+class Sim:
+    def __init__(self, nl):
+        self.nl = nl
+        self.order = [i for level in levelize_buckets(nl) for i in level]
+        self.values = [False] * len(nl.gates)
+        for i, g in enumerate(nl.gates):
+            if g[0] == "const":
+                self.values[i] = g[1]
+            elif g[0] == "dff":
+                self.values[i] = g[3]
+        self.macro_states = [0] * len(nl.macros)
+        self.toggles = [0] * len(nl.gates)
+
+    def set_input(self, i, v):
+        assert self.nl.gates[i][0] == "input"
+        self.values[i] = v
+
+    def eval_net(self, i):
+        g = self.nl.gates[i]
+        v = self.values
+        op = g[0]
+        if op == "buf":
+            return v[g[1]]
+        if op == "not":
+            return not v[g[1]]
+        if op == "and":
+            return v[g[1]] and v[g[2]]
+        if op == "or":
+            return v[g[1]] or v[g[2]]
+        if op == "xor":
+            return v[g[1]] ^ v[g[2]]
+        if op == "mux":
+            return v[g[3]] if v[g[1]] else v[g[2]]
+        if op == "macroout":
+            kind, inputs, _ = self.nl.macros[g[1]]
+            ins = [v[s] for s in inputs]
+            return macro_eval(kind, ins, self.macro_states[g[1]])[g[2]]
+        return v[i]
+
+    def settle(self):
+        for i in self.order:
+            new = self.eval_net(i)
+            if new != self.values[i]:
+                self.toggles[i] += 1
+                self.values[i] = new
+
+    def clock(self):
+        dff_next = []
+        for i, g in enumerate(self.nl.gates):
+            if g[0] == "dff":
+                _, d, rst, init = g
+                if rst is not None and self.values[rst]:
+                    dff_next.append((i, init))
+                else:
+                    dff_next.append((i, self.values[d]))
+        for inst, (kind, inputs, _) in enumerate(self.nl.macros):
+            ins = [self.values[s] for s in inputs]
+            self.macro_states[inst] = macro_step(kind, ins, self.macro_states[inst])
+        for (i, v) in dff_next:
+            if self.values[i] != v:
+                self.toggles[i] += 1
+                self.values[i] = v
+        for inst, (kind, inputs, outputs) in enumerate(self.nl.macros):
+            ins = [self.values[s] for s in inputs]
+            outs = macro_eval(kind, ins, self.macro_states[inst])
+            for pin, net in enumerate(outputs):
+                if not kind.pin_deps(pin):
+                    if self.values[net] != outs[pin]:
+                        self.toggles[net] += 1
+                        self.values[net] = outs[pin]
+
+
+# --------------------------------------------------------------------------
+# Random netlist generation (mirrors tests/properties.rs): escapable port
+# names, DFF feedback cells patched after the fact, forward wires, all
+# nine macro kinds, Const/Buf chains.
+# --------------------------------------------------------------------------
+
+ESCAPABLE = ["in[0]", "clk", "wire", "n0", "IN[0]", "always"]
+
+
+def random_netlist(rng, idx):
+    b = NetBuilder(f"fuzz{idx}")
+    n_in = rng.randrange(2, 7)
+    for k in range(n_in):
+        if k == 0 and rng.random() < 0.3:
+            b.input(rng.choice(ESCAPABLE))
+        else:
+            b.input(f"i{k}")
+    if rng.random() < 0.5:
+        b.constant(rng.random() < 0.5)
+    fb = b.dff_cell_vec(rng.randrange(0, 4))
+    for _ in range(rng.randrange(10, 45)):
+        pool = len(b.nl.gates)
+
+        def pick():
+            return rng.randrange(pool)
+
+        roll = rng.random()
+        if roll < 0.12:
+            b.not_(pick())
+        elif roll < 0.30:
+            (b.and_ if rng.random() < 0.5 else b.or_)(pick(), pick())
+        elif roll < 0.42:
+            b.xor(pick(), pick())
+        elif roll < 0.52:
+            b.mux(pick(), pick(), pick())
+        elif roll < 0.58:
+            w = b.wire()
+            b.connect(w, pick())
+        elif roll < 0.64:
+            b.constant(rng.random() < 0.5)
+        elif roll < 0.80:
+            rst = pick() if rng.random() < 0.5 else None
+            b.dff(pick(), rst, rng.random() < 0.5)
+        else:
+            kind = rng.choice(ALL_MACROS)
+            b.macro_inst(kind, [pick() for _ in kind.input_pins])
+    n = len(b.nl.gates)
+    if fb:
+        ds = [rng.randrange(n) for _ in fb]
+        rst = rng.randrange(n) if rng.random() < 0.5 else None
+        b.patch_dff_vec(fb, ds, rst, rng.randrange(16))
+    for k in range(rng.randrange(1, 5)):
+        nm = "OUT[0]" if (k == 0 and rng.random() < 0.25) else f"o{k}"
+        b.output(nm, rng.randrange(n))
+    return b.finish()
+
+
+# --------------------------------------------------------------------------
+# Checks.
+# --------------------------------------------------------------------------
+
+# (source, line, col, message substring) — positions must match the Rust
+# parser's unit/property tests exactly.
+REJECTION_CASES = [
+    # Dangling net: declared, never driven (position = the decl's name).
+    ("module t (\n  input wire clk,\n  input wire a\n);\n  wire n0;\n"
+     "  wire n1;\n  assign n0 = a;\nendmodule\n",
+     6, 8, "never driven"),
+    # Duplicate driver: position = the second statement's LHS.
+    ("module t (\n  input wire clk,\n  input wire a\n);\n  wire n0;\n"
+     "  assign n0 = a;\n  assign n0 = 1'b1;\nendmodule\n",
+     7, 10, "duplicate driver"),
+    # RHS names a port that was never declared.
+    ("module t (\n  input wire clk,\n  input wire a\n);\n  wire n0;\n"
+     "  assign n0 = b;\nendmodule\n",
+     6, 15, "unknown input port"),
+    # RHS references an undeclared net.
+    ("module t (\n  input wire clk,\n  input wire a\n);\n  wire n0;\n"
+     "  assign n0 = n4 & n0;\nendmodule\n",
+     6, 15, "undeclared net n4"),
+    # Declared input port never bound.
+    ("module t (\n  input wire clk,\n  input wire a,\n  input wire b\n);\n"
+     "  wire n0;\n  assign n0 = a;\nendmodule\n",
+     4, 14, "never bound"),
+    # Net declarations must be contiguous from n0.
+    ("module t (\n  input wire clk,\n  input wire a\n);\n  wire n1;\n"
+     "  assign n1 = a;\nendmodule\n",
+     5, 8, "contiguous"),
+    # Unknown macro cell name.
+    ("module t (\n  input wire clk,\n  input wire a\n);\n  wire n0;\n"
+     "  wire n1;\n  assign n0 = a;\n  bogus_cell m0 (.X(n0), .Y(n1));\nendmodule\n",
+     8, 3, "unknown macro cell"),
+    # Only 1'b0 / 1'b1 literals exist in the subset.
+    ("module t (\n  input wire clk,\n  input wire a\n);\n  wire n0;\n"
+     "  assign n0 = 2'b10;\nendmodule\n",
+     6, 15, "unexpected character"),
+    # Wrong pin name on a real cell.
+    ("module t (\n  input wire clk,\n  input wire a\n);\n  wire n0;\n"
+     "  wire n1;\n  assign n0 = a;\n"
+     "  pulse2edge m0 (.CLK(clk), .PULSES(n0), .GRST(n0), .EDGE(n1));\nendmodule\n",
+     8, 30, "expected pin .PULSE"),
+    # A wire cannot be driven by an always block.
+    ("module t (\n  input wire clk,\n  input wire a\n);\n  wire n0;\n"
+     "  always @(posedge clk) n0 <= n0;\nendmodule\n",
+     6, 25, "declared wire but driven by an always block"),
+    # The reset literal must match the reg initializer.
+    ("module t (\n  input wire clk,\n  input wire a\n);\n  reg n0 = 1'b0;\n"
+     "  always @(posedge clk) if (n0) n0 <= 1'b1; else n0 <= n0;\nendmodule\n",
+     6, 39, "disagrees"),
+]
+
+
+def check_rejections():
+    for case_no, (src, line, col, phrase) in enumerate(REJECTION_CASES):
+        try:
+            parse(src)
+        except VError as e:
+            assert (e.line, e.col) == (line, col), (
+                f"rejection case {case_no}: expected ({line},{col}), "
+                f"got ({e.line},{e.col}): {e.msg}"
+            )
+            assert phrase in e.msg, (
+                f"rejection case {case_no}: {phrase!r} not in {e.msg!r}"
+            )
+        else:
+            raise AssertionError(f"rejection case {case_no} parsed successfully")
+    print(f"  {len(REJECTION_CASES)} parser rejection cases at exact (line, col)")
+
+
+def check_emit_errors():
+    assert render_port("GRST") == "GRST"
+    assert render_port("IN[0]") == "\\IN[0] "
+    assert render_port("clk") == "\\clk "
+    assert render_port("wire") == "\\wire "
+    assert render_port("n5") == "\\n5 "
+    assert render_port("m12") == "\\m12 "
+    assert render_port("n5x") == "n5x"
+    for bad in ("has space", ""):
+        try:
+            render_port(bad)
+            raise AssertionError(f"render_port({bad!r}) did not fail")
+        except EmitError:
+            pass
+
+    b = NetBuilder("bad name")
+    b.output("x", b.input("a"))
+    try:
+        emit(b.finish())
+        raise AssertionError("bad module name emitted")
+    except EmitError as e:
+        assert "module name" in str(e)
+
+    b = NetBuilder("t")
+    b.output("dup", b.input("dup"))
+    try:
+        emit(b.finish())
+        raise AssertionError("duplicate port emitted")
+    except EmitError as e:
+        assert "duplicate port" in str(e)
+
+    nl = Netlist("t")
+    nl.gates = [("input",)]
+    try:
+        emit(nl)
+        raise AssertionError("unbound input gate emitted")
+    except EmitError as e:
+        assert "no port name" in str(e)
+    print("  emitter rejection + escaping contract")
+
+
+def check_roundtrip(nl, label):
+    text = emit(nl)
+    assert emit(nl) == text, f"{label}: emission not byte-deterministic"
+    pm = parse(text)
+    assert pm.netlist == nl, f"{label}: parse-back is not the exact netlist"
+    assert emit(pm.netlist) == text, f"{label}: emit-parse-emit is not a fixpoint"
+    for (name, i) in nl.inputs + nl.outputs:
+        assert pm.ports[name] == i, f"{label}: port map misses {name}"
+    return text
+
+
+CONFORMANCE_GEOMETRIES = [(82, 2), (16, 3), (7, 4), (33, 1)]
+
+
+def check_geometries():
+    for (p, q) in CONFORMANCE_GEOMETRIES:
+        nl = build_column(p, q, (p * 7) // 4)
+        verify(nl)
+        check_roundtrip(nl, f"column_{p}x{q}")
+        print(
+            f"  column_{p}x{q}: {len(nl.gates)} nets, {len(nl.macros)} macros "
+            "round-trip byte-exact"
+        )
+    # Sim differential on the smallest geometry: original vs parsed-back.
+    nl = build_column(7, 4, (7 * 7) // 4)
+    back = parse(emit(nl)).netlist
+    assert_sim_equal(nl, back, seed=0x7E57, cycles=16, label="column_7x4")
+    print("  column_7x4: 16-cycle sim differential (values + toggles)")
+
+
+def assert_sim_equal(a, b, seed, cycles, label):
+    sa, sb = Sim(a), Sim(b)
+    rng = random.Random(seed)
+    for t in range(cycles):
+        for (_, i) in a.inputs:
+            v = rng.random() < 0.3
+            sa.set_input(i, v)
+            sb.set_input(i, v)
+        sa.settle()
+        sb.settle()
+        assert sa.values == sb.values, f"{label}: value mismatch at cycle {t}"
+        sa.clock()
+        sb.clock()
+    assert sa.toggles == sb.toggles, f"{label}: toggle-count mismatch"
+
+
+def run_trial(trial, rng):
+    nl = random_netlist(rng, trial)
+    verify(nl)
+    check_roundtrip(nl, f"trial {trial}")
+    back = parse(emit(nl)).netlist
+    assert_sim_equal(nl, back, seed=trial * 31 + 7, cycles=24, label=f"trial {trial}")
+
+
+def check_golden(path):
+    nl = build_column(12, 2, (12 * 7) // 4)
+    text = emit(nl)
+    try:
+        with open(path, "r", encoding="utf-8") as f:
+            want = f.read()
+    except FileNotFoundError:
+        with open(path, "w", encoding="utf-8") as f:
+            f.write(text)
+        print(f"  blessed golden file {path} ({len(text)} bytes)")
+        return
+    assert text == want, (
+        f"{path} differs from the Python port's emission of column_12x2 — "
+        "the tnn7-v1 contract is frozen; regenerate only on an intentional "
+        "format change (delete the file and re-run, then re-bless the Rust "
+        "side with TNN7_BLESS=1)"
+    )
+    # The committed artifact parses back to the exact netlist here too.
+    assert parse(want).netlist == nl
+    print(f"  golden {path} matches byte-for-byte ({len(text)} bytes)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trials", type=int, default=400)
+    ap.add_argument("--seed", type=int, default=0xC0DE)
+    ap.add_argument("--golden", metavar="PATH", default=None,
+                    help="byte-compare (or create) the column_12x2 golden file")
+    args = ap.parse_args()
+
+    check_rejections()
+    check_emit_errors()
+    check_geometries()
+    if args.golden:
+        check_golden(args.golden)
+    for trial in range(args.trials):
+        rng = random.Random(args.seed + trial)
+        try:
+            run_trial(trial, rng)
+        except AssertionError as e:
+            print(f"FAIL trial {trial} (seed {args.seed + trial}): {e}", file=sys.stderr)
+            return 1
+        if (trial + 1) % 100 == 0:
+            print(f"  {trial + 1}/{args.trials} trials ok")
+    print(
+        f"PASS: {args.trials} round-trip trials + {len(REJECTION_CASES)} "
+        "rejection cases + conformance geometries"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
