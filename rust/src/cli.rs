@@ -127,11 +127,18 @@ pub const COMMANDS: &[CommandSpec] = &[
             "--stdin          pipe mode: requests `<id> <entry> <t1,...,tp>` on stdin",
             "                 (`-` = no spike), replies `<id> <winner|->` sorted by id",
             "--listen ADDR    socket mode: serve the same line protocol on a local",
-            "                 TCP address (e.g. 127.0.0.1:7411)",
+            "                 TCP address (e.g. 127.0.0.1:7411); `!drain` control line",
+            "                 stops accepting, flushes in-flight replies, and exits;",
+            "                 malformed lines reply `!parse` without killing the stream",
             "--quick          CI-speed bench (1-word lane blocks, small budgets)",
             "key=value        spec overrides: seed=, workers=, words=, threads=,",
             "                 engines=gate,golden, geometries=12x2,8x3, per_cluster=,",
             "                 requests=, patterns=steady,bursty,shuffled, capacity=,",
+            "                 queue_depth= (admission bound; full queue sheds with",
+            "                 `!overload`), deadline_ms= (expired requests reply",
+            "                 `!deadline`), max_connections=, read_timeout_ms=,",
+            "                 chaos=off|default|heavy (deterministic fault-injection",
+            "                 harness: writes BENCH_chaos.json + chaos_transcript.tsv),",
             "                 out_dir=",
         ],
     },
@@ -306,6 +313,11 @@ mod tests {
             "requests=8",
             "patterns=steady,bursty,shuffled",
             "capacity=8",
+            "queue_depth=16",
+            "deadline_ms=250",
+            "max_connections=4",
+            "read_timeout_ms=900",
+            "chaos=default",
             "out_dir=o",
         ] {
             spec.apply_overrides(&[kv.to_string()])

@@ -32,6 +32,7 @@ use crate::config::EngineKind;
 use crate::gates::artifact_cache::{design_handle, program_handle, ColumnProgram};
 use crate::gates::column_design::ColumnDesign;
 use crate::gates::compile::CompiledSim;
+use crate::gates::fault::GateFault;
 use crate::gates::gate_engine::compiled_inference_sweep;
 use crate::gates::opt::OptLevel;
 use crate::tnn::column::Column;
@@ -159,6 +160,34 @@ impl ServiceEngine {
     /// [`Engine::infer_winner`](super::Engine::infer_winner) calls on the
     /// same queries regardless of how arrivals were coalesced.
     pub fn infer_batch(&self, volleys: &[&[SpikeTime]]) -> crate::Result<Vec<Option<usize>>> {
+        self.infer_batch_inner(volleys, None)
+    }
+
+    /// Serve a coalesced batch with a gate-level fault held across the
+    /// pass — the chaos harness's injection hook. Only stuck-at faults
+    /// are supported (SEUs are cycle-addressed, which has no stable
+    /// meaning inside a dynamically-coalesced pass); the force is applied
+    /// to every lane word before the sweep and cleared before the
+    /// executor returns to the pool, so one faulted request can never
+    /// contaminate later passes. Behavioral kinds have no nets to fault:
+    /// the request runs clean (deterministically `Ok`), so a chaos
+    /// schedule stays worker-count-invariant on mixed registries.
+    pub fn infer_batch_faulted(
+        &self,
+        volleys: &[&[SpikeTime]],
+        fault: &GateFault,
+    ) -> crate::Result<Vec<Option<usize>>> {
+        let GateFault::StuckAt { .. } = fault else {
+            anyhow::bail!("only stuck-at faults can ride the serving path, got {fault:?}")
+        };
+        self.infer_batch_inner(volleys, Some(fault))
+    }
+
+    fn infer_batch_inner(
+        &self,
+        volleys: &[&[SpikeTime]],
+        fault: Option<&GateFault>,
+    ) -> crate::Result<Vec<Option<usize>>> {
         match &self.gate {
             Some(g) => {
                 // Per-request scratch: check an executor out of the pool
@@ -168,6 +197,17 @@ impl ServiceEngine {
                 let mut csim = checked_out.unwrap_or_else(|| {
                     CompiledSim::from_program(g.program.prog.clone(), g.words, g.threads)
                 });
+                if let Some(&GateFault::StuckAt { net, value }) = fault {
+                    anyhow::ensure!(
+                        (net as usize) < g.program.prog.net_count(),
+                        "fault net {net} out of range for program with {} nets",
+                        g.program.prog.net_count()
+                    );
+                    let (sa0, sa1) = if value { (0, u64::MAX) } else { (u64::MAX, 0) };
+                    for w in 0..g.words {
+                        csim.force_net_word(net, w, sa0, sa1);
+                    }
+                }
                 let winners = compiled_inference_sweep(
                     &g.program,
                     &mut csim,
@@ -176,6 +216,9 @@ impl ServiceEngine {
                     self.column.weights(),
                     volleys,
                 );
+                // Stuck-at forces survive reset_state by design; strip
+                // them before the executor goes back to the shared pool.
+                csim.clear_faults();
                 g.pool.lock().unwrap_or_else(|p| p.into_inner()).push(csim);
                 Ok(winners)
             }
@@ -184,6 +227,12 @@ impl ServiceEngine {
                 .map(|v| self.column.infer(v).winner)
                 .collect()),
         }
+    }
+
+    /// Nets in the gate path's compiled program (`None` for behavioral
+    /// kinds) — the sample space for chaos-injected stuck-at faults.
+    pub fn gate_net_count(&self) -> Option<usize> {
+        self.gate.as_ref().map(|g| g.program.prog.net_count())
     }
 
     /// Executors currently idle in the gate pool (0 for behavioral kinds);
@@ -256,6 +305,55 @@ mod tests {
         assert_eq!(svc.pooled_executors(), 1, "executor returned to pool");
         svc.infer_winner(&volley).unwrap();
         assert_eq!(svc.pooled_executors(), 1, "pooled executor was reused");
+    }
+
+    #[test]
+    fn faulted_inference_is_deterministic_and_never_pollutes_the_pool() {
+        let svc = ServiceEngine::new(
+            EngineKind::Gate,
+            6,
+            2,
+            7,
+            TnnParams::default(),
+            &[2u8; 12],
+            1,
+            1,
+        )
+        .unwrap();
+        let volley = vec![SpikeTime::at(3); 6];
+        let clean = svc.infer_winner(&volley).unwrap();
+        // Stuck-at-1 on neuron 0's spike output: it "fires" at cycle 0,
+        // so the earliest-spike WTA winner is forced to 0.
+        let prog = program_handle(6, 2, 7, OptLevel::Inference).unwrap();
+        let fault = GateFault::StuckAt {
+            net: prog.out_spike[0],
+            value: true,
+        };
+        let forced = svc.infer_batch_faulted(&[&volley], &fault).unwrap();
+        assert_eq!(forced, vec![Some(0)], "stuck-at-1 spike wins at cycle 0");
+        // The pooled executor must come back clean: the same volley on
+        // the normal path reproduces the unfaulted winner.
+        assert_eq!(svc.infer_winner(&volley).unwrap(), clean, "pool polluted");
+        assert_eq!(svc.gate_net_count(), Some(prog.prog.net_count()));
+        // SEU faults are cycle-addressed and rejected on this path.
+        let seu = GateFault::SeuNet { net: 0, cycle: 1 };
+        let err = svc.infer_batch_faulted(&[&volley], &seu).unwrap_err();
+        assert!(err.to_string().contains("stuck-at"), "{err}");
+        // Behavioral kinds have no nets: the fault is a clean no-op.
+        let golden = ServiceEngine::new(
+            EngineKind::Golden,
+            6,
+            2,
+            7,
+            TnnParams::default(),
+            &[2u8; 12],
+            1,
+            1,
+        )
+        .unwrap();
+        assert_eq!(golden.gate_net_count(), None);
+        let w = golden.infer_batch_faulted(&[&volley], &fault).unwrap();
+        assert_eq!(w[0], golden.infer_winner(&volley).unwrap());
     }
 
     #[test]

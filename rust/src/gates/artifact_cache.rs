@@ -19,13 +19,18 @@
 //! * **LRU eviction with a capacity knob** — inserting past capacity
 //!   evicts the least-recently-used entry ([`ShardedLruCache::set_capacity`]
 //!   resizes live; the serve spec's `capacity=` key feeds it).
-//! * **Memoized build failures** — a builder that panics (or errors) is
-//!   caught once and the failure stored under the key; every later caller
-//!   gets a clean `Err` instead of re-running the panicking build (the
-//!   old clear-poison-and-retry discipline turned one bad geometry into a
-//!   panic storm under a server). An evicted failure may be retried
-//!   later — deliberate, so transient conditions are not pinned forever —
-//!   but at most once per eviction cycle, never once per call.
+//! * **Memoized build failures, with a bounded retry budget** — a builder
+//!   that panics (or errors) is caught once and the failure stored under
+//!   the key; later callers get a clean `Err` instead of re-running the
+//!   panicking build (the old clear-poison-and-retry discipline turned
+//!   one bad geometry into a panic storm under a server). But a failure
+//!   is not pinned forever either: after
+//!   [`FAILURE_RETRY_BUDGET`] lookups the failed cell is evicted so the
+//!   next caller re-runs the build — an always-on server must eventually
+//!   recover from transient failures (OOM during compile, a capacity
+//!   blip) without a restart. [`ShardedLruCache::retry_failures`] drops
+//!   every memoized failure immediately for callers that know the
+//!   condition has cleared.
 //!
 //! The concrete caches live behind [`design_handle`] / [`program_handle`];
 //! the gate engine, the sweep executor (through [`GateColumn`]) and the
@@ -47,12 +52,21 @@ use super::compile::CompiledProgram;
 use super::netlist::NetId;
 use super::opt::{NetRemap, OptLevel, PassPipeline};
 
-/// One cache slot: the build cell every caller of the key shares, plus an
-/// LRU stamp bumped on every hit (atomically, so hits stay on the shard
-/// *read* lock).
+/// How many times a memoized build failure is served before the failed
+/// cell is evicted and the next lookup retries the build. High enough
+/// that a panicking geometry under request flood stays a trickle of
+/// retries, not a storm; low enough that a long-lived server recovers
+/// from transient build failures without a restart.
+pub const FAILURE_RETRY_BUDGET: u64 = 16;
+
+/// One cache slot: the build cell every caller of the key shares, an LRU
+/// stamp bumped on every hit (atomically, so hits stay on the shard
+/// *read* lock), and a count of how many times a memoized failure in the
+/// cell has been served (drives the retry budget).
 struct Slot<V> {
     cell: Arc<OnceLock<Result<Arc<V>, String>>>,
     last_used: Arc<AtomicU64>,
+    failure_hits: Arc<AtomicU64>,
 }
 
 /// A concurrent build-once cache: sharded `RwLock` map from key to
@@ -97,7 +111,9 @@ impl<K: Eq + Hash + Clone, V> ShardedLruCache<K, V> {
     /// build — the [`OnceLock`] serializes them and hands each the same
     /// `Arc`, so handles are pointer-identical until the entry is evicted.
     /// A build that returns `Err` or panics is memoized: later callers get
-    /// the stored error without re-running the build.
+    /// the stored error without re-running the build — until the failure
+    /// has been served [`FAILURE_RETRY_BUDGET`] times, at which point the
+    /// cell is evicted and the next lookup retries the build.
     pub fn get_or_build(
         &self,
         key: K,
@@ -106,40 +122,41 @@ impl<K: Eq + Hash + Clone, V> ShardedLruCache<K, V> {
         let stamp = self.clock.fetch_add(1, Ordering::Relaxed);
         let shard = &self.shards[self.shard_of(&key)];
         // Fast path: shard read lock, bump the LRU stamp atomically.
-        let cell = {
+        let found = {
             let map = shard.read().unwrap_or_else(|p| p.into_inner());
             map.get(&key).map(|s| {
                 s.last_used.store(stamp, Ordering::Relaxed);
-                s.cell.clone()
+                (s.cell.clone(), s.failure_hits.clone())
             })
         };
-        let cell = match cell {
-            Some(c) => c,
+        let (cell, failure_hits) = match found {
+            Some(f) => f,
             None => {
                 let mut map = shard.write().unwrap_or_else(|p| p.into_inner());
                 // Re-check under the write lock: a racing miss may have
                 // inserted the slot while we upgraded.
                 if let Some(s) = map.get(&key) {
                     s.last_used.store(stamp, Ordering::Relaxed);
-                    s.cell.clone()
+                    (s.cell.clone(), s.failure_hits.clone())
                 } else {
                     let slot = Slot {
                         cell: Arc::new(OnceLock::new()),
                         last_used: Arc::new(AtomicU64::new(stamp)),
+                        failure_hits: Arc::new(AtomicU64::new(0)),
                     };
-                    let cell = slot.cell.clone();
+                    let found = (slot.cell.clone(), slot.failure_hits.clone());
                     map.insert(key.clone(), slot);
                     drop(map);
                     self.len.fetch_add(1, Ordering::Relaxed);
                     self.evict_over_capacity(Some(&key));
-                    cell
+                    found
                 }
             }
         };
         // The build runs outside all shard locks, so building one key
         // never blocks hits (or builds) of other keys. A panic is caught
-        // and stored as the key's permanent (until eviction) result — the
-        // fix for the old interner's clear-poison-rebuild-repanic storm.
+        // and stored as the key's memoized result — the fix for the old
+        // interner's clear-poison-rebuild-repanic storm.
         let res = cell.get_or_init(|| {
             catch_unwind(AssertUnwindSafe(build))
                 .unwrap_or_else(|payload| {
@@ -149,8 +166,56 @@ impl<K: Eq + Hash + Clone, V> ShardedLruCache<K, V> {
         });
         match res {
             Ok(v) => Ok(v.clone()),
-            Err(e) => Err(e.clone()),
+            Err(e) => {
+                // Budget the memoization: once this failure has been
+                // served FAILURE_RETRY_BUDGET times (the building caller
+                // counts as the first), drop the cell so the next lookup
+                // retries the build.
+                if failure_hits.fetch_add(1, Ordering::Relaxed) + 1 >= FAILURE_RETRY_BUDGET {
+                    self.remove_if_same_failed_cell(&key, &cell);
+                }
+                Err(e.clone())
+            }
         }
+    }
+
+    /// Evict `key` iff its slot still holds exactly `cell` and that cell
+    /// memoizes a failure — never a concurrently rebuilt (or succeeding)
+    /// entry.
+    fn remove_if_same_failed_cell(&self, key: &K, cell: &Arc<OnceLock<Result<Arc<V>, String>>>) {
+        let shard = &self.shards[self.shard_of(key)];
+        let mut map = shard.write().unwrap_or_else(|p| p.into_inner());
+        let stale = map
+            .get(key)
+            .is_some_and(|s| Arc::ptr_eq(&s.cell, cell) && matches!(s.cell.get(), Some(Err(_))));
+        if stale {
+            map.remove(key);
+            self.len.fetch_sub(1, Ordering::Relaxed);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Drop every memoized build failure now (rather than waiting out
+    /// each cell's [`FAILURE_RETRY_BUDGET`]), so the next lookup of each
+    /// failed key re-runs its build. Returns how many failures were
+    /// dropped. Cells still mid-build are left alone.
+    pub fn retry_failures(&self) -> usize {
+        let mut dropped = 0;
+        for shard in &self.shards {
+            let mut map = shard.write().unwrap_or_else(|p| p.into_inner());
+            let failed: Vec<K> = map
+                .iter()
+                .filter(|(_, s)| matches!(s.cell.get(), Some(Err(_))))
+                .map(|(k, _)| k.clone())
+                .collect();
+            for k in failed {
+                map.remove(&k);
+                self.len.fetch_sub(1, Ordering::Relaxed);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+                dropped += 1;
+            }
+        }
+        dropped
     }
 
     /// Evict least-recently-used entries until `len <= capacity`, never
@@ -299,6 +364,12 @@ pub fn program_handle(
 pub fn set_cache_capacities(designs: usize, programs: usize) {
     design_cache().set_capacity(designs);
     program_cache().set_capacity(programs);
+}
+
+/// Drop every memoized build failure from both global caches (see
+/// [`ShardedLruCache::retry_failures`]). Returns how many were dropped.
+pub fn retry_cached_failures() -> usize {
+    design_cache().retry_failures() + program_cache().retry_failures()
 }
 
 /// Snapshot of the global caches, reported into `BENCH_serve.json`.
@@ -492,6 +563,50 @@ mod tests {
         assert_eq!(err_runs.load(Ordering::Relaxed), 1);
         // Failed entries occupy slots and are evictable like any other.
         assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn failure_memoization_has_a_bounded_retry_budget() {
+        // The always-on-server regression: a failure must not be pinned
+        // forever. After FAILURE_RETRY_BUDGET lookups the failed cell is
+        // evicted and the build re-runs — so a condition that has cleared
+        // (here: the builder succeeds on its third run) eventually serves
+        // real artifacts again without a process restart.
+        let cache: ShardedLruCache<u8, u8> = ShardedLruCache::new(2, 4);
+        let runs = AtomicUsize::new(0);
+        let budget = FAILURE_RETRY_BUDGET as usize;
+        let mut outcomes = Vec::new();
+        for _ in 0..(2 * budget + 1) {
+            let r = cache.get_or_build(7, || {
+                let n = runs.fetch_add(1, Ordering::Relaxed);
+                if n < 2 {
+                    Err("transient".to_string())
+                } else {
+                    Ok(42)
+                }
+            });
+            outcomes.push(r.is_ok());
+        }
+        // Lookups 1..=budget serve failure #1, lookup budget+1 retries
+        // (failure #2), lookups through 2*budget serve it, and lookup
+        // 2*budget+1 retries again — successfully this time.
+        assert_eq!(runs.load(Ordering::Relaxed), 3, "build ran once per budget window");
+        assert!(outcomes[..2 * budget].iter().all(|ok| !ok));
+        assert!(outcomes[2 * budget], "recovered after the budget elapsed");
+        assert_eq!(cache.get_or_build(7, || Err("never".into())), Ok(Arc::new(42)));
+    }
+
+    #[test]
+    fn retry_failures_drops_memoized_failures_immediately() {
+        let cache: ShardedLruCache<u8, u8> = ShardedLruCache::new(2, 8);
+        cache.get_or_build(1, || Ok(1)).unwrap();
+        cache.get_or_build(2, || Err("boom".into())).unwrap_err();
+        cache.get_or_build(3, || Err("boom".into())).unwrap_err();
+        assert_eq!(cache.retry_failures(), 2, "both failures dropped");
+        assert_eq!(cache.len(), 1, "the success stays cached");
+        // Next lookup of a dropped key re-runs the build.
+        assert_eq!(cache.get_or_build(2, || Ok(2)), Ok(Arc::new(2)));
+        assert_eq!(cache.retry_failures(), 0, "nothing failed anymore");
     }
 
     #[test]

@@ -377,7 +377,8 @@ fn parse_verilog(args: &[String]) -> tnn7::Result<()> {
 
 fn serve(args: &[String]) -> tnn7::Result<()> {
     use tnn7::serve::{
-        print_summary, run_bench, serve_lines, serve_socket, write_report, ServeSpec, Server,
+        print_chaos_summary, print_summary, run_bench, run_chaos, serve_lines, serve_socket,
+        write_chaos_report, write_report, ServeSpec, Server, SocketConfig,
     };
     let mut spec = if flag(args, "--quick") {
         ServeSpec::quick()
@@ -388,11 +389,36 @@ fn serve(args: &[String]) -> tnn7::Result<()> {
     if spec.capacity > 0 {
         tnn7::gates::artifact_cache::set_cache_capacities(spec.capacity, spec.capacity * 2);
     }
+    if spec.chaos != "off" {
+        // Chaos mode: the deterministic fault-injection harness. The
+        // verdict transcript is byte-stable at any worker count; a
+        // stranded rider (a request that never got a reply) fails the
+        // run — that is the invariant the harness exists to enforce.
+        let report = run_chaos(&spec)?;
+        print_chaos_summary(&report);
+        write_chaos_report(&spec, &report)?;
+        println!(
+            "wrote {} and {}",
+            spec.out_dir.join("BENCH_chaos.json").display(),
+            spec.out_dir.join("chaos_transcript.tsv").display()
+        );
+        anyhow::ensure!(
+            report.stranded == 0,
+            "{} riders never received a reply",
+            report.stranded
+        );
+        return Ok(());
+    }
     if flag(args, "--stdin") {
         // CI pipe mode: requests on stdin until EOF, replies (sorted by
         // request id, byte-stable at any worker count) on stdout.
         let server = Server::start(&spec)?;
-        let n = serve_lines(&server, std::io::stdin().lock(), std::io::stdout().lock())?;
+        let n = serve_lines(
+            &server,
+            std::io::stdin().lock(),
+            std::io::stdout().lock(),
+            spec.deadline_ms,
+        )?;
         eprintln!(
             "tnn7 serve: answered {n} requests in {} lane-block passes",
             server.batches()
@@ -402,7 +428,17 @@ fn serve(args: &[String]) -> tnn7::Result<()> {
     }
     if let Some(addr) = opt(args, "--listen") {
         let server = Server::start(&spec)?;
-        return serve_socket(&server, addr);
+        // Serve until a client sends the `!drain` control line (the
+        // graceful-shutdown signal; no signal-handling crate is
+        // vendored, so SIGINT still hard-kills). serve_socket stops
+        // accepting, flushes every open connection, and joins its
+        // threads; shutdown() then drains the in-flight queue.
+        let drain = std::sync::atomic::AtomicBool::new(false);
+        serve_socket(&server, addr, &drain, &SocketConfig::from_spec(&spec))?;
+        let c = server.counters();
+        eprintln!("tnn7 serve: drained ({})", c.summary());
+        server.shutdown();
+        return Ok(());
     }
     // Default: bench mode with the deterministic seeded client.
     let report = run_bench(&spec)?;

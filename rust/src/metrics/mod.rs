@@ -92,6 +92,46 @@ impl LatencyHistogram {
     }
 }
 
+/// Serving-resilience metrics bundle: one [`Counter`] per event the
+/// admission/supervision layer can take on a request, exported by
+/// `Server::counters` and folded into `BENCH_serve.json` /
+/// `BENCH_chaos.json`.
+#[derive(Debug, Default)]
+pub struct ServeCounters {
+    /// Requests accepted into the queue.
+    pub submitted: Counter,
+    /// Requests rejected at admission (queue full or forced shed).
+    pub shed: Counter,
+    /// Requests whose deadline had passed at dequeue (no batch slot burnt).
+    pub expired_dequeue: Counter,
+    /// Requests whose deadline passed while their batch was in flight.
+    pub expired_reply: Counter,
+    /// Batches that panicked under `catch_unwind` (riders got `!internal`).
+    pub batch_panics: Counter,
+    /// Workers respawned by the supervisor after a panic.
+    pub worker_respawns: Counter,
+    /// Requests pulled out of the queue into a batch.
+    pub dequeued: Counter,
+    /// Replies actually sent (every submitted request gets exactly one).
+    pub replies: Counter,
+}
+
+impl ServeCounters {
+    /// One-line snapshot for logs / the bench summary footer.
+    pub fn summary(&self) -> String {
+        format!(
+            "submitted {} shed {} expired {}+{} panics {} respawns {} replies {}",
+            self.submitted.get(),
+            self.shed.get(),
+            self.expired_dequeue.get(),
+            self.expired_reply.get(),
+            self.batch_panics.get(),
+            self.worker_respawns.get(),
+            self.replies.get(),
+        )
+    }
+}
+
 /// Coordinator metrics bundle.
 #[derive(Debug, Default)]
 pub struct StreamMetrics {
@@ -156,5 +196,21 @@ mod tests {
         m.processed.add(10);
         let s = m.summary(Duration::from_secs(1));
         assert!(s.contains("processed 10"));
+    }
+
+    #[test]
+    fn serve_counters_summary_renders_every_field() {
+        let c = ServeCounters::default();
+        c.submitted.add(9);
+        c.shed.inc();
+        c.batch_panics.inc();
+        c.worker_respawns.inc();
+        c.replies.add(9);
+        let s = c.summary();
+        assert!(s.contains("submitted 9"), "{s}");
+        assert!(s.contains("shed 1"), "{s}");
+        assert!(s.contains("panics 1"), "{s}");
+        assert!(s.contains("respawns 1"), "{s}");
+        assert!(s.contains("replies 9"), "{s}");
     }
 }

@@ -54,6 +54,27 @@ pub struct PatternStats {
     pub winners_match_sequential: bool,
 }
 
+/// The serving stack's resilience counters after a run (a plain-data
+/// snapshot of [`crate::metrics::ServeCounters`]). In a healthy bench
+/// run everything but `submitted`/`replies` is zero — nonzero shed or
+/// panic counts in `BENCH_serve.json` are the first thing to look at
+/// when a soak goes sideways.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ResilienceSnapshot {
+    /// Requests accepted into the queue.
+    pub submitted: u64,
+    /// Requests shed at admission (`!overload`).
+    pub shed: u64,
+    /// Requests whose deadline expired (at dequeue or at reply).
+    pub expired: u64,
+    /// Worker batches that panicked.
+    pub batch_panics: u64,
+    /// Workers the supervisor respawned.
+    pub worker_respawns: u64,
+    /// Replies delivered (success or typed error).
+    pub replies: u64,
+}
+
 /// Everything bench mode measures (and `BENCH_serve.json` records).
 #[derive(Clone, Debug)]
 pub struct ServeReport {
@@ -65,6 +86,8 @@ pub struct ServeReport {
     pub patterns: Vec<PatternStats>,
     /// Artifact-cache occupancy/evictions after the run.
     pub cache: CacheStats,
+    /// Resilience counters at the end of the run.
+    pub resilience: ResilienceSnapshot,
     /// TSV transcript, `pattern \t id \t entry \t winner` sorted by
     /// (pattern order, id) — byte-stable at any worker count; diffed
     /// against the committed golden in CI.
@@ -148,7 +171,15 @@ pub fn run_bench(spec: &ServeSpec) -> crate::Result<ServeReport> {
     }
 
     // --- the server under test -----------------------------------------
-    let server = Server::start(spec)?;
+    // The bench client floods each pattern's whole schedule up front, so
+    // admission control would shed most of it and the differential
+    // against the sequential reference would be vacuous. Bench mode
+    // therefore lifts the queue bound; shed/deadline behavior is
+    // exercised by the serving modes, the chaos harness, and the tests.
+    let mut bench_spec = spec.clone();
+    bench_spec.queue_depth = 0;
+    bench_spec.deadline_ms = 0;
+    let server = Server::start(&bench_spec)?;
     let entries: Vec<EntrySummary> = server
         .entries()
         .iter()
@@ -221,12 +252,22 @@ pub fn run_bench(spec: &ServeSpec) -> crate::Result<ServeReport> {
     }
 
     let cache = cache_stats();
+    let c = server.counters();
+    let resilience = ResilienceSnapshot {
+        submitted: c.submitted.get(),
+        shed: c.shed.get(),
+        expired: c.expired_dequeue.get() + c.expired_reply.get(),
+        batch_panics: c.batch_panics.get(),
+        worker_respawns: c.worker_respawns.get(),
+        replies: c.replies.get(),
+    };
     server.shutdown();
     Ok(ServeReport {
         spec: spec.clone(),
         entries,
         patterns,
         cache,
+        resilience,
         transcript,
     })
 }
@@ -267,6 +308,15 @@ pub fn print_summary(r: &ServeReport) {
         r.cache.design_capacity,
         r.cache.program_capacity,
         r.cache.evictions
+    );
+    println!(
+        "resilience: {} submitted, {} shed, {} expired, {} batch panics, {} respawns, {} replies",
+        r.resilience.submitted,
+        r.resilience.shed,
+        r.resilience.expired,
+        r.resilience.batch_panics,
+        r.resilience.worker_respawns,
+        r.resilience.replies
     );
 }
 
@@ -322,6 +372,19 @@ pub fn serve_json(r: &ServeReport) -> Json {
                 .set("design_capacity", r.cache.design_capacity)
                 .set("program_capacity", r.cache.program_capacity)
                 .set("evictions", Json::Int(r.cache.evictions as i64)),
+        )
+        .set(
+            "resilience",
+            Json::obj()
+                .set("submitted", Json::Int(r.resilience.submitted as i64))
+                .set("shed", Json::Int(r.resilience.shed as i64))
+                .set("expired", Json::Int(r.resilience.expired as i64))
+                .set("batch_panics", Json::Int(r.resilience.batch_panics as i64))
+                .set(
+                    "worker_respawns",
+                    Json::Int(r.resilience.worker_respawns as i64),
+                )
+                .set("replies", Json::Int(r.resilience.replies as i64)),
         )
 }
 
@@ -406,8 +469,17 @@ mod tests {
             "\"qps\"",
             "\"winners_match_sequential\"",
             "\"cache\"",
+            "\"resilience\"",
+            "\"batch_panics\"",
         ] {
             assert!(j.contains(key), "JSON missing {key}");
         }
+        // A clean bench run sheds, expires, and panics nothing.
+        assert_eq!(r.resilience.submitted, 3 * 24);
+        assert_eq!(r.resilience.replies, 3 * 24);
+        assert_eq!(r.resilience.shed, 0);
+        assert_eq!(r.resilience.expired, 0);
+        assert_eq!(r.resilience.batch_panics, 0);
+        assert_eq!(r.resilience.worker_respawns, 0);
     }
 }

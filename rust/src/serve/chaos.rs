@@ -1,0 +1,526 @@
+//! The deterministic chaos harness: scheduled failure injection across
+//! the whole serving path, with a verdict report that is bit-identical
+//! at any worker count.
+//!
+//! `tnn7 serve chaos=<spec>` drives the seeded client through a request
+//! stream in which specific request *indices* carry perturbations:
+//! worker panics, slow batches, forced admission sheds, pre-expired
+//! deadlines, malformed request lines, dropped reply channels, and
+//! gate-level stuck-at faults from [`crate::gates::fault`]. Every
+//! request ends in exactly one verdict — `shed`, `expired`, `errored`,
+//! `parse`, `dropped`, or `survived` — and the verdict transcript plus
+//! the per-category counts land in `BENCH_chaos.json` /
+//! `chaos_transcript.tsv`.
+//!
+//! **Determinism rule** (how chaos verdicts stay invariant under worker
+//! count, the property `tests/serve.rs` pins at 1/2/4 workers):
+//!
+//! 1. the event *schedule* is modular arithmetic on the request index
+//!    (`i % period == offset`, fixed priority order) — never an
+//!    occupancy or timing observation; event *parameters* (query, fault
+//!    net, line corruption) come from the frozen
+//!    [`Rng64::split_stream`](crate::util::Rng64::split_stream)
+//!    discipline, one stream per request index;
+//! 2. sheds are injector-forced at admission (the run disables the
+//!    occupancy bound), so whether a queue *happened* to be deep never
+//!    decides a verdict;
+//! 3. deadlines are pre-expired at submission (the deadline is the
+//!    submit-time instant), so expiry does not race the worker pool;
+//! 4. perturbing requests run as singleton batches (chaos isolation in
+//!    the coalescer), so a panic or fault can only ever affect its own
+//!    rider — verdicts never depend on batch composition, which is the
+//!    one thing that *does* vary with worker count.
+
+use super::proto::parse_request;
+use super::server::{ChaosAction, Reply, ServeError, Server, SubmitOpts};
+use super::ServeSpec;
+use crate::gates::fault::GateFault;
+use crate::util::json::Json;
+use crate::util::Rng64;
+use std::fmt::Write as _;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// The perturbation scheduled for one request index.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ChaosEvent {
+    /// No perturbation: a plain request.
+    None,
+    /// The serving batch panics under `catch_unwind`.
+    Panic,
+    /// Admission shed forced by the injector (`!overload` reply).
+    Shed,
+    /// Submitted with an already-expired deadline (`!deadline` reply).
+    Expire,
+    /// A deterministically corrupted request line through the parser.
+    Malformed,
+    /// The client drops its reply channel (simulated dead connection).
+    Drop,
+    /// The serving batch is stalled before execution.
+    Slow,
+    /// A gate-level stuck-at fault rides the serving pass.
+    Fault,
+}
+
+/// One category's schedule: fire at request indices `i` with
+/// `i % period == offset` (`period == 0` = never).
+type Cadence = (u64, u64);
+
+/// A named chaos schedule (`chaos=off|default|heavy`). Event categories
+/// are resolved in a fixed priority order when cadences collide on an
+/// index: panic > shed > expire > malformed > drop > slow > fault.
+#[derive(Clone, Debug)]
+pub struct ChaosSpec {
+    /// Canonical spelling (`off`/`default`/`heavy`).
+    pub name: &'static str,
+    panic: Cadence,
+    shed: Cadence,
+    expire: Cadence,
+    malformed: Cadence,
+    drop: Cadence,
+    slow: Cadence,
+    fault: Cadence,
+    /// Stall injected by [`ChaosEvent::Slow`] batches, in milliseconds.
+    pub slow_ms: u64,
+}
+
+impl ChaosSpec {
+    /// No injection (the implicit default of `tnn7 serve`).
+    pub fn off() -> ChaosSpec {
+        ChaosSpec {
+            name: "off",
+            panic: (0, 0),
+            shed: (0, 0),
+            expire: (0, 0),
+            malformed: (0, 0),
+            drop: (0, 0),
+            slow: (0, 0),
+            fault: (0, 0),
+            slow_ms: 0,
+        }
+    }
+
+    /// The standard soak: every category fires at least twice within the
+    /// quick spec's 96 requests (offsets chosen so the priority order
+    /// rarely has to break a tie).
+    pub fn default_spec() -> ChaosSpec {
+        ChaosSpec {
+            name: "default",
+            panic: (48, 13),
+            shed: (16, 5),
+            expire: (16, 9),
+            malformed: (24, 2),
+            drop: (24, 17),
+            slow: (48, 29),
+            fault: (12, 7),
+            slow_ms: 5,
+        }
+    }
+
+    /// Double-density schedule for longer soaks.
+    pub fn heavy() -> ChaosSpec {
+        ChaosSpec {
+            name: "heavy",
+            panic: (24, 13),
+            shed: (8, 5),
+            expire: (8, 1),
+            malformed: (12, 2),
+            drop: (12, 11),
+            // Not (24, 21): every 21 + 24k is ≡ 5 (mod 8), which the
+            // higher-priority shed cadence would swallow entirely.
+            slow: (24, 22),
+            fault: (6, 3),
+            slow_ms: 2,
+        }
+    }
+
+    /// Parse a `chaos=` spelling.
+    pub fn parse(s: &str) -> crate::Result<ChaosSpec> {
+        match s {
+            "off" => Ok(ChaosSpec::off()),
+            "default" => Ok(ChaosSpec::default_spec()),
+            "heavy" => Ok(ChaosSpec::heavy()),
+            other => anyhow::bail!("unknown chaos spec {other:?} (off|default|heavy)"),
+        }
+    }
+
+    /// The event scheduled for request index `i` (priority order breaks
+    /// cadence collisions).
+    pub fn event_at(&self, i: u64) -> ChaosEvent {
+        let hit = |(period, offset): Cadence| period > 0 && i % period == offset;
+        if hit(self.panic) {
+            ChaosEvent::Panic
+        } else if hit(self.shed) {
+            ChaosEvent::Shed
+        } else if hit(self.expire) {
+            ChaosEvent::Expire
+        } else if hit(self.malformed) {
+            ChaosEvent::Malformed
+        } else if hit(self.drop) {
+            ChaosEvent::Drop
+        } else if hit(self.slow) {
+            ChaosEvent::Slow
+        } else if hit(self.fault) {
+            ChaosEvent::Fault
+        } else {
+            ChaosEvent::None
+        }
+    }
+}
+
+/// Per-category verdict totals (each request lands in exactly one).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ChaosCounts {
+    /// Rejected at admission (`!overload`).
+    pub shed: u64,
+    /// Deadline verdicts (`!deadline`).
+    pub expired: u64,
+    /// Internal-error verdicts (panicked or failed batches).
+    pub errored: u64,
+    /// Malformed lines rejected by the parser.
+    pub parse_errors: u64,
+    /// Replies sent into a dropped channel (dead client).
+    pub dropped: u64,
+    /// Requests that got a winner.
+    pub survived: u64,
+}
+
+/// Everything one chaos run measures (and `BENCH_chaos.json` records).
+#[derive(Clone, Debug)]
+pub struct ChaosReport {
+    /// The chaos schedule name.
+    pub chaos: String,
+    /// Root seed of the run.
+    pub seed: u64,
+    /// Worker threads the run used (the transcript must not depend on it).
+    pub workers: usize,
+    /// Requests driven through the schedule.
+    pub requests: usize,
+    /// Verdict totals.
+    pub counts: ChaosCounts,
+    /// Batches that panicked under supervision.
+    pub batch_panics: u64,
+    /// Workers respawned by the supervisor.
+    pub worker_respawns: u64,
+    /// Requests that never received their reply (must be 0: the
+    /// no-stranded-rider invariant).
+    pub stranded: u64,
+    /// TSV transcript `id \t entry \t verdict \t detail`, sorted by id —
+    /// byte-identical at any worker count.
+    pub transcript: String,
+}
+
+/// One transcript row (intermediate; rows merge sorted by id).
+struct VerdictRow {
+    id: u64,
+    entry: String,
+    verdict: &'static str,
+    detail: String,
+}
+
+/// Build the deterministically corrupted request line for a
+/// [`ChaosEvent::Malformed`] index (corruption mode drawn from the
+/// request's own rng stream).
+fn corrupt_line(rng: &mut Rng64, id: u64, entry_name: &str, p: usize) -> String {
+    let volley: Vec<String> = (0..p).map(|k| (k % 4).to_string()).collect();
+    match rng.gen_range(0, 4) {
+        0 => format!("x{id} {entry_name} {}", volley.join(",")),
+        1 => format!("{id} ghost:9x9 {}", volley.join(",")),
+        2 => {
+            let mut v = volley;
+            let bad = rng.gen_range(0, v.len());
+            v[bad] = "zz".to_string();
+            format!("{id} {entry_name} {}", v.join(","))
+        }
+        _ => format!("{id} {entry_name}"),
+    }
+}
+
+/// Run the chaos soak: drive `spec.requests` scheduled requests through
+/// a live server and reduce every outcome to a verdict row. The serve
+/// spec's `chaos` key names the schedule (must not be `off`). The
+/// occupancy bound is disabled for the run (rule 2 of the module docs);
+/// sheds are injector-forced instead.
+pub fn run_chaos(spec: &ServeSpec) -> crate::Result<ChaosReport> {
+    spec.validate()?;
+    let chaos = ChaosSpec::parse(&spec.chaos)?;
+    anyhow::ensure!(
+        chaos.name != "off",
+        "chaos mode needs a schedule: chaos=default|heavy"
+    );
+    let mut sspec = spec.clone();
+    sspec.queue_depth = 0; // occupancy is timing; chaos sheds are forced
+    let server = Server::start(&sspec)?;
+    let n_entries = server.entries().len();
+    let pools: Vec<usize> = server.entries().iter().map(|e| e.queries.len()).collect();
+    let names: Vec<String> = server.entries().iter().map(|e| e.name.clone()).collect();
+    let gate_entries: Vec<usize> = server
+        .entries()
+        .iter()
+        .enumerate()
+        .filter(|(_, e)| e.service.gate_net_count().is_some())
+        .map(|(i, _)| i)
+        .collect();
+
+    let root = Rng64::seed_from_u64(spec.seed ^ 0xC4A0_55ED);
+    let (tx, rx) = mpsc::channel::<Reply>();
+    let mut rows: Vec<VerdictRow> = Vec::new(); // verdicts decided injector-side
+    let mut expected = 0usize; // replies owed on the shared channel
+
+    for i in 0..spec.requests as u64 {
+        let mut rng = root.split_stream(i);
+        let mut event = chaos.event_at(i);
+        if event == ChaosEvent::Fault && gate_entries.is_empty() {
+            event = ChaosEvent::None; // no nets to fault in this registry
+        }
+        let e = if event == ChaosEvent::Fault {
+            gate_entries[i as usize % gate_entries.len()]
+        } else {
+            i as usize % n_entries
+        };
+        let qi = rng.gen_range(0, pools[e]);
+        let volley = server.entries()[e].queries[qi].clone();
+        let mut opts = SubmitOpts::default();
+        match event {
+            ChaosEvent::Malformed => {
+                let line = corrupt_line(&mut rng, i, &names[e], volley.len());
+                let err = parse_request(&server, &line)
+                    .err()
+                    .map_or_else(|| "corrupt line parsed cleanly".to_string(), |e| e.to_string());
+                rows.push(VerdictRow {
+                    id: i,
+                    entry: names[e].clone(),
+                    verdict: "parse",
+                    detail: err,
+                });
+                continue;
+            }
+            ChaosEvent::Drop => {
+                // Simulated dead connection: the reply lands in a dropped
+                // channel (its send is a no-op the worker must survive).
+                let (dtx, drx) = mpsc::channel::<Reply>();
+                server.submit(i, e, volley, dtx)?;
+                drop(drx);
+                rows.push(VerdictRow {
+                    id: i,
+                    entry: names[e].clone(),
+                    verdict: "dropped",
+                    detail: "-".to_string(),
+                });
+                continue;
+            }
+            ChaosEvent::Shed => opts.force_shed = true,
+            ChaosEvent::Expire => opts.deadline = Some(Instant::now()),
+            ChaosEvent::Panic => opts.chaos = Some(ChaosAction::Panic),
+            ChaosEvent::Slow => {
+                opts.chaos = Some(ChaosAction::Slow(Duration::from_millis(chaos.slow_ms)));
+            }
+            ChaosEvent::Fault => {
+                let nets = server.entries()[e]
+                    .service
+                    .gate_net_count()
+                    .expect("gate entry has nets");
+                opts.chaos = Some(ChaosAction::Fault(GateFault::StuckAt {
+                    net: rng.gen_range(0, nets) as u32,
+                    value: rng.gen_range(0, 2) == 1,
+                }));
+            }
+            ChaosEvent::None => {}
+        }
+        server.submit_with(i, e, volley, tx.clone(), opts)?;
+        expected += 1;
+    }
+    drop(tx);
+
+    // Collect with a hang guard: a stranded rider (the bug class the
+    // supervision layer exists to prevent) surfaces as a nonzero
+    // `stranded` count instead of a hung run.
+    let mut replies: Vec<Reply> = Vec::with_capacity(expected);
+    while replies.len() < expected {
+        match rx.recv_timeout(Duration::from_secs(60)) {
+            Ok(r) => replies.push(r),
+            Err(_) => break,
+        }
+    }
+    let stranded = (expected - replies.len()) as u64;
+
+    let mut counts = ChaosCounts {
+        parse_errors: rows.iter().filter(|r| r.verdict == "parse").count() as u64,
+        dropped: rows.iter().filter(|r| r.verdict == "dropped").count() as u64,
+        ..ChaosCounts::default()
+    };
+    for r in &replies {
+        let (verdict, detail) = match &r.outcome {
+            Ok(w) => {
+                counts.survived += 1;
+                (
+                    "survived",
+                    w.map_or_else(|| "-".to_string(), |i| i.to_string()),
+                )
+            }
+            Err(e @ ServeError::Overload) => {
+                counts.shed += 1;
+                ("shed", e.to_string())
+            }
+            Err(e @ ServeError::Deadline) => {
+                counts.expired += 1;
+                ("expired", e.to_string())
+            }
+            Err(e @ (ServeError::Parse(_) | ServeError::Internal(_))) => {
+                counts.errored += 1;
+                ("errored", e.to_string())
+            }
+        };
+        rows.push(VerdictRow {
+            id: r.id,
+            entry: names[r.entry].clone(),
+            verdict,
+            detail,
+        });
+    }
+    rows.sort_by_key(|r| r.id);
+    let mut transcript = String::new();
+    for r in &rows {
+        let _ = writeln!(transcript, "{}\t{}\t{}\t{}", r.id, r.entry, r.verdict, r.detail);
+    }
+
+    // The panic counter is final once every reply is in (no queued work
+    // can panic after its reply); the respawn counter trails it by the
+    // supervisor's event handling, so give it a bounded moment to settle.
+    let t0 = Instant::now();
+    while server.counters().worker_respawns.get() < server.counters().batch_panics.get()
+        && t0.elapsed() < Duration::from_secs(10)
+    {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let batch_panics = server.counters().batch_panics.get();
+    let worker_respawns = server.counters().worker_respawns.get();
+    server.shutdown();
+
+    Ok(ChaosReport {
+        chaos: chaos.name.to_string(),
+        seed: spec.seed,
+        workers: spec.workers,
+        requests: spec.requests,
+        counts,
+        batch_panics,
+        worker_respawns,
+        stranded,
+        transcript,
+    })
+}
+
+/// Print a [`ChaosReport`] summary (the CI smoke greps the `survived`
+/// and `stranded` figures from these lines).
+pub fn print_chaos_summary(r: &ChaosReport) {
+    println!(
+        "tnn7 serve chaos: spec {}, seed {}, {} requests, {} workers",
+        r.chaos, r.seed, r.requests, r.workers
+    );
+    println!(
+        "verdicts: shed {} expired {} errored {} parse {} dropped {} survived {}",
+        r.counts.shed,
+        r.counts.expired,
+        r.counts.errored,
+        r.counts.parse_errors,
+        r.counts.dropped,
+        r.counts.survived
+    );
+    println!(
+        "supervision: batch panics {}, worker respawns {}, stranded {}",
+        r.batch_panics, r.worker_respawns, r.stranded
+    );
+}
+
+/// JSON payload of a [`ChaosReport`] (`BENCH_chaos.json`).
+pub fn chaos_json(r: &ChaosReport) -> Json {
+    Json::obj()
+        .set("chaos", r.chaos.as_str())
+        .set("seed", Json::Int(r.seed as i64))
+        .set("workers", r.workers)
+        .set("requests", r.requests)
+        .set(
+            "counts",
+            Json::obj()
+                .set("shed", Json::Int(r.counts.shed as i64))
+                .set("expired", Json::Int(r.counts.expired as i64))
+                .set("errored", Json::Int(r.counts.errored as i64))
+                .set("parse_errors", Json::Int(r.counts.parse_errors as i64))
+                .set("dropped", Json::Int(r.counts.dropped as i64))
+                .set("survived", Json::Int(r.counts.survived as i64)),
+        )
+        .set(
+            "supervision",
+            Json::obj()
+                .set("batch_panics", Json::Int(r.batch_panics as i64))
+                .set("worker_respawns", Json::Int(r.worker_respawns as i64)),
+        )
+        .set("stranded", Json::Int(r.stranded as i64))
+}
+
+/// Write `BENCH_chaos.json` and `chaos_transcript.tsv` into `spec`'s
+/// `out_dir` (created if missing).
+pub fn write_chaos_report(spec: &ServeSpec, r: &ChaosReport) -> crate::Result<()> {
+    std::fs::create_dir_all(&spec.out_dir)?;
+    std::fs::write(
+        spec.out_dir.join("BENCH_chaos.json"),
+        chaos_json(r).to_pretty(),
+    )?;
+    std::fs::write(spec.out_dir.join("chaos_transcript.tsv"), &r.transcript)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedules_parse_and_cover_every_category_in_a_quick_run() {
+        for (name, spec) in [
+            ("default", ChaosSpec::default_spec()),
+            ("heavy", ChaosSpec::heavy()),
+        ] {
+            assert_eq!(ChaosSpec::parse(name).unwrap().name, name);
+            let mut seen = std::collections::HashMap::new();
+            for i in 0..96 {
+                *seen.entry(spec.event_at(i)).or_insert(0u32) += 1;
+            }
+            for ev in [
+                ChaosEvent::None,
+                ChaosEvent::Panic,
+                ChaosEvent::Shed,
+                ChaosEvent::Expire,
+                ChaosEvent::Malformed,
+                ChaosEvent::Drop,
+                ChaosEvent::Slow,
+                ChaosEvent::Fault,
+            ] {
+                assert!(
+                    seen.get(&ev).copied().unwrap_or(0) >= 2,
+                    "{name}: event {ev:?} fires < 2 times in 96 requests: {seen:?}"
+                );
+            }
+        }
+        let off = ChaosSpec::parse("off").unwrap();
+        assert!((0..1000).all(|i| off.event_at(i) == ChaosEvent::None));
+        assert!(ChaosSpec::parse("wat").is_err());
+    }
+
+    #[test]
+    fn default_schedule_is_frozen() {
+        // The committed CI verdict counts depend on these exact indices;
+        // changing the cadences is a breaking change to the soak.
+        let spec = ChaosSpec::default_spec();
+        assert_eq!(spec.event_at(13), ChaosEvent::Panic);
+        assert_eq!(spec.event_at(5), ChaosEvent::Shed);
+        assert_eq!(spec.event_at(9), ChaosEvent::Expire);
+        assert_eq!(spec.event_at(2), ChaosEvent::Malformed);
+        assert_eq!(spec.event_at(17), ChaosEvent::Drop);
+        assert_eq!(spec.event_at(29), ChaosEvent::Slow);
+        assert_eq!(spec.event_at(7), ChaosEvent::Fault);
+        assert_eq!(spec.event_at(0), ChaosEvent::None);
+        // Collision resolution: 41 hits both expire (41 % 16 == 9) and
+        // drop (41 % 24 == 17); expire outranks drop.
+        assert_eq!(spec.event_at(41), ChaosEvent::Expire);
+    }
+}

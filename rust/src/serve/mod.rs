@@ -34,14 +34,31 @@
 //! deterministically trained from `seed` via the frozen `split_stream`
 //! discipline — so the whole service, including its committed golden
 //! transcript, reproduces from the printed seed alone.
+//!
+//! **Resilience** (the always-on hardening layered over that lifecycle):
+//! admission control sheds past `queue_depth` with `!overload`,
+//! per-request deadlines reply `!deadline` at dequeue or reply time,
+//! every batch runs under `catch_unwind` with the supervisor respawning
+//! panicked workers (riders get `!internal`, never a stranded channel),
+//! and the socket listener takes a drain signal, a connection cap and
+//! per-connection read timeouts. The [`chaos`] module soaks all of it
+//! deterministically; `tests/serve.rs` pins the verdict transcript
+//! bit-identical at 1/2/4 workers.
 
 mod bench;
+pub mod chaos;
 mod proto;
 mod server;
 
-pub use bench::{print_summary, run_bench, serve_json, write_report, EntrySummary, PatternStats, ServeReport};
-pub use proto::{parse_request, serve_lines, serve_socket};
-pub use server::{build_entry_engine, Reply, ServeEntry, Server};
+pub use bench::{
+    print_summary, run_bench, serve_json, write_report, EntrySummary, PatternStats,
+    ResilienceSnapshot, ServeReport,
+};
+pub use chaos::{print_chaos_summary, run_chaos, write_chaos_report, ChaosReport, ChaosSpec};
+pub use proto::{parse_request, serve_lines, serve_socket, serve_socket_on, SocketConfig};
+pub use server::{
+    build_entry_engine, ChaosAction, Reply, ServeEntry, ServeError, Server, SubmitOpts,
+};
 
 use crate::config::EngineKind;
 use crate::util::kv::KvDoc;
@@ -111,6 +128,25 @@ pub struct ServeSpec {
     /// Artifact-cache capacity override (0 = keep the global defaults);
     /// applied to the design cache, with 2× for the program cache.
     pub capacity: usize,
+    /// Admission bound: queued requests beyond this are shed with an
+    /// `!overload` reply (0 = unbounded). The default is far above the
+    /// bench client's burst sizes, so shedding never perturbs the
+    /// committed golden transcript.
+    pub queue_depth: usize,
+    /// Per-request deadline budget in ms stamped on pipe/socket
+    /// submissions (0 = no deadline). Expired requests reply
+    /// `!deadline`. Bench mode ignores it (the flood client would
+    /// expire its own differential).
+    pub deadline_ms: u64,
+    /// Concurrent socket connections accepted before new clients get an
+    /// immediate `!overload` and a close.
+    pub max_connections: usize,
+    /// Per-connection socket read timeout in ms; a client that sends
+    /// nothing for this long is disconnected (0 = no timeout).
+    pub read_timeout_ms: u64,
+    /// Chaos schedule name (`off`/`default`/`heavy`); anything but `off`
+    /// switches `tnn7 serve` into the chaos-soak mode.
+    pub chaos: String,
     /// Output directory for `BENCH_serve.json` + `serve_transcript.tsv`.
     pub out_dir: PathBuf,
 }
@@ -132,6 +168,11 @@ impl Default for ServeSpec {
                 ArrivalPattern::Shuffled,
             ],
             capacity: 0,
+            queue_depth: 1024,
+            deadline_ms: 0,
+            max_connections: 32,
+            read_timeout_ms: 5000,
+            chaos: "off".to_string(),
             out_dir: PathBuf::from("."),
         }
     }
@@ -192,6 +233,21 @@ impl ServeSpec {
         if let Some(v) = doc.get_usize("capacity")? {
             c.capacity = v;
         }
+        if let Some(v) = doc.get_usize("queue_depth")? {
+            c.queue_depth = v;
+        }
+        if let Some(v) = doc.get_u64("deadline_ms")? {
+            c.deadline_ms = v;
+        }
+        if let Some(v) = doc.get_usize("max_connections")? {
+            c.max_connections = v;
+        }
+        if let Some(v) = doc.get_u64("read_timeout_ms")? {
+            c.read_timeout_ms = v;
+        }
+        if let Some(v) = doc.get("chaos") {
+            c.chaos = v.to_string();
+        }
         if let Some(v) = doc.get("out_dir") {
             c.out_dir = PathBuf::from(v);
         }
@@ -222,6 +278,11 @@ impl ServeSpec {
                 "requests" => self.requests = merged.requests,
                 "patterns" => self.patterns = merged.patterns.clone(),
                 "capacity" => self.capacity = merged.capacity,
+                "queue_depth" => self.queue_depth = merged.queue_depth,
+                "deadline_ms" => self.deadline_ms = merged.deadline_ms,
+                "max_connections" => self.max_connections = merged.max_connections,
+                "read_timeout_ms" => self.read_timeout_ms = merged.read_timeout_ms,
+                "chaos" => self.chaos = merged.chaos.clone(),
                 "out_dir" => self.out_dir = merged.out_dir.clone(),
                 other => anyhow::bail!("unknown serve key {other:?}"),
             }
@@ -248,6 +309,11 @@ impl ServeSpec {
         anyhow::ensure!(self.per_cluster >= 2, "per_cluster must be >= 2");
         anyhow::ensure!(self.requests >= 1, "requests must be >= 1");
         anyhow::ensure!(!self.patterns.is_empty(), "patterns must be non-empty");
+        anyhow::ensure!(
+            self.max_connections >= 1,
+            "max_connections must be >= 1"
+        );
+        chaos::ChaosSpec::parse(&self.chaos)?;
         Ok(())
     }
 }
@@ -286,6 +352,11 @@ mod tests {
             "geometries=4x2,6x3".into(),
             "patterns=bursty".into(),
             "capacity=8".into(),
+            "queue_depth=16".into(),
+            "deadline_ms=250".into(),
+            "max_connections=4".into(),
+            "read_timeout_ms=900".into(),
+            "chaos=default".into(),
             "out_dir=target/serve".into(),
         ])
         .unwrap();
@@ -295,7 +366,13 @@ mod tests {
         assert_eq!(s.geometries, vec![(4, 2), (6, 3)]);
         assert_eq!(s.patterns, vec![ArrivalPattern::Bursty]);
         assert_eq!(s.capacity, 8);
+        assert_eq!(s.queue_depth, 16);
+        assert_eq!(s.deadline_ms, 250);
+        assert_eq!(s.max_connections, 4);
+        assert_eq!(s.read_timeout_ms, 900);
+        assert_eq!(s.chaos, "default");
         assert_eq!(s.out_dir, PathBuf::from("target/serve"));
+        s.apply_overrides(&["chaos=off".into()]).unwrap();
         assert_eq!(
             s.requests,
             ServeSpec::quick().requests,
@@ -309,6 +386,10 @@ mod tests {
         assert!(err.to_string().contains("cannot be served"));
         let err = s.apply_overrides(&["patterns=diurnal".into()]).unwrap_err();
         assert!(err.to_string().contains("unknown arrival pattern"));
+        let err = s.apply_overrides(&["chaos=mayhem".into()]).unwrap_err();
+        assert!(err.to_string().contains("unknown chaos spec"));
+        let err = s.apply_overrides(&["max_connections=0".into()]).unwrap_err();
+        assert!(err.to_string().contains("max_connections"));
     }
 
     #[test]

@@ -8,16 +8,36 @@
 //!     that line), e.g. `1,-,2,0`.
 //!
 //! Reply line:  `<id> <winner>` where `winner` is the WTA neuron index or
-//! `-` when no neuron fired; a failed request replies `<id> !<error>`.
+//! `-` when no neuron fired; a failed request replies `<id> !<error>`
+//! (typed: `!overload`, `!deadline`, `!parse: …`, `!internal: …`).
 //!
-//! Replies are emitted sorted by request id, so the output byte stream is
-//! identical at any worker count — the property the CI smoke pins by
-//! diffing 1/2/4-worker transcripts.
+//! **Malformed lines never kill a stream**: a line that fails to parse
+//! replies `<id> !parse: <error>` when the id token is recoverable, or a
+//! bare `!parse` line when it is not, and the connection stays alive —
+//! one garbled client line can't take down the exchange.
+//!
+//! Replies are emitted sorted by request id (id-less `!parse` lines
+//! first, in input order), so the output byte stream is identical at any
+//! worker count — the property the CI smoke pins by diffing 1/2/4-worker
+//! transcripts.
+//!
+//! **Socket hardening** ([`serve_socket`]): a drain signal (set by the
+//! `!drain` control line, or programmatically in lieu of SIGINT — this
+//! build vendors no signal-handling crate) stops the accept loop, lets
+//! every open connection flush its in-flight replies, and joins the
+//! connection threads; a concurrent-connection cap answers excess
+//! clients `!overload` and closes them; per-connection read timeouts
+//! disconnect clients that stall mid-stream so one slow peer can't pin a
+//! scoped thread forever.
 
-use super::server::{Reply, Server};
+use super::server::{Reply, ServeError, Server, SubmitOpts};
+use super::ServeSpec;
 use crate::tnn::spike::SpikeTime;
-use std::io::{BufRead, Write};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
+use std::time::{Duration, Instant};
 
 /// Parse one request line against `server`'s registry. Returns
 /// `(id, entry index, volley)`.
@@ -68,73 +88,274 @@ fn format_reply(r: &Reply) -> String {
     }
 }
 
+/// Recover the id token from a line that failed to parse (so the error
+/// reply can still be addressed to it).
+fn recover_id(line: &str) -> Option<u64> {
+    line.split_whitespace().next()?.parse().ok()
+}
+
+/// Per-exchange line intake shared by the pipe and socket paths: feeds
+/// well-formed lines to the server, converts malformed ones into local
+/// `!parse` replies, and flushes everything id-sorted at the end.
+struct LineSink {
+    tx: mpsc::Sender<Reply>,
+    /// Parse-failure replies with a recoverable id (merged into the
+    /// id-sorted output).
+    local: Vec<Reply>,
+    /// Bare `!parse` lines for id-less garbage, kept in input order.
+    noid: Vec<String>,
+    submitted: u64,
+}
+
+impl LineSink {
+    fn new(tx: mpsc::Sender<Reply>) -> LineSink {
+        LineSink {
+            tx,
+            local: Vec::new(),
+            noid: Vec::new(),
+            submitted: 0,
+        }
+    }
+
+    fn parse_reply(id: u64, msg: String) -> Reply {
+        Reply {
+            id,
+            entry: usize::MAX, // never reached the registry
+            outcome: Err(ServeError::Parse(msg)),
+            latency: Duration::ZERO,
+            batch: 0,
+        }
+    }
+
+    /// Handle one raw input line (blank and `#` comment lines are
+    /// skipped). A malformed line becomes a local parse reply; the
+    /// stream stays alive.
+    fn handle(&mut self, server: &Server, line: &str, deadline: Option<Duration>) {
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            return;
+        }
+        match parse_request(server, t) {
+            Ok((id, entry, volley)) => {
+                let opts = SubmitOpts {
+                    deadline: deadline.map(|d| Instant::now() + d),
+                    ..SubmitOpts::default()
+                };
+                match server.submit_with(id, entry, volley, self.tx.clone(), opts) {
+                    Ok(_) => self.submitted += 1,
+                    // Post-parse rejections (e.g. volley length != p) are
+                    // still client-side defects of this one request.
+                    Err(e) => self.local.push(Self::parse_reply(id, e.to_string())),
+                }
+            }
+            Err(e) => match recover_id(t) {
+                Some(id) => self.local.push(Self::parse_reply(id, e.to_string())),
+                None => self.noid.push("!parse".to_string()),
+            },
+        }
+    }
+
+    /// Await every in-flight reply, merge the local parse replies, and
+    /// write the exchange's output: id-less `!parse` lines first (input
+    /// order), then one reply line per request sorted by id. Returns the
+    /// number of lines answered.
+    fn finish(self, rx: mpsc::Receiver<Reply>, mut writer: impl Write) -> crate::Result<u64> {
+        let LineSink {
+            tx,
+            mut local,
+            noid,
+            submitted,
+        } = self;
+        // Our clone of the sender is gone; the channel closes once every
+        // in-flight request has replied.
+        drop(tx);
+        let mut replies: Vec<Reply> = rx.iter().collect();
+        debug_assert_eq!(replies.len() as u64, submitted);
+        replies.append(&mut local);
+        replies.sort_by_key(|r| r.id);
+        for line in &noid {
+            writeln!(writer, "{line}")?;
+        }
+        for r in &replies {
+            writeln!(writer, "{}", format_reply(r))?;
+        }
+        writer.flush()?;
+        Ok(replies.len() as u64 + noid.len() as u64)
+    }
+}
+
 /// Pipe mode: read request lines from `reader` until EOF, serve them all
 /// through `server`, and write one reply line per request to `writer`,
 /// sorted by request id (byte-stable at any worker count). Returns the
-/// number of requests served. Blank lines and `#` comments are skipped;
-/// a malformed line fails the whole stream (the pipe is a CI artifact,
-/// not untrusted input).
+/// number of lines answered (served + parse failures). Blank lines and
+/// `#` comments are skipped; malformed lines get `!parse` replies
+/// without killing the stream. `deadline_ms > 0` stamps every request
+/// with a deadline that far in the future.
 pub fn serve_lines(
     server: &Server,
     reader: impl BufRead,
-    mut writer: impl Write,
+    writer: impl Write,
+    deadline_ms: u64,
 ) -> crate::Result<u64> {
+    let deadline = (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms));
     let (tx, rx) = mpsc::channel();
-    let mut submitted = 0u64;
+    let mut sink = LineSink::new(tx);
     for line in reader.lines() {
-        let line = line?;
-        let t = line.trim();
-        if t.is_empty() || t.starts_with('#') {
-            continue;
-        }
-        let (id, entry, volley) = parse_request(server, t)?;
-        server.submit(id, entry, volley, tx.clone())?;
-        submitted += 1;
+        sink.handle(server, &line?, deadline);
     }
-    // Our clone of the sender is gone; the channel closes once every
-    // in-flight request has replied.
-    drop(tx);
-    let mut replies: Vec<Reply> = rx.iter().collect();
-    debug_assert_eq!(replies.len() as u64, submitted);
-    replies.sort_by_key(|r| r.id);
-    for r in &replies {
-        writeln!(writer, "{}", format_reply(r))?;
-    }
-    writer.flush()?;
-    Ok(submitted)
+    sink.finish(rx, writer)
 }
 
-/// Socket mode: bind `addr` (e.g. `127.0.0.1:7411`) and serve forever,
-/// one [`serve_lines`] exchange per connection (concurrent connections
-/// each get their own thread; they share the server's worker pool and
-/// coalesce into each other's lane blocks). Never returns except on a
-/// bind/accept error.
-pub fn serve_socket(server: &Server, addr: &str) -> crate::Result<()> {
-    let listener = std::net::TcpListener::bind(addr)
-        .map_err(|e| anyhow::anyhow!("cannot bind {addr}: {e}"))?;
+/// Socket-mode hardening knobs (see [`ServeSpec`] for the kv surface).
+#[derive(Clone, Debug)]
+pub struct SocketConfig {
+    /// Concurrent connections served before new clients are answered
+    /// `!overload` and closed.
+    pub max_connections: usize,
+    /// Per-connection read timeout; a client silent for this long is
+    /// disconnected (its in-flight replies still flush).
+    /// `Duration::ZERO` = no timeout (a stalled client then also stalls
+    /// drain for its connection — prefer a finite timeout).
+    pub read_timeout: Duration,
+    /// Per-request deadline budget in ms stamped on socket submissions
+    /// (0 = none).
+    pub deadline_ms: u64,
+}
+
+impl SocketConfig {
+    /// Lift the socket knobs out of a [`ServeSpec`].
+    pub fn from_spec(spec: &ServeSpec) -> SocketConfig {
+        SocketConfig {
+            max_connections: spec.max_connections.max(1),
+            read_timeout: Duration::from_millis(spec.read_timeout_ms),
+            deadline_ms: spec.deadline_ms,
+        }
+    }
+}
+
+/// One connection's exchange: read lines until EOF, a read timeout, or
+/// drain; then flush the id-sorted replies and close. The `!drain`
+/// control line initiates a server-wide graceful drain (the socket
+/// stand-in for SIGINT: no signal-handling crate is vendored).
+fn serve_connection(
+    server: &Server,
+    stream: TcpStream,
+    drain: &AtomicBool,
+    cfg: &SocketConfig,
+) -> crate::Result<u64> {
+    if cfg.read_timeout > Duration::ZERO {
+        stream.set_read_timeout(Some(cfg.read_timeout))?;
+    }
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let deadline = (cfg.deadline_ms > 0).then(|| Duration::from_millis(cfg.deadline_ms));
+    let (tx, rx) = mpsc::channel();
+    let mut sink = LineSink::new(tx);
+    let mut buf = String::new();
+    loop {
+        if drain.load(Ordering::Relaxed) {
+            break;
+        }
+        match reader.read_line(&mut buf) {
+            Ok(0) => break, // EOF
+            Ok(_) => {
+                if buf.trim() == "!drain" {
+                    drain.store(true, Ordering::Relaxed);
+                    break;
+                }
+                sink.handle(server, &buf, deadline);
+                buf.clear();
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                // Idle past the read timeout: disconnect the slow client
+                // (any partial line it sent stays unanswered; its
+                // completed requests flush below).
+                break;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => {
+                // Hard connection error: still flush what we owe.
+                let _ = sink.finish(rx, &stream);
+                return Err(e.into());
+            }
+        }
+    }
+    sink.finish(rx, &stream)
+}
+
+/// Socket mode on an already-bound listener (separated from
+/// [`serve_socket`] so tests can bind port 0 and learn the address).
+/// Serves until `drain` is set — by a client's `!drain` control line or
+/// externally — then stops accepting, lets every open connection flush
+/// its in-flight replies, and joins the connection threads before
+/// returning. See [`SocketConfig`] for the cap/timeout knobs.
+pub fn serve_socket_on(
+    server: &Server,
+    listener: TcpListener,
+    drain: &AtomicBool,
+    cfg: &SocketConfig,
+) -> crate::Result<()> {
+    listener.set_nonblocking(true)?;
     eprintln!(
-        "tnn7 serve: listening on {} ({} registry entries)",
+        "tnn7 serve: listening on {} ({} registry entries, {} connection cap)",
         listener.local_addr()?,
         server.entries().len(),
+        cfg.max_connections,
     );
+    let live = AtomicUsize::new(0);
     std::thread::scope(|scope| -> crate::Result<()> {
-        for conn in listener.incoming() {
-            let stream = conn?;
-            scope.spawn(move || {
-                let reader = match stream.try_clone() {
-                    Ok(s) => std::io::BufReader::new(s),
-                    Err(e) => {
-                        eprintln!("tnn7 serve: connection clone failed: {e}");
-                        return;
+        loop {
+            if drain.load(Ordering::Relaxed) {
+                break;
+            }
+            match listener.accept() {
+                Ok((mut stream, _)) => {
+                    if live.load(Ordering::Relaxed) >= cfg.max_connections {
+                        // Shed the connection itself: reply and close
+                        // without spending a thread on it.
+                        let _ = writeln!(stream, "!overload");
+                        continue;
                     }
-                };
-                if let Err(e) = serve_lines(server, reader, &stream) {
-                    eprintln!("tnn7 serve: connection error: {e}");
+                    live.fetch_add(1, Ordering::Relaxed);
+                    let live = &live;
+                    scope.spawn(move || {
+                        if let Err(e) = serve_connection(server, stream, drain, cfg) {
+                            eprintln!("tnn7 serve: connection error: {e}");
+                        }
+                        live.fetch_sub(1, Ordering::Relaxed);
+                    });
                 }
-            });
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    // Nonblocking accept poll: this is what keeps the
+                    // loop responsive to the drain signal.
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+                Err(e) => anyhow::bail!("accept failed: {e}"),
+            }
         }
+        eprintln!("tnn7 serve: draining ({} connections open)", live.load(Ordering::Relaxed));
         Ok(())
+        // Scope exit joins every connection thread: each breaks out of
+        // its read loop at the next timeout tick (or EOF) once drain is
+        // set, flushes its replies, and returns.
     })
+}
+
+/// Socket mode: bind `addr` (e.g. `127.0.0.1:7411`) and serve via
+/// [`serve_socket_on`] until drained.
+pub fn serve_socket(
+    server: &Server,
+    addr: &str,
+    drain: &AtomicBool,
+    cfg: &SocketConfig,
+) -> crate::Result<()> {
+    let listener = TcpListener::bind(addr)
+        .map_err(|e| anyhow::anyhow!("cannot bind {addr}: {e}"))?;
+    serve_socket_on(server, listener, drain, cfg)
 }
 
 #[cfg(test)]
@@ -184,7 +405,7 @@ mod tests {
         let server = Server::start(&spec()).unwrap();
         let input = "# smoke\n5 golden:4x2 1,-,2,0\n\n2 golden:4x2 0,0,0,0\n9 golden:4x2 -,-,-,-\n";
         let mut out = Vec::new();
-        let n = serve_lines(&server, input.as_bytes(), &mut out).unwrap();
+        let n = serve_lines(&server, input.as_bytes(), &mut out, 0).unwrap();
         assert_eq!(n, 3);
         let text = String::from_utf8(out).unwrap();
         let ids: Vec<&str> = text
@@ -194,6 +415,84 @@ mod tests {
         assert_eq!(ids, ["2", "5", "9"], "replies sorted by id:\n{text}");
         // The all-silent volley cannot fire any neuron.
         assert!(text.lines().any(|l| l == "9 -"), "{text}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn malformed_lines_get_parse_replies_and_never_kill_the_stream() {
+        let server = Server::start(&spec()).unwrap();
+        // One good line sandwiched between every malformed shape: a bad
+        // volley token, an unknown entry, a wrong-length volley (passes
+        // the parser, rejected at submit), and id-less garbage.
+        let input = "\
+3 golden:4x2 1,-,zz,0
+1 golden:4x2 0,0,0,0
+4 ghost:9x9 0,0,0,0
+5 golden:4x2 1,2
+!!! total garbage
+";
+        let mut out = Vec::new();
+        let n = serve_lines(&server, input.as_bytes(), &mut out, 0).unwrap();
+        assert_eq!(n, 5, "every line is answered");
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "!parse", "id-less garbage leads, bare !parse");
+        assert!(lines[1].starts_with("1 "), "good line served: {text}");
+        assert!(!lines[1].contains('!'), "good line has a winner: {text}");
+        assert!(
+            lines[2].starts_with("3 !parse: ") && lines[2].contains("bad spike time"),
+            "{text}"
+        );
+        assert!(
+            lines[3].starts_with("4 !parse: ") && lines[3].contains("unknown entry"),
+            "{text}"
+        );
+        assert!(
+            lines[4].starts_with("5 !parse: ") && lines[4].contains("volley length"),
+            "{text}"
+        );
+        server.shutdown();
+    }
+
+    #[test]
+    fn socket_serves_caps_connections_and_drains_gracefully() {
+        use std::io::{BufRead, BufReader, Write};
+        let server = Server::start(&spec()).unwrap();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let drain = AtomicBool::new(false);
+        let cfg = SocketConfig {
+            max_connections: 1,
+            read_timeout: Duration::from_millis(50),
+            deadline_ms: 0,
+        };
+        std::thread::scope(|scope| {
+            let handle = scope.spawn(|| serve_socket_on(&server, listener, &drain, &cfg));
+            // Connection 1: a request plus garbage, then EOF.
+            let mut c1 = std::net::TcpStream::connect(addr).unwrap();
+            c1.write_all(b"8 golden:4x2 1,-,2,0\nnot a request\n").unwrap();
+            // Connection 2 while c1 is still open: over the cap.
+            // (c1 is accepted first: connect() completed its handshake
+            // before c2's SYN, and accept drains in arrival order.)
+            let c2 = std::net::TcpStream::connect(addr).unwrap();
+            let mut r2 = BufReader::new(c2);
+            let mut line = String::new();
+            r2.read_line(&mut line).unwrap();
+            assert_eq!(line.trim(), "!overload", "capped connection is shed");
+            // c1's exchange completes: EOF ends the read loop, replies
+            // flush sorted (bare !parse first).
+            c1.shutdown(std::net::Shutdown::Write).unwrap();
+            let mut r1 = BufReader::new(c1);
+            let mut out = String::new();
+            r1.read_line(&mut out).unwrap();
+            assert_eq!(out.trim(), "!parse");
+            out.clear();
+            r1.read_line(&mut out).unwrap();
+            assert!(out.starts_with("8 "), "served reply: {out}");
+            // Graceful drain: the accept loop exits and joins.
+            drain.store(true, Ordering::Relaxed);
+            handle.join().unwrap().unwrap();
+        });
         server.shutdown();
     }
 }

@@ -1,16 +1,42 @@
 //! The serving core: the deterministic entry registry, the shared request
-//! queue, and the worker pool that coalesces arrivals into lane-block
-//! passes (the module-level docs in [`super`] walk the request lifecycle).
+//! queue with admission control, and the supervised worker pool that
+//! coalesces arrivals into lane-block passes (the module-level docs in
+//! [`super`] walk the request lifecycle).
+//!
+//! **Resilience layer** (the always-on hardening): every submitted
+//! request gets exactly one [`Reply`] — a winner or a typed
+//! [`ServeError`] — no matter what happens in between:
+//!
+//! * **admission** — a bounded queue (`queue_depth`, 0 = unbounded)
+//!   sheds the *newest* arrival with [`ServeError::Overload`] instead of
+//!   queueing unboundedly;
+//! * **deadlines** — a request may carry a deadline, checked at dequeue
+//!   (an expired rider replies [`ServeError::Deadline`] without burning a
+//!   batch slot) and again at reply time;
+//! * **supervision** — each batch runs under `catch_unwind`; a panicking
+//!   batch converts into per-rider [`ServeError::Internal`] replies (no
+//!   stranded mpsc channels), the worker exits, and the supervisor
+//!   respawns a replacement (panic/respawn counters in
+//!   [`ServeCounters`]);
+//! * **chaos** — a request may carry a [`ChaosAction`] (worker panic,
+//!   slow batch, gate-level stuck-at fault). Chaos-marked requests are
+//!   *isolated into singleton batches*, so their verdicts never depend on
+//!   which batch-mates they coalesced with — the property that keeps the
+//!   chaos harness's verdict transcript bit-identical at any worker
+//!   count.
 
 use super::ServeSpec;
 use crate::config::EngineKind;
 use crate::coordinator::{encode_ucr, ucr_engine_with, Engine, ServiceEngine};
+use crate::gates::fault::GateFault;
 use crate::gates::wordsim::LANES;
+use crate::metrics::ServeCounters;
 use crate::tnn::params::TnnParams;
 use crate::tnn::spike::SpikeTime;
 use crate::ucr::{self, UcrConfig};
 use crate::util::Rng64;
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -35,6 +61,75 @@ pub struct ServeEntry {
     pub max_batch: usize,
 }
 
+/// The typed failure face of the serving path — everything that can go
+/// wrong with one request, rendered on the wire as `!<error>` via
+/// [`std::fmt::Display`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// Rejected at admission: the queue was full (or the chaos injector
+    /// forced a shed).
+    Overload,
+    /// The request's deadline passed before a winner could be delivered.
+    Deadline,
+    /// The request line / submission could not be parsed.
+    Parse(String),
+    /// The service errored or panicked while the request was in flight.
+    Internal(String),
+}
+
+impl ServeError {
+    /// Stable verdict-category spelling (`overload`/`deadline`/`parse`/
+    /// `internal`) — the chaos harness's bucketing key.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ServeError::Overload => "overload",
+            ServeError::Deadline => "deadline",
+            ServeError::Parse(_) => "parse",
+            ServeError::Internal(_) => "internal",
+        }
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Overload => write!(f, "overload"),
+            ServeError::Deadline => write!(f, "deadline"),
+            ServeError::Parse(m) => write!(f, "parse: {m}"),
+            ServeError::Internal(m) => write!(f, "internal: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// A scheduled perturbation riding on one request (the chaos harness's
+/// injection vehicle; see [`crate::serve::chaos`]). Chaos-marked requests
+/// always run as singleton batches.
+#[derive(Clone, Debug)]
+pub enum ChaosAction {
+    /// Panic the worker mid-batch (under `catch_unwind`; the supervisor
+    /// respawns it).
+    Panic,
+    /// Stall the batch for the given duration before serving it.
+    Slow(Duration),
+    /// Inject a gate-level stuck-at fault (from [`crate::gates::fault`])
+    /// into the pass that serves this request.
+    Fault(GateFault),
+}
+
+/// Per-request submission options (see [`Server::submit_with`]).
+#[derive(Clone, Debug, Default)]
+pub struct SubmitOpts {
+    /// Absolute deadline; `None` = never expires.
+    pub deadline: Option<Instant>,
+    /// Force an admission shed regardless of queue occupancy (the chaos
+    /// injector's deterministic stand-in for a full queue).
+    pub force_shed: bool,
+    /// Perturbation to inject while serving this request.
+    pub chaos: Option<ChaosAction>,
+}
+
 /// One answered request.
 #[derive(Clone, Debug)]
 pub struct Reply {
@@ -42,22 +137,31 @@ pub struct Reply {
     pub id: u64,
     /// Registry index the request ran on.
     pub entry: usize,
-    /// The WTA winner (`Ok(None)` = no neuron fired), or the service
-    /// error (e.g. a memoized program-build failure).
-    pub outcome: Result<Option<usize>, String>,
+    /// The WTA winner (`Ok(None)` = no neuron fired), or the typed
+    /// serving error (shed, expired, parse failure, service failure).
+    pub outcome: Result<Option<usize>, ServeError>,
     /// End-to-end latency: queue wait + lane-block service time.
     pub latency: Duration,
-    /// Size of the coalesced pass this request rode in.
+    /// Size of the coalesced pass this request rode in (0 when the
+    /// request never reached a pass: shed or expired at dequeue).
     pub batch: usize,
 }
 
-/// A queued request (internal; built by [`Server::submit`]).
+/// A queued request (internal; built by [`Server::submit_with`]).
 struct Request {
     id: u64,
     entry: usize,
     volley: Vec<SpikeTime>,
     t0: Instant,
+    deadline: Option<Instant>,
+    chaos: Option<ChaosAction>,
     tx: mpsc::Sender<Reply>,
+}
+
+impl Request {
+    fn expired(&self) -> bool {
+        self.deadline.is_some_and(|d| Instant::now() >= d)
+    }
 }
 
 /// Queue state under the mutex: the pending requests plus the open flag
@@ -72,23 +176,38 @@ struct Shared {
     cv: Condvar,
     batches: AtomicU64,
     coalesced: AtomicU64,
+    /// Admission bound (0 = unbounded).
+    queue_depth: usize,
+    counters: ServeCounters,
 }
 
+// POISON-TAG: shared serving state; a panicked peer must not wedge us.
 fn lock_state(shared: &Shared) -> std::sync::MutexGuard<'_, QueueState> {
     shared.state.lock().unwrap_or_else(|p| p.into_inner())
 }
 
+/// How a worker thread ended (the supervisor's respawn signal).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum WorkerExit {
+    /// Clean drain: the queue emptied after shutdown.
+    Normal,
+    /// A batch panicked (riders were answered with
+    /// [`ServeError::Internal`] first); the supervisor respawns.
+    Panicked,
+}
+
 /// The always-on inference server: a deterministic entry registry, one
-/// shared FIFO request queue, and `workers` draining threads that batch
-/// same-entry arrivals into lane-block passes.
+/// shared bounded FIFO request queue, and a supervised pool of draining
+/// threads that batch same-entry arrivals into lane-block passes.
 pub struct Server {
     entries: Arc<Vec<ServeEntry>>,
     shared: Arc<Shared>,
-    workers: Vec<JoinHandle<()>>,
+    supervisor: Option<JoinHandle<()>>,
 }
 
 impl Server {
-    /// Build the registry from `spec` and start the worker pool.
+    /// Build the registry from `spec` and start the supervised worker
+    /// pool.
     pub fn start(spec: &ServeSpec) -> crate::Result<Server> {
         let entries = Arc::new(build_entries(spec)?);
         let shared = Arc::new(Shared {
@@ -99,18 +218,19 @@ impl Server {
             cv: Condvar::new(),
             batches: AtomicU64::new(0),
             coalesced: AtomicU64::new(0),
+            queue_depth: spec.queue_depth,
+            counters: ServeCounters::default(),
         });
-        let workers = (0..spec.workers.max(1))
-            .map(|_| {
-                let entries = entries.clone();
-                let shared = shared.clone();
-                std::thread::spawn(move || worker_loop(&entries, &shared))
-            })
-            .collect();
+        let workers = spec.workers.max(1);
+        let supervisor = {
+            let entries = entries.clone();
+            let shared = shared.clone();
+            std::thread::spawn(move || supervise(&entries, &shared, workers))
+        };
         Ok(Server {
             entries,
             shared,
-            workers,
+            supervisor: Some(supervisor),
         })
     }
 
@@ -124,10 +244,8 @@ impl Server {
         self.entries.iter().position(|e| e.name == name)
     }
 
-    /// Enqueue one request; its [`Reply`] arrives on `tx`. Errs on an
-    /// unknown entry index or a volley whose length is not the entry's
-    /// `p` (rejected up front, so a malformed query can never poison a
-    /// coalesced pass for its batch-mates).
+    /// Enqueue one request with default options (no deadline, no chaos);
+    /// its [`Reply`] arrives on `tx`. See [`Server::submit_with`].
     pub fn submit(
         &self,
         id: u64,
@@ -135,6 +253,25 @@ impl Server {
         volley: Vec<SpikeTime>,
         tx: mpsc::Sender<Reply>,
     ) -> crate::Result<()> {
+        self.submit_with(id, entry, volley, tx, SubmitOpts::default())
+            .map(|_| ())
+    }
+
+    /// Enqueue one request; its [`Reply`] arrives on `tx`. Returns
+    /// `Ok(true)` when queued, `Ok(false)` when shed at admission (the
+    /// [`ServeError::Overload`] reply is still delivered on `tx` — every
+    /// accepted submission gets exactly one reply). Errs only on caller
+    /// bugs: an unknown entry index or a volley whose length is not the
+    /// entry's `p` (rejected up front, so a malformed query can never
+    /// poison a coalesced pass for its batch-mates).
+    pub fn submit_with(
+        &self,
+        id: u64,
+        entry: usize,
+        volley: Vec<SpikeTime>,
+        tx: mpsc::Sender<Reply>,
+        opts: SubmitOpts,
+    ) -> crate::Result<bool> {
         let e = self
             .entries
             .get(entry)
@@ -146,18 +283,36 @@ impl Server {
             e.p,
             e.name
         );
+        self.shared.counters.submitted.inc();
         let mut st = lock_state(&self.shared);
         anyhow::ensure!(st.open, "server is shutting down");
+        let full =
+            self.shared.queue_depth > 0 && st.queue.len() >= self.shared.queue_depth;
+        if full || opts.force_shed {
+            drop(st);
+            self.shared.counters.shed.inc();
+            self.shared.counters.replies.inc();
+            let _ = tx.send(Reply {
+                id,
+                entry,
+                outcome: Err(ServeError::Overload),
+                latency: Duration::ZERO,
+                batch: 0,
+            });
+            return Ok(false);
+        }
         st.queue.push_back(Request {
             id,
             entry,
             volley,
             t0: Instant::now(),
+            deadline: opts.deadline,
+            chaos: opts.chaos,
             tx,
         });
         drop(st);
         self.shared.cv.notify_one();
-        Ok(())
+        Ok(true)
     }
 
     /// Lane-block passes executed so far.
@@ -165,9 +320,14 @@ impl Server {
         self.shared.batches.load(Ordering::Relaxed)
     }
 
-    /// Requests answered so far (across all passes).
+    /// Requests answered by a pass so far (shed/expired replies excluded).
     pub fn coalesced(&self) -> u64 {
         self.shared.coalesced.load(Ordering::Relaxed)
+    }
+
+    /// The resilience counters (admission, deadlines, supervision).
+    pub fn counters(&self) -> &ServeCounters {
+        &self.shared.counters
     }
 
     /// Stop accepting requests, drain the queue, and join the workers.
@@ -178,8 +338,8 @@ impl Server {
     fn close_and_join(&mut self) {
         lock_state(&self.shared).open = false;
         self.shared.cv.notify_all();
-        for w in self.workers.drain(..) {
-            let _ = w.join();
+        if let Some(s) = self.supervisor.take() {
+            let _ = s.join();
         }
     }
 }
@@ -190,66 +350,193 @@ impl Drop for Server {
     }
 }
 
-/// Worker: pop the oldest request, greedily coalesce queued same-entry
-/// requests up to the entry's lane budget (relative order of everything
-/// left behind is preserved), run one batched pass, reply to each rider.
-fn worker_loop(entries: &[ServeEntry], shared: &Shared) {
+/// Render a `catch_unwind` payload for the per-rider error reply. The
+/// text must be deterministic (no worker ids, no addresses): it lands in
+/// the chaos transcript, which is pinned bit-identical across worker
+/// counts.
+fn panic_text(payload: &(dyn std::any::Any + Send)) -> String {
+    payload
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "non-string panic payload".to_string())
+}
+
+/// Supervisor: spawn the initial workers, then wait on their exit events.
+/// A clean drain retires the worker; a panicked batch (riders already
+/// answered) respawns a replacement under a fresh id for as long as the
+/// server is open or the queue still holds work, bumping the
+/// `worker_respawns` counter.
+fn supervise(entries: &Arc<Vec<ServeEntry>>, shared: &Arc<Shared>, workers: usize) {
+    let (etx, erx) = mpsc::channel::<(usize, WorkerExit)>();
+    let spawn_worker = |wid: usize| -> JoinHandle<()> {
+        let entries = entries.clone();
+        let shared = shared.clone();
+        let etx = etx.clone();
+        std::thread::spawn(move || {
+            // Belt and braces: per-batch panics are caught (and replied
+            // to) inside worker_loop; this outer catch covers panics in
+            // the loop machinery itself so the supervisor always hears an
+            // exit event.
+            let exit = catch_unwind(AssertUnwindSafe(|| worker_loop(&entries, &shared)))
+                .unwrap_or(WorkerExit::Panicked);
+            let _ = etx.send((wid, exit));
+        })
+    };
+    let mut handles: HashMap<usize, JoinHandle<()>> =
+        (0..workers).map(|w| (w, spawn_worker(w))).collect();
+    let mut next_id = workers;
+    while !handles.is_empty() {
+        let Ok((wid, exit)) = erx.recv() else { break };
+        if let Some(h) = handles.remove(&wid) {
+            let _ = h.join();
+        }
+        if exit == WorkerExit::Panicked {
+            let respawn = {
+                let st = lock_state(shared);
+                st.open || !st.queue.is_empty()
+            };
+            if respawn {
+                shared.counters.worker_respawns.inc();
+                eprintln!(
+                    "tnn7 serve: worker {wid} panicked; respawned as worker {next_id} \
+                     (panics {}, respawns {})",
+                    shared.counters.batch_panics.get(),
+                    shared.counters.worker_respawns.get(),
+                );
+                handles.insert(next_id, spawn_worker(next_id));
+                next_id += 1;
+            }
+        }
+    }
+}
+
+/// Send one reply and bump the reply counter (every dequeued or shed
+/// request funnels through here exactly once).
+fn reply_to(shared: &Shared, r: Request, outcome: Result<Option<usize>, ServeError>, batch: usize) {
+    shared.counters.replies.inc();
+    let _ = r.tx.send(Reply {
+        id: r.id,
+        entry: r.entry,
+        outcome,
+        latency: r.t0.elapsed(),
+        batch,
+    });
+}
+
+/// Worker: pop the oldest live request, greedily coalesce queued
+/// same-entry requests up to the entry's lane budget (relative order of
+/// everything left behind is preserved; chaos-marked requests stay
+/// singletons), run one batched pass under `catch_unwind`, reply to each
+/// rider. Expired requests encountered at the queue front or during the
+/// coalescing scan get [`ServeError::Deadline`] without burning a batch
+/// slot.
+fn worker_loop(entries: &[ServeEntry], shared: &Shared) -> WorkerExit {
     loop {
+        let mut expired: Vec<Request> = Vec::new();
         let batch: Vec<Request> = {
             let mut st = lock_state(shared);
-            loop {
-                if let Some(front) = st.queue.pop_front() {
-                    let (e, cap) = (front.entry, entries[front.entry].max_batch);
-                    let mut batch = vec![front];
-                    let mut rest = VecDeque::with_capacity(st.queue.len());
-                    while let Some(r) = st.queue.pop_front() {
-                        if r.entry == e && batch.len() < cap {
-                            batch.push(r);
-                        } else {
-                            rest.push_back(r);
+            let front = loop {
+                match st.queue.pop_front() {
+                    Some(r) if r.expired() => {
+                        expired.push(r);
+                        if st.queue.is_empty() {
+                            break None; // deliver the expiries now
                         }
                     }
-                    st.queue = rest;
-                    break batch;
+                    Some(r) => break Some(r),
+                    None => {
+                        if !st.open {
+                            return WorkerExit::Normal;
+                        }
+                        st = shared.cv.wait(st).unwrap_or_else(|p| p.into_inner());
+                    }
                 }
-                if !st.open {
-                    return;
+            };
+            match front {
+                None => Vec::new(),
+                Some(front) => {
+                    let (e, cap) = (front.entry, entries[front.entry].max_batch);
+                    // Chaos isolation: a marked request runs alone, so
+                    // its perturbation can only ever affect itself.
+                    let isolated = front.chaos.is_some();
+                    let mut batch = vec![front];
+                    if !isolated {
+                        let mut rest = VecDeque::with_capacity(st.queue.len());
+                        while let Some(r) = st.queue.pop_front() {
+                            if r.entry == e && batch.len() < cap && r.chaos.is_none() {
+                                if r.expired() {
+                                    expired.push(r);
+                                } else {
+                                    batch.push(r);
+                                }
+                            } else {
+                                rest.push_back(r);
+                            }
+                        }
+                        st.queue = rest;
+                    }
+                    batch
                 }
-                st = shared
-                    .cv
-                    .wait(st)
-                    .unwrap_or_else(|p| p.into_inner());
             }
         };
+        if !expired.is_empty() {
+            shared
+                .counters
+                .expired_dequeue
+                .add(expired.len() as u64);
+            for r in expired {
+                reply_to(shared, r, Err(ServeError::Deadline), 0);
+            }
+        }
+        if batch.is_empty() {
+            continue;
+        }
+
         let (e, n) = (batch[0].entry, batch.len());
+        let chaos = batch[0].chaos.clone();
+        shared.counters.dequeued.add(n as u64);
+        if let Some(ChaosAction::Slow(d)) = &chaos {
+            std::thread::sleep(*d);
+        }
         let volleys: Vec<&[SpikeTime]> = batch.iter().map(|r| r.volley.as_slice()).collect();
-        let result = entries[e].service.infer_batch(&volleys);
+        // The batch Vec stays outside the closure so a panicking pass
+        // still lets us answer every rider afterwards.
+        let result = catch_unwind(AssertUnwindSafe(|| match &chaos {
+            Some(ChaosAction::Panic) => panic!("chaos: injected worker panic"),
+            Some(ChaosAction::Fault(f)) => entries[e].service.infer_batch_faulted(&volleys, f),
+            _ => entries[e].service.infer_batch(&volleys),
+        }));
         drop(volleys);
         shared.batches.fetch_add(1, Ordering::Relaxed);
         shared.coalesced.fetch_add(n as u64, Ordering::Relaxed);
         match result {
-            Ok(winners) => {
+            Ok(Ok(winners)) => {
                 for (r, w) in batch.into_iter().zip(winners) {
-                    let _ = r.tx.send(Reply {
-                        id: r.id,
-                        entry: e,
-                        outcome: Ok(w),
-                        latency: r.t0.elapsed(),
-                        batch: n,
-                    });
+                    let outcome = if r.expired() {
+                        shared.counters.expired_reply.inc();
+                        Err(ServeError::Deadline)
+                    } else {
+                        Ok(w)
+                    };
+                    reply_to(shared, r, outcome, n);
                 }
             }
-            Err(err) => {
+            Ok(Err(err)) => {
                 let msg = err.to_string();
                 for r in batch {
-                    let _ = r.tx.send(Reply {
-                        id: r.id,
-                        entry: e,
-                        outcome: Err(msg.clone()),
-                        latency: r.t0.elapsed(),
-                        batch: n,
-                    });
+                    reply_to(shared, r, Err(ServeError::Internal(msg.clone())), n);
                 }
+            }
+            Err(payload) => {
+                // A panicked pass: answer every rider (no stranded
+                // channels), then exit so the supervisor respawns us.
+                shared.counters.batch_panics.inc();
+                let msg = format!("worker panicked: {}", panic_text(&*payload));
+                for r in batch {
+                    reply_to(shared, r, Err(ServeError::Internal(msg.clone())), n);
+                }
+                return WorkerExit::Panicked;
             }
         }
     }
@@ -360,6 +647,50 @@ mod tests {
         let err = server.submit(44, 9, vec![], tx).unwrap_err();
         assert!(err.to_string().contains("unknown entry"), "{err}");
         assert_eq!(server.coalesced(), 1);
+        assert_eq!(server.counters().submitted.get(), 1);
+        assert_eq!(server.counters().replies.get(), 1);
         server.shutdown();
+    }
+
+    #[test]
+    fn forced_shed_replies_overload_without_queueing() {
+        let server = Server::start(&tiny_spec()).unwrap();
+        let (tx, rx) = mpsc::channel();
+        let q = server.entries()[0].queries[0].clone();
+        let queued = server
+            .submit_with(
+                1,
+                0,
+                q,
+                tx,
+                SubmitOpts {
+                    force_shed: true,
+                    ..SubmitOpts::default()
+                },
+            )
+            .unwrap();
+        assert!(!queued);
+        let r = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(r.outcome, Err(ServeError::Overload));
+        assert_eq!(r.batch, 0);
+        assert_eq!(server.counters().shed.get(), 1);
+        assert_eq!(server.batches(), 0, "shed requests never reach a pass");
+        server.shutdown();
+    }
+
+    #[test]
+    fn serve_error_wire_spellings_are_stable() {
+        assert_eq!(ServeError::Overload.to_string(), "overload");
+        assert_eq!(ServeError::Deadline.to_string(), "deadline");
+        assert_eq!(
+            ServeError::Parse("bad id".into()).to_string(),
+            "parse: bad id"
+        );
+        assert_eq!(
+            ServeError::Internal("boom".into()).to_string(),
+            "internal: boom"
+        );
+        assert_eq!(ServeError::Overload.kind(), "overload");
+        assert_eq!(ServeError::Internal(String::new()).kind(), "internal");
     }
 }

@@ -395,7 +395,10 @@ pub fn run_sweep(spec: &SweepSpec, use_cache: bool) -> crate::Result<SweepOutcom
                 // Stop promptly once any worker has failed — on a large
                 // grid the operator should not wait for the remaining
                 // points to finish before seeing the error.
-                if first_err.lock().unwrap().is_some() {
+                // POISON-TAG: a panicking sibling poisons this mutex; the
+                // data (an error slot / result list) is still coherent,
+                // so recover it instead of cascading the panic.
+                if first_err.lock().unwrap_or_else(|p| p.into_inner()).is_some() {
                     break;
                 }
                 let k = next.fetch_add(1, Ordering::Relaxed);
@@ -413,9 +416,14 @@ pub fn run_sweep(spec: &SweepSpec, use_cache: bool) -> crate::Result<SweepOutcom
                     Ok(r)
                 });
                 match outcome {
-                    Ok(r) => fresh.lock().unwrap().push((i, r)),
+                    // POISON-TAG: recover the still-coherent list.
+                    Ok(r) => fresh
+                        .lock()
+                        .unwrap_or_else(|p| p.into_inner())
+                        .push((i, r)),
                     Err(e) => {
-                        let mut slot = first_err.lock().unwrap();
+                        // POISON-TAG: recover the still-coherent slot.
+                        let mut slot = first_err.lock().unwrap_or_else(|p| p.into_inner());
                         if slot.is_none() {
                             *slot = Some(e);
                         }
@@ -425,12 +433,13 @@ pub fn run_sweep(spec: &SweepSpec, use_cache: bool) -> crate::Result<SweepOutcom
             });
         }
     });
-    if let Some(e) = first_err.into_inner().unwrap() {
+    // POISON-TAG: the scope has joined every worker; recover the data.
+    if let Some(e) = first_err.into_inner().unwrap_or_else(|p| p.into_inner()) {
         return Err(e);
     }
 
     let computed = {
-        let fresh = fresh.into_inner().unwrap();
+        let fresh = fresh.into_inner().unwrap_or_else(|p| p.into_inner());
         let n = fresh.len();
         for (i, r) in fresh {
             slots[i] = Some((r, false));

@@ -1,14 +1,18 @@
 //! Integration tests for `tnn7 serve`: the batched-vs-sequential
 //! differential (dynamic batching must be semantics-free at every worker
-//! count), the concurrent artifact-cache stress, and the committed golden
-//! transcript of the quick bench configuration.
+//! count), the concurrent artifact-cache stress, the committed golden
+//! transcript of the quick bench configuration, and the resilience layer
+//! (chaos soak, load shedding, deadlines, worker-panic recovery).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
 use tnn7::config::EngineKind;
 use tnn7::gates::artifact_cache::design_handle;
 use tnn7::gates::ShardedLruCache;
-use tnn7::serve::{run_bench, ServeSpec};
+use tnn7::serve::{
+    run_bench, run_chaos, ChaosAction, Reply, ServeError, ServeSpec, Server, SubmitOpts,
+};
 
 /// A bench spec small enough to run three times (1/2/4 workers) in one
 /// test, while still covering mixed engines × mixed geometries and every
@@ -203,4 +207,183 @@ fn quick_bench_transcript_matches_golden() {
         got, want,
         "serve transcript drifted from golden (bless with TNN7_BLESS=1 if intended)"
     );
+}
+
+// ---------------------------------------------------------------------------
+// Resilience layer.
+// ---------------------------------------------------------------------------
+
+/// A one-entry spec for the targeted resilience tests (golden engine:
+/// cheap, deterministic, no artifact-cache interaction).
+fn resilience_spec(queue_depth: usize) -> ServeSpec {
+    let mut s = ServeSpec::quick();
+    s.workers = 1;
+    s.engines = vec![EngineKind::Golden];
+    s.geometries = vec![(4, 2)];
+    s.per_cluster = 2;
+    s.words = 1;
+    s.queue_depth = queue_depth;
+    s
+}
+
+fn recv(rx: &mpsc::Receiver<Reply>) -> Reply {
+    rx.recv_timeout(Duration::from_secs(10))
+        .expect("reply within 10s — a stranded rider is exactly the bug class under test")
+}
+
+/// Chaos soak: the full injection schedule (panics, sheds, expiries,
+/// malformed lines, dropped connections, slow batches, gate faults) run
+/// at 1, 2 and 4 workers must produce byte-identical verdict transcripts
+/// and identical counts — chaos verdicts are a property of the schedule,
+/// never of scheduling. Every run must also leave zero stranded riders
+/// and respawn every panicked worker.
+#[test]
+fn chaos_soak_is_byte_identical_at_1_2_4_workers() {
+    let mut runs = Vec::new();
+    for workers in [1usize, 2, 4] {
+        let mut spec = ServeSpec::quick();
+        spec.workers = workers;
+        spec.chaos = "default".to_string();
+        let r = run_chaos(&spec).unwrap();
+        assert_eq!(r.stranded, 0, "{workers} workers stranded riders");
+        assert!(r.batch_panics >= 1, "the schedule injects panics");
+        assert!(
+            r.worker_respawns >= r.batch_panics,
+            "{workers} workers: {} panics but only {} respawns",
+            r.batch_panics,
+            r.worker_respawns
+        );
+        assert!(r.counts.survived > 0, "clean requests survive the chaos");
+        assert!(r.counts.shed > 0 && r.counts.expired > 0 && r.counts.errored > 0);
+        assert_eq!(
+            r.transcript.lines().count(),
+            spec.requests,
+            "one verdict per request"
+        );
+        runs.push((workers, r));
+    }
+    let (_, base) = &runs[0];
+    for (workers, r) in &runs[1..] {
+        assert_eq!(
+            r.transcript, base.transcript,
+            "chaos transcript at {workers} workers differs from 1 worker"
+        );
+        assert_eq!(r.counts, base.counts, "verdict counts differ at {workers} workers");
+    }
+}
+
+/// Admission control: with the single worker parked on a slow batch, a
+/// full queue sheds the newest arrivals with `!overload` — and every
+/// submission, accepted or shed, still gets exactly one reply.
+#[test]
+fn full_queue_sheds_newest_with_overload() {
+    let server = Server::start(&resilience_spec(2)).unwrap();
+    let volley = server.entries()[0].queries[0].clone();
+    let (tx, rx) = mpsc::channel();
+    // Park the worker: a chaos-slowed singleton batch.
+    let opts = SubmitOpts {
+        chaos: Some(ChaosAction::Slow(Duration::from_millis(400))),
+        ..SubmitOpts::default()
+    };
+    assert!(server
+        .submit_with(0, 0, volley.clone(), tx.clone(), opts)
+        .unwrap());
+    // Wait until the worker has dequeued it (and is now sleeping), so
+    // the queue is empty and its depth is all ours.
+    let t0 = Instant::now();
+    while server.counters().dequeued.get() < 1 {
+        assert!(t0.elapsed() < Duration::from_secs(5), "worker never dequeued");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    // Flood: 2 fit the queue, 3 must shed.
+    let accepted: Vec<bool> = (1..=5)
+        .map(|id| {
+            server
+                .submit_with(id, 0, volley.clone(), tx.clone(), SubmitOpts::default())
+                .unwrap()
+        })
+        .collect();
+    assert_eq!(accepted, [true, true, false, false, false], "newest shed");
+    drop(tx);
+    let mut replies: Vec<Reply> = (0..6).map(|_| recv(&rx)).collect();
+    assert!(rx.try_recv().is_err(), "exactly one reply per submission");
+    replies.sort_by_key(|r| r.id);
+    for r in &replies[3..] {
+        assert!(
+            matches!(r.outcome, Err(ServeError::Overload)),
+            "request {} should have shed, got {:?}",
+            r.id,
+            r.outcome
+        );
+        assert_eq!(r.batch, 0, "shed requests never touch a batch");
+    }
+    assert!(replies[..3].iter().all(|r| r.outcome.is_ok()));
+    assert_eq!(server.counters().shed.get(), 3);
+    server.shutdown();
+}
+
+/// Deadlines: an already-expired request replies `!deadline` without
+/// burning a batch slot; a generous deadline is met normally.
+#[test]
+fn expired_deadlines_reply_deadline_without_a_batch_slot() {
+    let server = Server::start(&resilience_spec(0)).unwrap();
+    let volley = server.entries()[0].queries[0].clone();
+    let (tx, rx) = mpsc::channel();
+    let expired = SubmitOpts {
+        deadline: Some(Instant::now()),
+        ..SubmitOpts::default()
+    };
+    assert!(server.submit_with(7, 0, volley.clone(), tx.clone(), expired).unwrap());
+    let r = recv(&rx);
+    assert_eq!(r.id, 7);
+    assert!(matches!(r.outcome, Err(ServeError::Deadline)), "{:?}", r.outcome);
+    assert_eq!(r.batch, 0, "expired rider must not burn a batch slot");
+    assert!(server.counters().expired_dequeue.get() >= 1);
+    // A sane deadline is met.
+    let ok = SubmitOpts {
+        deadline: Some(Instant::now() + Duration::from_secs(30)),
+        ..SubmitOpts::default()
+    };
+    assert!(server.submit_with(8, 0, volley, tx.clone(), ok).unwrap());
+    let r = recv(&rx);
+    assert_eq!(r.id, 8);
+    assert!(r.outcome.is_ok(), "{:?}", r.outcome);
+    server.shutdown();
+}
+
+/// Worker supervision: a mid-batch panic produces `!internal` replies for
+/// every rider (nobody hangs), and the supervisor respawns the worker —
+/// which then serves new requests within the same run.
+#[test]
+fn worker_panic_replies_internal_and_respawns() {
+    let server = Server::start(&resilience_spec(0)).unwrap();
+    let volley = server.entries()[0].queries[0].clone();
+    let (tx, rx) = mpsc::channel();
+    let boom = SubmitOpts {
+        chaos: Some(ChaosAction::Panic),
+        ..SubmitOpts::default()
+    };
+    assert!(server.submit_with(1, 0, volley.clone(), tx.clone(), boom).unwrap());
+    let r = recv(&rx);
+    assert_eq!(r.id, 1);
+    match &r.outcome {
+        Err(ServeError::Internal(msg)) => {
+            assert!(msg.contains("worker panicked"), "{msg}");
+        }
+        other => panic!("expected !internal, got {other:?}"),
+    }
+    assert_eq!(server.counters().batch_panics.get(), 1);
+    // The supervisor respawns the worker (asynchronously, shortly after
+    // the panic replies land).
+    let t0 = Instant::now();
+    while server.counters().worker_respawns.get() < 1 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "worker never respawned");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    // The respawned worker serves.
+    server.submit(2, 0, volley, tx.clone()).unwrap();
+    let r = recv(&rx);
+    assert_eq!(r.id, 2);
+    assert!(r.outcome.is_ok(), "{:?}", r.outcome);
+    server.shutdown();
 }

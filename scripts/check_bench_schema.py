@@ -224,6 +224,35 @@ SCHEMAS = {
             "program_capacity": None,
             "evictions": None,
         },
+        "resilience": {
+            "submitted": None,
+            "shed": None,
+            "expired": None,
+            "batch_panics": None,
+            "worker_respawns": None,
+            "replies": None,
+        },
+    },
+    # Chaos-harness artifact (tnn7 serve chaos=..., src/serve/chaos.rs):
+    # per-category verdict totals of the deterministic injection schedule
+    # plus the supervision counters; "stranded" must be 0 (a nonzero
+    # value fails the run itself, but the key is pinned here so the
+    # invariant stays visible in the artifact).
+    "BENCH_chaos.json": {
+        "chaos": None,
+        "seed": None,
+        "workers": None,
+        "requests": None,
+        "counts": {
+            "shed": None,
+            "expired": None,
+            "errored": None,
+            "parse_errors": None,
+            "dropped": None,
+            "survived": None,
+        },
+        "supervision": {"batch_panics": None, "worker_respawns": None},
+        "stranded": None,
     },
 }
 

@@ -15,13 +15,16 @@ randomized trials:
 
 2. The single-threaded semantics of `gates::artifact_cache::
    ShardedLruCache` (`get_or_build` stamp/insert/evict protocol,
-   `set_capacity`, failure memoization): ported structurally (atomics
-   become ints) and diffed against a flat model that keeps key -> stamp
-   and evicts the minimum-stamp key, excluding the key being inserted.
-   Checked after every op: identical live-key sets, identical build
-   counts (at most one per key per residency), len <= capacity, identical
-   eviction counters, memoized Err returned without re-running the
-   builder, rebuild allowed after eviction.
+   `set_capacity`, failure memoization with the bounded retry budget,
+   `retry_failures`): ported structurally (atomics become ints) and
+   diffed against a flat model that keeps key -> stamp and evicts the
+   minimum-stamp key, excluding the key being inserted. Checked after
+   every op: identical live-key sets, identical build counts (at most
+   one per key per residency), len <= capacity, identical eviction
+   counters, memoized Err returned without re-running the builder until
+   FAILURE_RETRY_BUDGET lookups have served it (then evicted so the next
+   lookup retries), retry_failures dropping exactly the failed entries,
+   rebuild allowed after eviction.
 
 The Rust concurrency story (per-key OnceLock build cells, shard RwLocks,
 revival re-scan) is argued in the module docs and exercised by
@@ -104,6 +107,9 @@ def fuzz_coalescing(trials, rng):
 # ---------------------------------------------------------------------------
 
 
+FAILURE_RETRY_BUDGET = 16  # mirrors artifact_cache::FAILURE_RETRY_BUDGET
+
+
 class PortCache:
     """Structural port of ShardedLruCache (single-threaded: atomics are
     ints, the OnceLock cell is a one-slot list)."""
@@ -127,7 +133,7 @@ class PortCache:
             slot["last_used"] = stamp
             cell = slot["cell"]
         else:
-            slot = {"cell": [], "last_used": stamp}
+            slot = {"cell": [], "last_used": stamp, "failure_hits": 0}
             cell = slot["cell"]
             shard[key] = slot
             self.len += 1
@@ -137,7 +143,30 @@ class PortCache:
                 cell.append(("ok", build()))
             except Exception as e:  # catch_unwind -> memoized Err
                 cell.append(("err", f"artifact build panicked: {e}"))
-        return cell[0]
+        res = cell[0]
+        if res[0] == "err":
+            # Bounded retry budget: once the failure has been served
+            # FAILURE_RETRY_BUDGET times (the building caller counts as
+            # the first), drop the cell so the next lookup retries.
+            slot = self.shards[self.shard_of(key)].get(key)
+            if slot is not None and slot["cell"] is cell:
+                slot["failure_hits"] += 1
+                if slot["failure_hits"] >= FAILURE_RETRY_BUDGET:
+                    del self.shards[self.shard_of(key)][key]
+                    self.len -= 1
+                    self.evictions += 1
+        return res
+
+    def retry_failures(self):
+        dropped = 0
+        for shard in self.shards:
+            failed = [k for k, s in shard.items() if s["cell"] and s["cell"][0][0] == "err"]
+            for k in failed:
+                del shard[k]
+                self.len -= 1
+                self.evictions += 1
+                dropped += 1
+        return dropped
 
     def evict_over_capacity(self, keep):
         while True:
@@ -169,8 +198,9 @@ class PortCache:
 
 
 class ModelCache:
-    """Flat reference: key -> (stamp, result); evict min-stamp excluding
-    the key being inserted."""
+    """Flat reference: key -> [stamp, result, failure_hits]; evict
+    min-stamp excluding the key being inserted; a failed entry leaves
+    after FAILURE_RETRY_BUDGET lookups have served it."""
 
     def __init__(self, capacity):
         self.capacity = max(capacity, 1)
@@ -182,14 +212,23 @@ class ModelCache:
         stamp = self.clock
         self.clock += 1
         if key in self.map:
-            self.map[key] = (stamp, self.map[key][1])
-            return self.map[key][1]
-        try:
-            res = ("ok", build())
-        except Exception as e:
-            res = ("err", f"artifact build panicked: {e}")
-        self.map[key] = (stamp, res)
-        self.evict(keep=key)
+            self.map[key][0] = stamp
+        else:
+            try:
+                res = ("ok", build())
+            except Exception as e:
+                res = ("err", f"artifact build panicked: {e}")
+            self.map[key] = [stamp, res, 0]
+            self.evict(keep=key)
+        entry = self.map.get(key)
+        if entry is None:  # evicted by capacity while inserting: impossible
+            raise AssertionError("inserted key evicted")
+        res = entry[1]
+        if res[0] == "err":
+            entry[2] += 1
+            if entry[2] >= FAILURE_RETRY_BUDGET:
+                del self.map[key]
+                self.evictions += 1
         return res
 
     def evict(self, keep):
@@ -205,6 +244,13 @@ class ModelCache:
         self.capacity = max(capacity, 1)
         self.evict(keep=None)
 
+    def retry_failures(self):
+        failed = [k for k, e in self.map.items() if e[1][0] == "err"]
+        for k in failed:
+            del self.map[k]
+            self.evictions += 1
+        return len(failed)
+
 
 def fuzz_cache(trials, rng):
     for t in range(trials):
@@ -214,10 +260,14 @@ def fuzz_cache(trials, rng):
         builds = {"n": 0}
         key_space = rng.randint(1, 16)
         for op in range(rng.randint(20, 120)):
-            if rng.random() < 0.1:
+            roll = rng.random()
+            if roll < 0.1:
                 new_cap = rng.randint(1, 8)
                 port.set_capacity(new_cap)
                 model.set_capacity(new_cap)
+            elif roll < 0.15:
+                # retry_failures drops exactly the memoized failures.
+                assert port.retry_failures() == model.retry_failures(), (t, op)
             else:
                 k = rng.randrange(key_space)
                 fail = rng.random() < 0.15
@@ -267,6 +317,26 @@ def fuzz_cache(trials, rng):
         second = port.get_or_build(dead_key, boom)
         assert first[0] == "err" and second == first, (t, first, second)
         assert runs["n"] == 1, (t, "failed build re-ran while resident")
+
+        # Bounded retry budget: a transient failure (two bad builds, then
+        # a good one) recovers after each budget window elapses — the
+        # builder runs once per window, mirroring the Rust unit test.
+        flaky_key = key_space + 2
+        flaky = {"n": 0}
+
+        def flaky_build():
+            flaky["n"] += 1
+            if flaky["n"] <= 2:
+                raise RuntimeError("transient")
+            return ("artifact", "recovered")
+
+        outcomes = [
+            port.get_or_build(flaky_key, flaky_build)[0]
+            for _ in range(2 * FAILURE_RETRY_BUDGET + 1)
+        ]
+        assert flaky["n"] == 3, (t, flaky["n"], "one build per budget window")
+        assert all(o == "err" for o in outcomes[: 2 * FAILURE_RETRY_BUDGET]), t
+        assert outcomes[-1] == "ok", (t, "never recovered from transient failure")
     print(f"cache: {trials} trials ok")
 
 

@@ -1,0 +1,310 @@
+#!/usr/bin/env python3
+"""Differential fuzz of PR 10's chaos-harness determinism (toolchain-free
+verification, same technique as scripts/fuzz_serve_cache.py).
+
+Three ports, each checked against an independent reference model over
+randomized trials:
+
+1. The chaos event schedule (`serve::chaos::ChaosSpec::event_at`): pure
+   modular arithmetic on the request index with a fixed priority order
+   (panic > shed > expire > malformed > drop > slow > fault). Diffed
+   against a first-match-wins reference over an ordered cadence list, and
+   checked for the coverage invariant the Rust unit test pins: every
+   category of `default` and `heavy` fires at least twice within the
+   quick spec's 96 requests; `off` never fires.
+
+2. The verdict pipeline of `serve::chaos::run_chaos`: an abstract server
+   (queue + worker pool) run under many randomized worker interleavings.
+   Chaos-marked requests are isolated into singleton batches; clean
+   requests coalesce greedily per entry; a panicking batch answers every
+   rider `errored`, kills its worker, and the supervisor respawns it.
+   Checked: the id-sorted verdict transcript and the per-category counts
+   are identical under every interleaving and worker count (the
+   bit-identical-at-1/2/4-workers property), every request gets exactly
+   one verdict (no stranded riders), and respawns equal panics.
+
+3. The request-line grammar (`serve::proto::parse_request`) against the
+   four corruption modes of `serve::chaos::corrupt_line`: every corrupted
+   line must be rejected by the parser, and the id token must be
+   recoverable for exactly the modes that keep a numeric first token
+   (the `<id> !parse: ...` reply path of serve_lines).
+
+The Rust concurrency story (catch_unwind supervision, condvar handoff,
+mpsc reply channels) is exercised by tests/serve.rs on a real toolchain;
+this harness pins the deterministic logic those mechanisms protect.
+Exits nonzero on any divergence.
+"""
+
+import random
+import sys
+
+# ---------------------------------------------------------------------------
+# 1. Event schedule (port of ChaosSpec::event_at).
+# ---------------------------------------------------------------------------
+
+# (name, cadence) in Rust's priority order; cadence (period, offset),
+# period 0 = never. Mirrors ChaosSpec::{off,default_spec,heavy}.
+SPECS = {
+    "off": [],
+    "default": [
+        ("panic", (48, 13)),
+        ("shed", (16, 5)),
+        ("expire", (16, 9)),
+        ("malformed", (24, 2)),
+        ("drop", (24, 17)),
+        ("slow", (48, 29)),
+        ("fault", (12, 7)),
+    ],
+    "heavy": [
+        ("panic", (24, 13)),
+        ("shed", (8, 5)),
+        ("expire", (8, 1)),
+        ("malformed", (12, 2)),
+        ("drop", (12, 11)),
+        ("slow", (24, 22)),
+        ("fault", (6, 3)),
+    ],
+}
+
+
+def event_at(spec, i):
+    """Port of ChaosSpec::event_at: if/else chain in priority order."""
+    for name, (period, offset) in SPECS[spec]:
+        if period > 0 and i % period == offset:
+            return name
+    return None
+
+
+def ref_event_at(spec, i):
+    """Reference: collect every hit, take the highest-priority one."""
+    hits = [
+        name
+        for name, (period, offset) in SPECS[spec]
+        if period > 0 and i % period == offset
+    ]
+    return hits[0] if hits else None
+
+
+def fuzz_schedule(rng):
+    for spec in SPECS:
+        for i in range(4096):
+            assert event_at(spec, i) == ref_event_at(spec, i), (spec, i)
+        # Random large indices: the schedule is modular, no index is special.
+        for _ in range(2000):
+            i = rng.randrange(1 << 48)
+            assert event_at(spec, i) == ref_event_at(spec, i), (spec, i)
+    assert all(event_at("off", i) is None for i in range(512))
+    for spec in ("default", "heavy"):
+        for cat in ("panic", "shed", "expire", "malformed", "drop", "slow", "fault"):
+            n = sum(1 for i in range(96) if event_at(spec, i) == cat)
+            assert n >= 2, (spec, cat, n, "category starved in a quick run")
+    print("schedule: ok")
+
+
+# ---------------------------------------------------------------------------
+# 2. Verdict pipeline under randomized worker interleavings.
+# ---------------------------------------------------------------------------
+
+# Injector-side verdicts (decided before the worker pool is involved) and
+# worker-side verdicts, mirroring run_chaos's mapping.
+LOCAL_VERDICT = {"malformed": "parse", "drop": "dropped"}
+WORKER_VERDICT = {"shed": "shed", "expire": "expired", "panic": "errored"}
+
+
+def run_abstract_chaos(spec, requests, n_entries, caps, workers, rng):
+    """Abstract run_chaos: returns (transcript rows, counts, panics,
+    respawns, answered). Worker scheduling is randomized via rng — the
+    verdicts must not depend on it."""
+    rows = {}  # id -> verdict
+    queue = []  # (id, entry, event) in arrival order
+    for i in range(requests):
+        ev = event_at(spec, i)
+        if ev in LOCAL_VERDICT:
+            rows[i] = LOCAL_VERDICT[ev]
+        elif ev == "shed":
+            # Injector-forced admission shed: replied before queueing.
+            rows[i] = "shed"
+        else:
+            queue.append((i, i % n_entries, ev))
+
+    panics = respawns = 0
+    alive = workers
+    while queue:
+        if alive == 0:  # supervisor respawns (open queue -> always)
+            alive += 1
+            respawns += 1
+        # Randomized scheduling: any worker may run next; which one is
+        # irrelevant because verdicts are per-batch-composition-free.
+        front = queue[0]
+        fid, fe, fev = front
+        if fev is not None:
+            batch = [front]  # chaos isolation: singleton batch
+            queue = queue[1:]
+        else:
+            cap = caps[fe]
+            batch, rest = [front], []
+            for r in queue[1:]:
+                # Clean same-entry riders coalesce; chaos-marked ones
+                # never join a batch.
+                if r[1] == fe and r[2] is None and len(batch) < cap:
+                    batch.append(r)
+                else:
+                    rest.append(r)
+            queue = rest
+        # Shuffle reply order within the batch: ids sort the transcript,
+        # so reply order must not matter.
+        order = list(batch)
+        rng.shuffle(order)
+        for bid, _be, bev in order:
+            if bev == "expire":
+                rows[bid] = "expired"  # pre-expired at dequeue
+            elif bev == "panic":
+                rows[bid] = "errored"
+            else:  # None, slow, fault: the batch executes
+                rows[bid] = "survived"
+        if any(bev == "panic" for _, _, bev in batch):
+            panics += 1
+            alive -= 1  # the worker dies; supervisor will respawn
+    # Settle: respawn any worker that died after the queue drained, as the
+    # supervisor does while the server is open.
+    respawns += workers - alive if alive < workers else 0
+
+    counts = {}
+    for v in rows.values():
+        counts[v] = counts.get(v, 0) + 1
+    transcript = [(i, rows[i]) for i in sorted(rows)]
+    return transcript, counts, panics, respawns, len(rows)
+
+
+def fuzz_verdicts(trials, rng):
+    for t in range(trials):
+        spec = rng.choice(["default", "heavy"])
+        requests = rng.choice([48, 96, 192])
+        n_entries = rng.randint(1, 4)
+        caps = [rng.choice([1, 2, 4, 64]) for _ in range(n_entries)]
+        base = None
+        for workers in (1, 2, 4):
+            for _ in range(3):  # several interleavings per worker count
+                got = run_abstract_chaos(
+                    spec, requests, n_entries, caps, workers, rng
+                )
+                transcript, counts, panics, respawns, answered = got
+                assert answered == requests, (t, "stranded rider")
+                assert sum(counts.values()) == requests, (t, counts)
+                assert respawns >= panics, (t, panics, respawns)
+                expected_panics = sum(
+                    1 for i in range(requests) if event_at(spec, i) == "panic"
+                )
+                assert panics == expected_panics, (t, panics, expected_panics)
+                if base is None:
+                    base = (transcript, counts)
+                else:
+                    assert (transcript, counts) == base, (
+                        t,
+                        workers,
+                        "verdicts depended on scheduling",
+                    )
+        # Cross-check the per-category totals against the schedule alone.
+        _, counts = base
+        for ev, verdict in list(LOCAL_VERDICT.items()) + list(WORKER_VERDICT.items()):
+            want = sum(1 for i in range(requests) if event_at(spec, i) == ev)
+            assert counts.get(verdict, 0) == want, (t, ev, verdict, counts)
+    print(f"verdicts: {trials} trials ok")
+
+
+# ---------------------------------------------------------------------------
+# 3. Line grammar vs the corruption modes.
+# ---------------------------------------------------------------------------
+
+
+def parse_request(line, entries):
+    """Port of serve::proto::parse_request: returns (id, entry, volley)
+    or raises ValueError. entries: name -> p."""
+    parts = line.split()
+    if not parts:
+        raise ValueError("empty request line")
+    try:
+        rid = int(parts[0])
+        if rid < 0:  # Rust's u64 parse has no sign (but allows '+')
+            raise ValueError
+    except ValueError:
+        raise ValueError(f"bad request id in {line!r}") from None
+    if len(parts) < 2:
+        raise ValueError(f"request {rid}: missing entry name")
+    name = parts[1]
+    if name not in entries:
+        raise ValueError(f"request {rid}: unknown entry {name!r}")
+    if len(parts) < 3:
+        raise ValueError(f"request {rid}: missing volley")
+    if len(parts) > 3:
+        raise ValueError(f"request {rid}: trailing tokens after volley")
+    volley = []
+    for tok in parts[2].split(","):
+        if tok == "-":
+            volley.append(None)
+        else:
+            try:
+                v = int(tok)
+                if v < 0:
+                    raise ValueError
+            except ValueError:
+                raise ValueError(f"request {rid}: bad spike time {tok!r}") from None
+            volley.append(v)
+    return rid, name, volley
+
+
+def corrupt_line(rng, rid, entry_name, p):
+    """Port of serve::chaos::corrupt_line: returns (mode, line)."""
+    volley = [str(k % 4) for k in range(p)]
+    mode = rng.randrange(4)
+    if mode == 0:
+        return mode, f"x{rid} {entry_name} {','.join(volley)}"
+    if mode == 1:
+        return mode, f"{rid} ghost:9x9 {','.join(volley)}"
+    if mode == 2:
+        bad = rng.randrange(len(volley))
+        volley[bad] = "zz"
+        return mode, f"{rid} {entry_name} {','.join(volley)}"
+    return mode, f"{rid} {entry_name}"
+
+
+def fuzz_grammar(trials, rng):
+    for t in range(trials):
+        entries = {f"golden:{p}x2": p for p in (2, 4, 6, 8)}
+        name = rng.choice(list(entries))
+        p = entries[name]
+        rid = rng.randrange(1 << 32)
+        # Well-formed lines parse.
+        volley = ",".join(
+            "-" if rng.random() < 0.3 else str(rng.randrange(8)) for _ in range(p)
+        )
+        got = parse_request(f"{rid} {name} {volley}", entries)
+        assert got[0] == rid and got[1] == name and len(got[2]) == p
+        # Every corruption mode is rejected...
+        mode, line = corrupt_line(rng, rid, name, p)
+        try:
+            parse_request(line, entries)
+            # Mode 3 (truncated) of a p-spike entry is only malformed
+            # because the volley is missing; with 0 tokens it can't parse.
+            raise AssertionError((t, mode, line, "corrupt line parsed cleanly"))
+        except ValueError:
+            pass
+        # ...and the id is recoverable exactly when the first token is
+        # numeric (every mode except 0) — the `<id> !parse: ...` path.
+        first = line.split()[0]
+        recoverable = first.lstrip("0123456789") == "" and first != ""
+        assert recoverable == (mode != 0), (t, mode, line)
+    print(f"grammar: {trials} trials ok")
+
+
+def main():
+    rng = random.Random(0xC4A055ED)
+    fuzz_schedule(rng)
+    fuzz_verdicts(200, rng)
+    fuzz_grammar(2000, rng)
+    print("ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
